@@ -1,0 +1,74 @@
+//! Adaptive randomized coding (§4.3) in action, on the MLP classifier
+//! through the XLA engine (the AOT Pallas/JAX artifacts) when
+//! `artifacts/` is built, falling back to the native engine otherwise.
+//!
+//! Prints the per-iteration (loss, λ_t, q*_t) trajectory: early
+//! iterations have high loss ⇒ λ≈1 ⇒ audit almost surely; as loss
+//! falls the master trades reliability for efficiency; once all f
+//! Byzantine workers are identified, q snaps to 0.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example adaptive_training
+//! ```
+
+use std::sync::Arc;
+
+use r3bft::config::{
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig,
+};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::data::BlobsDataset;
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine, XlaEngine};
+use r3bft::runtime::Runtime;
+
+fn main() -> r3bft::Result<()> {
+    let mut cluster = ClusterConfig::new(8, 2, 7);
+    cluster.byzantine_ids = vec![1, 5];
+    let cfg = ExperimentConfig {
+        name: "adaptive".into(),
+        cluster,
+        policy: PolicyKind::Adaptive { p_assumed: 0.6 },
+        attack: AttackConfig { kind: AttackKind::Noise, p: 0.6, magnitude: 2.0 },
+        train: TrainConfig { steps: 120, lr: 0.4, ..Default::default() },
+    };
+
+    let spec = ModelSpec::Mlp { in_dim: 32, hidden: 64, classes: 4, batch: 128 };
+    let dataset = Arc::new(BlobsDataset::generate(8192, 32, 4, 4.0, 7));
+
+    let engine: Arc<dyn GradientComputer> =
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            println!("using XLA engine (AOT Pallas/JAX artifacts via PJRT)");
+            let rt = Arc::new(Runtime::cpu("artifacts")?);
+            Arc::new(XlaEngine::new(rt, spec.clone())?)
+        } else {
+            println!("artifacts/ missing — using native engine (run `make artifacts` for XLA)");
+            Arc::new(NativeEngine::new(spec.clone()))
+        };
+
+    let theta0 = spec.init_theta(7);
+    let master = Master::new(cfg, MasterOptions::default(), engine, dataset, theta0, 128)?;
+    let out = master.run()?;
+
+    println!("\n iter    loss   lambda_t     q_t  audited  identified");
+    for r in &out.metrics.iterations {
+        if r.iter < 10 || r.iter % 20 == 0 || r.identified > 0 {
+            println!(
+                "{:5}  {:6.3}   {:8.4}  {:6.3}  {:>7}  {:>10}",
+                r.iter,
+                r.loss,
+                r.lambda,
+                r.q,
+                if r.audited { "yes" } else { "" },
+                if r.identified > 0 { r.identified.to_string() } else { String::new() }
+            );
+        }
+    }
+    println!("\neliminated: {:?} (ground truth Byzantine: [1, 5])", out.eliminated);
+    println!("avg efficiency: {:.3}", out.metrics.average_efficiency());
+    println!(
+        "final loss: {:.4} (from {:.4})",
+        out.metrics.final_loss(),
+        out.metrics.iterations[0].loss
+    );
+    Ok(())
+}

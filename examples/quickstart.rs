@@ -1,0 +1,59 @@
+//! Quickstart: Byzantine-fault-tolerant training in ~30 lines.
+//!
+//! Trains linear regression with a planted optimum on 9 workers, 2 of
+//! them Byzantine sign-flippers, using the paper's randomized scheme
+//! (q = 0.3). Watch the master detect faults, impose reactive
+//! redundancy, identify both attackers, and still converge exactly.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use r3bft::config::{
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig,
+};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::data::LinRegDataset;
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+
+fn main() -> r3bft::Result<()> {
+    // cluster: n = 9 workers, tolerate up to f = 2 Byzantine;
+    // workers 7 and 8 actually are Byzantine (the master doesn't know)
+    let mut cluster = ClusterConfig::new(9, 2, 42);
+    cluster.byzantine_ids = vec![7, 8];
+
+    let cfg = ExperimentConfig {
+        name: "quickstart".into(),
+        cluster,
+        // the paper's randomized scheme: audit ~30% of iterations
+        policy: PolicyKind::Bernoulli { q: 0.3 },
+        // attackers flip + scale their gradients in 70% of iterations
+        attack: AttackConfig { kind: AttackKind::SignFlip, p: 0.7, magnitude: 2.0 },
+        train: TrainConfig { steps: 300, lr: 0.5, ..Default::default() },
+    };
+
+    // workload: y = X w* (noiseless), so exact fault-tolerance (Def. 1)
+    // is checkable as ||theta - w*|| -> 0
+    let dataset = Arc::new(LinRegDataset::generate(4096, 32, 0.0, 42));
+    let w_star = dataset.w_star.clone();
+
+    let spec = ModelSpec::LinReg { d: 32, batch: 16 };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(42);
+    let opts = MasterOptions { w_star: Some(w_star.clone()), ..Default::default() };
+
+    let master = Master::new(cfg, opts, engine, dataset, theta0, 16)?;
+    let out = master.run()?;
+
+    println!("final loss        : {:.3e}", out.metrics.final_loss());
+    println!("dist to optimum   : {:.3e}", r3bft::linalg::dist2(&out.theta, &w_star));
+    println!("avg efficiency    : {:.3} (vanilla = 1, DRACO would be 0.2)", out.metrics.average_efficiency());
+    println!("faults detected   : {}", out.events.detections());
+    println!("identified        : {:?} (ground truth: [7, 8])", out.eliminated);
+    assert!(r3bft::linalg::dist2(&out.theta, &w_star) < 1e-2, "exact fault-tolerance violated!");
+    assert_eq!(out.eliminated.len(), 2);
+    println!("\nexact fault-tolerance holds — both Byzantine workers identified.");
+    Ok(())
+}

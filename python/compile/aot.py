@@ -1,0 +1,170 @@
+"""AOT pipeline: lower every (model, shape-config) to HLO text + manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(rust/src/runtime/) loads the outputs and Python never appears on the
+training path again.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .models import linreg as m_linreg
+from .models import mlp as m_mlp
+from .models import transformer as m_tfm
+from .kernels import sgd as ksgd
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _tensor(name, s):
+    return {
+        "name": name,
+        "dtype": "i32" if s.dtype == I32 else "f32",
+        "shape": list(s.shape),
+    }
+
+
+class Registry:
+    def __init__(self):
+        self.entries = []  # (meta, fn, arg_specs)
+
+    def add(self, name, kind, model, param_dim, fn, inputs, outputs):
+        """inputs/outputs: list of (name, ShapeDtypeStruct)."""
+        meta = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "kind": kind,
+            "model": model,
+            "param_dim": param_dim,
+            "inputs": [_tensor(n, s) for n, s in inputs],
+            "outputs": [_tensor(n, s) for n, s in outputs],
+        }
+        self.entries.append((meta, fn, [s for _, s in inputs]))
+
+
+def build_registry() -> Registry:
+    reg = Registry()
+
+    # ---------------- linear regression ----------------
+    for d, b in [(64, 256), (256, 1024)]:
+        reg.add(
+            f"linreg_grad_d{d}_b{b}", "grad", "linreg", d,
+            m_linreg.grad_fn,
+            [("theta", spec([d])), ("x", spec([b, d])), ("y", spec([b]))],
+            [("grad", spec([d])), ("loss", spec([1]))],
+        )
+        reg.add(
+            f"linreg_loss_d{d}_b{b}", "loss", "linreg", d,
+            m_linreg.loss_fn,
+            [("theta", spec([d])), ("x", spec([b, d])), ("y", spec([b]))],
+            [("loss", spec([1]))],
+        )
+
+    # ---------------- MLP classifier ----------------
+    in_dim, hidden, classes, b = 32, 64, 4, 128
+    packer = m_mlp.make_packer(in_dim, hidden, classes)
+    p = packer.size
+    reg.add(
+        f"mlp_grad_i{in_dim}_h{hidden}_c{classes}_b{b}", "grad", "mlp", p,
+        m_mlp.grad_fn(packer),
+        [("theta", spec([p])), ("x", spec([b, in_dim])), ("labels", spec([b], I32))],
+        [("grad", spec([p])), ("loss", spec([1]))],
+    )
+    reg.add(
+        f"mlp_loss_i{in_dim}_h{hidden}_c{classes}_b{b}", "loss", "mlp", p,
+        m_mlp.loss_fn(packer),
+        [("theta", spec([p])), ("x", spec([b, in_dim])), ("labels", spec([b], I32))],
+        [("loss", spec([1]))],
+    )
+
+    # ---------------- transformer LM ----------------
+    cfg = m_tfm.TransformerConfig(
+        vocab=256, seq_len=65, d_model=64, heads=4, layers=2, mlp_mult=4
+    )
+    tb = 8
+    grad_fn, loss_fn, tpacker = m_tfm.make_fns(cfg)
+    tp = tpacker.size
+    reg.add(
+        "tfm_grad_tiny", "grad", "transformer", tp,
+        grad_fn,
+        [("theta", spec([tp])), ("tokens", spec([tb, cfg.seq_len], I32))],
+        [("grad", spec([tp])), ("loss", spec([1]))],
+    )
+    reg.add(
+        "tfm_loss_tiny", "loss", "transformer", tp,
+        loss_fn,
+        [("theta", spec([tp])), ("tokens", spec([tb, cfg.seq_len], I32))],
+        [("loss", spec([1]))],
+    )
+
+    # ---------------- optimizer updates (one per param_dim) ----------------
+    def upd(theta, g, lr):
+        return (ksgd.sgd_update(theta, g, lr),)
+
+    for name, pd in [("linreg_d64", 64), ("linreg_d256", 256), ("mlp", p), ("tfm_tiny", tp)]:
+        reg.add(
+            f"sgd_{name}", "update", name, pd,
+            upd,
+            [("theta", spec([pd])), ("grad", spec([pd])), ("lr", spec([1]))],
+            [("theta_out", spec([pd]))],
+        )
+
+    return reg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    reg = build_registry()
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"version": 1, "artifacts": []}
+    for meta, fn, arg_specs in reg.entries:
+        manifest["artifacts"].append(meta)
+        if only and meta["name"] not in only:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, meta["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {meta['name']}: {len(text)} chars, P={meta['param_dim']}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

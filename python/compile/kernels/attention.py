@@ -1,0 +1,112 @@
+"""FlashAttention-style causal attention forward kernel.
+
+The paper's workloads are gradient computations for generic models; the
+transformer workload's hot spot is attention. The CUDA flash-attention
+insight (never materialize the [T, T] score matrix in HBM; stream K/V
+tiles through on-chip memory with an online softmax) maps to TPU as:
+Q blocks are grid-parallel, K/V tiles stream HBM->VMEM via the inner
+fori_loop, and the running (max, sum, acc) state lives in VMEM for the
+duration of a Q block (DESIGN.md §Hardware-Adaptation).
+
+Grid: (batch*heads, T/bq). Inner loop: T/bk K-tiles with causal
+skipping — tiles strictly above the diagonal are never loaded.
+
+VMEM per step (f32): bq*dh (q) + 2*bk*dh (k,v tile) + bq*bk (scores)
++ bq*(dh+2) (state); defaults bq=bk=128, dh<=128 -> ~0.4 MiB.
+
+Backward is provided via custom_vjp against the jnp oracle (exact same
+math), so jax.grad through the transformer stays exact while the
+forward exercises the Pallas path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .matmul import _pick_block
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, t: int, scale):
+    iq = pl.program_id(1)
+    q = q_ref[0]                                  # [bq, dh]
+    dh = q.shape[-1]
+
+    nk_done = (iq * bq + bq + bk - 1) // bk        # causal: tiles <= diagonal
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    s0 = jnp.zeros((bq,), dtype=jnp.float32)
+    a0 = jnp.zeros((bq, dh), dtype=jnp.float32)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+
+    def body(j, carry):
+        m, s, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[0], (j * bk, 0), (bk, dh))
+        v = jax.lax.dynamic_slice(v_ref[0], (j * bk, 0), (bk, dh))
+        scores = (
+            jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        )                                          # [bq, bk]
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        scores = jnp.where(k_pos <= q_pos, scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[:, None])       # [bq, bk]
+        corr = jnp.exp(m - m_new)
+        s_new = s * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, s_new, acc_new
+
+    m, s, acc = jax.lax.fori_loop(0, nk_done, body, (m0, s0, a0))
+    o_ref[0] = (acc / s[:, None]).astype(o_ref.dtype)
+
+
+@jax.jit
+def attention(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Causal attention; q,k,v: [BH, T, dh] -> [BH, T, dh]."""
+    bh, t, dh = q.shape
+    bq = _pick_block(t)
+    bk = bq
+    scale = 1.0 / (dh ** 0.5)
+    grid = (bh, t // bq)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, bq=bq, bk=bk, t=t, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# differentiable wrapper
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def attention_ad(q, k, v):
+    return attention(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return attention(q, k, v), (q, k, v)
+
+
+def _attn_bwd(res, do):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention(q_, k_, v_, causal=True), q, k, v)
+    return vjp(do)
+
+
+attention_ad.defvjp(_attn_fwd, _attn_bwd)

@@ -1,0 +1,85 @@
+"""Fused linear-regression gradient kernel.
+
+Computes, in one Pallas pass over the batch,
+    r     = X w - y                   (residual, stays in VMEM)
+    grad += X_tile^T r_tile / B       (MXU matmul per tile)
+    loss += 0.5 * sum(r_tile^2) / B
+i.e. the master's per-data-point gradient work for the paper's linreg
+workload. Grid is over batch tiles; the [d] gradient block and the [1]
+loss block are revisited by every grid step (accumulator pattern), so
+the HBM traffic is one read of X/y and one write of grad — the same
+schedule a CUDA implementation would express with a threadblock
+reduction, here expressed with BlockSpecs (DESIGN.md
+§Hardware-Adaptation).
+
+VMEM per step (f32): bb*d (X tile) + 2*bb + d floats; default
+bb=128, d<=1024 -> ~0.5 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .matmul import _pick_block
+
+
+def _linreg_kernel(x_ref, y_ref, w_ref, g_ref, l_ref, *, batch: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    x = x_ref[...]                      # [bb, d]
+    r = (
+        jnp.dot(x, w_ref[...][:, None], preferred_element_type=jnp.float32)[:, 0]
+        - y_ref[...]
+    )                                   # [bb]
+    g_ref[...] += jnp.dot(r[None, :], x, preferred_element_type=jnp.float32)[
+        0
+    ] / batch
+    l_ref[...] += 0.5 * jnp.sum(r * r) / batch
+
+
+@jax.jit
+def linreg_grad(w: jax.Array, x: jax.Array, y: jax.Array):
+    """Return (grad [d], loss []) for 0.5*mean((Xw-y)^2).
+
+    Matches ref.linreg_grad to f32 accumulation order.
+    """
+    b, d = x.shape
+    bb = _pick_block(b)
+    grid = (b // bb,)
+    grad, loss = pl.pallas_call(
+        functools.partial(_linreg_kernel, batch=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=True,
+    )(x, y, w)
+    return grad, loss[0]
+
+
+def linreg_loss(w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Loss-only entry point (used by the master's adaptive policy)."""
+    return linreg_grad(w, x, y)[1]
+
+
+__all__ = ["linreg_grad", "linreg_loss", "ref"]

@@ -1,0 +1,104 @@
+"""Tiled matmul Pallas kernel — the MXU building block for every model.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): blocks are sized in
+multiples of 128 on both MXU dimensions when shapes allow; the K grid
+dimension is innermost so the output block stays resident in VMEM while
+partial products accumulate (double-buffered HBM->VMEM streaming of the
+A/B tiles is expressed by the BlockSpec index maps). On this image the
+kernel runs under ``interpret=True`` (CPU) — the structure, not the
+wallclock, is what carries to real hardware.
+
+VMEM footprint per grid step (f32): bm*bk + bk*bn + bm*bn floats.
+Default 128^2 * 3 * 4B = 192 KiB  <<  16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile edge.
+TILE = 128
+
+
+def _pick_block(dim: int, tile: int = TILE) -> int:
+    """Largest divisor of ``dim`` that is <= tile (prefers MXU multiples)."""
+    if dim >= tile and dim % tile == 0:
+        return tile
+    # fall back to the largest divisor <= tile
+    best = 1
+    for cand in range(1, min(dim, tile) + 1):
+        if dim % cand == 0:
+            best = cand
+    return best
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    """Grid = (M/bm, N/bn, K/bk); K innermost so o block is revisited."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a: jax.Array, b: jax.Array, bm: int = 0, bn: int = 0, bk: int = 0):
+    """C = A @ B with f32 accumulation.  A: [M, K], B: [K, N].
+
+    Shapes need not be multiples of the tile size: blocks are chosen as
+    divisors (``_pick_block``), so odd shapes degrade to smaller tiles
+    rather than failing. hypothesis sweeps this in python/tests.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# differentiable wrapper: forward on the Pallas path, backward as two more
+# Pallas matmuls (dA = dC @ B^T, dB = A^T @ dC) — autodiff never has to
+# look inside pallas_call.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul_ad(a: jax.Array, b: jax.Array) -> jax.Array:
+    return matmul(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _matmul_bwd(res, dc):
+    a, b = res
+    da = matmul(dc, b.T)
+    db = matmul(a.T, dc)
+    return da, db
+
+
+matmul_ad.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,53 @@
+"""Fused 2-layer-MLP gradient kernels.
+
+The forward/backward dense ops run on the Pallas matmul path; the
+cheap elementwise glue (relu mask, softmax) is jnp and fuses into the
+same HLO module at AOT time. Backprop is written out by hand (no
+jax.grad), mirroring ref.mlp_grad exactly — this keeps the lowered HLO
+free of transpose-of-pallas_call constructs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def mlp_grad(w1, b1, w2, b2, x, labels):
+    """((dw1, db1, dw2, db2), loss) for relu-MLP + softmax xent.
+
+    Shapes: x [B, I], w1 [I, H], b1 [H], w2 [H, C], b2 [C],
+    labels int32 [B].
+    """
+    b = x.shape[0]
+    z1 = matmul(x, w1) + b1                        # [B, H]
+    h = jnp.maximum(z1, 0.0)
+    logits = matmul(h, w2) + b2                    # [B, C]
+
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - picked)
+
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    dlogits = (p - onehot) / b                     # [B, C]
+
+    dw2 = matmul(h.T, dlogits)                     # [H, C]
+    db2 = jnp.sum(dlogits, axis=0)
+    dh = matmul(dlogits, w2.T)                     # [B, H]
+    dz1 = dh * (z1 > 0.0).astype(x.dtype)
+    dw1 = matmul(x.T, dz1)                         # [I, H]
+    db1 = jnp.sum(dz1, axis=0)
+    return (dw1, db1, dw2, db2), loss
+
+
+def mlp_loss(w1, b1, w2, b2, x, labels):
+    """Loss-only entry point (adaptive policy's observed loss)."""
+    z1 = matmul(x, w1) + b1
+    h = jnp.maximum(z1, 0.0)
+    logits = matmul(h, w2) + b2
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)

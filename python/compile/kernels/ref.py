@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis in ``python/tests/``). They are also used as the backward
+rules for some ``jax.custom_vjp`` wrappers, which keeps autodiff exact
+while the forward pass exercises the Pallas path.
+
+All functions are shape-polymorphic and jit-safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain f32-accumulated matmul, the oracle for kernels.matmul."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear regression: 0.5 * mean((Xw - y)^2)
+# ---------------------------------------------------------------------------
+
+def linreg_loss(w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    r = x @ w - y
+    return 0.5 * jnp.mean(r * r)
+
+
+def linreg_grad(w: jax.Array, x: jax.Array, y: jax.Array):
+    """Return (grad, loss) for the half-MSE linear-regression objective.
+
+    grad = X^T (Xw - y) / B, loss = 0.5 * mean((Xw - y)^2).
+    """
+    b = x.shape[0]
+    r = x @ w - y
+    grad = x.T @ r / b
+    loss = 0.5 * jnp.mean(r * r)
+    return grad, loss
+
+
+# ---------------------------------------------------------------------------
+# 2-layer MLP with relu + softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+def mlp_forward(w1, b1, w2, b2, x):
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return h @ w2 + b2
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy; labels are int class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def mlp_loss(w1, b1, w2, b2, x, labels):
+    return softmax_xent(mlp_forward(w1, b1, w2, b2, x), labels)
+
+
+def mlp_grad(w1, b1, w2, b2, x, labels):
+    """Return ((dw1, db1, dw2, db2), loss) via closed-form backprop."""
+    b = x.shape[0]
+    z1 = x @ w1 + b1
+    h = jnp.maximum(z1, 0.0)
+    logits = h @ w2 + b2
+    # softmax cross-entropy backward
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    dlogits = (p - onehot) / b
+    dw2 = h.T @ dlogits
+    db2 = jnp.sum(dlogits, axis=0)
+    dh = dlogits @ w2.T
+    dz1 = dh * (z1 > 0.0).astype(x.dtype)
+    dw1 = x.T @ dz1
+    db1 = jnp.sum(dz1, axis=0)
+    loss = softmax_xent(logits, labels)
+    return (dw1, db1, dw2, db2), loss
+
+
+# ---------------------------------------------------------------------------
+# scaled-dot-product attention (causal)
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True):
+    """Oracle attention. q, k, v: [..., T, dh]."""
+    dh = q.shape[-1]
+    s = jnp.einsum("...qd,...kd->...qk", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    if causal:
+        t = q.shape[-2]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask, s, jnp.finfo(s.dtype).min)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p, v)
+
+
+# ---------------------------------------------------------------------------
+# optimizer updates
+# ---------------------------------------------------------------------------
+
+def sgd_update(w: jax.Array, g: jax.Array, lr) -> jax.Array:
+    return w - lr * g
+
+
+def momentum_update(w: jax.Array, m: jax.Array, g: jax.Array, lr, beta):
+    """Heavy-ball momentum. Returns (new_w, new_m)."""
+    m2 = beta * m + g
+    return w - lr * m2, m2

@@ -1,0 +1,73 @@
+"""Fused elementwise optimizer-update kernels.
+
+Trivial arithmetic, but keeping the update inside the AOT module means
+the Rust master never touches parameter math on the hot path — it just
+feeds (w, g, lr) buffers to PJRT. Grid is over 1-D tiles so arbitrarily
+large (flattened) parameter vectors stream through VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _sgd_kernel(w_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = w_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@jax.jit
+def sgd_update(w: jax.Array, g: jax.Array, lr: jax.Array):
+    """w' = w - lr*g over flat f32 vectors; lr is a [1] array."""
+    (n,) = w.shape
+    bn = _pick_block(n, 1024)
+    return pl.pallas_call(
+        _sgd_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), w.dtype),
+        interpret=True,
+    )(w, g, lr)
+
+
+def _momentum_kernel(w_ref, m_ref, g_ref, hp_ref, ow_ref, om_ref):
+    lr, beta = hp_ref[0], hp_ref[1]
+    m2 = beta * m_ref[...] + g_ref[...]
+    om_ref[...] = m2
+    ow_ref[...] = w_ref[...] - lr * m2
+
+
+@jax.jit
+def momentum_update(w: jax.Array, m: jax.Array, g: jax.Array, hp: jax.Array):
+    """Heavy-ball update; hp = [lr, beta]. Returns (w', m')."""
+    (n,) = w.shape
+    bn = _pick_block(n, 1024)
+    return pl.pallas_call(
+        _momentum_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((n,), w.dtype),
+        ],
+        interpret=True,
+    )(w, m, g, hp)

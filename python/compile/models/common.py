@@ -1,0 +1,62 @@
+"""Shared utilities for the L2 models: flat-parameter packing.
+
+Every AOT artifact exposes the uniform interface the Rust runtime
+expects (see rust/src/runtime/manifest.rs):
+
+    grad   : (theta [P] f32, *data) -> (grad [P] f32, loss [1] f32)
+    loss   : (theta [P] f32, *data) -> (loss [1] f32,)
+    update : (theta [P] f32, grad [P] f32, lr [1] f32) -> (theta' [P],)
+
+``Packer`` maps between the flat theta vector and the model's
+structured parameter arrays with static offsets, so the unflatten is
+free at HLO level (slices + reshapes fused by XLA).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+
+@dataclass
+class Packer:
+    """Static flat-vector <-> pytree-of-arrays packing."""
+
+    shapes: list = field(default_factory=list)
+    names: list = field(default_factory=list)
+
+    def add(self, name: str, shape) -> None:
+        self.shapes.append(tuple(shape))
+        self.names.append(name)
+
+    @property
+    def size(self) -> int:
+        return sum(math.prod(s) for s in self.shapes)
+
+    def unpack(self, theta):
+        """Split flat [P] theta into the declared arrays."""
+        out, off = [], 0
+        for s in self.shapes:
+            n = math.prod(s)
+            out.append(jnp.reshape(theta[off : off + n], s))
+            off += n
+        return out
+
+    def pack(self, arrays):
+        return jnp.concatenate([jnp.reshape(a, (-1,)) for a in arrays])
+
+    def init(self, rng, scale_fn=None):
+        """He-style init as a flat numpy-free jnp vector (for tests)."""
+        import numpy as np
+
+        chunks = []
+        for s in self.shapes:
+            if len(s) >= 2:
+                std = 1.0 / math.sqrt(s[0])
+                chunks.append(rng.normal(0.0, std, size=s).reshape(-1))
+            else:
+                chunks.append(np.zeros(math.prod(s)))
+        flat = np.concatenate(chunks).astype("float32")
+        return jnp.asarray(flat)

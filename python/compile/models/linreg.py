@@ -1,0 +1,26 @@
+"""L2 linear-regression model on the fused Pallas linreg kernel.
+
+The paper's exact-fault-tolerance property (Def. 1) is checkable in
+closed form on this workload: the synthetic data generator (Rust side,
+rust/src/data/linreg.rs) plants a known w*, and E7 verifies
+||w_t - w*|| -> 0 under attack.
+"""
+
+from __future__ import annotations
+
+from ..kernels import linreg as klinreg
+
+
+def grad_fn(theta, x, y):
+    """(theta [d], x [B, d], y [B]) -> (grad [d], loss [1])."""
+    g, l = klinreg.linreg_grad(theta, x, y)
+    return g, l.reshape((1,))
+
+
+def loss_fn(theta, x, y):
+    """(theta [d], x [B, d], y [B]) -> (loss [1],)."""
+    return (klinreg.linreg_loss(theta, x, y).reshape((1,)),)
+
+
+def param_dim(d: int) -> int:
+    return d

@@ -1,0 +1,39 @@
+"""L2 softmax-classifier MLP on the Pallas matmul path.
+
+Workload for the classification experiments (E7 grid): Gaussian-blob
+classes generated Rust-side, 2-layer relu MLP, hand-derived backprop
+(kernels/mlp.py) so the lowered HLO contains only forward-style Pallas
+matmuls.
+"""
+
+from __future__ import annotations
+
+from ..kernels import mlp as kmlp
+from .common import Packer
+
+
+def make_packer(in_dim: int, hidden: int, classes: int) -> Packer:
+    p = Packer()
+    p.add("w1", (in_dim, hidden))
+    p.add("b1", (hidden,))
+    p.add("w2", (hidden, classes))
+    p.add("b2", (classes,))
+    return p
+
+
+def grad_fn(packer: Packer):
+    def f(theta, x, labels):
+        """(theta [P], x [B, I], labels [B] i32) -> (grad [P], loss [1])."""
+        w1, b1, w2, b2 = packer.unpack(theta)
+        (dw1, db1, dw2, db2), loss = kmlp.mlp_grad(w1, b1, w2, b2, x, labels)
+        return packer.pack((dw1, db1, dw2, db2)), loss.reshape((1,))
+
+    return f
+
+
+def loss_fn(packer: Packer):
+    def f(theta, x, labels):
+        w1, b1, w2, b2 = packer.unpack(theta)
+        return (kmlp.mlp_loss(w1, b1, w2, b2, x, labels).reshape((1,)),)
+
+    return f

@@ -1,0 +1,142 @@
+"""L2 byte-level decoder-only transformer LM.
+
+The end-to-end workload (EXPERIMENTS.md §E2E): the Rust master trains
+this model through the full three-layer stack with Byzantine workers
+active. Forward runs on the Pallas attention + matmul kernels
+(custom_vjp wrappers keep jax.grad exact); the whole fwd+bwd lowers
+into one HLO module per (config, batch).
+
+Architecture: pre-LN GPT — embed + learned pos, L x [LN, causal MHA,
+residual, LN, gelu MLP, residual], final LN, untied unembed. Next-token
+cross-entropy over tokens[:, :-1] -> tokens[:, 1:].
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.attention import attention_ad
+from ..kernels.matmul import matmul_ad
+from .common import Packer
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 256
+    seq_len: int = 64          # T (includes the shifted-off target position)
+    d_model: int = 64
+    heads: int = 4
+    layers: int = 2
+    mlp_mult: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+
+def make_packer(cfg: TransformerConfig) -> Packer:
+    p = Packer()
+    p.add("embed", (cfg.vocab, cfg.d_model))
+    p.add("pos", (cfg.seq_len, cfg.d_model))
+    for i in range(cfg.layers):
+        p.add(f"l{i}.ln1_s", (cfg.d_model,))
+        p.add(f"l{i}.ln1_b", (cfg.d_model,))
+        p.add(f"l{i}.wq", (cfg.d_model, cfg.d_model))
+        p.add(f"l{i}.wk", (cfg.d_model, cfg.d_model))
+        p.add(f"l{i}.wv", (cfg.d_model, cfg.d_model))
+        p.add(f"l{i}.wo", (cfg.d_model, cfg.d_model))
+        p.add(f"l{i}.ln2_s", (cfg.d_model,))
+        p.add(f"l{i}.ln2_b", (cfg.d_model,))
+        p.add(f"l{i}.w_up", (cfg.d_model, cfg.mlp_mult * cfg.d_model))
+        p.add(f"l{i}.b_up", (cfg.mlp_mult * cfg.d_model,))
+        p.add(f"l{i}.w_down", (cfg.mlp_mult * cfg.d_model, cfg.d_model))
+        p.add(f"l{i}.b_down", (cfg.d_model,))
+    p.add("lnf_s", (cfg.d_model,))
+    p.add("lnf_b", (cfg.d_model,))
+    p.add("unembed", (cfg.d_model, cfg.vocab))
+    return p
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _mm(x2d, w):
+    """Pallas matmul over a [N, K] x [K, M] pair (differentiable)."""
+    return matmul_ad(x2d, w)
+
+
+def forward(cfg: TransformerConfig, params: list, tokens: jax.Array):
+    """tokens int32 [B, T] -> logits [B, T-1, vocab] over positions 0..T-2."""
+    b, t = tokens.shape
+    it = iter(params)
+    embed, pos = next(it), next(it)
+    x = embed[tokens[:, :-1]] + pos[: t - 1]          # [B, T-1, D]
+    tm1 = t - 1
+    d = cfg.d_model
+    for _ in range(cfg.layers):
+        ln1_s, ln1_b = next(it), next(it)
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        ln2_s, ln2_b = next(it), next(it)
+        w_up, b_up, w_down, b_down = next(it), next(it), next(it), next(it)
+
+        h = _layernorm(x, ln1_s, ln1_b)
+        h2 = h.reshape(b * tm1, d)
+        q = _mm(h2, wq).reshape(b, tm1, cfg.heads, cfg.head_dim)
+        k = _mm(h2, wk).reshape(b, tm1, cfg.heads, cfg.head_dim)
+        v = _mm(h2, wv).reshape(b, tm1, cfg.heads, cfg.head_dim)
+        # [B, T-1, H, dh] -> [B*H, T-1, dh]
+        q = q.transpose(0, 2, 1, 3).reshape(b * cfg.heads, tm1, cfg.head_dim)
+        k = k.transpose(0, 2, 1, 3).reshape(b * cfg.heads, tm1, cfg.head_dim)
+        v = v.transpose(0, 2, 1, 3).reshape(b * cfg.heads, tm1, cfg.head_dim)
+        o = attention_ad(q, k, v)                      # causal
+        o = (
+            o.reshape(b, cfg.heads, tm1, cfg.head_dim)
+            .transpose(0, 2, 1, 3)
+            .reshape(b * tm1, d)
+        )
+        x = x + _mm(o, wo).reshape(b, tm1, d)
+
+        h = _layernorm(x, ln2_s, ln2_b)
+        u = _mm(h.reshape(b * tm1, d), w_up) + b_up
+        u = jax.nn.gelu(u)
+        x = x + (_mm(u, w_down) + b_down).reshape(b, tm1, d)
+
+    lnf_s, lnf_b = next(it), next(it)
+    unembed = next(it)
+    x = _layernorm(x, lnf_s, lnf_b)
+    logits = _mm(x.reshape(b * tm1, d), unembed).reshape(b, tm1, cfg.vocab)
+    return logits
+
+
+def loss_from_logits(logits, tokens):
+    """Mean next-token cross-entropy."""
+    targets = tokens[:, 1:]                            # [B, T-1]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - picked)
+
+
+def make_fns(cfg: TransformerConfig):
+    """Return (grad_fn, loss_fn, packer) with the uniform artifact ABI."""
+    packer = make_packer(cfg)
+
+    def loss_of_theta(theta, tokens):
+        params = packer.unpack(theta)
+        return loss_from_logits(forward(cfg, params, tokens), tokens)
+
+    def grad_fn(theta, tokens):
+        """(theta [P], tokens [B, T] i32) -> (grad [P], loss [1])."""
+        loss, g = jax.value_and_grad(loss_of_theta)(theta, tokens)
+        return g, loss.reshape((1,))
+
+    def loss_fn(theta, tokens):
+        return (loss_of_theta(theta, tokens).reshape((1,)),)
+
+    return grad_fn, loss_fn, packer

@@ -1,0 +1,276 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (including non-tile-multiple shapes, which
+exercise the _pick_block divisor fallback) and value distributions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as ka
+from compile.kernels import linreg as kl
+from compile.kernels import matmul as km
+from compile.kernels import mlp as kmlp
+from compile.kernels import ref
+from compile.kernels import sgd as ks
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def randf(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+class TestMatmul:
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 200),
+        n=st.integers(1, 200),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_oracle(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a = randf(rng, m, k)
+        b = randf(rng, k, n)
+        got = km.matmul(a, b)
+        want = ref.matmul(a, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_mxu_aligned_tiles(self):
+        rng = np.random.default_rng(0)
+        a = randf(rng, 256, 384)
+        b = randf(rng, 384, 128)
+        np.testing.assert_allclose(
+            km.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_block_picker_prefers_mxu_tiles(self):
+        assert km._pick_block(256) == 128
+        assert km._pick_block(128) == 128
+        assert km._pick_block(96) == 96
+        assert km._pick_block(100) == 100
+        assert km._pick_block(130) == 65  # largest divisor <= 128
+        assert km._pick_block(1) == 1
+
+    def test_custom_vjp_backward(self):
+        rng = np.random.default_rng(1)
+        a = randf(rng, 32, 16)
+        b = randf(rng, 16, 8)
+
+        def f(a, b):
+            return jnp.sum(km.matmul_ad(a, b) ** 2)
+
+        ga, gb = jax.grad(f, argnums=(0, 1))(a, b)
+        ga_ref, gb_ref = jax.grad(
+            lambda a, b: jnp.sum(ref.matmul(a, b) ** 2), argnums=(0, 1)
+        )(a, b)
+        np.testing.assert_allclose(ga, ga_ref, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(gb, gb_ref, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# linreg
+# ---------------------------------------------------------------------------
+
+
+class TestLinreg:
+    @given(
+        b=st.integers(1, 300),
+        d=st.integers(1, 100),
+        seed=st.integers(0, 2**31),
+    )
+    def test_grad_and_loss_match(self, b, d, seed):
+        rng = np.random.default_rng(seed)
+        w = randf(rng, d)
+        x = randf(rng, b, d)
+        y = randf(rng, b)
+        g, l = kl.linreg_grad(w, x, y)
+        g_ref, l_ref = ref.linreg_grad(w, x, y)
+        np.testing.assert_allclose(g, g_ref, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(l, l_ref, rtol=1e-4, atol=1e-5)
+
+    def test_gradient_is_zero_at_optimum(self):
+        rng = np.random.default_rng(7)
+        w_star = randf(rng, 32)
+        x = randf(rng, 128, 32)
+        y = x @ w_star
+        g, l = kl.linreg_grad(w_star, x, y)
+        assert float(l) < 1e-8
+        assert float(jnp.linalg.norm(g)) < 1e-3
+
+    def test_loss_only_entry_point(self):
+        rng = np.random.default_rng(8)
+        w, x, y = randf(rng, 16), randf(rng, 64, 16), randf(rng, 64)
+        np.testing.assert_allclose(
+            kl.linreg_loss(w, x, y), ref.linreg_loss(w, x, y), rtol=1e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+class TestAttention:
+    @given(
+        bh=st.integers(1, 6),
+        t=st.sampled_from([8, 16, 32, 64, 96, 128]),
+        dh=st.sampled_from([4, 8, 16, 32, 64]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_causal_oracle(self, bh, t, dh, seed):
+        rng = np.random.default_rng(seed)
+        q = randf(rng, bh, t, dh)
+        k = randf(rng, bh, t, dh)
+        v = randf(rng, bh, t, dh)
+        got = ka.attention(q, k, v)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+
+    def test_causality(self):
+        # output at position i must not depend on inputs at j > i
+        rng = np.random.default_rng(3)
+        q = randf(rng, 1, 32, 8)
+        k = randf(rng, 1, 32, 8)
+        v = randf(rng, 1, 32, 8)
+        base = ka.attention(q, k, v)
+        k2 = k.at[0, -1].set(99.0)
+        v2 = v.at[0, -1].set(-99.0)
+        pert = ka.attention(q, k2, v2)
+        np.testing.assert_allclose(base[0, :-1], pert[0, :-1], rtol=1e-5, atol=1e-6)
+        assert not np.allclose(base[0, -1], pert[0, -1])
+
+    def test_online_softmax_is_stable_for_large_scores(self):
+        rng = np.random.default_rng(4)
+        q = randf(rng, 1, 16, 8, scale=30.0)
+        k = randf(rng, 1, 16, 8, scale=30.0)
+        v = randf(rng, 1, 16, 8)
+        out = ka.attention(q, k, v)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_custom_vjp_matches_oracle_grad(self):
+        rng = np.random.default_rng(5)
+        q = randf(rng, 2, 16, 8)
+        k = randf(rng, 2, 16, 8)
+        v = randf(rng, 2, 16, 8)
+
+        def f_pallas(q, k, v):
+            return jnp.sum(ka.attention_ad(q, k, v) ** 2)
+
+        def f_ref(q, k, v):
+            return jnp.sum(ref.attention(q, k, v, causal=True) ** 2)
+
+        for gp, gr in zip(
+            jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v),
+            jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v),
+        ):
+            np.testing.assert_allclose(gp, gr, rtol=2e-3, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# mlp
+# ---------------------------------------------------------------------------
+
+
+class TestMlp:
+    @given(
+        b=st.integers(2, 100),
+        i=st.integers(1, 40),
+        h=st.integers(1, 40),
+        c=st.integers(2, 8),
+        seed=st.integers(0, 2**31),
+    )
+    def test_grad_matches_oracle(self, b, i, h, c, seed):
+        rng = np.random.default_rng(seed)
+        w1, b1 = randf(rng, i, h, scale=0.2), randf(rng, h, scale=0.1)
+        w2, b2 = randf(rng, h, c, scale=0.2), randf(rng, c, scale=0.1)
+        x = randf(rng, b, i)
+        labels = jnp.asarray(rng.integers(0, c, size=b), dtype=jnp.int32)
+        grads, loss = kmlp.mlp_grad(w1, b1, w2, b2, x, labels)
+        grads_ref, loss_ref = ref.mlp_grad(w1, b1, w2, b2, x, labels)
+        np.testing.assert_allclose(loss, loss_ref, rtol=1e-4, atol=1e-5)
+        for g, gr in zip(grads, grads_ref):
+            np.testing.assert_allclose(g, gr, rtol=1e-3, atol=1e-4)
+
+    def test_grad_matches_jax_autodiff(self):
+        rng = np.random.default_rng(9)
+        w1, b1 = randf(rng, 8, 16, scale=0.3), jnp.zeros(16)
+        w2, b2 = randf(rng, 16, 4, scale=0.3), jnp.zeros(4)
+        x = randf(rng, 32, 8)
+        labels = jnp.asarray(rng.integers(0, 4, size=32), dtype=jnp.int32)
+        (dw1, db1, dw2, db2), _ = kmlp.mlp_grad(w1, b1, w2, b2, x, labels)
+        auto = jax.grad(ref.mlp_loss, argnums=(0, 1, 2, 3))(w1, b1, w2, b2, x, labels)
+        for got, want in zip((dw1, db1, dw2, db2), auto):
+            np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# optimizer updates
+# ---------------------------------------------------------------------------
+
+
+class TestSgd:
+    @given(n=st.integers(1, 5000), seed=st.integers(0, 2**31))
+    def test_sgd_update(self, n, seed):
+        rng = np.random.default_rng(seed)
+        w, g = randf(rng, n), randf(rng, n)
+        got = ks.sgd_update(w, g, jnp.asarray([0.05], jnp.float32))
+        np.testing.assert_allclose(got, ref.sgd_update(w, g, 0.05), rtol=1e-5, atol=1e-6)
+
+    @given(n=st.integers(1, 2000), seed=st.integers(0, 2**31))
+    def test_momentum_update(self, n, seed):
+        rng = np.random.default_rng(seed)
+        w, m, g = randf(rng, n), randf(rng, n), randf(rng, n)
+        hp = jnp.asarray([0.1, 0.9], jnp.float32)
+        w2, m2 = ks.momentum_update(w, m, g, hp)
+        w2_ref, m2_ref = ref.momentum_update(w, m, g, 0.1, 0.9)
+        np.testing.assert_allclose(w2, w2_ref, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(m2, m2_ref, rtol=1e-5, atol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
+
+
+# ---------------------------------------------------------------------------
+# dtype sweep: bf16 inputs hit the MXU path (preferred_element_type=f32)
+# ---------------------------------------------------------------------------
+
+
+class TestDtypes:
+    @given(
+        m=st.sampled_from([16, 64, 128]),
+        k=st.sampled_from([16, 64]),
+        n=st.sampled_from([16, 64, 128]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matmul_bfloat16(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.normal(size=(m, k)), dtype=jnp.bfloat16)
+        b = jnp.asarray(rng.normal(size=(k, n)), dtype=jnp.bfloat16)
+        got = km.matmul(a, b).astype(jnp.float32)
+        want = ref.matmul(a, b).astype(jnp.float32)
+        # bf16 storage, f32 accumulation: tolerances sized for 8-bit mantissa
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+    def test_sgd_update_bfloat16(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=256), dtype=jnp.bfloat16)
+        g = jnp.asarray(rng.normal(size=256), dtype=jnp.bfloat16)
+        got = ks.sgd_update(w, g, jnp.asarray([0.1], jnp.bfloat16))
+        want = ref.sgd_update(w, g, jnp.bfloat16(0.1))
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32),
+            np.asarray(want, dtype=np.float32),
+            rtol=2e-2,
+            atol=2e-2,
+        )

@@ -1,0 +1,173 @@
+"""L2 model and AOT-pipeline tests: the flat-parameter ABI, the
+transformer forward/backward, and the manifest written by aot.py."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.kernels import ref
+from compile.models import linreg as m_linreg
+from compile.models import mlp as m_mlp
+from compile.models import transformer as m_tfm
+from compile.models.common import Packer
+
+
+class TestPacker:
+    def test_pack_unpack_roundtrip(self):
+        p = Packer()
+        p.add("a", (3, 4))
+        p.add("b", (5,))
+        p.add("c", (2, 2, 2))
+        assert p.size == 12 + 5 + 8
+        rng = np.random.default_rng(0)
+        arrays = [
+            jnp.asarray(rng.normal(size=s), dtype=jnp.float32) for s in p.shapes
+        ]
+        flat = p.pack(arrays)
+        assert flat.shape == (p.size,)
+        back = p.unpack(flat)
+        for a, b in zip(arrays, back):
+            np.testing.assert_array_equal(a, b)
+
+    def test_unpack_offsets_are_static(self):
+        p = Packer()
+        p.add("a", (2, 2))
+        p.add("b", (3,))
+        flat = jnp.arange(7, dtype=jnp.float32)
+        a, b = p.unpack(flat)
+        np.testing.assert_array_equal(a, [[0, 1], [2, 3]])
+        np.testing.assert_array_equal(b, [4, 5, 6])
+
+
+class TestLinRegModel:
+    def test_grad_fn_abi(self):
+        rng = np.random.default_rng(1)
+        theta = jnp.asarray(rng.normal(size=16), dtype=jnp.float32)
+        x = jnp.asarray(rng.normal(size=(32, 16)), dtype=jnp.float32)
+        y = jnp.asarray(rng.normal(size=32), dtype=jnp.float32)
+        g, l = m_linreg.grad_fn(theta, x, y)
+        assert g.shape == (16,) and l.shape == (1,)
+        g_ref, l_ref = ref.linreg_grad(theta, x, y)
+        np.testing.assert_allclose(g, g_ref, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(l[0], l_ref, rtol=1e-4)
+
+
+class TestMlpModel:
+    def test_flat_grad_matches_structured(self):
+        packer = m_mlp.make_packer(8, 16, 4)
+        rng = np.random.default_rng(2)
+        theta = jnp.asarray(rng.normal(size=packer.size) * 0.1, dtype=jnp.float32)
+        x = jnp.asarray(rng.normal(size=(32, 8)), dtype=jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 4, size=32), dtype=jnp.int32)
+        g, l = m_mlp.grad_fn(packer)(theta, x, labels)
+        assert g.shape == (packer.size,)
+        w1, b1, w2, b2 = packer.unpack(theta)
+        grads_ref, loss_ref = ref.mlp_grad(w1, b1, w2, b2, x, labels)
+        np.testing.assert_allclose(g, packer.pack(grads_ref), rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(l[0], loss_ref, rtol=1e-4)
+
+
+class TestTransformer:
+    CFG = m_tfm.TransformerConfig(
+        vocab=64, seq_len=17, d_model=16, heads=2, layers=2, mlp_mult=2
+    )
+
+    def _setup(self, seed=3):
+        grad_fn, loss_fn, packer = m_tfm.make_fns(self.CFG)
+        rng = np.random.default_rng(seed)
+        theta = jnp.asarray(rng.normal(size=packer.size) * 0.05, dtype=jnp.float32)
+        tokens = jnp.asarray(
+            rng.integers(0, self.CFG.vocab, size=(4, self.CFG.seq_len)),
+            dtype=jnp.int32,
+        )
+        return grad_fn, loss_fn, packer, theta, tokens
+
+    def test_loss_near_uniform_at_random_init(self):
+        _, loss_fn, _, theta, tokens = self._setup()
+        (l,) = loss_fn(theta, tokens)
+        assert 0.5 * np.log(64) < float(l[0]) < 2.0 * np.log(64)
+
+    def test_grad_shape_and_descent(self):
+        grad_fn, loss_fn, packer, theta, tokens = self._setup()
+        g, l0 = grad_fn(theta, tokens)
+        assert g.shape == (packer.size,)
+        theta2 = theta - 0.5 * g
+        (l1,) = loss_fn(theta2, tokens)
+        assert float(l1[0]) < float(l0[0]), "one SGD step must reduce batch loss"
+
+    def test_grad_matches_finite_difference_on_direction(self):
+        grad_fn, loss_fn, _, theta, tokens = self._setup(4)
+        g, l0 = grad_fn(theta, tokens)
+        rng = np.random.default_rng(5)
+        u = jnp.asarray(rng.normal(size=theta.shape), dtype=jnp.float32)
+        u = u / jnp.linalg.norm(u)
+        eps = 1e-2
+        (lp,) = loss_fn(theta + eps * u, tokens)
+        (lm,) = loss_fn(theta - eps * u, tokens)
+        fd = (float(lp[0]) - float(lm[0])) / (2 * eps)
+        analytic = float(jnp.dot(g, u))
+        assert abs(fd - analytic) < 3e-2 * (1 + abs(fd)), f"{fd} vs {analytic}"
+
+    def test_causal_lm_ignores_future_tokens(self):
+        grad_fn, loss_fn, _, theta, tokens = self._setup(6)
+        # loss over positions 0..T-2 predicts tokens 1..T-1; perturbing
+        # ONLY the last target token must change loss but perturbing the
+        # model's view of it cannot affect earlier logits (causality is
+        # already covered at kernel level; here: ABI-level sanity)
+        t2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % self.CFG.vocab)
+        (l1,) = loss_fn(theta, tokens)
+        (l2,) = loss_fn(theta, t2)
+        assert float(l1[0]) != float(l2[0])
+
+
+class TestAotRegistry:
+    def test_registry_is_complete_and_consistent(self):
+        reg = aot.build_registry()
+        names = [m["name"] for m, _, _ in reg.entries]
+        assert len(names) == len(set(names)), "duplicate artifact names"
+        for meta, _fn, arg_specs in reg.entries:
+            assert meta["kind"] in ("grad", "loss", "update")
+            assert len(arg_specs) == len(meta["inputs"])
+            # theta is always input 0 with shape [param_dim]
+            assert meta["inputs"][0]["shape"] == [meta["param_dim"]]
+            if meta["kind"] == "grad":
+                assert meta["outputs"][0]["shape"] == [meta["param_dim"]]
+                assert meta["outputs"][1]["shape"] == [1]
+
+    def test_lowering_one_artifact_produces_hlo_text(self):
+        reg = aot.build_registry()
+        meta, fn, specs = next(
+            e for e in reg.entries if e[0]["name"] == "linreg_grad_d64_b256"
+        )
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "f32[64]" in text  # theta/grad shape visible in signature
+
+    def test_manifest_matches_artifacts_dir(self):
+        # validates the artifacts/ directory produced by `make artifacts`
+        art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        manifest_path = os.path.join(art, "manifest.json")
+        if not os.path.exists(manifest_path):
+            pytest.skip("artifacts/ not built")
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        assert manifest["version"] == 1
+        reg_names = {m["name"] for m, _, _ in aot.build_registry().entries}
+        man_names = {a["name"] for a in manifest["artifacts"]}
+        assert man_names == reg_names
+        for a in manifest["artifacts"]:
+            path = os.path.join(art, a["file"])
+            assert os.path.exists(path), f"missing {a['file']}"
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,7 @@
+//! Bench E5: adaptive q*_t — closed form vs numeric argmin, boundary
+//! conditions, and the trajectory during an attacked run.
+
+fn main() {
+    let fast = !std::env::args().any(|a| a == "--full");
+    r3bft::experiments::run("e5", fast).unwrap();
+}

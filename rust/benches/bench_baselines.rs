@@ -1,0 +1,25 @@
+//! Bench E10: gradient-filter residuals + filter-aggregation speed.
+
+use r3bft::baselines::filters::all_filters;
+use r3bft::util::bench::{black_box, run, BenchOpts};
+use r3bft::util::rng::Pcg64;
+
+fn main() {
+    let fast = !std::env::args().any(|a| a == "--full");
+    r3bft::experiments::run("e10", fast).unwrap();
+
+    // aggregation-speed microbench: filters vs plain mean, n=25, d=4096
+    println!("\n#### filter aggregation speed (n=25 workers, d=4096)");
+    let mut rng = Pcg64::seeded(1);
+    let grads: Vec<Vec<f32>> = (0..25).map(|_| rng.gauss_vec(4096)).collect();
+    let opts = BenchOpts::default();
+    let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    run("mean (exact schemes' cost)", opts, || {
+        black_box(r3bft::linalg::mean_of(black_box(&refs)));
+    });
+    for filt in all_filters() {
+        run(filt.name(), opts, || {
+            black_box(filt.aggregate(black_box(&grads), 4));
+        });
+    }
+}

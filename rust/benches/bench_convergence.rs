@@ -1,0 +1,6 @@
+//! Bench E7: exact fault-tolerance grid (scheme x attack) — Def. 1.
+
+fn main() {
+    let fast = !std::env::args().any(|a| a == "--full");
+    r3bft::experiments::run("e7", fast).unwrap();
+}

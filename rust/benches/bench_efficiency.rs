@@ -1,0 +1,9 @@
+//! Bench E2/E6/E8: computation-efficiency tables (Eq. 2, scheme
+//! comparison, deterministic staircase). `--full` for paper-scale runs.
+
+fn main() {
+    let fast = !std::env::args().any(|a| a == "--full");
+    r3bft::experiments::run("e2", fast).unwrap();
+    r3bft::experiments::run("e6", fast).unwrap();
+    r3bft::experiments::run("e8", fast).unwrap();
+}

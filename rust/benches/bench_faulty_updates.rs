@@ -1,0 +1,6 @@
+//! Bench E3: probability of faulty updates vs Eq. (3).
+
+fn main() {
+    let fast = !std::env::args().any(|a| a == "--full");
+    r3bft::experiments::run("e3", fast).unwrap();
+}

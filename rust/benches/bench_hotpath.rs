@@ -1,0 +1,82 @@
+//! L3 hot-path benchmarks: coordinator overhead excluding gradient
+//! compute (PERF row in DESIGN.md) plus end-to-end iterations/s on the
+//! native engine across cluster sizes and schemes.
+
+use r3bft::config::{AttackKind, PolicyKind};
+use r3bft::coordinator::assignment::Assignment;
+use r3bft::coordinator::codes::{check_copies, grad_key, SymbolCopy};
+use r3bft::coordinator::identify::majority_vote;
+use r3bft::experiments::common::RunSpec;
+use r3bft::util::bench::{black_box, run, BenchOpts, Table};
+use r3bft::util::rng::Pcg64;
+
+fn main() {
+    let opts = BenchOpts::default();
+    let mut rng = Pcg64::seeded(7);
+
+    println!("#### coordinator primitives (d = 4096)");
+    let d = 4096usize;
+    let grad = rng.gauss_vec(d);
+    run("grad_key (FNV over 4096 f32)", opts, || {
+        black_box(grad_key(black_box(&grad), 1.0));
+    });
+
+    let copies: Vec<SymbolCopy> = (0..3)
+        .map(|w| SymbolCopy { worker: w, grad: grad.clone(), loss: 1.0 })
+        .collect();
+    run("check_copies r=3 unanimous", opts, || {
+        black_box(check_copies(black_box(&copies), 0.0));
+    });
+
+    let mut vote_copies = copies.clone();
+    vote_copies.push(SymbolCopy { worker: 3, grad: rng.gauss_vec(d), loss: 2.0 });
+    vote_copies.push(SymbolCopy { worker: 4, grad: grad.clone(), loss: 1.0 });
+    run("majority_vote 5 copies f=2", opts, || {
+        black_box(majority_vote(black_box(&vote_copies), 2));
+    });
+
+    let active: Vec<usize> = (0..32).collect();
+    let ids: Vec<usize> = (0..32 * 8).collect();
+    run("assignment n=32 r=3", opts, || {
+        black_box(Assignment::new(black_box(&ids), black_box(&active), 3));
+    });
+
+    let aggregate_inputs: Vec<Vec<f32>> = (0..32).map(|_| rng.gauss_vec(d)).collect();
+    let mut acc = vec![0.0f32; d];
+    run("aggregate 32 chunks d=4096 (axpy)", opts, || {
+        acc.iter_mut().for_each(|v| *v = 0.0);
+        for g in &aggregate_inputs {
+            r3bft::linalg::axpy(1.0 / 32.0, black_box(g), &mut acc);
+        }
+        black_box(&acc);
+    });
+
+    println!("\n#### end-to-end iterations/s (native linreg d=16, chunk=8)");
+    let mut table = Table::new(&["n", "f", "scheme", "iters/s", "us/iter"]);
+    for &(n, f) in &[(5usize, 1usize), (9, 2), (17, 4), (33, 8)] {
+        for (name, policy) in [
+            ("vanilla", PolicyKind::None),
+            ("randomized q=.2", PolicyKind::Bernoulli { q: 0.2 }),
+            ("deterministic", PolicyKind::Deterministic),
+        ] {
+            let steps = 300usize;
+            let t0 = std::time::Instant::now();
+            let (out, _) = RunSpec::new(n, f, policy)
+                .attack(AttackKind::SignFlip, 0.2, 2.0)
+                .steps(steps)
+                .seed(1)
+                .run_linreg()
+                .unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            black_box(out);
+            table.row(&[
+                n.to_string(),
+                f.to_string(),
+                name.into(),
+                format!("{:.0}", steps as f64 / dt),
+                format!("{:.0}", dt / steps as f64 * 1e6),
+            ]);
+        }
+    }
+    table.print("L3 end-to-end throughput");
+}

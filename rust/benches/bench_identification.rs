@@ -1,0 +1,7 @@
+//! Bench E4/E9: identification bound + §5 generalizations.
+
+fn main() {
+    let fast = !std::env::args().any(|a| a == "--full");
+    r3bft::experiments::run("e4", fast).unwrap();
+    r3bft::experiments::run("e9", fast).unwrap();
+}

@@ -1,0 +1,79 @@
+//! PJRT runtime benchmarks: artifact compile latency and steady-state
+//! execution latency/throughput for every artifact kind. These are the
+//! L2/L1 numbers the perf pass tracks (EXPERIMENTS.md §Perf).
+//!
+//! Skipped gracefully when `artifacts/` is missing.
+
+use std::sync::Arc;
+
+use r3bft::data::{Corpus, Dataset, LinRegDataset};
+use r3bft::grad::{models, GradientComputer, ModelSpec, XlaEngine};
+use r3bft::runtime::Runtime;
+use r3bft::util::bench::{black_box, run, slow_opts, BenchOpts};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("bench_runtime: artifacts/ not built (run `make artifacts`) — skipping");
+        return;
+    }
+    let rt = Arc::new(Runtime::cpu("artifacts").expect("runtime"));
+
+    // compile latency for each artifact (one-time cost per process)
+    println!("#### artifact compile latency");
+    for name in ["linreg_grad_d64_b256", "mlp_grad_i32_h64_c4_b128", "tfm_grad_tiny", "sgd_tfm_tiny"] {
+        let t0 = std::time::Instant::now();
+        rt.preload(name).expect("preload");
+        println!("compile {:<26} {:8.1} ms", name, t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    // steady-state execution latency
+    println!("\n#### steady-state execution (per call, includes host<->literal copies)");
+    let opts = BenchOpts::default();
+
+    let spec = ModelSpec::LinReg { d: 64, batch: 256 };
+    let eng = XlaEngine::new(rt.clone(), spec.clone()).expect("engine");
+    let ds = LinRegDataset::generate(256, 64, 0.0, 1);
+    let batch = ds.batch(&(0..256).collect::<Vec<_>>());
+    let theta = spec.init_theta(1);
+    run("linreg_grad d=64 b=256 (16k pts/s unit)", opts, || {
+        black_box(eng.grad(black_box(&theta), black_box(&batch)).unwrap());
+    });
+
+    let mut th = theta.clone();
+    let g = vec![0.01f32; 64];
+    run("sgd_update d=64", opts, || {
+        eng.sgd_step(&mut th, black_box(&g), 0.1).unwrap();
+    });
+
+    let spec = ModelSpec::Mlp { in_dim: 32, hidden: 64, classes: 4, batch: 128 };
+    let eng = XlaEngine::new(rt.clone(), spec.clone()).expect("engine");
+    let ds = r3bft::data::BlobsDataset::generate(128, 32, 4, 4.0, 2);
+    let batch = ds.batch(&(0..128).collect::<Vec<_>>());
+    let theta = spec.init_theta(2);
+    run("mlp_grad i=32 h=64 c=4 b=128", opts, || {
+        black_box(eng.grad(black_box(&theta), black_box(&batch)).unwrap());
+    });
+
+    let spec = ModelSpec::Transformer { param_dim: 136_512, batch: 8, seq_len: 65 };
+    let eng = XlaEngine::new(rt.clone(), spec).expect("engine");
+    let corpus = Corpus::synthetic(8192, 65, 3);
+    let batch = corpus.batch(&(0..8).map(|i| i * 13).collect::<Vec<_>>());
+    let theta = models::init_transformer_tiny(3);
+    run("tfm_grad 136k params b=8 T=64", slow_opts(), || {
+        black_box(eng.grad(black_box(&theta), black_box(&batch)).unwrap());
+    });
+    let mut th = theta.clone();
+    let g = vec![1e-4f32; 136_512];
+    run("sgd_update 136k params", opts, || {
+        eng.sgd_step(&mut th, black_box(&g), 0.1).unwrap();
+    });
+
+    let s = rt.stats();
+    println!(
+        "\ntotal: {} executions, mean {:.2} ms; {} compilations, {:.0} ms",
+        s.executions,
+        s.mean_exec_us() / 1e3,
+        s.compilations,
+        s.total_compile_ns as f64 / 1e6
+    );
+}

@@ -1,0 +1,78 @@
+//! DRACO-style aggregation (Chen et al., 2018): every chunk is
+//! proactively computed by 2f+1 workers and decoded by majority vote —
+//! fault *correction* without any reactive phase.
+//!
+//! Computation efficiency is therefore exactly 1/(2f+1) every
+//! iteration, the number the paper's Eq. (2) discussion compares
+//! against (our deterministic scheme: 1/(f+1); randomized: -> 1).
+
+use crate::coordinator::codes::SymbolCopy;
+use crate::coordinator::identify::majority_vote;
+use crate::coordinator::WorkerId;
+
+pub struct DracoAggregator {
+    pub f: usize,
+}
+
+/// Outcome of decoding one chunk.
+pub struct DracoDecode {
+    pub grad: Vec<f32>,
+    pub loss: f32,
+    /// Workers whose copy lost the vote (provably faulty).
+    pub faulty: Vec<WorkerId>,
+}
+
+impl DracoAggregator {
+    pub fn new(f: usize) -> Self {
+        DracoAggregator { f }
+    }
+
+    /// Replication factor DRACO requires per chunk.
+    pub fn replication(&self) -> usize {
+        2 * self.f + 1
+    }
+
+    /// Majority-decode one chunk from its 2f+1 copies.
+    pub fn decode(&self, copies: &[SymbolCopy]) -> DracoDecode {
+        let vote = majority_vote(copies, self.f)
+            .expect("2f+1 distinct copies always have an f+1 quorum");
+        DracoDecode { grad: vote.grad, loss: vote.loss, faulty: vote.liars }
+    }
+
+    /// Per-iteration efficiency (Definition 2): 1/(2f+1) always.
+    pub fn efficiency(&self) -> f64 {
+        1.0 / (2.0 * self.f as f64 + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sym(w: WorkerId, g: Vec<f32>) -> SymbolCopy {
+        SymbolCopy { worker: w, grad: g, loss: 0.0 }
+    }
+
+    #[test]
+    fn decodes_through_f_faults() {
+        let d = DracoAggregator::new(2);
+        assert_eq!(d.replication(), 5);
+        let truth = vec![1.0f32, -1.0];
+        let copies = vec![
+            sym(0, vec![7.0, 7.0]),
+            sym(1, truth.clone()),
+            sym(2, vec![-7.0, 0.0]),
+            sym(3, truth.clone()),
+            sym(4, truth.clone()),
+        ];
+        let out = d.decode(&copies);
+        assert_eq!(out.grad, truth);
+        assert_eq!(out.faulty, vec![0, 2]);
+    }
+
+    #[test]
+    fn efficiency_formula() {
+        assert!((DracoAggregator::new(1).efficiency() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((DracoAggregator::new(4).efficiency() - 1.0 / 9.0).abs() < 1e-12);
+    }
+}

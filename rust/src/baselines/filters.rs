@@ -1,0 +1,329 @@
+//! Gradient filters (§3 related work): robust aggregation rules that
+//! replace the mean at the master. None achieves *exact*
+//! fault-tolerance (the paper's argument for reactive redundancy);
+//! experiment E10 measures their residual error under each attack.
+//!
+//! Implemented: Krum / multi-Krum (Blanchard et al., 2017), coordinate
+//! median and trimmed mean (Yin et al., 2018), geometric median of
+//! means (Chen/Su/Xu, 2017), norm clipping (Gupta & Vaidya, 2019).
+
+use crate::linalg;
+
+/// A filter aggregates n gradient vectors (up to f Byzantine) into one.
+pub trait GradientFilter: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn aggregate(&self, grads: &[Vec<f32>], f: usize) -> Vec<f32>;
+}
+
+macro_rules! filter_struct {
+    ($ty:ident, $name:literal, $fn:path) => {
+        pub struct $ty;
+        impl GradientFilter for $ty {
+            fn name(&self) -> &'static str {
+                $name
+            }
+            fn aggregate(&self, grads: &[Vec<f32>], f: usize) -> Vec<f32> {
+                $fn(grads, f)
+            }
+        }
+    };
+}
+
+filter_struct!(KrumFilter, "krum", krum);
+filter_struct!(MedianFilter, "median", coordinate_median_f);
+filter_struct!(TrimmedMeanFilter, "trimmed_mean", trimmed_mean);
+filter_struct!(GeoMedFilter, "geomed", geometric_median_of_means_f);
+filter_struct!(NormClipFilter, "norm_clip", norm_clip_mean);
+
+fn coordinate_median_f(grads: &[Vec<f32>], _f: usize) -> Vec<f32> {
+    coordinate_median(grads)
+}
+
+fn geometric_median_of_means_f(grads: &[Vec<f32>], f: usize) -> Vec<f32> {
+    // standard choice: k = 2f+1 groups
+    geometric_median_of_means(grads, (2 * f + 1).min(grads.len().max(1)))
+}
+
+/// All filters, for experiment sweeps.
+pub fn all_filters() -> Vec<Box<dyn GradientFilter>> {
+    vec![
+        Box::new(KrumFilter),
+        Box::new(MedianFilter),
+        Box::new(TrimmedMeanFilter),
+        Box::new(GeoMedFilter),
+        Box::new(NormClipFilter),
+    ]
+}
+
+/// Krum: select the gradient with the smallest sum of squared distances
+/// to its n-f-2 nearest neighbours.
+pub fn krum(grads: &[Vec<f32>], f: usize) -> Vec<f32> {
+    let n = grads.len();
+    assert!(n >= 1);
+    let k = n.saturating_sub(f + 2).max(1); // neighbours scored
+    let mut best = 0usize;
+    let mut best_score = f32::INFINITY;
+    for i in 0..n {
+        let mut d: Vec<f32> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| {
+                let dd = linalg::dist2(&grads[i], &grads[j]);
+                dd * dd
+            })
+            .collect();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let score: f32 = d.iter().take(k).sum();
+        if score < best_score {
+            best_score = score;
+            best = i;
+        }
+    }
+    grads[best].clone()
+}
+
+/// Multi-Krum: average the m best-scoring gradients (m = n - f).
+pub fn multi_krum(grads: &[Vec<f32>], f: usize) -> Vec<f32> {
+    let n = grads.len();
+    let k = n.saturating_sub(f + 2).max(1);
+    let mut scored: Vec<(f32, usize)> = (0..n)
+        .map(|i| {
+            let mut d: Vec<f32> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| {
+                    let dd = linalg::dist2(&grads[i], &grads[j]);
+                    dd * dd
+                })
+                .collect();
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (d.iter().take(k).sum(), i)
+        })
+        .collect();
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let m = n.saturating_sub(f).max(1);
+    let chosen: Vec<&[f32]> = scored[..m].iter().map(|&(_, i)| grads[i].as_slice()).collect();
+    linalg::mean_of(&chosen)
+}
+
+/// Coordinate-wise median.
+pub fn coordinate_median(grads: &[Vec<f32>]) -> Vec<f32> {
+    let n = grads.len();
+    assert!(n >= 1);
+    let d = grads[0].len();
+    let mut out = vec![0.0f32; d];
+    let mut col = vec![0.0f32; n];
+    for j in 0..d {
+        for (i, g) in grads.iter().enumerate() {
+            col[i] = g[j];
+        }
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out[j] = if n % 2 == 1 {
+            col[n / 2]
+        } else {
+            0.5 * (col[n / 2 - 1] + col[n / 2])
+        };
+    }
+    out
+}
+
+/// Coordinate-wise trimmed mean: drop the f largest and f smallest
+/// values per coordinate, average the rest.
+pub fn trimmed_mean(grads: &[Vec<f32>], f: usize) -> Vec<f32> {
+    let n = grads.len();
+    assert!(n > 2 * f, "trimmed mean needs n > 2f (n={n}, f={f})");
+    let d = grads[0].len();
+    let mut out = vec![0.0f32; d];
+    let mut col = vec![0.0f32; n];
+    let kept = (n - 2 * f) as f32;
+    for j in 0..d {
+        for (i, g) in grads.iter().enumerate() {
+            col[i] = g[j];
+        }
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out[j] = col[f..n - f].iter().sum::<f32>() / kept;
+    }
+    out
+}
+
+/// Geometric median (Weiszfeld iterations) of k group means.
+pub fn geometric_median_of_means(grads: &[Vec<f32>], k: usize) -> Vec<f32> {
+    let n = grads.len();
+    assert!(n >= 1);
+    let k = k.clamp(1, n);
+    // group means (round-robin groups)
+    let d = grads[0].len();
+    let mut means = vec![vec![0.0f32; d]; k];
+    let mut counts = vec![0usize; k];
+    for (i, g) in grads.iter().enumerate() {
+        linalg::axpy(1.0, g, &mut means[i % k]);
+        counts[i % k] += 1;
+    }
+    for (m, &c) in means.iter_mut().zip(counts.iter()) {
+        linalg::scale(1.0 / c.max(1) as f32, m);
+    }
+    geometric_median(&means, 64, 1e-7)
+}
+
+/// Weiszfeld's algorithm for the geometric median.
+pub fn geometric_median(points: &[Vec<f32>], max_iter: usize, eps: f32) -> Vec<f32> {
+    let refs: Vec<&[f32]> = points.iter().map(|p| p.as_slice()).collect();
+    let mut x = linalg::mean_of(&refs);
+    for _ in 0..max_iter {
+        let mut num = vec![0.0f32; x.len()];
+        let mut den = 0.0f32;
+        let mut hit = false;
+        for p in points {
+            let dist = linalg::dist2(&x, p).max(1e-12);
+            if dist < eps {
+                hit = true;
+                break;
+            }
+            let w = 1.0 / dist;
+            linalg::axpy(w, p, &mut num);
+            den += w;
+        }
+        if hit || den == 0.0 {
+            break;
+        }
+        linalg::scale(1.0 / den, &mut num);
+        if linalg::dist2(&num, &x) < eps {
+            x = num;
+            break;
+        }
+        x = num;
+    }
+    x
+}
+
+/// Norm clipping: clip every gradient to the median norm, then average.
+pub fn norm_clip_mean(grads: &[Vec<f32>], _f: usize) -> Vec<f32> {
+    let norms: Vec<f64> = grads.iter().map(|g| linalg::norm2(g) as f64).collect();
+    let tau = crate::util::stats::median(&norms) as f32;
+    let d = grads[0].len();
+    let mut out = vec![0.0f32; d];
+    for g in grads {
+        let n = linalg::norm2(g);
+        let scale = if n > tau && n > 0.0 { tau / n } else { 1.0 };
+        linalg::axpy(scale / grads.len() as f32, g, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// n gradients near `truth`, f of them wildly corrupted.
+    fn setup(n: usize, f: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut rng = Pcg64::seeded(seed);
+        let d = 16;
+        let truth: Vec<f32> = rng.gauss_vec(d);
+        let mut grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                truth
+                    .iter()
+                    .map(|&v| v + 0.01 * rng.gauss_f32())
+                    .collect()
+            })
+            .collect();
+        for g in grads.iter_mut().take(f) {
+            for v in g.iter_mut() {
+                *v = 100.0 * rng.gauss_f32();
+            }
+        }
+        (grads, truth)
+    }
+
+    #[test]
+    fn all_filters_resist_outliers() {
+        let (grads, truth) = setup(11, 2, 1);
+        for filt in all_filters() {
+            let agg = filt.aggregate(&grads, 2);
+            let err = linalg::dist2(&agg, &truth);
+            assert!(
+                err < 1.0,
+                "{} failed: err = {err} (plain mean err would be ~{})",
+                filt.name(),
+                {
+                    let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+                    linalg::dist2(&linalg::mean_of(&refs), &truth)
+                }
+            );
+        }
+    }
+
+    #[test]
+    fn plain_mean_is_destroyed_by_the_same_attack() {
+        let (grads, truth) = setup(11, 2, 1);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let err = linalg::dist2(&linalg::mean_of(&refs), &truth);
+        assert!(err > 5.0, "attack too weak for the contrast test: {err}");
+    }
+
+    #[test]
+    fn filters_are_not_exact() {
+        // the paper's claim: filters do NOT recover the honest mean
+        // exactly even under mild noise (no redundancy => approximate)
+        let (grads, _) = setup(9, 2, 3);
+        let honest: Vec<&[f32]> = grads[2..].iter().map(|g| g.as_slice()).collect();
+        let honest_mean = linalg::mean_of(&honest);
+        for filt in all_filters() {
+            let agg = filt.aggregate(&grads, 2);
+            let err = linalg::dist2(&agg, &honest_mean);
+            assert!(
+                err > 1e-6,
+                "{} was bit-exact, which should be impossible here",
+                filt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn median_odd_even() {
+        let g = vec![vec![1.0f32], vec![3.0], vec![2.0]];
+        assert_eq!(coordinate_median(&g), vec![2.0]);
+        let g = vec![vec![1.0f32], vec![3.0], vec![2.0], vec![10.0]];
+        assert_eq!(coordinate_median(&g), vec![2.5]);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let g = vec![vec![-100.0f32], vec![1.0], vec![2.0], vec![3.0], vec![100.0]];
+        let tm = trimmed_mean(&g, 1);
+        assert!((tm[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "trimmed mean needs")]
+    fn trimmed_mean_requires_quorum() {
+        trimmed_mean(&[vec![1.0f32], vec![2.0]], 1);
+    }
+
+    #[test]
+    fn geometric_median_of_cluster() {
+        let pts = vec![
+            vec![0.0f32, 0.0],
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+        ];
+        let gm = geometric_median(&pts, 128, 1e-9);
+        assert!(linalg::dist2(&gm, &[0.5, 0.5]) < 1e-3);
+    }
+
+    #[test]
+    fn krum_picks_a_cluster_member() {
+        let (grads, truth) = setup(9, 2, 5);
+        let k = krum(&grads, 2);
+        // Krum returns one of the honest inputs
+        assert!(grads[2..].iter().any(|g| g == &k));
+        assert!(linalg::dist2(&k, &truth) < 0.5);
+    }
+
+    #[test]
+    fn norm_clip_bounds_influence() {
+        let g = vec![vec![1.0f32, 0.0], vec![0.9, 0.1], vec![1000.0, -1000.0]];
+        let out = norm_clip_mean(&g, 1);
+        assert!(linalg::norm2(&out) < 2.0, "clipped mean too large: {out:?}");
+    }
+}

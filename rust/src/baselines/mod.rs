@@ -1,0 +1,18 @@
+//! Comparators from the paper's related work (§3).
+//!
+//! * [`draco`] — DRACO (Chen et al., 2018): proactive 2f+1 repetition
+//!   with majority decoding; exact fault-tolerance at efficiency
+//!   1/(2f+1).
+//! * [`filters`] — gradient filters: Krum, coordinate median, trimmed
+//!   mean, geometric median of means, norm clipping. Approximate
+//!   robustness only (the paper's point: they do not achieve *exact*
+//!   fault-tolerance without redundancy), reproduced in E10.
+
+pub mod draco;
+pub mod filters;
+
+pub use draco::DracoAggregator;
+pub use filters::{
+    coordinate_median, geometric_median_of_means, krum, multi_krum, norm_clip_mean,
+    trimmed_mean, GradientFilter,
+};

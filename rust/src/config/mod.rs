@@ -1,0 +1,318 @@
+//! Typed experiment configuration, loadable from a TOML-subset file
+//! (`configs/*.toml`) or assembled from CLI flags by `main.rs`.
+
+pub mod toml;
+
+use crate::Result;
+use anyhow::{bail, Context};
+use toml::TomlDoc;
+
+/// Which fault-check policy the master runs (paper §2, §4).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicyKind {
+    /// No auditing at all — the vulnerable vanilla parallelized SGD.
+    None,
+    /// Deterministic scheme (§4.1): audit every iteration.
+    Deterministic,
+    /// Randomized scheme (§4.2): audit with fixed probability q.
+    Bernoulli { q: f64 },
+    /// Adaptive scheme (§4.3): q*_t from Eq. (4) with lambda_t from Eq. (5).
+    Adaptive { p_assumed: f64 },
+    /// Selective generalization (§5): per-worker probabilities from
+    /// reliability scores + outlier boosting on top of a base q.
+    Selective { q_base: f64 },
+}
+
+impl PolicyKind {
+    pub fn parse(kind: &str, q: f64, p_assumed: f64) -> Result<PolicyKind> {
+        Ok(match kind {
+            "none" | "vanilla" => PolicyKind::None,
+            "deterministic" => PolicyKind::Deterministic,
+            "bernoulli" | "randomized" => PolicyKind::Bernoulli { q },
+            "adaptive" => PolicyKind::Adaptive { p_assumed },
+            "selective" => PolicyKind::Selective { q_base: q },
+            other => bail!("unknown policy kind '{other}'"),
+        })
+    }
+}
+
+/// Byzantine attack model (DESIGN.md substitution table).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttackKind {
+    /// Negate the true gradient and scale it.
+    SignFlip,
+    /// Add large Gaussian noise.
+    Noise,
+    /// Send an arbitrary constant vector.
+    Constant,
+    /// Send zeros (omission-style).
+    Zero,
+    /// Shift every coordinate by a small epsilon (stealthy).
+    SmallBias,
+    /// Colluding workers all send the same crafted vector.
+    Collude,
+}
+
+impl AttackKind {
+    pub fn parse(s: &str) -> Result<AttackKind> {
+        Ok(match s {
+            "sign_flip" | "signflip" => AttackKind::SignFlip,
+            "noise" => AttackKind::Noise,
+            "constant" => AttackKind::Constant,
+            "zero" => AttackKind::Zero,
+            "small_bias" | "stealth" => AttackKind::SmallBias,
+            "collude" => AttackKind::Collude,
+            other => bail!("unknown attack kind '{other}'"),
+        })
+    }
+
+    pub const ALL: [AttackKind; 6] = [
+        AttackKind::SignFlip,
+        AttackKind::Noise,
+        AttackKind::Constant,
+        AttackKind::Zero,
+        AttackKind::SmallBias,
+        AttackKind::Collude,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttackKind::SignFlip => "sign_flip",
+            AttackKind::Noise => "noise",
+            AttackKind::Constant => "constant",
+            AttackKind::Zero => "zero",
+            AttackKind::SmallBias => "small_bias",
+            AttackKind::Collude => "collude",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AttackConfig {
+    pub kind: AttackKind,
+    /// Per-iteration tamper probability p (paper §4.2 analysis).
+    pub p: f64,
+    /// Attack magnitude multiplier.
+    pub magnitude: f32,
+}
+
+impl Default for AttackConfig {
+    fn default() -> Self {
+        AttackConfig {
+            kind: AttackKind::SignFlip,
+            p: 1.0,
+            magnitude: 1.0,
+        }
+    }
+}
+
+/// Cluster topology.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of workers n.
+    pub n: usize,
+    /// Byzantine tolerance bound f (< n/2).
+    pub f: usize,
+    /// Ids of the actually-Byzantine workers (|ids| <= f).
+    pub byzantine_ids: Vec<usize>,
+    /// Simulated per-message latency in microseconds (0 = off).
+    pub latency_us: u64,
+    pub seed: u64,
+}
+
+impl ClusterConfig {
+    pub fn new(n: usize, f: usize, seed: u64) -> Self {
+        // default: the first f workers are Byzantine (ids are arbitrary
+        // from the master's perspective — it never uses them)
+        ClusterConfig {
+            n,
+            f,
+            byzantine_ids: (0..f).collect(),
+            latency_us: 0,
+            seed,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n == 0 {
+            bail!("n must be positive");
+        }
+        if 2 * self.f >= self.n {
+            bail!(
+                "f={} violates 2f < n (n={}): the master cannot tolerate n/2 Byzantine workers",
+                self.f,
+                self.n
+            );
+        }
+        if self.byzantine_ids.len() > self.f {
+            bail!(
+                "{} Byzantine ids configured but f={}",
+                self.byzantine_ids.len(),
+                self.f
+            );
+        }
+        if self.byzantine_ids.iter().any(|&b| b >= self.n) {
+            bail!("byzantine id out of range");
+        }
+        Ok(())
+    }
+}
+
+/// Model + optimizer for a training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// "linreg" | "mlp" | "transformer"
+    pub model: String,
+    pub steps: usize,
+    pub lr: f32,
+    /// Data points per iteration (paper's m).
+    pub batch: usize,
+    /// Gradient engine: "native" or "xla".
+    pub engine: String,
+    /// Dataset size N.
+    pub dataset_size: usize,
+    /// linreg/mlp input dimension.
+    pub dim: usize,
+    pub noise_std: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "linreg".into(),
+            steps: 200,
+            lr: 0.1,
+            batch: 64,
+            engine: "native".into(),
+            dataset_size: 4096,
+            dim: 64,
+            noise_std: 0.0,
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub cluster: ClusterConfig,
+    pub policy: PolicyKind,
+    pub attack: AttackConfig,
+    pub train: TrainConfig,
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file.
+    pub fn from_file(path: &str) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<ExperimentConfig> {
+        let n = doc.usize_or("cluster.n", 8);
+        let f = doc.usize_or("cluster.f", 1);
+        let seed = doc.usize_or("cluster.seed", 42) as u64;
+        let mut cluster = ClusterConfig::new(n, f, seed);
+        cluster.latency_us = doc.usize_or("cluster.latency_us", 0) as u64;
+        if let Some(toml::TomlValue::Arr(ids)) = doc.get("cluster.byzantine_ids") {
+            cluster.byzantine_ids = ids
+                .iter()
+                .filter_map(|v| v.as_i64())
+                .map(|i| i as usize)
+                .collect();
+        }
+        cluster.validate()?;
+
+        let policy = PolicyKind::parse(
+            &doc.str_or("policy.kind", "bernoulli"),
+            doc.f64_or("policy.q", 0.2),
+            doc.f64_or("policy.p_assumed", 0.5),
+        )?;
+
+        let attack = AttackConfig {
+            kind: AttackKind::parse(&doc.str_or("attack.kind", "sign_flip"))?,
+            p: doc.f64_or("attack.p", 1.0),
+            magnitude: doc.f64_or("attack.magnitude", 1.0) as f32,
+        };
+
+        let train = TrainConfig {
+            model: doc.str_or("train.model", "linreg"),
+            steps: doc.usize_or("train.steps", 200),
+            lr: doc.f64_or("train.lr", 0.1) as f32,
+            batch: doc.usize_or("train.batch", 64),
+            engine: doc.str_or("train.engine", "native"),
+            dataset_size: doc.usize_or("train.dataset_size", 4096),
+            dim: doc.usize_or("train.dim", 64),
+            noise_std: doc.f64_or("train.noise_std", 0.0) as f32,
+        };
+
+        Ok(ExperimentConfig {
+            name: doc.str_or("name", "unnamed"),
+            cluster,
+            policy,
+            attack,
+            train,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_validation() {
+        assert!(ClusterConfig::new(3, 1, 0).validate().is_ok());
+        assert!(ClusterConfig::new(2, 1, 0).validate().is_err()); // 2f !< n
+        assert!(ClusterConfig::new(0, 0, 0).validate().is_err());
+        let mut c = ClusterConfig::new(5, 2, 0);
+        c.byzantine_ids = vec![0, 1, 2];
+        assert!(c.validate().is_err()); // more ids than f
+    }
+
+    #[test]
+    fn parse_policy_kinds() {
+        assert_eq!(
+            PolicyKind::parse("bernoulli", 0.3, 0.0).unwrap(),
+            PolicyKind::Bernoulli { q: 0.3 }
+        );
+        assert_eq!(
+            PolicyKind::parse("deterministic", 0.0, 0.0).unwrap(),
+            PolicyKind::Deterministic
+        );
+        assert!(PolicyKind::parse("bogus", 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn full_config_from_doc() {
+        let doc = TomlDoc::parse(
+            r#"
+name = "test"
+[cluster]
+n = 9
+f = 2
+byzantine_ids = [3, 7]
+[policy]
+kind = "adaptive"
+p_assumed = 0.4
+[attack]
+kind = "noise"
+p = 0.5
+magnitude = 10.0
+[train]
+model = "mlp"
+steps = 50
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster.n, 9);
+        assert_eq!(cfg.cluster.byzantine_ids, vec![3, 7]);
+        assert_eq!(cfg.policy, PolicyKind::Adaptive { p_assumed: 0.4 });
+        assert_eq!(cfg.attack.kind, AttackKind::Noise);
+        assert_eq!(cfg.train.model, "mlp");
+        assert_eq!(cfg.train.steps, 50);
+    }
+}

@@ -1,0 +1,223 @@
+//! TOML-subset parser for experiment config files (the real toml crate
+//! is unavailable offline).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / bool / homogeneous-array values, `#` comments. This covers
+//! every config under `configs/` and errors loudly on anything else.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` flat map ("" section for top-level keys).
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(TomlError {
+                    line: ln + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(TomlError {
+                line: ln + 1,
+                msg: format!("expected key = value, got '{line}'"),
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = parse_value(v.trim()).map_err(|msg| TomlError { line: ln + 1, msg })?;
+            doc.entries.insert(key, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<_>, _> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    s.parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment config
+name = "e2"            # inline comment
+[cluster]
+n = 16
+f = 2
+latency_us = 50.5
+[policy]
+kind = "bernoulli"
+q = 0.25
+adaptive = false
+qs = [0.1, 0.2, 0.5]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "e2");
+        assert_eq!(doc.usize_or("cluster.n", 0), 16);
+        assert!((doc.f64_or("cluster.latency_us", 0.0) - 50.5).abs() < 1e-9);
+        assert_eq!(doc.str_or("policy.kind", ""), "bernoulli");
+        assert!(!doc.bool_or("policy.adaptive", true));
+        match doc.get("policy.qs").unwrap() {
+            TomlValue::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = TomlDoc::parse("[unclosed\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.str_or("tag", ""), "a#b");
+    }
+}

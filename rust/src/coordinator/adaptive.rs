@@ -1,0 +1,99 @@
+//! Adaptive randomized coding (§4.3): the per-iteration audit
+//! probability q*_t that balances computation efficiency against the
+//! probability of faulty updates, driven by the observed loss.
+
+use super::analysis;
+
+/// State carried across iterations by the adaptive policy.
+#[derive(Clone, Debug)]
+pub struct AdaptiveState {
+    /// Assumed per-iteration tamper probability p (the paper treats p
+    /// as an adversary model parameter the master postulates).
+    pub p_assumed: f64,
+    /// Floor on q while unidentified Byzantine workers remain and
+    /// p > 0. Implementation choice on top of §4.3: Eq. (4) drives
+    /// q* -> 0 as the observed loss -> 0, which would let a
+    /// low-amplitude attacker survive forever; the §4.2 almost-sure
+    /// identification guarantee needs q bounded away from 0. The floor
+    /// is not applied when p = 0 or f_t = 0 (the paper's exact
+    /// boundary conditions).
+    pub q_floor: f64,
+    /// λ_t, q*_t of the most recent decision (exposed for logging/E5).
+    pub last_lambda: f64,
+    pub last_qstar: f64,
+}
+
+impl AdaptiveState {
+    pub fn new(p_assumed: f64) -> Self {
+        AdaptiveState { p_assumed, q_floor: 0.02, last_lambda: 0.0, last_qstar: 0.0 }
+    }
+
+    /// Decide q*_t from the observed average loss ℓ_t (robustly
+    /// aggregated by the caller, e.g. median of per-chunk losses — the
+    /// paper's note recommends a trimmed estimate since up to f workers
+    /// lie) and the current number of *unidentified* Byzantine workers
+    /// f_t = f - κ_t.
+    pub fn decide_q(&mut self, observed_loss: f64, f_t: usize) -> f64 {
+        let lambda = analysis::eq5_lambda(observed_loss);
+        let mut q = analysis::eq4_qstar(lambda, self.p_assumed, f_t);
+        if f_t > 0 && self.p_assumed > 0.0 {
+            q = q.max(self.q_floor);
+        }
+        self.last_lambda = lambda;
+        self.last_qstar = q;
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn high_loss_means_audit_almost_surely() {
+        let mut s = AdaptiveState::new(0.5);
+        let q = s.decide_q(50.0, 3);
+        assert!(q > 0.9, "q={q}");
+        assert!(s.last_lambda > 0.999);
+    }
+
+    #[test]
+    fn zero_loss_means_efficiency_first_down_to_the_floor() {
+        let mut s = AdaptiveState::new(0.5);
+        let q = s.decide_q(0.0, 3);
+        assert_eq!(
+            q, s.q_floor,
+            "λ=0 puts all weight on efficiency, but q stays at the \
+             almost-sure-identification floor while attackers remain"
+        );
+        s.q_floor = 0.0;
+        assert_eq!(s.decide_q(0.0, 3), 0.0);
+    }
+
+    #[test]
+    fn floor_not_applied_at_paper_boundaries() {
+        let mut s = AdaptiveState::new(0.0); // p = 0
+        assert_eq!(s.decide_q(5.0, 3), 0.0);
+        let mut s = AdaptiveState::new(0.5);
+        assert_eq!(s.decide_q(5.0, 0), 0.0); // κ_t = f
+    }
+
+    #[test]
+    fn all_byzantine_identified_stops_audits() {
+        let mut s = AdaptiveState::new(0.9);
+        let q = s.decide_q(10.0, 0);
+        assert_eq!(q, 0.0);
+    }
+
+    #[test]
+    fn q_decreases_as_loss_decreases() {
+        let mut s = AdaptiveState::new(0.5);
+        let qs: Vec<f64> = [4.0, 2.0, 1.0, 0.5, 0.1]
+            .iter()
+            .map(|&l| s.decide_q(l, 2))
+            .collect();
+        for w in qs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "q should fall with loss: {qs:?}");
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! The paper's closed forms (Eqs. 2-5 and the identification bound),
+//! used by the adaptive policy and checked against measurements by the
+//! experiment benches (E2-E5).
+
+/// Eq. (2): lower bound on the expected computation efficiency of the
+/// randomized scheme with audit probability q and f Byzantine workers:
+/// 1 - q * 2f/(2f+1). (Worst case: every audit pays the full 2f
+/// reactive redundancy for every gradient.)
+pub fn eq2_expected_efficiency(q: f64, f: usize) -> f64 {
+    let tf = 2.0 * f as f64;
+    1.0 - q * (tf / (tf + 1.0))
+}
+
+/// §2.2: choosing q = delta * (2f+1)/(2f) makes the expected
+/// efficiency >= 1 - delta.
+pub fn q_for_target_inefficiency(delta: f64, f: usize) -> f64 {
+    let tf = 2.0 * f as f64;
+    (delta * (tf + 1.0) / tf).min(1.0)
+}
+
+/// Eq. (3): probability of a faulty parameter update when each of the
+/// f Byzantine workers tampers independently with probability p and the
+/// master audits with probability q:
+/// (1 - (1-p)^f) * (1 - q).
+pub fn eq3_prob_faulty_update(p: f64, q: f64, f: usize) -> f64 {
+    (1.0 - (1.0 - p).powi(f as i32)) * (1.0 - q)
+}
+
+/// §4.2: a Byzantine worker with tamper probability p_i survives
+/// unidentified after t iterations with probability <= (1 - q p_i)^t.
+pub fn identification_survival_bound(q: f64, p_i: f64, t: u64) -> f64 {
+    (1.0 - q * p_i).powf(t as f64)
+}
+
+/// §4.3: expected computation efficiency with f_t = f - kappa_t
+/// remaining Byzantine workers: comEff_t(q) = (2 f_t (1-q) + 1)/(2 f_t + 1).
+pub fn comeff_t(q: f64, f_t: usize) -> f64 {
+    let tf = 2.0 * f_t as f64;
+    (tf * (1.0 - q) + 1.0) / (tf + 1.0)
+}
+
+/// §4.3: probF_t(q) = (1 - (1-p)^{f_t}) (1 - q).
+pub fn probf_t(q: f64, p: f64, f_t: usize) -> f64 {
+    eq3_prob_faulty_update(p, q, f_t)
+}
+
+/// Eq. (4): q*_t = argmin_q (1-λ)(1-comEff_t(q))² + λ probF_t(q)².
+///
+/// With a := 2f_t/(2f_t+1) (so 1-comEff = a q) and c := 1-(1-p)^{f_t}
+/// (so probF = c (1-q)) the objective is a convex quadratic and the
+/// minimizer is closed-form:
+///     q* = λ c² / ((1-λ) a² + λ c²),   clamped to [0, 1].
+/// Degenerate cases: a = 0 (f_t = 0) => q* = 0 unless λ c² > 0 forces 1;
+/// both terms zero => q* = 0 (no reason to audit).
+pub fn eq4_qstar(lambda: f64, p: f64, f_t: usize) -> f64 {
+    let a = 2.0 * f_t as f64 / (2.0 * f_t as f64 + 1.0);
+    let c = 1.0 - (1.0 - p).powi(f_t as i32);
+    let num = lambda * c * c;
+    let den = (1.0 - lambda) * a * a + num;
+    if den == 0.0 {
+        // objective is identically 0 (f_t = 0 and c = 0, or λ ∈ {0,1}
+        // with the matching term vanishing): prefer not auditing
+        if lambda >= 1.0 && c > 0.0 {
+            return 1.0;
+        }
+        return 0.0;
+    }
+    (num / den).clamp(0.0, 1.0)
+}
+
+/// Eq. (4) minimized numerically on a grid — the property tests verify
+/// the closed form against this.
+pub fn eq4_qstar_numeric(lambda: f64, p: f64, f_t: usize, grid: usize) -> f64 {
+    let obj = |q: f64| {
+        let ce = comeff_t(q, f_t);
+        let pf = probf_t(q, p, f_t);
+        (1.0 - lambda) * (1.0 - ce) * (1.0 - ce) + lambda * pf * pf
+    };
+    let mut best_q = 0.0;
+    let mut best = f64::INFINITY;
+    for i in 0..=grid {
+        let q = i as f64 / grid as f64;
+        let v = obj(q);
+        if v < best {
+            best = v;
+            best_q = q;
+        }
+    }
+    best_q
+}
+
+/// Eq. (5): λ_t = 1 - e^{-ℓ_t} from the observed average loss.
+pub fn eq5_lambda(observed_loss: f64) -> f64 {
+    1.0 - (-observed_loss.max(0.0)).exp()
+}
+
+/// §2/§3 efficiency comparison (experiment E6):
+/// vanilla = 1, deterministic = 1/(f+1), DRACO = 1/(2f+1).
+pub fn deterministic_efficiency(f: usize) -> f64 {
+    1.0 / (f as f64 + 1.0)
+}
+
+pub fn draco_efficiency(f: usize) -> f64 {
+    1.0 / (2.0 * f as f64 + 1.0)
+}
+
+/// §4.1: per-iteration efficiency of the deterministic scheme when a
+/// fault IS detected (worst case): 1/(2 f_t + 1).
+pub fn deterministic_fault_iteration_efficiency(f_t: usize) -> f64 {
+    1.0 / (2.0 * f_t as f64 + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_endpoints() {
+        assert!((eq2_expected_efficiency(0.0, 4) - 1.0).abs() < 1e-12);
+        // q=1: 1 - 2f/(2f+1) = 1/(2f+1) = DRACO
+        assert!((eq2_expected_efficiency(1.0, 4) - draco_efficiency(4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn q_for_delta_hits_target() {
+        for f in [1usize, 2, 4, 8] {
+            for delta in [0.05, 0.1, 0.3] {
+                let q = q_for_target_inefficiency(delta, f);
+                let eff = eq2_expected_efficiency(q, f);
+                assert!(eff >= 1.0 - delta - 1e-12, "f={f} delta={delta}: eff={eff}");
+            }
+        }
+    }
+
+    #[test]
+    fn eq3_boundaries() {
+        assert_eq!(eq3_prob_faulty_update(0.0, 0.5, 4), 0.0); // honest byz
+        assert_eq!(eq3_prob_faulty_update(0.7, 1.0, 4), 0.0); // always audit
+        assert!((eq3_prob_faulty_update(1.0, 0.0, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn survival_bound_decays_to_zero() {
+        let b100 = identification_survival_bound(0.2, 0.5, 100);
+        let b10 = identification_survival_bound(0.2, 0.5, 10);
+        assert!(b100 < b10 && b10 < 1.0);
+        assert!(identification_survival_bound(0.2, 0.5, 10_000) < 1e-9);
+    }
+
+    #[test]
+    fn qstar_boundary_conditions_from_paper() {
+        // λ -> 1 (loss -> ∞): audit always
+        assert!((eq4_qstar(1.0, 0.5, 3) - 1.0).abs() < 1e-12);
+        // p = 0: never audit
+        assert_eq!(eq4_qstar(0.7, 0.0, 3), 0.0);
+        // κ_t = f (f_t = 0): never audit
+        assert_eq!(eq4_qstar(0.7, 0.5, 0), 0.0);
+    }
+
+    #[test]
+    fn qstar_matches_numeric_argmin() {
+        for &f_t in &[1usize, 2, 4, 8] {
+            for &p in &[0.1, 0.5, 0.9] {
+                for &lambda in &[0.0, 0.2, 0.5, 0.8, 0.99] {
+                    let closed = eq4_qstar(lambda, p, f_t);
+                    let numeric = eq4_qstar_numeric(lambda, p, f_t, 100_000);
+                    assert!(
+                        (closed - numeric).abs() < 1e-4,
+                        "f_t={f_t} p={p} λ={lambda}: closed={closed} numeric={numeric}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qstar_monotone_in_lambda() {
+        let mut prev = -1.0;
+        for i in 0..=20 {
+            let l = i as f64 / 20.0;
+            let q = eq4_qstar(l, 0.5, 2);
+            assert!(q >= prev - 1e-12, "q* not monotone at λ={l}");
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn lambda_from_loss() {
+        assert_eq!(eq5_lambda(0.0), 0.0);
+        assert!((eq5_lambda(1.0) - (1.0 - (-1.0f64).exp())).abs() < 1e-12);
+        assert!(eq5_lambda(50.0) > 0.999_999);
+        assert_eq!(eq5_lambda(-3.0), 0.0); // clamped
+    }
+
+    #[test]
+    fn efficiency_hierarchy() {
+        // randomized (small q) > deterministic > DRACO, for all f >= 1
+        for f in 1..10 {
+            let rand = eq2_expected_efficiency(0.1, f);
+            assert!(rand > deterministic_efficiency(f));
+            assert!(deterministic_efficiency(f) > draco_efficiency(f));
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Data-point -> worker assignment with proactive and reactive
+//! replication (§4.1).
+//!
+//! Each iteration the master samples m = nchunks * chunk_size data
+//! points, partitions them into `nchunks` equal chunks (one per active
+//! worker), and assigns chunk j to workers j, j+1, ..., j+r-1 (mod
+//! nactive) — cyclic replication, so every worker owns exactly r
+//! chunks and every chunk has r distinct owners. Reactive redundancy
+//! later extends individual chunks to more owners, skipping workers
+//! that already own them.
+
+use crate::coordinator::{ChunkId, WorkerId};
+use crate::util::rng::Pcg64;
+
+/// One iteration's assignment state.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    /// chunk -> data-point ids (all chunks equal size).
+    pub chunks: Vec<Vec<usize>>,
+    /// chunk -> owning workers, in assignment order.
+    pub owners: Vec<Vec<WorkerId>>,
+    /// Active workers this iteration (indices into the global pool).
+    pub active: Vec<WorkerId>,
+}
+
+impl Assignment {
+    /// Build the proactive assignment.
+    ///
+    /// * `data_ids` — the m sampled points; length must be a multiple
+    ///   of `active.len()`.
+    /// * `active` — non-eliminated workers.
+    /// * `r` — proactive replication (f_t+1 deterministic, 1 otherwise).
+    pub fn new(data_ids: &[usize], active: &[WorkerId], r: usize) -> Assignment {
+        let nchunks = active.len();
+        assert!(nchunks > 0, "no active workers");
+        assert!(r >= 1 && r <= nchunks, "replication r={r} with {nchunks} workers");
+        assert_eq!(
+            data_ids.len() % nchunks,
+            0,
+            "m={} not divisible by nchunks={nchunks}",
+            data_ids.len()
+        );
+        let cs = data_ids.len() / nchunks;
+        let chunks: Vec<Vec<usize>> = (0..nchunks)
+            .map(|j| data_ids[j * cs..(j + 1) * cs].to_vec())
+            .collect();
+        let owners: Vec<Vec<WorkerId>> = (0..nchunks)
+            .map(|j| (0..r).map(|k| active[(j + k) % nchunks]).collect())
+            .collect();
+        Assignment { chunks, owners, active: active.to_vec() }
+    }
+
+    pub fn nchunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// chunks owned by a given worker (with their index in the chunk's
+    /// owner list, which determines send order).
+    pub fn chunks_of(&self, w: WorkerId) -> Vec<ChunkId> {
+        (0..self.nchunks())
+            .filter(|&c| self.owners[c].contains(&w))
+            .collect()
+    }
+
+    /// Extend chunk `c` by `extra` additional distinct owners chosen
+    /// (deterministically from `rng`) among active workers that do not
+    /// own it yet. Returns the newly added workers. Panics if the
+    /// cluster cannot supply that many — the caller guarantees
+    /// 2f_t+1 <= nactive (see DESIGN.md invariant 5).
+    pub fn extend(&mut self, c: ChunkId, extra: usize, rng: &mut Pcg64) -> Vec<WorkerId> {
+        let mut candidates: Vec<WorkerId> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|w| !self.owners[c].contains(w))
+            .collect();
+        assert!(
+            candidates.len() >= extra,
+            "cannot extend chunk {c} by {extra}: only {} candidates",
+            candidates.len()
+        );
+        rng.shuffle(&mut candidates);
+        let added: Vec<WorkerId> = candidates[..extra].to_vec();
+        self.owners[c].extend_from_slice(&added);
+        added
+    }
+
+    /// Sanity invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        for (c, owners) in self.owners.iter().enumerate() {
+            let mut u = owners.clone();
+            u.sort_unstable();
+            u.dedup();
+            if u.len() != owners.len() {
+                return Err(format!("chunk {c} has duplicate owners {owners:?}"));
+            }
+            for w in owners {
+                if !self.active.contains(w) {
+                    return Err(format!("chunk {c} owned by inactive worker {w}"));
+                }
+            }
+        }
+        let cs = self.chunks[0].len();
+        if self.chunks.iter().any(|ch| ch.len() != cs) {
+            return Err("unequal chunk sizes".into());
+        }
+        Ok(())
+    }
+}
+
+/// Sample m distinct data-point ids from a dataset of size n.
+pub fn sample_points(rng: &mut Pcg64, n: usize, m: usize) -> Vec<usize> {
+    if m <= n {
+        rng.sample_indices(n, m)
+    } else {
+        // tiny datasets in tests: sample with replacement
+        (0..m).map(|_| rng.index(n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyclic_replication_shape() {
+        let active: Vec<usize> = (0..5).collect();
+        let data: Vec<usize> = (0..20).collect();
+        let a = Assignment::new(&data, &active, 3);
+        a.validate().unwrap();
+        assert_eq!(a.nchunks(), 5);
+        assert_eq!(a.owners[0], vec![0, 1, 2]);
+        assert_eq!(a.owners[4], vec![4, 0, 1]);
+        // every worker owns exactly r chunks
+        for w in 0..5 {
+            assert_eq!(a.chunks_of(w).len(), 3, "worker {w}");
+        }
+    }
+
+    #[test]
+    fn replication_one_is_partition() {
+        let active: Vec<usize> = vec![2, 5, 7]; // non-contiguous ids
+        let data: Vec<usize> = (100..112).collect();
+        let a = Assignment::new(&data, &active, 1);
+        a.validate().unwrap();
+        for (j, owners) in a.owners.iter().enumerate() {
+            assert_eq!(owners.len(), 1);
+            assert_eq!(owners[0], active[j]);
+        }
+        // chunks partition the data
+        let mut all: Vec<usize> = a.chunks.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (100..112).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn extend_adds_distinct_new_owners() {
+        let active: Vec<usize> = (0..7).collect();
+        let data: Vec<usize> = (0..14).collect();
+        let mut a = Assignment::new(&data, &active, 3);
+        let mut rng = Pcg64::seeded(1);
+        let added = a.extend(2, 2, &mut rng);
+        assert_eq!(added.len(), 2);
+        a.validate().unwrap();
+        assert_eq!(a.owners[2].len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot extend")]
+    fn extend_beyond_cluster_panics() {
+        let active: Vec<usize> = (0..3).collect();
+        let data: Vec<usize> = (0..3).collect();
+        let mut a = Assignment::new(&data, &active, 3);
+        let mut rng = Pcg64::seeded(1);
+        a.extend(0, 1, &mut rng); // all 3 workers already own chunk 0
+    }
+
+    #[test]
+    fn sample_points_distinct_when_possible() {
+        let mut rng = Pcg64::seeded(2);
+        let s = sample_points(&mut rng, 100, 30);
+        let mut u = s.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 30);
+    }
+}

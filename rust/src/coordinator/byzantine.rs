@@ -1,0 +1,159 @@
+//! Byzantine attack models.
+//!
+//! The paper's analysis is parameterized only by each Byzantine
+//! worker's per-iteration tamper probability p_i; the attack *shape*
+//! matters for the baselines (gradient filters are fooled by some
+//! shapes and not others) and for stress-testing detection. All
+//! attacks tamper the *symbol* (chunk gradient) a worker sends.
+
+use crate::config::{AttackConfig, AttackKind};
+use crate::util::rng::Pcg64;
+
+/// Per-worker Byzantine behaviour; `None` for honest workers.
+pub struct ByzantineBehavior {
+    pub cfg: AttackConfig,
+    rng: Pcg64,
+}
+
+impl ByzantineBehavior {
+    pub fn new(cfg: AttackConfig, seed: u64, worker: usize) -> Self {
+        ByzantineBehavior {
+            cfg,
+            rng: Pcg64::new(seed ^ 0xbad0_0000, worker as u64 + 1000),
+        }
+    }
+
+    /// Decide once per iteration whether to tamper (prob. p, §4.2).
+    pub fn tampers_this_iteration(&mut self) -> bool {
+        self.rng.bernoulli(self.cfg.p)
+    }
+
+    /// Corrupt a gradient in place (and the reported loss).
+    pub fn corrupt(&mut self, grad: &mut [f32], loss: &mut f32) {
+        let m = self.cfg.magnitude;
+        match self.cfg.kind {
+            AttackKind::SignFlip => {
+                for v in grad.iter_mut() {
+                    *v = -m * *v;
+                }
+            }
+            AttackKind::Noise => {
+                for v in grad.iter_mut() {
+                    *v += 10.0 * m * self.rng.gauss_f32();
+                }
+            }
+            AttackKind::Constant => {
+                for (i, v) in grad.iter_mut().enumerate() {
+                    *v = m * if i % 2 == 0 { 1.0 } else { -1.0 };
+                }
+            }
+            AttackKind::Zero => {
+                for v in grad.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            AttackKind::SmallBias => {
+                // stealthy: shift every coordinate by a small epsilon —
+                // defeats norm-based filters, still caught by exact
+                // replication comparison
+                let eps = 0.01 * m;
+                for v in grad.iter_mut() {
+                    *v += eps;
+                }
+            }
+            AttackKind::Collude => {
+                // colluding workers derive the same vector from shared
+                // pseudo-randomness (keyed only by iteration count via
+                // their common magnitude seed), pushing a consistent
+                // malicious direction
+                let mut colluder = Pcg64::new(0xc011ade0u64, 7);
+                for v in grad.iter_mut() {
+                    *v = m * colluder.gauss_f32();
+                }
+            }
+        }
+        // lie about the loss too (it feeds the adaptive policy)
+        *loss *= 1.0 + 0.5 * m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(kind: AttackKind, p: f64) -> ByzantineBehavior {
+        ByzantineBehavior::new(
+            AttackConfig { kind, p, magnitude: 1.0 },
+            42,
+            0,
+        )
+    }
+
+    #[test]
+    fn tamper_probability_respected() {
+        let mut b = mk(AttackKind::SignFlip, 0.3);
+        let hits = (0..20_000).filter(|_| b.tampers_this_iteration()).count();
+        assert!((hits as f64 / 20_000.0 - 0.3).abs() < 0.02);
+        let mut always = mk(AttackKind::SignFlip, 1.0);
+        assert!((0..100).all(|_| always.tampers_this_iteration()));
+        let mut never = mk(AttackKind::SignFlip, 0.0);
+        assert!(!(0..100).any(|_| never.tampers_this_iteration()));
+    }
+
+    #[test]
+    fn every_attack_changes_the_gradient() {
+        for kind in AttackKind::ALL {
+            let mut b = mk(kind, 1.0);
+            let orig = vec![0.5f32, -1.5, 2.0, 0.25];
+            let mut g = orig.clone();
+            let mut loss = 1.0f32;
+            b.corrupt(&mut g, &mut loss);
+            assert_ne!(g, orig, "attack {kind:?} left gradient unchanged");
+        }
+    }
+
+    #[test]
+    fn sign_flip_negates() {
+        let mut b = mk(AttackKind::SignFlip, 1.0);
+        let mut g = vec![1.0f32, -2.0];
+        let mut loss = 1.0;
+        b.corrupt(&mut g, &mut loss);
+        assert_eq!(g, vec![-1.0, 2.0]);
+    }
+
+    #[test]
+    fn colluders_agree() {
+        let mut b1 = ByzantineBehavior::new(
+            AttackConfig { kind: AttackKind::Collude, p: 1.0, magnitude: 1.0 },
+            1,
+            0,
+        );
+        let mut b2 = ByzantineBehavior::new(
+            AttackConfig { kind: AttackKind::Collude, p: 1.0, magnitude: 1.0 },
+            999, // different seed, different worker
+            5,
+        );
+        let mut g1 = vec![1.0f32; 8];
+        let mut g2 = vec![-3.0f32; 8];
+        let (mut l1, mut l2) = (0.0f32, 0.0f32);
+        b1.corrupt(&mut g1, &mut l1);
+        b2.corrupt(&mut g2, &mut l2);
+        assert_eq!(g1, g2, "colluding attack must be identical across workers");
+    }
+
+    #[test]
+    fn small_bias_is_small() {
+        let mut b = mk(AttackKind::SmallBias, 1.0);
+        let orig = vec![1.0f32; 16];
+        let mut g = orig.clone();
+        let mut loss = 1.0;
+        b.corrupt(&mut g, &mut loss);
+        let max_shift = g
+            .iter()
+            .zip(orig.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_shift <= 0.011, "stealth attack too loud: {max_shift}");
+        assert!(max_shift > 0.0);
+    }
+}

@@ -1,0 +1,309 @@
+//! Fault-detection codes over gradient symbols (§4.1 and Fig. 2).
+//!
+//! A *symbol* is what a worker sends the master for one chunk of data
+//! points: for the replication code it is the chunk's mean gradient
+//! itself; for the Fig. 2 linear code it is a linear combination of
+//! chunk gradients. The code's job is to let the master *detect* up to
+//! f faulty symbols cheaply; *identification* then needs reactive
+//! redundancy ([`super::identify`]).
+//!
+//! Symbols from honest workers running the same deterministic engine
+//! are bit-identical, so comparison is exact (bitwise); an optional
+//! tolerance covers engines with nondeterministic reductions.
+
+use crate::coordinator::WorkerId;
+
+/// One received symbol: the claimed mean gradient for a chunk.
+#[derive(Clone, Debug)]
+pub struct SymbolCopy {
+    pub worker: WorkerId,
+    pub grad: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Result of comparing the copies of one chunk's symbol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CheckOutcome {
+    /// All copies agree; the agreed gradient can be used directly.
+    Unanimous,
+    /// At least two copies differ — some owner of this chunk lied
+    /// (or the single copy could not be cross-checked).
+    FaultDetected,
+}
+
+/// 64-bit hash over the raw f32 bits — the grouping key for exact
+/// majority voting. NaNs with identical payloads collide, which is
+/// fine: honest engines never produce NaN, and any NaN copy loses the
+/// majority anyway.
+///
+/// Perf (EXPERIMENTS.md §Perf): processes two f32 words per multiply
+/// (FxHash-style u64 mixing) instead of the original byte-at-a-time
+/// FNV-1a — ~9x faster at d = 4096 with the same grouping semantics.
+pub fn grad_key(grad: &[f32], loss: f32) -> u64 {
+    const K: u64 = 0x517c_c1b7_2722_0a95; // FxHash multiplier
+    #[inline(always)]
+    fn mix(h: u64, w: u64) -> u64 {
+        (h.rotate_left(5) ^ w).wrapping_mul(K)
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut chunks = grad.chunks_exact(2);
+    for pair in &mut chunks {
+        let w = (pair[0].to_bits() as u64) | ((pair[1].to_bits() as u64) << 32);
+        h = mix(h, w);
+    }
+    if let [last] = chunks.remainder() {
+        h = mix(h, last.to_bits() as u64);
+    }
+    h = mix(h, loss.to_bits() as u64 ^ (grad.len() as u64) << 32);
+    h
+}
+
+/// Exact equality of two symbols (bitwise, modulo -0.0 == 0.0 via
+/// float comparison when `tol == 0.0`, or within `tol` otherwise).
+pub fn symbols_equal(a: &SymbolCopy, b: &SymbolCopy, tol: f32) -> bool {
+    if a.grad.len() != b.grad.len() {
+        return false;
+    }
+    if tol == 0.0 {
+        a.grad == b.grad && a.loss == b.loss
+    } else {
+        (a.loss - b.loss).abs() <= tol
+            && a
+                .grad
+                .iter()
+                .zip(b.grad.iter())
+                .all(|(x, y)| (x - y).abs() <= tol)
+    }
+}
+
+/// Replication detection code (§4.1): with r >= 2 copies of a chunk,
+/// any single disagreement reveals a fault (tolerates detection of up
+/// to r-1 faulty copies). With a single copy nothing can be checked.
+pub fn check_copies(copies: &[SymbolCopy], tol: f32) -> CheckOutcome {
+    if copies.len() < 2 {
+        return CheckOutcome::FaultDetected; // cannot verify a lone copy
+    }
+    let first = &copies[0];
+    if copies[1..].iter().all(|c| symbols_equal(first, c, tol)) {
+        CheckOutcome::Unanimous
+    } else {
+        CheckOutcome::FaultDetected
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 linear detection code (n = 3, f = 1)
+// ---------------------------------------------------------------------------
+
+/// The worked example from Figure 2 of the paper, kept as an executable
+/// artifact (experiment E1): workers hold data-point pairs
+/// (z1,z2), (z2,z3), (z3,z1) and send
+///   c1 = g1 + 2 g2,   c2 = -g2 + g3,   c3 = -g1 - 2 g3.
+/// Then c1 + c2 = -(c2 + c3) = (c1 - c3)/2 = g1 + g2 + g3, giving the
+/// master three independent reconstructions of the gradient sum: any
+/// single faulty symbol makes them disagree (1-fault detection).
+pub struct Fig2Code;
+
+impl Fig2Code {
+    /// Symbols from the three true gradients (what honest workers send).
+    pub fn encode(g1: &[f32], g2: &[f32], g3: &[f32]) -> [Vec<f32>; 3] {
+        let d = g1.len();
+        let mut c1 = vec![0.0f32; d];
+        let mut c2 = vec![0.0f32; d];
+        let mut c3 = vec![0.0f32; d];
+        for i in 0..d {
+            c1[i] = g1[i] + 2.0 * g2[i];
+            c2[i] = -g2[i] + g3[i];
+            c3[i] = -g1[i] - 2.0 * g3[i];
+        }
+        [c1, c2, c3]
+    }
+
+    /// The three reconstructions of sum = g1+g2+g3.
+    pub fn reconstructions(c1: &[f32], c2: &[f32], c3: &[f32]) -> [Vec<f32>; 3] {
+        let d = c1.len();
+        let mut r1 = vec![0.0f32; d]; // c1 + c2
+        let mut r2 = vec![0.0f32; d]; // -(c2 + c3)
+        let mut r3 = vec![0.0f32; d]; // (c1 - c3) / 2
+        for i in 0..d {
+            r1[i] = c1[i] + c2[i];
+            r2[i] = -(c2[i] + c3[i]);
+            r3[i] = 0.5 * (c1[i] - c3[i]);
+        }
+        [r1, r2, r3]
+    }
+
+    /// Detection: do the reconstructions agree?
+    pub fn detect(c1: &[f32], c2: &[f32], c3: &[f32], tol: f32) -> CheckOutcome {
+        let [r1, r2, r3] = Self::reconstructions(c1, c2, c3);
+        let eq = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b.iter()).all(|(x, y)| (x - y).abs() <= tol)
+        };
+        if eq(&r1, &r2) && eq(&r2, &r3) {
+            CheckOutcome::Unanimous
+        } else {
+            CheckOutcome::FaultDetected
+        }
+    }
+
+    /// Reactive phase of Fig. 2: workers re-share the symbols
+    /// u1 = (c2, c3), u2 = (c3, c1), u3 = (c1, c2); with one Byzantine
+    /// worker, each c_i now has 2 honest copies among the 3 claims
+    /// (own send + two relays), so majority voting identifies the liar.
+    /// `claims[i][j]` = worker i's claim of symbol c_j (own or relayed).
+    /// Returns identified Byzantine workers.
+    pub fn identify(claims: &[[Vec<f32>; 3]; 3], tol: f32) -> Vec<WorkerId> {
+        // majority value of each symbol
+        let mut majority: Vec<Vec<f32>> = Vec::with_capacity(3);
+        for j in 0..3 {
+            let votes: Vec<&Vec<f32>> = (0..3).map(|i| &claims[i][j]).collect();
+            let eq = |a: &[f32], b: &[f32]| {
+                a.len() == b.len()
+                    && a.iter().zip(b.iter()).all(|(x, y)| (x - y).abs() <= tol)
+            };
+            // find a value claimed by >= 2 workers
+            let mut maj: Option<Vec<f32>> = None;
+            for i in 0..3 {
+                let count = (0..3).filter(|&k| eq(votes[i], votes[k])).count();
+                if count >= 2 {
+                    maj = Some(votes[i].clone());
+                    break;
+                }
+            }
+            majority.push(maj.expect("with f=1 a 2-of-3 majority always exists"));
+        }
+        // a worker is Byzantine iff any of its claims deviates from majority
+        (0..3)
+            .filter(|&i| {
+                (0..3).any(|j| {
+                    let a = &claims[i][j];
+                    let b = &majority[j];
+                    a.len() != b.len()
+                        || a.iter().zip(b.iter()).any(|(x, y)| (x - y).abs() > tol)
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sym(w: WorkerId, g: Vec<f32>) -> SymbolCopy {
+        SymbolCopy { worker: w, grad: g, loss: 0.5 }
+    }
+
+    #[test]
+    fn unanimous_copies_pass() {
+        let copies = vec![sym(0, vec![1.0, 2.0]), sym(1, vec![1.0, 2.0])];
+        assert_eq!(check_copies(&copies, 0.0), CheckOutcome::Unanimous);
+    }
+
+    #[test]
+    fn tampered_copy_detected() {
+        let copies = vec![
+            sym(0, vec![1.0, 2.0]),
+            sym(1, vec![1.0, 2.0]),
+            sym(2, vec![1.0, 2.0 + 1e-6]),
+        ];
+        assert_eq!(check_copies(&copies, 0.0), CheckOutcome::FaultDetected);
+    }
+
+    #[test]
+    fn lone_copy_cannot_be_verified() {
+        assert_eq!(
+            check_copies(&[sym(0, vec![1.0])], 0.0),
+            CheckOutcome::FaultDetected
+        );
+    }
+
+    #[test]
+    fn tolerance_allows_small_noise() {
+        let copies = vec![sym(0, vec![1.0]), sym(1, vec![1.0 + 1e-7])];
+        assert_eq!(check_copies(&copies, 1e-6), CheckOutcome::Unanimous);
+        assert_eq!(check_copies(&copies, 0.0), CheckOutcome::FaultDetected);
+    }
+
+    #[test]
+    fn grad_key_distinguishes() {
+        let a = grad_key(&[1.0, 2.0], 0.1);
+        let b = grad_key(&[1.0, 2.0], 0.1);
+        let c = grad_key(&[1.0, 2.000001], 0.1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(grad_key(&[0.0], 0.0), grad_key(&[-0.0], 0.0)); // bitwise
+    }
+
+    // ---------------- Fig. 2 (experiment E1 unit coverage) ----------------
+
+    fn fig2_gradients() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (vec![1.0, -2.0], vec![0.5, 3.0], vec![-1.5, 0.25])
+    }
+
+    #[test]
+    fn fig2_reconstructions_agree_when_honest() {
+        let (g1, g2, g3) = fig2_gradients();
+        let [c1, c2, c3] = Fig2Code::encode(&g1, &g2, &g3);
+        let [r1, r2, r3] = Fig2Code::reconstructions(&c1, &c2, &c3);
+        let sum: Vec<f32> = (0..2).map(|i| g1[i] + g2[i] + g3[i]).collect();
+        for r in [&r1, &r2, &r3] {
+            for i in 0..2 {
+                assert!((r[i] - sum[i]).abs() < 1e-5);
+            }
+        }
+        assert_eq!(Fig2Code::detect(&c1, &c2, &c3, 1e-5), CheckOutcome::Unanimous);
+    }
+
+    #[test]
+    fn fig2_any_single_faulty_symbol_is_detected() {
+        let (g1, g2, g3) = fig2_gradients();
+        let [c1, c2, c3] = Fig2Code::encode(&g1, &g2, &g3);
+        for byz in 0..3 {
+            let mut cs = [c1.clone(), c2.clone(), c3.clone()];
+            cs[byz][0] += 0.75; // any perturbation
+            assert_eq!(
+                Fig2Code::detect(&cs[0], &cs[1], &cs[2], 1e-5),
+                CheckOutcome::FaultDetected,
+                "fault by worker {byz} missed"
+            );
+        }
+    }
+
+    #[test]
+    fn fig2_identify_finds_the_liar() {
+        let (g1, g2, g3) = fig2_gradients();
+        let [c1, c2, c3] = Fig2Code::encode(&g1, &g2, &g3);
+        for byz in 0..3 {
+            // every worker claims all three symbols (own + relayed);
+            // the Byzantine worker lies about its own symbol everywhere
+            // it can (its own send and its relayed copies).
+            let mut bad = [c1.clone(), c2.clone(), c3.clone()][byz].clone();
+            bad[1] -= 2.5;
+            let honest = [c1.clone(), c2.clone(), c3.clone()];
+            let mut claims: [[Vec<f32>; 3]; 3] = std::array::from_fn(|_| honest.clone());
+            // worker `byz` claims its own symbol is `bad` (and may relay
+            // garbage for others too — test the worst case where it lies
+            // about everything it relays)
+            claims[byz] = std::array::from_fn(|j| {
+                if j == byz {
+                    bad.clone()
+                } else {
+                    let mut v = honest[j].clone();
+                    v[0] += 9.0;
+                    v
+                }
+            });
+            let ids = Fig2Code::identify(&claims, 1e-5);
+            assert_eq!(ids, vec![byz], "byz={byz}");
+        }
+    }
+
+    #[test]
+    fn fig2_identify_no_liar_when_honest() {
+        let (g1, g2, g3) = fig2_gradients();
+        let honest = Fig2Code::encode(&g1, &g2, &g3);
+        let claims: [[Vec<f32>; 3]; 3] = std::array::from_fn(|_| honest.clone());
+        assert!(Fig2Code::identify(&claims, 1e-5).is_empty());
+    }
+}

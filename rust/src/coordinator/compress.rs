@@ -1,0 +1,216 @@
+//! Compressed-gradient symbols (§2.1 / §5 generalization).
+//!
+//! The paper notes both schemes extend unchanged to workers that send
+//! *compressed* gradients [1, 2, 19, 20]: detection compares compressed
+//! symbols (honest compressors are deterministic, so replicas are still
+//! bit-identical), and the master aggregates after decompression.
+//!
+//! Two classic compressors are provided:
+//! * [`TopK`] — magnitude top-k sparsification (Aji & Heafield, 2017);
+//! * [`SignSgd`] — 1-bit sign compression with a per-symbol scale
+//!   (Bernstein et al., 2018).
+//!
+//! A compressed symbol is (indices?, values) packed into a flat f32
+//! vector so the whole symbol pipeline (hashing, comparison, majority
+//! vote) works on it unchanged.
+
+/// A gradient compressor: deterministic encode + linear-enough decode.
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Encode a dense gradient into the compressed wire form.
+    fn encode(&self, grad: &[f32]) -> Vec<f32>;
+
+    /// Decode back to a dense gradient of dimension `d`.
+    fn decode(&self, wire: &[f32], d: usize) -> Vec<f32>;
+
+    /// Wire size in f32 words for a d-dimensional gradient.
+    fn wire_len(&self, d: usize) -> usize;
+
+    /// Compression ratio (dense words / wire words).
+    fn ratio(&self, d: usize) -> f64 {
+        d as f64 / self.wire_len(d) as f64
+    }
+}
+
+/// Identity compressor (the default dense protocol).
+pub struct Dense;
+
+impl Compressor for Dense {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn encode(&self, grad: &[f32]) -> Vec<f32> {
+        grad.to_vec()
+    }
+
+    fn decode(&self, wire: &[f32], d: usize) -> Vec<f32> {
+        debug_assert_eq!(wire.len(), d);
+        wire.to_vec()
+    }
+
+    fn wire_len(&self, d: usize) -> usize {
+        d
+    }
+}
+
+/// Magnitude top-k: wire = [idx_0, val_0, ..., idx_{k-1}, val_{k-1}],
+/// indices stored as f32 (exact for d < 2^24). Deterministic
+/// tie-breaking by index so honest replicas agree bit-for-bit.
+pub struct TopK {
+    pub k: usize,
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn encode(&self, grad: &[f32]) -> Vec<f32> {
+        let k = self.k.min(grad.len());
+        let mut idx: Vec<usize> = (0..grad.len()).collect();
+        // sort by |value| desc, index asc for determinism
+        idx.sort_by(|&a, &b| {
+            grad[b]
+                .abs()
+                .partial_cmp(&grad[a].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut chosen: Vec<usize> = idx[..k].to_vec();
+        chosen.sort_unstable(); // canonical order
+        let mut wire = Vec::with_capacity(2 * k);
+        for i in chosen {
+            wire.push(i as f32);
+            wire.push(grad[i]);
+        }
+        wire
+    }
+
+    fn decode(&self, wire: &[f32], d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; d];
+        for pair in wire.chunks_exact(2) {
+            let i = pair[0] as usize;
+            if i < d {
+                out[i] = pair[1];
+            }
+        }
+        out
+    }
+
+    fn wire_len(&self, d: usize) -> usize {
+        2 * self.k.min(d)
+    }
+}
+
+/// signSGD with norm scale: wire = [scale, sign bits packed 1/f32].
+/// (Packing stays f32-per-sign for pipeline uniformity; the *counted*
+/// communication uses 1 bit/coord + 1 word, reported by `wire_bits`.)
+pub struct SignSgd;
+
+impl SignSgd {
+    /// True wire cost in bits (what E11 reports).
+    pub fn wire_bits(d: usize) -> usize {
+        32 + d
+    }
+}
+
+impl Compressor for SignSgd {
+    fn name(&self) -> &'static str {
+        "signsgd"
+    }
+
+    fn encode(&self, grad: &[f32]) -> Vec<f32> {
+        let scale = grad.iter().map(|v| v.abs()).sum::<f32>() / grad.len().max(1) as f32;
+        let mut wire = Vec::with_capacity(grad.len() + 1);
+        wire.push(scale);
+        wire.extend(grad.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }));
+        wire
+    }
+
+    fn decode(&self, wire: &[f32], d: usize) -> Vec<f32> {
+        debug_assert_eq!(wire.len(), d + 1);
+        let scale = wire[0];
+        wire[1..].iter().map(|&s| s * scale).collect()
+    }
+
+    fn wire_len(&self, d: usize) -> usize {
+        d + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        let mut rng = Pcg64::seeded(1);
+        let g = rng.gauss_vec(64);
+        let c = Dense;
+        assert_eq!(c.decode(&c.encode(&g), 64), g);
+        assert_eq!(c.ratio(64), 1.0);
+    }
+
+    #[test]
+    fn topk_keeps_largest_coordinates() {
+        let g = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        let c = TopK { k: 3 };
+        let back = c.decode(&c.encode(&g), 6);
+        assert_eq!(back, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+        assert_eq!(c.wire_len(6), 6);
+        assert!((c.ratio(1000) - 1000.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topk_is_deterministic_under_ties() {
+        let g = vec![1.0f32, -1.0, 1.0, -1.0];
+        let c = TopK { k: 2 };
+        assert_eq!(c.encode(&g), c.encode(&g));
+        // ties broken by lowest index
+        let back = c.decode(&c.encode(&g), 4);
+        assert_eq!(back, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn signsgd_preserves_signs_and_mean_magnitude() {
+        let g = vec![2.0f32, -4.0, 6.0, -8.0];
+        let c = SignSgd;
+        let back = c.decode(&c.encode(&g), 4);
+        assert_eq!(back, vec![5.0, -5.0, 5.0, -5.0]); // scale = mean |g| = 5
+        assert_eq!(SignSgd::wire_bits(1024), 32 + 1024);
+    }
+
+    #[test]
+    fn honest_replicas_agree_bitwise_for_all_compressors() {
+        // the property detection relies on: same gradient -> same wire
+        let mut rng = Pcg64::seeded(2);
+        let g = rng.gauss_vec(128);
+        let comps: Vec<Box<dyn Compressor>> =
+            vec![Box::new(Dense), Box::new(TopK { k: 16 }), Box::new(SignSgd)];
+        for c in comps {
+            assert_eq!(c.encode(&g), c.encode(&g), "{} nondeterministic", c.name());
+        }
+    }
+
+    #[test]
+    fn tampered_wire_differs() {
+        let mut rng = Pcg64::seeded(3);
+        let g = rng.gauss_vec(128);
+        let mut g2 = g.clone();
+        g2[7] += 0.5;
+        for c in [&TopK { k: 16 } as &dyn Compressor, &SignSgd] {
+            // not guaranteed for every perturbation (compression is lossy),
+            // but a sign-visible, magnitude-visible change must show
+            let w1 = c.encode(&g);
+            let mut g3 = g.clone();
+            for v in g3.iter_mut() {
+                *v = -*v; // sign flip attack
+            }
+            let w3 = c.encode(&g3);
+            assert_ne!(w1, w3, "{} hides a sign-flip", c.name());
+        }
+    }
+}

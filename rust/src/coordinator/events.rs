@@ -1,0 +1,96 @@
+//! Structured event log: everything notable the master does, kept as
+//! data so tests and benches can assert on protocol behaviour instead
+//! of scraping log lines.
+
+use super::{ChunkId, WorkerId};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Audit decision for an iteration (q used, and whether it fired).
+    AuditDecision { iter: u64, q: f64, audited: bool },
+    /// Replication comparison found disagreeing copies on a chunk.
+    FaultDetected { iter: u64, chunk: ChunkId, owners: Vec<WorkerId> },
+    /// Reactive redundancy imposed: chunk extended to 2f_t+1 owners.
+    ReactiveRedundancy { iter: u64, chunk: ChunkId, added: Vec<WorkerId> },
+    /// Majority vote identified Byzantine workers.
+    Identified { iter: u64, workers: Vec<WorkerId> },
+    /// Worker eliminated from subsequent iterations.
+    Eliminated { iter: u64, worker: WorkerId },
+    /// A faulty gradient slipped into the update (oracle knowledge —
+    /// only the simulator can emit this, never the real master).
+    OracleFaultyUpdate { iter: u64 },
+}
+
+/// Append-only event log.
+#[derive(Clone, Debug, Default)]
+pub struct EventLog {
+    pub events: Vec<Event>,
+}
+
+impl EventLog {
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    pub fn count<F: Fn(&Event) -> bool>(&self, pred: F) -> usize {
+        self.events.iter().filter(|e| pred(e)).count()
+    }
+
+    pub fn identified_workers(&self) -> Vec<WorkerId> {
+        let mut ws: Vec<WorkerId> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Identified { workers, .. } => Some(workers.clone()),
+                _ => None,
+            })
+            .flatten()
+            .collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws
+    }
+
+    /// Iteration at which a worker was identified (None if never).
+    pub fn identification_time(&self, w: WorkerId) -> Option<u64> {
+        self.events.iter().find_map(|e| match e {
+            Event::Identified { iter, workers } if workers.contains(&w) => Some(*iter),
+            _ => None,
+        })
+    }
+
+    pub fn audits(&self) -> usize {
+        self.count(|e| matches!(e, Event::AuditDecision { audited: true, .. }))
+    }
+
+    pub fn detections(&self) -> usize {
+        self.count(|e| matches!(e, Event::FaultDetected { .. }))
+    }
+
+    pub fn oracle_faulty_updates(&self) -> usize {
+        self.count(|e| matches!(e, Event::OracleFaultyUpdate { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_queries() {
+        let mut log = EventLog::default();
+        log.push(Event::AuditDecision { iter: 0, q: 0.5, audited: true });
+        log.push(Event::FaultDetected { iter: 0, chunk: 3, owners: vec![1, 2] });
+        log.push(Event::Identified { iter: 0, workers: vec![2] });
+        log.push(Event::Eliminated { iter: 0, worker: 2 });
+        log.push(Event::AuditDecision { iter: 1, q: 0.5, audited: false });
+        log.push(Event::Identified { iter: 5, workers: vec![0] });
+
+        assert_eq!(log.audits(), 1);
+        assert_eq!(log.detections(), 1);
+        assert_eq!(log.identified_workers(), vec![0, 2]);
+        assert_eq!(log.identification_time(2), Some(0));
+        assert_eq!(log.identification_time(0), Some(5));
+        assert_eq!(log.identification_time(7), None);
+    }
+}

@@ -1,0 +1,140 @@
+//! Byzantine identification by majority vote over 2f_t+1 symbol copies
+//! (§4.1): with at most f_t liars among the owners, at least f_t+1
+//! copies are honest and bit-identical, so the plurality value with
+//! count >= f_t+1 is the true gradient; every owner whose copy differs
+//! from it provably lied.
+
+use std::collections::HashMap;
+
+use super::codes::{grad_key, SymbolCopy};
+use super::WorkerId;
+
+/// Outcome of a majority vote on one chunk.
+#[derive(Clone, Debug)]
+pub struct VoteOutcome {
+    /// The recovered true gradient and loss.
+    pub grad: Vec<f32>,
+    pub loss: f32,
+    /// Owners whose copy differed from the majority — identified
+    /// Byzantine workers.
+    pub liars: Vec<WorkerId>,
+}
+
+/// Majority vote over copies; `f_t` is the current Byzantine budget.
+///
+/// Precondition (checked): `copies.len() >= 2 * f_t + 1` with distinct
+/// workers. Returns `None` if no value reaches the f_t+1 quorum, which
+/// is impossible under the precondition when at most f_t owners lie —
+/// hitting it in practice means the caller violated the protocol.
+pub fn majority_vote(copies: &[SymbolCopy], f_t: usize) -> Option<VoteOutcome> {
+    assert!(
+        copies.len() >= 2 * f_t + 1,
+        "majority vote needs 2f_t+1 = {} copies, got {}",
+        2 * f_t + 1,
+        copies.len()
+    );
+    debug_assert!(
+        {
+            let mut ws: Vec<WorkerId> = copies.iter().map(|c| c.worker).collect();
+            ws.sort_unstable();
+            ws.dedup();
+            ws.len() == copies.len()
+        },
+        "duplicate workers in vote"
+    );
+    // group by exact gradient bits; hash each copy once (perf: the
+    // hash dominates at large d, see EXPERIMENTS.md §Perf)
+    let keys: Vec<u64> = copies.iter().map(|c| grad_key(&c.grad, c.loss)).collect();
+    let mut groups: HashMap<u64, Vec<usize>> = HashMap::with_capacity(copies.len());
+    for (i, &k) in keys.iter().enumerate() {
+        groups.entry(k).or_default().push(i);
+    }
+    let (majority_key, members) = groups
+        .into_iter()
+        .max_by_key(|(_, members)| members.len())?;
+    if members.len() < f_t + 1 {
+        return None; // protocol violation: no quorum
+    }
+    let majority_idx = members[0];
+    Some(VoteOutcome {
+        grad: copies[majority_idx].grad.clone(),
+        loss: copies[majority_idx].loss,
+        liars: copies
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| keys[*i] != majority_key)
+            .map(|(_, c)| c.worker)
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sym(w: WorkerId, g: Vec<f32>) -> SymbolCopy {
+        SymbolCopy { worker: w, grad: g, loss: 1.0 }
+    }
+
+    #[test]
+    fn honest_majority_recovers_and_identifies() {
+        let truth = vec![1.5f32, -2.0, 0.25];
+        let copies = vec![
+            sym(0, truth.clone()),
+            sym(1, vec![9.0, 9.0, 9.0]), // liar
+            sym(2, truth.clone()),
+            sym(3, truth.clone()),
+            sym(4, vec![-1.0, 0.0, 0.0]), // liar
+        ];
+        let out = majority_vote(&copies, 2).unwrap();
+        assert_eq!(out.grad, truth);
+        assert_eq!(out.liars, vec![1, 4]);
+    }
+
+    #[test]
+    fn all_honest_no_liars() {
+        let truth = vec![0.5f32; 4];
+        let copies: Vec<_> = (0..5).map(|w| sym(w, truth.clone())).collect();
+        let out = majority_vote(&copies, 2).unwrap();
+        assert_eq!(out.grad, truth);
+        assert!(out.liars.is_empty());
+    }
+
+    #[test]
+    fn colluding_minority_cannot_win() {
+        // f_t = 2 liars send the SAME forged value; 3 honest still win
+        let truth = vec![1.0f32, 1.0];
+        let forged = vec![5.0f32, 5.0];
+        let copies = vec![
+            sym(0, forged.clone()),
+            sym(1, forged.clone()),
+            sym(2, truth.clone()),
+            sym(3, truth.clone()),
+            sym(4, truth.clone()),
+        ];
+        let out = majority_vote(&copies, 2).unwrap();
+        assert_eq!(out.grad, truth);
+        assert_eq!(out.liars, vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "majority vote needs")]
+    fn too_few_copies_panics() {
+        let copies = vec![sym(0, vec![1.0]), sym(1, vec![1.0])];
+        majority_vote(&copies, 1); // needs 3
+    }
+
+    #[test]
+    fn loss_is_part_of_the_vote() {
+        // same gradient but lying about the loss is still a lie
+        let g = vec![1.0f32];
+        let copies = vec![
+            SymbolCopy { worker: 0, grad: g.clone(), loss: 1.0 },
+            SymbolCopy { worker: 1, grad: g.clone(), loss: 99.0 },
+            SymbolCopy { worker: 2, grad: g.clone(), loss: 1.0 },
+        ];
+        let out = majority_vote(&copies, 1).unwrap();
+        assert_eq!(out.liars, vec![1]);
+        assert_eq!(out.loss, 1.0);
+    }
+}

@@ -1,0 +1,525 @@
+//! The master: synchronous parallelized-SGD training loop with
+//! randomized reactive redundancy (the paper's full protocol).
+//!
+//! Per-iteration phases (numbered as wire `phase` values):
+//!
+//! * **0 proactive** — sample m points, assign chunks with replication
+//!   r (f_t+1 deterministic / 1 otherwise), collect symbols.
+//! * **1 detection** — if this iteration is audited and a chunk has
+//!   only one copy, assign it to f_t additional workers (self-check
+//!   mode instead recomputes on the master) and compare copies.
+//! * **2 reactive** — for chunks whose copies disagree, top up to
+//!   2f_t+1 distinct owners, majority-vote the true value, identify
+//!   the liars, eliminate them (κ_t += …, f_t shrinks).
+//! * **update** — aggregate the per-chunk gradients, SGD-step through
+//!   the gradient engine, record metrics/events.
+//!
+//! Exactness (Def. 1): every audited iteration ends with provably
+//! correct chunk values; unaudited iterations may use tampered
+//! gradients, but each persistent Byzantine worker is identified
+//! almost surely ((1-qp)^t -> 0) and eliminated, after which the run
+//! is attack-free and converges exactly.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::assignment::{sample_points, Assignment};
+use super::byzantine::ByzantineBehavior;
+use super::compress::Compressor;
+use super::codes::{check_copies, CheckOutcome, SymbolCopy};
+use super::events::{Event, EventLog};
+use super::identify::majority_vote;
+use super::metrics::{IterationRecord, TrainMetrics};
+use super::policy::{AuditDecision, FaultCheckPolicy};
+use super::worker::{Symbol, WorkerPool};
+use super::{ChunkId, WorkerId};
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
+use crate::grad::GradientComputer;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::Result;
+
+/// Extra master behaviour knobs not present in the file config.
+#[derive(Clone)]
+pub struct MasterOptions {
+    /// §5 self-check generalization: audit by recomputing on the master
+    /// instead of replicating to additional workers.
+    pub self_check: bool,
+    /// Comparison tolerance (0.0 = exact bitwise, the default — honest
+    /// engines are deterministic).
+    pub tol: f32,
+    /// Oracle: the planted optimum for dist-to-opt metrics.
+    pub w_star: Option<Vec<f32>>,
+    /// Measurement mode for the E2/E3 benches: identify (and correct)
+    /// but never eliminate, holding f_t = f as the paper's Eqs. (2)-(3)
+    /// assume. Never used in production runs.
+    pub no_eliminate: bool,
+    /// §2.1/§5: workers send compressed symbols; detection and voting
+    /// operate on the compressed wire form, the master decompresses for
+    /// aggregation. None = dense protocol.
+    pub compressor: Option<Arc<dyn Compressor>>,
+    /// §5 hybrid generalization: in *unaudited* iterations aggregate the
+    /// per-chunk gradients through a lightweight gradient filter instead
+    /// of the plain mean, bounding the damage of un-audited tampering.
+    pub unaudited_filter: Option<Arc<dyn crate::baselines::GradientFilter>>,
+}
+
+impl Default for MasterOptions {
+    fn default() -> Self {
+        MasterOptions {
+            self_check: false,
+            tol: 0.0,
+            w_star: None,
+            no_eliminate: false,
+            compressor: None,
+            unaudited_filter: None,
+        }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainOutcome {
+    pub theta: Vec<f32>,
+    pub metrics: TrainMetrics,
+    pub events: EventLog,
+    /// Workers identified as Byzantine (in identification order).
+    pub eliminated: Vec<WorkerId>,
+}
+
+pub struct Master {
+    cfg: ExperimentConfig,
+    opts: MasterOptions,
+    engine: Arc<dyn GradientComputer>,
+    dataset: Arc<dyn Dataset>,
+    pool: WorkerPool,
+    policy: FaultCheckPolicy,
+    rng: Pcg64,
+    active: Vec<WorkerId>,
+    eliminated: Vec<WorkerId>,
+    theta: Vec<f32>,
+    chunk_size: usize,
+}
+
+/// Per-chunk working state during one iteration.
+struct ChunkState {
+    copies: Vec<SymbolCopy>,
+    /// data-point count already charged to `gradients_computed`.
+    computed_copies: usize,
+}
+
+impl Master {
+    /// Build a master over an engine + dataset. `init_theta` seeds the
+    /// parameter vector (use `ModelSpec::init_theta` or
+    /// `init_transformer_tiny`). `chunk_size` is the number of data
+    /// points per chunk — for the XLA engine it must equal the
+    /// artifact's compiled batch size.
+    pub fn new(
+        cfg: ExperimentConfig,
+        opts: MasterOptions,
+        engine: Arc<dyn GradientComputer>,
+        dataset: Arc<dyn Dataset>,
+        init_theta: Vec<f32>,
+        chunk_size: usize,
+    ) -> Result<Master> {
+        cfg.cluster.validate()?;
+        anyhow::ensure!(chunk_size > 0, "chunk_size must be positive");
+        anyhow::ensure!(
+            init_theta.len() == engine.param_dim(),
+            "init theta dim {} != engine param dim {}",
+            init_theta.len(),
+            engine.param_dim()
+        );
+        let n = cfg.cluster.n;
+        let seed = cfg.cluster.seed;
+        let attack = cfg.attack.clone();
+        let byz_ids = cfg.cluster.byzantine_ids.clone();
+        let pool = WorkerPool::spawn_with_compressor(
+            n,
+            engine.clone(),
+            |i| {
+                byz_ids
+                    .contains(&i)
+                    .then(|| ByzantineBehavior::new(attack.clone(), seed, i))
+            },
+            opts.compressor.clone(),
+            cfg.cluster.latency_us,
+        );
+        let policy = FaultCheckPolicy::new(cfg.policy.clone(), n, seed);
+        Ok(Master {
+            opts,
+            engine,
+            dataset,
+            pool,
+            policy,
+            rng: Pcg64::new(seed, 0xaa57e2),
+            active: (0..n).collect(),
+            eliminated: Vec::new(),
+            theta: init_theta,
+            chunk_size,
+            cfg,
+        })
+    }
+
+    /// Current Byzantine budget f_t = f - κ_t.
+    fn f_t(&self) -> usize {
+        self.cfg.cluster.f.saturating_sub(self.eliminated.len())
+    }
+
+    /// Run the configured number of iterations.
+    pub fn run(mut self) -> Result<TrainOutcome> {
+        let mut metrics = TrainMetrics::default();
+        let mut events = EventLog::default();
+        let steps = self.cfg.train.steps;
+        for t in 0..steps as u64 {
+            let rec = self.iteration(t, &mut events)?;
+            metrics.push(rec);
+        }
+        self.pool.shutdown();
+        Ok(TrainOutcome {
+            theta: self.theta,
+            metrics,
+            events,
+            eliminated: self.eliminated,
+        })
+    }
+
+    /// One full protocol iteration.
+    fn iteration(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
+        let t0 = Instant::now();
+        let f_t = self.f_t();
+        let nact = self.active.len();
+        let r = self.policy.proactive_r(f_t).min(nact);
+
+        // ---- phase 0: proactive assignment + symbols -------------------
+        let m = nact * self.chunk_size;
+        let data_ids = sample_points(&mut self.rng, self.dataset.len(), m);
+        let mut assignment = Assignment::new(&data_ids, &self.active, r);
+        let theta = Arc::new(self.theta.clone());
+
+        let mut per_worker: Vec<(WorkerId, Vec<(ChunkId, crate::data::Batch)>)> = Vec::new();
+        for &w in &self.active {
+            let tasks: Vec<(ChunkId, crate::data::Batch)> = assignment
+                .chunks_of(w)
+                .into_iter()
+                .map(|c| (c, self.dataset.batch(&assignment.chunks[c])))
+                .collect();
+            per_worker.push((w, tasks));
+        }
+        for (w, tasks) in per_worker {
+            self.pool.send(w, t, 0, &theta, tasks)?;
+        }
+        let responses = self.pool.collect(t, 0, nact)?;
+
+        let nchunks = assignment.nchunks();
+        let mut chunks: Vec<ChunkState> = (0..nchunks)
+            .map(|_| ChunkState { copies: Vec::new(), computed_copies: 0 })
+            .collect();
+        let mut tampered_by_chunk: Vec<Vec<WorkerId>> = vec![Vec::new(); nchunks];
+        for resp in responses {
+            for Symbol { chunk, grad, loss, tampered } in resp.symbols {
+                if tampered {
+                    tampered_by_chunk[chunk].push(resp.worker);
+                }
+                chunks[chunk].copies.push(SymbolCopy { worker: resp.worker, grad, loss });
+                chunks[chunk].computed_copies += 1;
+            }
+        }
+
+        // observed loss ℓ_t: median of received symbol losses (robust to
+        // up to f liars as the paper's trimmed-estimate note suggests)
+        let losses: Vec<f64> = chunks
+            .iter()
+            .flat_map(|c| c.copies.iter().map(|s| s.loss as f64))
+            .collect();
+        let observed_loss = stats::median(&losses);
+
+        // ---- audit decision --------------------------------------------
+        let decision = self.policy.decide(t, observed_loss, f_t, &self.active);
+        let audited = decision != AuditDecision::Skip;
+        events.push(Event::AuditDecision { iter: t, q: self.policy.last_q, audited });
+
+        let audit_chunks: Vec<ChunkId> = match &decision {
+            AuditDecision::Skip => vec![],
+            AuditDecision::Full => (0..nchunks).collect(),
+            AuditDecision::Workers(ws) => (0..nchunks)
+                .filter(|&c| assignment.owners[c].iter().any(|w| ws.contains(w)))
+                .collect(),
+        };
+
+        let mut master_computed_points = 0u64;
+        let mut faults_detected = 0usize;
+        let mut identified_now: Vec<WorkerId> = Vec::new();
+
+        if !audit_chunks.is_empty() {
+            // ---- phase 1: detection ------------------------------------
+            // top every audited chunk up to f_t+1 distinct copies
+            let mut extra: Vec<(WorkerId, Vec<ChunkId>)> = Vec::new();
+            let mut master_tasks: Vec<ChunkId> = Vec::new();
+            for &c in &audit_chunks {
+                let have = chunks[c].copies.len();
+                let want = f_t + 1;
+                if have >= want {
+                    continue;
+                }
+                if self.opts.self_check {
+                    master_tasks.push(c);
+                } else {
+                    let added = assignment.extend(c, want - have, &mut self.rng);
+                    for w in added {
+                        match extra.iter_mut().find(|(ww, _)| *ww == w) {
+                            Some((_, cs)) => cs.push(c),
+                            None => extra.push((w, vec![c])),
+                        }
+                    }
+                }
+            }
+            let expected = extra.len();
+            for (w, cs) in extra {
+                let tasks: Vec<_> = cs
+                    .into_iter()
+                    .map(|c| (c, self.dataset.batch(&assignment.chunks[c])))
+                    .collect();
+                self.pool.send(w, t, 1, &theta, tasks)?;
+            }
+            if expected > 0 {
+                for resp in self.pool.collect(t, 1, expected)? {
+                    for Symbol { chunk, grad, loss, tampered } in resp.symbols {
+                        if tampered {
+                            tampered_by_chunk[chunk].push(resp.worker);
+                        }
+                        chunks[chunk]
+                            .copies
+                            .push(SymbolCopy { worker: resp.worker, grad, loss });
+                        chunks[chunk].computed_copies += 1;
+                    }
+                }
+            }
+            // master self-checks: recompute locally (trusted copy)
+            for c in master_tasks {
+                let batch = self.dataset.batch(&assignment.chunks[c]);
+                let g = self.engine.grad(&theta, &batch)?;
+                master_computed_points += self.chunk_size as u64;
+                let grad = match &self.opts.compressor {
+                    Some(comp) => comp.encode(&g.grad),
+                    None => g.grad,
+                };
+                chunks[c].copies.push(SymbolCopy {
+                    // the master is not a worker: use a sentinel id that
+                    // can never be eliminated
+                    worker: usize::MAX,
+                    grad,
+                    loss: g.loss,
+                });
+            }
+
+            // ---- detection comparisons + phase 2: reactive redundancy --
+            let mut flagged: Vec<ChunkId> = Vec::new();
+            for &c in &audit_chunks {
+                match check_copies(&chunks[c].copies, self.opts.tol) {
+                    CheckOutcome::Unanimous => {
+                        for s in &chunks[c].copies {
+                            if s.worker != usize::MAX {
+                                self.policy.report_verified(s.worker);
+                            }
+                        }
+                    }
+                    CheckOutcome::FaultDetected => {
+                        faults_detected += 1;
+                        let owners: Vec<WorkerId> = chunks[c]
+                            .copies
+                            .iter()
+                            .map(|s| s.worker)
+                            .filter(|&w| w != usize::MAX)
+                            .collect();
+                        events.push(Event::FaultDetected { iter: t, chunk: c, owners: owners.clone() });
+                        self.policy.report_suspects(&owners);
+                        flagged.push(c);
+                    }
+                }
+            }
+
+            if !flagged.is_empty() {
+                if self.opts.self_check {
+                    // the master's own copy is ground truth: every worker
+                    // copy differing from it is provably Byzantine
+                    for &c in &flagged {
+                        let master_copy = chunks[c]
+                            .copies
+                            .iter()
+                            .find(|s| s.worker == usize::MAX)
+                            .expect("self-check copy present")
+                            .clone();
+                        let liars: Vec<WorkerId> = chunks[c]
+                            .copies
+                            .iter()
+                            .filter(|s| {
+                                s.worker != usize::MAX
+                                    && !super::codes::symbols_equal(s, &master_copy, self.opts.tol)
+                            })
+                            .map(|s| s.worker)
+                            .collect();
+                        self.finish_vote(t, c, &mut chunks[c], master_copy, liars, &mut identified_now, events);
+                    }
+                } else {
+                    // top flagged chunks up to 2 f_t + 1 copies
+                    let mut extra: Vec<(WorkerId, Vec<ChunkId>)> = Vec::new();
+                    for &c in &flagged {
+                        let want = 2 * f_t + 1;
+                        let have = chunks[c].copies.len();
+                        if have < want {
+                            let added = assignment.extend(c, want - have, &mut self.rng);
+                            events.push(Event::ReactiveRedundancy {
+                                iter: t,
+                                chunk: c,
+                                added: added.clone(),
+                            });
+                            for w in added {
+                                match extra.iter_mut().find(|(ww, _)| *ww == w) {
+                                    Some((_, cs)) => cs.push(c),
+                                    None => extra.push((w, vec![c])),
+                                }
+                            }
+                        }
+                    }
+                    let expected = extra.len();
+                    for (w, cs) in extra {
+                        let tasks: Vec<_> = cs
+                            .into_iter()
+                            .map(|c| (c, self.dataset.batch(&assignment.chunks[c])))
+                            .collect();
+                        self.pool.send(w, t, 2, &theta, tasks)?;
+                    }
+                    if expected > 0 {
+                        for resp in self.pool.collect(t, 2, expected)? {
+                            for Symbol { chunk, grad, loss, tampered } in resp.symbols {
+                                if tampered {
+                                    tampered_by_chunk[chunk].push(resp.worker);
+                                }
+                                chunks[chunk]
+                                    .copies
+                                    .push(SymbolCopy { worker: resp.worker, grad, loss });
+                                chunks[chunk].computed_copies += 1;
+                            }
+                        }
+                    }
+                    for &c in &flagged {
+                        let vote = majority_vote(&chunks[c].copies, f_t)
+                            .expect("quorum guaranteed with 2f_t+1 distinct owners");
+                        let winner =
+                            SymbolCopy { worker: usize::MAX, grad: vote.grad, loss: vote.loss };
+                        let liars = vote.liars;
+                        self.finish_vote(t, c, &mut chunks[c], winner, liars, &mut identified_now, events);
+                    }
+                }
+            }
+        }
+
+        // ---- aggregate + update ----------------------------------------
+        // chunk value: majority-corrected value if present (stored at
+        // front by finish_vote), else the first received copy
+        let d = self.engine.param_dim();
+        let mut oracle_faulty = false;
+        let mut used_losses: Vec<f64> = Vec::with_capacity(nchunks);
+        for (c, chunk) in chunks.iter().enumerate() {
+            let chosen = &chunk.copies[0];
+            used_losses.push(chosen.loss as f64);
+            if chosen.worker != usize::MAX && tampered_by_chunk[c].contains(&chosen.worker) {
+                oracle_faulty = true;
+            }
+        }
+        let needs_dense_copies =
+            self.opts.compressor.is_some() || (self.opts.unaudited_filter.is_some() && !audited);
+        let aggregate = if needs_dense_copies {
+            let chunk_values: Vec<Vec<f32>> = chunks
+                .iter()
+                .map(|chunk| match &self.opts.compressor {
+                    Some(comp) => comp.decode(&chunk.copies[0].grad, d),
+                    None => chunk.copies[0].grad.clone(),
+                })
+                .collect();
+            match (&self.opts.unaudited_filter, audited) {
+                // hybrid mode (§5): filter the un-audited aggregation
+                (Some(filter), false) => filter.aggregate(&chunk_values, f_t),
+                _ => {
+                    let mut acc = vec![0.0f32; d];
+                    for v in &chunk_values {
+                        crate::linalg::axpy(1.0 / nchunks as f32, v, &mut acc);
+                    }
+                    acc
+                }
+            }
+        } else {
+            // hot path: accumulate straight from the chosen copies, no
+            // per-chunk clone (perf: saves nchunks × d copies/iteration)
+            let mut acc = vec![0.0f32; d];
+            for chunk in &chunks {
+                crate::linalg::axpy(1.0 / nchunks as f32, &chunk.copies[0].grad, &mut acc);
+            }
+            acc
+        };
+        if oracle_faulty {
+            events.push(Event::OracleFaultyUpdate { iter: t });
+        }
+        self.engine
+            .sgd_step(&mut self.theta, &aggregate, self.cfg.train.lr)?;
+
+        // ---- metrics -----------------------------------------------------
+        let computed_points: u64 = chunks
+            .iter()
+            .map(|c| (c.computed_copies * self.chunk_size) as u64)
+            .sum::<u64>()
+            + master_computed_points;
+        let (lambda, _) = self.policy.adaptive_state();
+        Ok(IterationRecord {
+            iter: t,
+            gradients_used: m as u64,
+            gradients_computed: computed_points,
+            audited,
+            faults_detected,
+            identified: identified_now.len(),
+            loss: stats::median(&used_losses) as f32,
+            q: self.policy.last_q,
+            lambda,
+            oracle_faulty_update: oracle_faulty,
+            dist_to_opt: self
+                .opts
+                .w_star
+                .as_ref()
+                .map(|w| crate::linalg::dist2(&self.theta, w)),
+            wall_ns: t0.elapsed().as_nanos() as u64,
+        })
+    }
+
+    /// Common tail of both identification paths: store the corrected
+    /// value at the front of the chunk's copies, eliminate liars.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_vote(
+        &mut self,
+        t: u64,
+        _c: ChunkId,
+        chunk: &mut ChunkState,
+        winner: SymbolCopy,
+        liars: Vec<WorkerId>,
+        identified_now: &mut Vec<WorkerId>,
+        events: &mut EventLog,
+    ) {
+        chunk.copies.insert(0, winner);
+        if liars.is_empty() {
+            return;
+        }
+        events.push(Event::Identified { iter: t, workers: liars.clone() });
+        if self.opts.no_eliminate {
+            return;
+        }
+        for w in liars {
+            if let Some(pos) = self.active.iter().position(|&a| a == w) {
+                self.active.remove(pos);
+                self.eliminated.push(w);
+                self.policy.report_identified(w);
+                events.push(Event::Eliminated { iter: t, worker: w });
+                identified_now.push(w);
+            }
+        }
+    }
+}

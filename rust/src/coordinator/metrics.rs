@@ -1,0 +1,167 @@
+//! Computation-efficiency accounting (Definition 2 of the paper) and
+//! per-iteration training telemetry.
+//!
+//! Definition 2: efficiency of an iteration = (# gradients used for the
+//! update) / (# gradients computed in total). We count *gradients* in
+//! data-point units: a worker computing the symbol of a chunk of B
+//! points computed B gradients; the master's self-checks count too.
+
+#[derive(Clone, Debug, Default)]
+pub struct IterationRecord {
+    pub iter: u64,
+    /// Gradients (data points) whose values entered the update.
+    pub gradients_used: u64,
+    /// Gradients computed across all workers + master this iteration.
+    pub gradients_computed: u64,
+    pub audited: bool,
+    pub faults_detected: usize,
+    pub identified: usize,
+    /// Loss at w_t observed from the (honest-majority) symbols.
+    pub loss: f32,
+    /// q used by the policy this iteration.
+    pub q: f64,
+    /// λ_t (adaptive policy only, else 0).
+    pub lambda: f64,
+    /// Oracle: did a tampered gradient enter the update?
+    pub oracle_faulty_update: bool,
+    /// Distance to the planted optimum (linreg workloads only).
+    pub dist_to_opt: Option<f32>,
+    pub wall_ns: u64,
+}
+
+impl IterationRecord {
+    pub fn efficiency(&self) -> f64 {
+        if self.gradients_computed == 0 {
+            1.0
+        } else {
+            self.gradients_used as f64 / self.gradients_computed as f64
+        }
+    }
+}
+
+/// Whole-run metrics.
+#[derive(Clone, Debug, Default)]
+pub struct TrainMetrics {
+    pub iterations: Vec<IterationRecord>,
+}
+
+impl TrainMetrics {
+    pub fn push(&mut self, rec: IterationRecord) {
+        self.iterations.push(rec);
+    }
+
+    /// Mean of the per-iteration efficiencies — the quantity whose
+    /// expectation Eq. (2) lower-bounds ("expected computation
+    /// efficiency" is per-iteration in the paper's analysis).
+    pub fn mean_iteration_efficiency(&self) -> f64 {
+        if self.iterations.is_empty() {
+            return 1.0;
+        }
+        self.iterations.iter().map(|r| r.efficiency()).sum::<f64>()
+            / self.iterations.len() as f64
+    }
+
+    /// Average efficiency = Σ used / Σ computed (ratio of sums, which is
+    /// what Definition 2 yields over a whole run).
+    pub fn average_efficiency(&self) -> f64 {
+        let used: u64 = self.iterations.iter().map(|r| r.gradients_used).sum();
+        let computed: u64 = self.iterations.iter().map(|r| r.gradients_computed).sum();
+        if computed == 0 {
+            1.0
+        } else {
+            used as f64 / computed as f64
+        }
+    }
+
+    pub fn faulty_update_rate(&self) -> f64 {
+        if self.iterations.is_empty() {
+            return 0.0;
+        }
+        self.iterations.iter().filter(|r| r.oracle_faulty_update).count() as f64
+            / self.iterations.len() as f64
+    }
+
+    pub fn audit_rate(&self) -> f64 {
+        if self.iterations.is_empty() {
+            return 0.0;
+        }
+        self.iterations.iter().filter(|r| r.audited).count() as f64
+            / self.iterations.len() as f64
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        self.iterations.last().map(|r| r.loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn losses(&self) -> Vec<f32> {
+        self.iterations.iter().map(|r| r.loss).collect()
+    }
+
+    /// CSV dump for EXPERIMENTS.md plots.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,faulty_update,dist_to_opt\n",
+        );
+        for r in &self.iterations {
+            s.push_str(&format!(
+                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{}\n",
+                r.iter,
+                r.loss,
+                r.efficiency(),
+                r.gradients_used,
+                r.gradients_computed,
+                r.audited as u8,
+                r.q,
+                r.lambda,
+                r.faults_detected,
+                r.identified,
+                r.oracle_faulty_update as u8,
+                r.dist_to_opt.map(|d| d.to_string()).unwrap_or_default(),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(used: u64, computed: u64, faulty: bool) -> IterationRecord {
+        IterationRecord {
+            gradients_used: used,
+            gradients_computed: computed,
+            oracle_faulty_update: faulty,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn efficiency_per_iteration_and_average() {
+        let mut m = TrainMetrics::default();
+        m.push(rec(64, 64, false)); // unaudited: efficiency 1
+        m.push(rec(64, 192, false)); // audited, f=1: 1/3
+        assert!((m.iterations[0].efficiency() - 1.0).abs() < 1e-12);
+        assert!((m.iterations[1].efficiency() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.average_efficiency() - 128.0 / 256.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rates() {
+        let mut m = TrainMetrics::default();
+        m.push(rec(1, 1, true));
+        m.push(rec(1, 1, false));
+        m.push(rec(1, 1, false));
+        m.push(rec(1, 1, true));
+        assert!((m.faulty_update_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut m = TrainMetrics::default();
+        m.push(rec(1, 2, false));
+        let csv = m.to_csv();
+        assert!(csv.starts_with("iter,loss"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

@@ -1,0 +1,49 @@
+//! The paper's contribution: a Byzantine-fault-tolerant parallelized-SGD
+//! master built on **reactive redundancy** (Gupta & Vaidya, 2019).
+//!
+//! Per-iteration protocol (unifying §4.1 and §4.2 of the paper):
+//!
+//! 1. [`assignment`] — the master samples m data points, splits them
+//!    into per-worker chunks, and replicates each chunk to
+//!    `proactive_r` workers (f_t+1 for the deterministic scheme, 1 for
+//!    the randomized/vanilla schemes).
+//! 2. [`worker`] — worker threads compute gradient *symbols* for their
+//!    chunks; Byzantine workers ([`byzantine`]) may tamper with theirs.
+//! 3. [`policy`] — the master decides whether to audit this iteration
+//!    (always / never / Bernoulli(q) / adaptive q*_t / selective).
+//!    Auditing a chunk that has only one copy triggers the *detection*
+//!    phase: f_t additional replicas.
+//! 4. [`codes`] + [`identify`] — replicated copies are compared
+//!    (f-fault *detection*); on mismatch the master imposes **reactive
+//!    redundancy**, topping the chunk up to 2f_t+1 copies, recovering
+//!    the true gradient by majority vote and *identifying* the liars,
+//!    which are eliminated from all subsequent iterations.
+//! 5. The master aggregates the per-chunk gradients, applies the SGD
+//!    update through the gradient engine (native or PJRT/XLA), and
+//!    updates [`metrics`] (computation-efficiency accounting exactly as
+//!    in Definition 2 of the paper).
+//!
+//! [`analysis`] holds the paper's closed forms (Eqs. 2-5) used by the
+//! experiment benches, and [`adaptive`] the adaptive-q* policy (§4.3).
+
+pub mod adaptive;
+pub mod analysis;
+pub mod assignment;
+pub mod byzantine;
+pub mod codes;
+pub mod compress;
+pub mod events;
+pub mod identify;
+pub mod master;
+pub mod metrics;
+pub mod policy;
+pub mod worker;
+
+/// Worker identifier (index into the cluster's worker vector).
+pub type WorkerId = usize;
+
+/// Chunk identifier within one iteration.
+pub type ChunkId = usize;
+
+pub use master::{Master, TrainOutcome};
+pub use policy::FaultCheckPolicy;

@@ -1,0 +1,232 @@
+//! Fault-check policies: when does the master audit an iteration, and
+//! with what proactive replication does it start?
+//!
+//! | policy        | proactive r | audit decision               | paper |
+//! |---------------|-------------|------------------------------|-------|
+//! | `None`        | 1           | never                        | §1.1 (vulnerable baseline) |
+//! | `Deterministic`| f_t + 1    | every iteration (built-in)   | §4.1  |
+//! | `Bernoulli(q)`| 1           | coin flip with fixed q       | §4.2  |
+//! | `Adaptive`    | 1           | coin flip with q*_t (Eq. 4)  | §4.3  |
+//! | `Selective`   | 1           | per-worker coin flips driven | §5    |
+//! |               |             | by reliability scores        |       |
+
+use super::adaptive::AdaptiveState;
+use super::WorkerId;
+use crate::config::PolicyKind;
+use crate::util::rng::Pcg64;
+
+/// What the master decided for one iteration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AuditDecision {
+    /// No audit: accept the symbols as-is.
+    Skip,
+    /// Audit every chunk (replication comparison over all of them).
+    Full,
+    /// Audit only chunks owned by the given workers (selective checks).
+    Workers(Vec<WorkerId>),
+}
+
+/// Runtime policy state.
+pub struct FaultCheckPolicy {
+    kind: PolicyKind,
+    rng: Pcg64,
+    adaptive: AdaptiveState,
+    /// Reliability scores in [0,1], one per worker (selective policy).
+    /// Start optimistic at 1.0; a detected-but-unidentified incident
+    /// halves every suspect's score; identification zeroes it.
+    pub reliability: Vec<f64>,
+    /// The q actually used for the most recent decision (logged by E5).
+    pub last_q: f64,
+}
+
+impl FaultCheckPolicy {
+    pub fn new(kind: PolicyKind, n_workers: usize, seed: u64) -> Self {
+        let p_assumed = match &kind {
+            PolicyKind::Adaptive { p_assumed } => *p_assumed,
+            _ => 0.5,
+        };
+        FaultCheckPolicy {
+            kind,
+            rng: Pcg64::new(seed, 0x90_11c4),
+            adaptive: AdaptiveState::new(p_assumed),
+            reliability: vec![1.0; n_workers],
+            last_q: 0.0,
+        }
+    }
+
+    pub fn kind(&self) -> &PolicyKind {
+        &self.kind
+    }
+
+    /// Proactive replication factor for this iteration.
+    pub fn proactive_r(&self, f_t: usize) -> usize {
+        match self.kind {
+            PolicyKind::Deterministic => f_t + 1,
+            _ => 1,
+        }
+    }
+
+    /// Audit decision for iteration `t`.
+    ///
+    /// * `observed_loss` — robust estimate of ℓ_t (median of chunk
+    ///   losses), used by the adaptive policy.
+    /// * `f_t` — unidentified Byzantine budget f - κ_t.
+    /// * `active` — currently active workers.
+    pub fn decide(
+        &mut self,
+        _t: u64,
+        observed_loss: f64,
+        f_t: usize,
+        active: &[WorkerId],
+    ) -> AuditDecision {
+        if f_t == 0 {
+            // every Byzantine worker is identified: auditing is pure waste
+            self.last_q = 0.0;
+            if matches!(self.kind, PolicyKind::Adaptive { .. }) {
+                // keep λ_t tracking the observed loss for logging even
+                // though q* is pinned to 0 by κ_t = f
+                self.adaptive.decide_q(observed_loss, 0);
+            }
+            return AuditDecision::Skip;
+        }
+        match &self.kind {
+            PolicyKind::None => {
+                self.last_q = 0.0;
+                AuditDecision::Skip
+            }
+            PolicyKind::Deterministic => {
+                self.last_q = 1.0;
+                AuditDecision::Full
+            }
+            PolicyKind::Bernoulli { q } => {
+                self.last_q = *q;
+                if self.rng.bernoulli(*q) {
+                    AuditDecision::Full
+                } else {
+                    AuditDecision::Skip
+                }
+            }
+            PolicyKind::Adaptive { .. } => {
+                let q = self.adaptive.decide_q(observed_loss, f_t);
+                self.last_q = q;
+                if self.rng.bernoulli(q) {
+                    AuditDecision::Full
+                } else {
+                    AuditDecision::Skip
+                }
+            }
+            PolicyKind::Selective { q_base } => {
+                // per-worker probability: q_i = q_base * (2 - ρ_i),
+                // clamped — workers with degraded reliability get
+                // audited up to twice as often.
+                let mut suspects = Vec::new();
+                for &w in active {
+                    let q_i = (q_base * (2.0 - self.reliability[w])).clamp(0.0, 1.0);
+                    if self.rng.bernoulli(q_i) {
+                        suspects.push(w);
+                    }
+                }
+                self.last_q = *q_base;
+                if suspects.is_empty() {
+                    AuditDecision::Skip
+                } else {
+                    AuditDecision::Workers(suspects)
+                }
+            }
+        }
+    }
+
+    /// Adaptive-policy introspection (λ_t, q*_t) for logging.
+    pub fn adaptive_state(&self) -> (f64, f64) {
+        (self.adaptive.last_lambda, self.adaptive.last_qstar)
+    }
+
+    /// Feedback: a fault was detected on a chunk owned by these workers
+    /// (identity still ambiguous) — degrade their reliability.
+    pub fn report_suspects(&mut self, owners: &[WorkerId]) {
+        for &w in owners {
+            self.reliability[w] *= 0.5;
+        }
+    }
+
+    /// Feedback: worker identified as Byzantine.
+    pub fn report_identified(&mut self, w: WorkerId) {
+        self.reliability[w] = 0.0;
+    }
+
+    /// Feedback: worker's chunk verified correct — slowly restore trust.
+    pub fn report_verified(&mut self, w: WorkerId) {
+        self.reliability[w] = (self.reliability[w] + 0.1).min(1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn active(n: usize) -> Vec<WorkerId> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn none_never_audits() {
+        let mut p = FaultCheckPolicy::new(PolicyKind::None, 8, 1);
+        for t in 0..100 {
+            assert_eq!(p.decide(t, 5.0, 2, &active(8)), AuditDecision::Skip);
+        }
+        assert_eq!(p.proactive_r(2), 1);
+    }
+
+    #[test]
+    fn deterministic_always_audits_with_replication() {
+        let mut p = FaultCheckPolicy::new(PolicyKind::Deterministic, 8, 1);
+        assert_eq!(p.proactive_r(2), 3);
+        assert_eq!(p.decide(0, 5.0, 2, &active(8)), AuditDecision::Full);
+    }
+
+    #[test]
+    fn bernoulli_audit_rate_matches_q() {
+        let mut p = FaultCheckPolicy::new(PolicyKind::Bernoulli { q: 0.25 }, 8, 7);
+        let hits = (0..40_000)
+            .filter(|&t| p.decide(t, 1.0, 2, &active(8)) == AuditDecision::Full)
+            .count();
+        assert!((hits as f64 / 40_000.0 - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn audits_stop_when_all_byzantine_found() {
+        for kind in [
+            PolicyKind::Deterministic,
+            PolicyKind::Bernoulli { q: 1.0 },
+            PolicyKind::Adaptive { p_assumed: 0.9 },
+        ] {
+            let mut p = FaultCheckPolicy::new(kind, 8, 3);
+            assert_eq!(p.decide(0, 100.0, 0, &active(8)), AuditDecision::Skip);
+        }
+    }
+
+    #[test]
+    fn selective_targets_unreliable_workers() {
+        let mut p = FaultCheckPolicy::new(PolicyKind::Selective { q_base: 0.3 }, 4, 9);
+        p.report_identified(3);
+        p.report_suspects(&[1]);
+        assert_eq!(p.reliability, vec![1.0, 0.5, 1.0, 0.0]);
+        // over many iterations, worker 1 must be audited more than worker 0
+        let (mut a0, mut a1) = (0usize, 0usize);
+        for t in 0..20_000 {
+            if let AuditDecision::Workers(ws) = p.decide(t, 1.0, 2, &active(4)) {
+                a0 += ws.contains(&0) as usize;
+                a1 += ws.contains(&1) as usize;
+            }
+        }
+        assert!(
+            a1 as f64 > 1.3 * a0 as f64,
+            "worker1 (ρ=0.5) audited {a1}, worker0 (ρ=1.0) audited {a0}"
+        );
+        // verified reports restore trust
+        for _ in 0..10 {
+            p.report_verified(1);
+        }
+        assert!((p.reliability[1] - 1.0).abs() < 1e-12);
+    }
+}

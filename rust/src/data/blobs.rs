@@ -1,0 +1,106 @@
+//! Gaussian-blob classification dataset (softmax-classifier workload).
+//!
+//! `classes` isotropic Gaussians with well-separated means; labels are
+//! the generating component. Linearly separable at sep >= ~4, so the
+//! MLP converges quickly and attack-induced degradation is visible.
+
+use super::{Batch, Dataset};
+use crate::util::rng::Pcg64;
+
+pub struct BlobsDataset {
+    pub d: usize,
+    pub classes: usize,
+    x: Vec<f32>,
+    labels: Vec<i32>,
+    n: usize,
+}
+
+impl BlobsDataset {
+    pub fn generate(n: usize, d: usize, classes: usize, sep: f32, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 202);
+        // class means on random directions scaled by sep
+        let means: Vec<Vec<f32>> = (0..classes)
+            .map(|_| {
+                let v = rng.gauss_vec(d);
+                let norm = crate::linalg::norm2(&v).max(1e-6);
+                v.iter().map(|x| x / norm * sep).collect()
+            })
+            .collect();
+        let mut x = Vec::with_capacity(n * d);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.index(classes);
+            for j in 0..d {
+                x.push(means[c][j] + rng.gauss_f32());
+            }
+            labels.push(c as i32);
+        }
+        BlobsDataset { d, classes, x, labels, n }
+    }
+}
+
+impl Dataset for BlobsDataset {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn batch(&self, ids: &[usize]) -> Batch {
+        let mut x = Vec::with_capacity(ids.len() * self.d);
+        let mut labels = Vec::with_capacity(ids.len());
+        for &i in ids {
+            x.extend_from_slice(&self.x[i * self.d..(i + 1) * self.d]);
+            labels.push(self.labels[i]);
+        }
+        Batch::Classif { x, labels, b: ids.len(), d: self.d }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_label_range() {
+        let ds = BlobsDataset::generate(50, 8, 4, 5.0, 3);
+        assert_eq!(ds.len(), 50);
+        match ds.batch(&[0, 1, 2]) {
+            Batch::Classif { x, labels, b, d } => {
+                assert_eq!((b, d), (3, 8));
+                assert_eq!(x.len(), 24);
+                assert!(labels.iter().all(|&l| (0..4).contains(&l)));
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn classes_are_separated() {
+        let ds = BlobsDataset::generate(400, 16, 2, 6.0, 9);
+        // nearest-class-mean classifier should beat 95% on separable blobs
+        let all: Vec<usize> = (0..400).collect();
+        if let Batch::Classif { x, labels, b, d } = ds.batch(&all) {
+            // estimate class means from the data itself
+            let mut means = vec![vec![0.0f32; d]; 2];
+            let mut counts = [0usize; 2];
+            for i in 0..b {
+                let c = labels[i] as usize;
+                counts[c] += 1;
+                crate::linalg::axpy(1.0, &x[i * d..(i + 1) * d], &mut means[c]);
+            }
+            for c in 0..2 {
+                crate::linalg::scale(1.0 / counts[c].max(1) as f32, &mut means[c]);
+            }
+            let mut correct = 0;
+            for i in 0..b {
+                let row = &x[i * d..(i + 1) * d];
+                let d0 = crate::linalg::dist2(row, &means[0]);
+                let d1 = crate::linalg::dist2(row, &means[1]);
+                let pred = if d0 < d1 { 0 } else { 1 };
+                if pred == labels[i] {
+                    correct += 1;
+                }
+            }
+            assert!(correct as f64 / b as f64 > 0.95, "acc={}", correct as f64 / b as f64);
+        }
+    }
+}

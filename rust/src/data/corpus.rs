@@ -1,0 +1,118 @@
+//! Byte-level LM corpus for the end-to-end transformer run.
+//!
+//! A small synthetic English-like corpus is built from a fixed seed
+//! text expanded by a 2nd-order Markov chain over words. It is
+//! deterministic, needs no downloads, and has enough structure (word
+//! and character statistics) that cross-entropy visibly falls during
+//! the few hundred steps of the e2e example.
+
+use super::{Batch, Dataset};
+use crate::util::rng::Pcg64;
+
+/// Seed text: public-domain style filler with realistic letter stats.
+const SEED_TEXT: &str = "the master assigns data points to workers and each worker computes \
+gradients of the loss functions at the current parameter estimate . \
+byzantine workers need not follow the instructions correctly and may send \
+malicious incorrect symbols to the master . the identity of the faulty \
+workers remains fixed throughout the learning algorithm and is unknown a \
+priori . the master updates the parameter estimate using the average of \
+the gradients for the chosen data points . upon detecting a fault the \
+master imposes reactive redundancy where each data point is assigned to \
+additional workers . the randomized scheme checks for faults only in \
+intermittent iterations chosen at random which reduces the redundancy in \
+gradient computations while identifying the byzantine workers almost \
+surely . smaller probability of fault checks implies higher efficiency \
+but also higher probability of using faulty gradients for the update . \
+the adaptive approach varies the probability of fault checks depending \
+upon the observed average loss at the current parameter estimate . ";
+
+pub struct Corpus {
+    bytes: Vec<u8>,
+    pub seq_len: usize,
+}
+
+/// A [b, t] batch of token ids (i32, values < 256).
+pub type TokenBatch = Batch;
+
+impl Corpus {
+    /// Build a corpus of roughly `target_len` bytes with window `seq_len`.
+    pub fn synthetic(target_len: usize, seq_len: usize, seed: u64) -> Self {
+        let words: Vec<&str> = SEED_TEXT.split_whitespace().collect();
+        // 2nd-order word Markov chain from the seed text
+        let mut rng = Pcg64::new(seed, 303);
+        let mut text = String::with_capacity(target_len + 64);
+        let mut i = rng.index(words.len() - 2);
+        while text.len() < target_len {
+            text.push_str(words[i]);
+            text.push(' ');
+            // successors of (w_i, w_{i+1}) in the seed text
+            let (a, b) = (words[i], words[(i + 1) % words.len()]);
+            let nexts: Vec<usize> = (0..words.len().saturating_sub(2))
+                .filter(|&j| words[j] == a && words[j + 1] == b)
+                .map(|j| j + 1)
+                .collect();
+            i = if nexts.is_empty() || rng.bernoulli(0.05) {
+                rng.index(words.len() - 2)
+            } else {
+                *nexts[rng.index(nexts.len())..].first().unwrap() % (words.len() - 2)
+            };
+        }
+        Corpus {
+            bytes: text.into_bytes(),
+            seq_len,
+        }
+    }
+
+    pub fn num_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+impl Dataset for Corpus {
+    /// "Data point" = one window start position.
+    fn len(&self) -> usize {
+        self.bytes.len().saturating_sub(self.seq_len + 1)
+    }
+
+    fn batch(&self, ids: &[usize]) -> Batch {
+        let t = self.seq_len;
+        let mut tokens = Vec::with_capacity(ids.len() * t);
+        for &start in ids {
+            let w = &self.bytes[start..start + t];
+            tokens.extend(w.iter().map(|&b| b as i32));
+        }
+        Batch::Tokens { tokens, b: ids.len(), t }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_has_requested_size_and_windows() {
+        let c = Corpus::synthetic(4096, 65, 11);
+        assert!(c.num_bytes() >= 4096);
+        assert!(c.len() > 3000);
+        match c.batch(&[0, 10]) {
+            Batch::Tokens { tokens, b, t } => {
+                assert_eq!((b, t), (2, 65));
+                assert!(tokens.iter().all(|&x| (0..256).contains(&x)));
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn text_is_ascii_words() {
+        let c = Corpus::synthetic(1000, 32, 5);
+        assert!(c.bytes.iter().all(|&b| b == b' ' || b == b'.' || b.is_ascii_lowercase()));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::synthetic(500, 16, 1);
+        let b = Corpus::synthetic(500, 16, 1);
+        assert_eq!(a.bytes, b.bytes);
+    }
+}

@@ -1,0 +1,122 @@
+//! Synthetic workload generators.
+//!
+//! The paper evaluates nothing empirically, so DESIGN.md fixes three
+//! canonical workloads: linear regression with a **planted optimum**
+//! (exact fault-tolerance, Def. 1, is checkable as ||w_t - w*|| -> 0),
+//! a Gaussian-blob softmax classifier, and a byte-level LM corpus for
+//! the end-to-end transformer run.
+
+mod blobs;
+mod corpus;
+mod linreg;
+
+pub use blobs::BlobsDataset;
+pub use corpus::{Corpus, TokenBatch};
+pub use linreg::LinRegDataset;
+
+/// A batch handed to a gradient engine. Mirrors the artifact data
+/// inputs recorded in `artifacts/manifest.json` (everything except the
+/// leading `theta`).
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// x: [b, d] row-major, y: [b]
+    LinReg { x: Vec<f32>, y: Vec<f32>, b: usize, d: usize },
+    /// x: [b, d] row-major, labels: [b]
+    Classif { x: Vec<f32>, labels: Vec<i32>, b: usize, d: usize },
+    /// tokens: [b, t] row-major
+    Tokens { tokens: Vec<i32>, b: usize, t: usize },
+}
+
+impl Batch {
+    /// Number of data points in the batch.
+    pub fn len(&self) -> usize {
+        match self {
+            Batch::LinReg { b, .. } | Batch::Classif { b, .. } | Batch::Tokens { b, .. } => *b,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Select a sub-batch by data-point indices (replication assigns
+    /// *data points*, so workers receive row subsets).
+    pub fn select(&self, idx: &[usize]) -> Batch {
+        match self {
+            Batch::LinReg { x, y, d, .. } => {
+                let mut sx = Vec::with_capacity(idx.len() * d);
+                let mut sy = Vec::with_capacity(idx.len());
+                for &i in idx {
+                    sx.extend_from_slice(&x[i * d..(i + 1) * d]);
+                    sy.push(y[i]);
+                }
+                Batch::LinReg { x: sx, y: sy, b: idx.len(), d: *d }
+            }
+            Batch::Classif { x, labels, d, .. } => {
+                let mut sx = Vec::with_capacity(idx.len() * d);
+                let mut sl = Vec::with_capacity(idx.len());
+                for &i in idx {
+                    sx.extend_from_slice(&x[i * d..(i + 1) * d]);
+                    sl.push(labels[i]);
+                }
+                Batch::Classif { x: sx, labels: sl, b: idx.len(), d: *d }
+            }
+            Batch::Tokens { tokens, t, .. } => {
+                let mut st = Vec::with_capacity(idx.len() * t);
+                for &i in idx {
+                    st.extend_from_slice(&tokens[i * t..(i + 1) * t]);
+                }
+                Batch::Tokens { tokens: st, b: idx.len(), t: *t }
+            }
+        }
+    }
+}
+
+/// A dataset the master can sample batches from.
+pub trait Dataset: Send + Sync {
+    /// Total number of data points N.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the batch for the given data-point ids.
+    fn batch(&self, ids: &[usize]) -> Batch;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_linreg_rows() {
+        let b = Batch::LinReg {
+            x: vec![1., 2., 3., 4., 5., 6.],
+            y: vec![10., 20., 30.],
+            b: 3,
+            d: 2,
+        };
+        let s = b.select(&[2, 0]);
+        match s {
+            Batch::LinReg { x, y, b, d } => {
+                assert_eq!((b, d), (2, 2));
+                assert_eq!(x, vec![5., 6., 1., 2.]);
+                assert_eq!(y, vec![30., 10.]);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn select_tokens_rows() {
+        let b = Batch::Tokens { tokens: vec![1, 2, 3, 4, 5, 6], b: 3, t: 2 };
+        match b.select(&[1]) {
+            Batch::Tokens { tokens, b, t } => {
+                assert_eq!((b, t), (1, 2));
+                assert_eq!(tokens, vec![3, 4]);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+}

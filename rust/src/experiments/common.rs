@@ -1,0 +1,134 @@
+//! Shared experiment machinery: one-call training runs over the native
+//! engine (fast enough for thousands of iterations) with any scheme,
+//! attack, and cluster shape.
+
+use std::sync::Arc;
+
+use crate::baselines::GradientFilter;
+use crate::config::{
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig,
+};
+use crate::coordinator::compress::Compressor;
+use crate::coordinator::master::{Master, MasterOptions};
+use crate::coordinator::TrainOutcome;
+use crate::data::LinRegDataset;
+use crate::grad::{GradientComputer, ModelSpec, NativeEngine};
+use crate::Result;
+
+/// Declarative description of one run.
+#[derive(Clone)]
+pub struct RunSpec {
+    pub n: usize,
+    pub f: usize,
+    /// Actually-Byzantine worker ids (defaults to last f workers so the
+    /// first chunk owners are honest in trivial configs).
+    pub byzantine: Vec<usize>,
+    pub policy: PolicyKind,
+    pub attack: AttackConfig,
+    pub steps: usize,
+    pub seed: u64,
+    pub d: usize,
+    pub chunk: usize,
+    pub lr: f32,
+    pub self_check: bool,
+    /// Label-noise std for the linreg dataset (keeps gradients away
+    /// from bit-zero so attacks never degenerate to no-ops).
+    pub noise_std: f32,
+    /// Measurement mode: identify but never eliminate (holds f_t = f).
+    pub no_eliminate: bool,
+    /// §2.1/§5: symbol compressor (None = dense).
+    pub compressor: Option<Arc<dyn Compressor>>,
+    /// §5 hybrid: filter for unaudited aggregation.
+    pub unaudited_filter: Option<Arc<dyn GradientFilter>>,
+}
+
+impl RunSpec {
+    pub fn new(n: usize, f: usize, policy: PolicyKind) -> RunSpec {
+        RunSpec {
+            n,
+            f,
+            byzantine: (n - f..n).collect(),
+            policy,
+            attack: AttackConfig::default(),
+            steps: 200,
+            seed: 42,
+            d: 16,
+            chunk: 8,
+            lr: 0.5,
+            self_check: false,
+            noise_std: 0.0,
+            no_eliminate: false,
+            compressor: None,
+            unaudited_filter: None,
+        }
+    }
+
+    pub fn attack(mut self, kind: AttackKind, p: f64, magnitude: f32) -> Self {
+        self.attack = AttackConfig { kind, p, magnitude };
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn self_check(mut self, yes: bool) -> Self {
+        self.self_check = yes;
+        self
+    }
+
+    pub fn no_eliminate(mut self, yes: bool) -> Self {
+        self.no_eliminate = yes;
+        self
+    }
+
+    pub fn noise(mut self, std: f32) -> Self {
+        self.noise_std = std;
+        self
+    }
+
+    /// Run on the native linreg workload; returns the outcome plus the
+    /// planted optimum.
+    pub fn run_linreg(&self) -> Result<(TrainOutcome, Vec<f32>)> {
+        let mut cluster = ClusterConfig::new(self.n, self.f, self.seed);
+        cluster.byzantine_ids = self.byzantine.clone();
+        let cfg = ExperimentConfig {
+            name: "exp".into(),
+            cluster,
+            policy: self.policy.clone(),
+            attack: self.attack.clone(),
+            train: TrainConfig { steps: self.steps, lr: self.lr, ..Default::default() },
+        };
+        let ds = Arc::new(LinRegDataset::generate(4096, self.d, self.noise_std, self.seed));
+        let w_star = ds.w_star.clone();
+        let spec = ModelSpec::LinReg { d: self.d, batch: self.chunk };
+        let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+        let theta0 = spec.init_theta(self.seed);
+        let opts = MasterOptions {
+            self_check: self.self_check,
+            w_star: Some(w_star.clone()),
+            no_eliminate: self.no_eliminate,
+            compressor: self.compressor.clone(),
+            unaudited_filter: self.unaudited_filter.clone(),
+            ..Default::default()
+        };
+        let master = Master::new(cfg, opts, engine, ds, theta0, self.chunk)?;
+        Ok((master.run()?, w_star))
+    }
+}
+
+/// Average a measurement over several seeds.
+pub fn over_seeds<F: FnMut(u64) -> Result<f64>>(seeds: std::ops::Range<u64>, mut f: F) -> Result<f64> {
+    let n = (seeds.end - seeds.start) as f64;
+    let mut acc = 0.0;
+    for s in seeds {
+        acc += f(s)?;
+    }
+    Ok(acc / n.max(1.0))
+}

@@ -1,0 +1,56 @@
+//! E3 — probability of faulty updates vs Eq. (3):
+//! P(faulty update) = (1 - (1-p)^f)(1 - q).
+//!
+//! Byzantine workers tamper independently with probability p; the
+//! oracle counts the iterations in which a tampered gradient entered
+//! the parameter update. The run uses the `no_eliminate` measurement
+//! mode (identify + correct, never eliminate) because Eq. (3) is
+//! stated for the regime where all f Byzantine workers remain active.
+
+use crate::config::{AttackKind, PolicyKind};
+use crate::coordinator::analysis;
+use crate::util::bench::{f, Table};
+use crate::Result;
+
+use super::common::RunSpec;
+
+pub fn run(fast: bool) -> Result<()> {
+    println!("\n#### E3: probability of faulty updates vs Eq. (3)");
+    let steps = if fast { 400 } else { 3000 };
+    let mut table = Table::new(&["f", "p", "q", "eq3 analytic", "measured", "|diff|"]);
+    for &(f_byz, n) in &[(1usize, 5usize), (2, 9), (4, 17)] {
+        for &p in &[0.2, 0.5] {
+            for &q in &[0.0, 0.25, 0.5] {
+                let (out, _) = RunSpec::new(n, f_byz, PolicyKind::Bernoulli { q })
+                    .attack(AttackKind::SignFlip, p, 2.0)
+                    .steps(steps)
+                    .seed(11 + (f_byz * 7 + (p * 10.0) as usize + (q * 4.0) as usize) as u64)
+                    .no_eliminate(true) // Eq. (3) assumes all f still active
+                    .noise(0.2) // keep gradients off bit-zero
+                    .run_linreg()?;
+                let iters = &out.metrics.iterations;
+                let faulty = iters.iter().filter(|r| r.oracle_faulty_update).count();
+                let measured = faulty as f64 / iters.len().max(1) as f64;
+                let analytic = analysis::eq3_prob_faulty_update(p, q, f_byz);
+                table.row(&[
+                    f_byz.to_string(),
+                    f(p),
+                    f(q),
+                    f(analytic),
+                    f(measured),
+                    f((measured - analytic).abs()),
+                ]);
+            }
+        }
+    }
+    table.print("E3 (Eq. 3)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn e3_fast() {
+        super::run(true).unwrap();
+    }
+}

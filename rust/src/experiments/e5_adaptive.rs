@@ -1,0 +1,83 @@
+//! E5 — the adaptive policy (§4.3): closed-form q*_t vs numeric argmin
+//! over the whole (λ, p, f_t) grid, the paper's boundary conditions,
+//! and the q*_t trajectory during an actual attacked training run.
+
+use crate::config::{AttackKind, PolicyKind};
+use crate::coordinator::analysis;
+use crate::util::bench::{f, Table};
+use crate::Result;
+
+use super::common::RunSpec;
+
+pub fn run(fast: bool) -> Result<()> {
+    println!("\n#### E5: adaptive q*_t (Eqs. 4-5)");
+
+    // (a) closed form vs numeric argmin
+    let mut worst = 0.0f64;
+    for &f_t in &[1usize, 2, 4, 8] {
+        for &p in &[0.1, 0.3, 0.5, 0.9] {
+            for i in 0..=10 {
+                let lambda = i as f64 / 10.0;
+                let closed = analysis::eq4_qstar(lambda, p, f_t);
+                let numeric = analysis::eq4_qstar_numeric(lambda, p, f_t, 20_000);
+                worst = worst.max((closed - numeric).abs());
+            }
+        }
+    }
+    println!("  closed-form q* vs numeric argmin: max |diff| = {worst:.2e} over 176-point grid");
+    anyhow::ensure!(worst < 1e-3);
+
+    // (b) boundary conditions from the paper
+    let mut table = Table::new(&["boundary condition", "paper", "measured q*"]);
+    table.row(&[
+        "loss -> inf (λ -> 1)".into(),
+        "q* = 1".into(),
+        f(analysis::eq4_qstar(analysis::eq5_lambda(1e9), 0.5, 3)),
+    ]);
+    table.row(&[
+        "p = 0".into(),
+        "q* = 0".into(),
+        f(analysis::eq4_qstar(0.8, 0.0, 3)),
+    ]);
+    table.row(&[
+        "κ_t = f (f_t = 0)".into(),
+        "q* = 0".into(),
+        f(analysis::eq4_qstar(0.8, 0.5, 0)),
+    ]);
+    table.print("E5b (boundary conditions)");
+
+    // (c) trajectory during an attacked linreg run: q*_t must track the
+    // falling loss, then snap to 0 at full identification
+    let steps = if fast { 150 } else { 400 };
+    let (out, _) = RunSpec::new(9, 2, PolicyKind::Adaptive { p_assumed: 0.5 })
+        .attack(AttackKind::SignFlip, 0.5, 2.0)
+        .steps(steps)
+        .seed(31)
+        .run_linreg()?;
+    let mut table = Table::new(&["iter", "loss", "lambda_t", "q_t"]);
+    let iters = &out.metrics.iterations;
+    let idxs: Vec<usize> = [0usize, 1, 2, 5, 10, 20, 50, steps - 1]
+        .iter()
+        .copied()
+        .filter(|&i| i < iters.len())
+        .collect();
+    for &i in &idxs {
+        let r = &iters[i];
+        table.row(&[r.iter.to_string(), f(r.loss as f64), f(r.lambda), f(r.q)]);
+    }
+    table.print("E5c (q*_t trajectory, sign-flip attack, f=2)");
+    println!(
+        "  eliminated {:?}; final dist-to-opt {:.2e}",
+        out.eliminated,
+        out.metrics.iterations.last().unwrap().dist_to_opt.unwrap()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn e5_fast() {
+        super::run(true).unwrap();
+    }
+}

@@ -1,0 +1,41 @@
+//! Executable reproductions of every quantitative claim in the paper
+//! (the experiment index in DESIGN.md). Each submodule prints the
+//! paper's analytical row next to the measured row; `cargo bench` and
+//! `r3bft experiment <id>` both dispatch here.
+
+pub mod common;
+pub mod e1_fig2;
+pub mod e2_efficiency;
+pub mod e3_faulty_updates;
+pub mod e4_identification;
+pub mod e5_adaptive;
+pub mod e7_convergence;
+pub mod e11_generalizations;
+
+use crate::Result;
+
+/// Run one experiment by id ("e1".."e12"; some ids share a module).
+/// `fast` shrinks iteration counts for smoke runs.
+pub fn run(id: &str, fast: bool) -> Result<()> {
+    match id {
+        "e1" => e1_fig2::run(),
+        "e2" => e2_efficiency::run_e2(fast),
+        "e3" => e3_faulty_updates::run(fast),
+        "e4" => e4_identification::run_e4(fast),
+        "e5" => e5_adaptive::run(fast),
+        "e6" => e2_efficiency::run_e6(fast),
+        "e7" => e7_convergence::run_e7(fast),
+        "e8" => e2_efficiency::run_e8(fast),
+        "e9" => e4_identification::run_e9(fast),
+        "e10" => e7_convergence::run_e10(fast),
+        "e11" => e11_generalizations::run_e11(fast),
+        "e12" => e11_generalizations::run_e12(fast),
+        "all" => {
+            for id in ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12"] {
+                run(id, fast)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}' (e1..e12 or all)"),
+    }
+}

@@ -1,0 +1,52 @@
+//! Gradient engines: how a worker (or the master, in self-check mode)
+//! turns (theta, batch) into (gradient, loss).
+//!
+//! Two interchangeable implementations:
+//! * [`native::NativeEngine`] — pure Rust math on `linalg`; used for
+//!   the simulation-scale experiments (thousands of SGD iterations)
+//!   and for tests that must run without `artifacts/`.
+//! * [`xla_engine::XlaEngine`] — executes the AOT artifacts on the
+//!   PJRT CPU client; the production path, and the only engine that
+//!   supports the transformer model.
+//!
+//! Both satisfy the uniform artifact ABI: flat `theta` in, flat
+//! gradient + scalar loss out (see python/compile/models/common.py).
+
+pub mod models;
+pub mod native;
+pub mod xla_engine;
+
+use crate::data::Batch;
+use crate::Result;
+
+pub use models::ModelSpec;
+pub use native::NativeEngine;
+pub use xla_engine::XlaEngine;
+
+/// A computed gradient plus the loss observed at the same point.
+#[derive(Clone, Debug)]
+pub struct GradOutput {
+    pub grad: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Engine interface shared by workers and the master's self-check path.
+pub trait GradientComputer: Send + Sync {
+    /// Flat parameter dimension P.
+    fn param_dim(&self) -> usize;
+
+    /// Gradient of the mean loss over `batch` at `theta`, plus the loss.
+    fn grad(&self, theta: &[f32], batch: &Batch) -> Result<GradOutput>;
+
+    /// Loss only (used by the adaptive policy's observed-loss probe).
+    fn loss(&self, theta: &[f32], batch: &Batch) -> Result<f32> {
+        Ok(self.grad(theta, batch)?.loss)
+    }
+
+    /// Apply an SGD step; default is a host-side axpy, the XLA engine
+    /// overrides it with the fused update artifact.
+    fn sgd_step(&self, theta: &mut Vec<f32>, grad: &[f32], lr: f32) -> Result<()> {
+        crate::linalg::axpy(-lr, grad, theta);
+        Ok(())
+    }
+}

@@ -1,0 +1,156 @@
+//! Model zoo descriptors shared by the native and XLA engines.
+//!
+//! A `ModelSpec` ties together: the model family, its shape
+//! hyper-parameters, the flat parameter dimension, and (for the XLA
+//! engine) the artifact names to execute. The parameter initialization
+//! is defined here so both engines and all experiments start from the
+//! same point for a given seed.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelSpec {
+    /// Half-MSE linear regression, theta = w in R^d.
+    LinReg { d: usize, batch: usize },
+    /// 2-layer relu MLP + softmax cross-entropy.
+    Mlp { in_dim: usize, hidden: usize, classes: usize, batch: usize },
+    /// Byte-level decoder-only transformer (XLA engine only).
+    Transformer { param_dim: usize, batch: usize, seq_len: usize },
+}
+
+impl ModelSpec {
+    pub fn param_dim(&self) -> usize {
+        match self {
+            ModelSpec::LinReg { d, .. } => *d,
+            ModelSpec::Mlp { in_dim, hidden, classes, .. } => {
+                in_dim * hidden + hidden + hidden * classes + classes
+            }
+            ModelSpec::Transformer { param_dim, .. } => *param_dim,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        match self {
+            ModelSpec::LinReg { batch, .. }
+            | ModelSpec::Mlp { batch, .. }
+            | ModelSpec::Transformer { batch, .. } => *batch,
+        }
+    }
+
+    /// Artifact names for the XLA engine (grad, loss, update).
+    pub fn artifact_names(&self) -> (String, String, String) {
+        match self {
+            ModelSpec::LinReg { d, batch } => (
+                format!("linreg_grad_d{d}_b{batch}"),
+                format!("linreg_loss_d{d}_b{batch}"),
+                format!("sgd_linreg_d{d}"),
+            ),
+            ModelSpec::Mlp { in_dim, hidden, classes, batch } => (
+                format!("mlp_grad_i{in_dim}_h{hidden}_c{classes}_b{batch}"),
+                format!("mlp_loss_i{in_dim}_h{hidden}_c{classes}_b{batch}"),
+                "sgd_mlp".to_string(),
+            ),
+            ModelSpec::Transformer { .. } => (
+                "tfm_grad_tiny".to_string(),
+                "tfm_loss_tiny".to_string(),
+                "sgd_tfm_tiny".to_string(),
+            ),
+        }
+    }
+
+    /// Deterministic init matching python/compile/models/common.py:
+    /// matrices ~ N(0, 1/sqrt(fan_in)), vectors zero. For LinReg the
+    /// whole theta is a small random start.
+    pub fn init_theta(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 404);
+        match self {
+            ModelSpec::LinReg { d, .. } => (0..*d).map(|_| 0.1 * rng.gauss_f32()).collect(),
+            ModelSpec::Mlp { in_dim, hidden, classes, .. } => {
+                let mut theta = Vec::with_capacity(self.param_dim());
+                let s1 = 1.0 / (*in_dim as f32).sqrt();
+                theta.extend((0..in_dim * hidden).map(|_| s1 * rng.gauss_f32()));
+                theta.extend(std::iter::repeat(0.0f32).take(*hidden));
+                let s2 = 1.0 / (*hidden as f32).sqrt();
+                theta.extend((0..hidden * classes).map(|_| s2 * rng.gauss_f32()));
+                theta.extend(std::iter::repeat(0.0f32).take(*classes));
+                theta
+            }
+            ModelSpec::Transformer { param_dim, .. } => {
+                // scaled-down global init; layernorm scales need ~1.0 but
+                // a uniform small init still trains at tiny scale. The
+                // e2e example instead initializes via init_transformer().
+                (0..*param_dim).map(|_| 0.02 * rng.gauss_f32()).collect()
+            }
+        }
+    }
+}
+
+/// Structured init for the tiny transformer artifact (matches the
+/// Packer layout in python/compile/models/transformer.py for the
+/// tfm_*_tiny config: vocab=256, seq_len=65, d=64, heads=4, layers=2,
+/// mlp_mult=4). LayerNorm scales init to 1, matrices to N(0, 1/sqrt(in)).
+pub fn init_transformer_tiny(seed: u64) -> Vec<f32> {
+    let (vocab, seq, d, layers, mult) = (256usize, 65usize, 64usize, 2usize, 4usize);
+    let mut rng = Pcg64::new(seed, 505);
+    let mut theta: Vec<f32> = Vec::new();
+    let mat = |rows: usize, cols: usize, theta: &mut Vec<f32>, rng: &mut Pcg64| {
+        let s = 1.0 / (rows as f32).sqrt();
+        theta.extend((0..rows * cols).map(|_| s * rng.gauss_f32()));
+    };
+    mat(vocab, d, &mut theta, &mut rng); // embed (std 1/16)
+    theta.extend((0..seq * d).map(|_| 0.01 * rng.gauss_f32())); // pos
+    for _ in 0..layers {
+        theta.extend(std::iter::repeat(1.0f32).take(d)); // ln1_s
+        theta.extend(std::iter::repeat(0.0f32).take(d)); // ln1_b
+        for _ in 0..4 {
+            mat(d, d, &mut theta, &mut rng); // wq wk wv wo
+        }
+        theta.extend(std::iter::repeat(1.0f32).take(d)); // ln2_s
+        theta.extend(std::iter::repeat(0.0f32).take(d)); // ln2_b
+        mat(d, mult * d, &mut theta, &mut rng); // w_up
+        theta.extend(std::iter::repeat(0.0f32).take(mult * d)); // b_up
+        mat(mult * d, d, &mut theta, &mut rng); // w_down
+        theta.extend(std::iter::repeat(0.0f32).take(d)); // b_down
+    }
+    theta.extend(std::iter::repeat(1.0f32).take(d)); // lnf_s
+    theta.extend(std::iter::repeat(0.0f32).take(d)); // lnf_b
+    mat(d, vocab, &mut theta, &mut rng); // unembed
+    theta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_dims() {
+        assert_eq!(ModelSpec::LinReg { d: 64, batch: 256 }.param_dim(), 64);
+        let mlp = ModelSpec::Mlp { in_dim: 32, hidden: 64, classes: 4, batch: 128 };
+        assert_eq!(mlp.param_dim(), 32 * 64 + 64 + 64 * 4 + 4); // 2372, matches aot.py
+    }
+
+    #[test]
+    fn artifact_names_match_aot() {
+        let (g, l, u) = ModelSpec::LinReg { d: 64, batch: 256 }.artifact_names();
+        assert_eq!(g, "linreg_grad_d64_b256");
+        assert_eq!(l, "linreg_loss_d64_b256");
+        assert_eq!(u, "sgd_linreg_d64");
+    }
+
+    #[test]
+    fn transformer_tiny_init_dim() {
+        // Packer layout total for the tiny config (must equal aot.py's P)
+        let theta = init_transformer_tiny(0);
+        assert_eq!(theta.len(), 136_512);
+        // layernorm scales present: embed block then pos block then ln1_s of ones
+        let off = 256 * 64 + 65 * 64;
+        assert!(theta[off..off + 64].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = ModelSpec::LinReg { d: 16, batch: 8 }.init_theta(9);
+        let b = ModelSpec::LinReg { d: 16, batch: 8 }.init_theta(9);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,242 @@
+//! Pure-Rust gradient engine.
+//!
+//! Implements exactly the same math as the L1/L2 Python stack (see
+//! kernels/ref.py) for the linreg and MLP models, so experiments that
+//! need tens of thousands of SGD iterations can run at native speed and
+//! tests can run without `artifacts/`. Cross-checked against the XLA
+//! engine in rust/tests/test_engines_agree.rs.
+
+use anyhow::bail;
+
+use super::{GradOutput, GradientComputer, ModelSpec};
+use crate::data::Batch;
+use crate::linalg;
+use crate::Result;
+
+pub struct NativeEngine {
+    pub spec: ModelSpec,
+}
+
+impl NativeEngine {
+    pub fn new(spec: ModelSpec) -> Self {
+        NativeEngine { spec }
+    }
+
+    fn linreg(&self, theta: &[f32], x: &[f32], y: &[f32], b: usize, d: usize) -> GradOutput {
+        // r = Xw - y ; grad = X^T r / B ; loss = 0.5 mean r^2
+        let mut grad = vec![0.0f32; d];
+        let mut loss = 0.0f32;
+        for i in 0..b {
+            let row = &x[i * d..(i + 1) * d];
+            let r = linalg::dot(row, theta) - y[i];
+            linalg::axpy(r, row, &mut grad);
+            loss += r * r;
+        }
+        let inv_b = 1.0 / b as f32;
+        linalg::scale(inv_b, &mut grad);
+        GradOutput { grad, loss: 0.5 * loss * inv_b }
+    }
+
+    fn mlp(
+        &self,
+        theta: &[f32],
+        x: &[f32],
+        labels: &[i32],
+        b: usize,
+        in_dim: usize,
+        hidden: usize,
+        classes: usize,
+    ) -> GradOutput {
+        // unpack theta in Packer order: w1 [I,H], b1 [H], w2 [H,C], b2 [C]
+        let (o1, o2, o3) = (
+            in_dim * hidden,
+            in_dim * hidden + hidden,
+            in_dim * hidden + hidden + hidden * classes,
+        );
+        let w1 = &theta[..o1];
+        let b1 = &theta[o1..o2];
+        let w2 = &theta[o2..o3];
+        let b2 = &theta[o3..];
+
+        let mut grad = vec![0.0f32; theta.len()];
+        let (gw1, rest) = grad.split_at_mut(o1);
+        let (gb1, rest) = rest.split_at_mut(hidden);
+        let (gw2, gb2) = rest.split_at_mut(hidden * classes);
+
+        let mut loss = 0.0f32;
+        let inv_b = 1.0 / b as f32;
+        let mut z1 = vec![0.0f32; hidden];
+        let mut logits = vec![0.0f32; classes];
+        let mut dlog = vec![0.0f32; classes];
+        let mut dh = vec![0.0f32; hidden];
+        for i in 0..b {
+            let row = &x[i * in_dim..(i + 1) * in_dim];
+            // z1 = x @ w1 + b1 (w1 row-major [I, H])
+            z1.copy_from_slice(b1);
+            for (j, &xv) in row.iter().enumerate() {
+                if xv != 0.0 {
+                    linalg::axpy(xv, &w1[j * hidden..(j + 1) * hidden], &mut z1);
+                }
+            }
+            // h = relu(z1); logits = h @ w2 + b2
+            logits.copy_from_slice(b2);
+            for (j, &zv) in z1.iter().enumerate() {
+                if zv > 0.0 {
+                    linalg::axpy(zv, &w2[j * classes..(j + 1) * classes], &mut logits);
+                }
+            }
+            // softmax xent
+            let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for &l in logits.iter() {
+                z += (l - maxl).exp();
+            }
+            let logz = maxl + z.ln();
+            let label = labels[i] as usize;
+            loss += logz - logits[label];
+            // dlogits = (softmax - onehot)/B
+            for (c, dl) in dlog.iter_mut().enumerate() {
+                let p = (logits[c] - logz).exp();
+                *dl = (p - if c == label { 1.0 } else { 0.0 }) * inv_b;
+            }
+            // dw2 += h^T dlog ; db2 += dlog ; dh = dlog @ w2^T
+            dh.iter_mut().for_each(|v| *v = 0.0);
+            for (j, &zv) in z1.iter().enumerate() {
+                let h = zv.max(0.0);
+                if h != 0.0 {
+                    linalg::axpy(h, &dlog, &mut gw2[j * classes..(j + 1) * classes]);
+                }
+                if zv > 0.0 {
+                    dh[j] = linalg::dot(&dlog, &w2[j * classes..(j + 1) * classes]);
+                }
+            }
+            linalg::axpy(1.0, &dlog, gb2);
+            // dz1 = dh * relu'(z1) (already folded into dh above)
+            // dw1 += x^T dz1 ; db1 += dz1
+            for (j, &xv) in row.iter().enumerate() {
+                if xv != 0.0 {
+                    linalg::axpy(xv, &dh, &mut gw1[j * hidden..(j + 1) * hidden]);
+                }
+            }
+            linalg::axpy(1.0, &dh, gb1);
+        }
+        GradOutput { grad, loss: loss * inv_b }
+    }
+}
+
+impl GradientComputer for NativeEngine {
+    fn param_dim(&self) -> usize {
+        self.spec.param_dim()
+    }
+
+    fn grad(&self, theta: &[f32], batch: &Batch) -> Result<GradOutput> {
+        match (&self.spec, batch) {
+            (ModelSpec::LinReg { d, .. }, Batch::LinReg { x, y, b, d: bd }) => {
+                if bd != d {
+                    bail!("linreg dim mismatch: model d={d}, batch d={bd}");
+                }
+                Ok(self.linreg(theta, x, y, *b, *d))
+            }
+            (
+                ModelSpec::Mlp { in_dim, hidden, classes, .. },
+                Batch::Classif { x, labels, b, d },
+            ) => {
+                if d != in_dim {
+                    bail!("mlp dim mismatch: model in_dim={in_dim}, batch d={d}");
+                }
+                Ok(self.mlp(theta, x, labels, *b, *in_dim, *hidden, *classes))
+            }
+            (ModelSpec::Transformer { .. }, _) => {
+                bail!("the native engine does not implement the transformer; use --engine xla")
+            }
+            _ => bail!("batch kind does not match model {:?}", self.spec),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Batch, Dataset, LinRegDataset};
+
+    #[test]
+    fn linreg_grad_is_zero_at_optimum() {
+        let ds = LinRegDataset::generate(128, 16, 0.0, 3);
+        let eng = NativeEngine::new(ModelSpec::LinReg { d: 16, batch: 128 });
+        let batch = ds.batch(&(0..128).collect::<Vec<_>>());
+        let out = eng.grad(&ds.w_star, &batch).unwrap();
+        assert!(linalg::norm2(&out.grad) < 1e-4, "grad at w* = {}", linalg::norm2(&out.grad));
+        assert!(out.loss < 1e-8);
+    }
+
+    #[test]
+    fn linreg_matches_finite_differences() {
+        let ds = LinRegDataset::generate(32, 6, 0.1, 5);
+        let eng = NativeEngine::new(ModelSpec::LinReg { d: 6, batch: 32 });
+        let batch = ds.batch(&(0..32).collect::<Vec<_>>());
+        let theta: Vec<f32> = (0..6).map(|i| 0.3 * i as f32 - 0.7).collect();
+        let out = eng.grad(&theta, &batch).unwrap();
+        let eps = 1e-3f32;
+        for j in 0..6 {
+            let mut tp = theta.clone();
+            tp[j] += eps;
+            let lp = eng.grad(&tp, &batch).unwrap().loss;
+            let mut tm = theta.clone();
+            tm[j] -= eps;
+            let lm = eng.grad(&tm, &batch).unwrap().loss;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - out.grad[j]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "coord {j}: fd={fd} analytic={}",
+                out.grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn mlp_matches_finite_differences() {
+        use crate::data::BlobsDataset;
+        let ds = BlobsDataset::generate(64, 8, 3, 3.0, 7);
+        let spec = ModelSpec::Mlp { in_dim: 8, hidden: 12, classes: 3, batch: 64 };
+        let eng = NativeEngine::new(spec.clone());
+        let batch = ds.batch(&(0..64).collect::<Vec<_>>());
+        let theta = spec.init_theta(11);
+        let out = eng.grad(&theta, &batch).unwrap();
+        assert!(out.loss > 0.0);
+        let eps = 1e-2f32;
+        // spot-check 20 coordinates spread over the parameter vector
+        let p = theta.len();
+        for t in 0..20 {
+            let j = t * p / 20;
+            let mut tp = theta.clone();
+            tp[j] += eps;
+            let lp = eng.grad(&tp, &batch).unwrap().loss;
+            let mut tm = theta.clone();
+            tm[j] -= eps;
+            let lm = eng.grad(&tm, &batch).unwrap().loss;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - out.grad[j]).abs() < 5e-2 * (1.0 + fd.abs()),
+                "coord {j}: fd={fd} analytic={}",
+                out.grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_converges_to_planted_optimum() {
+        let ds = LinRegDataset::generate(256, 8, 0.0, 13);
+        let eng = NativeEngine::new(ModelSpec::LinReg { d: 8, batch: 256 });
+        let batch = ds.batch(&(0..256).collect::<Vec<_>>());
+        let mut theta = vec![0.0f32; 8];
+        for _ in 0..300 {
+            let out = eng.grad(&theta, &batch).unwrap();
+            eng.sgd_step(&mut theta, &out.grad, 0.5).unwrap();
+        }
+        assert!(
+            linalg::dist2(&theta, &ds.w_star) < 1e-3,
+            "dist = {}",
+            linalg::dist2(&theta, &ds.w_star)
+        );
+    }
+}

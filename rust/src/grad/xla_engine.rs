@@ -1,0 +1,129 @@
+//! XLA-backed gradient engine: executes the AOT artifacts via PJRT.
+//!
+//! The production path of the three-layer stack — the same HLO a TPU
+//! deployment would run, compiled once per artifact and reused for
+//! every (worker, iteration) execution.
+
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use super::{GradOutput, GradientComputer, ModelSpec};
+use crate::data::Batch;
+use crate::runtime::{HostTensor, Runtime};
+use crate::Result;
+
+pub struct XlaEngine {
+    runtime: Arc<Runtime>,
+    pub spec: ModelSpec,
+    grad_name: String,
+    loss_name: String,
+    update_name: String,
+    /// Use the fused SGD-update artifact only below this parameter
+    /// count. Perf (EXPERIMENTS.md §Perf): on CPU PJRT each execution
+    /// pays literal-copy overhead on both sides; for large P the host
+    /// axpy (~µs) beats the artifact round trip (~ms) by ~500x. On a
+    /// real accelerator with donated device buffers the fused artifact
+    /// wins instead — flip via `set_fused_update_max_dim(usize::MAX)`.
+    fused_update_max_dim: usize,
+}
+
+impl XlaEngine {
+    /// Build over a shared runtime; compiles the three artifacts eagerly
+    /// so the first training iteration pays no compile latency.
+    pub fn new(runtime: Arc<Runtime>, spec: ModelSpec) -> Result<XlaEngine> {
+        let (grad_name, loss_name, update_name) = spec.artifact_names();
+        let a = runtime.preload(&grad_name)?;
+        if a.param_dim != spec.param_dim() {
+            bail!(
+                "artifact '{grad_name}' param_dim {} != model param_dim {} — \
+                 stale artifacts? re-run `make artifacts`",
+                a.param_dim,
+                spec.param_dim()
+            );
+        }
+        runtime.preload(&loss_name)?;
+        runtime.preload(&update_name)?;
+        Ok(XlaEngine {
+            runtime,
+            spec,
+            grad_name,
+            loss_name,
+            update_name,
+            fused_update_max_dim: 16_384,
+        })
+    }
+
+    /// Override the fused-update crossover (see field docs).
+    pub fn set_fused_update_max_dim(&mut self, max_dim: usize) {
+        self.fused_update_max_dim = max_dim;
+    }
+
+    fn batch_tensors(&self, batch: &Batch) -> Result<Vec<HostTensor>> {
+        Ok(match batch {
+            Batch::LinReg { x, y, .. } => vec![
+                HostTensor::F32(x.clone()),
+                HostTensor::F32(y.clone()),
+            ],
+            Batch::Classif { x, labels, .. } => vec![
+                HostTensor::F32(x.clone()),
+                HostTensor::I32(labels.clone()),
+            ],
+            Batch::Tokens { tokens, .. } => vec![HostTensor::I32(tokens.clone())],
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl GradientComputer for XlaEngine {
+    fn param_dim(&self) -> usize {
+        self.spec.param_dim()
+    }
+
+    fn grad(&self, theta: &[f32], batch: &Batch) -> Result<GradOutput> {
+        if batch.len() != self.spec.batch() {
+            bail!(
+                "XLA engine '{}' is AOT-compiled for batch {}, got {} — \
+                 assignment must pad sub-batches to the artifact batch size",
+                self.grad_name,
+                self.spec.batch(),
+                batch.len()
+            );
+        }
+        let mut inputs = vec![HostTensor::F32(theta.to_vec())];
+        inputs.extend(self.batch_tensors(batch)?);
+        let mut out = self.runtime.run(&self.grad_name, &inputs)?;
+        if out.len() != 2 {
+            bail!("grad artifact returned {} outputs, expected 2", out.len());
+        }
+        let loss = out.pop().unwrap().into_f32()?[0];
+        let grad = out.pop().unwrap().into_f32()?;
+        Ok(GradOutput { grad, loss })
+    }
+
+    fn loss(&self, theta: &[f32], batch: &Batch) -> Result<f32> {
+        let mut inputs = vec![HostTensor::F32(theta.to_vec())];
+        inputs.extend(self.batch_tensors(batch)?);
+        let out = self.runtime.run(&self.loss_name, &inputs)?;
+        Ok(out[0].as_f32()?[0])
+    }
+
+    fn sgd_step(&self, theta: &mut Vec<f32>, grad: &[f32], lr: f32) -> Result<()> {
+        if theta.len() > self.fused_update_max_dim {
+            // host axpy fast path (see field docs for the rationale)
+            crate::linalg::axpy(-lr, grad, theta);
+            return Ok(());
+        }
+        let inputs = vec![
+            HostTensor::F32(std::mem::take(theta)),
+            HostTensor::F32(grad.to_vec()),
+            HostTensor::F32(vec![lr]),
+        ];
+        let mut out = self.runtime.run(&self.update_name, &inputs)?;
+        *theta = out.pop().unwrap().into_f32()?;
+        Ok(())
+    }
+}

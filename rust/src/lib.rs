@@ -1,0 +1,46 @@
+//! # r3bft — Randomized Reactive Redundancy for Byzantine Fault-Tolerance
+//!
+//! A production-oriented reproduction of Gupta & Vaidya (2019),
+//! *"Randomized Reactive Redundancy for Byzantine Fault-Tolerance in
+//! Parallelized Learning"*.
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) implement the
+//!   gradient hot loops (tiled matmul, fused linreg gradient, flash
+//!   attention, fused SGD), lowered in interpret mode.
+//! * **L2** — JAX models (`python/compile/models/`) compose the kernels
+//!   into loss/gradient functions with a uniform flat-parameter ABI,
+//!   AOT-lowered to HLO text by `python/compile/aot.py` into
+//!   `artifacts/`.
+//! * **L3** — this crate: a synchronous parameter-server master and a
+//!   pool of worker threads. The master assigns data points, collects
+//!   gradient *symbols*, runs the paper's deterministic / randomized /
+//!   adaptive fault-check policies, imposes **reactive redundancy** on
+//!   detection, identifies and eliminates Byzantine workers, and
+//!   applies SGD updates. Gradients are computed either natively (pure
+//!   Rust) or by executing the AOT artifacts on the PJRT CPU client
+//!   ([`runtime`]).
+//!
+//! Python never runs on the training path; after `make artifacts` the
+//! Rust binary is self-contained.
+//!
+//! Entry points:
+//! * [`coordinator::Master`] — the training loop.
+//! * [`coordinator::policy::FaultCheckPolicy`] — deterministic /
+//!   Bernoulli(q) / adaptive / selective audit policies.
+//! * [`coordinator::analysis`] — the paper's closed forms (Eqs. 2–5).
+//! * [`grad::GradientComputer`] — pluggable gradient engines.
+//! * [`baselines`] — DRACO and gradient-filter comparators.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod grad;
+pub mod linalg;
+pub mod runtime;
+pub mod util;
+
+pub type Result<T> = anyhow::Result<T>;

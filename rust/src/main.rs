@@ -1,0 +1,245 @@
+//! r3bft launcher.
+//!
+//! ```text
+//! r3bft train       [--config file.toml] [--model linreg|mlp|transformer]
+//!                   [--engine native|xla] [--policy ...] [--q 0.2] [--n 8]
+//!                   [--f 2] [--attack sign_flip] [--p 1.0] [--steps 200]
+//!                   [--seed 42] [--csv out.csv]
+//! r3bft experiment  <e1..e10|all> [--full]
+//! r3bft inspect     [--artifacts artifacts]
+//! r3bft help
+//! ```
+
+use std::sync::Arc;
+
+use r3bft::config::{
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig,
+};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::data::{BlobsDataset, Corpus, Dataset, LinRegDataset};
+use r3bft::grad::{models, GradientComputer, ModelSpec, NativeEngine, XlaEngine};
+use r3bft::runtime::Runtime;
+use r3bft::util::args::Args;
+use r3bft::util::logger;
+use r3bft::Result;
+
+fn main() {
+    logger::init();
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("train") => run_train(&args),
+        Some("experiment") => run_experiment(&args),
+        Some("inspect") => run_inspect(&args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "r3bft — Randomized Reactive Redundancy for Byzantine fault-tolerant parallelized SGD
+
+USAGE:
+  r3bft train [opts]          run a training experiment
+  r3bft experiment <id>       reproduce a paper experiment (e1..e10, all); --full for long runs
+  r3bft inspect               list + compile the AOT artifacts
+  r3bft help
+
+TRAIN OPTIONS (defaults in parens):
+  --config FILE      TOML config (overridden by explicit flags below)
+  --model M          linreg | mlp | transformer (linreg)
+  --engine E         native | xla (native; transformer requires xla)
+  --policy P         none | deterministic | randomized | adaptive | selective (randomized)
+  --q Q              audit probability for randomized/selective (0.2)
+  --p-assumed P      assumed tamper prob for adaptive (0.5)
+  --n N              workers (8)        --f F   Byzantine bound (2)
+  --attack A         sign_flip|noise|constant|zero|small_bias|collude (sign_flip)
+  --p P              per-iteration tamper probability (1.0)
+  --magnitude M      attack magnitude (1.0)
+  --steps S          iterations (200)   --lr LR step size (0.1)
+  --seed S           RNG seed (42)      --self-check  master recomputes audits
+  --artifacts DIR    artifacts dir for --engine xla (artifacts)
+  --csv FILE         write per-iteration metrics CSV"
+    );
+}
+
+fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_file(path)?
+    } else {
+        ExperimentConfig {
+            name: "cli".into(),
+            cluster: ClusterConfig::new(8, 2, 42),
+            policy: PolicyKind::Bernoulli { q: 0.2 },
+            attack: AttackConfig::default(),
+            train: TrainConfig::default(),
+        }
+    };
+    if let Some(n) = args.get("n") {
+        cfg.cluster.n = n.parse()?;
+    }
+    if let Some(f) = args.get("f") {
+        cfg.cluster.f = f.parse()?;
+    }
+    if args.get("n").is_some() || args.get("f").is_some() {
+        cfg.cluster.byzantine_ids = (0..cfg.cluster.f.min(cfg.cluster.n)).collect();
+    }
+    cfg.cluster.seed = args.u64("seed", cfg.cluster.seed);
+    if let Some(kind) = args.get("policy") {
+        cfg.policy = PolicyKind::parse(
+            kind,
+            args.f64("q", 0.2),
+            args.f64("p-assumed", 0.5),
+        )?;
+    }
+    if let Some(kind) = args.get("attack") {
+        cfg.attack.kind = AttackKind::parse(kind)?;
+    }
+    cfg.attack.p = args.f64("p", cfg.attack.p);
+    cfg.attack.magnitude = args.f64("magnitude", cfg.attack.magnitude as f64) as f32;
+    if let Some(m) = args.get("model") {
+        cfg.train.model = m.to_string();
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.train.engine = e.to_string();
+    }
+    cfg.train.steps = args.usize("steps", cfg.train.steps);
+    cfg.train.lr = args.f64("lr", cfg.train.lr as f64) as f32;
+    cfg.cluster.validate()?;
+    Ok(cfg)
+}
+
+fn run_train(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    let seed = cfg.cluster.seed;
+    let self_check = args.flag("self-check");
+    let artifacts = args.get_or("artifacts", "artifacts");
+
+    // model + engine + dataset + init
+    let (spec, dataset, w_star): (ModelSpec, Arc<dyn Dataset>, Option<Vec<f32>>) =
+        match cfg.train.model.as_str() {
+            "linreg" => {
+                let ds =
+                    LinRegDataset::generate(cfg.train.dataset_size, 64, cfg.train.noise_std, seed);
+                let w = ds.w_star.clone();
+                (ModelSpec::LinReg { d: 64, batch: 256 }, Arc::new(ds), Some(w))
+            }
+            "mlp" => (
+                ModelSpec::Mlp { in_dim: 32, hidden: 64, classes: 4, batch: 128 },
+                Arc::new(BlobsDataset::generate(cfg.train.dataset_size, 32, 4, 4.0, seed)),
+                None,
+            ),
+            "transformer" => (
+                ModelSpec::Transformer { param_dim: 136_512, batch: 8, seq_len: 65 },
+                Arc::new(Corpus::synthetic(64 * 1024, 65, seed)),
+                None,
+            ),
+            other => anyhow::bail!("unknown model '{other}'"),
+        };
+
+    let engine: Arc<dyn GradientComputer> = match cfg.train.engine.as_str() {
+        "native" => {
+            anyhow::ensure!(
+                !matches!(spec, ModelSpec::Transformer { .. }),
+                "the transformer requires --engine xla"
+            );
+            Arc::new(NativeEngine::new(spec.clone()))
+        }
+        "xla" => {
+            let rt = Arc::new(Runtime::cpu(artifacts)?);
+            Arc::new(XlaEngine::new(rt, spec.clone())?)
+        }
+        other => anyhow::bail!("unknown engine '{other}'"),
+    };
+
+    let theta0 = match &spec {
+        ModelSpec::Transformer { .. } => models::init_transformer_tiny(seed),
+        s => s.init_theta(seed),
+    };
+    let chunk = spec.batch();
+    let opts = MasterOptions { self_check, w_star, ..Default::default() };
+
+    log::info!(
+        "train: model={} engine={} n={} f={} policy={:?} attack={:?} steps={}",
+        cfg.train.model,
+        cfg.train.engine,
+        cfg.cluster.n,
+        cfg.cluster.f,
+        cfg.policy,
+        cfg.attack.kind,
+        cfg.train.steps
+    );
+    let csv_path = args.get("csv").map(String::from);
+    let steps = cfg.train.steps;
+    let master = Master::new(cfg, opts, engine, dataset, theta0, chunk)?;
+    let out = master.run()?;
+
+    println!("== run summary ==");
+    println!("iterations           : {steps}");
+    println!("final loss           : {:.6}", out.metrics.final_loss());
+    println!("avg efficiency       : {:.4}", out.metrics.average_efficiency());
+    println!("audit rate           : {:.4}", out.metrics.audit_rate());
+    println!("faulty updates       : {:.4}", out.metrics.faulty_update_rate());
+    println!("faults detected      : {}", out.events.detections());
+    println!("eliminated workers   : {:?}", out.eliminated);
+    if let Some(d) = out.metrics.iterations.last().and_then(|r| r.dist_to_opt) {
+        println!("dist to optimum      : {d:.3e}");
+    }
+    if let Some(path) = csv_path {
+        std::fs::write(&path, out.metrics.to_csv())?;
+        println!("metrics csv          : {path}");
+    }
+    Ok(())
+}
+
+fn run_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    r3bft::experiments::run(id, !args.flag("full"))
+}
+
+fn run_inspect(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = Runtime::cpu(dir)?;
+    println!("{:<28} {:>6} {:>10} {:>8}  inputs", "artifact", "kind", "param_dim", "compile");
+    let specs: Vec<_> = rt.manifest.artifacts.clone();
+    for a in specs {
+        let t0 = std::time::Instant::now();
+        rt.preload(&a.name)?;
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        let inputs: Vec<String> = a
+            .inputs
+            .iter()
+            .map(|s| format!("{}{:?}", s.name, s.shape))
+            .collect();
+        println!(
+            "{:<28} {:>6} {:>10} {:>7.1}ms  {}",
+            a.name,
+            a.kind,
+            a.param_dim,
+            dt,
+            inputs.join(", ")
+        );
+    }
+    let s = rt.stats();
+    println!(
+        "\ncompiled {} artifacts in {:.1} ms total",
+        s.compilations,
+        s.total_compile_ns as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,246 @@
+//! PJRT CPU client wrapper: compile HLO-text artifacts once, execute
+//! many times from the coordinator's hot path.
+//!
+//! ## Thread-safety
+//!
+//! The `xla` crate's handles (`PjRtClient` is an `Rc`, executables are
+//! raw PJRT pointers) are `!Send`/`!Sync`. All of them are confined to
+//! the private `Inner` struct and touched exclusively under the
+//! `Mutex`, which serializes every reference-count mutation and every
+//! PJRT call; the PJRT C API itself is thread-safe. Under that
+//! invariant the manual `Send`/`Sync` impls below are sound. The lock
+//! also matches the hardware reality: one CPU PJRT device, so
+//! concurrent executions would serialize inside XLA anyway.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use super::manifest::{ArtifactManifest, ArtifactSpec, Dtype};
+use crate::Result;
+
+/// Typed host tensor handed to / returned from an execution.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            HostTensor::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            HostTensor::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(_) => Dtype::F32,
+            HostTensor::I32(_) => Dtype::I32,
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// Cumulative execution counters (exposed by `r3bft inspect`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecutionStats {
+    pub executions: u64,
+    pub total_exec_ns: u64,
+    pub compilations: u64,
+    pub total_compile_ns: u64,
+}
+
+impl ExecutionStats {
+    pub fn mean_exec_us(&self) -> f64 {
+        if self.executions == 0 {
+            0.0
+        } else {
+            self.total_exec_ns as f64 / self.executions as f64 / 1e3
+        }
+    }
+}
+
+/// A compiled artifact plus its manifest signature (module-private: all
+/// execution goes through [`Runtime::run`]).
+struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, s) in inputs.iter().zip(self.spec.inputs.iter()) {
+            if t.len() != s.elements() {
+                bail!(
+                    "artifact '{}' input '{}': expected {} elements {:?}, got {}",
+                    self.spec.name,
+                    s.name,
+                    s.elements(),
+                    s.shape,
+                    t.len()
+                );
+            }
+            if t.dtype() != s.dtype {
+                bail!(
+                    "artifact '{}' input '{}': dtype mismatch",
+                    self.spec.name,
+                    s.name
+                );
+            }
+            literals.push(t.to_literal(&s.shape)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, s) in parts.into_iter().zip(self.spec.outputs.iter()) {
+            let t = match s.dtype {
+                Dtype::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+                Dtype::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+            };
+            if t.len() != s.elements() {
+                bail!(
+                    "artifact '{}' output '{}': expected {} elements, got {}",
+                    self.spec.name,
+                    s.name,
+                    s.elements(),
+                    t.len()
+                );
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+/// All `!Send` xla state lives here, only ever touched under the lock.
+struct Inner {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+}
+
+/// The process-wide PJRT runtime: client + compiled-executable cache.
+pub struct Runtime {
+    inner: Mutex<Inner>,
+    pub manifest: ArtifactManifest,
+    stats: Mutex<ExecutionStats>,
+}
+
+// SAFETY: every xla handle is confined to `Inner` behind the Mutex; no
+// Rc clone or raw PJRT pointer ever escapes this module, so all
+// refcount mutations and C-API calls are serialized (see module docs).
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn cpu(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Runtime {
+            inner: Mutex::new(Inner { client, cache: HashMap::new() }),
+            manifest,
+            stats: Mutex::new(ExecutionStats::default()),
+        })
+    }
+
+    fn ensure_loaded(&self, inner: &mut Inner, name: &str) -> Result<()> {
+        if inner.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = inner.client.compile(&comp)?;
+        let dt = t0.elapsed();
+        log::info!("compiled artifact '{name}' in {:.1} ms", dt.as_secs_f64() * 1e3);
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.compilations += 1;
+            s.total_compile_ns += dt.as_nanos() as u64;
+        }
+        inner.cache.insert(name.to_string(), Executable { spec, exe });
+        Ok(())
+    }
+
+    /// Compile an artifact eagerly (idempotent) and return its spec.
+    pub fn preload(&self, name: &str) -> Result<ArtifactSpec> {
+        let mut inner = self.inner.lock().unwrap();
+        self.ensure_loaded(&mut inner, name)?;
+        Ok(inner.cache[name].spec.clone())
+    }
+
+    /// Execute an artifact by name with host tensors.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let mut inner = self.inner.lock().unwrap();
+        self.ensure_loaded(&mut inner, name)?;
+        let t0 = Instant::now();
+        let out = inner.cache[name].run(inputs)?;
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.total_exec_ns += t0.elapsed().as_nanos() as u64;
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> ExecutionStats {
+        *self.stats.lock().unwrap()
+    }
+}

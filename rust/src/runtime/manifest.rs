@@ -1,0 +1,170 @@
+//! `artifacts/manifest.json` loader.
+//!
+//! The manifest is written by `python/compile/aot.py` and describes
+//! every AOT artifact: file name, kind (grad | loss | update), flat
+//! parameter dimension, and the dtype/shape of each input and output
+//! tensor. The runtime validates every execution against these specs so
+//! a stale artifacts directory fails loudly instead of corrupting a run.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{bail, Context};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unsupported dtype '{other}' in manifest"),
+        })
+    }
+}
+
+/// One named tensor in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|v| v.as_usize().context("shape entry not a number"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            dtype: Dtype::parse(j.req_str("dtype")?)?,
+            shape,
+        })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// "grad" | "loss" | "update"
+    pub kind: String,
+    pub model: String,
+    pub param_dim: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let version = j.req_usize("version")?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported (expected 1)");
+        }
+        let mut artifacts = Vec::new();
+        for a in j.req_arr("artifacts")? {
+            artifacts.push(ArtifactSpec {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                kind: a.req_str("kind")?.to_string(),
+                model: a.req_str("model")?.to_string(),
+                param_dim: a.req_usize("param_dim")?,
+                inputs: a
+                    .req_arr("inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            });
+        }
+        Ok(ArtifactManifest { dir, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| {
+                let known: Vec<&str> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+                format!("artifact '{name}' not in manifest (known: {known:?})")
+            })
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("r3bft_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"artifacts":[
+              {"name":"m1","file":"m1.hlo.txt","kind":"grad","model":"linreg","param_dim":64,
+               "inputs":[{"name":"theta","dtype":"f32","shape":[64]},
+                         {"name":"x","dtype":"f32","shape":[256,64]},
+                         {"name":"y","dtype":"f32","shape":[256]}],
+               "outputs":[{"name":"grad","dtype":"f32","shape":[64]},
+                          {"name":"loss","dtype":"f32","shape":[1]}]}]}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let dir = sample_manifest_dir();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let a = m.find("m1").unwrap();
+        assert_eq!(a.param_dim, 64);
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].elements(), 256 * 64);
+        assert_eq!(a.inputs[1].dtype, Dtype::F32);
+        assert!(m.find("nope").is_err());
+        assert!(m.hlo_path(a).ends_with("m1.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_dir_is_friendly() {
+        let err = ArtifactManifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The interchange format is **HLO text** (not a serialized
+//! `HloModuleProto`): jax ≥ 0.5 emits protos with 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see `/opt/xla-example/README.md`).
+
+mod client;
+mod manifest;
+
+pub use client::{ExecutionStats, HostTensor, Runtime};
+pub use manifest::{ArtifactManifest, ArtifactSpec, Dtype, TensorSpec};

@@ -1,0 +1,127 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `binary [subcommand] --key value --flag [positional...]`.
+//! Typed getters parse on access and report friendly errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — first token may be a
+    /// bare subcommand.
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a float, got '{v}'")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: a bare `--flag value` is read as an option (value-taking);
+        // trailing flags or `--flag` before another `--opt` are flags.
+        let a = p("train data.bin --n 16 --f 2 --q 0.25 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize("n", 0), 16);
+        assert_eq!(a.usize("f", 0), 2);
+        assert!((a.f64("q", 0.0) - 0.25).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["data.bin"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = p("--scheme=randomized --q=0.1");
+        assert_eq!(a.get("scheme"), Some("randomized"));
+        assert!((a.f64("q", 0.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = p("bench --fast");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = p("run");
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.get_or("scheme", "deterministic"), "deterministic");
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = p("x --shift -3.5");
+        assert!((a.f64("shift", 0.0) + 3.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,207 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Every file under `rust/benches/` is a `harness = false` binary that
+//! drives this module. A benchmark runs a closure until both a minimum
+//! wall-time and a minimum iteration count are met, then reports
+//! median / mean / p95 per-iteration time and derived throughput.
+//! Results can also be dumped as JSON for EXPERIMENTS.md bookkeeping.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{mean, percentile};
+
+/// One measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.median_ns
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 10,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+/// Fast options for expensive end-to-end benches.
+pub fn slow_opts() -> BenchOpts {
+    BenchOpts {
+        warmup: Duration::from_millis(50),
+        measure: Duration::from_millis(500),
+        min_iters: 3,
+        max_iters: 10_000,
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Run `f` under the harness and return timing stats.
+pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < opts.warmup {
+        f();
+    }
+    // Measure individual iterations.
+    let mut samples: Vec<f64> = Vec::with_capacity(1024);
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while (start.elapsed() < opts.measure || iters < opts.min_iters) && iters < opts.max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        iters += 1;
+    }
+    let median_ns = percentile(&samples, 50.0);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns,
+        mean_ns: mean(&samples),
+        p95_ns: percentile(&samples, 95.0),
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Run + print one line in a stable, parseable format.
+pub fn run<F: FnMut()>(name: &str, opts: BenchOpts, f: F) -> BenchResult {
+    let r = bench(name, opts, f);
+    println!(
+        "bench {:<44} {:>12} ns/iter (mean {:>12}, p95 {:>12}, {:>9.1}/s, n={})",
+        r.name,
+        fmt_ns(r.median_ns),
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p95_ns),
+        r.per_sec(),
+        r.iters
+    );
+    r
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plain-text table printer for the experiment benches ("the paper's rows").
+// ---------------------------------------------------------------------------
+
+/// Fixed-width table writer: the experiment benches print the same rows
+/// the paper's analysis defines, side by side with the measured values.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        println!("\n== {title} ==");
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:>width$}", h, width = w[i]))
+            .collect();
+        println!("{}", hdr.join("  "));
+        println!("{}", "-".repeat(hdr.join("  ").len()));
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// Format helper: 4-significant-digit float cell.
+pub fn f(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_iters: 5,
+            max_iters: 100_000,
+        };
+        let mut acc = 0u64;
+        let r = bench("spin", opts, || {
+            for i in 0..100u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(r.iters >= 5);
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["q", "analytic", "measured"]);
+        t.row(&["0.1".into(), f(0.9333), f(0.9329)]);
+        t.print("eq2");
+        assert_eq!(t.rows.len(), 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Substrate utilities.
+//!
+//! The offline image vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (rand, serde, clap, criterion,
+//! proptest) are unavailable; this module provides the small, tested
+//! replacements the rest of the crate builds on.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod logger;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg64;

