@@ -1,0 +1,70 @@
+//! Transport-layer dispatch overhead: SimTransport vs
+//! ThreadedTransport across cluster sizes.
+//!
+//! The workload is deliberately tiny (linreg d = 4, chunk = 2) so the
+//! numbers are dominated by per-iteration dispatch — assignment,
+//! scatter/gather, ingest — not by gradient math. The threaded
+//! transport is capped at n = 256 (one OS thread per worker); the
+//! simulator sweeps to n = 1024 on a single thread, which is the
+//! point of having it.
+
+use std::sync::Arc;
+
+use r3bft::config::{AttackConfig, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::data::LinRegDataset;
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+use r3bft::util::bench::{black_box, Table};
+
+const THREADED_CAP: usize = 256;
+
+fn run_once(n: usize, transport: &str, steps: usize) -> f64 {
+    let d = 4usize;
+    let chunk = 2usize;
+    let mut cluster = ClusterConfig::new(n, 1, 42);
+    cluster.byzantine_ids = vec![];
+    cluster.transport = transport.into();
+    let cfg = ExperimentConfig {
+        name: format!("bench-{transport}-{n}"),
+        cluster,
+        policy: PolicyKind::None,
+        attack: AttackConfig::default(),
+        train: TrainConfig { steps, lr: 0.1, ..Default::default() },
+    };
+    let ds = Arc::new(LinRegDataset::generate(4096, d, 0.0, 42));
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(42);
+    let master =
+        Master::new(cfg, MasterOptions::default(), engine, ds, theta0, chunk).expect("master");
+    let t0 = std::time::Instant::now();
+    let out = master.run().expect("run");
+    let dt = t0.elapsed().as_secs_f64();
+    black_box(out);
+    dt / steps as f64
+}
+
+fn main() {
+    println!("#### transport dispatch overhead (linreg d=4, chunk=2, policy=none)");
+    let mut table = Table::new(&["n", "sim us/iter", "threaded us/iter", "threaded/sim"]);
+    for &n in &[8usize, 64, 256, 1024] {
+        let steps = if n >= 1024 { 10 } else { 30 };
+        let sim = run_once(n, "sim", steps);
+        let threaded = if n <= THREADED_CAP {
+            Some(run_once(n, "threaded", steps))
+        } else {
+            None // one OS thread per worker is not feasible at this n
+        };
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", sim * 1e6),
+            threaded.map(|t| format!("{:.1}", t * 1e6)).unwrap_or_else(|| "-".into()),
+            threaded.map(|t| format!("{:.2}x", t / sim)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    table.print("transport sweep (per-iteration wall time)");
+    println!(
+        "\nnote: sim latency model is Zero here, so sim numbers are pure \
+         dispatch + compute; threaded numbers add thread wake/IPC costs."
+    );
+}

@@ -117,6 +117,10 @@ pub struct ClusterConfig {
     pub byzantine_ids: Vec<usize>,
     /// Simulated per-message latency in microseconds (0 = off).
     pub latency_us: u64,
+    /// Execution model: "threaded" (one OS thread per worker) or "sim"
+    /// (deterministic virtual-time simulation, scales to thousands of
+    /// workers). See `coordinator::transport`.
+    pub transport: String,
     pub seed: u64,
 }
 
@@ -129,6 +133,7 @@ impl ClusterConfig {
             f,
             byzantine_ids: (0..f).collect(),
             latency_us: 0,
+            transport: "threaded".into(),
             seed,
         }
     }
@@ -136,6 +141,9 @@ impl ClusterConfig {
     pub fn validate(&self) -> Result<()> {
         if self.n == 0 {
             bail!("n must be positive");
+        }
+        if self.transport != "threaded" && self.transport != "sim" {
+            bail!("unknown transport '{}' (expected threaded|sim)", self.transport);
         }
         if 2 * self.f >= self.n {
             bail!(
@@ -216,6 +224,7 @@ impl ExperimentConfig {
         let seed = doc.usize_or("cluster.seed", 42) as u64;
         let mut cluster = ClusterConfig::new(n, f, seed);
         cluster.latency_us = doc.usize_or("cluster.latency_us", 0) as u64;
+        cluster.transport = doc.str_or("cluster.transport", "threaded");
         if let Some(toml::TomlValue::Arr(ids)) = doc.get("cluster.byzantine_ids") {
             cluster.byzantine_ids = ids
                 .iter()
@@ -270,6 +279,23 @@ mod tests {
         let mut c = ClusterConfig::new(5, 2, 0);
         c.byzantine_ids = vec![0, 1, 2];
         assert!(c.validate().is_err()); // more ids than f
+    }
+
+    #[test]
+    fn transport_kind_validated() {
+        let mut c = ClusterConfig::new(5, 2, 0);
+        assert_eq!(c.transport, "threaded");
+        c.transport = "sim".into();
+        assert!(c.validate().is_ok());
+        c.transport = "carrier-pigeon".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn transport_from_doc() {
+        let doc = TomlDoc::parse("[cluster]\nn = 5\nf = 1\ntransport = \"sim\"\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster.transport, "sim");
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::coordinator::{ChunkId, WorkerId};
 use crate::util::rng::Pcg64;
 
 /// One iteration's assignment state.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Assignment {
     /// chunk -> data-point ids (all chunks equal size).
     pub chunks: Vec<Vec<usize>>,
@@ -83,6 +83,17 @@ impl Assignment {
         let added: Vec<WorkerId> = candidates[..extra].to_vec();
         self.owners[c].extend_from_slice(&added);
         added
+    }
+
+    /// Remove a worker from this iteration's candidate pool (used when
+    /// a worker crash-stops mid-round): it will not be chosen by
+    /// subsequent [`Assignment::extend`] calls. Its existing ownership
+    /// records stay — received copies remain valid, and chunks it
+    /// never answered for are re-extended by the protocol core.
+    pub fn retire(&mut self, w: WorkerId) {
+        if let Some(pos) = self.active.iter().position(|&a| a == w) {
+            self.active.remove(pos);
+        }
     }
 
     /// Sanity invariants (used by property tests).
@@ -173,6 +184,23 @@ mod tests {
         let mut a = Assignment::new(&data, &active, 3);
         let mut rng = Pcg64::seeded(1);
         a.extend(0, 1, &mut rng); // all 3 workers already own chunk 0
+    }
+
+    #[test]
+    fn retired_workers_are_not_chosen_by_extend() {
+        let active: Vec<usize> = (0..6).collect();
+        let data: Vec<usize> = (0..12).collect();
+        let mut a = Assignment::new(&data, &active, 1);
+        a.retire(3);
+        a.retire(4);
+        let mut rng = Pcg64::seeded(5);
+        // chunk 0 is owned by worker 0; extend by the 3 remaining
+        // candidates — the retired pair must never appear
+        let added = a.extend(0, 3, &mut rng);
+        assert_eq!(added.len(), 3);
+        assert!(!added.contains(&3) && !added.contains(&4), "added {added:?}");
+        a.retire(99); // unknown worker: no-op
+        assert_eq!(a.active, vec![0, 1, 2, 5]);
     }
 
     #[test]

@@ -226,6 +226,40 @@ mod tests {
     }
 
     #[test]
+    fn tolerance_near_tie_boundary_is_inclusive() {
+        // |x - y| <= tol: a difference of exactly tol is "equal", the
+        // next representable value above is a detected fault
+        let tol = 0.5f32;
+        let base = sym(0, vec![1.0]);
+        let at_tol = sym(1, vec![1.0 + tol]);
+        assert_eq!(check_copies(&[base.clone(), at_tol], tol), CheckOutcome::Unanimous);
+        let above = sym(1, vec![f32::from_bits((1.0f32 + tol).to_bits() + 1)]);
+        assert_eq!(check_copies(&[base, above], tol), CheckOutcome::FaultDetected);
+    }
+
+    #[test]
+    fn tolerance_applies_to_loss_too() {
+        let tol = 1e-3f32;
+        let a = SymbolCopy { worker: 0, grad: vec![1.0], loss: 1.0 };
+        let near = SymbolCopy { worker: 1, grad: vec![1.0], loss: 1.0 + 0.5 * tol };
+        let far = SymbolCopy { worker: 2, grad: vec![1.0], loss: 1.0 + 10.0 * tol };
+        assert!(symbols_equal(&a, &near, tol));
+        assert!(!symbols_equal(&a, &far, tol));
+        assert_eq!(check_copies(&[a.clone(), near], tol), CheckOutcome::Unanimous);
+        assert_eq!(check_copies(&[a, far], tol), CheckOutcome::FaultDetected);
+    }
+
+    #[test]
+    fn length_mismatch_is_never_equal() {
+        // compressed symbols can differ in wire length; that is a fault
+        // even under a loose tolerance
+        let a = sym(0, vec![1.0, 2.0]);
+        let b = sym(1, vec![1.0]);
+        assert!(!symbols_equal(&a, &b, 100.0));
+        assert_eq!(check_copies(&[a, b], 100.0), CheckOutcome::FaultDetected);
+    }
+
+    #[test]
     fn grad_key_distinguishes() {
         let a = grad_key(&[1.0, 2.0], 0.1);
         let b = grad_key(&[1.0, 2.0], 0.1);

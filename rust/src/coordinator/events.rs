@@ -16,6 +16,10 @@ pub enum Event {
     Identified { iter: u64, workers: Vec<WorkerId> },
     /// Worker eliminated from subsequent iterations.
     Eliminated { iter: u64, worker: WorkerId },
+    /// Worker crash-stopped (sim transport scenarios): retired from
+    /// the active set without being *identified* — crashing is not
+    /// lying, so it does not consume the Byzantine budget.
+    WorkerCrashed { iter: u64, worker: WorkerId },
     /// A faulty gradient slipped into the update (oracle knowledge —
     /// only the simulator can emit this, never the real master).
     OracleFaultyUpdate { iter: u64 },
@@ -70,6 +74,10 @@ impl EventLog {
     pub fn oracle_faulty_updates(&self) -> usize {
         self.count(|e| matches!(e, Event::OracleFaultyUpdate { .. }))
     }
+
+    pub fn crashes(&self) -> usize {
+        self.count(|e| matches!(e, Event::WorkerCrashed { .. }))
+    }
 }
 
 #[cfg(test)]
@@ -85,7 +93,9 @@ mod tests {
         log.push(Event::Eliminated { iter: 0, worker: 2 });
         log.push(Event::AuditDecision { iter: 1, q: 0.5, audited: false });
         log.push(Event::Identified { iter: 5, workers: vec![0] });
+        log.push(Event::WorkerCrashed { iter: 6, worker: 4 });
 
+        assert_eq!(log.crashes(), 1);
         assert_eq!(log.audits(), 1);
         assert_eq!(log.detections(), 1);
         assert_eq!(log.identified_workers(), vec![0, 2]);

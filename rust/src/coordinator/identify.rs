@@ -7,7 +7,7 @@
 use std::collections::HashMap;
 
 use super::codes::{grad_key, SymbolCopy};
-use super::WorkerId;
+use super::{WorkerId, MASTER_SENTINEL};
 
 /// Outcome of a majority vote on one chunk.
 #[derive(Clone, Debug)]
@@ -59,10 +59,14 @@ pub fn majority_vote(copies: &[SymbolCopy], f_t: usize) -> Option<VoteOutcome> {
     Some(VoteOutcome {
         grad: copies[majority_idx].grad.clone(),
         loss: copies[majority_idx].loss,
+        // the master's own copies (MASTER_SENTINEL) are trusted by
+        // definition and can never be named liars — defensive: the
+        // protocol should not mix sentinel copies into votes, but a
+        // policy bug must not "identify" the master
         liars: copies
             .iter()
             .enumerate()
-            .filter(|(i, _)| keys[*i] != majority_key)
+            .filter(|(i, c)| keys[*i] != majority_key && c.worker != MASTER_SENTINEL)
             .map(|(_, c)| c.worker)
             .collect(),
     })
@@ -122,6 +126,53 @@ mod tests {
     fn too_few_copies_panics() {
         let copies = vec![sym(0, vec![1.0]), sym(1, vec![1.0])];
         majority_vote(&copies, 1); // needs 3
+    }
+
+    #[test]
+    fn quorum_at_exactly_two_f_plus_one() {
+        // the minimum copy count: 2f_t+1 with exactly f_t liars means
+        // the honest side holds the quorum by exactly one copy
+        for f_t in 1..=4usize {
+            let truth = vec![0.25f32; 3];
+            let copies: Vec<SymbolCopy> = (0..2 * f_t + 1)
+                .map(|w| {
+                    if w < f_t {
+                        sym(w, vec![7.0 + w as f32; 3]) // liars
+                    } else {
+                        sym(w, truth.clone())
+                    }
+                })
+                .collect();
+            let out = majority_vote(&copies, f_t).unwrap();
+            assert_eq!(out.grad, truth, "f_t={f_t}");
+            assert_eq!(out.liars, (0..f_t).collect::<Vec<_>>(), "f_t={f_t}");
+        }
+    }
+
+    #[test]
+    fn no_quorum_returns_none() {
+        // 2f_t+1 copies but every copy distinct: no value reaches the
+        // f_t+1 quorum — a protocol violation the caller must surface
+        let copies: Vec<SymbolCopy> = (0..5).map(|w| sym(w, vec![w as f32])).collect();
+        assert!(majority_vote(&copies, 2).is_none());
+    }
+
+    #[test]
+    fn master_sentinel_copy_is_never_identified_as_liar() {
+        use crate::coordinator::MASTER_SENTINEL;
+        let truth = vec![1.0f32, 2.0];
+        // a sentinel copy that disagrees with the majority (e.g. a
+        // stale self-check copy mixed into a vote) must not be named
+        let copies = vec![
+            sym(0, truth.clone()),
+            sym(1, truth.clone()),
+            sym(2, truth.clone()),
+            sym(3, vec![9.0, 9.0]),
+            sym(MASTER_SENTINEL, vec![8.0, 8.0]),
+        ];
+        let out = majority_vote(&copies, 2).unwrap();
+        assert_eq!(out.grad, truth);
+        assert_eq!(out.liars, vec![3], "sentinel must be excluded");
     }
 
     #[test]

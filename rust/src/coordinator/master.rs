@@ -1,42 +1,31 @@
-//! The master: synchronous parallelized-SGD training loop with
-//! randomized reactive redundancy (the paper's full protocol).
+//! The master: policy + SGD-update glue over the protocol core.
 //!
-//! Per-iteration phases (numbered as wire `phase` values):
+//! After the transport/protocol refactor this layer is small by
+//! design: it builds the cluster (choosing a [`Transport`] from the
+//! config), hands each iteration to
+//! [`super::protocol::ProtocolCore::run_round`] (which owns the
+//! proactive → detection → reactive phase machine), then aggregates
+//! the per-chunk gradients into a **reused** buffer, applies the SGD
+//! step through the gradient engine, and records metrics/events.
 //!
-//! * **0 proactive** — sample m points, assign chunks with replication
-//!   r (f_t+1 deterministic / 1 otherwise), collect symbols.
-//! * **1 detection** — if this iteration is audited and a chunk has
-//!   only one copy, assign it to f_t additional workers (self-check
-//!   mode instead recomputes on the master) and compare copies.
-//! * **2 reactive** — for chunks whose copies disagree, top up to
-//!   2f_t+1 distinct owners, majority-vote the true value, identify
-//!   the liars, eliminate them (κ_t += …, f_t shrinks).
-//! * **update** — aggregate the per-chunk gradients, SGD-step through
-//!   the gradient engine, record metrics/events.
-//!
-//! Exactness (Def. 1): every audited iteration ends with provably
-//! correct chunk values; unaudited iterations may use tampered
-//! gradients, but each persistent Byzantine worker is identified
-//! almost surely ((1-qp)^t -> 0) and eliminated, after which the run
-//! is attack-free and converges exactly.
+//! See [`super::protocol`] for the protocol semantics and the
+//! exactness argument, and [`super::transport`] for the execution
+//! models (`--transport threaded|sim`).
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::assignment::{sample_points, Assignment};
 use super::byzantine::ByzantineBehavior;
 use super::compress::Compressor;
-use super::codes::{check_copies, CheckOutcome, SymbolCopy};
 use super::events::{Event, EventLog};
-use super::identify::majority_vote;
 use super::metrics::{IterationRecord, TrainMetrics};
-use super::policy::{AuditDecision, FaultCheckPolicy};
-use super::worker::{Symbol, WorkerPool};
-use super::{ChunkId, WorkerId};
+use super::policy::FaultCheckPolicy;
+use super::protocol::{ProtocolConfig, ProtocolCore};
+use super::transport::{LatencyModel, SimTransport, ThreadedTransport, Transport};
+use super::{WorkerId, MASTER_SENTINEL};
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::grad::GradientComputer;
-use crate::util::rng::Pcg64;
 use crate::util::stats;
 use crate::Result;
 
@@ -63,6 +52,9 @@ pub struct MasterOptions {
     /// per-chunk gradients through a lightweight gradient filter instead
     /// of the plain mean, bounding the damage of un-audited tampering.
     pub unaudited_filter: Option<Arc<dyn crate::baselines::GradientFilter>>,
+    /// Scenario knobs for `--transport sim` (latency distribution,
+    /// stragglers, crash plan). Ignored by the threaded transport.
+    pub sim: super::transport::SimConfig,
 }
 
 impl Default for MasterOptions {
@@ -74,6 +66,7 @@ impl Default for MasterOptions {
             no_eliminate: false,
             compressor: None,
             unaudited_filter: None,
+            sim: super::transport::SimConfig::default(),
         }
     }
 }
@@ -85,6 +78,9 @@ pub struct TrainOutcome {
     pub events: EventLog,
     /// Workers identified as Byzantine (in identification order).
     pub eliminated: Vec<WorkerId>,
+    /// Workers that crash-stopped (sim transport scenarios only; a
+    /// crash is not an identification).
+    pub crashed: Vec<WorkerId>,
 }
 
 pub struct Master {
@@ -92,28 +88,23 @@ pub struct Master {
     opts: MasterOptions,
     engine: Arc<dyn GradientComputer>,
     dataset: Arc<dyn Dataset>,
-    pool: WorkerPool,
-    policy: FaultCheckPolicy,
-    rng: Pcg64,
-    active: Vec<WorkerId>,
-    eliminated: Vec<WorkerId>,
+    core: ProtocolCore,
     theta: Vec<f32>,
     chunk_size: usize,
-}
-
-/// Per-chunk working state during one iteration.
-struct ChunkState {
-    copies: Vec<SymbolCopy>,
-    /// data-point count already charged to `gradients_computed`.
-    computed_copies: usize,
+    /// Reused aggregation buffer (hot path: no per-iteration
+    /// `vec![0.0; d]` churn).
+    agg: Vec<f32>,
+    /// Reused per-chunk loss buffer.
+    used_losses: Vec<f64>,
 }
 
 impl Master {
-    /// Build a master over an engine + dataset. `init_theta` seeds the
-    /// parameter vector (use `ModelSpec::init_theta` or
-    /// `init_transformer_tiny`). `chunk_size` is the number of data
-    /// points per chunk — for the XLA engine it must equal the
-    /// artifact's compiled batch size.
+    /// Build a master over an engine + dataset, choosing the transport
+    /// named by `cfg.cluster.transport` ("threaded" | "sim").
+    /// `init_theta` seeds the parameter vector (use
+    /// `ModelSpec::init_theta` or `init_transformer_tiny`).
+    /// `chunk_size` is the number of data points per chunk — for the
+    /// XLA engine it must equal the artifact's compiled batch size.
     pub fn new(
         cfg: ExperimentConfig,
         opts: MasterOptions,
@@ -123,6 +114,55 @@ impl Master {
         chunk_size: usize,
     ) -> Result<Master> {
         cfg.cluster.validate()?;
+        let n = cfg.cluster.n;
+        let seed = cfg.cluster.seed;
+        let attack = cfg.attack.clone();
+        let byz_ids = cfg.cluster.byzantine_ids.clone();
+        let byzantine = |i: WorkerId| {
+            byz_ids
+                .contains(&i)
+                .then(|| ByzantineBehavior::new(attack.clone(), seed, i))
+        };
+        let transport: Box<dyn Transport> = match cfg.cluster.transport.as_str() {
+            "threaded" => Box::new(ThreadedTransport::spawn_with_compressor(
+                n,
+                engine.clone(),
+                byzantine,
+                opts.compressor.clone(),
+                cfg.cluster.latency_us,
+            )),
+            "sim" => {
+                let mut sim_cfg = opts.sim.clone();
+                // convenience: a cluster-level fixed latency applies to
+                // the simulator too unless a distribution is configured
+                if matches!(sim_cfg.latency, LatencyModel::Zero) && cfg.cluster.latency_us > 0 {
+                    sim_cfg.latency = LatencyModel::Fixed { us: cfg.cluster.latency_us };
+                }
+                Box::new(SimTransport::new(
+                    n,
+                    engine.clone(),
+                    byzantine,
+                    opts.compressor.clone(),
+                    sim_cfg,
+                ))
+            }
+            other => anyhow::bail!("unknown transport '{other}' (expected threaded|sim)"),
+        };
+        Self::with_transport(cfg, opts, engine, dataset, init_theta, chunk_size, transport)
+    }
+
+    /// Build a master over an explicit transport (tests and benches
+    /// inject custom scenarios here).
+    pub fn with_transport(
+        cfg: ExperimentConfig,
+        opts: MasterOptions,
+        engine: Arc<dyn GradientComputer>,
+        dataset: Arc<dyn Dataset>,
+        init_theta: Vec<f32>,
+        chunk_size: usize,
+        transport: Box<dyn Transport>,
+    ) -> Result<Master> {
+        cfg.cluster.validate()?;
         anyhow::ensure!(chunk_size > 0, "chunk_size must be positive");
         anyhow::ensure!(
             init_theta.len() == engine.param_dim(),
@@ -130,40 +170,38 @@ impl Master {
             init_theta.len(),
             engine.param_dim()
         );
-        let n = cfg.cluster.n;
-        let seed = cfg.cluster.seed;
-        let attack = cfg.attack.clone();
-        let byz_ids = cfg.cluster.byzantine_ids.clone();
-        let pool = WorkerPool::spawn_with_compressor(
-            n,
-            engine.clone(),
-            |i| {
-                byz_ids
-                    .contains(&i)
-                    .then(|| ByzantineBehavior::new(attack.clone(), seed, i))
-            },
-            opts.compressor.clone(),
-            cfg.cluster.latency_us,
+        anyhow::ensure!(
+            transport.n() == cfg.cluster.n,
+            "transport has {} workers, cluster config says {}",
+            transport.n(),
+            cfg.cluster.n
         );
-        let policy = FaultCheckPolicy::new(cfg.policy.clone(), n, seed);
+        let policy = FaultCheckPolicy::new(cfg.policy.clone(), cfg.cluster.n, cfg.cluster.seed);
+        let core = ProtocolCore::new(
+            transport,
+            policy,
+            ProtocolConfig {
+                f: cfg.cluster.f,
+                seed: cfg.cluster.seed,
+                chunk_size,
+                self_check: opts.self_check,
+                tol: opts.tol,
+                no_eliminate: opts.no_eliminate,
+                compressor: opts.compressor.clone(),
+            },
+        );
+        let d = engine.param_dim();
         Ok(Master {
+            cfg,
             opts,
             engine,
             dataset,
-            pool,
-            policy,
-            rng: Pcg64::new(seed, 0xaa57e2),
-            active: (0..n).collect(),
-            eliminated: Vec::new(),
+            core,
             theta: init_theta,
             chunk_size,
-            cfg,
+            agg: vec![0.0f32; d],
+            used_losses: Vec::new(),
         })
-    }
-
-    /// Current Byzantine budget f_t = f - κ_t.
-    fn f_t(&self) -> usize {
-        self.cfg.cluster.f.saturating_sub(self.eliminated.len())
     }
 
     /// Run the configured number of iterations.
@@ -175,311 +213,92 @@ impl Master {
             let rec = self.iteration(t, &mut events)?;
             metrics.push(rec);
         }
-        self.pool.shutdown();
-        Ok(TrainOutcome {
-            theta: self.theta,
-            metrics,
-            events,
-            eliminated: self.eliminated,
-        })
+        let (eliminated, crashed) = self.core.into_outcome();
+        Ok(TrainOutcome { theta: self.theta, metrics, events, eliminated, crashed })
     }
 
-    /// One full protocol iteration.
+    /// One full protocol iteration: delegate the phases to the core,
+    /// then aggregate + update.
     fn iteration(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
         let t0 = Instant::now();
-        let f_t = self.f_t();
-        let nact = self.active.len();
-        let r = self.policy.proactive_r(f_t).min(nact);
-
-        // ---- phase 0: proactive assignment + symbols -------------------
-        let m = nact * self.chunk_size;
-        let data_ids = sample_points(&mut self.rng, self.dataset.len(), m);
-        let mut assignment = Assignment::new(&data_ids, &self.active, r);
+        let f_t = self.core.f_t();
         let theta = Arc::new(self.theta.clone());
-
-        let mut per_worker: Vec<(WorkerId, Vec<(ChunkId, crate::data::Batch)>)> = Vec::new();
-        for &w in &self.active {
-            let tasks: Vec<(ChunkId, crate::data::Batch)> = assignment
-                .chunks_of(w)
-                .into_iter()
-                .map(|c| (c, self.dataset.batch(&assignment.chunks[c])))
-                .collect();
-            per_worker.push((w, tasks));
-        }
-        for (w, tasks) in per_worker {
-            self.pool.send(w, t, 0, &theta, tasks)?;
-        }
-        let responses = self.pool.collect(t, 0, nact)?;
-
-        let nchunks = assignment.nchunks();
-        let mut chunks: Vec<ChunkState> = (0..nchunks)
-            .map(|_| ChunkState { copies: Vec::new(), computed_copies: 0 })
-            .collect();
-        let mut tampered_by_chunk: Vec<Vec<WorkerId>> = vec![Vec::new(); nchunks];
-        for resp in responses {
-            for Symbol { chunk, grad, loss, tampered } in resp.symbols {
-                if tampered {
-                    tampered_by_chunk[chunk].push(resp.worker);
-                }
-                chunks[chunk].copies.push(SymbolCopy { worker: resp.worker, grad, loss });
-                chunks[chunk].computed_copies += 1;
-            }
-        }
-
-        // observed loss ℓ_t: median of received symbol losses (robust to
-        // up to f liars as the paper's trimmed-estimate note suggests)
-        let losses: Vec<f64> = chunks
-            .iter()
-            .flat_map(|c| c.copies.iter().map(|s| s.loss as f64))
-            .collect();
-        let observed_loss = stats::median(&losses);
-
-        // ---- audit decision --------------------------------------------
-        let decision = self.policy.decide(t, observed_loss, f_t, &self.active);
-        let audited = decision != AuditDecision::Skip;
-        events.push(Event::AuditDecision { iter: t, q: self.policy.last_q, audited });
-
-        let audit_chunks: Vec<ChunkId> = match &decision {
-            AuditDecision::Skip => vec![],
-            AuditDecision::Full => (0..nchunks).collect(),
-            AuditDecision::Workers(ws) => (0..nchunks)
-                .filter(|&c| assignment.owners[c].iter().any(|w| ws.contains(w)))
-                .collect(),
-        };
-
-        let mut master_computed_points = 0u64;
-        let mut faults_detected = 0usize;
-        let mut identified_now: Vec<WorkerId> = Vec::new();
-
-        if !audit_chunks.is_empty() {
-            // ---- phase 1: detection ------------------------------------
-            // top every audited chunk up to f_t+1 distinct copies
-            let mut extra: Vec<(WorkerId, Vec<ChunkId>)> = Vec::new();
-            let mut master_tasks: Vec<ChunkId> = Vec::new();
-            for &c in &audit_chunks {
-                let have = chunks[c].copies.len();
-                let want = f_t + 1;
-                if have >= want {
-                    continue;
-                }
-                if self.opts.self_check {
-                    master_tasks.push(c);
-                } else {
-                    let added = assignment.extend(c, want - have, &mut self.rng);
-                    for w in added {
-                        match extra.iter_mut().find(|(ww, _)| *ww == w) {
-                            Some((_, cs)) => cs.push(c),
-                            None => extra.push((w, vec![c])),
-                        }
-                    }
-                }
-            }
-            let expected = extra.len();
-            for (w, cs) in extra {
-                let tasks: Vec<_> = cs
-                    .into_iter()
-                    .map(|c| (c, self.dataset.batch(&assignment.chunks[c])))
-                    .collect();
-                self.pool.send(w, t, 1, &theta, tasks)?;
-            }
-            if expected > 0 {
-                for resp in self.pool.collect(t, 1, expected)? {
-                    for Symbol { chunk, grad, loss, tampered } in resp.symbols {
-                        if tampered {
-                            tampered_by_chunk[chunk].push(resp.worker);
-                        }
-                        chunks[chunk]
-                            .copies
-                            .push(SymbolCopy { worker: resp.worker, grad, loss });
-                        chunks[chunk].computed_copies += 1;
-                    }
-                }
-            }
-            // master self-checks: recompute locally (trusted copy)
-            for c in master_tasks {
-                let batch = self.dataset.batch(&assignment.chunks[c]);
-                let g = self.engine.grad(&theta, &batch)?;
-                master_computed_points += self.chunk_size as u64;
-                let grad = match &self.opts.compressor {
-                    Some(comp) => comp.encode(&g.grad),
-                    None => g.grad,
-                };
-                chunks[c].copies.push(SymbolCopy {
-                    // the master is not a worker: use a sentinel id that
-                    // can never be eliminated
-                    worker: usize::MAX,
-                    grad,
-                    loss: g.loss,
-                });
-            }
-
-            // ---- detection comparisons + phase 2: reactive redundancy --
-            let mut flagged: Vec<ChunkId> = Vec::new();
-            for &c in &audit_chunks {
-                match check_copies(&chunks[c].copies, self.opts.tol) {
-                    CheckOutcome::Unanimous => {
-                        for s in &chunks[c].copies {
-                            if s.worker != usize::MAX {
-                                self.policy.report_verified(s.worker);
-                            }
-                        }
-                    }
-                    CheckOutcome::FaultDetected => {
-                        faults_detected += 1;
-                        let owners: Vec<WorkerId> = chunks[c]
-                            .copies
-                            .iter()
-                            .map(|s| s.worker)
-                            .filter(|&w| w != usize::MAX)
-                            .collect();
-                        events.push(Event::FaultDetected { iter: t, chunk: c, owners: owners.clone() });
-                        self.policy.report_suspects(&owners);
-                        flagged.push(c);
-                    }
-                }
-            }
-
-            if !flagged.is_empty() {
-                if self.opts.self_check {
-                    // the master's own copy is ground truth: every worker
-                    // copy differing from it is provably Byzantine
-                    for &c in &flagged {
-                        let master_copy = chunks[c]
-                            .copies
-                            .iter()
-                            .find(|s| s.worker == usize::MAX)
-                            .expect("self-check copy present")
-                            .clone();
-                        let liars: Vec<WorkerId> = chunks[c]
-                            .copies
-                            .iter()
-                            .filter(|s| {
-                                s.worker != usize::MAX
-                                    && !super::codes::symbols_equal(s, &master_copy, self.opts.tol)
-                            })
-                            .map(|s| s.worker)
-                            .collect();
-                        self.finish_vote(t, c, &mut chunks[c], master_copy, liars, &mut identified_now, events);
-                    }
-                } else {
-                    // top flagged chunks up to 2 f_t + 1 copies
-                    let mut extra: Vec<(WorkerId, Vec<ChunkId>)> = Vec::new();
-                    for &c in &flagged {
-                        let want = 2 * f_t + 1;
-                        let have = chunks[c].copies.len();
-                        if have < want {
-                            let added = assignment.extend(c, want - have, &mut self.rng);
-                            events.push(Event::ReactiveRedundancy {
-                                iter: t,
-                                chunk: c,
-                                added: added.clone(),
-                            });
-                            for w in added {
-                                match extra.iter_mut().find(|(ww, _)| *ww == w) {
-                                    Some((_, cs)) => cs.push(c),
-                                    None => extra.push((w, vec![c])),
-                                }
-                            }
-                        }
-                    }
-                    let expected = extra.len();
-                    for (w, cs) in extra {
-                        let tasks: Vec<_> = cs
-                            .into_iter()
-                            .map(|c| (c, self.dataset.batch(&assignment.chunks[c])))
-                            .collect();
-                        self.pool.send(w, t, 2, &theta, tasks)?;
-                    }
-                    if expected > 0 {
-                        for resp in self.pool.collect(t, 2, expected)? {
-                            for Symbol { chunk, grad, loss, tampered } in resp.symbols {
-                                if tampered {
-                                    tampered_by_chunk[chunk].push(resp.worker);
-                                }
-                                chunks[chunk]
-                                    .copies
-                                    .push(SymbolCopy { worker: resp.worker, grad, loss });
-                                chunks[chunk].computed_copies += 1;
-                            }
-                        }
-                    }
-                    for &c in &flagged {
-                        let vote = majority_vote(&chunks[c].copies, f_t)
-                            .expect("quorum guaranteed with 2f_t+1 distinct owners");
-                        let winner =
-                            SymbolCopy { worker: usize::MAX, grad: vote.grad, loss: vote.loss };
-                        let liars = vote.liars;
-                        self.finish_vote(t, c, &mut chunks[c], winner, liars, &mut identified_now, events);
-                    }
-                }
-            }
-        }
+        let out = self.core.run_round(
+            t,
+            &theta,
+            self.dataset.as_ref(),
+            self.engine.as_ref(),
+            events,
+        )?;
 
         // ---- aggregate + update ----------------------------------------
-        // chunk value: majority-corrected value if present (stored at
-        // front by finish_vote), else the first received copy
+        let round = self.core.round();
+        let nchunks = round.nchunks();
         let d = self.engine.param_dim();
         let mut oracle_faulty = false;
-        let mut used_losses: Vec<f64> = Vec::with_capacity(nchunks);
-        for (c, chunk) in chunks.iter().enumerate() {
-            let chosen = &chunk.copies[0];
-            used_losses.push(chosen.loss as f64);
-            if chosen.worker != usize::MAX && tampered_by_chunk[c].contains(&chosen.worker) {
+        self.used_losses.clear();
+        for c in 0..nchunks {
+            let chosen = round.chosen(c);
+            self.used_losses.push(chosen.loss as f64);
+            if chosen.worker != MASTER_SENTINEL
+                && round.tampered_by_chunk[c].contains(&chosen.worker)
+            {
                 oracle_faulty = true;
             }
         }
-        let needs_dense_copies =
-            self.opts.compressor.is_some() || (self.opts.unaudited_filter.is_some() && !audited);
-        let aggregate = if needs_dense_copies {
-            let chunk_values: Vec<Vec<f32>> = chunks
-                .iter()
-                .map(|chunk| match &self.opts.compressor {
-                    Some(comp) => comp.decode(&chunk.copies[0].grad, d),
-                    None => chunk.copies[0].grad.clone(),
+        let needs_dense_copies = self.opts.compressor.is_some()
+            || (self.opts.unaudited_filter.is_some() && !out.audited);
+        if needs_dense_copies {
+            let chunk_values: Vec<Vec<f32>> = (0..nchunks)
+                .map(|c| match &self.opts.compressor {
+                    Some(comp) => comp.decode(&round.chosen(c).grad, d),
+                    None => round.chosen(c).grad.clone(),
                 })
                 .collect();
-            match (&self.opts.unaudited_filter, audited) {
+            match (&self.opts.unaudited_filter, out.audited) {
                 // hybrid mode (§5): filter the un-audited aggregation
-                (Some(filter), false) => filter.aggregate(&chunk_values, f_t),
+                (Some(filter), false) => self.agg = filter.aggregate(&chunk_values, f_t),
                 _ => {
-                    let mut acc = vec![0.0f32; d];
+                    self.agg.fill(0.0);
                     for v in &chunk_values {
-                        crate::linalg::axpy(1.0 / nchunks as f32, v, &mut acc);
+                        crate::linalg::axpy(1.0 / nchunks as f32, v, &mut self.agg);
                     }
-                    acc
                 }
             }
         } else {
-            // hot path: accumulate straight from the chosen copies, no
-            // per-chunk clone (perf: saves nchunks × d copies/iteration)
-            let mut acc = vec![0.0f32; d];
-            for chunk in &chunks {
-                crate::linalg::axpy(1.0 / nchunks as f32, &chunk.copies[0].grad, &mut acc);
+            // hot path: accumulate straight from the chosen copies into
+            // the reused buffer — no per-chunk clone, no per-iteration
+            // allocation
+            self.agg.fill(0.0);
+            for c in 0..nchunks {
+                crate::linalg::axpy(1.0 / nchunks as f32, &round.chosen(c).grad, &mut self.agg);
             }
-            acc
-        };
+        }
         if oracle_faulty {
             events.push(Event::OracleFaultyUpdate { iter: t });
         }
         self.engine
-            .sgd_step(&mut self.theta, &aggregate, self.cfg.train.lr)?;
+            .sgd_step(&mut self.theta, &self.agg, self.cfg.train.lr)?;
 
         // ---- metrics -----------------------------------------------------
-        let computed_points: u64 = chunks
+        let round = self.core.round();
+        let computed_points: u64 = round
+            .chunks
             .iter()
             .map(|c| (c.computed_copies * self.chunk_size) as u64)
             .sum::<u64>()
-            + master_computed_points;
-        let (lambda, _) = self.policy.adaptive_state();
+            + out.master_computed_points;
+        let (lambda, _) = self.core.policy().adaptive_state();
         Ok(IterationRecord {
             iter: t,
-            gradients_used: m as u64,
+            gradients_used: out.gradients_used,
             gradients_computed: computed_points,
-            audited,
-            faults_detected,
-            identified: identified_now.len(),
-            loss: stats::median(&used_losses) as f32,
-            q: self.policy.last_q,
+            audited: out.audited,
+            faults_detected: out.faults_detected,
+            identified: out.identified_now.len(),
+            crashed: out.crashed_now.len(),
+            loss: stats::median(&self.used_losses) as f32,
+            q: self.core.policy().last_q,
             lambda,
             oracle_faulty_update: oracle_faulty,
             dist_to_opt: self
@@ -489,37 +308,5 @@ impl Master {
                 .map(|w| crate::linalg::dist2(&self.theta, w)),
             wall_ns: t0.elapsed().as_nanos() as u64,
         })
-    }
-
-    /// Common tail of both identification paths: store the corrected
-    /// value at the front of the chunk's copies, eliminate liars.
-    #[allow(clippy::too_many_arguments)]
-    fn finish_vote(
-        &mut self,
-        t: u64,
-        _c: ChunkId,
-        chunk: &mut ChunkState,
-        winner: SymbolCopy,
-        liars: Vec<WorkerId>,
-        identified_now: &mut Vec<WorkerId>,
-        events: &mut EventLog,
-    ) {
-        chunk.copies.insert(0, winner);
-        if liars.is_empty() {
-            return;
-        }
-        events.push(Event::Identified { iter: t, workers: liars.clone() });
-        if self.opts.no_eliminate {
-            return;
-        }
-        for w in liars {
-            if let Some(pos) = self.active.iter().position(|&a| a == w) {
-                self.active.remove(pos);
-                self.eliminated.push(w);
-                self.policy.report_identified(w);
-                events.push(Event::Eliminated { iter: t, worker: w });
-                identified_now.push(w);
-            }
-        }
     }
 }

@@ -16,6 +16,8 @@ pub struct IterationRecord {
     pub audited: bool,
     pub faults_detected: usize,
     pub identified: usize,
+    /// Workers that crash-stopped this iteration (sim scenarios).
+    pub crashed: usize,
     /// Loss at w_t observed from the (honest-majority) symbols.
     pub loss: f32,
     /// q used by the policy this iteration.
@@ -100,11 +102,11 @@ impl TrainMetrics {
     /// CSV dump for EXPERIMENTS.md plots.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,faulty_update,dist_to_opt\n",
+            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,faulty_update,dist_to_opt\n",
         );
         for r in &self.iterations {
             s.push_str(&format!(
-                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{}\n",
+                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{}\n",
                 r.iter,
                 r.loss,
                 r.efficiency(),
@@ -115,6 +117,7 @@ impl TrainMetrics {
                 r.lambda,
                 r.faults_detected,
                 r.identified,
+                r.crashed,
                 r.oracle_faulty_update as u8,
                 r.dist_to_opt.map(|d| d.to_string()).unwrap_or_default(),
             ));

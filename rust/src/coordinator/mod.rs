@@ -1,13 +1,36 @@
 //! The paper's contribution: a Byzantine-fault-tolerant parallelized-SGD
 //! master built on **reactive redundancy** (Gupta & Vaidya, 2019).
 //!
-//! Per-iteration protocol (unifying §4.1 and §4.2 of the paper):
+//! ## Layer map
+//!
+//! The coordinator is three layers, top to bottom:
+//!
+//! 1. **Policy + SGD glue** — [`master::Master`]: builds the cluster,
+//!    asks [`policy`] when to audit, aggregates the per-chunk
+//!    gradients into a reused buffer, applies the SGD update through
+//!    the gradient engine, and records [`metrics`] / [`events`].
+//! 2. **Protocol core** — [`protocol::ProtocolCore`]: one iteration as
+//!    explicit phase transitions (proactive → detection → reactive,
+//!    [`protocol::Phase`]) over a [`protocol::RoundState`] that owns
+//!    the single symbol-ingest path. Uses [`assignment`] for chunk
+//!    placement, [`codes`] for replica comparison, [`identify`] for
+//!    majority voting, and eliminates identified liars.
+//! 3. **Transport** — [`transport::Transport`]: a scatter/gather
+//!    channel to the workers. [`transport::ThreadedTransport`] is the
+//!    real one-OS-thread-per-worker pool;
+//!    [`transport::SimTransport`] runs thousands of simulated workers
+//!    deterministically in virtual time with latency/straggler/crash
+//!    models. Both drive the same [`worker::WorkerState`] compute core
+//!    (honest engines are deterministic, so the transports are
+//!    bit-identical for the same seed at zero latency).
+//!
+//! ## Per-iteration protocol (unifying §4.1 and §4.2 of the paper)
 //!
 //! 1. [`assignment`] — the master samples m data points, splits them
 //!    into per-worker chunks, and replicates each chunk to
 //!    `proactive_r` workers (f_t+1 for the deterministic scheme, 1 for
 //!    the randomized/vanilla schemes).
-//! 2. [`worker`] — worker threads compute gradient *symbols* for their
+//! 2. [`worker`] — workers compute gradient *symbols* for their
 //!    chunks; Byzantine workers ([`byzantine`]) may tamper with theirs.
 //! 3. [`policy`] — the master decides whether to audit this iteration
 //!    (always / never / Bernoulli(q) / adaptive q*_t / selective).
@@ -37,6 +60,8 @@ pub mod identify;
 pub mod master;
 pub mod metrics;
 pub mod policy;
+pub mod protocol;
+pub mod transport;
 pub mod worker;
 
 /// Worker identifier (index into the cluster's worker vector).
@@ -45,5 +70,12 @@ pub type WorkerId = usize;
 /// Chunk identifier within one iteration.
 pub type ChunkId = usize;
 
+/// Sentinel worker id for symbol copies computed by the master itself
+/// (self-check audits, majority-vote winners). The master is trusted
+/// by definition: a sentinel copy can never be identified as a liar
+/// nor eliminated.
+pub const MASTER_SENTINEL: WorkerId = usize::MAX;
+
 pub use master::{Master, TrainOutcome};
 pub use policy::FaultCheckPolicy;
+pub use transport::{LatencyModel, SimConfig, SimTransport, ThreadedTransport, Transport};

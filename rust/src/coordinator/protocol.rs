@@ -1,0 +1,652 @@
+//! Protocol core: one training iteration as explicit phase transitions
+//! over a [`RoundState`], independent of both the transport (threaded
+//! or simulated, see [`super::transport`]) and the policy/SGD glue
+//! (see [`super::master`]).
+//!
+//! ## Phases
+//!
+//! [`Phase`] names the paper's three wire phases:
+//!
+//! * [`Phase::Proactive`] — sample m points, assign chunks with
+//!   replication r (f_t+1 deterministic / 1 otherwise), scatter,
+//!   gather, ingest. Chunks orphaned by crashed workers are reassigned
+//!   until every chunk has at least one copy.
+//! * [`Phase::Detection`] — if this iteration is audited, top every
+//!   audited chunk up to f_t+1 distinct copies (self-check mode
+//!   instead recomputes on the master) and compare copies.
+//! * [`Phase::Reactive`] — for chunks whose copies disagree, top up to
+//!   2f_t+1 distinct owners, majority-vote the true value, identify
+//!   the liars, eliminate them (κ_t += …, f_t shrinks).
+//!
+//! Every symbol, regardless of phase, enters the round through the
+//! single ingest path [`RoundState::ingest`] — the three copy-pasted
+//! ingest loops of the pre-refactor master collapse here.
+//!
+//! Exactness (Def. 1): every audited iteration ends with provably
+//! correct chunk values; unaudited iterations may use tampered
+//! gradients, but each persistent Byzantine worker is identified
+//! almost surely ((1-qp)^t -> 0) and eliminated, after which the run
+//! is attack-free and converges exactly.
+
+use std::sync::Arc;
+
+use super::assignment::{sample_points, Assignment};
+use super::codes::{check_copies, symbols_equal, CheckOutcome, SymbolCopy};
+use super::compress::Compressor;
+use super::events::{Event, EventLog};
+use super::identify::majority_vote;
+use super::policy::{AuditDecision, FaultCheckPolicy};
+use super::transport::{TaskBundle, Transport};
+use super::worker::{Response, Symbol};
+use super::{ChunkId, WorkerId, MASTER_SENTINEL};
+use crate::data::Dataset;
+use crate::grad::GradientComputer;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::Result;
+
+/// The protocol's wire phases (the `phase` field of every request).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Initial assignment + symbol collection.
+    Proactive,
+    /// Audit replication up to f_t+1 copies.
+    Detection,
+    /// Reactive redundancy up to 2f_t+1 copies + majority vote.
+    Reactive,
+}
+
+impl Phase {
+    pub fn wire(self) -> u32 {
+        match self {
+            Phase::Proactive => 0,
+            Phase::Detection => 1,
+            Phase::Reactive => 2,
+        }
+    }
+}
+
+/// Working state of one chunk during a round.
+#[derive(Default)]
+pub struct ChunkCopies {
+    /// Received symbol copies. After a vote, the corrected value sits
+    /// at the front (worker = [`MASTER_SENTINEL`]).
+    pub copies: Vec<SymbolCopy>,
+    /// Copies charged to `gradients_computed` (Definition 2).
+    pub computed_copies: usize,
+}
+
+/// Per-iteration protocol state: the assignment plus everything
+/// ingested so far. Buffers are reused across iterations.
+#[derive(Default)]
+pub struct RoundState {
+    pub assignment: Assignment,
+    pub chunks: Vec<ChunkCopies>,
+    /// Oracle bookkeeping (metrics only): which workers sent a
+    /// tampered copy of each chunk.
+    pub tampered_by_chunk: Vec<Vec<WorkerId>>,
+}
+
+impl RoundState {
+    /// Re-arm for a new round, reusing allocations.
+    fn reset(&mut self, assignment: Assignment) {
+        let nchunks = assignment.nchunks();
+        self.assignment = assignment;
+        for c in &mut self.chunks {
+            c.copies.clear();
+            c.computed_copies = 0;
+        }
+        self.chunks.resize_with(nchunks, ChunkCopies::default);
+        for v in &mut self.tampered_by_chunk {
+            v.clear();
+        }
+        self.tampered_by_chunk.resize_with(nchunks, Vec::new);
+    }
+
+    pub fn nchunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// The single symbol-ingest path: every response from every phase
+    /// funnels through here exactly once.
+    pub fn ingest(&mut self, responses: Vec<Response>) {
+        for resp in responses {
+            let worker = resp.worker;
+            for Symbol { chunk, grad, loss, tampered } in resp.symbols {
+                if tampered {
+                    self.tampered_by_chunk[chunk].push(worker);
+                }
+                let state = &mut self.chunks[chunk];
+                state.copies.push(SymbolCopy { worker, grad, loss });
+                state.computed_copies += 1;
+            }
+        }
+    }
+
+    /// Chunk value used for the update: the majority-corrected value
+    /// if a vote ran (stored at the front by the reactive phase), else
+    /// the first received copy.
+    pub fn chosen(&self, c: ChunkId) -> &SymbolCopy {
+        &self.chunks[c].copies[0]
+    }
+
+    /// Observed loss ℓ_t: the median over **one loss per chunk** (the
+    /// chunk's first copy). The pre-refactor master pooled every
+    /// received copy, silently weighting r-replicated chunks r× in the
+    /// median; replicas of one chunk are copies of the same
+    /// measurement, not independent samples.
+    pub fn observed_loss(&self, scratch: &mut Vec<f64>) -> f64 {
+        scratch.clear();
+        scratch.extend(
+            self.chunks
+                .iter()
+                .filter_map(|c| c.copies.first().map(|s| s.loss as f64)),
+        );
+        stats::median(scratch)
+    }
+}
+
+/// Static protocol parameters (split off `MasterOptions` so the core
+/// has no dependency on the master layer).
+pub struct ProtocolConfig {
+    /// Byzantine tolerance bound f.
+    pub f: usize,
+    /// Seed for the protocol RNG (sampling, reassignment shuffles).
+    pub seed: u64,
+    /// Data points per chunk.
+    pub chunk_size: usize,
+    /// §5 self-check generalization: audit by recomputing on the
+    /// master instead of replicating to additional workers.
+    pub self_check: bool,
+    /// Symbol comparison tolerance (0.0 = exact bitwise).
+    pub tol: f32,
+    /// Measurement mode: identify but never eliminate (holds f_t = f).
+    pub no_eliminate: bool,
+    /// §2.1/§5 compressed symbols: the master's self-check copies are
+    /// encoded with the same compressor the workers use.
+    pub compressor: Option<Arc<dyn Compressor>>,
+}
+
+/// What one round did (the master turns this into an
+/// [`super::metrics::IterationRecord`]).
+pub struct RoundOutcome {
+    /// Data points whose gradients enter the update (m).
+    pub gradients_used: u64,
+    pub audited: bool,
+    pub faults_detected: usize,
+    pub identified_now: Vec<WorkerId>,
+    pub crashed_now: Vec<WorkerId>,
+    /// Data points the master recomputed itself (self-check audits).
+    pub master_computed_points: u64,
+}
+
+/// The phase-driven protocol state machine. Owns the transport, the
+/// audit policy, the active/eliminated worker sets, and the round
+/// buffers; borrows the dataset and gradient engine per round.
+pub struct ProtocolCore {
+    transport: Box<dyn Transport>,
+    policy: FaultCheckPolicy,
+    rng: Pcg64,
+    active: Vec<WorkerId>,
+    eliminated: Vec<WorkerId>,
+    crashed: Vec<WorkerId>,
+    cfg: ProtocolConfig,
+    round: RoundState,
+    loss_scratch: Vec<f64>,
+}
+
+impl ProtocolCore {
+    pub fn new(
+        transport: Box<dyn Transport>,
+        policy: FaultCheckPolicy,
+        cfg: ProtocolConfig,
+    ) -> ProtocolCore {
+        let n = transport.n();
+        ProtocolCore {
+            transport,
+            policy,
+            rng: Pcg64::new(cfg.seed, 0xaa57e2),
+            active: (0..n).collect(),
+            eliminated: Vec::new(),
+            crashed: Vec::new(),
+            cfg,
+            round: RoundState::default(),
+            loss_scratch: Vec::new(),
+        }
+    }
+
+    /// Current Byzantine budget f_t = f - κ_t.
+    pub fn f_t(&self) -> usize {
+        self.cfg.f.saturating_sub(self.eliminated.len())
+    }
+
+    pub fn active(&self) -> &[WorkerId] {
+        &self.active
+    }
+
+    pub fn eliminated(&self) -> &[WorkerId] {
+        &self.eliminated
+    }
+
+    pub fn crashed(&self) -> &[WorkerId] {
+        &self.crashed
+    }
+
+    pub fn policy(&self) -> &FaultCheckPolicy {
+        &self.policy
+    }
+
+    /// The most recent round (valid after `run_round`).
+    pub fn round(&self) -> &RoundState {
+        &self.round
+    }
+
+    /// Shut the transport down and surrender the final worker sets.
+    pub fn into_outcome(mut self) -> (Vec<WorkerId>, Vec<WorkerId>) {
+        self.transport.shutdown();
+        (self.eliminated, self.crashed)
+    }
+
+    /// Drive one full iteration: proactive → (detection → reactive).
+    pub fn run_round(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+        engine: &dyn GradientComputer,
+        events: &mut EventLog,
+    ) -> Result<RoundOutcome> {
+        anyhow::ensure!(!self.active.is_empty(), "no active workers left at iteration {t}");
+        let f_t = self.f_t();
+        let nact = self.active.len();
+        let r = self.policy.proactive_r(f_t).min(nact);
+        let mut crashed_now: Vec<WorkerId> = Vec::new();
+
+        // ---- Phase::Proactive ------------------------------------------
+        let m = nact * self.cfg.chunk_size;
+        let data_ids = sample_points(&mut self.rng, dataset.len(), m);
+        let mut round = std::mem::take(&mut self.round);
+        round.reset(Assignment::new(&data_ids, &self.active, r));
+
+        let bundles: Vec<TaskBundle> = self
+            .active
+            .iter()
+            .map(|&w| TaskBundle {
+                worker: w,
+                tasks: round
+                    .assignment
+                    .chunks_of(w)
+                    .into_iter()
+                    .map(|c| (c, dataset.batch(&round.assignment.chunks[c])))
+                    .collect(),
+            })
+            .collect();
+        self.transport.scatter(t, Phase::Proactive.wire(), theta, bundles)?;
+        let responses = self.transport.gather(t, Phase::Proactive.wire())?;
+        self.note_failures(t, &mut round, &mut crashed_now, events);
+        round.ingest(responses);
+
+        // crash-drops: reassign orphaned chunks so every chunk has at
+        // least one copy before the update
+        if round.chunks.iter().any(|c| c.copies.is_empty()) {
+            let targets: Vec<(ChunkId, usize)> = (0..round.nchunks()).map(|c| (c, 1)).collect();
+            self.ensure_copies(
+                t,
+                Phase::Proactive,
+                theta,
+                dataset,
+                &mut round,
+                &mut crashed_now,
+                &targets,
+                events,
+            )?;
+        }
+
+        // ---- audit decision --------------------------------------------
+        let observed_loss = round.observed_loss(&mut self.loss_scratch);
+        let decision = self.policy.decide(t, observed_loss, f_t, &self.active);
+        let audited = decision != AuditDecision::Skip;
+        events.push(Event::AuditDecision { iter: t, q: self.policy.last_q, audited });
+
+        let audit_chunks: Vec<ChunkId> = match &decision {
+            AuditDecision::Skip => vec![],
+            AuditDecision::Full => (0..round.nchunks()).collect(),
+            AuditDecision::Workers(ws) => (0..round.nchunks())
+                .filter(|&c| round.assignment.owners[c].iter().any(|w| ws.contains(w)))
+                .collect(),
+        };
+
+        let mut master_computed_points = 0u64;
+        let mut faults_detected = 0usize;
+        let mut identified_now: Vec<WorkerId> = Vec::new();
+
+        if !audit_chunks.is_empty() {
+            // ---- Phase::Detection --------------------------------------
+            if self.cfg.self_check {
+                // master recomputes under-replicated chunks locally
+                // (trusted copy with the sentinel id)
+                for &c in &audit_chunks {
+                    if round.chunks[c].copies.len() >= f_t + 1 {
+                        continue;
+                    }
+                    let batch = dataset.batch(&round.assignment.chunks[c]);
+                    let g = engine.grad(theta, &batch)?;
+                    master_computed_points += self.cfg.chunk_size as u64;
+                    let grad = match &self.cfg.compressor {
+                        Some(comp) => comp.encode(&g.grad),
+                        None => g.grad,
+                    };
+                    round.chunks[c].copies.push(SymbolCopy {
+                        worker: MASTER_SENTINEL,
+                        grad,
+                        loss: g.loss,
+                    });
+                }
+            } else {
+                let targets: Vec<(ChunkId, usize)> =
+                    audit_chunks.iter().map(|&c| (c, f_t + 1)).collect();
+                self.ensure_copies(
+                    t,
+                    Phase::Detection,
+                    theta,
+                    dataset,
+                    &mut round,
+                    &mut crashed_now,
+                    &targets,
+                    events,
+                )?;
+            }
+
+            // detection comparisons
+            let mut flagged: Vec<ChunkId> = Vec::new();
+            for &c in &audit_chunks {
+                match check_copies(&round.chunks[c].copies, self.cfg.tol) {
+                    CheckOutcome::Unanimous => {
+                        for s in &round.chunks[c].copies {
+                            if s.worker != MASTER_SENTINEL {
+                                self.policy.report_verified(s.worker);
+                            }
+                        }
+                    }
+                    CheckOutcome::FaultDetected => {
+                        faults_detected += 1;
+                        let owners: Vec<WorkerId> = round.chunks[c]
+                            .copies
+                            .iter()
+                            .map(|s| s.worker)
+                            .filter(|&w| w != MASTER_SENTINEL)
+                            .collect();
+                        events.push(Event::FaultDetected {
+                            iter: t,
+                            chunk: c,
+                            owners: owners.clone(),
+                        });
+                        self.policy.report_suspects(&owners);
+                        flagged.push(c);
+                    }
+                }
+            }
+
+            // ---- Phase::Reactive ---------------------------------------
+            if !flagged.is_empty() {
+                if self.cfg.self_check {
+                    // the master's own copy is ground truth: every worker
+                    // copy differing from it is provably Byzantine
+                    for &c in &flagged {
+                        // a chunk that was already replicated to >= f_t+1
+                        // workers (e.g. deterministic policy) skipped the
+                        // detection-phase self-check; compute the trusted
+                        // copy on demand before judging
+                        if !round.chunks[c].copies.iter().any(|s| s.worker == MASTER_SENTINEL) {
+                            let batch = dataset.batch(&round.assignment.chunks[c]);
+                            let g = engine.grad(theta, &batch)?;
+                            master_computed_points += self.cfg.chunk_size as u64;
+                            let grad = match &self.cfg.compressor {
+                                Some(comp) => comp.encode(&g.grad),
+                                None => g.grad,
+                            };
+                            round.chunks[c].copies.push(SymbolCopy {
+                                worker: MASTER_SENTINEL,
+                                grad,
+                                loss: g.loss,
+                            });
+                        }
+                        let master_copy = round.chunks[c]
+                            .copies
+                            .iter()
+                            .find(|s| s.worker == MASTER_SENTINEL)
+                            .expect("self-check copy present")
+                            .clone();
+                        let liars: Vec<WorkerId> = round.chunks[c]
+                            .copies
+                            .iter()
+                            .filter(|s| {
+                                s.worker != MASTER_SENTINEL
+                                    && !symbols_equal(s, &master_copy, self.cfg.tol)
+                            })
+                            .map(|s| s.worker)
+                            .collect();
+                        self.finish_vote(t, c, &mut round, master_copy, liars, &mut identified_now, events);
+                    }
+                } else {
+                    let targets: Vec<(ChunkId, usize)> =
+                        flagged.iter().map(|&c| (c, 2 * f_t + 1)).collect();
+                    self.ensure_copies(
+                        t,
+                        Phase::Reactive,
+                        theta,
+                        dataset,
+                        &mut round,
+                        &mut crashed_now,
+                        &targets,
+                        events,
+                    )?;
+                    for &c in &flagged {
+                        let vote = majority_vote(&round.chunks[c].copies, f_t)
+                            .expect("quorum guaranteed with 2f_t+1 distinct owners");
+                        let winner = SymbolCopy {
+                            worker: MASTER_SENTINEL,
+                            grad: vote.grad,
+                            loss: vote.loss,
+                        };
+                        self.finish_vote(t, c, &mut round, winner, vote.liars, &mut identified_now, events);
+                    }
+                }
+            }
+        }
+
+        self.round = round;
+        Ok(RoundOutcome {
+            gradients_used: m as u64,
+            audited,
+            faults_detected,
+            identified_now,
+            crashed_now,
+            master_computed_points,
+        })
+    }
+
+    /// Top chunks up to their target copy counts: extend ownership,
+    /// scatter, gather, ingest — looping while crashes keep knocking
+    /// out newly-assigned owners. Terminates because every pass either
+    /// satisfies all targets or permanently shrinks the active set.
+    #[allow(clippy::too_many_arguments)]
+    fn ensure_copies(
+        &mut self,
+        t: u64,
+        phase: Phase,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+        round: &mut RoundState,
+        crashed_now: &mut Vec<WorkerId>,
+        targets: &[(ChunkId, usize)],
+        events: &mut EventLog,
+    ) -> Result<()> {
+        loop {
+            let mut extra: Vec<(WorkerId, Vec<ChunkId>)> = Vec::new();
+            for &(c, want) in targets {
+                let have = round.chunks[c].copies.len();
+                if have >= want {
+                    continue;
+                }
+                let shortfall = want - have;
+                let candidates = round
+                    .assignment
+                    .active
+                    .iter()
+                    .copied()
+                    .filter(|w| !round.assignment.owners[c].contains(w))
+                    .count();
+                anyhow::ensure!(
+                    candidates >= shortfall,
+                    "cannot reach {want} copies of chunk {c} at iteration {t}: \
+                     only {candidates} candidate workers remain"
+                );
+                let added = round.assignment.extend(c, shortfall, &mut self.rng);
+                if phase == Phase::Reactive {
+                    events.push(Event::ReactiveRedundancy {
+                        iter: t,
+                        chunk: c,
+                        added: added.clone(),
+                    });
+                }
+                for w in added {
+                    match extra.iter_mut().find(|(ww, _)| *ww == w) {
+                        Some((_, cs)) => cs.push(c),
+                        None => extra.push((w, vec![c])),
+                    }
+                }
+            }
+            if extra.is_empty() {
+                return Ok(());
+            }
+            let bundles: Vec<TaskBundle> = extra
+                .into_iter()
+                .map(|(w, cs)| TaskBundle {
+                    worker: w,
+                    tasks: cs
+                        .into_iter()
+                        .map(|c| (c, dataset.batch(&round.assignment.chunks[c])))
+                        .collect(),
+                })
+                .collect();
+            self.transport.scatter(t, phase.wire(), theta, bundles)?;
+            let responses = self.transport.gather(t, phase.wire())?;
+            self.note_failures(t, round, crashed_now, events);
+            round.ingest(responses);
+        }
+    }
+
+    /// Record transport-reported crash-stops: retire the workers from
+    /// the active set (they are *not* eliminated — crashing is not
+    /// lying) and from the current assignment's candidate pool.
+    fn note_failures(
+        &mut self,
+        t: u64,
+        round: &mut RoundState,
+        crashed_now: &mut Vec<WorkerId>,
+        events: &mut EventLog,
+    ) {
+        for w in self.transport.take_failed() {
+            if self.crashed.contains(&w) {
+                continue;
+            }
+            self.crashed.push(w);
+            crashed_now.push(w);
+            if let Some(pos) = self.active.iter().position(|&a| a == w) {
+                self.active.remove(pos);
+            }
+            round.assignment.retire(w);
+            events.push(Event::WorkerCrashed { iter: t, worker: w });
+        }
+    }
+
+    /// Common tail of both identification paths: store the corrected
+    /// value at the front of the chunk's copies, eliminate liars.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_vote(
+        &mut self,
+        t: u64,
+        c: ChunkId,
+        round: &mut RoundState,
+        winner: SymbolCopy,
+        liars: Vec<WorkerId>,
+        identified_now: &mut Vec<WorkerId>,
+        events: &mut EventLog,
+    ) {
+        round.chunks[c].copies.insert(0, winner);
+        if liars.is_empty() {
+            return;
+        }
+        events.push(Event::Identified { iter: t, workers: liars.clone() });
+        if self.cfg.no_eliminate {
+            return;
+        }
+        for w in liars {
+            if let Some(pos) = self.active.iter().position(|&a| a == w) {
+                self.active.remove(pos);
+                self.eliminated.push(w);
+                self.policy.report_identified(w);
+                events.push(Event::Eliminated { iter: t, worker: w });
+                identified_now.push(w);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_wire_numbers_are_stable() {
+        // the wire encoding is part of the request format: 0/1/2
+        assert_eq!(Phase::Proactive.wire(), 0);
+        assert_eq!(Phase::Detection.wire(), 1);
+        assert_eq!(Phase::Reactive.wire(), 2);
+    }
+
+    #[test]
+    fn observed_loss_counts_each_chunk_once() {
+        // chunk 0 has r = 3 copies of loss 10.0, chunks 1..=2 have one
+        // copy each of loss 1.0: the median must be 1.0 (per-chunk),
+        // not 10.0 (per-copy, the pre-refactor bug)
+        let mut round = RoundState::default();
+        round.chunks = (0..3).map(|_| ChunkCopies::default()).collect();
+        round.tampered_by_chunk = vec![Vec::new(); 3];
+        let resp = |worker, chunk, loss| Response {
+            worker,
+            iter: 0,
+            phase: 0,
+            symbols: vec![Symbol { chunk, grad: vec![1.0], loss, tampered: false }],
+            error: None,
+        };
+        round.ingest(vec![
+            resp(0, 0, 10.0),
+            resp(1, 0, 10.0),
+            resp(2, 0, 10.0),
+            resp(1, 1, 1.0),
+            resp(2, 2, 1.0),
+        ]);
+        let mut scratch = Vec::new();
+        assert_eq!(round.observed_loss(&mut scratch), 1.0);
+        assert_eq!(round.chunks[0].computed_copies, 3);
+        assert_eq!(round.chunks[0].copies.len(), 3);
+    }
+
+    #[test]
+    fn ingest_records_tamper_oracle() {
+        let mut round = RoundState::default();
+        round.chunks = vec![ChunkCopies::default()];
+        round.tampered_by_chunk = vec![Vec::new()];
+        round.ingest(vec![Response {
+            worker: 4,
+            iter: 0,
+            phase: 0,
+            symbols: vec![Symbol { chunk: 0, grad: vec![0.0], loss: 0.0, tampered: true }],
+            error: None,
+        }]);
+        assert_eq!(round.tampered_by_chunk[0], vec![4]);
+        assert_eq!(round.chosen(0).worker, 4);
+    }
+}

@@ -1,0 +1,76 @@
+//! Transport layer: how the master's protocol core talks to workers.
+//!
+//! The protocol core ([`super::protocol`]) is written against the
+//! [`Transport`] trait — a synchronous *scatter/gather* API matched to
+//! the paper's synchronous parallelized-SGD model:
+//!
+//! * [`Transport::scatter`] queues one phase's task bundles (θ
+//!   broadcast + per-worker chunk batches);
+//! * [`Transport::gather`] blocks until every scattered-to worker has
+//!   responded or is known to have failed, and returns the responses
+//!   **sorted by worker id** so protocol behaviour is deterministic
+//!   and transport-independent;
+//! * [`Transport::take_failed`] drains the set of workers newly known
+//!   to have failed (crash-stop model), so the protocol can reassign
+//!   their chunks.
+//!
+//! Two implementations:
+//!
+//! * [`ThreadedTransport`] — one OS thread per worker over mpsc
+//!   channels (the original execution model; real parallelism, real
+//!   wall-clock latency).
+//! * [`SimTransport`] — deterministic discrete-event simulation in
+//!   virtual time: per-worker latency distributions, stragglers, and
+//!   crash-drops, scaling to thousands of simulated workers with zero
+//!   OS threads. With zero latency and no faults it is bit-identical
+//!   to [`ThreadedTransport`] for the same seed (both drive the same
+//!   [`super::worker::WorkerState`] compute core).
+
+pub mod sim;
+pub mod threaded;
+
+use std::sync::Arc;
+
+use super::worker::Response;
+use super::{ChunkId, WorkerId};
+use crate::data::Batch;
+use crate::Result;
+
+pub use sim::{LatencyModel, SimConfig, SimTransport};
+pub use threaded::ThreadedTransport;
+
+/// One worker's task list for a phase.
+pub struct TaskBundle {
+    pub worker: WorkerId,
+    pub tasks: Vec<(ChunkId, Batch)>,
+}
+
+/// A synchronous scatter/gather channel between master and workers.
+///
+/// Contract: every `scatter` for a `(iter, phase)` pair must be
+/// followed by exactly one `gather` for the same pair before the next
+/// scatter (the protocol is phase-synchronous). `gather` returns one
+/// [`Response`] per scattered-to worker that has not failed, sorted by
+/// worker id; failed workers are reported through [`Transport::take_failed`].
+pub trait Transport {
+    /// Number of worker endpoints (fixed at construction).
+    fn n(&self) -> usize;
+
+    /// Queue task bundles for `(iter, phase)`.
+    fn scatter(
+        &mut self,
+        iter: u64,
+        phase: u32,
+        theta: &Arc<Vec<f32>>,
+        bundles: Vec<TaskBundle>,
+    ) -> Result<()>;
+
+    /// Collect the responses for `(iter, phase)`, sorted by worker id.
+    fn gather(&mut self, iter: u64, phase: u32) -> Result<Vec<Response>>;
+
+    /// Drain the workers that failed since the last call (crash-stop).
+    fn take_failed(&mut self) -> Vec<WorkerId>;
+
+    /// Tear down (idempotent).
+    fn shutdown(&mut self) {}
+}

@@ -1,0 +1,313 @@
+//! Deterministic virtual-time transport: thousands of simulated
+//! workers, zero OS threads.
+//!
+//! Workers are plain structs executed sequentially on the caller's
+//! thread; *time* is a discrete-event virtual clock. Each response is
+//! stamped with a completion time drawn from a configurable
+//! [`LatencyModel`], scaled by per-worker straggler multipliers;
+//! `gather` advances the clock to the slowest responder (the
+//! synchronous-round semantics of the paper). Workers can crash-stop
+//! at a configured iteration, after which they never respond and are
+//! reported through [`Transport::take_failed`] so the protocol core
+//! reassigns their chunks.
+//!
+//! Determinism: compute goes through the same
+//! [`super::super::worker::WorkerState`] as the threaded transport and
+//! responses are gathered sorted by worker id, so for zero latency and
+//! no faults a sim run is bit-identical to a threaded run with the
+//! same seed (asserted by `tests/test_transport.rs`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::super::byzantine::ByzantineBehavior;
+use super::super::compress::Compressor;
+use super::super::worker::{Response, WorkerState};
+use super::super::WorkerId;
+use super::{TaskBundle, Transport};
+use crate::grad::GradientComputer;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+/// Per-message latency distribution (virtual time).
+#[derive(Clone, Copy, Debug)]
+pub enum LatencyModel {
+    /// No latency: pure protocol semantics (and bit-parity with the
+    /// threaded transport at latency 0).
+    Zero,
+    /// Constant latency per message.
+    Fixed { us: u64 },
+    /// Uniform in [lo, hi].
+    Uniform { lo_us: u64, hi_us: u64 },
+    /// Exponential with the given mean (heavy-ish tail).
+    Exp { mean_us: f64 },
+}
+
+impl LatencyModel {
+    fn draw_ns(&self, rng: &mut Pcg64) -> u64 {
+        match *self {
+            LatencyModel::Zero => 0,
+            LatencyModel::Fixed { us } => us * 1000,
+            LatencyModel::Uniform { lo_us, hi_us } => {
+                let span = hi_us.saturating_sub(lo_us);
+                (lo_us + if span == 0 { 0 } else { rng.below(span + 1) }) * 1000
+            }
+            LatencyModel::Exp { mean_us } => {
+                let u = rng.f64();
+                (-(1.0 - u).ln() * mean_us * 1000.0) as u64
+            }
+        }
+    }
+}
+
+/// Scenario description for a simulated cluster.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Base per-message latency distribution.
+    pub latency: LatencyModel,
+    /// Per-worker latency multipliers (worker, factor): stragglers
+    /// (factor > 1) or fast workers (factor < 1).
+    pub stragglers: Vec<(WorkerId, f64)>,
+    /// Crash-stop plan (worker, iteration): from that iteration on the
+    /// worker never responds again.
+    pub crash_at: Vec<(WorkerId, u64)>,
+    /// Seed for the latency draws (independent of the protocol RNG).
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            latency: LatencyModel::Zero,
+            stragglers: Vec::new(),
+            crash_at: Vec::new(),
+            seed: 0x51a7,
+        }
+    }
+}
+
+struct SimWorker {
+    state: WorkerState,
+    latency_mult: f64,
+    crash_at: Option<u64>,
+    crashed: bool,
+}
+
+/// The simulated cluster.
+pub struct SimTransport {
+    workers: Vec<SimWorker>,
+    latency: LatencyModel,
+    rng: Pcg64,
+    /// Virtual clock (ns since construction).
+    now_ns: u64,
+    /// Responses awaiting the in-flight gather: (completion time, resp).
+    ready: Vec<(u64, Response)>,
+    newly_failed: Vec<WorkerId>,
+    last_round_ns: u64,
+}
+
+impl SimTransport {
+    /// Build `n` simulated workers (signature mirrors
+    /// [`super::ThreadedTransport::spawn_with_compressor`]).
+    pub fn new(
+        n: usize,
+        engine: Arc<dyn GradientComputer>,
+        mut byzantine: impl FnMut(WorkerId) -> Option<ByzantineBehavior>,
+        compressor: Option<Arc<dyn Compressor>>,
+        cfg: SimConfig,
+    ) -> SimTransport {
+        let workers = (0..n)
+            .map(|id| SimWorker {
+                state: WorkerState::new(id, engine.clone(), byzantine(id), compressor.clone()),
+                latency_mult: cfg
+                    .stragglers
+                    .iter()
+                    .find(|(w, _)| *w == id)
+                    .map(|(_, m)| *m)
+                    .unwrap_or(1.0),
+                crash_at: cfg.crash_at.iter().find(|(w, _)| *w == id).map(|(_, t)| *t),
+                crashed: false,
+            })
+            .collect();
+        SimTransport {
+            workers,
+            latency: cfg.latency,
+            rng: Pcg64::new(cfg.seed, 0x51b_7a2),
+            now_ns: 0,
+            ready: Vec::new(),
+            newly_failed: Vec::new(),
+            last_round_ns: 0,
+        }
+    }
+
+    /// Virtual time elapsed since construction.
+    pub fn virtual_elapsed(&self) -> Duration {
+        Duration::from_nanos(self.now_ns)
+    }
+
+    /// Virtual duration of the most recent gather's round (max over its
+    /// responders' completion latencies).
+    pub fn last_round(&self) -> Duration {
+        Duration::from_nanos(self.last_round_ns)
+    }
+}
+
+impl Transport for SimTransport {
+    fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn scatter(
+        &mut self,
+        iter: u64,
+        phase: u32,
+        theta: &Arc<Vec<f32>>,
+        bundles: Vec<TaskBundle>,
+    ) -> Result<()> {
+        for TaskBundle { worker, tasks } in bundles {
+            anyhow::ensure!(worker < self.workers.len(), "scatter to unknown worker {worker}");
+            let w = &mut self.workers[worker];
+            if w.crashed || w.crash_at.map(|t| iter >= t).unwrap_or(false) {
+                if !w.crashed {
+                    w.crashed = true;
+                    self.newly_failed.push(worker);
+                }
+                continue; // crash-stop: the message disappears
+            }
+            let symbols = w.state.handle(iter, theta, tasks)?;
+            let latency =
+                (self.latency.draw_ns(&mut self.rng) as f64 * w.latency_mult) as u64;
+            self.ready.push((
+                self.now_ns + latency,
+                Response { worker, iter, phase, symbols, error: None },
+            ));
+        }
+        Ok(())
+    }
+
+    fn gather(&mut self, iter: u64, phase: u32) -> Result<Vec<Response>> {
+        let mut out: Vec<(u64, Response)> = Vec::with_capacity(self.ready.len());
+        // the synchronous protocol has exactly one phase in flight;
+        // filter defensively anyway
+        let mut i = 0;
+        while i < self.ready.len() {
+            if self.ready[i].1.iter == iter && self.ready[i].1.phase == phase {
+                out.push(self.ready.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        // the round ends when the slowest responder finishes
+        let end = out.iter().map(|(t, _)| *t).max().unwrap_or(self.now_ns);
+        self.last_round_ns = end - self.now_ns;
+        self.now_ns = end;
+        let mut responses: Vec<Response> = out.into_iter().map(|(_, r)| r).collect();
+        responses.sort_by_key(|r| r.worker);
+        Ok(responses)
+    }
+
+    fn take_failed(&mut self) -> Vec<WorkerId> {
+        std::mem::take(&mut self.newly_failed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, LinRegDataset};
+    use crate::grad::{GradientComputer, ModelSpec, NativeEngine};
+
+    fn cluster(n: usize, cfg: SimConfig) -> (SimTransport, LinRegDataset) {
+        let ds = LinRegDataset::generate(64, 8, 0.0, 1);
+        let engine: Arc<dyn GradientComputer> =
+            Arc::new(NativeEngine::new(ModelSpec::LinReg { d: 8, batch: 64 }));
+        (SimTransport::new(n, engine, |_| None, None, cfg), ds)
+    }
+
+    fn bundles(ds: &LinRegDataset, workers: &[WorkerId]) -> Vec<TaskBundle> {
+        let batch = ds.batch(&(0..16).collect::<Vec<_>>());
+        workers
+            .iter()
+            .map(|&w| TaskBundle { worker: w, tasks: vec![(w, batch.clone())] })
+            .collect()
+    }
+
+    #[test]
+    fn zero_latency_round_takes_no_virtual_time() {
+        let (mut t, ds) = cluster(4, SimConfig::default());
+        let theta = Arc::new(vec![0.1f32; 8]);
+        t.scatter(0, 0, &theta, bundles(&ds, &[0, 1, 2, 3])).unwrap();
+        let resps = t.gather(0, 0).unwrap();
+        assert_eq!(resps.len(), 4);
+        assert_eq!(t.virtual_elapsed(), Duration::ZERO);
+        let ids: Vec<WorkerId> = resps.iter().map(|r| r.worker).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn straggler_dominates_round_time() {
+        let cfg = SimConfig {
+            latency: LatencyModel::Fixed { us: 100 },
+            stragglers: vec![(2, 50.0)],
+            ..Default::default()
+        };
+        let (mut t, ds) = cluster(4, cfg);
+        let theta = Arc::new(vec![0.1f32; 8]);
+        t.scatter(0, 0, &theta, bundles(&ds, &[0, 1, 2, 3])).unwrap();
+        let resps = t.gather(0, 0).unwrap();
+        assert_eq!(resps.len(), 4);
+        // round time = straggler's 100us * 50 = 5ms, not the 100us base
+        assert_eq!(t.last_round(), Duration::from_micros(5000));
+        assert_eq!(t.virtual_elapsed(), Duration::from_micros(5000));
+    }
+
+    #[test]
+    fn crashed_worker_stops_responding_and_is_reported() {
+        let cfg = SimConfig { crash_at: vec![(1, 2)], ..Default::default() };
+        let (mut t, ds) = cluster(3, cfg);
+        let theta = Arc::new(vec![0.1f32; 8]);
+        for iter in 0..4u64 {
+            t.scatter(iter, 0, &theta, bundles(&ds, &[0, 1, 2])).unwrap();
+            let resps = t.gather(iter, 0).unwrap();
+            if iter < 2 {
+                assert_eq!(resps.len(), 3, "iter {iter}");
+                assert!(t.take_failed().is_empty());
+            } else {
+                assert_eq!(resps.len(), 2, "iter {iter}");
+                let failed = t.take_failed();
+                if iter == 2 {
+                    assert_eq!(failed, vec![1]);
+                } else {
+                    assert!(failed.is_empty(), "crash reported once");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_and_exp_latency_advance_the_clock() {
+        for latency in [
+            LatencyModel::Uniform { lo_us: 10, hi_us: 20 },
+            LatencyModel::Exp { mean_us: 15.0 },
+        ] {
+            let cfg = SimConfig { latency, ..Default::default() };
+            let (mut t, ds) = cluster(2, cfg);
+            let theta = Arc::new(vec![0.1f32; 8]);
+            t.scatter(0, 0, &theta, bundles(&ds, &[0, 1])).unwrap();
+            t.gather(0, 0).unwrap();
+            assert!(t.virtual_elapsed() > Duration::ZERO, "{latency:?}");
+        }
+    }
+
+    #[test]
+    fn thousand_workers_no_threads() {
+        // n = 2048 simulated workers on the caller's thread: the whole
+        // point of the simulator. (Each worker gets a tiny task.)
+        let (mut t, ds) = cluster(2048, SimConfig::default());
+        let theta = Arc::new(vec![0.1f32; 8]);
+        let all: Vec<WorkerId> = (0..2048).collect();
+        t.scatter(0, 0, &theta, bundles(&ds, &all)).unwrap();
+        let resps = t.gather(0, 0).unwrap();
+        assert_eq!(resps.len(), 2048);
+    }
+}

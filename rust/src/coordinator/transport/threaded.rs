@@ -1,0 +1,305 @@
+//! One-OS-thread-per-worker transport over mpsc channels (the
+//! original execution model of the seed implementation, now behind the
+//! [`Transport`] trait).
+//!
+//! Each worker thread owns a [`WorkerState`] and serves `Compute`
+//! requests until `Shutdown`. Honest workers are deterministic, so a
+//! run's outcome is independent of thread scheduling: `gather` sorts
+//! responses by worker id before the protocol core ingests them.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::super::byzantine::ByzantineBehavior;
+use super::super::compress::Compressor;
+use super::super::worker::{Request, Response, WorkerState};
+use super::super::{ChunkId, WorkerId};
+use super::{TaskBundle, Transport};
+use crate::data::Batch;
+use crate::grad::GradientComputer;
+use crate::Result;
+
+fn byzantine_fn(
+    f: &mut impl FnMut(WorkerId) -> Option<ByzantineBehavior>,
+) -> impl FnMut(WorkerId) -> Option<ByzantineBehavior> + '_ {
+    move |w| f(w)
+}
+
+/// Handle to the running worker-thread pool.
+pub struct ThreadedTransport {
+    senders: Vec<Sender<Request>>,
+    receiver: Receiver<Response>,
+    handles: Vec<JoinHandle<()>>,
+    /// Responses owed to the in-flight `(iter, phase)` gather.
+    outstanding: usize,
+    pub n: usize,
+}
+
+impl ThreadedTransport {
+    /// Spawn `n` workers. `byzantine(i)` returns the behaviour for
+    /// worker i (None = honest). All workers share the engine handle
+    /// (engines are Send + Sync; the XLA engine serializes internally).
+    pub fn spawn(
+        n: usize,
+        engine: Arc<dyn GradientComputer>,
+        mut byzantine: impl FnMut(WorkerId) -> Option<ByzantineBehavior>,
+        latency_us: u64,
+    ) -> ThreadedTransport {
+        Self::spawn_with_compressor(n, engine, byzantine_fn(&mut byzantine), None, latency_us)
+    }
+
+    /// Spawn with an optional gradient compressor applied to every
+    /// outgoing symbol (the §2.1/§5 compressed-gradients generalization).
+    pub fn spawn_with_compressor(
+        n: usize,
+        engine: Arc<dyn GradientComputer>,
+        mut byzantine: impl FnMut(WorkerId) -> Option<ByzantineBehavior>,
+        compressor: Option<Arc<dyn Compressor>>,
+        latency_us: u64,
+    ) -> ThreadedTransport {
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for id in 0..n {
+            let (req_tx, req_rx) = channel::<Request>();
+            senders.push(req_tx);
+            let resp_tx = resp_tx.clone();
+            let mut state = WorkerState::new(id, engine.clone(), byzantine(id), compressor.clone());
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("r3bft-worker-{id}"))
+                    .spawn(move || {
+                        while let Ok(req) = req_rx.recv() {
+                            match req {
+                                Request::Shutdown => break,
+                                Request::Compute { iter, phase, theta, tasks } => {
+                                    if latency_us > 0 {
+                                        std::thread::sleep(std::time::Duration::from_micros(
+                                            latency_us,
+                                        ));
+                                    }
+                                    // a panic must become a Response, not a
+                                    // dead thread: gather counts responses,
+                                    // so a silently-lost worker would hang
+                                    // the master forever
+                                    let result = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(|| {
+                                            state.handle(iter, &theta, tasks)
+                                        }),
+                                    );
+                                    let error = match &result {
+                                        Ok(Ok(_)) => None,
+                                        Ok(Err(e)) => Some(format!("{e:#}")),
+                                        Err(p) => Some(
+                                            p.downcast_ref::<String>()
+                                                .cloned()
+                                                .or_else(|| {
+                                                    p.downcast_ref::<&str>()
+                                                        .map(|s| s.to_string())
+                                                })
+                                                .unwrap_or_else(|| "worker panicked".into()),
+                                        ),
+                                    };
+                                    let symbols = match result {
+                                        Ok(Ok(symbols)) => symbols,
+                                        _ => vec![],
+                                    };
+                                    let resp = Response { worker: id, iter, phase, symbols, error };
+                                    if resp_tx.send(resp).is_err() {
+                                        break; // master gone
+                                    }
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn worker thread"),
+            );
+        }
+        ThreadedTransport { senders, receiver: resp_rx, handles, outstanding: 0, n }
+    }
+
+    /// Send a compute request to one worker.
+    pub fn send(
+        &self,
+        w: WorkerId,
+        iter: u64,
+        phase: u32,
+        theta: &Arc<Vec<f32>>,
+        tasks: Vec<(ChunkId, Batch)>,
+    ) -> Result<()> {
+        self.senders[w]
+            .send(Request::Compute { iter, phase, theta: theta.clone(), tasks })
+            .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))
+    }
+
+    /// Collect exactly `expected` responses for (iter, phase).
+    pub fn collect(&self, iter: u64, phase: u32, expected: usize) -> Result<Vec<Response>> {
+        let mut out = Vec::with_capacity(expected);
+        while out.len() < expected {
+            let resp = self
+                .receiver
+                .recv()
+                .map_err(|_| anyhow::anyhow!("all workers disconnected"))?;
+            if let Some(err) = &resp.error {
+                anyhow::bail!("worker {} failed: {err}", resp.worker);
+            }
+            if resp.iter == iter && resp.phase == phase {
+                out.push(resp);
+            }
+            // responses from other (iter, phase) pairs cannot occur in
+            // the synchronous protocol; drop them defensively if they do
+        }
+        Ok(out)
+    }
+}
+
+impl Transport for ThreadedTransport {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn scatter(
+        &mut self,
+        iter: u64,
+        phase: u32,
+        theta: &Arc<Vec<f32>>,
+        bundles: Vec<TaskBundle>,
+    ) -> Result<()> {
+        for TaskBundle { worker, tasks } in bundles {
+            self.send(worker, iter, phase, theta, tasks)?;
+            self.outstanding += 1;
+        }
+        Ok(())
+    }
+
+    fn gather(&mut self, iter: u64, phase: u32) -> Result<Vec<Response>> {
+        let expected = std::mem::take(&mut self.outstanding);
+        let mut out = self.collect(iter, phase, expected)?;
+        out.sort_by_key(|r| r.worker);
+        Ok(out)
+    }
+
+    fn take_failed(&mut self) -> Vec<WorkerId> {
+        Vec::new() // OS threads do not crash-stop; engine errors bail
+    }
+
+    fn shutdown(&mut self) {
+        for s in &self.senders {
+            let _ = s.send(Request::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadedTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AttackConfig, AttackKind};
+    use crate::data::{Dataset, LinRegDataset};
+    use crate::grad::{ModelSpec, NativeEngine};
+
+    fn pool(n: usize, byz: Vec<WorkerId>) -> (ThreadedTransport, LinRegDataset) {
+        let ds = LinRegDataset::generate(64, 8, 0.0, 1);
+        let engine: Arc<dyn GradientComputer> =
+            Arc::new(NativeEngine::new(ModelSpec::LinReg { d: 8, batch: 64 }));
+        let pool = ThreadedTransport::spawn(
+            n,
+            engine,
+            |i| {
+                byz.contains(&i).then(|| {
+                    ByzantineBehavior::new(
+                        AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 1.0 },
+                        7,
+                        i,
+                    )
+                })
+            },
+            0,
+        );
+        (pool, ds)
+    }
+
+    #[test]
+    fn honest_workers_return_identical_symbols() {
+        let (pool, ds) = pool(3, vec![]);
+        let theta = Arc::new(vec![0.1f32; 8]);
+        let batch = ds.batch(&(0..16).collect::<Vec<_>>());
+        for w in 0..3 {
+            pool.send(w, 0, 0, &theta, vec![(5, batch.clone())]).unwrap();
+        }
+        let resps = pool.collect(0, 0, 3).unwrap();
+        assert_eq!(resps.len(), 3);
+        let g0 = &resps[0].symbols[0].grad;
+        for r in &resps {
+            assert_eq!(r.symbols.len(), 1);
+            assert_eq!(r.symbols[0].chunk, 5);
+            assert_eq!(&r.symbols[0].grad, g0, "honest symbols must be bit-identical");
+            assert!(!r.symbols[0].tampered);
+        }
+    }
+
+    #[test]
+    fn byzantine_worker_tampers() {
+        let (pool, ds) = pool(2, vec![1]);
+        let theta = Arc::new(vec![0.1f32; 8]);
+        let batch = ds.batch(&(0..16).collect::<Vec<_>>());
+        pool.send(0, 0, 0, &theta, vec![(0, batch.clone())]).unwrap();
+        pool.send(1, 0, 0, &theta, vec![(0, batch.clone())]).unwrap();
+        let resps = pool.collect(0, 0, 2).unwrap();
+        let honest = resps.iter().find(|r| r.worker == 0).unwrap();
+        let byz = resps.iter().find(|r| r.worker == 1).unwrap();
+        assert!(byz.symbols[0].tampered);
+        assert_ne!(honest.symbols[0].grad, byz.symbols[0].grad);
+    }
+
+    #[test]
+    fn tamper_decision_is_per_iteration() {
+        // p = 1.0 means tampering in EVERY iteration, across phases
+        let (pool, ds) = pool(1, vec![0]);
+        let theta = Arc::new(vec![0.1f32; 8]);
+        let batch = ds.batch(&(0..16).collect::<Vec<_>>());
+        for phase in 0..3u32 {
+            pool.send(0, 7, phase, &theta, vec![(0, batch.clone())]).unwrap();
+            let r = pool.collect(7, phase, 1).unwrap();
+            assert!(r[0].symbols[0].tampered, "phase {phase}");
+        }
+    }
+
+    #[test]
+    fn multiple_chunks_per_request() {
+        let (pool, ds) = pool(1, vec![]);
+        let theta = Arc::new(vec![0.0f32; 8]);
+        let b1 = ds.batch(&(0..8).collect::<Vec<_>>());
+        let b2 = ds.batch(&(8..16).collect::<Vec<_>>());
+        pool.send(0, 0, 0, &theta, vec![(0, b1), (1, b2)]).unwrap();
+        let r = pool.collect(0, 0, 1).unwrap();
+        assert_eq!(r[0].symbols.len(), 2);
+        assert_ne!(r[0].symbols[0].grad, r[0].symbols[1].grad);
+    }
+
+    #[test]
+    fn scatter_gather_sorts_by_worker_id() {
+        let (mut pool, ds) = pool(4, vec![]);
+        let theta = Arc::new(vec![0.1f32; 8]);
+        let batch = ds.batch(&(0..16).collect::<Vec<_>>());
+        let bundles: Vec<TaskBundle> = (0..4)
+            .rev() // scatter in reverse order on purpose
+            .map(|w| TaskBundle { worker: w, tasks: vec![(w, batch.clone())] })
+            .collect();
+        pool.scatter(3, 0, &theta, bundles).unwrap();
+        let resps = pool.gather(3, 0).unwrap();
+        let ids: Vec<WorkerId> = resps.iter().map(|r| r.worker).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert!(pool.take_failed().is_empty());
+        pool.shutdown();
+    }
+}

@@ -1,15 +1,21 @@
-//! Worker pool: one OS thread per worker, synchronous request/response
-//! over mpsc channels (the paper's system is synchronous parallelized
-//! SGD; tokio is unavailable offline and unnecessary here).
+//! Worker compute core: the protocol-visible symbol types and the
+//! per-worker state machine that turns (θ, tasks) into gradient
+//! symbols.
+//!
+//! This module is transport-agnostic. The same [`WorkerState`] drives
+//! both the one-OS-thread-per-worker pool
+//! ([`super::transport::ThreadedTransport`]) and the deterministic
+//! virtual-time simulator ([`super::transport::SimTransport`]), which
+//! is what makes the two transports bit-identical for the same seed:
+//! the gradient, tamper, and compression code paths are literally the
+//! same code.
 //!
 //! Honest workers compute gradient symbols with their engine; Byzantine
 //! workers additionally pass them through their attack behaviour. Each
 //! symbol carries oracle metadata (`tampered`) that only the metrics
 //! layer reads — the master's protocol logic never looks at it.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 
 use super::byzantine::ByzantineBehavior;
 use super::compress::Compressor;
@@ -49,20 +55,29 @@ pub struct Response {
     pub error: Option<String>,
 }
 
-struct WorkerState {
-    id: WorkerId,
-    engine: Arc<dyn GradientComputer>,
-    byzantine: Option<ByzantineBehavior>,
+/// Per-worker compute state, shared by every transport.
+pub struct WorkerState {
+    pub(crate) id: WorkerId,
+    pub(crate) engine: Arc<dyn GradientComputer>,
+    pub(crate) byzantine: Option<ByzantineBehavior>,
     /// §2.1/§5: symbols may be compressed gradients; honest compressors
     /// are deterministic so replica comparison still works bit-exactly.
-    compressor: Option<Arc<dyn Compressor>>,
-    latency_us: u64,
+    pub(crate) compressor: Option<Arc<dyn Compressor>>,
     /// Tamper decision is made once per iteration and reused across
     /// phases of the same iteration (§4.2 analysis model).
     tamper_iter: Option<(u64, bool)>,
 }
 
 impl WorkerState {
+    pub fn new(
+        id: WorkerId,
+        engine: Arc<dyn GradientComputer>,
+        byzantine: Option<ByzantineBehavior>,
+        compressor: Option<Arc<dyn Compressor>>,
+    ) -> WorkerState {
+        WorkerState { id, engine, byzantine, compressor, tamper_iter: None }
+    }
+
     fn tampering(&mut self, iter: u64) -> bool {
         match self.tamper_iter {
             Some((i, t)) if i == iter => t,
@@ -78,182 +93,41 @@ impl WorkerState {
         }
     }
 
-    fn handle(&mut self, iter: u64, theta: &[f32], tasks: Vec<(ChunkId, Batch)>) -> Vec<Symbol> {
-        if self.latency_us > 0 {
-            std::thread::sleep(std::time::Duration::from_micros(self.latency_us));
-        }
+    /// Compute the symbols for one request. Transport-agnostic: any
+    /// latency or failure model is the transport's business.
+    pub fn handle(
+        &mut self,
+        iter: u64,
+        theta: &[f32],
+        tasks: Vec<(ChunkId, Batch)>,
+    ) -> Result<Vec<Symbol>> {
         let tamper = self.tampering(iter);
         let mut out = Vec::with_capacity(tasks.len());
         for (chunk, batch) in tasks {
-            match self.engine.grad(theta, &batch) {
-                Ok(g) => {
-                    let mut grad = g.grad;
-                    let mut loss = g.loss;
-                    let mut tampered = false;
-                    if tamper {
-                        if let Some(b) = self.byzantine.as_mut() {
-                            let (g0, l0) = (grad.clone(), loss);
-                            b.corrupt(&mut grad, &mut loss);
-                            // oracle flag = *effective* tampering: e.g. a
-                            // sign-flip of a bit-zero gradient is still the
-                            // zero gradient — numerically a no-op (paper
-                            // footnote 2: such a worker "poses no harm")
-                            tampered = grad != g0 || loss != l0;
-                        }
-                    }
-                    if let Some(c) = &self.compressor {
-                        grad = c.encode(&grad);
-                    }
-                    out.push(Symbol { chunk, grad, loss, tampered });
-                }
-                Err(e) => {
-                    // surfaced via Response.error by the caller loop
-                    panic!("worker {} engine error: {e:#}", self.id);
+            let g = self
+                .engine
+                .grad(theta, &batch)
+                .map_err(|e| anyhow::anyhow!("worker {} engine error: {e:#}", self.id))?;
+            let mut grad = g.grad;
+            let mut loss = g.loss;
+            let mut tampered = false;
+            if tamper {
+                if let Some(b) = self.byzantine.as_mut() {
+                    let (g0, l0) = (grad.clone(), loss);
+                    b.corrupt(&mut grad, &mut loss);
+                    // oracle flag = *effective* tampering: e.g. a
+                    // sign-flip of a bit-zero gradient is still the
+                    // zero gradient — numerically a no-op (paper
+                    // footnote 2: such a worker "poses no harm")
+                    tampered = grad != g0 || loss != l0;
                 }
             }
-        }
-        out
-    }
-}
-
-fn byzantine_fn(
-    f: &mut impl FnMut(WorkerId) -> Option<ByzantineBehavior>,
-) -> impl FnMut(WorkerId) -> Option<ByzantineBehavior> + '_ {
-    move |w| f(w)
-}
-
-/// Handle to the running pool.
-pub struct WorkerPool {
-    senders: Vec<Sender<Request>>,
-    receiver: Receiver<Response>,
-    handles: Vec<JoinHandle<()>>,
-    pub n: usize,
-}
-
-impl WorkerPool {
-    /// Spawn `n` workers. `byzantine(i)` returns the behaviour for
-    /// worker i (None = honest). All workers share the engine handle
-    /// (engines are Send + Sync; the XLA engine serializes internally).
-    pub fn spawn(
-        n: usize,
-        engine: Arc<dyn GradientComputer>,
-        mut byzantine: impl FnMut(WorkerId) -> Option<ByzantineBehavior>,
-        latency_us: u64,
-    ) -> WorkerPool {
-        Self::spawn_with_compressor(n, engine, byzantine_fn(&mut byzantine), None, latency_us)
-    }
-
-    /// Spawn with an optional gradient compressor applied to every
-    /// outgoing symbol (the §2.1/§5 compressed-gradients generalization).
-    pub fn spawn_with_compressor(
-        n: usize,
-        engine: Arc<dyn GradientComputer>,
-        mut byzantine: impl FnMut(WorkerId) -> Option<ByzantineBehavior>,
-        compressor: Option<Arc<dyn Compressor>>,
-        latency_us: u64,
-    ) -> WorkerPool {
-        let (resp_tx, resp_rx) = channel::<Response>();
-        let mut senders = Vec::with_capacity(n);
-        let mut handles = Vec::with_capacity(n);
-        for id in 0..n {
-            let (req_tx, req_rx) = channel::<Request>();
-            senders.push(req_tx);
-            let resp_tx = resp_tx.clone();
-            let mut state = WorkerState {
-                id,
-                engine: engine.clone(),
-                byzantine: byzantine(id),
-                compressor: compressor.clone(),
-                latency_us,
-                tamper_iter: None,
-            };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("r3bft-worker-{id}"))
-                    .spawn(move || {
-                        while let Ok(req) = req_rx.recv() {
-                            match req {
-                                Request::Shutdown => break,
-                                Request::Compute { iter, phase, theta, tasks } => {
-                                    let result = std::panic::catch_unwind(
-                                        std::panic::AssertUnwindSafe(|| {
-                                            state.handle(iter, &theta, tasks)
-                                        }),
-                                    );
-                                    let resp = match result {
-                                        Ok(symbols) => Response {
-                                            worker: id,
-                                            iter,
-                                            phase,
-                                            symbols,
-                                            error: None,
-                                        },
-                                        Err(p) => Response {
-                                            worker: id,
-                                            iter,
-                                            phase,
-                                            symbols: vec![],
-                                            error: Some(
-                                                p.downcast_ref::<String>()
-                                                    .cloned()
-                                                    .unwrap_or_else(|| "worker panicked".into()),
-                                            ),
-                                        },
-                                    };
-                                    if resp_tx.send(resp).is_err() {
-                                        break; // master gone
-                                    }
-                                }
-                            }
-                        }
-                    })
-                    .expect("spawn worker thread"),
-            );
-        }
-        WorkerPool { senders, receiver: resp_rx, handles, n }
-    }
-
-    /// Send a compute request to one worker.
-    pub fn send(
-        &self,
-        w: WorkerId,
-        iter: u64,
-        phase: u32,
-        theta: &Arc<Vec<f32>>,
-        tasks: Vec<(ChunkId, Batch)>,
-    ) -> Result<()> {
-        self.senders[w]
-            .send(Request::Compute { iter, phase, theta: theta.clone(), tasks })
-            .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))
-    }
-
-    /// Collect exactly `expected` responses for (iter, phase).
-    pub fn collect(&self, iter: u64, phase: u32, expected: usize) -> Result<Vec<Response>> {
-        let mut out = Vec::with_capacity(expected);
-        while out.len() < expected {
-            let resp = self
-                .receiver
-                .recv()
-                .map_err(|_| anyhow::anyhow!("all workers disconnected"))?;
-            if let Some(err) = &resp.error {
-                anyhow::bail!("worker {} failed: {err}", resp.worker);
+            if let Some(c) = &self.compressor {
+                grad = c.encode(&grad);
             }
-            if resp.iter == iter && resp.phase == phase {
-                out.push(resp);
-            }
-            // responses from other (iter, phase) pairs cannot occur in
-            // the synchronous protocol; drop them defensively if they do
+            out.push(Symbol { chunk, grad, loss, tampered });
         }
         Ok(out)
-    }
-
-    pub fn shutdown(self) {
-        for s in &self.senders {
-            let _ = s.send(Request::Shutdown);
-        }
-        for h in self.handles {
-            let _ = h.join();
-        }
     }
 }
 
@@ -261,89 +135,44 @@ impl WorkerPool {
 mod tests {
     use super::*;
     use crate::config::{AttackConfig, AttackKind};
-    use crate::data::{Batch, Dataset, LinRegDataset};
+    use crate::data::{Dataset, LinRegDataset};
     use crate::grad::{ModelSpec, NativeEngine};
 
-    fn pool(n: usize, byz: Vec<WorkerId>) -> (WorkerPool, LinRegDataset) {
+    fn state(id: WorkerId, byz: bool) -> (WorkerState, LinRegDataset) {
         let ds = LinRegDataset::generate(64, 8, 0.0, 1);
         let engine: Arc<dyn GradientComputer> =
             Arc::new(NativeEngine::new(ModelSpec::LinReg { d: 8, batch: 64 }));
-        let pool = WorkerPool::spawn(
-            n,
-            engine,
-            |i| {
-                byz.contains(&i).then(|| {
-                    ByzantineBehavior::new(
-                        AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 1.0 },
-                        7,
-                        i,
-                    )
-                })
-            },
-            0,
-        );
-        (pool, ds)
+        let behaviour = byz.then(|| {
+            ByzantineBehavior::new(
+                AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 1.0 },
+                7,
+                id,
+            )
+        });
+        (WorkerState::new(id, engine, behaviour, None), ds)
     }
 
     #[test]
-    fn honest_workers_return_identical_symbols() {
-        let (pool, ds) = pool(3, vec![]);
-        let theta = Arc::new(vec![0.1f32; 8]);
+    fn honest_state_computes_untampered_symbols() {
+        let (mut w, ds) = state(0, false);
+        let theta = vec![0.1f32; 8];
         let batch = ds.batch(&(0..16).collect::<Vec<_>>());
-        for w in 0..3 {
-            pool.send(w, 0, 0, &theta, vec![(5, batch.clone())]).unwrap();
-        }
-        let resps = pool.collect(0, 0, 3).unwrap();
-        assert_eq!(resps.len(), 3);
-        let g0 = &resps[0].symbols[0].grad;
-        for r in &resps {
-            assert_eq!(r.symbols.len(), 1);
-            assert_eq!(r.symbols[0].chunk, 5);
-            assert_eq!(&r.symbols[0].grad, g0, "honest symbols must be bit-identical");
-            assert!(!r.symbols[0].tampered);
-        }
-        pool.shutdown();
+        let symbols = w.handle(0, &theta, vec![(5, batch)]).unwrap();
+        assert_eq!(symbols.len(), 1);
+        assert_eq!(symbols[0].chunk, 5);
+        assert!(!symbols[0].tampered);
     }
 
     #[test]
-    fn byzantine_worker_tampers() {
-        let (pool, ds) = pool(2, vec![1]);
-        let theta = Arc::new(vec![0.1f32; 8]);
+    fn byzantine_state_tampers_every_phase_of_an_iteration() {
+        let (mut w, ds) = state(1, true);
+        let theta = vec![0.1f32; 8];
         let batch = ds.batch(&(0..16).collect::<Vec<_>>());
-        pool.send(0, 0, 0, &theta, vec![(0, batch.clone())]).unwrap();
-        pool.send(1, 0, 0, &theta, vec![(0, batch.clone())]).unwrap();
-        let resps = pool.collect(0, 0, 2).unwrap();
-        let honest = resps.iter().find(|r| r.worker == 0).unwrap();
-        let byz = resps.iter().find(|r| r.worker == 1).unwrap();
-        assert!(byz.symbols[0].tampered);
-        assert_ne!(honest.symbols[0].grad, byz.symbols[0].grad);
-        pool.shutdown();
-    }
-
-    #[test]
-    fn tamper_decision_is_per_iteration() {
-        // p = 1.0 means tampering in EVERY iteration, across phases
-        let (pool, ds) = pool(1, vec![0]);
-        let theta = Arc::new(vec![0.1f32; 8]);
-        let batch = ds.batch(&(0..16).collect::<Vec<_>>());
-        for phase in 0..3u32 {
-            pool.send(0, 7, phase, &theta, vec![(0, batch.clone())]).unwrap();
-            let r = pool.collect(7, phase, 1).unwrap();
-            assert!(r[0].symbols[0].tampered, "phase {phase}");
+        // p = 1.0: tampers in every iteration, consistently across the
+        // repeated handle() calls (phases) of that iteration
+        for _phase in 0..3 {
+            let s = w.handle(7, &theta, vec![(0, batch.clone())]).unwrap();
+            assert!(s[0].tampered);
         }
-        pool.shutdown();
-    }
-
-    #[test]
-    fn multiple_chunks_per_request() {
-        let (pool, ds) = pool(1, vec![]);
-        let theta = Arc::new(vec![0.0f32; 8]);
-        let b1 = ds.batch(&(0..8).collect::<Vec<_>>());
-        let b2 = ds.batch(&(8..16).collect::<Vec<_>>());
-        pool.send(0, 0, 0, &theta, vec![(0, b1), (1, b2)]).unwrap();
-        let r = pool.collect(0, 0, 1).unwrap();
-        assert_eq!(r[0].symbols.len(), 2);
-        assert_ne!(r[0].symbols[0].grad, r[0].symbols[1].grad);
-        pool.shutdown();
     }
 }

@@ -64,6 +64,9 @@ TRAIN OPTIONS (defaults in parens):
   --q Q              audit probability for randomized/selective (0.2)
   --p-assumed P      assumed tamper prob for adaptive (0.5)
   --n N              workers (8)        --f F   Byzantine bound (2)
+  --transport T      threaded | sim (threaded); sim runs workers in
+                     deterministic virtual time (no OS threads, n can
+                     be in the thousands)
   --attack A         sign_flip|noise|constant|zero|small_bias|collude (sign_flip)
   --p P              per-iteration tamper probability (1.0)
   --magnitude M      attack magnitude (1.0)
@@ -96,6 +99,9 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
         cfg.cluster.byzantine_ids = (0..cfg.cluster.f.min(cfg.cluster.n)).collect();
     }
     cfg.cluster.seed = args.u64("seed", cfg.cluster.seed);
+    if let Some(t) = args.get("transport") {
+        cfg.cluster.transport = t.to_string();
+    }
     if let Some(kind) = args.get("policy") {
         cfg.policy = PolicyKind::parse(
             kind,

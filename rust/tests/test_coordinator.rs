@@ -235,6 +235,37 @@ fn selective_policy_with_self_check_identifies() {
 }
 
 #[test]
+fn deterministic_with_self_check_recomputes_ground_truth_on_demand() {
+    // deterministic policy replicates proactively (r = f_t+1), so the
+    // detection phase never adds a master self-check copy; the reactive
+    // phase must compute one on demand instead of panicking
+    let cfg = experiment(
+        9,
+        2,
+        vec![1, 4],
+        PolicyKind::Deterministic,
+        AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 2.0 },
+        60,
+        19,
+    );
+    let ds = Arc::new(LinRegDataset::generate(2048, 16, 0.0, 19));
+    let w_star = ds.w_star.clone();
+    let spec = ModelSpec::LinReg { d: 16, batch: 16 };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(19);
+    let opts = MasterOptions {
+        self_check: true,
+        w_star: Some(w_star.clone()),
+        ..Default::default()
+    };
+    let master = Master::new(cfg, opts, engine, ds, theta0, 16).expect("master");
+    let out = master.run().expect("train");
+    assert_eq!(out.eliminated.len(), 2, "eliminated {:?}", out.eliminated);
+    assert!(out.eliminated.contains(&1) && out.eliminated.contains(&4));
+    assert!(linalg::dist2(&out.theta, &w_star) < 1e-2);
+}
+
+#[test]
 fn intermittent_attacker_is_eventually_identified() {
     // p = 0.15, q = 0.4: survival bound (1 - qp)^t = 0.94^t -> under 600
     // iterations the survival probability is ~1e-16

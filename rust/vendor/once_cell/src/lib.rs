@@ -1,0 +1,46 @@
+//! Offline substitute for the `once_cell` crate: `sync::Lazy` built on
+//! `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, thread-safe.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(&this.init)
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        static N: Lazy<u64> = Lazy::new(|| 40 + 2);
+
+        #[test]
+        fn lazy_static_init_once() {
+            assert_eq!(*N, 42);
+            assert_eq!(*N, 42);
+        }
+    }
+}
