@@ -1,13 +1,15 @@
 //! Transport-layer dispatch overhead: SimTransport vs
-//! ThreadedTransport across cluster sizes.
+//! ThreadedTransport across cluster sizes, plus the sharded
+//! parameter-server sweep (n × K) written to `BENCH_shard.json`.
 //!
 //! The workload is deliberately tiny (linreg d = 4, chunk = 2) so the
 //! numbers are dominated by per-iteration dispatch — assignment,
-//! scatter/gather, ingest — not by gradient math. The threaded
-//! transport is capped at n = 256 (one OS thread per worker); the
-//! simulator sweeps to n = 1024 on a single thread, which is the
-//! point of having it.
+//! scatter/gather, ingest, partial-aggregate fusion — not by gradient
+//! math. The threaded transport is capped at n = 256 (one OS thread
+//! per worker); the simulator sweeps to n = 1024 on a single thread,
+//! which is the point of having it.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use r3bft::config::{AttackConfig, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig};
@@ -15,17 +17,20 @@ use r3bft::coordinator::master::{Master, MasterOptions};
 use r3bft::data::LinRegDataset;
 use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
 use r3bft::util::bench::{black_box, Table};
+use r3bft::util::json::Json;
 
 const THREADED_CAP: usize = 256;
 
-fn run_once(n: usize, transport: &str, steps: usize) -> f64 {
+fn run_once(n: usize, shards: usize, transport: &str, steps: usize) -> f64 {
     let d = 4usize;
     let chunk = 2usize;
     let mut cluster = ClusterConfig::new(n, 1, 42);
     cluster.byzantine_ids = vec![];
+    cluster.f = 0;
     cluster.transport = transport.into();
+    cluster.shards = shards;
     let cfg = ExperimentConfig {
-        name: format!("bench-{transport}-{n}"),
+        name: format!("bench-{transport}-{n}x{shards}"),
         cluster,
         policy: PolicyKind::None,
         attack: AttackConfig::default(),
@@ -49,9 +54,9 @@ fn main() {
     let mut table = Table::new(&["n", "sim us/iter", "threaded us/iter", "threaded/sim"]);
     for &n in &[8usize, 64, 256, 1024] {
         let steps = if n >= 1024 { 10 } else { 30 };
-        let sim = run_once(n, "sim", steps);
+        let sim = run_once(n, 1, "sim", steps);
         let threaded = if n <= THREADED_CAP {
-            Some(run_once(n, "threaded", steps))
+            Some(run_once(n, 1, "threaded", steps))
         } else {
             None // one OS thread per worker is not feasible at this n
         };
@@ -67,4 +72,37 @@ fn main() {
         "\nnote: sim latency model is Zero here, so sim numbers are pure \
          dispatch + compute; threaded numbers add thread wake/IPC costs."
     );
+
+    // ---- sharded dispatch sweep: n × K over the sim transport ----------
+    println!("\n#### sharded parameter-server dispatch (sim transport)");
+    let mut table = Table::new(&["n", "K=1 us/iter", "K=4 us/iter", "K=8 us/iter"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in &[64usize, 256, 1024] {
+        let steps = if n >= 1024 { 10 } else { 30 };
+        let mut cells = vec![n.to_string()];
+        for &k in &[1usize, 4, 8] {
+            let us = run_once(n, k, "sim", steps) * 1e6;
+            cells.push(format!("{us:.1}"));
+            let mut obj = BTreeMap::new();
+            obj.insert("n".to_string(), Json::Num(n as f64));
+            obj.insert("shards".to_string(), Json::Num(k as f64));
+            obj.insert("us_per_iter".to_string(), Json::Num(us));
+            rows.push(Json::Obj(obj));
+        }
+        table.row(&cells);
+    }
+    table.print("sharded sweep (per-iteration wall time)");
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("shard_dispatch".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str("linreg d=4 chunk=2 policy=none transport=sim".to_string()),
+    );
+    doc.insert("results".to_string(), Json::Arr(rows));
+    let json = Json::Obj(doc).to_string();
+    match std::fs::write("BENCH_shard.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_shard.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_shard.json: {e}"),
+    }
 }

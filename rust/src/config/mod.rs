@@ -121,6 +121,10 @@ pub struct ClusterConfig {
     /// (deterministic virtual-time simulation, scales to thousands of
     /// workers). See `coordinator::transport`.
     pub transport: String,
+    /// Shard count K: 1 = single master; K > 1 partitions the workers
+    /// into K contiguous shards, each with its own protocol core,
+    /// behind one parameter server. See `coordinator::shard`.
+    pub shards: usize,
     pub seed: u64,
 }
 
@@ -134,6 +138,7 @@ impl ClusterConfig {
             byzantine_ids: (0..f).collect(),
             latency_us: 0,
             transport: "threaded".into(),
+            shards: 1,
             seed,
         }
     }
@@ -144,6 +149,12 @@ impl ClusterConfig {
         }
         if self.transport != "threaded" && self.transport != "sim" {
             bail!("unknown transport '{}' (expected threaded|sim)", self.transport);
+        }
+        if self.shards == 0 {
+            bail!("cluster.shards must be at least 1");
+        }
+        if self.shards > self.n {
+            bail!("cluster.shards = {} exceeds n = {}", self.shards, self.n);
         }
         if 2 * self.f >= self.n {
             bail!(
@@ -225,6 +236,7 @@ impl ExperimentConfig {
         let mut cluster = ClusterConfig::new(n, f, seed);
         cluster.latency_us = doc.usize_or("cluster.latency_us", 0) as u64;
         cluster.transport = doc.str_or("cluster.transport", "threaded");
+        cluster.shards = doc.usize_or("cluster.shards", 1);
         if let Some(toml::TomlValue::Arr(ids)) = doc.get("cluster.byzantine_ids") {
             cluster.byzantine_ids = ids
                 .iter()
@@ -296,6 +308,24 @@ mod tests {
         let doc = TomlDoc::parse("[cluster]\nn = 5\nf = 1\ntransport = \"sim\"\n").unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.cluster.transport, "sim");
+        assert_eq!(cfg.cluster.shards, 1);
+    }
+
+    #[test]
+    fn shards_validated_and_parsed() {
+        let mut c = ClusterConfig::new(8, 2, 0);
+        assert_eq!(c.shards, 1);
+        c.shards = 4;
+        assert!(c.validate().is_ok());
+        c.shards = 0;
+        assert!(c.validate().is_err());
+        c.shards = 9; // more shards than workers
+        assert!(c.validate().is_err());
+
+        let doc =
+            TomlDoc::parse("[cluster]\nn = 16\nf = 2\ntransport = \"sim\"\nshards = 4\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster.shards, 4);
     }
 
     #[test]

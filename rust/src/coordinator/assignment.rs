@@ -33,7 +33,6 @@ impl Assignment {
     pub fn new(data_ids: &[usize], active: &[WorkerId], r: usize) -> Assignment {
         let nchunks = active.len();
         assert!(nchunks > 0, "no active workers");
-        assert!(r >= 1 && r <= nchunks, "replication r={r} with {nchunks} workers");
         assert_eq!(
             data_ids.len() % nchunks,
             0,
@@ -44,8 +43,22 @@ impl Assignment {
         let chunks: Vec<Vec<usize>> = (0..nchunks)
             .map(|j| data_ids[j * cs..(j + 1) * cs].to_vec())
             .collect();
-        let owners: Vec<Vec<WorkerId>> = (0..nchunks)
-            .map(|j| (0..r).map(|k| active[(j + k) % nchunks]).collect())
+        Self::from_chunks(chunks, active, r)
+    }
+
+    /// Build an assignment over pre-partitioned chunks (the sharded
+    /// parameter server samples and partitions the data globally, then
+    /// hands each shard its chunk slice). `chunks.len()` may differ
+    /// from `active.len()`: chunk j is owned cyclically by
+    /// `active[(j + k) % nactive]`, so a survivor shard can absorb a
+    /// dead shard's chunks even when it has fewer workers than chunks.
+    pub fn from_chunks(chunks: Vec<Vec<usize>>, active: &[WorkerId], r: usize) -> Assignment {
+        let nactive = active.len();
+        assert!(nactive > 0, "no active workers");
+        assert!(!chunks.is_empty(), "no chunks to assign");
+        assert!(r >= 1 && r <= nactive, "replication r={r} with {nactive} workers");
+        let owners: Vec<Vec<WorkerId>> = (0..chunks.len())
+            .map(|j| (0..r.min(nactive)).map(|k| active[(j + k) % nactive]).collect())
             .collect();
         Assignment { chunks, owners, active: active.to_vec() }
     }

@@ -23,6 +23,16 @@ pub enum Event {
     /// A faulty gradient slipped into the update (oracle knowledge —
     /// only the simulator can emit this, never the real master).
     OracleFaultyUpdate { iter: u64 },
+    /// Shard-scoped protocol event (sharded runs): the inner event's
+    /// worker and chunk ids are already remapped to the global roster,
+    /// so the flat queries below see through the wrapper.
+    Shard { shard: usize, inner: Box<Event> },
+    /// An entire shard lost its last worker: the parameter server
+    /// marked it dead and reassigned its chunks to surviving shards.
+    ShardDead { iter: u64, shard: usize },
+    /// A shard-local elimination was published to the parameter
+    /// server's global roster (the liar can never rejoin anywhere).
+    RosterEliminated { iter: u64, shard: usize, worker: WorkerId },
 }
 
 /// Append-only event log.
@@ -36,14 +46,35 @@ impl EventLog {
         self.events.push(e);
     }
 
+    /// Events with one level of [`Event::Shard`] wrapping peeled off,
+    /// so per-shard protocol events answer the same queries as
+    /// single-master ones.
+    pub fn flat(&self) -> impl Iterator<Item = &Event> {
+        self.events.iter().map(|e| match e {
+            Event::Shard { inner, .. } => inner.as_ref(),
+            e => e,
+        })
+    }
+
+    /// Events of one shard (unwrapped). Single-master events have no
+    /// shard dimension and are never returned here.
+    pub fn shard_events(&self, shard: usize) -> Vec<&Event> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Shard { shard: s, inner } if *s == shard => Some(inner.as_ref()),
+                _ => None,
+            })
+            .collect()
+    }
+
     pub fn count<F: Fn(&Event) -> bool>(&self, pred: F) -> usize {
-        self.events.iter().filter(|e| pred(e)).count()
+        self.flat().filter(|e| pred(e)).count()
     }
 
     pub fn identified_workers(&self) -> Vec<WorkerId> {
         let mut ws: Vec<WorkerId> = self
-            .events
-            .iter()
+            .flat()
             .filter_map(|e| match e {
                 Event::Identified { workers, .. } => Some(workers.clone()),
                 _ => None,
@@ -57,7 +88,7 @@ impl EventLog {
 
     /// Iteration at which a worker was identified (None if never).
     pub fn identification_time(&self, w: WorkerId) -> Option<u64> {
-        self.events.iter().find_map(|e| match e {
+        self.flat().find_map(|e| match e {
             Event::Identified { iter, workers } if workers.contains(&w) => Some(*iter),
             _ => None,
         })
@@ -77,6 +108,20 @@ impl EventLog {
 
     pub fn crashes(&self) -> usize {
         self.count(|e| matches!(e, Event::WorkerCrashed { .. }))
+    }
+
+    pub fn dead_shards(&self) -> Vec<usize> {
+        let mut ss: Vec<usize> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Event::ShardDead { shard, .. } => Some(*shard),
+                _ => None,
+            })
+            .collect();
+        ss.sort_unstable();
+        ss.dedup();
+        ss
     }
 }
 
@@ -102,5 +147,27 @@ mod tests {
         assert_eq!(log.identification_time(2), Some(0));
         assert_eq!(log.identification_time(0), Some(5));
         assert_eq!(log.identification_time(7), None);
+    }
+
+    #[test]
+    fn shard_wrapped_events_answer_flat_queries() {
+        let mut log = EventLog::default();
+        log.push(Event::Shard {
+            shard: 1,
+            inner: Box::new(Event::Identified { iter: 3, workers: vec![9] }),
+        });
+        log.push(Event::Shard {
+            shard: 0,
+            inner: Box::new(Event::WorkerCrashed { iter: 4, worker: 2 }),
+        });
+        log.push(Event::ShardDead { iter: 5, shard: 2 });
+        log.push(Event::RosterEliminated { iter: 3, shard: 1, worker: 9 });
+
+        assert_eq!(log.identified_workers(), vec![9]);
+        assert_eq!(log.identification_time(9), Some(3));
+        assert_eq!(log.crashes(), 1);
+        assert_eq!(log.dead_shards(), vec![2]);
+        assert_eq!(log.shard_events(1).len(), 1);
+        assert!(log.shard_events(3).is_empty());
     }
 }

@@ -21,6 +21,7 @@ use super::events::{Event, EventLog};
 use super::metrics::{IterationRecord, TrainMetrics};
 use super::policy::FaultCheckPolicy;
 use super::protocol::{ProtocolConfig, ProtocolCore};
+use super::shard::{ParameterServer, ShardPlan, ShardedTransport};
 use super::transport::{LatencyModel, SimTransport, ThreadedTransport, Transport};
 use super::{WorkerId, MASTER_SENTINEL};
 use crate::config::ExperimentConfig;
@@ -83,16 +84,23 @@ pub struct TrainOutcome {
     pub crashed: Vec<WorkerId>,
 }
 
+/// Execution backend: one protocol core over all n workers, or the
+/// sharded parameter server (K > 1 shards, each with its own core).
+enum Backend {
+    Single(ProtocolCore),
+    Sharded(ParameterServer),
+}
+
 pub struct Master {
     cfg: ExperimentConfig,
     opts: MasterOptions,
     engine: Arc<dyn GradientComputer>,
     dataset: Arc<dyn Dataset>,
-    core: ProtocolCore,
+    backend: Backend,
     theta: Vec<f32>,
     chunk_size: usize,
-    /// Reused aggregation buffer (hot path: no per-iteration
-    /// `vec![0.0; d]` churn).
+    /// Reused aggregation buffer (single-core compressed/filtered
+    /// paths; the dense path tree-sums into a fresh buffer).
     agg: Vec<f32>,
     /// Reused per-chunk loss buffer.
     used_losses: Vec<f64>,
@@ -105,6 +113,8 @@ impl Master {
     /// `ModelSpec::init_theta` or `init_transformer_tiny`).
     /// `chunk_size` is the number of data points per chunk — for the
     /// XLA engine it must equal the artifact's compiled batch size.
+    /// With `cfg.cluster.shards > 1` the master delegates every round
+    /// to a [`ParameterServer`] over per-shard protocol cores.
     pub fn new(
         cfg: ExperimentConfig,
         opts: MasterOptions,
@@ -114,6 +124,9 @@ impl Master {
         chunk_size: usize,
     ) -> Result<Master> {
         cfg.cluster.validate()?;
+        if cfg.cluster.shards > 1 {
+            return Self::new_sharded(cfg, opts, engine, dataset, init_theta, chunk_size);
+        }
         let n = cfg.cluster.n;
         let seed = cfg.cluster.seed;
         let attack = cfg.attack.clone();
@@ -151,8 +164,67 @@ impl Master {
         Self::with_transport(cfg, opts, engine, dataset, init_theta, chunk_size, transport)
     }
 
+    /// Build the sharded backend: a [`ShardPlan`] partitions the
+    /// workers, each shard gets its own inner transport + protocol
+    /// core, and a [`ParameterServer`] owns theta and the SGD step.
+    fn new_sharded(
+        cfg: ExperimentConfig,
+        opts: MasterOptions,
+        engine: Arc<dyn GradientComputer>,
+        dataset: Arc<dyn Dataset>,
+        init_theta: Vec<f32>,
+        chunk_size: usize,
+    ) -> Result<Master> {
+        anyhow::ensure!(
+            opts.compressor.is_none() && opts.unaudited_filter.is_none(),
+            "sharded runs do not support compressed symbols or unaudited filters yet"
+        );
+        anyhow::ensure!(chunk_size > 0, "chunk_size must be positive");
+        let plan = ShardPlan::build(
+            cfg.cluster.n,
+            cfg.cluster.shards,
+            cfg.cluster.f,
+            &cfg.cluster.byzantine_ids,
+        )?;
+        let build = super::shard::transport::ShardBuildConfig {
+            transport: cfg.cluster.transport.clone(),
+            seed: cfg.cluster.seed,
+            attack: cfg.attack.clone(),
+            policy: cfg.policy.clone(),
+            chunk_size,
+            self_check: opts.self_check,
+            tol: opts.tol,
+            no_eliminate: opts.no_eliminate,
+            latency_us: cfg.cluster.latency_us,
+            sim: opts.sim.clone(),
+        };
+        let transport = ShardedTransport::build(&plan, &build, &engine)?;
+        let ps = ParameterServer::new(
+            transport,
+            engine.clone(),
+            dataset.clone(),
+            init_theta,
+            chunk_size,
+            cfg.train.lr,
+            cfg.cluster.seed,
+            opts.w_star.clone(),
+        )?;
+        let d = engine.param_dim();
+        Ok(Master {
+            cfg,
+            opts,
+            engine,
+            dataset,
+            backend: Backend::Sharded(ps),
+            theta: Vec::new(), // owned by the parameter server until `finish`
+            chunk_size,
+            agg: vec![0.0f32; d],
+            used_losses: Vec::new(),
+        })
+    }
+
     /// Build a master over an explicit transport (tests and benches
-    /// inject custom scenarios here).
+    /// inject custom scenarios here; single-core only).
     pub fn with_transport(
         cfg: ExperimentConfig,
         opts: MasterOptions,
@@ -163,6 +235,10 @@ impl Master {
         transport: Box<dyn Transport>,
     ) -> Result<Master> {
         cfg.cluster.validate()?;
+        anyhow::ensure!(
+            cfg.cluster.shards <= 1,
+            "with_transport drives a single protocol core; use Master::new for sharded runs"
+        );
         anyhow::ensure!(chunk_size > 0, "chunk_size must be positive");
         anyhow::ensure!(
             init_theta.len() == engine.param_dim(),
@@ -196,7 +272,7 @@ impl Master {
             opts,
             engine,
             dataset,
-            core,
+            backend: Backend::Single(core),
             theta: init_theta,
             chunk_size,
             agg: vec![0.0f32; d],
@@ -209,21 +285,39 @@ impl Master {
         let mut metrics = TrainMetrics::default();
         let mut events = EventLog::default();
         let steps = self.cfg.train.steps;
+        let sharded = matches!(self.backend, Backend::Sharded(_));
         for t in 0..steps as u64 {
-            let rec = self.iteration(t, &mut events)?;
+            let rec = if sharded {
+                match &mut self.backend {
+                    Backend::Sharded(ps) => ps.run_round(t, &mut events)?,
+                    Backend::Single(_) => unreachable!(),
+                }
+            } else {
+                self.iteration(t, &mut events)?
+            };
             metrics.push(rec);
         }
-        let (eliminated, crashed) = self.core.into_outcome();
-        Ok(TrainOutcome { theta: self.theta, metrics, events, eliminated, crashed })
+        let (theta, eliminated, crashed) = match self.backend {
+            Backend::Single(core) => {
+                let (eliminated, crashed) = core.into_outcome();
+                (self.theta, eliminated, crashed)
+            }
+            Backend::Sharded(ps) => ps.finish(),
+        };
+        Ok(TrainOutcome { theta, metrics, events, eliminated, crashed })
     }
 
-    /// One full protocol iteration: delegate the phases to the core,
-    /// then aggregate + update.
+    /// One full single-core protocol iteration: delegate the phases to
+    /// the core, then aggregate + update.
     fn iteration(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
         let t0 = Instant::now();
-        let f_t = self.core.f_t();
+        let core = match &mut self.backend {
+            Backend::Single(core) => core,
+            Backend::Sharded(_) => unreachable!("sharded rounds go through the parameter server"),
+        };
+        let f_t = core.f_t();
         let theta = Arc::new(self.theta.clone());
-        let out = self.core.run_round(
+        let out = core.run_round(
             t,
             &theta,
             self.dataset.as_ref(),
@@ -232,7 +326,7 @@ impl Master {
         )?;
 
         // ---- aggregate + update ----------------------------------------
-        let round = self.core.round();
+        let round = core.round();
         let nchunks = round.nchunks();
         let d = self.engine.param_dim();
         let mut oracle_faulty = false;
@@ -266,13 +360,15 @@ impl Master {
                 }
             }
         } else {
-            // hot path: accumulate straight from the chosen copies into
-            // the reused buffer — no per-chunk clone, no per-iteration
-            // allocation
-            self.agg.fill(0.0);
+            // dense path: the same fixed-shape worker-id-slotted tree
+            // sum the sharded parameter server uses, so a K = 1 run is
+            // bit-identical to a sharded one (see `coordinator::shard`)
+            let mut leaves: Vec<Option<&[f32]>> = vec![None; self.cfg.cluster.n];
             for c in 0..nchunks {
-                crate::linalg::axpy(1.0 / nchunks as f32, &round.chosen(c).grad, &mut self.agg);
+                leaves[round.assignment.owners[c][0]] = Some(&round.chosen(c).grad);
             }
+            self.agg = crate::linalg::tree_sum(&leaves).expect("at least one chunk");
+            crate::linalg::scale(1.0 / nchunks as f32, &mut self.agg);
         }
         if oracle_faulty {
             events.push(Event::OracleFaultyUpdate { iter: t });
@@ -281,14 +377,14 @@ impl Master {
             .sgd_step(&mut self.theta, &self.agg, self.cfg.train.lr)?;
 
         // ---- metrics -----------------------------------------------------
-        let round = self.core.round();
+        let round = core.round();
         let computed_points: u64 = round
             .chunks
             .iter()
             .map(|c| (c.computed_copies * self.chunk_size) as u64)
             .sum::<u64>()
             + out.master_computed_points;
-        let (lambda, _) = self.core.policy().adaptive_state();
+        let (lambda, _) = core.policy().adaptive_state();
         Ok(IterationRecord {
             iter: t,
             gradients_used: out.gradients_used,
@@ -298,7 +394,7 @@ impl Master {
             identified: out.identified_now.len(),
             crashed: out.crashed_now.len(),
             loss: stats::median(&self.used_losses) as f32,
-            q: self.core.policy().last_q,
+            q: core.policy().last_q,
             lambda,
             oracle_faulty_update: oracle_faulty,
             dist_to_opt: self
@@ -307,6 +403,7 @@ impl Master {
                 .as_ref()
                 .map(|w| crate::linalg::dist2(&self.theta, w)),
             wall_ns: t0.elapsed().as_nanos() as u64,
+            shard_stats: Vec::new(),
         })
     }
 }

@@ -6,6 +6,21 @@
 //! data-point units: a worker computing the symbol of a chunk of B
 //! points computed B gradients; the master's self-checks count too.
 
+/// One shard's slice of an iteration (sharded runs only): the shard
+/// dimension of the efficiency accounting.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStat {
+    pub shard: usize,
+    /// Active workers in the shard when the round started.
+    pub workers_active: usize,
+    pub gradients_used: u64,
+    pub gradients_computed: u64,
+    pub audited: bool,
+    pub faults_detected: usize,
+    pub identified: usize,
+    pub crashed: usize,
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct IterationRecord {
     pub iter: u64,
@@ -29,6 +44,8 @@ pub struct IterationRecord {
     /// Distance to the planted optimum (linreg workloads only).
     pub dist_to_opt: Option<f32>,
     pub wall_ns: u64,
+    /// Per-shard breakdown (empty for single-master runs).
+    pub shard_stats: Vec<ShardStat>,
 }
 
 impl IterationRecord {
@@ -102,11 +119,11 @@ impl TrainMetrics {
     /// CSV dump for EXPERIMENTS.md plots.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,faulty_update,dist_to_opt\n",
+            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,faulty_update,dist_to_opt,shards\n",
         );
         for r in &self.iterations {
             s.push_str(&format!(
-                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{}\n",
+                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{},{}\n",
                 r.iter,
                 r.loss,
                 r.efficiency(),
@@ -120,6 +137,7 @@ impl TrainMetrics {
                 r.crashed,
                 r.oracle_faulty_update as u8,
                 r.dist_to_opt.map(|d| d.to_string()).unwrap_or_default(),
+                r.shard_stats.len(), // 0 = single-master run
             ));
         }
         s

@@ -3,26 +3,38 @@
 //!
 //! ## Layer map
 //!
-//! The coordinator is three layers, top to bottom:
+//! The coordinator is four layers, top to bottom:
 //!
 //! 1. **Policy + SGD glue** — [`master::Master`]: builds the cluster,
 //!    asks [`policy`] when to audit, aggregates the per-chunk
-//!    gradients into a reused buffer, applies the SGD update through
-//!    the gradient engine, and records [`metrics`] / [`events`].
-//! 2. **Protocol core** — [`protocol::ProtocolCore`]: one iteration as
+//!    gradients with the fixed-shape reproducible tree sum, applies
+//!    the SGD update through the gradient engine, and records
+//!    [`metrics`] / [`events`].
+//! 2. **Shard layer** (when `cluster.shards` > 1) — [`shard`]: a
+//!    [`shard::ParameterServer`] owns theta, samples each round's data
+//!    globally, and fuses per-shard partial aggregates into one SGD
+//!    step; a [`shard::ShardedTransport`] fans the round out to K
+//!    [`shard::ShardCore`]s, each wrapping its own protocol core over
+//!    only its worker subset (per-shard budgets `2 f_s < n_s`,
+//!    shard-local votes and eliminations published to the global
+//!    roster, whole-shard crashes rescued by survivors). With K = 1
+//!    the master drives a single protocol core directly — at zero
+//!    latency both layouts are bit-identical (see [`shard`] docs).
+//! 3. **Protocol core** — [`protocol::ProtocolCore`]: one iteration as
 //!    explicit phase transitions (proactive → detection → reactive,
 //!    [`protocol::Phase`]) over a [`protocol::RoundState`] that owns
 //!    the single symbol-ingest path. Uses [`assignment`] for chunk
 //!    placement, [`codes`] for replica comparison, [`identify`] for
 //!    majority voting, and eliminates identified liars.
-//! 3. **Transport** — [`transport::Transport`]: a scatter/gather
+//! 4. **Transport** — [`transport::Transport`]: a scatter/gather
 //!    channel to the workers. [`transport::ThreadedTransport`] is the
 //!    real one-OS-thread-per-worker pool;
 //!    [`transport::SimTransport`] runs thousands of simulated workers
 //!    deterministically in virtual time with latency/straggler/crash
 //!    models. Both drive the same [`worker::WorkerState`] compute core
 //!    (honest engines are deterministic, so the transports are
-//!    bit-identical for the same seed at zero latency).
+//!    bit-identical for the same seed at zero latency). Shards may mix
+//!    transport kinds.
 //!
 //! ## Per-iteration protocol (unifying §4.1 and §4.2 of the paper)
 //!
@@ -61,6 +73,7 @@ pub mod master;
 pub mod metrics;
 pub mod policy;
 pub mod protocol;
+pub mod shard;
 pub mod transport;
 pub mod worker;
 
@@ -76,6 +89,8 @@ pub type ChunkId = usize;
 /// nor eliminated.
 pub const MASTER_SENTINEL: WorkerId = usize::MAX;
 
+pub use events::{Event, EventLog};
 pub use master::{Master, TrainOutcome};
 pub use policy::FaultCheckPolicy;
+pub use shard::{ParameterServer, ShardCore, ShardPlan, ShardedTransport};
 pub use transport::{LatencyModel, SimConfig, SimTransport, ThreadedTransport, Transport};

@@ -186,7 +186,14 @@ pub struct RoundOutcome {
 pub struct ProtocolCore {
     transport: Box<dyn Transport>,
     policy: FaultCheckPolicy,
-    rng: Pcg64,
+    /// Data-point sampling stream. Kept separate from `rng_assign` so
+    /// reactive-extension shuffles (whose count depends on audit luck)
+    /// can never perturb *which data* later rounds sample — the
+    /// sharded parameter server relies on this to reproduce the
+    /// single-master sampling stream exactly.
+    rng_sample: Pcg64,
+    /// Ownership-extension shuffle stream (reactive/detection top-ups).
+    rng_assign: Pcg64,
     active: Vec<WorkerId>,
     eliminated: Vec<WorkerId>,
     crashed: Vec<WorkerId>,
@@ -205,7 +212,8 @@ impl ProtocolCore {
         ProtocolCore {
             transport,
             policy,
-            rng: Pcg64::new(cfg.seed, 0xaa57e2),
+            rng_sample: Pcg64::new(cfg.seed, 0xaa57e2),
+            rng_assign: Pcg64::new(cfg.seed, 0xa5516e),
             active: (0..n).collect(),
             eliminated: Vec::new(),
             crashed: Vec::new(),
@@ -247,11 +255,34 @@ impl ProtocolCore {
         (self.eliminated, self.crashed)
     }
 
-    /// Drive one full iteration: proactive → (detection → reactive).
+    /// Drive one full iteration: sample m points from the protocol's
+    /// own stream, then proactive → (detection → reactive).
     pub fn run_round(
         &mut self,
         t: u64,
         theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+        engine: &dyn GradientComputer,
+        events: &mut EventLog,
+    ) -> Result<RoundOutcome> {
+        anyhow::ensure!(!self.active.is_empty(), "no active workers left at iteration {t}");
+        let cs = self.cfg.chunk_size;
+        let m = self.active.len() * cs;
+        let data_ids = sample_points(&mut self.rng_sample, dataset.len(), m);
+        let chunks: Vec<Vec<usize>> = data_ids.chunks(cs).map(|s| s.to_vec()).collect();
+        self.run_round_with_chunks(t, theta, chunks, dataset, engine, events)
+    }
+
+    /// Drive one full iteration over externally-sampled chunks (the
+    /// sharded parameter server samples globally and hands each shard
+    /// its chunk slice). `chunks.len()` normally equals the active
+    /// count; a rescue round absorbing a dead shard's chunks may pass
+    /// more or fewer.
+    pub fn run_round_with_chunks(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        chunks: Vec<Vec<usize>>,
         dataset: &dyn Dataset,
         engine: &dyn GradientComputer,
         events: &mut EventLog,
@@ -263,10 +294,9 @@ impl ProtocolCore {
         let mut crashed_now: Vec<WorkerId> = Vec::new();
 
         // ---- Phase::Proactive ------------------------------------------
-        let m = nact * self.cfg.chunk_size;
-        let data_ids = sample_points(&mut self.rng, dataset.len(), m);
+        let m = chunks.len() * self.cfg.chunk_size;
         let mut round = std::mem::take(&mut self.round);
-        round.reset(Assignment::new(&data_ids, &self.active, r));
+        round.reset(Assignment::from_chunks(chunks, &self.active, r));
 
         let bundles: Vec<TaskBundle> = self
             .active
@@ -502,7 +532,7 @@ impl ProtocolCore {
                     "cannot reach {want} copies of chunk {c} at iteration {t}: \
                      only {candidates} candidate workers remain"
                 );
-                let added = round.assignment.extend(c, shortfall, &mut self.rng);
+                let added = round.assignment.extend(c, shortfall, &mut self.rng_assign);
                 if phase == Phase::Reactive {
                     events.push(Event::ReactiveRedundancy {
                         iter: t,

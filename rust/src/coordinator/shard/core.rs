@@ -1,0 +1,256 @@
+//! One shard's protocol core: today's [`ProtocolCore`] + `RoundState`
+//! over an inner transport with *local* worker ids `0..n_s`, plus the
+//! local→global id remapping for everything that leaves the shard
+//! (events, identifications, crash reports, partial aggregates).
+
+use std::sync::Arc;
+
+use super::super::events::{Event, EventLog};
+use super::super::metrics::ShardStat;
+use super::super::protocol::ProtocolCore;
+use super::super::{ChunkId, WorkerId, MASTER_SENTINEL};
+use super::ShardSpec;
+use crate::data::Dataset;
+use crate::grad::GradientComputer;
+use crate::linalg;
+use crate::Result;
+
+/// What one shard hands back to the parameter server after a round.
+pub struct ShardRound {
+    /// Partial aggregate: the shard's fixed-shape tree sum over its
+    /// worker-id-slotted chunk gradients (undivided; the parameter
+    /// server scales by the global chunk count once). `None` when the
+    /// round produced no chunks.
+    pub partial: Option<Vec<f32>>,
+    /// Chosen loss per chunk, in local chunk order (the server
+    /// concatenates them in shard order for the global median).
+    pub losses: Vec<f64>,
+    /// Shard dimension of the metrics.
+    pub stat: ShardStat,
+    /// Workers identified and eliminated this round (global ids), for
+    /// publication to the global roster.
+    pub identified: Vec<WorkerId>,
+    /// Workers that crash-stopped this round (global ids).
+    pub crashed: Vec<WorkerId>,
+    /// Oracle: did a tampered copy end up as a chosen chunk value?
+    pub oracle_faulty: bool,
+}
+
+/// A shard: spec + wrapped protocol core + liveness.
+pub struct ShardCore {
+    spec: ShardSpec,
+    core: ProtocolCore,
+    alive: bool,
+}
+
+impl ShardCore {
+    /// Wrap a protocol core whose transport has `spec.width()` workers
+    /// with local ids `0..n_s`.
+    pub fn new(spec: ShardSpec, core: ProtocolCore) -> ShardCore {
+        ShardCore { spec, core, alive: true }
+    }
+
+    pub fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    pub fn alive(&self) -> bool {
+        self.alive
+    }
+
+    /// Active workers right now (count; ids are local to the shard).
+    pub fn active_count(&self) -> usize {
+        if self.alive {
+            self.core.active().len()
+        } else {
+            0
+        }
+    }
+
+    /// Global ids of the shard's active workers (roster cross-checks).
+    pub fn active_globals(&self) -> Vec<WorkerId> {
+        if !self.alive {
+            return Vec::new();
+        }
+        self.core.active().iter().map(|&w| self.global(w)).collect()
+    }
+
+    /// Global ids of every worker this shard has eliminated so far.
+    /// Normally eliminations reach the roster through [`ShardRound`];
+    /// when a round fails mid-way its `identified_now` is lost with
+    /// the error, so the parameter server re-publishes from here
+    /// before retiring the shard.
+    pub fn eliminated_globals(&self) -> Vec<WorkerId> {
+        self.core.eliminated().iter().map(|&w| self.global(w)).collect()
+    }
+
+    fn global(&self, local: WorkerId) -> WorkerId {
+        if local == MASTER_SENTINEL {
+            local
+        } else {
+            self.spec.lo + local
+        }
+    }
+
+    /// Remap a shard-local event to global worker/chunk ids.
+    fn remap(&self, e: Event, chunk_offset: ChunkId) -> Event {
+        match e {
+            Event::AuditDecision { iter, q, audited } => Event::AuditDecision { iter, q, audited },
+            Event::FaultDetected { iter, chunk, owners } => Event::FaultDetected {
+                iter,
+                chunk: chunk + chunk_offset,
+                owners: owners.into_iter().map(|w| self.global(w)).collect(),
+            },
+            Event::ReactiveRedundancy { iter, chunk, added } => Event::ReactiveRedundancy {
+                iter,
+                chunk: chunk + chunk_offset,
+                added: added.into_iter().map(|w| self.global(w)).collect(),
+            },
+            Event::Identified { iter, workers } => Event::Identified {
+                iter,
+                workers: workers.into_iter().map(|w| self.global(w)).collect(),
+            },
+            Event::Eliminated { iter, worker } => {
+                Event::Eliminated { iter, worker: self.global(worker) }
+            }
+            Event::WorkerCrashed { iter, worker } => {
+                Event::WorkerCrashed { iter, worker: self.global(worker) }
+            }
+            // the inner core never emits shard-level events
+            other => other,
+        }
+    }
+
+    /// Run one shard round over the chunk slice the parameter server
+    /// sampled for this shard. `chunk_offset` is the shard's first
+    /// global chunk index (for event remapping). `slot_by_owner`
+    /// selects the partial-aggregate leaf layout: normal rounds slot
+    /// each chunk by its primary owner's local id (the layout that
+    /// makes the tree sum partition-invariant); rescue rounds, where
+    /// the chunk count is unrelated to the worker count, slot by chunk
+    /// index instead.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        chunks: Vec<Vec<usize>>,
+        chunk_offset: ChunkId,
+        chunk_size: usize,
+        slot_by_owner: bool,
+        dataset: &dyn Dataset,
+        engine: &dyn GradientComputer,
+        events: &mut EventLog,
+    ) -> Result<ShardRound> {
+        debug_assert!(self.alive, "round dispatched to a dead shard");
+        let workers_active = self.core.active().len();
+        let mut local_events = EventLog::default();
+        let outcome = match self.core.run_round_with_chunks(
+            t,
+            theta,
+            chunks,
+            dataset,
+            engine,
+            &mut local_events,
+        ) {
+            Ok(out) => out,
+            Err(e) => {
+                // the shard is unusable from here on: surrender what
+                // happened before the failure, then report the error
+                self.alive = false;
+                for e in local_events.events {
+                    let remapped = self.remap(e, chunk_offset);
+                    events.push(Event::Shard { shard: self.spec.shard, inner: Box::new(remapped) });
+                }
+                return Err(e);
+            }
+        };
+        for e in local_events.events {
+            let remapped = self.remap(e, chunk_offset);
+            events.push(Event::Shard { shard: self.spec.shard, inner: Box::new(remapped) });
+        }
+
+        let round = self.core.round();
+        let nchunks = round.nchunks();
+
+        // partial aggregate over fixed leaf slots
+        let width = self.spec.width();
+        let slots = if slot_by_owner { width } else { nchunks };
+        let mut leaves: Vec<Option<&[f32]>> = vec![None; slots];
+        let mut losses = Vec::with_capacity(nchunks);
+        let mut oracle_faulty = false;
+        let mut computed_points = 0u64;
+        for c in 0..nchunks {
+            let chosen = round.chosen(c);
+            let slot = if slot_by_owner { round.assignment.owners[c][0] } else { c };
+            debug_assert!(leaves[slot].is_none(), "two chunks slotted to one owner");
+            leaves[slot] = Some(&chosen.grad);
+            losses.push(chosen.loss as f64);
+            if chosen.worker != MASTER_SENTINEL
+                && round.tampered_by_chunk[c].contains(&chosen.worker)
+            {
+                oracle_faulty = true;
+            }
+            computed_points += (round.chunks[c].computed_copies * chunk_size) as u64;
+        }
+        let partial = linalg::tree_sum(&leaves);
+        computed_points += outcome.master_computed_points;
+
+        let identified: Vec<WorkerId> =
+            outcome.identified_now.iter().map(|&w| self.global(w)).collect();
+        let crashed: Vec<WorkerId> =
+            outcome.crashed_now.iter().map(|&w| self.global(w)).collect();
+        Ok(ShardRound {
+            partial,
+            losses,
+            stat: ShardStat {
+                shard: self.spec.shard,
+                workers_active,
+                gradients_used: outcome.gradients_used,
+                gradients_computed: computed_points,
+                audited: outcome.audited,
+                faults_detected: outcome.faults_detected,
+                identified: identified.len(),
+                crashed: crashed.len(),
+            },
+            identified,
+            crashed,
+            oracle_faulty,
+        })
+    }
+
+    /// Mark the shard dead and surrender the global ids of every
+    /// worker it can no longer vouch for: the ones it still considered
+    /// active plus the ones it saw crash (a failed round returns no
+    /// [`ShardRound`], so the parameter server re-learns the crashes
+    /// here; the roster records each worker at most once).
+    pub fn fail(&mut self) -> Vec<WorkerId> {
+        self.alive = false;
+        let mut ws: Vec<WorkerId> =
+            self.core.active().iter().map(|&w| self.global(w)).collect();
+        ws.extend(self.core.crashed().iter().map(|&w| self.global(w)));
+        ws
+    }
+
+    /// Mean of the shard policy's most recent audit probability (for
+    /// the iteration record's q column).
+    pub fn last_q(&self) -> f64 {
+        self.core.policy().last_q
+    }
+
+    /// Adaptive-policy λ_t (0 for other policies).
+    pub fn lambda(&self) -> f64 {
+        self.core.policy().adaptive_state().0
+    }
+
+    /// Shut the inner transport down and surrender the shard's final
+    /// eliminated/crashed worker sets (global ids).
+    pub fn into_outcome(self) -> (Vec<WorkerId>, Vec<WorkerId>) {
+        let lo = self.spec.lo;
+        let (elim, crashed) = self.core.into_outcome();
+        (
+            elim.into_iter().map(|w| w + lo).collect(),
+            crashed.into_iter().map(|w| w + lo).collect(),
+        )
+    }
+}

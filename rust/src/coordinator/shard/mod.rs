@@ -1,0 +1,285 @@
+//! Sharded multi-master subsystem: several independent protocol cores
+//! share one parameter server.
+//!
+//! The single-master design concentrates both detection work and
+//! gather latency in one process. This module partitions the n
+//! workers into K contiguous *shards*, each running the full
+//! proactive/detection/reactive protocol — majority votes, liar
+//! identification, crash reassignment — over **only its own worker
+//! subset**, while one [`ParameterServer`] owns the model state and
+//! applies a single fused SGD step per round from the shards' partial
+//! aggregates. Fault localization stays shard-local (the DRACO-style
+//! grouping of Blanchard et al. 2017 / Jain et al. 2024); aggregation
+//! stays global.
+//!
+//! ## Pieces
+//!
+//! * [`ShardPlan`] — build-time partition of workers into K contiguous
+//!   ranges with per-shard Byzantine budgets f_s; `2 f_s < n_s` is
+//!   validated when the plan is built, and a shard's budget is raised
+//!   to cover any configured liars that land in it.
+//! * [`ShardCore`] — wraps a [`super::protocol::ProtocolCore`] (and
+//!   its [`super::protocol::RoundState`]) over an *inner* transport
+//!   with local worker ids `0..n_s`; runs one shard round over the
+//!   chunk slice the parameter server hands it, and returns the
+//!   shard's partial aggregate plus remapped (global-id) events.
+//! * [`ShardedTransport`] — fans a round out to the per-shard inner
+//!   transports (threaded or sim, mixed allowed) and gathers the
+//!   partial aggregates; a shard whose round fails is marked dead and
+//!   its chunks are reassigned to survivors ("rescue" rounds).
+//! * [`ParameterServer`] — samples the round's data points globally
+//!   (the same RNG stream the single master uses), partitions them
+//!   into per-shard chunk slices, drives the fan-out, combines the
+//!   partials with the fixed-shape [`crate::linalg::tree_sum`], and
+//!   applies one SGD step. Shard-local eliminations are published to
+//!   its global [`Roster`], so an identified liar can never rejoin
+//!   through any shard.
+//!
+//! ## Determinism contract
+//!
+//! At zero latency, a sharded run is **bit-identical** to the K = 1
+//! run with the same seed whenever the chunk values entering the
+//! update are partition-invariant — i.e. under the deterministic
+//! (always-audit) policy, where every tampered chunk is corrected to
+//! the true gradient before aggregation, or in fault-free runs under
+//! any policy. Two mechanisms make this hold:
+//!
+//! 1. the parameter server samples with the *same* RNG stream as the
+//!    single-master protocol core, and per-round audit/extension
+//!    randomness lives on separate shard-local streams; and
+//! 2. every aggregation (sharded or not) is the fixed-shape pairwise
+//!    tree of [`crate::linalg::tree_sum`] over worker-id-slotted
+//!    leaves, which decomposes exactly along shard boundaries when
+//!    the shard width is a power of two.
+//!
+//! Under randomized audit policies with active attackers, the audit
+//! coin flips are shard-local, so *which* iteration a tampered chunk
+//! slips through differs across K — that is the paper's randomness
+//! semantics, not a bug.
+
+pub mod core;
+pub mod param_server;
+pub mod transport;
+
+pub use self::core::{ShardCore, ShardRound};
+pub use param_server::ParameterServer;
+pub use transport::ShardedTransport;
+
+use super::WorkerId;
+use crate::Result;
+
+/// One shard's static description: the contiguous global worker range
+/// `[lo, hi)`, its Byzantine budget, and the configured liars that
+/// fall inside it.
+#[derive(Clone, Debug)]
+pub struct ShardSpec {
+    pub shard: usize,
+    pub lo: WorkerId,
+    pub hi: WorkerId,
+    /// Per-shard Byzantine tolerance bound f_s (2 f_s < n_s).
+    pub f_s: usize,
+    /// Configured Byzantine worker ids inside this shard (global ids).
+    pub byzantine: Vec<WorkerId>,
+}
+
+impl ShardSpec {
+    pub fn width(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn contains(&self, w: WorkerId) -> bool {
+        (self.lo..self.hi).contains(&w)
+    }
+
+    /// Local id of a global worker in this shard.
+    pub fn local(&self, w: WorkerId) -> WorkerId {
+        debug_assert!(self.contains(w));
+        w - self.lo
+    }
+}
+
+/// Build-time partition of `n` workers into `k` contiguous shards.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub specs: Vec<ShardSpec>,
+    pub n: usize,
+}
+
+impl ShardPlan {
+    /// Partition `n` workers into `k` contiguous shards (sizes differ
+    /// by at most one; remainders go to the first shards). The global
+    /// budget `f` is split evenly; a shard's budget is raised to cover
+    /// any configured liars concentrated in it. Fails unless every
+    /// shard satisfies `2 f_s < n_s`.
+    pub fn build(n: usize, k: usize, f: usize, byzantine_ids: &[WorkerId]) -> Result<ShardPlan> {
+        anyhow::ensure!(k >= 1, "shard count must be positive");
+        anyhow::ensure!(k <= n, "cannot split {n} workers into {k} shards");
+        let base = n / k;
+        let extra = n % k;
+        let f_base = f / k;
+        let f_extra = f % k;
+        let mut specs = Vec::with_capacity(k);
+        let mut lo = 0usize;
+        for s in 0..k {
+            let width = base + usize::from(s < extra);
+            let hi = lo + width;
+            let byzantine: Vec<WorkerId> = byzantine_ids
+                .iter()
+                .copied()
+                .filter(|&w| (lo..hi).contains(&w))
+                .collect();
+            let f_s = (f_base + usize::from(s < f_extra)).max(byzantine.len());
+            anyhow::ensure!(
+                2 * f_s < width,
+                "shard {s} (workers {lo}..{hi}) has budget f_s={f_s} violating \
+                 2*f_s < n_s={width}; use fewer shards or spread the Byzantine ids"
+            );
+            specs.push(ShardSpec { shard: s, lo, hi, f_s, byzantine });
+            lo = hi;
+        }
+        Ok(ShardPlan { specs, n })
+    }
+
+    pub fn k(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// The shard owning a global worker id.
+    pub fn shard_of(&self, w: WorkerId) -> usize {
+        self.specs
+            .iter()
+            .position(|s| s.contains(w))
+            .expect("worker id out of plan range")
+    }
+}
+
+/// Why a worker left the global roster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerStatus {
+    Active,
+    /// Identified as Byzantine by its shard and published here; the
+    /// worker can never rejoin through any shard.
+    Eliminated { shard: usize, iter: u64 },
+    /// Crash-stopped (not an identification).
+    Crashed { iter: u64 },
+}
+
+/// The parameter server's global worker roster: the authoritative
+/// record of which workers are still trusted, across all shards.
+#[derive(Clone, Debug)]
+pub struct Roster {
+    status: Vec<WorkerStatus>,
+    eliminated: Vec<WorkerId>,
+    crashed: Vec<WorkerId>,
+}
+
+impl Roster {
+    pub fn new(n: usize) -> Roster {
+        Roster {
+            status: vec![WorkerStatus::Active; n],
+            eliminated: Vec::new(),
+            crashed: Vec::new(),
+        }
+    }
+
+    pub fn status(&self, w: WorkerId) -> WorkerStatus {
+        self.status[w]
+    }
+
+    pub fn is_eliminated(&self, w: WorkerId) -> bool {
+        matches!(self.status[w], WorkerStatus::Eliminated { .. })
+    }
+
+    /// Publish a shard-local elimination globally (idempotent).
+    /// Returns true when the worker was newly published.
+    pub fn publish_elimination(&mut self, w: WorkerId, shard: usize, iter: u64) -> bool {
+        if self.status[w] == WorkerStatus::Active {
+            self.status[w] = WorkerStatus::Eliminated { shard, iter };
+            self.eliminated.push(w);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record a crash-stop (idempotent; never downgrades an
+    /// elimination). Returns true when the worker was newly recorded.
+    pub fn record_crash(&mut self, w: WorkerId, iter: u64) -> bool {
+        if self.status[w] == WorkerStatus::Active {
+            self.status[w] = WorkerStatus::Crashed { iter };
+            self.crashed.push(w);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Eliminated workers in publication order.
+    pub fn eliminated(&self) -> &[WorkerId] {
+        &self.eliminated
+    }
+
+    /// Crashed workers in record order.
+    pub fn crashed(&self) -> &[WorkerId] {
+        &self.crashed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_partitions_contiguously_with_even_budgets() {
+        let plan = ShardPlan::build(64, 4, 8, &[3, 19, 35, 51]).unwrap();
+        assert_eq!(plan.k(), 4);
+        for (s, spec) in plan.specs.iter().enumerate() {
+            assert_eq!(spec.width(), 16);
+            assert_eq!(spec.lo, s * 16);
+            assert_eq!(spec.f_s, 2); // 8 / 4
+            assert_eq!(spec.byzantine, vec![s * 16 + 3]);
+        }
+        assert_eq!(plan.shard_of(0), 0);
+        assert_eq!(plan.shard_of(63), 3);
+    }
+
+    #[test]
+    fn plan_uneven_sizes_and_budget_raise() {
+        // 16 workers in 3 shards: widths 6, 5, 5; both liars in shard 0
+        let plan = ShardPlan::build(16, 3, 2, &[0, 1]).unwrap();
+        let widths: Vec<usize> = plan.specs.iter().map(|s| s.width()).collect();
+        assert_eq!(widths, vec![6, 5, 5]);
+        // even split gives shard 0 f_s = 1, raised to 2 to cover its
+        // liars; shard 1 keeps the remainder budget, shard 2 gets none
+        let budgets: Vec<usize> = plan.specs.iter().map(|s| s.f_s).collect();
+        assert_eq!(budgets, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn plan_rejects_overloaded_shard() {
+        // shard width 2 cannot tolerate f_s = 1 (2*1 >= 2)
+        assert!(ShardPlan::build(8, 4, 4, &[]).is_err());
+        // liar concentration raises f_s past the bound
+        assert!(ShardPlan::build(16, 4, 2, &[0, 1]).is_err());
+        // degenerate: more shards than workers
+        assert!(ShardPlan::build(4, 8, 0, &[]).is_err());
+        // fine: budget 0, any width >= 1
+        assert!(ShardPlan::build(4, 4, 0, &[]).is_ok());
+    }
+
+    #[test]
+    fn roster_publishes_once_and_keeps_order() {
+        let mut r = Roster::new(8);
+        r.publish_elimination(5, 1, 3);
+        r.publish_elimination(2, 0, 4);
+        r.publish_elimination(5, 1, 9); // duplicate: ignored
+        r.record_crash(7, 2);
+        r.record_crash(5, 6); // already eliminated: ignored
+        assert_eq!(r.eliminated(), &[5, 2]);
+        assert_eq!(r.crashed(), &[7]);
+        assert!(r.is_eliminated(5));
+        assert_eq!(r.status(5), WorkerStatus::Eliminated { shard: 1, iter: 3 });
+        assert_eq!(r.status(7), WorkerStatus::Crashed { iter: 2 });
+        assert_eq!(r.status(0), WorkerStatus::Active);
+    }
+}

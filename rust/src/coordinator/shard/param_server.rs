@@ -1,0 +1,318 @@
+//! The parameter server: owns the model state, samples each round's
+//! data globally, fans the round out to the shard cores, combines
+//! their partial aggregates with the fixed-shape tree sum, and applies
+//! one fused SGD step.
+//!
+//! Global sampling uses the *same* RNG stream as the single-master
+//! [`super::super::protocol::ProtocolCore`], so the data each global
+//! chunk sees is independent of K — one half of the determinism
+//! contract (see [`super`] module docs). The other half is the
+//! aggregation: per-shard partials are combined with
+//! [`crate::linalg::tree_sum`] over fixed shard slots, matching the
+//! single-master reduction bit-for-bit when shard widths are a power
+//! of two.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::super::assignment::sample_points;
+use super::super::events::{Event, EventLog};
+use super::super::metrics::{IterationRecord, ShardStat};
+use super::super::WorkerId;
+use super::{Roster, ShardRound, ShardedTransport};
+use crate::data::Dataset;
+use crate::grad::GradientComputer;
+use crate::linalg;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::Result;
+
+pub struct ParameterServer {
+    theta: Vec<f32>,
+    engine: Arc<dyn GradientComputer>,
+    dataset: Arc<dyn Dataset>,
+    transport: ShardedTransport,
+    roster: Roster,
+    /// Global data-sampling stream — bit-compatible with the
+    /// single-master core's `rng_sample` for the same seed.
+    rng_sample: Pcg64,
+    chunk_size: usize,
+    lr: f32,
+    w_star: Option<Vec<f32>>,
+    /// Reused per-chunk loss buffer.
+    losses: Vec<f64>,
+}
+
+impl ParameterServer {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        transport: ShardedTransport,
+        engine: Arc<dyn GradientComputer>,
+        dataset: Arc<dyn Dataset>,
+        init_theta: Vec<f32>,
+        chunk_size: usize,
+        lr: f32,
+        seed: u64,
+        w_star: Option<Vec<f32>>,
+    ) -> Result<ParameterServer> {
+        anyhow::ensure!(chunk_size > 0, "chunk_size must be positive");
+        anyhow::ensure!(
+            init_theta.len() == engine.param_dim(),
+            "init theta dim {} != engine param dim {}",
+            init_theta.len(),
+            engine.param_dim()
+        );
+        let n = transport.n();
+        Ok(ParameterServer {
+            theta: init_theta,
+            engine,
+            dataset,
+            transport,
+            roster: Roster::new(n),
+            rng_sample: Pcg64::new(seed, 0xaa57e2),
+            chunk_size,
+            lr,
+            w_star,
+            losses: Vec::new(),
+        })
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    pub fn roster(&self) -> &Roster {
+        &self.roster
+    }
+
+    /// One global round: sample → fan out → (rescue) → fuse → step.
+    pub fn run_round(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
+        let t0 = Instant::now();
+        let cs = self.chunk_size;
+        let k = self.transport.k();
+
+        // roster enforcement: a published liar can never rejoin
+        for core in self.transport.cores() {
+            for w in core.active_globals() {
+                anyhow::ensure!(
+                    !self.roster.is_eliminated(w),
+                    "eliminated worker {w} resurfaced in shard {} at iteration {t}",
+                    core.spec().shard
+                );
+            }
+        }
+
+        // ---- global sampling + per-shard chunk slices ------------------
+        let counts = self.transport.active_counts();
+        let total: usize = counts.iter().sum();
+        anyhow::ensure!(total > 0, "no active workers left in any shard at iteration {t}");
+        let m = total * cs;
+        let data_ids = sample_points(&mut self.rng_sample, self.dataset.len(), m);
+        let mut slices: Vec<Vec<Vec<usize>>> = Vec::with_capacity(k);
+        let mut offsets: Vec<usize> = Vec::with_capacity(k);
+        // each shard's [start, start+len) window into data_ids, kept so
+        // a dead shard's chunks can be rebuilt and handed to survivors
+        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(k);
+        let mut cursor = 0usize;
+        for &c_s in &counts {
+            offsets.push(cursor / cs);
+            let take = c_s * cs;
+            ranges.push((cursor, take));
+            let slice: Vec<Vec<usize>> = data_ids[cursor..cursor + take]
+                .chunks(cs)
+                .map(|s| s.to_vec())
+                .collect();
+            cursor += take;
+            slices.push(slice);
+        }
+
+        // ---- fan out ---------------------------------------------------
+        let theta = Arc::new(self.theta.clone());
+        let results = self.transport.fan_round(
+            t,
+            &theta,
+            slices,
+            &offsets,
+            cs,
+            self.dataset.as_ref(),
+            self.engine.as_ref(),
+            events,
+        );
+
+        let mut partials: Vec<Option<Vec<f32>>> = Vec::with_capacity(k);
+        partials.resize_with(k, || None);
+        let mut rescue_partials: Vec<Vec<f32>> = Vec::new();
+        self.losses.clear();
+        let mut shard_stats: Vec<ShardStat> = Vec::new();
+        let mut orphans: Vec<Vec<usize>> = Vec::new();
+        let mut oracle_faulty = false;
+        let mut audited = false;
+        let mut q_sum = 0.0f64;
+        let mut q_n = 0usize;
+        let mut lambda_sum = 0.0f64;
+        let mut extra_crashed = 0usize;
+
+        let absorb = |round: ShardRound,
+                      losses: &mut Vec<f64>,
+                      roster: &mut Roster,
+                      events: &mut EventLog|
+         -> ShardStat {
+            let shard = round.stat.shard;
+            for &w in &round.identified {
+                if roster.publish_elimination(w, shard, t) {
+                    events.push(Event::RosterEliminated { iter: t, shard, worker: w });
+                }
+            }
+            for &w in &round.crashed {
+                roster.record_crash(w, t);
+            }
+            losses.extend_from_slice(&round.losses);
+            round.stat
+        };
+
+        for (s, res) in results.into_iter().enumerate() {
+            match res {
+                None => {}
+                Some(Ok(mut round)) => {
+                    oracle_faulty |= round.oracle_faulty;
+                    audited |= round.stat.audited;
+                    q_sum += self.transport.cores()[s].last_q();
+                    lambda_sum += self.transport.cores()[s].lambda();
+                    q_n += 1;
+                    partials[s] = round.partial.take();
+                    let stat = absorb(round, &mut self.losses, &mut self.roster, events);
+                    shard_stats.push(stat);
+                }
+                Some(Err(e)) => {
+                    log::warn!("shard {s} died at iteration {t}: {e:#}");
+                    events.push(Event::ShardDead { iter: t, shard: s });
+                    // eliminations from the failed round would otherwise
+                    // be lost with the error — publish them first
+                    for w in self.transport.cores()[s].eliminated_globals() {
+                        if self.roster.publish_elimination(w, s, t) {
+                            events.push(Event::RosterEliminated { iter: t, shard: s, worker: w });
+                        }
+                    }
+                    let stranded = self.transport.fail_shard(s);
+                    for w in stranded {
+                        if self.roster.record_crash(w, t) {
+                            extra_crashed += 1;
+                        }
+                    }
+                    let (start, len) = ranges[s];
+                    orphans.extend(data_ids[start..start + len].chunks(cs).map(|c| c.to_vec()));
+                }
+            }
+        }
+
+        // ---- rescue: reassign a dead shard's chunks to survivors -------
+        let mut rescue_offset = total; // rescue chunks index past the main range
+        while !orphans.is_empty() {
+            // deterministic choice: the alive shard with the most
+            // active workers (lowest index wins ties)
+            let target = self
+                .transport
+                .active_counts()
+                .into_iter()
+                .enumerate()
+                .max_by_key(|&(s, c)| (c, usize::MAX - s))
+                .filter(|&(_, c)| c > 0)
+                .map(|(s, _)| s);
+            let Some(target) = target else {
+                let n = orphans.len();
+                anyhow::bail!("all shards dead at iteration {t}: {n} chunks stranded");
+            };
+            let batch = std::mem::take(&mut orphans);
+            let nbatch = batch.len();
+            match self.transport.rescue(
+                target,
+                t,
+                &theta,
+                batch.clone(),
+                rescue_offset,
+                cs,
+                self.dataset.as_ref(),
+                self.engine.as_ref(),
+                events,
+            ) {
+                Ok(mut round) => {
+                    rescue_offset += nbatch;
+                    oracle_faulty |= round.oracle_faulty;
+                    audited |= round.stat.audited;
+                    if let Some(p) = round.partial.take() {
+                        rescue_partials.push(p);
+                    }
+                    let stat = absorb(round, &mut self.losses, &mut self.roster, events);
+                    shard_stats.push(stat);
+                }
+                Err(e) => {
+                    log::warn!("rescue shard {target} died at iteration {t}: {e:#}");
+                    events.push(Event::ShardDead { iter: t, shard: target });
+                    for w in self.transport.cores()[target].eliminated_globals() {
+                        if self.roster.publish_elimination(w, target, t) {
+                            events.push(Event::RosterEliminated {
+                                iter: t,
+                                shard: target,
+                                worker: w,
+                            });
+                        }
+                    }
+                    let stranded = self.transport.fail_shard(target);
+                    for w in stranded {
+                        if self.roster.record_crash(w, t) {
+                            extra_crashed += 1;
+                        }
+                    }
+                    orphans = batch; // try the next survivor
+                }
+            }
+        }
+
+        // ---- fused aggregation + SGD step ------------------------------
+        let nchunks = self.losses.len();
+        anyhow::ensure!(nchunks > 0, "no chunk survived iteration {t}");
+        let slots: Vec<Option<&[f32]>> = partials.iter().map(|p| p.as_deref()).collect();
+        let mut agg = linalg::tree_sum(&slots);
+        for p in &rescue_partials {
+            linalg::tree_combine(&mut agg, p);
+        }
+        let mut agg = agg.expect("at least one partial aggregate");
+        linalg::scale(1.0 / nchunks as f32, &mut agg);
+        if oracle_faulty {
+            events.push(Event::OracleFaultyUpdate { iter: t });
+        }
+        self.engine.sgd_step(&mut self.theta, &agg, self.lr)?;
+
+        // ---- metrics ---------------------------------------------------
+        let gradients_used: u64 = shard_stats.iter().map(|s| s.gradients_used).sum();
+        let gradients_computed: u64 = shard_stats.iter().map(|s| s.gradients_computed).sum();
+        let faults_detected: usize = shard_stats.iter().map(|s| s.faults_detected).sum();
+        let identified: usize = shard_stats.iter().map(|s| s.identified).sum();
+        let crashed: usize =
+            shard_stats.iter().map(|s| s.crashed).sum::<usize>() + extra_crashed;
+        Ok(IterationRecord {
+            iter: t,
+            gradients_used,
+            gradients_computed,
+            audited,
+            faults_detected,
+            identified,
+            crashed,
+            loss: stats::median(&self.losses) as f32,
+            q: if q_n > 0 { q_sum / q_n as f64 } else { 0.0 },
+            lambda: if q_n > 0 { lambda_sum / q_n as f64 } else { 0.0 },
+            oracle_faulty_update: oracle_faulty,
+            dist_to_opt: self.w_star.as_ref().map(|w| linalg::dist2(&self.theta, w)),
+            wall_ns: t0.elapsed().as_nanos() as u64,
+            shard_stats,
+        })
+    }
+
+    /// Shut the fleet down; returns (theta, eliminated, crashed) with
+    /// the roster's global publication order.
+    pub fn finish(self) -> (Vec<f32>, Vec<WorkerId>, Vec<WorkerId>) {
+        let ParameterServer { theta, transport, roster, .. } = self;
+        let _ = transport.into_outcome(); // shutdown inner transports
+        (theta, roster.eliminated.clone(), roster.crashed.clone())
+    }
+}

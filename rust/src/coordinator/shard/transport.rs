@@ -1,0 +1,242 @@
+//! Shard-level transport: fans one round out to the per-shard inner
+//! transports and gathers the partial aggregates.
+//!
+//! This sits one level *above* the symbol-level
+//! [`super::super::transport::Transport`] trait: each shard owns an
+//! inner `Transport` (threaded or sim — a mixed fleet is allowed, e.g.
+//! local threaded shards next to simulated remote ones), and the
+//! [`ShardedTransport`] exchanges chunk slices for partial aggregates
+//! instead of task bundles for symbols. A shard whose round fails is
+//! marked dead; the caller (the parameter server) reassigns its chunks
+//! to survivors via [`ShardedTransport::rescue`].
+
+use std::sync::Arc;
+
+use super::super::byzantine::ByzantineBehavior;
+use super::super::events::EventLog;
+use super::super::policy::FaultCheckPolicy;
+use super::super::protocol::{ProtocolConfig, ProtocolCore};
+use super::super::transport::{LatencyModel, SimConfig, SimTransport, ThreadedTransport, Transport};
+use super::super::{ChunkId, WorkerId};
+use super::{ShardCore, ShardPlan, ShardRound, ShardSpec};
+use crate::config::{AttackConfig, PolicyKind};
+use crate::data::Dataset;
+use crate::grad::GradientComputer;
+use crate::Result;
+
+/// Everything needed to build one shard's inner transport + core.
+pub struct ShardBuildConfig {
+    /// "threaded" | "sim" (uniform; use [`ShardedTransport::from_cores`]
+    /// to mix kinds).
+    pub transport: String,
+    pub seed: u64,
+    pub attack: AttackConfig,
+    pub policy: PolicyKind,
+    pub chunk_size: usize,
+    pub self_check: bool,
+    pub tol: f32,
+    pub no_eliminate: bool,
+    pub latency_us: u64,
+    /// Sim scenario knobs; straggler/crash worker ids are *global* and
+    /// remapped into each shard here.
+    pub sim: SimConfig,
+}
+
+/// Derive a shard-local seed so shards draw independent audit coins
+/// and extension shuffles.
+fn shard_seed(seed: u64, shard: usize) -> u64 {
+    seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(shard as u64 + 1))
+}
+
+/// Build one shard's inner transport: local ids `0..n_s`, Byzantine
+/// behaviour and sim scenarios remapped from global ids.
+fn build_inner(
+    spec: &ShardSpec,
+    cfg: &ShardBuildConfig,
+    engine: &Arc<dyn GradientComputer>,
+) -> Result<Box<dyn Transport>> {
+    let n_s = spec.width();
+    let lo = spec.lo;
+    let byz = spec.byzantine.clone();
+    let attack = cfg.attack.clone();
+    let seed = cfg.seed;
+    // behaviour is seeded with the *global* id, so a liar's tamper
+    // stream is identical whichever shard layout contains it
+    let byzantine = move |local: WorkerId| {
+        let global = lo + local;
+        byz.contains(&global)
+            .then(|| ByzantineBehavior::new(attack.clone(), seed, global))
+    };
+    Ok(match cfg.transport.as_str() {
+        "threaded" => Box::new(ThreadedTransport::spawn_with_compressor(
+            n_s,
+            engine.clone(),
+            byzantine,
+            None,
+            cfg.latency_us,
+        )),
+        "sim" => {
+            let mut sim = cfg.sim.clone();
+            if matches!(sim.latency, LatencyModel::Zero) && cfg.latency_us > 0 {
+                sim.latency = LatencyModel::Fixed { us: cfg.latency_us };
+            }
+            sim.seed = shard_seed(sim.seed, spec.shard);
+            let stragglers: Vec<(WorkerId, f64)> = sim
+                .stragglers
+                .iter()
+                .filter(|(w, _)| spec.contains(*w))
+                .map(|(w, m)| (spec.local(*w), *m))
+                .collect();
+            sim.stragglers = stragglers;
+            let crash_at: Vec<(WorkerId, u64)> = sim
+                .crash_at
+                .iter()
+                .filter(|(w, _)| spec.contains(*w))
+                .map(|(w, t)| (spec.local(*w), *t))
+                .collect();
+            sim.crash_at = crash_at;
+            Box::new(SimTransport::new(n_s, engine.clone(), byzantine, None, sim))
+        }
+        other => anyhow::bail!("unknown transport '{other}' (expected threaded|sim)"),
+    })
+}
+
+/// The fleet of shard cores behind the parameter server.
+pub struct ShardedTransport {
+    cores: Vec<ShardCore>,
+}
+
+impl ShardedTransport {
+    /// Build a uniform fleet from a plan (the CLI/config path).
+    pub fn build(
+        plan: &ShardPlan,
+        cfg: &ShardBuildConfig,
+        engine: &Arc<dyn GradientComputer>,
+    ) -> Result<ShardedTransport> {
+        let mut cores = Vec::with_capacity(plan.k());
+        for spec in &plan.specs {
+            let inner = build_inner(spec, cfg, engine)?;
+            let policy = FaultCheckPolicy::new(
+                cfg.policy.clone(),
+                spec.width(),
+                shard_seed(cfg.seed, spec.shard),
+            );
+            let core = ProtocolCore::new(
+                inner,
+                policy,
+                ProtocolConfig {
+                    f: spec.f_s,
+                    seed: shard_seed(cfg.seed, spec.shard),
+                    chunk_size: cfg.chunk_size,
+                    self_check: cfg.self_check,
+                    tol: cfg.tol,
+                    no_eliminate: cfg.no_eliminate,
+                    compressor: None,
+                },
+            );
+            cores.push(ShardCore::new(spec.clone(), core));
+        }
+        Ok(ShardedTransport { cores })
+    }
+
+    /// Assemble from pre-built cores (tests mix threaded and sim
+    /// shards here).
+    pub fn from_cores(cores: Vec<ShardCore>) -> ShardedTransport {
+        ShardedTransport { cores }
+    }
+
+    pub fn k(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Total worker endpoints across shards.
+    pub fn n(&self) -> usize {
+        self.cores.iter().map(|c| c.spec().width()).sum()
+    }
+
+    pub fn cores(&self) -> &[ShardCore] {
+        &self.cores
+    }
+
+    /// Per-shard active worker counts (0 for dead shards) — the
+    /// parameter server sizes each shard's chunk slice with these.
+    pub fn active_counts(&self) -> Vec<usize> {
+        self.cores.iter().map(|c| c.active_count()).collect()
+    }
+
+    /// Fan one round out: `slices[s]` is shard s's chunk slice (empty
+    /// for dead shards) and `offsets[s]` its first global chunk index.
+    /// Returns one entry per shard; a failed shard yields `Err` and is
+    /// marked dead (its chunks must be re-dispatched via `rescue`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fan_round(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        slices: Vec<Vec<Vec<usize>>>,
+        offsets: &[ChunkId],
+        chunk_size: usize,
+        dataset: &dyn Dataset,
+        engine: &dyn GradientComputer,
+        events: &mut EventLog,
+    ) -> Vec<Option<Result<ShardRound>>> {
+        debug_assert_eq!(slices.len(), self.cores.len());
+        self.cores
+            .iter_mut()
+            .zip(slices)
+            .zip(offsets)
+            .map(|((core, chunks), &off)| {
+                if !core.alive() || chunks.is_empty() {
+                    return None;
+                }
+                Some(core.run(t, theta, chunks, off, chunk_size, true, dataset, engine, events))
+            })
+            .collect()
+    }
+
+    /// Run orphaned chunks (from a dead shard) through one survivor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rescue(
+        &mut self,
+        shard: usize,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        chunks: Vec<Vec<usize>>,
+        chunk_offset: ChunkId,
+        chunk_size: usize,
+        dataset: &dyn Dataset,
+        engine: &dyn GradientComputer,
+        events: &mut EventLog,
+    ) -> Result<ShardRound> {
+        self.cores[shard].run(
+            t,
+            theta,
+            chunks,
+            chunk_offset,
+            chunk_size,
+            false,
+            dataset,
+            engine,
+            events,
+        )
+    }
+
+    /// Mark a shard dead, returning the global ids of the workers it
+    /// still considered active.
+    pub fn fail_shard(&mut self, shard: usize) -> Vec<WorkerId> {
+        self.cores[shard].fail()
+    }
+
+    /// Shut every shard down; returns (eliminated, crashed) global ids
+    /// across shards in shard order.
+    pub fn into_outcome(self) -> (Vec<WorkerId>, Vec<WorkerId>) {
+        let mut eliminated = Vec::new();
+        let mut crashed = Vec::new();
+        for core in self.cores {
+            let (e, c) = core.into_outcome();
+            eliminated.extend(e);
+            crashed.extend(c);
+        }
+        (eliminated, crashed)
+    }
+}

@@ -166,9 +166,97 @@ pub fn linf(a: &[f32], b: &[f32]) -> f32 {
         .fold(0.0, f32::max)
 }
 
+/// Reproducible fixed-shape pairwise-tree sum over an array of leaf
+/// slots, skipping absent (`None`) leaves.
+///
+/// The reduction tree is defined by leaf *position* alone: a range of
+/// `len > 1` slots splits at `len.next_power_of_two() / 2`, and an
+/// absent subtree is elided rather than added as zero. Two properties
+/// follow:
+///
+/// * **Determinism** — for a fixed slot layout the float-addition
+///   order is fixed, independent of which leaves are present.
+/// * **Partition invariance** — if the slot array is cut into
+///   contiguous shards whose width is a power of two, summing each
+///   shard with `tree_sum` and then combining the per-shard partials
+///   with `tree_sum` yields the *bit-identical* result of a single
+///   global `tree_sum`. This is what makes a sharded parameter-server
+///   round reproduce the single-master trajectory exactly (see
+///   `coordinator::shard`).
+///
+/// Returns `None` when every leaf is absent.
+pub fn tree_sum(leaves: &[Option<&[f32]>]) -> Option<Vec<f32>> {
+    match leaves.len() {
+        0 => None,
+        1 => leaves[0].map(|x| x.to_vec()),
+        n => {
+            let split = n.next_power_of_two() / 2;
+            let left = tree_sum(&leaves[..split]);
+            let right = tree_sum(&leaves[split..]);
+            match (left, right) {
+                (Some(mut a), Some(b)) => {
+                    axpy(1.0, &b, &mut a);
+                    Some(a)
+                }
+                (Some(a), None) => Some(a),
+                (None, b) => b,
+            }
+        }
+    }
+}
+
+/// Combine an already-computed partial sum into an accumulator the
+/// same way `tree_sum` combines two subtrees (`acc += partial`,
+/// creating `acc` from the partial if empty).
+pub fn tree_combine(acc: &mut Option<Vec<f32>>, partial: &[f32]) {
+    match acc {
+        Some(a) => axpy(1.0, partial, a),
+        None => *acc = Some(partial.to_vec()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tree_sum_skips_absent_and_matches_manual_tree() {
+        let a = [1.0f32, 2.0];
+        let b = [10.0f32, 20.0];
+        let c = [100.0f32, 200.0];
+        // 4 slots, slot 2 absent: ((a+b) + c) with c at slot 3
+        let leaves = [Some(&a[..]), Some(&b[..]), None, Some(&c[..])];
+        let s = tree_sum(&leaves).unwrap();
+        assert_eq!(s, vec![111.0, 222.0]);
+        assert!(tree_sum(&[None, None]).is_none());
+        assert!(tree_sum(&[]).is_none());
+    }
+
+    #[test]
+    fn tree_sum_is_partition_invariant_for_pow2_shards() {
+        // 16 leaves with adversarial magnitudes (so addition order
+        // matters), some absent; shard widths 4 and 8 must reproduce
+        // the global sum bit-for-bit
+        let vals: Vec<Vec<f32>> = (0..16)
+            .map(|i| vec![(i as f32 + 1.0) * 1e5, 1.0 / (i as f32 + 3.0), -7e-4 * i as f32])
+            .collect();
+        let leaves: Vec<Option<&[f32]>> = (0..16)
+            .map(|i| if i % 5 == 2 { None } else { Some(vals[i].as_slice()) })
+            .collect();
+        let global = tree_sum(&leaves).unwrap();
+        for width in [4usize, 8] {
+            let partials: Vec<Option<Vec<f32>>> =
+                leaves.chunks(width).map(tree_sum).collect();
+            let slots: Vec<Option<&[f32]>> =
+                partials.iter().map(|p| p.as_deref()).collect();
+            let combined = tree_sum(&slots).unwrap();
+            assert_eq!(
+                combined.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                global.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "width {width} not bit-identical"
+            );
+        }
+    }
 
     #[test]
     fn matmul_identity() {

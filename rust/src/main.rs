@@ -3,9 +3,9 @@
 //! ```text
 //! r3bft train       [--config file.toml] [--model linreg|mlp|transformer]
 //!                   [--engine native|xla] [--policy ...] [--q 0.2] [--n 8]
-//!                   [--f 2] [--attack sign_flip] [--p 1.0] [--steps 200]
-//!                   [--seed 42] [--csv out.csv]
-//! r3bft experiment  <e1..e10|all> [--full]
+//!                   [--f 2] [--shards 1] [--attack sign_flip] [--p 1.0]
+//!                   [--steps 200] [--seed 42] [--csv out.csv]
+//! r3bft experiment  <e1..e12|all> [--full]
 //! r3bft inspect     [--artifacts artifacts]
 //! r3bft help
 //! ```
@@ -52,7 +52,7 @@ fn print_help() {
 
 USAGE:
   r3bft train [opts]          run a training experiment
-  r3bft experiment <id>       reproduce a paper experiment (e1..e10, all); --full for long runs
+  r3bft experiment <id>       reproduce a paper experiment (e1..e12, all); --full for long runs
   r3bft inspect               list + compile the AOT artifacts
   r3bft help
 
@@ -64,6 +64,9 @@ TRAIN OPTIONS (defaults in parens):
   --q Q              audit probability for randomized/selective (0.2)
   --p-assumed P      assumed tamper prob for adaptive (0.5)
   --n N              workers (8)        --f F   Byzantine bound (2)
+  --shards K         partition workers into K shards, each with its own
+                     protocol core behind one parameter server (1);
+                     per-shard budgets must satisfy 2*f_s < n_s
   --transport T      threaded | sim (threaded); sim runs workers in
                      deterministic virtual time (no OS threads, n can
                      be in the thousands)
@@ -102,6 +105,7 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(t) = args.get("transport") {
         cfg.cluster.transport = t.to_string();
     }
+    cfg.cluster.shards = args.usize("shards", cfg.cluster.shards);
     if let Some(kind) = args.get("policy") {
         cfg.policy = PolicyKind::parse(
             kind,
@@ -177,11 +181,12 @@ fn run_train(args: &Args) -> Result<()> {
     let opts = MasterOptions { self_check, w_star, ..Default::default() };
 
     log::info!(
-        "train: model={} engine={} n={} f={} policy={:?} attack={:?} steps={}",
+        "train: model={} engine={} n={} f={} shards={} policy={:?} attack={:?} steps={}",
         cfg.train.model,
         cfg.train.engine,
         cfg.cluster.n,
         cfg.cluster.f,
+        cfg.cluster.shards,
         cfg.policy,
         cfg.attack.kind,
         cfg.train.steps

@@ -60,6 +60,55 @@ fn prop_assignment_extension() {
     });
 }
 
+/// Satellite invariant (sharded PR): for random (n, f, r) within
+/// bounds and a random eliminated subset, the proactive assignment
+/// gives every chunk exactly r *distinct* owners, never assigns an
+/// eliminated worker (neither proactively nor via reactive extension),
+/// and covers every sampled data point exactly once.
+#[test]
+fn prop_assignment_excludes_eliminated_and_covers_all() {
+    forall("assignment excludes eliminated", 300, |g| {
+        let n = g.usize_in(3, 48);
+        let f = g.usize_in(0, (n - 1) / 2); // 2f < n
+        let n_elim = g.usize_in(0, f);
+        let eliminated: Vec<usize> = g.distinct(n, n_elim);
+        let active: Vec<usize> = (0..n).filter(|w| !eliminated.contains(w)).collect();
+        let nact = active.len();
+        let r = g.usize_in(1, nact);
+        let cs = g.usize_in(1, 6);
+        let ids: Vec<usize> = (1000..1000 + nact * cs).collect();
+        let mut a = Assignment::new(&ids, &active, r);
+        a.validate().map_err(|e| e)?;
+        for (c, owners) in a.owners.iter().enumerate() {
+            prop_assert!(owners.len() == r, "chunk {c}: {} owners != r {r}", owners.len());
+            let mut u = owners.clone();
+            u.sort_unstable();
+            u.dedup();
+            prop_assert!(u.len() == r, "chunk {c} has duplicate owners");
+            for w in owners {
+                prop_assert!(!eliminated.contains(w), "eliminated worker {w} owns chunk {c}");
+            }
+        }
+        // coverage is total: the chunks partition the sampled ids
+        let mut all: Vec<usize> = a.chunks.iter().flatten().copied().collect();
+        all.sort_unstable();
+        prop_assert!(all == ids, "chunks do not cover the sampled points exactly once");
+        // reactive extension also never resurrects an eliminated worker
+        if r < nact {
+            let c = g.usize_in(0, a.nchunks() - 1);
+            let extra = g.usize_in(1, nact - r);
+            let mut rng = Pcg64::seeded(g.case_seed ^ 0xe11);
+            let added = a.extend(c, extra, &mut rng);
+            prop_assert!(added.len() == extra, "extend count");
+            for w in &added {
+                prop_assert!(!eliminated.contains(w), "extend chose eliminated worker {w}");
+            }
+            a.validate().map_err(|e| e)?;
+        }
+        Ok(())
+    });
+}
+
 /// Invariant 6: detection fires iff some copy is perturbed.
 #[test]
 fn prop_detection_iff_perturbed() {

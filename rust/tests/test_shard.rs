@@ -1,0 +1,292 @@
+//! Sharded multi-master integration tests, extending PR 1's
+//! cross-transport equivalence: at zero latency a K-shard run must be
+//! *bit-identical* to the K = 1 run for the same seed (deterministic
+//! policy under attack, or any policy fault-free), eliminations must
+//! stay shard-local but publish to the global roster, and a shard
+//! that loses every worker must have its chunks rescued by survivors.
+
+use std::sync::Arc;
+
+use r3bft::config::{
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig,
+};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::coordinator::{Event, SimConfig, TrainOutcome};
+use r3bft::linalg;
+
+use r3bft::data::LinRegDataset;
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    n: usize,
+    f: usize,
+    shards: usize,
+    byz: Vec<usize>,
+    policy: PolicyKind,
+    attack: AttackConfig,
+    steps: usize,
+    seed: u64,
+    sim: SimConfig,
+) -> (TrainOutcome, Vec<f32>) {
+    let mut cluster = ClusterConfig::new(n, f, seed);
+    cluster.byzantine_ids = byz;
+    cluster.transport = "sim".into();
+    cluster.shards = shards;
+    let cfg = ExperimentConfig {
+        name: format!("shard-test-{n}x{shards}"),
+        cluster,
+        policy,
+        attack,
+        train: TrainConfig { steps, lr: 0.5, ..Default::default() },
+    };
+    let d = 16usize;
+    let chunk = 8usize;
+    let ds = Arc::new(LinRegDataset::generate(2048, d, 0.0, seed));
+    let w_star = ds.w_star.clone();
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(seed);
+    let opts = MasterOptions { w_star: Some(w_star.clone()), sim, ..Default::default() };
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    (master.run().expect("train"), w_star)
+}
+
+fn losses(out: &TrainOutcome) -> Vec<u32> {
+    out.metrics.iterations.iter().map(|r| r.loss.to_bits()).collect()
+}
+
+/// Acceptance: K = 1 vs sharded runs are bit-identical at zero
+/// latency under the deterministic (always-audit) policy, liars and
+/// all — every tampered chunk is corrected to the true gradient before
+/// aggregation, so the parameter trajectory is partition-invariant.
+#[test]
+fn sharded_run_matches_single_master_bitwise_under_attack() {
+    // one liar per future shard so every layout keeps 2*f_s < n_s
+    let byz = vec![3usize, 19, 35, 51];
+    let attack = AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 3.0 };
+    let (k1, w_star) = run(
+        64,
+        4,
+        1,
+        byz.clone(),
+        PolicyKind::Deterministic,
+        attack.clone(),
+        120,
+        7,
+        SimConfig::default(),
+    );
+    for k in [2usize, 4] {
+        let (kk, _) = run(
+            64,
+            4,
+            k,
+            byz.clone(),
+            PolicyKind::Deterministic,
+            attack.clone(),
+            120,
+            7,
+            SimConfig::default(),
+        );
+        assert_eq!(k1.theta, kk.theta, "K={k}: theta diverged (not bit-identical)");
+        assert_eq!(losses(&k1), losses(&kk), "K={k}: loss trajectory diverged");
+        let mut e1 = k1.eliminated.clone();
+        let mut ek = kk.eliminated.clone();
+        e1.sort_unstable();
+        ek.sort_unstable();
+        assert_eq!(e1, ek, "K={k}: eliminated sets diverged");
+        assert_eq!(ek, byz, "K={k}: liars not all eliminated");
+        // sharded records carry the shard dimension
+        assert!(kk.metrics.iterations[0].shard_stats.len() == k, "K={k}");
+        assert!(k1.metrics.iterations[0].shard_stats.is_empty());
+    }
+    let dist = linalg::dist2(&k1.theta, &w_star);
+    assert!(dist < 1e-2, "deterministic sharded run failed to converge: {dist}");
+}
+
+/// Fault-free randomized policy: audit coins are shard-local, but
+/// honest chunk values are audit-independent, so the trajectory is
+/// still bit-identical across K.
+#[test]
+fn sharded_run_matches_single_master_bitwise_fault_free() {
+    let (k1, _) = run(
+        64,
+        4,
+        1,
+        vec![],
+        PolicyKind::Bernoulli { q: 0.3 },
+        AttackConfig::default(),
+        80,
+        11,
+        SimConfig::default(),
+    );
+    let (k4, _) = run(
+        64,
+        4,
+        4,
+        vec![],
+        PolicyKind::Bernoulli { q: 0.3 },
+        AttackConfig::default(),
+        80,
+        11,
+        SimConfig::default(),
+    );
+    assert_eq!(k1.theta, k4.theta, "fault-free trajectories diverged");
+    assert_eq!(losses(&k1), losses(&k4));
+}
+
+/// The ISSUE's acceptance shape at scale: n = 1024 workers in 8
+/// shards complete a run on one OS thread, eliminate the injected
+/// liars shard-locally, and match K = 1 bit-for-bit.
+#[test]
+fn sharded_1024_workers_8_shards_matches_k1() {
+    // one liar in each of the 8 shards (width 128)
+    let byz: Vec<usize> = (0..8).map(|s| s * 128 + 7).collect();
+    let attack = AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 2.0 };
+    let (k1, _) = run(
+        1024,
+        8,
+        1,
+        byz.clone(),
+        PolicyKind::Deterministic,
+        attack.clone(),
+        4,
+        13,
+        SimConfig::default(),
+    );
+    let (k8, _) = run(
+        1024,
+        8,
+        8,
+        byz.clone(),
+        PolicyKind::Deterministic,
+        attack,
+        4,
+        13,
+        SimConfig::default(),
+    );
+    assert_eq!(k1.theta, k8.theta, "n=1024 trajectories diverged");
+    assert_eq!(losses(&k1), losses(&k8));
+    let mut ek = k8.eliminated.clone();
+    ek.sort_unstable();
+    assert_eq!(ek, byz, "liars not eliminated shard-locally");
+    // every elimination was published to the global roster
+    for &w in &byz {
+        assert!(
+            k8.events.events.iter().any(|e| matches!(
+                e,
+                Event::RosterEliminated { worker, .. } if *worker == w
+            )),
+            "worker {w} elimination never published"
+        );
+    }
+}
+
+/// Shard-local identification: liars land in one shard's events with
+/// that shard's dimension; other shards stay clean.
+#[test]
+fn eliminations_are_shard_scoped() {
+    // both liars in shard 1 (workers 8..16 of 32, K = 4)
+    let byz = vec![9usize, 12];
+    let attack = AttackConfig { kind: AttackKind::Noise, p: 1.0, magnitude: 4.0 };
+    let (out, w_star) = run(
+        32,
+        4,
+        4,
+        byz.clone(),
+        PolicyKind::Bernoulli { q: 0.9 },
+        attack,
+        120,
+        17,
+        SimConfig::default(),
+    );
+    let mut ek = out.eliminated.clone();
+    ek.sort_unstable();
+    assert_eq!(ek, byz, "eliminated: {:?}", out.eliminated);
+    // identification events carry shard 1's dimension
+    for &w in &byz {
+        let shard_hit = out.events.events.iter().any(|e| matches!(
+            e,
+            Event::Shard { shard: 1, inner } if matches!(
+                inner.as_ref(),
+                Event::Eliminated { worker, .. } if *worker == w
+            )
+        ));
+        assert!(shard_hit, "worker {w} not eliminated through shard 1");
+    }
+    // no other shard ever identified anyone
+    for s in [0usize, 2, 3] {
+        assert!(
+            !out
+                .events
+                .shard_events(s)
+                .iter()
+                .any(|e| matches!(e, Event::Identified { .. })),
+            "shard {s} identified a worker"
+        );
+    }
+    let dist = linalg::dist2(&out.theta, &w_star);
+    assert!(dist < 1e-2, "dist={dist}");
+}
+
+/// Whole-shard crash: every worker of shard 2 crash-stops at iteration
+/// 3; the shard is declared dead, its chunks are reassigned to
+/// survivors, and training still converges.
+#[test]
+fn dead_shard_chunks_are_rescued_by_survivors() {
+    // n = 16, K = 4 => shard 2 owns workers 8..12
+    let sim = SimConfig {
+        crash_at: (8..12).map(|w| (w, 3u64)).collect(),
+        ..Default::default()
+    };
+    let (out, w_star) = run(
+        16,
+        0,
+        4,
+        vec![],
+        PolicyKind::None,
+        AttackConfig::default(),
+        120,
+        19,
+        sim,
+    );
+    assert_eq!(out.events.dead_shards(), vec![2]);
+    let mut crashed = out.crashed.clone();
+    crashed.sort_unstable();
+    assert_eq!(crashed, (8..12).collect::<Vec<usize>>());
+    assert!(out.eliminated.is_empty(), "a crash is not an identification");
+    // the rescued iteration still used one gradient per surviving chunk
+    // and the run converges on the remaining 12 workers
+    let dist = linalg::dist2(&out.theta, &w_star);
+    assert!(dist < 1e-2, "rescue scenario failed to converge: {dist}");
+    assert_eq!(out.metrics.iterations.len(), 120);
+    assert!(out.theta.iter().all(|v| v.is_finite()));
+}
+
+/// Build-time validation: shard budgets that violate 2 f_s < n_s are
+/// rejected before any transport spins up.
+#[test]
+fn sharded_master_rejects_overloaded_plan() {
+    let mut cluster = ClusterConfig::new(16, 4, 1);
+    // all four liars in shard 0 (width 4): f_0 = 4 needs 2*4 < 4 — no
+    cluster.byzantine_ids = vec![0, 1, 2, 3];
+    cluster.transport = "sim".into();
+    cluster.shards = 4;
+    let cfg = ExperimentConfig {
+        name: "overloaded".into(),
+        cluster,
+        policy: PolicyKind::Deterministic,
+        attack: AttackConfig::default(),
+        train: TrainConfig { steps: 1, lr: 0.1, ..Default::default() },
+    };
+    let d = 8usize;
+    let ds = Arc::new(LinRegDataset::generate(256, d, 0.0, 1));
+    let spec = ModelSpec::LinReg { d, batch: 4 };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(1);
+    let err = Master::new(cfg, MasterOptions::default(), engine, ds, theta0, 4)
+        .err()
+        .expect("overloaded shard plan must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("2*f_s < n_s"), "unexpected error: {msg}");
+}
