@@ -1,10 +1,12 @@
 //! Transport-layer dispatch overhead: SimTransport vs
-//! ThreadedTransport across cluster sizes, plus the sharded
-//! parameter-server sweep (n × K) written to `BENCH_shard.json`.
+//! ThreadedTransport across cluster sizes, the sharded
+//! parameter-server sweep (n × K) written to `BENCH_shard.json`, and
+//! the quorum-gather straggler sweep written to `BENCH_quorum.json`
+//! (virtual round time, All vs Quorum, one 50× straggler).
 //!
 //! The workload is deliberately tiny (linreg d = 4, chunk = 2) so the
 //! numbers are dominated by per-iteration dispatch — assignment,
-//! scatter/gather, ingest, partial-aggregate fusion — not by gradient
+//! submit/poll, ingest, partial-aggregate fusion — not by gradient
 //! math. The threaded transport is capped at n = 256 (one OS thread
 //! per worker); the simulator sweeps to n = 1024 on a single thread,
 //! which is the point of having it.
@@ -12,8 +14,11 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use r3bft::config::{AttackConfig, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig};
+use r3bft::config::{
+    AttackConfig, ClusterConfig, ExperimentConfig, GatherPolicy, PolicyKind, TrainConfig,
+};
 use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::coordinator::{LatencyModel, SimConfig};
 use r3bft::data::LinRegDataset;
 use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
 use r3bft::util::bench::{black_box, Table};
@@ -47,6 +52,45 @@ fn run_once(n: usize, shards: usize, transport: &str, steps: usize) -> f64 {
     let dt = t0.elapsed().as_secs_f64();
     black_box(out);
     dt / steps as f64
+}
+
+/// One straggler-scenario run: fixed 100µs base latency, one 50×
+/// straggler (the last worker), fault-free, policy=none. Returns the
+/// mean **virtual** round time in µs — the number a quorum gather is
+/// supposed to cut from straggler-dominated (~5000µs) to
+/// quorum-dominated (~100µs + one reassignment wave).
+fn run_straggler(n: usize, gather: GatherPolicy, steps: usize) -> f64 {
+    let d = 4usize;
+    let chunk = 2usize;
+    let mut cluster = ClusterConfig::new(n, 1, 42);
+    cluster.byzantine_ids = vec![];
+    cluster.f = 0;
+    cluster.transport = "sim".into();
+    cluster.gather = gather;
+    let cfg = ExperimentConfig {
+        name: format!("bench-straggler-{n}"),
+        cluster,
+        policy: PolicyKind::None,
+        attack: AttackConfig::default(),
+        train: TrainConfig { steps, lr: 0.1, ..Default::default() },
+    };
+    let opts = MasterOptions {
+        sim: SimConfig {
+            latency: LatencyModel::Fixed { us: 100 },
+            stragglers: vec![(n - 1, 50.0)],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let ds = Arc::new(LinRegDataset::generate(4096, d, 0.0, 42));
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(42);
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    let out = master.run().expect("run");
+    let us = out.metrics.mean_round_ns() / 1e3;
+    black_box(out);
+    us
 }
 
 fn main() {
@@ -104,5 +148,51 @@ fn main() {
     match std::fs::write("BENCH_shard.json", &json) {
         Ok(()) => println!("\nwrote BENCH_shard.json"),
         Err(e) => eprintln!("\nfailed to write BENCH_shard.json: {e}"),
+    }
+
+    // ---- quorum-gather straggler sweep: All vs Quorum{n-1} -------------
+    println!("\n#### quorum gather under one 50x straggler (sim, fixed 100us latency)");
+    let mut table = Table::new(&["n", "all us/round", "quorum us/round", "speedup"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in &[64usize, 256, 1024] {
+        let steps = if n >= 1024 { 5 } else { 10 };
+        let all = run_straggler(n, GatherPolicy::All, steps);
+        let quorum = run_straggler(n, GatherPolicy::Quorum { k: n - 1 }, steps);
+        let speedup = all / quorum.max(1e-9);
+        table.row(&[
+            n.to_string(),
+            format!("{all:.1}"),
+            format!("{quorum:.1}"),
+            format!("{speedup:.1}x"),
+        ]);
+        let mut obj = BTreeMap::new();
+        obj.insert("n".to_string(), Json::Num(n as f64));
+        obj.insert("all_us_per_round".to_string(), Json::Num(all));
+        obj.insert("quorum_us_per_round".to_string(), Json::Num(quorum));
+        obj.insert("speedup".to_string(), Json::Num(speedup));
+        rows.push(Json::Obj(obj));
+    }
+    table.print("quorum sweep (virtual round time)");
+    println!(
+        "\nnote: round time is virtual (the simulator's clock): All waits for \
+         the 5000us straggler every round; Quorum{{n-1}} proceeds at 100us and \
+         pays one ~100us reassignment wave for the straggler's chunks."
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("quorum_gather".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(
+            "linreg d=4 chunk=2 policy=none transport=sim latency=fixed:100us \
+             stragglers=[(n-1,50x)] gather=all|quorum:n-1"
+                .to_string(),
+        ),
+    );
+    doc.insert("results".to_string(), Json::Arr(rows));
+    let json = Json::Obj(doc).to_string();
+    match std::fs::write("BENCH_quorum.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_quorum.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_quorum.json: {e}"),
     }
 }

@@ -106,6 +106,116 @@ impl Default for AttackConfig {
     }
 }
 
+/// Worker-transport execution model, parsed once from config/CLI and
+/// carried as a proper enum everywhere downstream (the master and the
+/// shard builder match on it instead of re-validating strings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// One OS thread per worker over mpsc channels.
+    Threaded,
+    /// Deterministic virtual-time discrete-event simulation (no OS
+    /// threads; scales to thousands of workers).
+    Sim,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "threaded" => TransportKind::Threaded,
+            "sim" => TransportKind::Sim,
+            other => bail!("unknown transport '{other}' (expected threaded|sim)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Threaded => "threaded",
+            TransportKind::Sim => "sim",
+        }
+    }
+}
+
+impl From<&str> for TransportKind {
+    /// Panicking conversion for literal-heavy test/bench code
+    /// (`cluster.transport = "sim".into()`). Config and CLI paths go
+    /// through [`TransportKind::parse`], which reports errors instead.
+    fn from(s: &str) -> TransportKind {
+        TransportKind::parse(s).expect("invalid transport kind literal")
+    }
+}
+
+/// When the proactive gather may stop waiting for workers. Detection
+/// and reactive gathers always wait for every requested copy — only
+/// the initial proactive wave is quorum-relaxed (chunks owned solely
+/// by abandoned stragglers are reassigned exactly like crashed
+/// workers' chunks, so exactness under 2f < n is untouched).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GatherPolicy {
+    /// Wait for every scattered-to worker (the paper's synchronous
+    /// model; bit-identical to the pre-quorum protocol).
+    All,
+    /// Proceed once k workers have responded, where k counts
+    /// responders at full cluster strength: as crashes/eliminations
+    /// shrink the cluster, the allowed-missing margin n - k is what
+    /// stays fixed. Must be at least 2f+1 (the identification quorum;
+    /// enforced by validate, and floored at runtime with the current
+    /// f_t). Sharded runs scale k to each shard's width
+    /// (ceil(k * n_s / n)).
+    Quorum { k: usize },
+    /// Proceed once `us` microseconds have elapsed since the wave was
+    /// submitted (virtual time under sim, wall-clock under threaded),
+    /// but never with zero responses.
+    Deadline { us: u64 },
+}
+
+impl GatherPolicy {
+    /// Parse "all" | "quorum:K" (absolute) | "quorum:F" with F in
+    /// (0, 1] (fraction of n, rounded up) | "deadline:US".
+    pub fn parse(s: &str, n: usize) -> Result<GatherPolicy> {
+        if s == "all" {
+            return Ok(GatherPolicy::All);
+        }
+        if let Some(v) = s.strip_prefix("quorum:") {
+            // "quorum:12" is an absolute count; "quorum:0.8" (any value
+            // with a decimal point, in (0, 1]) is a fraction of n
+            let k = if v.contains('.') {
+                let x: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad quorum fraction '{v}' in gather policy"))?;
+                if x <= 0.0 || x > 1.0 {
+                    bail!("quorum fraction must be in (0, 1], got '{v}'");
+                }
+                (x * n as f64).ceil() as usize
+            } else {
+                v.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad quorum count '{v}' in gather policy"))?
+            };
+            if k == 0 {
+                bail!("quorum must be positive, got '{v}'");
+            }
+            return Ok(GatherPolicy::Quorum { k });
+        }
+        if let Some(v) = s.strip_prefix("deadline:") {
+            let us: u64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad deadline value '{v}' in gather policy (µs)"))?;
+            if us == 0 {
+                bail!("deadline must be positive (µs)");
+            }
+            return Ok(GatherPolicy::Deadline { us });
+        }
+        bail!("unknown gather policy '{s}' (expected all | quorum:K | quorum:0.F | deadline:US)")
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            GatherPolicy::All => "all".into(),
+            GatherPolicy::Quorum { k } => format!("quorum:{k}"),
+            GatherPolicy::Deadline { us } => format!("deadline:{us}"),
+        }
+    }
+}
+
 /// Cluster topology.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -117,10 +227,10 @@ pub struct ClusterConfig {
     pub byzantine_ids: Vec<usize>,
     /// Simulated per-message latency in microseconds (0 = off).
     pub latency_us: u64,
-    /// Execution model: "threaded" (one OS thread per worker) or "sim"
-    /// (deterministic virtual-time simulation, scales to thousands of
-    /// workers). See `coordinator::transport`.
-    pub transport: String,
+    /// Execution model. See `coordinator::transport`.
+    pub transport: TransportKind,
+    /// Proactive gather policy (`cluster.gather` / `--gather`).
+    pub gather: GatherPolicy,
     /// Shard count K: 1 = single master; K > 1 partitions the workers
     /// into K contiguous shards, each with its own protocol core,
     /// behind one parameter server. See `coordinator::shard`.
@@ -137,7 +247,8 @@ impl ClusterConfig {
             f,
             byzantine_ids: (0..f).collect(),
             latency_us: 0,
-            transport: "threaded".into(),
+            transport: TransportKind::Threaded,
+            gather: GatherPolicy::All,
             shards: 1,
             seed,
         }
@@ -147,8 +258,25 @@ impl ClusterConfig {
         if self.n == 0 {
             bail!("n must be positive");
         }
-        if self.transport != "threaded" && self.transport != "sim" {
-            bail!("unknown transport '{}' (expected threaded|sim)", self.transport);
+        match self.gather {
+            GatherPolicy::All => {}
+            GatherPolicy::Quorum { k } => {
+                if k == 0 || k > self.n {
+                    bail!("gather quorum k={k} out of range 1..={}", self.n);
+                }
+                if k < 2 * self.f + 1 {
+                    bail!(
+                        "gather quorum k={k} below the identification quorum 2f+1={}: \
+                         the reactive phase could not assemble a majority vote",
+                        2 * self.f + 1
+                    );
+                }
+            }
+            GatherPolicy::Deadline { us } => {
+                if us == 0 {
+                    bail!("gather deadline must be positive (µs)");
+                }
+            }
         }
         if self.shards == 0 {
             bail!("cluster.shards must be at least 1");
@@ -235,7 +363,8 @@ impl ExperimentConfig {
         let seed = doc.usize_or("cluster.seed", 42) as u64;
         let mut cluster = ClusterConfig::new(n, f, seed);
         cluster.latency_us = doc.usize_or("cluster.latency_us", 0) as u64;
-        cluster.transport = doc.str_or("cluster.transport", "threaded");
+        cluster.transport = TransportKind::parse(&doc.str_or("cluster.transport", "threaded"))?;
+        cluster.gather = GatherPolicy::parse(&doc.str_or("cluster.gather", "all"), n)?;
         cluster.shards = doc.usize_or("cluster.shards", 1);
         if let Some(toml::TomlValue::Arr(ids)) = doc.get("cluster.byzantine_ids") {
             cluster.byzantine_ids = ids
@@ -294,21 +423,59 @@ mod tests {
     }
 
     #[test]
-    fn transport_kind_validated() {
+    fn transport_kind_parsed_once() {
         let mut c = ClusterConfig::new(5, 2, 0);
-        assert_eq!(c.transport, "threaded");
+        assert_eq!(c.transport, TransportKind::Threaded);
         c.transport = "sim".into();
+        assert_eq!(c.transport, TransportKind::Sim);
         assert!(c.validate().is_ok());
-        c.transport = "carrier-pigeon".into();
-        assert!(c.validate().is_err());
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert_eq!(TransportKind::Sim.name(), "sim");
+        assert_eq!(TransportKind::Threaded.name(), "threaded");
     }
 
     #[test]
     fn transport_from_doc() {
         let doc = TomlDoc::parse("[cluster]\nn = 5\nf = 1\ntransport = \"sim\"\n").unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
-        assert_eq!(cfg.cluster.transport, "sim");
+        assert_eq!(cfg.cluster.transport, TransportKind::Sim);
         assert_eq!(cfg.cluster.shards, 1);
+        assert!(TomlDoc::parse("[cluster]\nn = 5\nf = 1\ntransport = \"bogus\"\n")
+            .ok()
+            .and_then(|d| ExperimentConfig::from_doc(&d).ok())
+            .is_none());
+    }
+
+    #[test]
+    fn gather_policy_parse_and_validate() {
+        assert_eq!(GatherPolicy::parse("all", 10).unwrap(), GatherPolicy::All);
+        // absolute count
+        assert_eq!(GatherPolicy::parse("quorum:7", 10).unwrap(), GatherPolicy::Quorum { k: 7 });
+        // fraction of n, rounded up: ceil(0.8 * 10) = 8
+        assert_eq!(GatherPolicy::parse("quorum:0.8", 10).unwrap(), GatherPolicy::Quorum { k: 8 });
+        // quorum:1.0 is the full cluster (fraction), quorum:1 is k = 1
+        assert_eq!(GatherPolicy::parse("quorum:1.0", 10).unwrap(), GatherPolicy::Quorum { k: 10 });
+        assert_eq!(GatherPolicy::parse("quorum:1", 10).unwrap(), GatherPolicy::Quorum { k: 1 });
+        assert_eq!(
+            GatherPolicy::parse("deadline:500", 10).unwrap(),
+            GatherPolicy::Deadline { us: 500 }
+        );
+        assert!(GatherPolicy::parse("quorum:0", 10).is_err());
+        assert!(GatherPolicy::parse("deadline:0", 10).is_err());
+        assert!(GatherPolicy::parse("bogus", 10).is_err());
+
+        let mut c = ClusterConfig::new(8, 2, 0);
+        c.gather = GatherPolicy::Quorum { k: 9 }; // k > n
+        assert!(c.validate().is_err());
+        c.gather = GatherPolicy::Quorum { k: 8 };
+        assert!(c.validate().is_ok());
+
+        // config file path
+        let doc =
+            TomlDoc::parse("[cluster]\nn = 16\nf = 2\ngather = \"quorum:0.75\"\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster.gather, GatherPolicy::Quorum { k: 12 });
+        assert_eq!(cfg.cluster.gather.describe(), "quorum:12");
     }
 
     #[test]

@@ -20,6 +20,11 @@ pub enum Event {
     /// the active set without being *identified* — crashing is not
     /// lying, so it does not consume the Byzantine budget.
     WorkerCrashed { iter: u64, worker: WorkerId },
+    /// The proactive quorum/deadline gather stopped waiting for this
+    /// worker: its chunks were reassigned like a crashed worker's and
+    /// its late delivery is drained, but it rejoins next round. The
+    /// raw material for latency-aware audit policies.
+    StragglerAbandoned { iter: u64, worker: WorkerId },
     /// A faulty gradient slipped into the update (oracle knowledge —
     /// only the simulator can emit this, never the real master).
     OracleFaultyUpdate { iter: u64 },
@@ -108,6 +113,11 @@ impl EventLog {
 
     pub fn crashes(&self) -> usize {
         self.count(|e| matches!(e, Event::WorkerCrashed { .. }))
+    }
+
+    /// Straggler abandonments (a worker may appear once per round).
+    pub fn stragglers(&self) -> usize {
+        self.count(|e| matches!(e, Event::StragglerAbandoned { .. }))
     }
 
     pub fn dead_shards(&self) -> Vec<usize> {

@@ -24,7 +24,7 @@ use super::protocol::{ProtocolConfig, ProtocolCore};
 use super::shard::{ParameterServer, ShardPlan, ShardedTransport};
 use super::transport::{LatencyModel, SimTransport, ThreadedTransport, Transport};
 use super::{WorkerId, MASTER_SENTINEL};
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, TransportKind};
 use crate::data::Dataset;
 use crate::grad::GradientComputer;
 use crate::util::stats;
@@ -136,15 +136,15 @@ impl Master {
                 .contains(&i)
                 .then(|| ByzantineBehavior::new(attack.clone(), seed, i))
         };
-        let transport: Box<dyn Transport> = match cfg.cluster.transport.as_str() {
-            "threaded" => Box::new(ThreadedTransport::spawn_with_compressor(
+        let transport: Box<dyn Transport> = match cfg.cluster.transport {
+            TransportKind::Threaded => Box::new(ThreadedTransport::spawn_with_compressor(
                 n,
                 engine.clone(),
                 byzantine,
                 opts.compressor.clone(),
                 cfg.cluster.latency_us,
             )),
-            "sim" => {
+            TransportKind::Sim => {
                 let mut sim_cfg = opts.sim.clone();
                 // convenience: a cluster-level fixed latency applies to
                 // the simulator too unless a distribution is configured
@@ -159,7 +159,6 @@ impl Master {
                     sim_cfg,
                 ))
             }
-            other => anyhow::bail!("unknown transport '{other}' (expected threaded|sim)"),
         };
         Self::with_transport(cfg, opts, engine, dataset, init_theta, chunk_size, transport)
     }
@@ -187,7 +186,9 @@ impl Master {
             &cfg.cluster.byzantine_ids,
         )?;
         let build = super::shard::transport::ShardBuildConfig {
-            transport: cfg.cluster.transport.clone(),
+            transport: cfg.cluster.transport,
+            gather: cfg.cluster.gather,
+            cluster_n: cfg.cluster.n,
             seed: cfg.cluster.seed,
             attack: cfg.attack.clone(),
             policy: cfg.policy.clone(),
@@ -264,6 +265,7 @@ impl Master {
                 tol: opts.tol,
                 no_eliminate: opts.no_eliminate,
                 compressor: opts.compressor.clone(),
+                gather: cfg.cluster.gather,
             },
         );
         let d = engine.param_dim();
@@ -403,6 +405,8 @@ impl Master {
                 .as_ref()
                 .map(|w| crate::linalg::dist2(&self.theta, w)),
             wall_ns: t0.elapsed().as_nanos() as u64,
+            round_ns: out.round_ns,
+            stragglers: out.stragglers_now.len(),
             shard_stats: Vec::new(),
         })
     }

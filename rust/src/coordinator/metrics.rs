@@ -19,6 +19,11 @@ pub struct ShardStat {
     pub faults_detected: usize,
     pub identified: usize,
     pub crashed: usize,
+    /// Workers the shard's proactive gather abandoned this round.
+    pub stragglers: usize,
+    /// Shard round duration on the shard transport's clock (virtual
+    /// under sim, wall-clock under threaded).
+    pub round_ns: u64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -44,6 +49,18 @@ pub struct IterationRecord {
     /// Distance to the planted optimum (linreg workloads only).
     pub dist_to_opt: Option<f32>,
     pub wall_ns: u64,
+    /// Round duration on the transport clock: virtual time under sim,
+    /// wall-clock under threaded. This is the number the quorum-gather
+    /// speedup shows up in (`wall_ns` measures the master process,
+    /// which under sim excludes simulated latency entirely). Sharded
+    /// runs report max over the shard rounds plus any serial rescue
+    /// rounds — exact for sim shards (independent virtual clocks); an
+    /// upper bound for threaded shards, whose wall-clocks also tick
+    /// while earlier shards' completions run on the caller's thread.
+    pub round_ns: u64,
+    /// Workers the proactive gather abandoned this iteration (they
+    /// rejoin next round; see `Event::StragglerAbandoned`).
+    pub stragglers: usize,
     /// Per-shard breakdown (empty for single-master runs).
     pub shard_stats: Vec<ShardStat>,
 }
@@ -116,14 +133,24 @@ impl TrainMetrics {
         self.iterations.iter().map(|r| r.loss).collect()
     }
 
-    /// CSV dump for EXPERIMENTS.md plots.
+    /// Mean per-iteration round duration on the transport clock (ns).
+    pub fn mean_round_ns(&self) -> f64 {
+        if self.iterations.is_empty() {
+            return 0.0;
+        }
+        self.iterations.iter().map(|r| r.round_ns as f64).sum::<f64>()
+            / self.iterations.len() as f64
+    }
+
+    /// CSV dump for EXPERIMENTS.md plots. `round_time` is the round
+    /// duration in ns on the transport clock (virtual under sim).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,faulty_update,dist_to_opt,shards\n",
+            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,stragglers,faulty_update,dist_to_opt,round_time,shards\n",
         );
         for r in &self.iterations {
             s.push_str(&format!(
-                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{},{}\n",
+                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{},{},{},{}\n",
                 r.iter,
                 r.loss,
                 r.efficiency(),
@@ -135,8 +162,10 @@ impl TrainMetrics {
                 r.faults_detected,
                 r.identified,
                 r.crashed,
+                r.stragglers,
                 r.oracle_faulty_update as u8,
                 r.dist_to_opt.map(|d| d.to_string()).unwrap_or_default(),
+                r.round_ns,
                 r.shard_stats.len(), // 0 = single-master run
             ));
         }
@@ -183,6 +212,23 @@ mod tests {
         m.push(rec(1, 2, false));
         let csv = m.to_csv();
         assert!(csv.starts_with("iter,loss"));
+        assert!(csv.lines().next().unwrap().contains("round_time"));
         assert_eq!(csv.lines().count(), 2);
+        // every row has as many cells as the header
+        let cols = csv.lines().next().unwrap().split(',').count();
+        assert_eq!(csv.lines().nth(1).unwrap().split(',').count(), cols);
+    }
+
+    #[test]
+    fn mean_round_time_over_iterations() {
+        let mut m = TrainMetrics::default();
+        assert_eq!(m.mean_round_ns(), 0.0);
+        let mut a = rec(1, 1, false);
+        a.round_ns = 1_000;
+        let mut b = rec(1, 1, false);
+        b.round_ns = 3_000;
+        m.push(a);
+        m.push(b);
+        assert!((m.mean_round_ns() - 2_000.0).abs() < 1e-9);
     }
 }

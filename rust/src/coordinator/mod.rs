@@ -23,18 +23,29 @@
 //! 3. **Protocol core** — [`protocol::ProtocolCore`]: one iteration as
 //!    explicit phase transitions (proactive → detection → reactive,
 //!    [`protocol::Phase`]) over a [`protocol::RoundState`] that owns
-//!    the single symbol-ingest path. Uses [`assignment`] for chunk
-//!    placement, [`codes`] for replica comparison, [`identify`] for
-//!    majority voting, and eliminates identified liars.
-//! 4. **Transport** — [`transport::Transport`]: a scatter/gather
-//!    channel to the workers. [`transport::ThreadedTransport`] is the
-//!    real one-OS-thread-per-worker pool;
-//!    [`transport::SimTransport`] runs thousands of simulated workers
-//!    deterministically in virtual time with latency/straggler/crash
-//!    models. Both drive the same [`worker::WorkerState`] compute core
-//!    (honest engines are deterministic, so the transports are
-//!    bit-identical for the same seed at zero latency). Shards may mix
-//!    transport kinds.
+//!    the single symbol-ingest path. The core is completion-driven:
+//!    each phase submits a wave and reacts to deliveries as they
+//!    arrive; the cluster's `GatherPolicy` (all | quorum:k |
+//!    deadline) decides when the initial proactive wave may stop
+//!    waiting, with chunks owned only by abandoned stragglers
+//!    reassigned like crashed workers' chunks. Uses [`assignment`]
+//!    for chunk placement, [`codes`] for replica comparison,
+//!    [`identify`] for majority voting, and eliminates identified
+//!    liars. `begin_round`/`complete_round` split the round so the
+//!    sharded layer can put every shard's wave in flight before
+//!    waiting on any.
+//! 4. **Transport** — [`transport::Transport`]: a completion-driven
+//!    submit/poll channel to the workers. `submit` queues a wave
+//!    without waiting; `poll` returns timestamped
+//!    [`transport::Delivery`]s (responses and in-band crash-stop
+//!    failures) as they arrive — virtual time under
+//!    [`transport::SimTransport`] (thousands of simulated workers,
+//!    latency/straggler/crash models, zero OS threads), wall-clock
+//!    under the real one-OS-thread-per-worker
+//!    [`transport::ThreadedTransport`]. Both drive the same
+//!    [`worker::WorkerState`] compute core (honest engines are
+//!    deterministic, so the transports are bit-identical for the same
+//!    seed at zero latency). Shards may mix transport kinds.
 //!
 //! ## Per-iteration protocol (unifying §4.1 and §4.2 of the paper)
 //!
@@ -93,4 +104,6 @@ pub use events::{Event, EventLog};
 pub use master::{Master, TrainOutcome};
 pub use policy::FaultCheckPolicy;
 pub use shard::{ParameterServer, ShardCore, ShardPlan, ShardedTransport};
-pub use transport::{LatencyModel, SimConfig, SimTransport, ThreadedTransport, Transport};
+pub use transport::{
+    Delivery, LatencyModel, SimConfig, SimTransport, ThreadedTransport, Transport,
+};

@@ -8,15 +8,45 @@
 //! [`Phase`] names the paper's three wire phases:
 //!
 //! * [`Phase::Proactive`] — sample m points, assign chunks with
-//!   replication r (f_t+1 deterministic / 1 otherwise), scatter,
-//!   gather, ingest. Chunks orphaned by crashed workers are reassigned
-//!   until every chunk has at least one copy.
+//!   replication r (f_t+1 deterministic / 1 otherwise), submit the
+//!   wave, collect deliveries, ingest. Chunks orphaned by crashed
+//!   workers are reassigned until every chunk has at least one copy.
 //! * [`Phase::Detection`] — if this iteration is audited, top every
 //!   audited chunk up to f_t+1 distinct copies (self-check mode
 //!   instead recomputes on the master) and compare copies.
 //! * [`Phase::Reactive`] — for chunks whose copies disagree, top up to
 //!   2f_t+1 distinct owners, majority-vote the true value, identify
 //!   the liars, eliminate them (κ_t += …, f_t shrinks).
+//!
+//! ## Completion-driven waves
+//!
+//! The core is no longer phase-blocked on the slowest worker: each
+//! phase submits a *wave* of task bundles and then reacts to
+//! [`super::transport::Delivery`]s as they arrive ([`ProtocolCore`]'s
+//! `wait_wave`). How long the **initial proactive wave** keeps waiting
+//! is the cluster's [`GatherPolicy`]:
+//!
+//! * [`GatherPolicy::All`] — wait for every worker (the paper's
+//!   synchronous model; bit-identical to the pre-quorum protocol);
+//! * [`GatherPolicy::Quorum`] — stop once k workers responded;
+//! * [`GatherPolicy::Deadline`] — stop once the deadline passed (but
+//!   never empty-handed).
+//!
+//! Workers the wave stops waiting for are *abandoned for the round*:
+//! retired from the round's assignment pool so chunks they alone own
+//! are reassigned exactly like a crashed worker's (exactness under
+//! 2f < n is untouched), while the workers themselves rejoin at the
+//! next round. Their late deliveries — and any delivery from a
+//! previous phase — are drained and discarded, never ingested, so no
+//! symbol leaks across phases. Detection and reactive waves always
+//! wait for every requested copy, and crash-stops arrive in-band as
+//! [`super::transport::Delivery::Failed`].
+//!
+//! A round can also be split across [`ProtocolCore::begin_round`] /
+//! [`ProtocolCore::complete_round`]: `begin_round` submits the
+//! proactive wave and returns immediately, so a caller driving many
+//! cores (the sharded parameter server) can put every shard's wave in
+//! flight before waiting on any of them.
 //!
 //! Every symbol, regardless of phase, enters the round through the
 //! single ingest path [`RoundState::ingest`] — the three copy-pasted
@@ -36,14 +66,22 @@ use super::compress::Compressor;
 use super::events::{Event, EventLog};
 use super::identify::majority_vote;
 use super::policy::{AuditDecision, FaultCheckPolicy};
-use super::transport::{TaskBundle, Transport};
+use super::transport::{Delivery, TaskBundle, Transport};
 use super::worker::{Response, Symbol};
 use super::{ChunkId, WorkerId, MASTER_SENTINEL};
+use crate::config::GatherPolicy;
 use crate::data::Dataset;
 use crate::grad::GradientComputer;
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 use crate::Result;
+
+/// Stream id of the data-point sampling RNG. The sharded
+/// [`super::shard::ParameterServer`] samples from the *same* stream to
+/// reproduce the single-master data assignment exactly — both
+/// constructors must reference this constant, or the K = 1 vs K > 1
+/// bit-identity contract silently breaks.
+pub const SAMPLE_STREAM: u64 = 0xaa57e2;
 
 /// The protocol's wire phases (the `phase` field of every request).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -165,6 +203,9 @@ pub struct ProtocolConfig {
     /// §2.1/§5 compressed symbols: the master's self-check copies are
     /// encoded with the same compressor the workers use.
     pub compressor: Option<Arc<dyn Compressor>>,
+    /// When the initial proactive wave may stop waiting (detection and
+    /// reactive waves always wait for every requested copy).
+    pub gather: GatherPolicy,
 }
 
 /// What one round did (the master turns this into an
@@ -178,6 +219,26 @@ pub struct RoundOutcome {
     pub crashed_now: Vec<WorkerId>,
     /// Data points the master recomputed itself (self-check audits).
     pub master_computed_points: u64,
+    /// Workers the proactive gather stopped waiting for this round
+    /// (they rejoin next round; a straggle is not a crash).
+    pub stragglers_now: Vec<WorkerId>,
+    /// Duration of the round on the transport clock: virtual time
+    /// under sim, wall-clock under threaded.
+    pub round_ns: u64,
+}
+
+/// A proactive wave in flight between [`ProtocolCore::begin_round`]
+/// and [`ProtocolCore::complete_round`].
+struct PendingRound {
+    round: RoundState,
+    /// Workers the wave submitted to and is still owed a delivery by.
+    outstanding: Vec<WorkerId>,
+    /// Transport clock at submit (wave deadlines and `round_ns` are
+    /// measured from here).
+    start_ns: u64,
+    f_t: usize,
+    /// Data points sampled for the round (m).
+    m: u64,
 }
 
 /// The phase-driven protocol state machine. Owns the transport, the
@@ -199,6 +260,7 @@ pub struct ProtocolCore {
     crashed: Vec<WorkerId>,
     cfg: ProtocolConfig,
     round: RoundState,
+    pending: Option<PendingRound>,
     loss_scratch: Vec<f64>,
 }
 
@@ -212,13 +274,14 @@ impl ProtocolCore {
         ProtocolCore {
             transport,
             policy,
-            rng_sample: Pcg64::new(cfg.seed, 0xaa57e2),
+            rng_sample: Pcg64::new(cfg.seed, SAMPLE_STREAM),
             rng_assign: Pcg64::new(cfg.seed, 0xa5516e),
             active: (0..n).collect(),
             eliminated: Vec::new(),
             crashed: Vec::new(),
             cfg,
             round: RoundState::default(),
+            pending: None,
             loss_scratch: Vec::new(),
         }
     }
@@ -287,14 +350,28 @@ impl ProtocolCore {
         engine: &dyn GradientComputer,
         events: &mut EventLog,
     ) -> Result<RoundOutcome> {
+        self.begin_round(t, theta, chunks, dataset)?;
+        self.complete_round(t, theta, dataset, engine, events)
+    }
+
+    /// Submit the round's proactive wave and return without waiting,
+    /// so a multi-core driver can put every core's wave in flight
+    /// before completing any of them. Must be paired with
+    /// [`ProtocolCore::complete_round`] for the same `t` and `theta`.
+    pub fn begin_round(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        chunks: Vec<Vec<usize>>,
+        dataset: &dyn Dataset,
+    ) -> Result<()> {
+        anyhow::ensure!(self.pending.is_none(), "begin_round with a round already in flight");
         anyhow::ensure!(!self.active.is_empty(), "no active workers left at iteration {t}");
         let f_t = self.f_t();
         let nact = self.active.len();
         let r = self.policy.proactive_r(f_t).min(nact);
-        let mut crashed_now: Vec<WorkerId> = Vec::new();
 
-        // ---- Phase::Proactive ------------------------------------------
-        let m = chunks.len() * self.cfg.chunk_size;
+        let m = (chunks.len() * self.cfg.chunk_size) as u64;
         let mut round = std::mem::take(&mut self.round);
         round.reset(Assignment::from_chunks(chunks, &self.active, r));
 
@@ -311,13 +388,57 @@ impl ProtocolCore {
                     .collect(),
             })
             .collect();
-        self.transport.scatter(t, Phase::Proactive.wire(), theta, bundles)?;
-        let responses = self.transport.gather(t, Phase::Proactive.wire())?;
-        self.note_failures(t, &mut round, &mut crashed_now, events);
+        let outstanding: Vec<WorkerId> = bundles.iter().map(|b| b.worker).collect();
+        let start_ns = self.transport.now_ns();
+        self.transport.submit(t, Phase::Proactive.wire(), theta, bundles)?;
+        self.pending = Some(PendingRound { round, outstanding, start_ns, f_t, m });
+        Ok(())
+    }
+
+    /// Collect the proactive wave under the configured [`GatherPolicy`]
+    /// and drive the rest of the round (reassignment, detection,
+    /// reactive) to completion.
+    pub fn complete_round(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+        engine: &dyn GradientComputer,
+        events: &mut EventLog,
+    ) -> Result<RoundOutcome> {
+        let pending = self.pending.take();
+        let Some(PendingRound { mut round, outstanding, start_ns, f_t, m }) = pending else {
+            anyhow::bail!("complete_round without begin_round at iteration {t}");
+        };
+        let mut crashed_now: Vec<WorkerId> = Vec::new();
+        let mut stragglers_now: Vec<WorkerId> = Vec::new();
+
+        // ---- Phase::Proactive ------------------------------------------
+        // the reactive phase needs 2f_t+1 distinct owners for its
+        // majority vote, so no quorum/deadline wave may retain fewer
+        // responders than that — the wave waits past its trigger until
+        // the floor is met (validate() already rejects k < 2f+1, this
+        // also covers deadline waves and per-shard scaled quorums)
+        let floor = (2 * f_t + 1).min(outstanding.len());
+        let gather = self.cfg.gather;
+        let responses = self.wait_wave(
+            t,
+            Phase::Proactive,
+            gather,
+            floor,
+            outstanding,
+            start_ns,
+            &mut round,
+            &mut crashed_now,
+            &mut stragglers_now,
+            events,
+        )?;
         round.ingest(responses);
 
-        // crash-drops: reassign orphaned chunks so every chunk has at
-        // least one copy before the update
+        // crash-drops and abandoned stragglers: reassign orphaned
+        // chunks so every chunk has at least one copy before the
+        // update (abandoned workers were retired from the round's
+        // candidate pool by wait_wave, exactly like crashed ones)
         if round.chunks.iter().any(|c| c.copies.is_empty()) {
             let targets: Vec<(ChunkId, usize)> = (0..round.nchunks()).map(|c| (c, 1)).collect();
             self.ensure_copies(
@@ -487,19 +608,132 @@ impl ProtocolCore {
 
         self.round = round;
         Ok(RoundOutcome {
-            gradients_used: m as u64,
+            gradients_used: m,
             audited,
             faults_detected,
             identified_now,
             crashed_now,
             master_computed_points,
+            stragglers_now,
+            round_ns: self.transport.now_ns().saturating_sub(start_ns),
         })
     }
 
+    /// Collect one wave's deliveries under `policy`. Responses for the
+    /// wave are buffered and returned sorted by worker id; in-band
+    /// failures are recorded as crashes the moment they arrive; stale
+    /// deliveries (an earlier phase, an earlier iteration, or a worker
+    /// this wave is not waiting on) are drained and discarded. On a
+    /// quorum/deadline early exit the still-outstanding workers are
+    /// abandoned for the round: retired from the round's candidate
+    /// pool — their chunks get reassigned exactly like a crashed
+    /// worker's — but they stay active for future rounds.
+    /// `min_responses` is the floor no early exit may cut below (the
+    /// proactive wave passes 2f_t+1 so the reactive vote stays
+    /// assemblable; crash-stops can still shrink the wave, exactly as
+    /// they always could).
+    #[allow(clippy::too_many_arguments)]
+    fn wait_wave(
+        &mut self,
+        t: u64,
+        phase: Phase,
+        policy: GatherPolicy,
+        min_responses: usize,
+        outstanding: Vec<WorkerId>,
+        start_ns: u64,
+        round: &mut RoundState,
+        crashed_now: &mut Vec<WorkerId>,
+        stragglers_now: &mut Vec<WorkerId>,
+        events: &mut EventLog,
+    ) -> Result<Vec<Response>> {
+        let floor = min_responses.max(1);
+        let quorum = match policy {
+            GatherPolicy::Quorum { k } => {
+                // k counts responders at full cluster strength; what
+                // stays fixed as crashes/eliminations shrink the wave
+                // is the *allowed missing* margin n - k, so the quorum
+                // tracks the current wave size instead of becoming
+                // unreachable (which would silently degrade to All and
+                // re-expose straggler gating)
+                let allowed_missing = self.transport.n().saturating_sub(k);
+                outstanding.len().saturating_sub(allowed_missing).max(floor)
+            }
+            GatherPolicy::All | GatherPolicy::Deadline { .. } => usize::MAX,
+        };
+        // saturating: an astronomically large deadline means "never",
+        // i.e. All — it must not wrap into the past
+        let deadline_ns = match policy {
+            GatherPolicy::Deadline { us } => {
+                Some(start_ns.saturating_add(us.saturating_mul(1000)))
+            }
+            _ => None,
+        };
+        // O(1) per-delivery membership: worker ids index the mask
+        let mut waiting = vec![false; self.transport.n()];
+        for &w in &outstanding {
+            waiting[w] = true;
+        }
+        let mut remaining = outstanding.len();
+        let mut responses: Vec<Response> = Vec::new();
+        loop {
+            if remaining == 0 || responses.len() >= quorum {
+                break;
+            }
+            // a deadline may expire the wave, but never below the
+            // floor: until then we wait for arrivals unbounded
+            let bound = if responses.len() < floor { None } else { deadline_ns };
+            let deliveries = self.transport.poll(bound)?;
+            if deliveries.is_empty() {
+                if bound.is_some() {
+                    break; // deadline hit
+                }
+                anyhow::bail!(
+                    "transport stalled at iteration {t}: {remaining} workers outstanding, \
+                     nothing in flight"
+                );
+            }
+            for d in deliveries {
+                match d {
+                    Delivery::Failed { worker, .. } => {
+                        self.note_failure(t, worker, round, crashed_now, events);
+                        if waiting[worker] {
+                            waiting[worker] = false;
+                            remaining -= 1;
+                        }
+                    }
+                    Delivery::Response { response, .. } => {
+                        let fresh = response.iter == t
+                            && response.phase == phase.wire()
+                            && waiting[response.worker];
+                        if !fresh {
+                            // late delivery from an abandoned wave or a
+                            // previous phase: drained, never ingested
+                            continue;
+                        }
+                        waiting[response.worker] = false;
+                        remaining -= 1;
+                        responses.push(response);
+                    }
+                }
+            }
+        }
+        // quorum/deadline early exit: abandon the stragglers this round
+        for w in outstanding {
+            if waiting[w] {
+                round.assignment.retire(w);
+                stragglers_now.push(w);
+                events.push(Event::StragglerAbandoned { iter: t, worker: w });
+            }
+        }
+        responses.sort_by_key(|r| r.worker);
+        Ok(responses)
+    }
+
     /// Top chunks up to their target copy counts: extend ownership,
-    /// scatter, gather, ingest — looping while crashes keep knocking
-    /// out newly-assigned owners. Terminates because every pass either
-    /// satisfies all targets or permanently shrinks the active set.
+    /// submit, collect every requested copy, ingest — looping while
+    /// crashes keep knocking out newly-assigned owners. Terminates
+    /// because every pass either satisfies all targets or permanently
+    /// shrinks the active set.
     #[allow(clippy::too_many_arguments)]
     fn ensure_copies(
         &mut self,
@@ -560,35 +794,51 @@ impl ProtocolCore {
                         .collect(),
                 })
                 .collect();
-            self.transport.scatter(t, phase.wire(), theta, bundles)?;
-            let responses = self.transport.gather(t, phase.wire())?;
-            self.note_failures(t, round, crashed_now, events);
+            let outstanding: Vec<WorkerId> = bundles.iter().map(|b| b.worker).collect();
+            let start_ns = self.transport.now_ns();
+            self.transport.submit(t, phase.wire(), theta, bundles)?;
+            // top-up waves always wait for every requested copy: only
+            // the initial proactive wave is quorum-relaxed
+            let mut no_stragglers = Vec::new();
+            let responses = self.wait_wave(
+                t,
+                phase,
+                GatherPolicy::All,
+                0,
+                outstanding,
+                start_ns,
+                round,
+                crashed_now,
+                &mut no_stragglers,
+                events,
+            )?;
+            debug_assert!(no_stragglers.is_empty(), "an All wave cannot abandon workers");
             round.ingest(responses);
         }
     }
 
-    /// Record transport-reported crash-stops: retire the workers from
-    /// the active set (they are *not* eliminated — crashing is not
-    /// lying) and from the current assignment's candidate pool.
-    fn note_failures(
+    /// Record one in-band crash-stop: retire the worker from the
+    /// active set (it is *not* eliminated — crashing is not lying) and
+    /// from the current assignment's candidate pool. Idempotent: the
+    /// transport may report a crash once per submit.
+    fn note_failure(
         &mut self,
         t: u64,
+        w: WorkerId,
         round: &mut RoundState,
         crashed_now: &mut Vec<WorkerId>,
         events: &mut EventLog,
     ) {
-        for w in self.transport.take_failed() {
-            if self.crashed.contains(&w) {
-                continue;
-            }
-            self.crashed.push(w);
-            crashed_now.push(w);
-            if let Some(pos) = self.active.iter().position(|&a| a == w) {
-                self.active.remove(pos);
-            }
-            round.assignment.retire(w);
-            events.push(Event::WorkerCrashed { iter: t, worker: w });
+        if self.crashed.contains(&w) {
+            return;
         }
+        self.crashed.push(w);
+        crashed_now.push(w);
+        if let Some(pos) = self.active.iter().position(|&a| a == w) {
+            self.active.remove(pos);
+        }
+        round.assignment.retire(w);
+        events.push(Event::WorkerCrashed { iter: t, worker: w });
     }
 
     /// Common tail of both identification paths: store the corrected

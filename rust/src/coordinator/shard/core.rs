@@ -36,18 +36,28 @@ pub struct ShardRound {
     pub oracle_faulty: bool,
 }
 
+/// Per-round bookkeeping between [`ShardCore::begin`] and
+/// [`ShardCore::complete`].
+struct ShardPending {
+    chunk_offset: ChunkId,
+    chunk_size: usize,
+    slot_by_owner: bool,
+    workers_active: usize,
+}
+
 /// A shard: spec + wrapped protocol core + liveness.
 pub struct ShardCore {
     spec: ShardSpec,
     core: ProtocolCore,
     alive: bool,
+    pending: Option<ShardPending>,
 }
 
 impl ShardCore {
     /// Wrap a protocol core whose transport has `spec.width()` workers
     /// with local ids `0..n_s`.
     pub fn new(spec: ShardSpec, core: ProtocolCore) -> ShardCore {
-        ShardCore { spec, core, alive: true }
+        ShardCore { spec, core, alive: true, pending: None }
     }
 
     pub fn spec(&self) -> &ShardSpec {
@@ -116,14 +126,20 @@ impl ShardCore {
             Event::WorkerCrashed { iter, worker } => {
                 Event::WorkerCrashed { iter, worker: self.global(worker) }
             }
+            Event::StragglerAbandoned { iter, worker } => {
+                Event::StragglerAbandoned { iter, worker: self.global(worker) }
+            }
             // the inner core never emits shard-level events
             other => other,
         }
     }
 
     /// Run one shard round over the chunk slice the parameter server
-    /// sampled for this shard. `chunk_offset` is the shard's first
-    /// global chunk index (for event remapping). `slot_by_owner`
+    /// sampled for this shard (submit + complete back to back; the
+    /// parameter server instead calls [`ShardCore::begin`] on every
+    /// shard first so all proactive waves are in flight before any
+    /// shard's completion wait starts). `chunk_offset` is the shard's
+    /// first global chunk index (for event remapping). `slot_by_owner`
     /// selects the partial-aggregate leaf layout: normal rounds slot
     /// each chunk by its primary owner's local id (the layout that
     /// makes the tree sum partition-invariant); rescue rounds, where
@@ -142,17 +158,51 @@ impl ShardCore {
         engine: &dyn GradientComputer,
         events: &mut EventLog,
     ) -> Result<ShardRound> {
+        self.begin(t, theta, chunks, chunk_offset, chunk_size, slot_by_owner, dataset)?;
+        self.complete(t, theta, dataset, engine, events)
+    }
+
+    /// Submit the shard's proactive wave without waiting on it. On
+    /// error the shard is marked dead (its chunks must be rescued).
+    #[allow(clippy::too_many_arguments)]
+    pub fn begin(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        chunks: Vec<Vec<usize>>,
+        chunk_offset: ChunkId,
+        chunk_size: usize,
+        slot_by_owner: bool,
+        dataset: &dyn Dataset,
+    ) -> Result<()> {
         debug_assert!(self.alive, "round dispatched to a dead shard");
+        debug_assert!(self.pending.is_none(), "shard round already in flight");
         let workers_active = self.core.active().len();
+        if let Err(e) = self.core.begin_round(t, theta, chunks, dataset) {
+            self.alive = false;
+            return Err(e);
+        }
+        self.pending =
+            Some(ShardPending { chunk_offset, chunk_size, slot_by_owner, workers_active });
+        Ok(())
+    }
+
+    /// Collect the wave begun by [`ShardCore::begin`] and finish the
+    /// shard round: detection/reactive phases, partial aggregate,
+    /// remapped events.
+    pub fn complete(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+        engine: &dyn GradientComputer,
+        events: &mut EventLog,
+    ) -> Result<ShardRound> {
+        let ShardPending { chunk_offset, chunk_size, slot_by_owner, workers_active } =
+            self.pending.take().expect("complete without begin");
         let mut local_events = EventLog::default();
-        let outcome = match self.core.run_round_with_chunks(
-            t,
-            theta,
-            chunks,
-            dataset,
-            engine,
-            &mut local_events,
-        ) {
+        let completed = self.core.complete_round(t, theta, dataset, engine, &mut local_events);
+        let outcome = match completed {
             Ok(out) => out,
             Err(e) => {
                 // the shard is unusable from here on: surrender what
@@ -212,6 +262,8 @@ impl ShardCore {
                 faults_detected: outcome.faults_detected,
                 identified: identified.len(),
                 crashed: crashed.len(),
+                stragglers: outcome.stragglers_now.len(),
+                round_ns: outcome.round_ns,
             },
             identified,
             crashed,
@@ -226,6 +278,7 @@ impl ShardCore {
     /// here; the roster records each worker at most once).
     pub fn fail(&mut self) -> Vec<WorkerId> {
         self.alive = false;
+        self.pending = None;
         let mut ws: Vec<WorkerId> =
             self.core.active().iter().map(|&w| self.global(w)).collect();
         ws.extend(self.core.crashed().iter().map(|&w| self.global(w)));

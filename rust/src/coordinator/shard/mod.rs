@@ -25,8 +25,13 @@
 //!   shard's partial aggregate plus remapped (global-id) events.
 //! * [`ShardedTransport`] — fans a round out to the per-shard inner
 //!   transports (threaded or sim, mixed allowed) and gathers the
-//!   partial aggregates; a shard whose round fails is marked dead and
-//!   its chunks are reassigned to survivors ("rescue" rounds).
+//!   partial aggregates; the fan-out is poll-interleaved (every
+//!   shard's proactive wave is submitted before any shard's
+//!   completion wait starts, so shard compute overlaps) and each
+//!   shard's gather applies the cluster `GatherPolicy` scaled to its
+//!   own width (per-shard K-of-N quorum). A shard whose round fails
+//!   is marked dead and its chunks are reassigned to survivors
+//!   ("rescue" rounds).
 //! * [`ParameterServer`] — samples the round's data points globally
 //!   (the same RNG stream the single master uses), partitions them
 //!   into per-shard chunk slices, drives the fan-out, combines the

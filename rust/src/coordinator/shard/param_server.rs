@@ -18,6 +18,7 @@ use std::time::Instant;
 use super::super::assignment::sample_points;
 use super::super::events::{Event, EventLog};
 use super::super::metrics::{IterationRecord, ShardStat};
+use super::super::protocol::SAMPLE_STREAM;
 use super::super::WorkerId;
 use super::{Roster, ShardRound, ShardedTransport};
 use crate::data::Dataset;
@@ -69,7 +70,7 @@ impl ParameterServer {
             dataset,
             transport,
             roster: Roster::new(n),
-            rng_sample: Pcg64::new(seed, 0xaa57e2),
+            rng_sample: Pcg64::new(seed, SAMPLE_STREAM),
             chunk_size,
             lr,
             w_star,
@@ -151,6 +152,10 @@ impl ParameterServer {
         let mut q_n = 0usize;
         let mut lambda_sum = 0.0f64;
         let mut extra_crashed = 0usize;
+        // shards run concurrently, so the fan-out costs the slowest
+        // shard's round; rescue rounds happen after it, serially
+        let mut fan_round_ns = 0u64;
+        let mut rescue_round_ns = 0u64;
 
         let absorb = |round: ShardRound,
                       losses: &mut Vec<f64>,
@@ -176,6 +181,7 @@ impl ParameterServer {
                 Some(Ok(mut round)) => {
                     oracle_faulty |= round.oracle_faulty;
                     audited |= round.stat.audited;
+                    fan_round_ns = fan_round_ns.max(round.stat.round_ns);
                     q_sum += self.transport.cores()[s].last_q();
                     lambda_sum += self.transport.cores()[s].lambda();
                     q_n += 1;
@@ -239,6 +245,7 @@ impl ParameterServer {
                     rescue_offset += nbatch;
                     oracle_faulty |= round.oracle_faulty;
                     audited |= round.stat.audited;
+                    rescue_round_ns += round.stat.round_ns;
                     if let Some(p) = round.partial.take() {
                         rescue_partials.push(p);
                     }
@@ -290,6 +297,7 @@ impl ParameterServer {
         let identified: usize = shard_stats.iter().map(|s| s.identified).sum();
         let crashed: usize =
             shard_stats.iter().map(|s| s.crashed).sum::<usize>() + extra_crashed;
+        let stragglers: usize = shard_stats.iter().map(|s| s.stragglers).sum();
         Ok(IterationRecord {
             iter: t,
             gradients_used,
@@ -304,6 +312,8 @@ impl ParameterServer {
             oracle_faulty_update: oracle_faulty,
             dist_to_opt: self.w_star.as_ref().map(|w| linalg::dist2(&self.theta, w)),
             wall_ns: t0.elapsed().as_nanos() as u64,
+            round_ns: fan_round_ns + rescue_round_ns,
+            stragglers,
             shard_stats,
         })
     }

@@ -9,6 +9,16 @@
 //! instead of task bundles for symbols. A shard whose round fails is
 //! marked dead; the caller (the parameter server) reassigns its chunks
 //! to survivors via [`ShardedTransport::rescue`].
+//!
+//! The fan-out is poll-interleaved, not sequential: `fan_round` first
+//! calls [`ShardCore::begin`] on every alive shard — putting every
+//! shard's proactive wave in flight — and only then completes the
+//! shards one by one. Threaded shards therefore compute concurrently
+//! while the master waits on the first one (the wall-clock cost of a
+//! round is max over shards, not the sum), and each shard's completion
+//! wait applies its own [`crate::config::GatherPolicy`] — a cluster
+//! quorum `k` is scaled to each shard's width (ceil(k·n_s/n)), so the
+//! K-of-N wait is per shard, as the sharded protocol requires.
 
 use std::sync::Arc;
 
@@ -19,16 +29,21 @@ use super::super::protocol::{ProtocolConfig, ProtocolCore};
 use super::super::transport::{LatencyModel, SimConfig, SimTransport, ThreadedTransport, Transport};
 use super::super::{ChunkId, WorkerId};
 use super::{ShardCore, ShardPlan, ShardRound, ShardSpec};
-use crate::config::{AttackConfig, PolicyKind};
+use crate::config::{AttackConfig, GatherPolicy, PolicyKind, TransportKind};
 use crate::data::Dataset;
 use crate::grad::GradientComputer;
 use crate::Result;
 
 /// Everything needed to build one shard's inner transport + core.
 pub struct ShardBuildConfig {
-    /// "threaded" | "sim" (uniform; use [`ShardedTransport::from_cores`]
-    /// to mix kinds).
-    pub transport: String,
+    /// Inner transport kind (uniform; use
+    /// [`ShardedTransport::from_cores`] to mix kinds).
+    pub transport: TransportKind,
+    /// Cluster-level gather policy; a quorum count is scaled to each
+    /// shard's width so the K-of-N wait is per shard.
+    pub gather: GatherPolicy,
+    /// Total worker count n (the quorum scaling denominator).
+    pub cluster_n: usize,
     pub seed: u64,
     pub attack: AttackConfig,
     pub policy: PolicyKind,
@@ -40,6 +55,19 @@ pub struct ShardBuildConfig {
     /// Sim scenario knobs; straggler/crash worker ids are *global* and
     /// remapped into each shard here.
     pub sim: SimConfig,
+}
+
+/// Scale a cluster-level gather policy to one shard: `Quorum { k }`
+/// becomes k-of-n_s with k_s = ceil(k * n_s / n) (so `quorum:0.8`
+/// means 80% of *each shard*); `All` and `Deadline` pass through.
+fn shard_gather(gather: GatherPolicy, n_s: usize, n: usize) -> GatherPolicy {
+    match gather {
+        GatherPolicy::Quorum { k } => {
+            let k_s = (k * n_s).div_ceil(n);
+            GatherPolicy::Quorum { k: k_s.clamp(1, n_s) }
+        }
+        other => other,
+    }
 }
 
 /// Derive a shard-local seed so shards draw independent audit coins
@@ -67,15 +95,15 @@ fn build_inner(
         byz.contains(&global)
             .then(|| ByzantineBehavior::new(attack.clone(), seed, global))
     };
-    Ok(match cfg.transport.as_str() {
-        "threaded" => Box::new(ThreadedTransport::spawn_with_compressor(
+    Ok(match cfg.transport {
+        TransportKind::Threaded => Box::new(ThreadedTransport::spawn_with_compressor(
             n_s,
             engine.clone(),
             byzantine,
             None,
             cfg.latency_us,
         )),
-        "sim" => {
+        TransportKind::Sim => {
             let mut sim = cfg.sim.clone();
             if matches!(sim.latency, LatencyModel::Zero) && cfg.latency_us > 0 {
                 sim.latency = LatencyModel::Fixed { us: cfg.latency_us };
@@ -97,7 +125,6 @@ fn build_inner(
             sim.crash_at = crash_at;
             Box::new(SimTransport::new(n_s, engine.clone(), byzantine, None, sim))
         }
-        other => anyhow::bail!("unknown transport '{other}' (expected threaded|sim)"),
     })
 }
 
@@ -132,6 +159,7 @@ impl ShardedTransport {
                     tol: cfg.tol,
                     no_eliminate: cfg.no_eliminate,
                     compressor: None,
+                    gather: shard_gather(cfg.gather, spec.width(), cfg.cluster_n),
                 },
             );
             cores.push(ShardCore::new(spec.clone(), core));
@@ -168,6 +196,13 @@ impl ShardedTransport {
     /// for dead shards) and `offsets[s]` its first global chunk index.
     /// Returns one entry per shard; a failed shard yields `Err` and is
     /// marked dead (its chunks must be re-dispatched via `rescue`).
+    ///
+    /// Poll-interleaved dispatch: every alive shard's proactive wave is
+    /// submitted (`ShardCore::begin`) before any shard's completion
+    /// wait starts, so shard compute overlaps — waiting on shard 0
+    /// costs nothing for shards 1..K, whose workers are already
+    /// running (threaded) or whose virtual clocks are independent
+    /// (sim).
     #[allow(clippy::too_many_arguments)]
     pub fn fan_round(
         &mut self,
@@ -181,17 +216,25 @@ impl ShardedTransport {
         events: &mut EventLog,
     ) -> Vec<Option<Result<ShardRound>>> {
         debug_assert_eq!(slices.len(), self.cores.len());
-        self.cores
-            .iter_mut()
-            .zip(slices)
-            .zip(offsets)
-            .map(|((core, chunks), &off)| {
-                if !core.alive() || chunks.is_empty() {
-                    return None;
-                }
-                Some(core.run(t, theta, chunks, off, chunk_size, true, dataset, engine, events))
-            })
-            .collect()
+        let k = self.cores.len();
+        let mut results: Vec<Option<Result<ShardRound>>> = Vec::with_capacity(k);
+        results.resize_with(k, || None);
+        let mut begun = vec![false; k];
+        for (s, (core, chunks)) in self.cores.iter_mut().zip(slices).enumerate() {
+            if !core.alive() || chunks.is_empty() {
+                continue;
+            }
+            match core.begin(t, theta, chunks, offsets[s], chunk_size, true, dataset) {
+                Ok(()) => begun[s] = true,
+                Err(e) => results[s] = Some(Err(e)),
+            }
+        }
+        for (s, core) in self.cores.iter_mut().enumerate() {
+            if begun[s] {
+                results[s] = Some(core.complete(t, theta, dataset, engine, events));
+            }
+        }
+        results
     }
 
     /// Run orphaned chunks (from a dead shard) through one survivor.

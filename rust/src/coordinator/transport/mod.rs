@@ -1,30 +1,43 @@
 //! Transport layer: how the master's protocol core talks to workers.
 //!
 //! The protocol core ([`super::protocol`]) is written against the
-//! [`Transport`] trait — a synchronous *scatter/gather* API matched to
-//! the paper's synchronous parallelized-SGD model:
+//! [`Transport`] trait — a **completion-driven** submit/poll API. The
+//! paper's synchronous scatter/gather model made every round wait for
+//! its slowest worker; this contract instead hands the protocol each
+//! response *as it arrives*, so the caller decides how long to keep
+//! waiting (see `GatherPolicy` in [`crate::config`]):
 //!
-//! * [`Transport::scatter`] queues one phase's task bundles (θ
-//!   broadcast + per-worker chunk batches);
-//! * [`Transport::gather`] blocks until every scattered-to worker has
-//!   responded or is known to have failed, and returns the responses
-//!   **sorted by worker id** so protocol behaviour is deterministic
-//!   and transport-independent;
-//! * [`Transport::take_failed`] drains the set of workers newly known
-//!   to have failed (crash-stop model), so the protocol can reassign
-//!   their chunks.
+//! * [`Transport::submit`] queues one wave's task bundles (θ broadcast
+//!   + per-worker chunk batches) without waiting for anything;
+//! * [`Transport::poll`] waits for the **next arrival instant** and
+//!   returns every [`Delivery`] due at it, sorted by worker id. Each
+//!   delivery is stamped with its arrival time on the transport's
+//!   clock — *virtual* time for [`SimTransport`], *wall-clock* for
+//!   [`ThreadedTransport`] — and worker failures come back in-band as
+//!   [`Delivery::Failed`] (there is no failure side-channel);
+//! * [`Transport::now_ns`] exposes that clock, which is also how the
+//!   per-round `round_time` metric is measured.
+//!
+//! The protocol core is responsible for matching deliveries to the
+//! wave it is waiting on: a delivery from an abandoned wave (a
+//! straggler the quorum stopped waiting for) is drained and discarded,
+//! never ingested, so no symbol leaks across phases.
 //!
 //! Two implementations:
 //!
 //! * [`ThreadedTransport`] — one OS thread per worker over mpsc
 //!   channels (the original execution model; real parallelism, real
-//!   wall-clock latency).
+//!   wall-clock latency). A worker whose engine errors or panics is
+//!   reported as [`Delivery::Failed`] (crash-stop), not a run abort.
 //! * [`SimTransport`] — deterministic discrete-event simulation in
 //!   virtual time: per-worker latency distributions, stragglers, and
 //!   crash-drops, scaling to thousands of simulated workers with zero
 //!   OS threads. With zero latency and no faults it is bit-identical
 //!   to [`ThreadedTransport`] for the same seed (both drive the same
-//!   [`super::worker::WorkerState`] compute core).
+//!   [`super::worker::WorkerState`] compute core), because every
+//!   delivery then shares one arrival instant and a single `poll`
+//!   returns the full wave sorted by worker id — exactly the old
+//!   blocking gather.
 
 pub mod sim;
 pub mod threaded;
@@ -32,32 +45,69 @@ pub mod threaded;
 use std::sync::Arc;
 
 use super::worker::Response;
-use super::{ChunkId, WorkerId};
+use super::WorkerId;
 use crate::data::Batch;
 use crate::Result;
 
 pub use sim::{LatencyModel, SimConfig, SimTransport};
 pub use threaded::ThreadedTransport;
 
-/// One worker's task list for a phase.
+use super::ChunkId;
+
+/// One worker's task list for a wave.
 pub struct TaskBundle {
     pub worker: WorkerId,
     pub tasks: Vec<(ChunkId, Batch)>,
 }
 
-/// A synchronous scatter/gather channel between master and workers.
+/// One completed exchange surfaced by [`Transport::poll`].
+#[derive(Debug)]
+pub enum Delivery {
+    /// A worker's response, stamped with its arrival time (ns on the
+    /// transport's clock).
+    Response { at_ns: u64, response: Response },
+    /// The worker is now known to have crash-stopped: it will never
+    /// answer this or any future submit. Reported in-band so the
+    /// protocol can reassign its chunks the moment it learns.
+    Failed { at_ns: u64, worker: WorkerId },
+}
+
+impl Delivery {
+    pub fn at_ns(&self) -> u64 {
+        match self {
+            Delivery::Response { at_ns, .. } | Delivery::Failed { at_ns, .. } => *at_ns,
+        }
+    }
+
+    pub fn worker(&self) -> WorkerId {
+        match self {
+            Delivery::Response { response, .. } => response.worker,
+            Delivery::Failed { worker, .. } => *worker,
+        }
+    }
+}
+
+/// A completion-driven channel between master and workers.
 ///
-/// Contract: every `scatter` for a `(iter, phase)` pair must be
-/// followed by exactly one `gather` for the same pair before the next
-/// scatter (the protocol is phase-synchronous). `gather` returns one
-/// [`Response`] per scattered-to worker that has not failed, sorted by
-/// worker id; failed workers are reported through [`Transport::take_failed`].
+/// Contract: `submit` never blocks on worker compute; every submitted
+/// bundle eventually produces exactly one [`Delivery`] (a `Response`,
+/// or `Failed` if the worker crash-stopped). `poll` advances to the
+/// next arrival instant — blocking in wall-clock for the threaded
+/// transport, advancing the virtual clock for the simulator — and
+/// returns all deliveries due at it, sorted by worker id. Deliveries
+/// are returned in global arrival order across waves: the caller
+/// filters by `(iter, phase)` and by the worker set it is actually
+/// waiting on, discarding stale deliveries from abandoned waves.
 pub trait Transport {
     /// Number of worker endpoints (fixed at construction).
     fn n(&self) -> usize;
 
-    /// Queue task bundles for `(iter, phase)`.
-    fn scatter(
+    /// The transport clock: ns since construction. Virtual time for
+    /// the simulator, wall-clock for the threaded pool.
+    fn now_ns(&self) -> u64;
+
+    /// Queue task bundles for `(iter, phase)` without waiting.
+    fn submit(
         &mut self,
         iter: u64,
         phase: u32,
@@ -65,12 +115,13 @@ pub trait Transport {
         bundles: Vec<TaskBundle>,
     ) -> Result<()>;
 
-    /// Collect the responses for `(iter, phase)`, sorted by worker id.
-    fn gather(&mut self, iter: u64, phase: u32) -> Result<Vec<Response>>;
+    /// Wait for the next deliveries. Returns the batch of deliveries
+    /// sharing the next arrival instant, sorted by worker id; an empty
+    /// vec means `deadline_ns` passed first (or nothing is in flight).
+    /// With `deadline_ns` set, the clock never advances past the
+    /// deadline on a timeout.
+    fn poll(&mut self, deadline_ns: Option<u64>) -> Result<Vec<Delivery>>;
 
-    /// Drain the workers that failed since the last call (crash-stop).
-    fn take_failed(&mut self) -> Vec<WorkerId>;
-
-    /// Tear down (idempotent).
+    /// Tear down (idempotent). Undelivered responses are discarded.
     fn shutdown(&mut self) {}
 }

@@ -2,21 +2,28 @@
 //! workers, zero OS threads.
 //!
 //! Workers are plain structs executed sequentially on the caller's
-//! thread; *time* is a discrete-event virtual clock. Each response is
-//! stamped with a completion time drawn from a configurable
-//! [`LatencyModel`], scaled by per-worker straggler multipliers;
-//! `gather` advances the clock to the slowest responder (the
-//! synchronous-round semantics of the paper). Workers can crash-stop
-//! at a configured iteration, after which they never respond and are
-//! reported through [`Transport::take_failed`] so the protocol core
-//! reassigns their chunks.
+//! thread; *time* is a discrete-event virtual clock. [`Transport::submit`]
+//! computes each targeted worker's symbols immediately and stamps the
+//! resulting [`Delivery`] with a completion time drawn from a
+//! configurable [`LatencyModel`], scaled by per-worker straggler
+//! multipliers. [`Transport::poll`] advances the clock to the earliest
+//! pending completion and returns every delivery due at that instant —
+//! so a quorum gather stops the clock at the k-th arrival instead of
+//! the slowest worker, and an abandoned straggler's delivery stays
+//! queued until a later poll drains it. Workers can crash-stop at a
+//! configured iteration, after which every submit to them yields a
+//! [`Delivery::Failed`] instead of a response.
 //!
 //! Determinism: compute goes through the same
-//! [`super::super::worker::WorkerState`] as the threaded transport and
-//! responses are gathered sorted by worker id, so for zero latency and
-//! no faults a sim run is bit-identical to a threaded run with the
-//! same seed (asserted by `tests/test_transport.rs`).
+//! [`super::super::worker::WorkerState`] as the threaded transport,
+//! deliveries sharing an arrival instant are returned sorted by worker
+//! id, and at zero latency *every* delivery of a wave shares the
+//! submit instant — one poll returns the whole wave, bit-identical to
+//! a threaded run with the same seed (asserted by
+//! `tests/test_transport.rs`).
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -24,7 +31,7 @@ use super::super::byzantine::ByzantineBehavior;
 use super::super::compress::Compressor;
 use super::super::worker::{Response, WorkerState};
 use super::super::WorkerId;
-use super::{TaskBundle, Transport};
+use super::{Delivery, TaskBundle, Transport};
 use crate::grad::GradientComputer;
 use crate::util::rng::Pcg64;
 use crate::Result;
@@ -93,6 +100,35 @@ struct SimWorker {
     crashed: bool,
 }
 
+/// A completed-but-undelivered exchange, ordered by (arrival instant,
+/// worker id) so the event heap pops deliveries in exactly the order
+/// `poll` hands them out.
+struct PendingEvent {
+    at_ns: u64,
+    worker: WorkerId,
+    delivery: Delivery,
+}
+
+impl PartialEq for PendingEvent {
+    fn eq(&self, other: &PendingEvent) -> bool {
+        (self.at_ns, self.worker) == (other.at_ns, other.worker)
+    }
+}
+
+impl Eq for PendingEvent {}
+
+impl PartialOrd for PendingEvent {
+    fn partial_cmp(&self, other: &PendingEvent) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for PendingEvent {
+    fn cmp(&self, other: &PendingEvent) -> std::cmp::Ordering {
+        (self.at_ns, self.worker).cmp(&(other.at_ns, other.worker))
+    }
+}
+
 /// The simulated cluster.
 pub struct SimTransport {
     workers: Vec<SimWorker>,
@@ -100,10 +136,10 @@ pub struct SimTransport {
     rng: Pcg64,
     /// Virtual clock (ns since construction).
     now_ns: u64,
-    /// Responses awaiting the in-flight gather: (completion time, resp).
-    ready: Vec<(u64, Response)>,
-    newly_failed: Vec<WorkerId>,
-    last_round_ns: u64,
+    /// Discrete-event queue: completed exchanges awaiting delivery,
+    /// min-ordered by (arrival instant, worker id) so each `poll` is
+    /// O(log n) per delivery instead of a linear scan.
+    pending: BinaryHeap<Reverse<PendingEvent>>,
 }
 
 impl SimTransport {
@@ -134,21 +170,13 @@ impl SimTransport {
             latency: cfg.latency,
             rng: Pcg64::new(cfg.seed, 0x51b_7a2),
             now_ns: 0,
-            ready: Vec::new(),
-            newly_failed: Vec::new(),
-            last_round_ns: 0,
+            pending: BinaryHeap::new(),
         }
     }
 
     /// Virtual time elapsed since construction.
     pub fn virtual_elapsed(&self) -> Duration {
         Duration::from_nanos(self.now_ns)
-    }
-
-    /// Virtual duration of the most recent gather's round (max over its
-    /// responders' completion latencies).
-    pub fn last_round(&self) -> Duration {
-        Duration::from_nanos(self.last_round_ns)
     }
 }
 
@@ -157,7 +185,11 @@ impl Transport for SimTransport {
         self.workers.len()
     }
 
-    fn scatter(
+    fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    fn submit(
         &mut self,
         iter: u64,
         phase: u32,
@@ -165,49 +197,68 @@ impl Transport for SimTransport {
         bundles: Vec<TaskBundle>,
     ) -> Result<()> {
         for TaskBundle { worker, tasks } in bundles {
-            anyhow::ensure!(worker < self.workers.len(), "scatter to unknown worker {worker}");
+            anyhow::ensure!(worker < self.workers.len(), "submit to unknown worker {worker}");
             let w = &mut self.workers[worker];
             if w.crashed || w.crash_at.map(|t| iter >= t).unwrap_or(false) {
-                if !w.crashed {
-                    w.crashed = true;
-                    self.newly_failed.push(worker);
-                }
-                continue; // crash-stop: the message disappears
+                // crash-stop: the request disappears and the failure is
+                // reported in-band at the current instant
+                w.crashed = true;
+                self.pending.push(Reverse(PendingEvent {
+                    at_ns: self.now_ns,
+                    worker,
+                    delivery: Delivery::Failed { at_ns: self.now_ns, worker },
+                }));
+                continue;
             }
             let symbols = w.state.handle(iter, theta, tasks)?;
             let latency =
                 (self.latency.draw_ns(&mut self.rng) as f64 * w.latency_mult) as u64;
-            self.ready.push((
-                self.now_ns + latency,
-                Response { worker, iter, phase, symbols, error: None },
-            ));
+            let at_ns = self.now_ns + latency;
+            self.pending.push(Reverse(PendingEvent {
+                at_ns,
+                worker,
+                delivery: Delivery::Response {
+                    at_ns,
+                    response: Response { worker, iter, phase, symbols, error: None },
+                },
+            }));
         }
         Ok(())
     }
 
-    fn gather(&mut self, iter: u64, phase: u32) -> Result<Vec<Response>> {
-        let mut out: Vec<(u64, Response)> = Vec::with_capacity(self.ready.len());
-        // the synchronous protocol has exactly one phase in flight;
-        // filter defensively anyway
-        let mut i = 0;
-        while i < self.ready.len() {
-            if self.ready[i].1.iter == iter && self.ready[i].1.phase == phase {
-                out.push(self.ready.swap_remove(i));
-            } else {
-                i += 1;
+    fn poll(&mut self, deadline_ns: Option<u64>) -> Result<Vec<Delivery>> {
+        let next = match self.pending.peek() {
+            Some(Reverse(e)) => e.at_ns,
+            None => {
+                // nothing in flight; a deadline wait still spends the time
+                if let Some(d) = deadline_ns {
+                    self.now_ns = self.now_ns.max(d);
+                }
+                return Ok(Vec::new());
+            }
+        };
+        if let Some(d) = deadline_ns {
+            if next > d {
+                self.now_ns = self.now_ns.max(d);
+                return Ok(Vec::new());
             }
         }
-        // the round ends when the slowest responder finishes
-        let end = out.iter().map(|(t, _)| *t).max().unwrap_or(self.now_ns);
-        self.last_round_ns = end - self.now_ns;
-        self.now_ns = end;
-        let mut responses: Vec<Response> = out.into_iter().map(|(_, r)| r).collect();
-        responses.sort_by_key(|r| r.worker);
-        Ok(responses)
+        self.now_ns = self.now_ns.max(next);
+        // pop everything due at this instant: the heap yields them in
+        // worker-id order, which is the delivery order contract
+        let mut out: Vec<Delivery> = Vec::new();
+        while let Some(Reverse(e)) = self.pending.peek() {
+            if e.at_ns != next {
+                break;
+            }
+            let Reverse(e) = self.pending.pop().expect("peeked entry present");
+            out.push(e.delivery);
+        }
+        Ok(out)
     }
 
-    fn take_failed(&mut self) -> Vec<WorkerId> {
-        std::mem::take(&mut self.newly_failed)
+    fn shutdown(&mut self) {
+        self.pending.clear();
     }
 }
 
@@ -232,20 +283,35 @@ mod tests {
             .collect()
     }
 
-    #[test]
-    fn zero_latency_round_takes_no_virtual_time() {
-        let (mut t, ds) = cluster(4, SimConfig::default());
-        let theta = Arc::new(vec![0.1f32; 8]);
-        t.scatter(0, 0, &theta, bundles(&ds, &[0, 1, 2, 3])).unwrap();
-        let resps = t.gather(0, 0).unwrap();
-        assert_eq!(resps.len(), 4);
-        assert_eq!(t.virtual_elapsed(), Duration::ZERO);
-        let ids: Vec<WorkerId> = resps.iter().map(|r| r.worker).collect();
-        assert_eq!(ids, vec![0, 1, 2, 3]);
+    /// Drain everything in flight, appending to `out`; returns the
+    /// number of deliveries consumed.
+    fn drain(t: &mut SimTransport, out: &mut Vec<Delivery>) -> usize {
+        let mut n = 0;
+        loop {
+            let batch = t.poll(None).unwrap();
+            if batch.is_empty() {
+                return n;
+            }
+            n += batch.len();
+            out.extend(batch);
+        }
     }
 
     #[test]
-    fn straggler_dominates_round_time() {
+    fn zero_latency_wave_arrives_in_one_poll_sorted() {
+        let (mut t, ds) = cluster(4, SimConfig::default());
+        let theta = Arc::new(vec![0.1f32; 8]);
+        t.submit(0, 0, &theta, bundles(&ds, &[0, 1, 2, 3])).unwrap();
+        let batch = t.poll(None).unwrap();
+        assert_eq!(batch.len(), 4, "zero latency: the whole wave shares one instant");
+        let ids: Vec<WorkerId> = batch.iter().map(|d| d.worker()).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(t.virtual_elapsed(), Duration::ZERO);
+        assert!(t.poll(None).unwrap().is_empty(), "nothing left in flight");
+    }
+
+    #[test]
+    fn straggler_arrives_last_and_dominates_the_clock() {
         let cfg = SimConfig {
             latency: LatencyModel::Fixed { us: 100 },
             stragglers: vec![(2, 50.0)],
@@ -253,33 +319,55 @@ mod tests {
         };
         let (mut t, ds) = cluster(4, cfg);
         let theta = Arc::new(vec![0.1f32; 8]);
-        t.scatter(0, 0, &theta, bundles(&ds, &[0, 1, 2, 3])).unwrap();
-        let resps = t.gather(0, 0).unwrap();
-        assert_eq!(resps.len(), 4);
-        // round time = straggler's 100us * 50 = 5ms, not the 100us base
-        assert_eq!(t.last_round(), Duration::from_micros(5000));
+        t.submit(0, 0, &theta, bundles(&ds, &[0, 1, 2, 3])).unwrap();
+        // first instant: the three normal workers at 100us
+        let first = t.poll(None).unwrap();
+        assert_eq!(first.iter().map(|d| d.worker()).collect::<Vec<_>>(), vec![0, 1, 3]);
+        assert_eq!(t.virtual_elapsed(), Duration::from_micros(100));
+        // a quorum caller could stop here; draining instead advances to
+        // the straggler's 100us * 50 = 5ms completion
+        let late = t.poll(None).unwrap();
+        assert_eq!(late.iter().map(|d| d.worker()).collect::<Vec<_>>(), vec![2]);
         assert_eq!(t.virtual_elapsed(), Duration::from_micros(5000));
     }
 
     #[test]
-    fn crashed_worker_stops_responding_and_is_reported() {
+    fn deadline_poll_stops_the_clock_short() {
+        let cfg = SimConfig { latency: LatencyModel::Fixed { us: 100 }, ..Default::default() };
+        let (mut t, ds) = cluster(2, cfg);
+        let theta = Arc::new(vec![0.1f32; 8]);
+        t.submit(0, 0, &theta, bundles(&ds, &[0, 1])).unwrap();
+        // deadline before the 100us completions: empty batch, clock at
+        // the deadline, deliveries still pending
+        let early = t.poll(Some(40_000)).unwrap();
+        assert!(early.is_empty());
+        assert_eq!(t.virtual_elapsed(), Duration::from_micros(40));
+        let rest = t.poll(None).unwrap();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(t.virtual_elapsed(), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn crashed_worker_fails_in_band_every_submit() {
         let cfg = SimConfig { crash_at: vec![(1, 2)], ..Default::default() };
         let (mut t, ds) = cluster(3, cfg);
         let theta = Arc::new(vec![0.1f32; 8]);
         for iter in 0..4u64 {
-            t.scatter(iter, 0, &theta, bundles(&ds, &[0, 1, 2])).unwrap();
-            let resps = t.gather(iter, 0).unwrap();
+            t.submit(iter, 0, &theta, bundles(&ds, &[0, 1, 2])).unwrap();
+            let mut all = Vec::new();
+            drain(&mut t, &mut all);
+            let failed: Vec<WorkerId> = all
+                .iter()
+                .filter(|d| matches!(d, Delivery::Failed { .. }))
+                .map(|d| d.worker())
+                .collect();
+            let ok = all.len() - failed.len();
             if iter < 2 {
-                assert_eq!(resps.len(), 3, "iter {iter}");
-                assert!(t.take_failed().is_empty());
+                assert_eq!(ok, 3, "iter {iter}");
+                assert!(failed.is_empty());
             } else {
-                assert_eq!(resps.len(), 2, "iter {iter}");
-                let failed = t.take_failed();
-                if iter == 2 {
-                    assert_eq!(failed, vec![1]);
-                } else {
-                    assert!(failed.is_empty(), "crash reported once");
-                }
+                assert_eq!(ok, 2, "iter {iter}");
+                assert_eq!(failed, vec![1], "in-band failure, every submit");
             }
         }
     }
@@ -293,8 +381,10 @@ mod tests {
             let cfg = SimConfig { latency, ..Default::default() };
             let (mut t, ds) = cluster(2, cfg);
             let theta = Arc::new(vec![0.1f32; 8]);
-            t.scatter(0, 0, &theta, bundles(&ds, &[0, 1])).unwrap();
-            t.gather(0, 0).unwrap();
+            t.submit(0, 0, &theta, bundles(&ds, &[0, 1])).unwrap();
+            let mut all = Vec::new();
+            drain(&mut t, &mut all);
+            assert_eq!(all.len(), 2);
             assert!(t.virtual_elapsed() > Duration::ZERO, "{latency:?}");
         }
     }
@@ -306,8 +396,8 @@ mod tests {
         let (mut t, ds) = cluster(2048, SimConfig::default());
         let theta = Arc::new(vec![0.1f32; 8]);
         let all: Vec<WorkerId> = (0..2048).collect();
-        t.scatter(0, 0, &theta, bundles(&ds, &all)).unwrap();
-        let resps = t.gather(0, 0).unwrap();
-        assert_eq!(resps.len(), 2048);
+        t.submit(0, 0, &theta, bundles(&ds, &all)).unwrap();
+        let mut got = Vec::new();
+        assert_eq!(drain(&mut t, &mut got), 2048);
     }
 }

@@ -1,21 +1,31 @@
 //! One-OS-thread-per-worker transport over mpsc channels (the
 //! original execution model of the seed implementation, now behind the
-//! [`Transport`] trait).
+//! completion-driven [`Transport`] trait).
 //!
 //! Each worker thread owns a [`WorkerState`] and serves `Compute`
-//! requests until `Shutdown`. Honest workers are deterministic, so a
-//! run's outcome is independent of thread scheduling: `gather` sorts
-//! responses by worker id before the protocol core ingests them.
+//! requests until `Shutdown`. [`Transport::submit`] only enqueues
+//! requests; [`Transport::poll`] blocks for the next response on the
+//! shared reply channel, then drains whatever else is already ready,
+//! stamping each delivery with wall-clock ns since construction. A
+//! worker whose engine errors or panics produces a
+//! [`Delivery::Failed`] (crash-stop) instead of aborting the run — the
+//! protocol core reassigns its chunks like any other crash.
+//!
+//! Honest workers are deterministic, so a run's outcome is independent
+//! of thread scheduling as long as the caller waits for the full wave:
+//! poll batches are sorted by worker id, and the protocol core sorts
+//! the assembled wave again before ingesting.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use super::super::byzantine::ByzantineBehavior;
 use super::super::compress::Compressor;
 use super::super::worker::{Request, Response, WorkerState};
 use super::super::{ChunkId, WorkerId};
-use super::{TaskBundle, Transport};
+use super::{Delivery, TaskBundle, Transport};
 use crate::data::Batch;
 use crate::grad::GradientComputer;
 use crate::Result;
@@ -31,8 +41,11 @@ pub struct ThreadedTransport {
     senders: Vec<Sender<Request>>,
     receiver: Receiver<Response>,
     handles: Vec<JoinHandle<()>>,
-    /// Responses owed to the in-flight `(iter, phase)` gather.
-    outstanding: usize,
+    /// Responses still owed by worker threads (one per submitted
+    /// bundle, across all waves in flight).
+    in_flight: usize,
+    /// Wall-clock origin of the transport clock.
+    origin: Instant,
     pub n: usize,
 }
 
@@ -80,9 +93,9 @@ impl ThreadedTransport {
                                         ));
                                     }
                                     // a panic must become a Response, not a
-                                    // dead thread: gather counts responses,
-                                    // so a silently-lost worker would hang
-                                    // the master forever
+                                    // dead thread: the master counts one
+                                    // delivery per submitted bundle, so a
+                                    // silently-lost worker would stall it
                                     let result = std::panic::catch_unwind(
                                         std::panic::AssertUnwindSafe(|| {
                                             state.handle(iter, &theta, tasks)
@@ -116,10 +129,18 @@ impl ThreadedTransport {
                     .expect("spawn worker thread"),
             );
         }
-        ThreadedTransport { senders, receiver: resp_rx, handles, outstanding: 0, n }
+        ThreadedTransport {
+            senders,
+            receiver: resp_rx,
+            handles,
+            in_flight: 0,
+            origin: Instant::now(),
+            n,
+        }
     }
 
-    /// Send a compute request to one worker.
+    /// Send a compute request to one worker (does not count toward the
+    /// poll bookkeeping — use [`Transport::submit`] in protocol code).
     pub fn send(
         &self,
         w: WorkerId,
@@ -133,24 +154,15 @@ impl ThreadedTransport {
             .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))
     }
 
-    /// Collect exactly `expected` responses for (iter, phase).
-    pub fn collect(&self, iter: u64, phase: u32, expected: usize) -> Result<Vec<Response>> {
-        let mut out = Vec::with_capacity(expected);
-        while out.len() < expected {
-            let resp = self
-                .receiver
-                .recv()
-                .map_err(|_| anyhow::anyhow!("all workers disconnected"))?;
-            if let Some(err) = &resp.error {
-                anyhow::bail!("worker {} failed: {err}", resp.worker);
+    /// An engine error or panic is a crash-stop, not a run abort.
+    fn to_delivery(&self, resp: Response, at_ns: u64) -> Delivery {
+        match &resp.error {
+            Some(err) => {
+                log::warn!("worker {} failed: {err}", resp.worker);
+                Delivery::Failed { at_ns, worker: resp.worker }
             }
-            if resp.iter == iter && resp.phase == phase {
-                out.push(resp);
-            }
-            // responses from other (iter, phase) pairs cannot occur in
-            // the synchronous protocol; drop them defensively if they do
+            None => Delivery::Response { at_ns, response: resp },
         }
-        Ok(out)
     }
 }
 
@@ -159,7 +171,11 @@ impl Transport for ThreadedTransport {
         self.n
     }
 
-    fn scatter(
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    fn submit(
         &mut self,
         iter: u64,
         phase: u32,
@@ -168,20 +184,57 @@ impl Transport for ThreadedTransport {
     ) -> Result<()> {
         for TaskBundle { worker, tasks } in bundles {
             self.send(worker, iter, phase, theta, tasks)?;
-            self.outstanding += 1;
+            self.in_flight += 1;
         }
         Ok(())
     }
 
-    fn gather(&mut self, iter: u64, phase: u32) -> Result<Vec<Response>> {
-        let expected = std::mem::take(&mut self.outstanding);
-        let mut out = self.collect(iter, phase, expected)?;
-        out.sort_by_key(|r| r.worker);
+    fn poll(&mut self, deadline_ns: Option<u64>) -> Result<Vec<Delivery>> {
+        let mut out: Vec<Delivery> = Vec::new();
+        if self.in_flight == 0 {
+            return Ok(out);
+        }
+        // block for the first response (bounded by the deadline)
+        let first = match deadline_ns {
+            None => {
+                let r = self.receiver.recv();
+                Some(r.map_err(|_| anyhow::anyhow!("all workers disconnected"))?)
+            }
+            Some(d) => {
+                let now = self.now_ns();
+                if d <= now {
+                    // past the deadline: hand over whatever already
+                    // arrived, never block
+                    self.receiver.try_recv().ok()
+                } else {
+                    match self.receiver.recv_timeout(Duration::from_nanos(d - now)) {
+                        Ok(r) => Some(r),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            anyhow::bail!("all workers disconnected")
+                        }
+                    }
+                }
+            }
+        };
+        if let Some(resp) = first {
+            self.in_flight -= 1;
+            let at = self.now_ns();
+            out.push(self.to_delivery(resp, at));
+            // drain whatever else is already ready, without blocking
+            while self.in_flight > 0 {
+                match self.receiver.try_recv() {
+                    Ok(resp) => {
+                        self.in_flight -= 1;
+                        let at = self.now_ns();
+                        out.push(self.to_delivery(resp, at));
+                    }
+                    Err(_) => break,
+                }
+            }
+            out.sort_by_key(|d| d.worker());
+        }
         Ok(out)
-    }
-
-    fn take_failed(&mut self) -> Vec<WorkerId> {
-        Vec::new() // OS threads do not crash-stop; engine errors bail
     }
 
     fn shutdown(&mut self) {
@@ -191,6 +244,7 @@ impl Transport for ThreadedTransport {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        self.in_flight = 0;
     }
 }
 
@@ -228,15 +282,42 @@ mod tests {
         (pool, ds)
     }
 
+    /// Poll until `expected` responses for (iter, phase) arrived,
+    /// panicking on failures; returns them sorted by worker id.
+    fn collect(
+        pool: &mut ThreadedTransport,
+        iter: u64,
+        phase: u32,
+        expected: usize,
+    ) -> Vec<Response> {
+        let mut out: Vec<Response> = Vec::new();
+        while out.len() < expected {
+            for d in pool.poll(None).unwrap() {
+                match d {
+                    Delivery::Response { response, .. }
+                        if response.iter == iter && response.phase == phase =>
+                    {
+                        out.push(response)
+                    }
+                    Delivery::Response { .. } => {} // stale: dropped
+                    Delivery::Failed { worker, .. } => panic!("worker {worker} failed"),
+                }
+            }
+        }
+        out.sort_by_key(|r| r.worker);
+        out
+    }
+
     #[test]
     fn honest_workers_return_identical_symbols() {
-        let (pool, ds) = pool(3, vec![]);
+        let (mut pool, ds) = pool(3, vec![]);
         let theta = Arc::new(vec![0.1f32; 8]);
         let batch = ds.batch(&(0..16).collect::<Vec<_>>());
-        for w in 0..3 {
-            pool.send(w, 0, 0, &theta, vec![(5, batch.clone())]).unwrap();
-        }
-        let resps = pool.collect(0, 0, 3).unwrap();
+        let bundles = (0..3)
+            .map(|w| TaskBundle { worker: w, tasks: vec![(5, batch.clone())] })
+            .collect();
+        pool.submit(0, 0, &theta, bundles).unwrap();
+        let resps = collect(&mut pool, 0, 0, 3);
         assert_eq!(resps.len(), 3);
         let g0 = &resps[0].symbols[0].grad;
         for r in &resps {
@@ -249,12 +330,14 @@ mod tests {
 
     #[test]
     fn byzantine_worker_tampers() {
-        let (pool, ds) = pool(2, vec![1]);
+        let (mut pool, ds) = pool(2, vec![1]);
         let theta = Arc::new(vec![0.1f32; 8]);
         let batch = ds.batch(&(0..16).collect::<Vec<_>>());
-        pool.send(0, 0, 0, &theta, vec![(0, batch.clone())]).unwrap();
-        pool.send(1, 0, 0, &theta, vec![(0, batch.clone())]).unwrap();
-        let resps = pool.collect(0, 0, 2).unwrap();
+        let bundles = (0..2)
+            .map(|w| TaskBundle { worker: w, tasks: vec![(0, batch.clone())] })
+            .collect();
+        pool.submit(0, 0, &theta, bundles).unwrap();
+        let resps = collect(&mut pool, 0, 0, 2);
         let honest = resps.iter().find(|r| r.worker == 0).unwrap();
         let byz = resps.iter().find(|r| r.worker == 1).unwrap();
         assert!(byz.symbols[0].tampered);
@@ -264,42 +347,84 @@ mod tests {
     #[test]
     fn tamper_decision_is_per_iteration() {
         // p = 1.0 means tampering in EVERY iteration, across phases
-        let (pool, ds) = pool(1, vec![0]);
+        let (mut pool, ds) = pool(1, vec![0]);
         let theta = Arc::new(vec![0.1f32; 8]);
         let batch = ds.batch(&(0..16).collect::<Vec<_>>());
         for phase in 0..3u32 {
-            pool.send(0, 7, phase, &theta, vec![(0, batch.clone())]).unwrap();
-            let r = pool.collect(7, phase, 1).unwrap();
+            let bundles = vec![TaskBundle { worker: 0, tasks: vec![(0, batch.clone())] }];
+            pool.submit(7, phase, &theta, bundles).unwrap();
+            let r = collect(&mut pool, 7, phase, 1);
             assert!(r[0].symbols[0].tampered, "phase {phase}");
         }
     }
 
     #[test]
     fn multiple_chunks_per_request() {
-        let (pool, ds) = pool(1, vec![]);
+        let (mut pool, ds) = pool(1, vec![]);
         let theta = Arc::new(vec![0.0f32; 8]);
         let b1 = ds.batch(&(0..8).collect::<Vec<_>>());
         let b2 = ds.batch(&(8..16).collect::<Vec<_>>());
-        pool.send(0, 0, 0, &theta, vec![(0, b1), (1, b2)]).unwrap();
-        let r = pool.collect(0, 0, 1).unwrap();
+        pool.submit(0, 0, &theta, vec![TaskBundle { worker: 0, tasks: vec![(0, b1), (1, b2)] }])
+            .unwrap();
+        let r = collect(&mut pool, 0, 0, 1);
         assert_eq!(r[0].symbols.len(), 2);
         assert_ne!(r[0].symbols[0].grad, r[0].symbols[1].grad);
     }
 
     #[test]
-    fn scatter_gather_sorts_by_worker_id() {
+    fn deliveries_are_timestamped_and_batches_sorted() {
         let (mut pool, ds) = pool(4, vec![]);
         let theta = Arc::new(vec![0.1f32; 8]);
         let batch = ds.batch(&(0..16).collect::<Vec<_>>());
         let bundles: Vec<TaskBundle> = (0..4)
-            .rev() // scatter in reverse order on purpose
+            .rev() // submit in reverse order on purpose
             .map(|w| TaskBundle { worker: w, tasks: vec![(w, batch.clone())] })
             .collect();
-        pool.scatter(3, 0, &theta, bundles).unwrap();
-        let resps = pool.gather(3, 0).unwrap();
-        let ids: Vec<WorkerId> = resps.iter().map(|r| r.worker).collect();
-        assert_eq!(ids, vec![0, 1, 2, 3]);
-        assert!(pool.take_failed().is_empty());
+        pool.submit(3, 0, &theta, bundles).unwrap();
+        let mut got: Vec<(u64, WorkerId)> = Vec::new();
+        while got.len() < 4 {
+            let b = pool.poll(None).unwrap();
+            // within one poll batch: sorted by worker id
+            let ids: Vec<WorkerId> = b.iter().map(|d| d.worker()).collect();
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            assert_eq!(ids, sorted);
+            got.extend(b.into_iter().map(|d| (d.at_ns(), d.worker())));
+        }
+        // nothing left: an idle poll returns immediately
+        assert!(pool.poll(None).unwrap().is_empty());
         pool.shutdown();
+    }
+
+    #[test]
+    fn erroring_worker_becomes_failed_delivery() {
+        // a dim-mismatched batch makes the engine error; the master
+        // must see Delivery::Failed (crash-stop), not hang or abort
+        let (mut pool, ds) = pool(2, vec![]);
+        let theta = Arc::new(vec![0.1f32; 8]);
+        let good = ds.batch(&(0..16).collect::<Vec<_>>());
+        let bad = crate::data::Batch::LinReg { x: vec![0.0; 7], y: vec![0.0], b: 1, d: 7 };
+        pool.submit(
+            0,
+            0,
+            &theta,
+            vec![
+                TaskBundle { worker: 0, tasks: vec![(0, good)] },
+                TaskBundle { worker: 1, tasks: vec![(1, bad)] },
+            ],
+        )
+        .unwrap();
+        let mut ok = 0usize;
+        let mut failed: Vec<WorkerId> = Vec::new();
+        while ok + failed.len() < 2 {
+            for d in pool.poll(None).unwrap() {
+                match d {
+                    Delivery::Response { .. } => ok += 1,
+                    Delivery::Failed { worker, .. } => failed.push(worker),
+                }
+            }
+        }
+        assert_eq!(ok, 1);
+        assert_eq!(failed, vec![1]);
     }
 }

@@ -46,6 +46,7 @@ pub enum Request {
 }
 
 /// Worker -> master.
+#[derive(Debug)]
 pub struct Response {
     pub worker: WorkerId,
     pub iter: u64,

@@ -13,14 +13,16 @@
 //!   into loss/gradient functions with a uniform flat-parameter ABI,
 //!   AOT-lowered to HLO text by `python/compile/aot.py` into
 //!   `artifacts/`.
-//! * **L3** — this crate: a synchronous parameter-server master and a
-//!   pool of worker threads. The master assigns data points, collects
-//!   gradient *symbols*, runs the paper's deterministic / randomized /
-//!   adaptive fault-check policies, imposes **reactive redundancy** on
-//!   detection, identifies and eliminates Byzantine workers, and
-//!   applies SGD updates. Gradients are computed either natively (pure
-//!   Rust) or by executing the AOT artifacts on the PJRT CPU client
-//!   ([`runtime`]).
+//! * **L3** — this crate: a parameter-server master over a
+//!   completion-driven worker transport (threaded pool or virtual-time
+//!   simulator). The master assigns data points, collects gradient
+//!   *symbols* as they arrive (waiting for all of them, a K-of-N
+//!   quorum, or a deadline — `--gather`), runs the paper's
+//!   deterministic / randomized / adaptive fault-check policies,
+//!   imposes **reactive redundancy** on detection, identifies and
+//!   eliminates Byzantine workers, and applies SGD updates. Gradients
+//!   are computed either natively (pure Rust) or by executing the AOT
+//!   artifacts on the PJRT CPU client ([`runtime`]).
 //!
 //! Python never runs on the training path; after `make artifacts` the
 //! Rust binary is self-contained.

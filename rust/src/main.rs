@@ -3,8 +3,9 @@
 //! ```text
 //! r3bft train       [--config file.toml] [--model linreg|mlp|transformer]
 //!                   [--engine native|xla] [--policy ...] [--q 0.2] [--n 8]
-//!                   [--f 2] [--shards 1] [--attack sign_flip] [--p 1.0]
-//!                   [--steps 200] [--seed 42] [--csv out.csv]
+//!                   [--f 2] [--shards 1] [--transport threaded|sim]
+//!                   [--gather all|quorum:K|quorum:0.F|deadline:US] [--attack sign_flip]
+//!                   [--p 1.0] [--steps 200] [--seed 42] [--csv out.csv]
 //! r3bft experiment  <e1..e12|all> [--full]
 //! r3bft inspect     [--artifacts artifacts]
 //! r3bft help
@@ -13,7 +14,8 @@
 use std::sync::Arc;
 
 use r3bft::config::{
-    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig,
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, GatherPolicy, PolicyKind,
+    TrainConfig, TransportKind,
 };
 use r3bft::coordinator::master::{Master, MasterOptions};
 use r3bft::data::{BlobsDataset, Corpus, Dataset, LinRegDataset};
@@ -70,6 +72,13 @@ TRAIN OPTIONS (defaults in parens):
   --transport T      threaded | sim (threaded); sim runs workers in
                      deterministic virtual time (no OS threads, n can
                      be in the thousands)
+  --gather G         all | quorum:K | quorum:0.F | deadline:US (all);
+                     when the proactive gather may stop waiting —
+                     quorum:K proceeds after K responses (quorum:0.8 =
+                     80% of n, scaled per shard), deadline:US after US
+                     microseconds; stragglers' chunks are reassigned
+                     like crashed workers', detection/reactive phases
+                     still wait for every requested copy
   --attack A         sign_flip|noise|constant|zero|small_bias|collude (sign_flip)
   --p P              per-iteration tamper probability (1.0)
   --magnitude M      attack magnitude (1.0)
@@ -103,7 +112,20 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.cluster.seed = args.u64("seed", cfg.cluster.seed);
     if let Some(t) = args.get("transport") {
-        cfg.cluster.transport = t.to_string();
+        cfg.cluster.transport = TransportKind::parse(t)?;
+    }
+    if let Some(g) = args.get("gather") {
+        cfg.cluster.gather = GatherPolicy::parse(g, cfg.cluster.n)?;
+    } else if args.get("n").is_some() {
+        // a fractional cluster.gather from the config file was resolved
+        // against the file's n; re-resolve it against the overridden n
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)?;
+            let doc = r3bft::config::toml::TomlDoc::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            cfg.cluster.gather =
+                GatherPolicy::parse(&doc.str_or("cluster.gather", "all"), cfg.cluster.n)?;
+        }
     }
     cfg.cluster.shards = args.usize("shards", cfg.cluster.shards);
     if let Some(kind) = args.get("policy") {
@@ -181,12 +203,14 @@ fn run_train(args: &Args) -> Result<()> {
     let opts = MasterOptions { self_check, w_star, ..Default::default() };
 
     log::info!(
-        "train: model={} engine={} n={} f={} shards={} policy={:?} attack={:?} steps={}",
+        "train: model={} engine={} n={} f={} shards={} transport={} gather={} policy={:?} attack={:?} steps={}",
         cfg.train.model,
         cfg.train.engine,
         cfg.cluster.n,
         cfg.cluster.f,
         cfg.cluster.shards,
+        cfg.cluster.transport.name(),
+        cfg.cluster.gather.describe(),
         cfg.policy,
         cfg.attack.kind,
         cfg.train.steps
@@ -203,6 +227,8 @@ fn run_train(args: &Args) -> Result<()> {
     println!("audit rate           : {:.4}", out.metrics.audit_rate());
     println!("faulty updates       : {:.4}", out.metrics.faulty_update_rate());
     println!("faults detected      : {}", out.events.detections());
+    println!("mean round time      : {:.1} us", out.metrics.mean_round_ns() / 1e3);
+    println!("stragglers abandoned : {}", out.events.stragglers());
     println!("eliminated workers   : {:?}", out.eliminated);
     if let Some(d) = out.metrics.iterations.last().and_then(|r| r.dist_to_opt) {
         println!("dist to optimum      : {d:.3e}");

@@ -1,0 +1,380 @@
+//! Completion-driven gather tests: `Quorum { k: n }` must be
+//! bit-identical to `All` on both transports, a quorum gather must cut
+//! straggler-dominated virtual round time to quorum-dominated, late
+//! deliveries from an abandoned wave must be drained (never ingested),
+//! deadlines must cap the wait, and sharded runs must apply the quorum
+//! per shard.
+
+use std::sync::Arc;
+
+use r3bft::config::{
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, GatherPolicy, PolicyKind,
+    TrainConfig,
+};
+use r3bft::coordinator::byzantine::ByzantineBehavior;
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::coordinator::protocol::{ProtocolConfig, ProtocolCore};
+use r3bft::coordinator::{
+    EventLog, FaultCheckPolicy, LatencyModel, SimConfig, SimTransport, TrainOutcome,
+};
+use r3bft::data::LinRegDataset;
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    n: usize,
+    f: usize,
+    byz: Vec<usize>,
+    policy: PolicyKind,
+    attack: AttackConfig,
+    steps: usize,
+    seed: u64,
+    transport: &str,
+    shards: usize,
+    gather: GatherPolicy,
+    sim: SimConfig,
+) -> TrainOutcome {
+    let mut cluster = ClusterConfig::new(n, f, seed);
+    cluster.byzantine_ids = byz;
+    cluster.transport = transport.into();
+    cluster.gather = gather;
+    cluster.shards = shards;
+    let cfg = ExperimentConfig {
+        name: "gather-test".into(),
+        cluster,
+        policy,
+        attack,
+        train: TrainConfig { steps, lr: 0.5, ..Default::default() },
+    };
+    let d = 16usize;
+    let chunk = 8usize;
+    let ds = Arc::new(LinRegDataset::generate(2048, d, 0.0, seed));
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(seed);
+    let opts = MasterOptions { sim, ..Default::default() };
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    master.run().expect("train")
+}
+
+fn mean_round_us(out: &TrainOutcome) -> f64 {
+    out.metrics.mean_round_ns() / 1e3
+}
+
+/// Property: a quorum of the whole cluster never stops early, so
+/// `Quorum { k: n }` is bit-identical to `All` — on both transports,
+/// with liars, audits, and (for sim) nonzero latency + a straggler.
+#[test]
+fn quorum_of_n_is_bit_identical_to_all_on_both_transports() {
+    let byz = vec![2usize, 5];
+    let attack = AttackConfig { kind: AttackKind::SignFlip, p: 0.6, magnitude: 2.0 };
+    let scenarios: Vec<(&str, SimConfig)> = vec![
+        ("threaded", SimConfig::default()),
+        ("sim", SimConfig::default()),
+        (
+            "sim",
+            SimConfig {
+                latency: LatencyModel::Fixed { us: 100 },
+                stragglers: vec![(7, 10.0)],
+                ..Default::default()
+            },
+        ),
+    ];
+    for (transport, sim) in scenarios {
+        let all = run(
+            9,
+            2,
+            byz.clone(),
+            PolicyKind::Bernoulli { q: 0.3 },
+            attack.clone(),
+            100,
+            7,
+            transport,
+            1,
+            GatherPolicy::All,
+            sim.clone(),
+        );
+        let quorum = run(
+            9,
+            2,
+            byz.clone(),
+            PolicyKind::Bernoulli { q: 0.3 },
+            attack.clone(),
+            100,
+            7,
+            transport,
+            1,
+            GatherPolicy::Quorum { k: 9 },
+            sim,
+        );
+        let label = format!("{transport}: Quorum{{k=n}} vs All");
+        assert_eq!(all.theta, quorum.theta, "{label}: theta diverged");
+        assert_eq!(all.eliminated, quorum.eliminated, "{label}: eliminated diverged");
+        assert_eq!(all.events.audits(), quorum.events.audits(), "{label}");
+        assert_eq!(all.events.detections(), quorum.events.detections(), "{label}");
+        assert_eq!(quorum.events.stragglers(), 0, "{label}: k=n abandoned someone");
+    }
+}
+
+/// At zero latency every delivery of a wave shares one arrival
+/// instant, so even a partial quorum ingests the full wave on the
+/// deterministic simulator — quorum only bites when stragglers exist.
+#[test]
+fn partial_quorum_at_zero_latency_is_bit_identical_to_all_on_sim() {
+    let byz = vec![1usize, 4];
+    let attack = AttackConfig { kind: AttackKind::Noise, p: 1.0, magnitude: 3.0 };
+    let all = run(
+        9,
+        2,
+        byz.clone(),
+        PolicyKind::Deterministic,
+        attack.clone(),
+        80,
+        11,
+        "sim",
+        1,
+        GatherPolicy::All,
+        SimConfig::default(),
+    );
+    let quorum = run(
+        9,
+        2,
+        byz,
+        PolicyKind::Deterministic,
+        attack,
+        80,
+        11,
+        "sim",
+        1,
+        GatherPolicy::Quorum { k: 5 },
+        SimConfig::default(),
+    );
+    assert_eq!(all.theta, quorum.theta, "zero-latency partial quorum diverged");
+    assert_eq!(all.eliminated, quorum.eliminated);
+    assert_eq!(quorum.events.stragglers(), 0);
+}
+
+/// The headline scenario: one 50x straggler. Under `All` every round
+/// waits ~5000us of virtual time for it; under `Quorum { n-1 }` the
+/// round proceeds at ~100us plus one ~100us reassignment wave.
+#[test]
+fn quorum_cuts_straggler_round_time() {
+    let n = 16usize;
+    let steps = 10usize;
+    let sim = SimConfig {
+        latency: LatencyModel::Fixed { us: 100 },
+        stragglers: vec![(n - 1, 50.0)],
+        ..Default::default()
+    };
+    let all = run(
+        n,
+        0,
+        vec![],
+        PolicyKind::None,
+        AttackConfig::default(),
+        steps,
+        13,
+        "sim",
+        1,
+        GatherPolicy::All,
+        sim.clone(),
+    );
+    let quorum = run(
+        n,
+        0,
+        vec![],
+        PolicyKind::None,
+        AttackConfig::default(),
+        steps,
+        13,
+        "sim",
+        1,
+        GatherPolicy::Quorum { k: n - 1 },
+        sim,
+    );
+    let all_us = mean_round_us(&all);
+    let quorum_us = mean_round_us(&quorum);
+    // All is straggler-dominated: 100us * 50
+    assert!(
+        (all_us - 5000.0).abs() < 1.0,
+        "All round should be straggler-dominated: {all_us}us"
+    );
+    // Quorum is quorum-dominated: base wave + reassignment wave
+    assert!(
+        quorum_us <= 500.0,
+        "Quorum round should be quorum-dominated: {quorum_us}us"
+    );
+    assert!(
+        all_us >= 2.0 * quorum_us,
+        "quorum speedup below 2x: all={all_us}us quorum={quorum_us}us"
+    );
+    // the straggler was abandoned every round but never crashed or
+    // eliminated, and the update still used every sampled gradient
+    assert_eq!(quorum.events.stragglers(), steps);
+    assert!(quorum.crashed.is_empty());
+    assert!(quorum.eliminated.is_empty());
+    for rec in &quorum.metrics.iterations {
+        assert_eq!(rec.stragglers, 1);
+        assert_eq!(rec.gradients_used, (n * 8) as u64, "m must be unchanged");
+        assert!(rec.round_ns > 0);
+    }
+}
+
+/// Cross-phase drain: the straggler here is Byzantine AND abandoned by
+/// the proactive quorum; its late (tampered) proactive delivery
+/// arrives while the detection wave is in flight and must be drained,
+/// not ingested — so detection sees only honest copies and flags
+/// nothing.
+#[test]
+fn late_proactive_delivery_is_drained_not_ingested() {
+    let n = 4usize;
+    let seed = 21u64;
+    let cs = 4usize;
+    let d = 8usize;
+    let ds = LinRegDataset::generate(256, d, 0.0, seed);
+    let engine: Arc<dyn GradientComputer> =
+        Arc::new(NativeEngine::new(ModelSpec::LinReg { d, batch: cs }));
+    let attack = AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 3.0 };
+    // worker 3: Byzantine and a 1.5x straggler, so its proactive
+    // delivery (150us) lands mid-detection (detection wave: 100->200us)
+    let sim = SimConfig {
+        latency: LatencyModel::Fixed { us: 100 },
+        stragglers: vec![(3, 1.5)],
+        ..Default::default()
+    };
+    let transport = SimTransport::new(
+        n,
+        engine.clone(),
+        |w| (w == 3).then(|| ByzantineBehavior::new(attack.clone(), seed, w)),
+        None,
+        sim,
+    );
+    let policy = FaultCheckPolicy::new(PolicyKind::Deterministic, n, seed);
+    let mut core = ProtocolCore::new(
+        Box::new(transport),
+        policy,
+        ProtocolConfig {
+            f: 1,
+            seed,
+            chunk_size: cs,
+            self_check: false,
+            tol: 0.0,
+            no_eliminate: false,
+            compressor: None,
+            gather: GatherPolicy::Quorum { k: 3 },
+        },
+    );
+    let theta = Arc::new(vec![0.1f32; d]);
+    let mut events = EventLog::default();
+    let out = core
+        .run_round(0, &theta, &ds, engine.as_ref(), &mut events)
+        .expect("round");
+    // the straggler was abandoned...
+    assert_eq!(out.stragglers_now, vec![3]);
+    assert_eq!(events.stragglers(), 1);
+    // ...and despite its tampered symbols arriving mid-detection, no
+    // copy of worker 3 exists anywhere in the round
+    let round = core.round();
+    for c in 0..round.nchunks() {
+        assert!(
+            round.chunks[c].copies.iter().all(|s| s.worker != 3),
+            "chunk {c} ingested a drained symbol"
+        );
+        // deterministic policy: every audited chunk reached f_t+1 copies
+        assert!(round.chunks[c].copies.len() >= 2, "chunk {c} under-replicated");
+    }
+    // only honest copies were compared: no fault, no elimination
+    assert_eq!(out.faults_detected, 0, "a drained tampered symbol was compared");
+    assert!(out.identified_now.is_empty());
+    assert!(out.crashed_now.is_empty(), "a straggle is not a crash");
+    // wave timeline: proactive 100us + detection top-up 100us
+    assert_eq!(out.round_ns, 200_000);
+}
+
+/// Deadline gather: the wave ends at the deadline (never
+/// empty-handed), stragglers' chunks are reassigned, training goes on.
+#[test]
+fn deadline_gather_proceeds_at_the_deadline() {
+    let n = 8usize;
+    let steps = 5usize;
+    let sim = SimConfig {
+        latency: LatencyModel::Fixed { us: 100 },
+        stragglers: vec![(n - 1, 50.0)],
+        ..Default::default()
+    };
+    let out = run(
+        n,
+        0,
+        vec![],
+        PolicyKind::None,
+        AttackConfig::default(),
+        steps,
+        23,
+        "sim",
+        1,
+        GatherPolicy::Deadline { us: 300 },
+        sim,
+    );
+    let us = mean_round_us(&out);
+    assert!(
+        (300.0..1000.0).contains(&us),
+        "deadline round should cost ~deadline + one reassignment wave, got {us}us"
+    );
+    assert_eq!(out.events.stragglers(), steps);
+    assert!(out.crashed.is_empty());
+}
+
+/// Sharded runs scale the quorum to each shard's width: a straggler in
+/// one shard stops gating only that shard, and the whole fan-out is
+/// quorum-dominated.
+#[test]
+fn sharded_quorum_gather_is_per_shard() {
+    let n = 64usize;
+    let k = 4usize;
+    let steps = 6usize;
+    let sim = SimConfig {
+        latency: LatencyModel::Fixed { us: 100 },
+        stragglers: vec![(63, 50.0)], // lives in shard 3
+        ..Default::default()
+    };
+    let all = run(
+        n,
+        0,
+        vec![],
+        PolicyKind::None,
+        AttackConfig::default(),
+        steps,
+        29,
+        "sim",
+        k,
+        GatherPolicy::All,
+        sim.clone(),
+    );
+    // cluster-level quorum:0.9 -> ceil(0.9 * 16) = 15-of-16 per shard
+    let quorum = run(
+        n,
+        0,
+        vec![],
+        PolicyKind::None,
+        AttackConfig::default(),
+        steps,
+        29,
+        "sim",
+        k,
+        GatherPolicy::parse("quorum:0.9", n).expect("parse"),
+        sim,
+    );
+    let all_us = mean_round_us(&all);
+    let quorum_us = mean_round_us(&quorum);
+    assert!(
+        all_us >= 2.0 * quorum_us,
+        "per-shard quorum speedup below 2x: all={all_us}us quorum={quorum_us}us"
+    );
+    assert_eq!(quorum.events.stragglers(), steps, "one abandonment per round");
+    // the shard dimension carries the straggler and its round time
+    let rec = &quorum.metrics.iterations[0];
+    assert_eq!(rec.shard_stats.len(), k);
+    assert_eq!(rec.shard_stats.iter().map(|s| s.stragglers).sum::<usize>(), 1);
+    assert!(rec.round_ns > 0);
+    assert!(quorum.crashed.is_empty() && quorum.eliminated.is_empty());
+}
