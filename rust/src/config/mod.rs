@@ -7,6 +7,14 @@ use crate::Result;
 use anyhow::{bail, Context};
 use toml::TomlDoc;
 
+/// Default assumed per-iteration tamper probability p for policies
+/// that model the adversary (the paper's §4.2-§4.3 analysis treats p
+/// as a parameter the master postulates). This is the value every
+/// non-adaptive policy falls back to, and the default the CLI/config
+/// offer for `--p-assumed` / `policy.p_assumed` — kept here as a named
+/// constant instead of a literal buried in `FaultCheckPolicy::new`.
+pub const DEFAULT_P_ASSUMED: f64 = 0.5;
+
 /// Which fault-check policy the master runs (paper §2, §4).
 #[derive(Clone, Debug, PartialEq)]
 pub enum PolicyKind {
@@ -21,6 +29,11 @@ pub enum PolicyKind {
     /// Selective generalization (§5): per-worker probabilities from
     /// reliability scores + outlier boosting on top of a base q.
     Selective { q_base: f64 },
+    /// Latency-aware selective auditing: per-worker probabilities from
+    /// the fused suspicion score (delivery-latency anomaly + the §5
+    /// reliability deficit — see `coordinator::latency`), so slow or
+    /// previously-suspect workers are audited first.
+    LatencySelective { q_base: f64 },
 }
 
 impl PolicyKind {
@@ -31,6 +44,9 @@ impl PolicyKind {
             "bernoulli" | "randomized" => PolicyKind::Bernoulli { q },
             "adaptive" => PolicyKind::Adaptive { p_assumed },
             "selective" => PolicyKind::Selective { q_base: q },
+            "latency-selective" | "latency_selective" => {
+                PolicyKind::LatencySelective { q_base: q }
+            }
             other => bail!("unknown policy kind '{other}'"),
         })
     }
@@ -378,7 +394,7 @@ impl ExperimentConfig {
         let policy = PolicyKind::parse(
             &doc.str_or("policy.kind", "bernoulli"),
             doc.f64_or("policy.q", 0.2),
-            doc.f64_or("policy.p_assumed", 0.5),
+            doc.f64_or("policy.p_assumed", DEFAULT_P_ASSUMED),
         )?;
 
         let attack = AttackConfig {
@@ -504,6 +520,14 @@ mod tests {
         assert_eq!(
             PolicyKind::parse("deterministic", 0.0, 0.0).unwrap(),
             PolicyKind::Deterministic
+        );
+        assert_eq!(
+            PolicyKind::parse("latency-selective", 0.25, 0.0).unwrap(),
+            PolicyKind::LatencySelective { q_base: 0.25 }
+        );
+        assert_eq!(
+            PolicyKind::parse("latency_selective", 0.25, 0.0).unwrap(),
+            PolicyKind::LatencySelective { q_base: 0.25 }
         );
         assert!(PolicyKind::parse("bogus", 0.0, 0.0).is_err());
     }

@@ -16,7 +16,12 @@ pub struct AdaptiveState {
     /// low-amplitude attacker survive forever; the §4.2 almost-sure
     /// identification guarantee needs q bounded away from 0. The floor
     /// is not applied when p = 0 or f_t = 0 (the paper's exact
-    /// boundary conditions).
+    /// boundary conditions). The `latency-selective` policy attacks
+    /// the same low-loss blind spot from the other side: instead of a
+    /// uniform floor it keeps auditing the workers whose *timing*
+    /// ([`super::latency`]) or reliability history is anomalous, so a
+    /// quiet attacker pays for being slow even when the loss signal
+    /// says nothing.
     pub q_floor: f64,
     /// λ_t, q*_t of the most recent decision (exposed for logging/E5).
     pub last_lambda: f64,

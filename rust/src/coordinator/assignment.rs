@@ -98,6 +98,40 @@ impl Assignment {
         added
     }
 
+    /// Suspicion-weighted variant of [`Assignment::extend`]: extend
+    /// chunk `c` by `extra` additional distinct owners, choosing the
+    /// candidates with the **lowest** `rank` value first (ties broken
+    /// by ascending worker id). The latency-aware audit policy passes
+    /// its per-worker suspicion scores here, so replicas of a chunk
+    /// owned by a suspect/slow worker land on trusted/fast workers
+    /// first — exactness under 2f < n is untouched, because audit
+    /// waves still collect every requested copy regardless of who
+    /// serves it. Fully deterministic (no RNG draw), so it never
+    /// perturbs the shuffle stream used by [`Assignment::extend`].
+    pub fn extend_ranked(&mut self, c: ChunkId, extra: usize, rank: &[f64]) -> Vec<WorkerId> {
+        let mut candidates: Vec<WorkerId> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|w| !self.owners[c].contains(w))
+            .collect();
+        assert!(
+            candidates.len() >= extra,
+            "cannot extend chunk {c} by {extra}: only {} candidates",
+            candidates.len()
+        );
+        let score = |w: WorkerId| rank.get(w).copied().unwrap_or(0.0);
+        candidates.sort_by(|&a, &b| {
+            score(a)
+                .partial_cmp(&score(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let added: Vec<WorkerId> = candidates[..extra].to_vec();
+        self.owners[c].extend_from_slice(&added);
+        added
+    }
+
     /// Remove a worker from this iteration's candidate pool (used when
     /// a worker crash-stops mid-round): it will not be chosen by
     /// subsequent [`Assignment::extend`] calls. Its existing ownership
@@ -187,6 +221,33 @@ mod tests {
         assert_eq!(added.len(), 2);
         a.validate().unwrap();
         assert_eq!(a.owners[2].len(), 5);
+    }
+
+    #[test]
+    fn extend_ranked_prefers_trusted_workers() {
+        let active: Vec<usize> = (0..6).collect();
+        let data: Vec<usize> = (0..12).collect();
+        let mut a = Assignment::new(&data, &active, 1);
+        // chunk 2 is owned by worker 2; suspicion: 4 and 5 are suspect,
+        // 0 is mildly suspect, 1 and 3 are clean
+        let rank = vec![0.2, 0.0, 0.9, 0.0, 0.8, 0.7];
+        let added = a.extend_ranked(2, 3, &rank);
+        assert_eq!(added, vec![1, 3, 0], "cleanest candidates first, ties by id");
+        a.validate().unwrap();
+        assert_eq!(a.owners[2], vec![2, 1, 3, 0]);
+        // retired workers are never chosen even if trusted
+        a.retire(1);
+        let added = a.extend_ranked(0, 2, &rank);
+        assert_eq!(added, vec![3, 5], "retired worker 1 skipped, then next-cleanest");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot extend")]
+    fn extend_ranked_beyond_cluster_panics() {
+        let active: Vec<usize> = (0..3).collect();
+        let data: Vec<usize> = (0..3).collect();
+        let mut a = Assignment::new(&data, &active, 3);
+        a.extend_ranked(0, 1, &[0.0; 3]);
     }
 
     #[test]

@@ -25,6 +25,12 @@ pub enum Event {
     /// its late delivery is drained, but it rejoins next round. The
     /// raw material for latency-aware audit policies.
     StragglerAbandoned { iter: u64, worker: WorkerId },
+    /// A worker's fused suspicion score (latency anomaly blended with
+    /// its reliability deficit — see `coordinator::latency`) moved
+    /// materially. Emitted once per material change, not per round, so
+    /// the log stays bounded; the latest event per worker is its
+    /// current score.
+    SuspicionUpdated { iter: u64, worker: WorkerId, suspicion: f64 },
     /// A faulty gradient slipped into the update (oracle knowledge —
     /// only the simulator can emit this, never the real master).
     OracleFaultyUpdate { iter: u64 },
@@ -120,6 +126,30 @@ impl EventLog {
         self.count(|e| matches!(e, Event::StragglerAbandoned { .. }))
     }
 
+    /// Suspicion-change events, in emission order.
+    pub fn suspicion_updates(&self) -> Vec<(u64, WorkerId, f64)> {
+        self.flat()
+            .filter_map(|e| match e {
+                Event::SuspicionUpdated { iter, worker, suspicion } => {
+                    Some((*iter, *worker, *suspicion))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// A worker's most recently reported suspicion (None if never).
+    pub fn last_suspicion(&self, w: WorkerId) -> Option<f64> {
+        self.flat()
+            .filter_map(|e| match e {
+                Event::SuspicionUpdated { worker, suspicion, .. } if *worker == w => {
+                    Some(*suspicion)
+                }
+                _ => None,
+            })
+            .last()
+    }
+
     pub fn dead_shards(&self) -> Vec<usize> {
         let mut ss: Vec<usize> = self
             .events
@@ -157,6 +187,24 @@ mod tests {
         assert_eq!(log.identification_time(2), Some(0));
         assert_eq!(log.identification_time(0), Some(5));
         assert_eq!(log.identification_time(7), None);
+    }
+
+    #[test]
+    fn suspicion_queries_see_through_shard_wrapping() {
+        let mut log = EventLog::default();
+        log.push(Event::SuspicionUpdated { iter: 2, worker: 5, suspicion: 0.25 });
+        log.push(Event::Shard {
+            shard: 1,
+            inner: Box::new(Event::SuspicionUpdated { iter: 4, worker: 5, suspicion: 0.75 }),
+        });
+        log.push(Event::SuspicionUpdated { iter: 6, worker: 2, suspicion: 0.5 });
+        assert_eq!(
+            log.suspicion_updates(),
+            vec![(2, 5, 0.25), (4, 5, 0.75), (6, 2, 0.5)]
+        );
+        assert_eq!(log.last_suspicion(5), Some(0.75));
+        assert_eq!(log.last_suspicion(2), Some(0.5));
+        assert_eq!(log.last_suspicion(9), None);
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! Latency-aware worker profiling: timing as a Byzantine signal.
+//!
+//! The paper's reactive-redundancy schemes (§4-§5) decide *when* to
+//! audit from loss signals alone. The completion-driven transport
+//! timestamps every [`super::transport::Delivery`], which exposes a
+//! second, free signal: **how long each worker takes to answer**. A
+//! worker that is consistently much slower than its peers is worth
+//! extra scrutiny — it may be overloaded, co-tenanted with an
+//! attacker, or spending its cycles computing something other than the
+//! assigned gradient (Election Coding (Sohn et al., 2019) tunes
+//! per-node redundancy to node trustworthiness; Jin et al. (2019)
+//! weight workers by an online suspicion statistic instead of auditing
+//! uniformly).
+//!
+//! This module keeps one [`LatencyProfile`] per worker — an EWMA mean
+//! and variance of the worker's delivery latency — and turns the
+//! profiles into a per-worker *latency anomaly* in [0, 1]:
+//!
+//! * observations are the worker's delivery delay **relative to the
+//!   wave's first arrival**, on the transport clock (virtual ns under
+//!   sim, wall-clock ns under threaded), quantized to [`QUANTUM_NS`]
+//!   buckets. Quantization is what keeps suspicion **bit-identical
+//!   across transports at zero latency**: a zero-latency simulated
+//!   wave arrives at one instant (observation exactly 0), and a
+//!   threaded wave's sub-millisecond scheduling jitter quantizes to
+//!   the same 0 (asserted by `tests/test_latency.rs`);
+//! * a worker abandoned by a quorum/deadline wave yields a *censored*
+//!   observation — it was at least as slow as the wave cutoff — with a
+//!   penalty factor, so repeated abandonment alone raises anomaly;
+//! * [`LatencyTracker::refresh`] compares each profile's mean against
+//!   the **median of the active cluster's means** and reports an
+//!   anomaly only past three gates (minimum sample count, minimum
+//!   absolute excess, minimum ratio), so one scheduling hiccup or a
+//!   noisy-but-healthy cluster never manufactures a suspect.
+//!
+//! The anomaly is fused with the audit policy's reliability score
+//! ([`super::policy::FaultCheckPolicy`]) by [`fuse_suspicion`] into
+//! the per-worker *suspicion score* that drives the
+//! `latency-selective` audit policy and the suspicion-ranked chunk
+//! re-replication ([`super::assignment::Assignment::extend_ranked`]).
+
+use super::WorkerId;
+
+/// Observation quantum: latencies are bucketed to whole milliseconds
+/// before entering a profile. Coarse on purpose — see the module docs
+/// for why this buys cross-transport determinism at zero latency.
+pub const QUANTUM_NS: u64 = 1_000_000;
+
+/// EWMA step for the profile mean/variance (≈ the last ~10 rounds
+/// dominate, so a straggler that recovers sheds its anomaly quickly).
+pub const EWMA_ALPHA: f64 = 0.2;
+
+/// A worker's mean must exceed `SLOW_RATIO` × the cluster median
+/// before it counts as anomalous.
+pub const SLOW_RATIO: f64 = 2.0;
+
+/// ... and exceed the median by at least this many quanta in absolute
+/// terms (2 ms), so µs-scale jitter around a µs-scale median is never
+/// anomalous.
+pub const MIN_EXCESS_QUANTA: f64 = 2.0;
+
+/// ... and have at least this many observations, so a single early
+/// scheduling hiccup decays out of the EWMA before anomalies are
+/// allowed at all.
+pub const MIN_SAMPLES: u64 = 5;
+
+/// Censoring penalty for abandoned stragglers: an abandoned worker is
+/// at least as slow as the wave cutoff, so it is charged the cutoff
+/// times this factor (floored at the anomaly gates, so abandonment
+/// always registers).
+pub const ABANDON_PENALTY: f64 = 2.0;
+
+/// Weight of the latency anomaly in the fused suspicion score.
+pub const LATENCY_WEIGHT: f64 = 0.5;
+
+/// Weight of the reliability deficit (1 - ρ) in the fused score.
+pub const RELIABILITY_WEIGHT: f64 = 0.5;
+
+/// Minimum change in a worker's suspicion before a new
+/// [`super::events::Event::SuspicionUpdated`] is emitted for it, so
+/// the event log stays bounded by *changes*, not rounds × workers.
+pub const SUSPICION_EVENT_DELTA: f64 = 0.05;
+
+/// Fuse a latency anomaly and a reliability score into the per-worker
+/// suspicion in [0, 1] (0 = fully trusted, 1 = maximally suspect).
+pub fn fuse_suspicion(anomaly: f64, reliability: f64) -> f64 {
+    (LATENCY_WEIGHT * anomaly + RELIABILITY_WEIGHT * (1.0 - reliability)).clamp(0.0, 1.0)
+}
+
+/// One worker's online latency profile (units: [`QUANTUM_NS`] quanta).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyProfile {
+    /// EWMA of the worker's quantized delivery latency.
+    pub mean: f64,
+    /// EWMA variance around that mean. Kept for introspection and
+    /// diagnostics (how noisy is this worker's timing?) — the anomaly
+    /// gates in [`LatencyTracker::refresh`] deliberately use only the
+    /// mean, because a variance-scaled gate would let a *consistently*
+    /// slow worker (tiny variance) look exactly as legitimate as a
+    /// fast one.
+    pub var: f64,
+    /// Observations folded in so far.
+    pub samples: u64,
+}
+
+impl LatencyProfile {
+    /// Fold one quantized observation into the profile. The mean
+    /// starts at 0 (a fresh worker is presumed fast), so a profile
+    /// ramps toward a straggler's true latency over ~1/α rounds
+    /// instead of trusting the first sample outright.
+    pub fn observe(&mut self, quanta: f64) {
+        let delta = quanta - self.mean;
+        self.mean += EWMA_ALPHA * delta;
+        self.var = (1.0 - EWMA_ALPHA) * (self.var + EWMA_ALPHA * delta * delta);
+        self.samples += 1;
+    }
+
+    /// EWMA standard deviation (quanta).
+    pub fn std(&self) -> f64 {
+        self.var.sqrt()
+    }
+}
+
+/// Per-worker latency profiles plus the cluster-relative anomaly
+/// scores derived from them. Owned by the audit policy; fed by the
+/// protocol core's `wait_wave` as deliveries arrive.
+#[derive(Clone, Debug)]
+pub struct LatencyTracker {
+    profiles: Vec<LatencyProfile>,
+    anomaly: Vec<f64>,
+    /// Reused buffer for the cluster-median computation.
+    scratch: Vec<f64>,
+}
+
+impl LatencyTracker {
+    pub fn new(n_workers: usize) -> LatencyTracker {
+        LatencyTracker {
+            profiles: vec![LatencyProfile::default(); n_workers],
+            anomaly: vec![0.0; n_workers],
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn profile(&self, w: WorkerId) -> &LatencyProfile {
+        &self.profiles[w]
+    }
+
+    /// Record one delivery: `excess_ns` is the delay behind the wave's
+    /// first arrival, on the transport clock.
+    pub fn observe_ns(&mut self, w: WorkerId, excess_ns: u64) {
+        self.profiles[w].observe((excess_ns / QUANTUM_NS) as f64);
+    }
+
+    /// Record an abandonment: the quorum/deadline wave stopped waiting
+    /// for `w` once `cutoff_excess_ns` had passed since the wave's
+    /// first arrival (the same baseline as [`LatencyTracker::observe_ns`],
+    /// so the profile never mixes submit-relative and arrival-relative
+    /// quantities), so the worker's excess is right-censored at the
+    /// cutoff. Charge the cutoff with a penalty, floored so the signal
+    /// registers even when the cutoff itself is sub-quantum.
+    pub fn observe_abandoned(&mut self, w: WorkerId, cutoff_excess_ns: u64) {
+        let censored = ((cutoff_excess_ns / QUANTUM_NS) as f64 * ABANDON_PENALTY)
+            .max(MIN_EXCESS_QUANTA * SLOW_RATIO);
+        self.profiles[w].observe(censored);
+    }
+
+    /// Recompute every active worker's anomaly against the cluster:
+    /// the median of the active means (floored at one quantum) is the
+    /// baseline, and a worker is anomalous only past all three gates
+    /// (see the module docs). The anomaly grows linearly from 0 at
+    /// `SLOW_RATIO`× the median to 1 at `2·SLOW_RATIO`× and saturates.
+    pub fn refresh(&mut self, active: &[WorkerId]) {
+        self.scratch.clear();
+        self.scratch.extend(active.iter().map(|&w| self.profiles[w].mean));
+        if self.scratch.is_empty() {
+            return;
+        }
+        // in-place nearest-rank median (same rank `stats::median`
+        // picks), so the reused buffer really is allocation-free
+        self.scratch
+            .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let med = self.scratch[self.scratch.len() / 2].max(1.0);
+        for &w in active {
+            let p = &self.profiles[w];
+            let ratio = p.mean / med;
+            let excess = p.mean - med;
+            self.anomaly[w] = if p.samples < MIN_SAMPLES
+                || excess < MIN_EXCESS_QUANTA
+                || ratio <= SLOW_RATIO
+            {
+                0.0
+            } else {
+                ((ratio - SLOW_RATIO) / SLOW_RATIO).min(1.0)
+            };
+        }
+    }
+
+    /// Latency anomaly in [0, 1] from the most recent refresh.
+    pub fn anomaly(&self, w: WorkerId) -> f64 {
+        self.anomaly[w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn active(n: usize) -> Vec<WorkerId> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn profile_converges_to_a_steady_latency() {
+        let mut p = LatencyProfile::default();
+        for _ in 0..60 {
+            p.observe(5.0);
+        }
+        assert!((p.mean - 5.0).abs() < 1e-3, "mean {}", p.mean);
+        assert!(p.std() < 1e-1, "steady input should have tiny spread");
+        assert_eq!(p.samples, 60);
+    }
+
+    #[test]
+    fn zero_latency_cluster_has_zero_anomaly() {
+        let mut t = LatencyTracker::new(4);
+        for _ in 0..10 {
+            for w in 0..4 {
+                t.observe_ns(w, 0);
+            }
+            t.refresh(&active(4));
+        }
+        for w in 0..4 {
+            assert_eq!(t.anomaly(w), 0.0, "worker {w}");
+            assert_eq!(t.profile(w).mean, 0.0);
+        }
+    }
+
+    #[test]
+    fn sub_quantum_jitter_is_invisible() {
+        // threaded-transport scheduling noise: hundreds of µs, always
+        // below the 1 ms quantum — must quantize to exactly 0
+        let mut t = LatencyTracker::new(3);
+        for round in 0..10u64 {
+            t.observe_ns(0, 0);
+            t.observe_ns(1, 300_000 + round * 10_000);
+            t.observe_ns(2, 900_000);
+            t.refresh(&active(3));
+        }
+        for w in 0..3 {
+            assert_eq!(t.profile(w).mean, 0.0, "worker {w} saw sub-quantum noise");
+            assert_eq!(t.anomaly(w), 0.0);
+        }
+    }
+
+    #[test]
+    fn persistent_straggler_saturates_anomaly() {
+        // one worker 5 ms behind a cluster that answers together
+        let mut t = LatencyTracker::new(4);
+        for round in 0..12u64 {
+            for w in 0..3 {
+                t.observe_ns(w, 0);
+            }
+            t.observe_ns(3, 4_900_000);
+            t.refresh(&active(4));
+            if round + 1 < MIN_SAMPLES {
+                assert_eq!(t.anomaly(3), 0.0, "anomaly before {MIN_SAMPLES} samples");
+            }
+        }
+        assert!(t.anomaly(3) > 0.5, "anomaly {}", t.anomaly(3));
+        assert_eq!(t.anomaly(0), 0.0);
+        // EWMA mean approaches the true 4-quantum excess
+        assert!(t.profile(3).mean > 3.0);
+    }
+
+    #[test]
+    fn one_early_hiccup_decays_before_anomalies_are_allowed() {
+        // a single 6 ms scheduling stall in round 0 must never flag
+        // the worker: by the MIN_SAMPLES-th observation the EWMA has
+        // decayed below the excess gate
+        let mut t = LatencyTracker::new(4);
+        t.observe_ns(0, 6_000_000);
+        for w in 1..4 {
+            t.observe_ns(w, 0);
+        }
+        t.refresh(&active(4));
+        assert_eq!(t.anomaly(0), 0.0, "gated by MIN_SAMPLES");
+        for _ in 0..MIN_SAMPLES {
+            for w in 0..4 {
+                t.observe_ns(w, 0);
+            }
+            t.refresh(&active(4));
+        }
+        assert_eq!(t.anomaly(0), 0.0, "hiccup decayed: mean {}", t.profile(0).mean);
+    }
+
+    #[test]
+    fn recovered_straggler_sheds_its_anomaly() {
+        // time-varying straggler: slow for 10 rounds, then healthy —
+        // the anomaly must decay back to 0
+        let mut t = LatencyTracker::new(4);
+        for _ in 0..10 {
+            for w in 0..3 {
+                t.observe_ns(w, 0);
+            }
+            t.observe_ns(3, 8_000_000);
+            t.refresh(&active(4));
+        }
+        assert!(t.anomaly(3) > 0.5);
+        for _ in 0..20 {
+            for w in 0..4 {
+                t.observe_ns(w, 0);
+            }
+            t.refresh(&active(4));
+        }
+        assert_eq!(t.anomaly(3), 0.0, "mean {}", t.profile(3).mean);
+    }
+
+    #[test]
+    fn abandonment_alone_raises_anomaly() {
+        // a quorum wave that keeps abandoning one worker never sees
+        // its latency — the censored observations must still flag it
+        let mut t = LatencyTracker::new(4);
+        for _ in 0..8 {
+            for w in 0..3 {
+                t.observe_ns(w, 0);
+            }
+            t.observe_abandoned(3, 200_000); // sub-quantum cutoff
+            t.refresh(&active(4));
+        }
+        assert!(t.anomaly(3) > 0.0, "anomaly {}", t.anomaly(3));
+    }
+
+    #[test]
+    fn fuse_clamps_and_weighs_both_signals() {
+        assert_eq!(fuse_suspicion(0.0, 1.0), 0.0);
+        assert_eq!(fuse_suspicion(1.0, 0.0), 1.0);
+        let lat_only = fuse_suspicion(1.0, 1.0);
+        assert!((lat_only - LATENCY_WEIGHT).abs() < 1e-12);
+        let rel_only = fuse_suspicion(0.0, 0.5);
+        assert!((rel_only - RELIABILITY_WEIGHT * 0.5).abs() < 1e-12);
+    }
+}

@@ -407,6 +407,8 @@ impl Master {
             wall_ns: t0.elapsed().as_nanos() as u64,
             round_ns: out.round_ns,
             stragglers: out.stragglers_now.len(),
+            audited_chunks: out.audited_chunks,
+            suspicion: core.policy().suspicion_nonzero(),
             shard_stats: Vec::new(),
         })
     }

@@ -5,6 +5,12 @@
 //! update) / (# gradients computed in total). We count *gradients* in
 //! data-point units: a worker computing the symbol of a chunk of B
 //! points computed B gradients; the master's self-checks count too.
+//!
+//! Every column of the metrics CSV ([`TrainMetrics::to_csv`]) is
+//! documented in `docs/METRICS.md`, including which transport clock
+//! each timestamp lives on.
+
+use super::WorkerId;
 
 /// One shard's slice of an iteration (sharded runs only): the shard
 /// dimension of the efficiency accounting.
@@ -16,6 +22,8 @@ pub struct ShardStat {
     pub gradients_used: u64,
     pub gradients_computed: u64,
     pub audited: bool,
+    /// Chunks the shard's audit decision covered this round.
+    pub audited_chunks: usize,
     pub faults_detected: usize,
     pub identified: usize,
     pub crashed: usize,
@@ -61,6 +69,20 @@ pub struct IterationRecord {
     /// Workers the proactive gather abandoned this iteration (they
     /// rejoin next round; see `Event::StragglerAbandoned`).
     pub stragglers: usize,
+    /// Chunks the audit decision covered (0 when unaudited; the full
+    /// chunk count when the audit was `Full` — the per-worker
+    /// selective policies usually cover far fewer).
+    pub audited_chunks: usize,
+    /// Per-worker suspicion scores, as (worker id, score in [0,1])
+    /// pairs ascending by id; workers at exactly 0 are omitted. The
+    /// snapshot is the one this iteration's audit decision used
+    /// (refreshed after the proactive wave, *before* the audit), with
+    /// one exception: workers eliminated or crashed during the
+    /// iteration are already cleared. Reliability changes from this
+    /// iteration's own audit show up in the next row. See
+    /// `coordinator::latency` for how the score is fused from latency
+    /// anomaly and reliability.
+    pub suspicion: Vec<(WorkerId, f64)>,
     /// Per-shard breakdown (empty for single-master runs).
     pub shard_stats: Vec<ShardStat>,
 }
@@ -142,15 +164,35 @@ impl TrainMetrics {
             / self.iterations.len() as f64
     }
 
+    /// The most-suspect worker of the final iteration, if any worker's
+    /// suspicion is above zero (the run-summary line).
+    pub fn top_suspect(&self) -> Option<(WorkerId, f64)> {
+        self.iterations.last().and_then(|r| {
+            r.suspicion
+                .iter()
+                .copied()
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+        })
+    }
+
     /// CSV dump for EXPERIMENTS.md plots. `round_time` is the round
-    /// duration in ns on the transport clock (virtual under sim).
+    /// duration in ns on the transport clock (virtual under sim); the
+    /// `suspicion` column serializes the per-worker scores as
+    /// `worker:score` pairs joined by `;`. Every column is documented
+    /// in `docs/METRICS.md`.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,stragglers,faulty_update,dist_to_opt,round_time,shards\n",
+            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,stragglers,faulty_update,dist_to_opt,round_time,shards,audited_chunks,suspicion\n",
         );
         for r in &self.iterations {
+            let suspicion = r
+                .suspicion
+                .iter()
+                .map(|(w, v)| format!("{w}:{v:.3}"))
+                .collect::<Vec<_>>()
+                .join(";");
             s.push_str(&format!(
-                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{},{},{},{}\n",
+                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{},{},{},{},{},{}\n",
                 r.iter,
                 r.loss,
                 r.efficiency(),
@@ -167,6 +209,8 @@ impl TrainMetrics {
                 r.dist_to_opt.map(|d| d.to_string()).unwrap_or_default(),
                 r.round_ns,
                 r.shard_stats.len(), // 0 = single-master run
+                r.audited_chunks,
+                suspicion,
             ));
         }
         s
@@ -213,10 +257,29 @@ mod tests {
         let csv = m.to_csv();
         assert!(csv.starts_with("iter,loss"));
         assert!(csv.lines().next().unwrap().contains("round_time"));
+        assert!(csv.lines().next().unwrap().ends_with("audited_chunks,suspicion"));
         assert_eq!(csv.lines().count(), 2);
         // every row has as many cells as the header
         let cols = csv.lines().next().unwrap().split(',').count();
         assert_eq!(csv.lines().nth(1).unwrap().split(',').count(), cols);
+    }
+
+    #[test]
+    fn suspicion_column_serializes_per_worker_scores() {
+        let mut m = TrainMetrics::default();
+        let mut r = rec(1, 1, false);
+        r.suspicion = vec![(3, 0.5), (7, 1.0)];
+        r.audited_chunks = 2;
+        m.push(r);
+        let csv = m.to_csv();
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",2,3:0.500;7:1.000"), "row: {row}");
+        assert_eq!(m.top_suspect(), Some((7, 1.0)));
+        // empty suspicion: empty trailing cell, no phantom suspect
+        let mut m = TrainMetrics::default();
+        m.push(rec(1, 1, false));
+        assert!(m.to_csv().lines().nth(1).unwrap().ends_with(",0,"));
+        assert_eq!(m.top_suspect(), None);
     }
 
     #[test]

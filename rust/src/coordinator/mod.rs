@@ -31,9 +31,12 @@
 //!    reassigned like crashed workers' chunks. Uses [`assignment`]
 //!    for chunk placement, [`codes`] for replica comparison,
 //!    [`identify`] for majority voting, and eliminates identified
-//!    liars. `begin_round`/`complete_round` split the round so the
-//!    sharded layer can put every shard's wave in flight before
-//!    waiting on any.
+//!    liars. Delivery timestamps are folded into per-worker
+//!    [`latency`] profiles whose fused suspicion scores drive the
+//!    `latency-selective` audit policy and the suspicion-ranked audit
+//!    re-replication. `begin_round`/`complete_round` split the round
+//!    so the sharded layer can put every shard's wave in flight
+//!    before waiting on any.
 //! 4. **Transport** — [`transport::Transport`]: a completion-driven
 //!    submit/poll channel to the workers. `submit` queues a wave
 //!    without waiting; `poll` returns timestamped
@@ -56,9 +59,10 @@
 //! 2. [`worker`] — workers compute gradient *symbols* for their
 //!    chunks; Byzantine workers ([`byzantine`]) may tamper with theirs.
 //! 3. [`policy`] — the master decides whether to audit this iteration
-//!    (always / never / Bernoulli(q) / adaptive q*_t / selective).
-//!    Auditing a chunk that has only one copy triggers the *detection*
-//!    phase: f_t additional replicas.
+//!    (always / never / Bernoulli(q) / adaptive q*_t / selective /
+//!    latency-selective, the last driven by the fused suspicion
+//!    scores of [`latency`]). Auditing a chunk that has only one copy
+//!    triggers the *detection* phase: f_t additional replicas.
 //! 4. [`codes`] + [`identify`] — replicated copies are compared
 //!    (f-fault *detection*); on mismatch the master imposes **reactive
 //!    redundancy**, topping the chunk up to 2f_t+1 copies, recovering
@@ -80,6 +84,7 @@ pub mod codes;
 pub mod compress;
 pub mod events;
 pub mod identify;
+pub mod latency;
 pub mod master;
 pub mod metrics;
 pub mod policy;
@@ -101,9 +106,11 @@ pub type ChunkId = usize;
 pub const MASTER_SENTINEL: WorkerId = usize::MAX;
 
 pub use events::{Event, EventLog};
+pub use latency::LatencyTracker;
 pub use master::{Master, TrainOutcome};
 pub use policy::FaultCheckPolicy;
 pub use shard::{ParameterServer, ShardCore, ShardPlan, ShardedTransport};
 pub use transport::{
-    Delivery, LatencyModel, SimConfig, SimTransport, ThreadedTransport, Transport,
+    Delivery, LatencyModel, SimConfig, SimTransport, StragglerModel, ThreadedTransport,
+    Transport,
 };

@@ -9,10 +9,22 @@
 //! | `Adaptive`    | 1           | coin flip with q*_t (Eq. 4)  | §4.3  |
 //! | `Selective`   | 1           | per-worker coin flips driven | §5    |
 //! |               |             | by reliability scores        |       |
+//! | `LatencySelective` | 1      | per-worker coin flips driven | — (extension; |
+//! |               |             | by fused suspicion (latency  | see [`super::latency`]) |
+//! |               |             | anomaly + reliability)       |       |
+//!
+//! All policies passively maintain the per-worker latency profiles
+//! and the fused suspicion scores (the protocol core feeds delivery
+//! timestamps in regardless of policy, and
+//! [`super::events::Event::SuspicionUpdated`] is emitted on material
+//! changes), but only `LatencySelective` *acts* on them — both in its
+//! audit decision and by ranking audit re-replication onto the
+//! least-suspect workers ([`FaultCheckPolicy::rank_extensions`]).
 
 use super::adaptive::AdaptiveState;
+use super::latency::{self, LatencyTracker};
 use super::WorkerId;
-use crate::config::PolicyKind;
+use crate::config::{PolicyKind, DEFAULT_P_ASSUMED};
 use crate::util::rng::Pcg64;
 
 /// What the master decided for one iteration.
@@ -35,21 +47,45 @@ pub struct FaultCheckPolicy {
     /// Start optimistic at 1.0; a detected-but-unidentified incident
     /// halves every suspect's score; identification zeroes it.
     pub reliability: Vec<f64>,
+    /// Per-worker online latency profiles (EWMA mean + variance of
+    /// proactive-wave delivery latencies), fed by the protocol core's
+    /// delivery stream. See [`super::latency`].
+    pub latency: LatencyTracker,
+    /// Fused per-worker suspicion in [0,1]: latency anomaly blended
+    /// with the reliability deficit ([`latency::fuse_suspicion`]).
+    /// Refreshed once per round by [`FaultCheckPolicy::refresh_suspicion`].
+    suspicion: Vec<f64>,
+    /// Last suspicion surfaced per worker as an event (change-driven
+    /// emission; see [`latency::SUSPICION_EVENT_DELTA`]).
+    reported: Vec<f64>,
+    /// Workers eliminated after identification. An explicit flag, not
+    /// the reliability-==-0.0 sentinel: repeated halving of an
+    /// *unidentified* worker underflows to exactly 0.0 after ~1075
+    /// incidents, which must not lock an honest worker out of
+    /// recovery.
+    eliminated: Vec<bool>,
     /// The q actually used for the most recent decision (logged by E5).
     pub last_q: f64,
 }
 
 impl FaultCheckPolicy {
     pub fn new(kind: PolicyKind, n_workers: usize, seed: u64) -> Self {
+        // non-adaptive kinds never consult p, but the adaptive state
+        // still tracks λ_t for logging — seed it with the documented
+        // default rather than a buried literal
         let p_assumed = match &kind {
             PolicyKind::Adaptive { p_assumed } => *p_assumed,
-            _ => 0.5,
+            _ => DEFAULT_P_ASSUMED,
         };
         FaultCheckPolicy {
             kind,
             rng: Pcg64::new(seed, 0x90_11c4),
             adaptive: AdaptiveState::new(p_assumed),
             reliability: vec![1.0; n_workers],
+            latency: LatencyTracker::new(n_workers),
+            suspicion: vec![0.0; n_workers],
+            reported: vec![0.0; n_workers],
+            eliminated: vec![false; n_workers],
             last_q: 0.0,
         }
     }
@@ -133,12 +169,93 @@ impl FaultCheckPolicy {
                     AuditDecision::Workers(suspects)
                 }
             }
+            PolicyKind::LatencySelective { q_base } => {
+                // per-worker probability q_i = q_base * (1/2 + 2 s_i):
+                // a fully-suspect worker (s = 1, e.g. a persistent
+                // straggler with degraded reliability) is audited at up
+                // to 2.5x the base rate, a fully-trusted one at half of
+                // it — the audit budget is *concentrated* on the
+                // workers the timing and history point at.
+                let mut suspects = Vec::new();
+                for &w in active {
+                    let q_i = (q_base * (0.5 + 2.0 * self.suspicion[w])).clamp(0.0, 1.0);
+                    if self.rng.bernoulli(q_i) {
+                        suspects.push(w);
+                    }
+                }
+                self.last_q = *q_base;
+                if suspects.is_empty() {
+                    AuditDecision::Skip
+                } else {
+                    AuditDecision::Workers(suspects)
+                }
+            }
         }
     }
 
     /// Adaptive-policy introspection (λ_t, q*_t) for logging.
     pub fn adaptive_state(&self) -> (f64, f64) {
         (self.adaptive.last_lambda, self.adaptive.last_qstar)
+    }
+
+    /// Feed one delivery's latency into the worker's profile.
+    /// `excess_ns` is the delay behind the wave's first arrival on the
+    /// transport clock (see [`super::latency`] for the quantization).
+    pub fn observe_latency(&mut self, w: WorkerId, excess_ns: u64) {
+        self.latency.observe_ns(w, excess_ns);
+    }
+
+    /// Feed one abandonment (the quorum/deadline gather stopped
+    /// waiting for `w` once `cutoff_excess_ns` had passed since the
+    /// wave's first arrival) as a censored latency sample.
+    pub fn observe_abandoned(&mut self, w: WorkerId, cutoff_excess_ns: u64) {
+        self.latency.observe_abandoned(w, cutoff_excess_ns);
+    }
+
+    /// Recompute every active worker's fused suspicion from the latest
+    /// latency profiles and reliability scores. Returns the workers
+    /// whose suspicion moved by at least
+    /// [`latency::SUSPICION_EVENT_DELTA`] since it was last reported
+    /// (ascending worker id), for the protocol core to surface as
+    /// [`super::events::Event::SuspicionUpdated`].
+    pub fn refresh_suspicion(&mut self, active: &[WorkerId]) -> Vec<(WorkerId, f64)> {
+        self.latency.refresh(active);
+        let mut updates = Vec::new();
+        for &w in active {
+            let s = latency::fuse_suspicion(self.latency.anomaly(w), self.reliability[w]);
+            self.suspicion[w] = s;
+            if (s - self.reported[w]).abs() >= latency::SUSPICION_EVENT_DELTA {
+                self.reported[w] = s;
+                updates.push((w, s));
+            }
+        }
+        updates
+    }
+
+    /// Fused per-worker suspicion scores (index = worker id).
+    pub fn suspicion(&self) -> &[f64] {
+        &self.suspicion
+    }
+
+    /// The nonzero suspicion scores as (worker, score) pairs,
+    /// ascending by worker id — the metrics layer's suspicion column.
+    pub fn suspicion_nonzero(&self) -> Vec<(WorkerId, f64)> {
+        self.suspicion
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s > 0.0)
+            .map(|(w, &s)| (w, s))
+            .collect()
+    }
+
+    /// Whether audit re-replication (detection/reactive top-ups and
+    /// crash reassignment) should rank candidate owners by ascending
+    /// suspicion instead of shuffling uniformly — replicas of a
+    /// suspect's chunks then land on trusted/fast workers first. Only
+    /// the latency-aware policy opts in, so every other policy keeps
+    /// its RNG stream (and its bit-identity contracts) untouched.
+    pub fn rank_extensions(&self) -> bool {
+        matches!(self.kind, PolicyKind::LatencySelective { .. })
     }
 
     /// Feedback: a fault was detected on a chunk owned by these workers
@@ -149,13 +266,35 @@ impl FaultCheckPolicy {
         }
     }
 
-    /// Feedback: worker identified as Byzantine.
+    /// Feedback: worker identified as Byzantine. Its reliability is
+    /// pinned to 0 and its suspicion score is cleared — the worker
+    /// left the roster, so it must stop appearing in the suspicion
+    /// column / top-suspect summary (which describe *live* workers);
+    /// the event log keeps its pre-elimination history.
     pub fn report_identified(&mut self, w: WorkerId) {
         self.reliability[w] = 0.0;
+        self.suspicion[w] = 0.0;
+        self.reported[w] = 0.0;
+        self.eliminated[w] = true;
     }
 
-    /// Feedback: worker's chunk verified correct — slowly restore trust.
+    /// Feedback: worker crash-stopped. Clears its suspicion score for
+    /// the same roster-view reason as identification (a crash is not
+    /// an identification — reliability is left alone).
+    pub fn report_crashed(&mut self, w: WorkerId) {
+        self.suspicion[w] = 0.0;
+        self.reported[w] = 0.0;
+    }
+
+    /// Feedback: worker's chunk verified correct — slowly restore
+    /// trust. An *identified* liar can never recover: it was
+    /// eliminated from the roster, and a stale verification of one of
+    /// its earlier copies must not resurrect it. An unidentified
+    /// worker always can, however low halving has driven its score.
     pub fn report_verified(&mut self, w: WorkerId) {
+        if self.eliminated[w] {
+            return;
+        }
         self.reliability[w] = (self.reliability[w] + 0.1).min(1.0);
     }
 }
@@ -228,5 +367,122 @@ mod tests {
             p.report_verified(1);
         }
         assert!((p.reliability[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reliability_halves_per_unidentified_incident() {
+        // every detected-but-unidentified incident halves each
+        // suspect's score, compounding across incidents
+        let mut p = FaultCheckPolicy::new(PolicyKind::Selective { q_base: 0.2 }, 4, 1);
+        p.report_suspects(&[0, 2]);
+        assert_eq!(p.reliability, vec![0.5, 1.0, 0.5, 1.0]);
+        p.report_suspects(&[0]);
+        p.report_suspects(&[0]);
+        assert_eq!(p.reliability[0], 0.125);
+        assert_eq!(p.reliability[2], 0.5, "other suspects unaffected");
+    }
+
+    #[test]
+    fn identification_zeroes_and_is_permanent() {
+        // zeroing on identification beats any halving history, and no
+        // amount of later "verified" feedback can resurrect the score:
+        // the worker left the roster — recovery is impossible
+        let mut p = FaultCheckPolicy::new(PolicyKind::Selective { q_base: 0.2 }, 3, 2);
+        p.report_suspects(&[1]);
+        p.report_identified(1);
+        assert_eq!(p.reliability[1], 0.0);
+        for _ in 0..100 {
+            p.report_verified(1);
+        }
+        assert_eq!(p.reliability[1], 0.0, "eliminated worker recovered trust");
+        // an honest worker's recovery path still works
+        p.report_suspects(&[0]);
+        p.report_verified(0);
+        assert!((p.reliability[0] - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unidentified_halving_stays_recoverable_even_past_underflow() {
+        // repeated halving asymptotes toward 0 — and after ~1075
+        // incidents underflows to exactly 0.0 — but an unidentified
+        // worker must always keep its recovery path: elimination is an
+        // explicit flag, not a float sentinel
+        let mut p = FaultCheckPolicy::new(PolicyKind::Selective { q_base: 0.2 }, 2, 3);
+        for _ in 0..1100 {
+            p.report_suspects(&[0]);
+        }
+        assert_eq!(p.reliability[0], 0.0, "f64 halving underflows to zero");
+        p.report_verified(0);
+        assert!(
+            (p.reliability[0] - 0.1).abs() < 1e-12,
+            "unidentified suspects stay recoverable"
+        );
+    }
+
+    #[test]
+    fn latency_selective_concentrates_audits_on_the_suspect() {
+        let mut p = FaultCheckPolicy::new(PolicyKind::LatencySelective { q_base: 0.2 }, 4, 17);
+        // feed a persistent 5 ms straggler signal for worker 3
+        for _ in 0..10 {
+            for w in 0..3 {
+                p.observe_latency(w, 0);
+            }
+            p.observe_latency(3, 5_000_000);
+            p.refresh_suspicion(&active(4));
+        }
+        assert!(p.suspicion()[3] > 0.4, "suspicion {}", p.suspicion()[3]);
+        assert_eq!(p.suspicion()[0], 0.0);
+        assert_eq!(p.suspicion_nonzero(), vec![(3, p.suspicion()[3])]);
+        assert!(p.rank_extensions());
+        let (mut a0, mut a3) = (0usize, 0usize);
+        for t in 0..20_000 {
+            if let AuditDecision::Workers(ws) = p.decide(t, 1.0, 2, &active(4)) {
+                a0 += ws.contains(&0) as usize;
+                a3 += ws.contains(&3) as usize;
+            }
+        }
+        assert!(
+            a3 as f64 > 2.0 * a0 as f64,
+            "straggler audited {a3}, trusted worker audited {a0}"
+        );
+    }
+
+    #[test]
+    fn eliminated_and_crashed_workers_leave_the_suspicion_view() {
+        let mut p = FaultCheckPolicy::new(PolicyKind::LatencySelective { q_base: 0.2 }, 4, 11);
+        // two suspects: worker 1 (reliability) and worker 3 (latency)
+        p.report_suspects(&[1]);
+        for _ in 0..10 {
+            for w in 0..3 {
+                p.observe_latency(w, 0);
+            }
+            p.observe_latency(3, 5_000_000);
+            p.refresh_suspicion(&active(4));
+        }
+        assert!(p.suspicion()[1] > 0.0 && p.suspicion()[3] > 0.0);
+        // identification / crash clear the live-roster view
+        p.report_identified(1);
+        p.report_crashed(3);
+        assert!(p.suspicion_nonzero().is_empty(), "{:?}", p.suspicion_nonzero());
+        // the survivors keep refreshing without resurrecting the dead
+        let active_now = vec![0usize, 2];
+        p.refresh_suspicion(&active_now);
+        assert_eq!(p.suspicion()[1], 0.0);
+        assert_eq!(p.suspicion()[3], 0.0);
+    }
+
+    #[test]
+    fn suspicion_events_are_change_driven() {
+        let mut p = FaultCheckPolicy::new(PolicyKind::LatencySelective { q_base: 0.2 }, 3, 5);
+        // no signal: nothing to report
+        assert!(p.refresh_suspicion(&active(3)).is_empty());
+        // a detection incident moves worker 1's suspicion materially
+        p.report_suspects(&[1]);
+        let updates = p.refresh_suspicion(&active(3));
+        assert_eq!(updates.len(), 1);
+        assert_eq!(updates[0].0, 1);
+        assert!(updates[0].1 > 0.0);
+        // unchanged state: no re-report
+        assert!(p.refresh_suspicion(&active(3)).is_empty());
     }
 }

@@ -52,6 +52,21 @@
 //! single ingest path [`RoundState::ingest`] — the three copy-pasted
 //! ingest loops of the pre-refactor master collapse here.
 //!
+//! ## Timing as a Byzantine signal
+//!
+//! The **initial proactive wave** also feeds every fresh delivery's
+//! arrival timestamp (and every abandonment, as a censored sample)
+//! into the policy's per-worker latency profiles ([`super::latency`];
+//! top-up waves are excluded — they are small and often
+//! single-target, so their zero-excess samples would dilute the
+//! signal); once per round the fused suspicion scores are refreshed
+//! and material changes surface as
+//! [`super::events::Event::SuspicionUpdated`]. The `latency-selective`
+//! policy audits from those scores, and its audit re-replication
+//! places copies on the least-suspect workers first
+//! ([`super::assignment::Assignment::extend_ranked`]); all other
+//! policies only record the signal.
+//!
 //! Exactness (Def. 1): every audited iteration ends with provably
 //! correct chunk values; unaudited iterations may use tampered
 //! gradients, but each persistent Byzantine worker is identified
@@ -219,6 +234,9 @@ pub struct RoundOutcome {
     pub crashed_now: Vec<WorkerId>,
     /// Data points the master recomputed itself (self-check audits).
     pub master_computed_points: u64,
+    /// Chunks the audit decision covered (0 when unaudited; equal to
+    /// the round's chunk count when the audit was full).
+    pub audited_chunks: usize,
     /// Workers the proactive gather stopped waiting for this round
     /// (they rejoin next round; a straggle is not a crash).
     pub stragglers_now: Vec<WorkerId>,
@@ -428,6 +446,7 @@ impl ProtocolCore {
             floor,
             outstanding,
             start_ns,
+            true,
             &mut round,
             &mut crashed_now,
             &mut stragglers_now,
@@ -453,6 +472,15 @@ impl ProtocolCore {
             )?;
         }
 
+        // ---- latency profiles → suspicion ------------------------------
+        // the proactive wave's delivery timestamps (and any straggler
+        // abandonments) are folded in by now: refresh the fused
+        // per-worker suspicion so this round's audit decision — and the
+        // suspicion-ranked re-replication below — see current timing
+        for (w, s) in self.policy.refresh_suspicion(&self.active) {
+            events.push(Event::SuspicionUpdated { iter: t, worker: w, suspicion: s });
+        }
+
         // ---- audit decision --------------------------------------------
         let observed_loss = round.observed_loss(&mut self.loss_scratch);
         let decision = self.policy.decide(t, observed_loss, f_t, &self.active);
@@ -467,6 +495,7 @@ impl ProtocolCore {
                 .collect(),
         };
 
+        let audited_chunks = audit_chunks.len();
         let mut master_computed_points = 0u64;
         let mut faults_detected = 0usize;
         let mut identified_now: Vec<WorkerId> = Vec::new();
@@ -614,6 +643,7 @@ impl ProtocolCore {
             identified_now,
             crashed_now,
             master_computed_points,
+            audited_chunks,
             stragglers_now,
             round_ns: self.transport.now_ns().saturating_sub(start_ns),
         })
@@ -631,7 +661,10 @@ impl ProtocolCore {
     /// `min_responses` is the floor no early exit may cut below (the
     /// proactive wave passes 2f_t+1 so the reactive vote stays
     /// assemblable; crash-stops can still shrink the wave, exactly as
-    /// they always could).
+    /// they always could). `profile_latency` is set only for the
+    /// round's **initial proactive wave**: top-up waves are small and
+    /// often single-target, so their zero-excess observations would
+    /// dilute a straggler's profile with meaningless samples.
     #[allow(clippy::too_many_arguments)]
     fn wait_wave(
         &mut self,
@@ -641,6 +674,7 @@ impl ProtocolCore {
         min_responses: usize,
         outstanding: Vec<WorkerId>,
         start_ns: u64,
+        profile_latency: bool,
         round: &mut RoundState,
         crashed_now: &mut Vec<WorkerId>,
         stragglers_now: &mut Vec<WorkerId>,
@@ -675,6 +709,10 @@ impl ProtocolCore {
         }
         let mut remaining = outstanding.len();
         let mut responses: Vec<Response> = Vec::new();
+        // first fresh arrival of this wave: the latency-profile origin
+        // (per-worker observations are *relative* delays behind it, so
+        // per-wave fixed costs cancel — see `super::latency`)
+        let mut wave_first: Option<u64> = None;
         loop {
             if remaining == 0 || responses.len() >= quorum {
                 break;
@@ -701,7 +739,7 @@ impl ProtocolCore {
                             remaining -= 1;
                         }
                     }
-                    Delivery::Response { response, .. } => {
+                    Delivery::Response { at_ns, response } => {
                         let fresh = response.iter == t
                             && response.phase == phase.wire()
                             && waiting[response.worker];
@@ -709,6 +747,11 @@ impl ProtocolCore {
                             // late delivery from an abandoned wave or a
                             // previous phase: drained, never ingested
                             continue;
+                        }
+                        if profile_latency {
+                            let first = *wave_first.get_or_insert(at_ns);
+                            self.policy
+                                .observe_latency(response.worker, at_ns.saturating_sub(first));
                         }
                         waiting[response.worker] = false;
                         remaining -= 1;
@@ -718,8 +761,21 @@ impl ProtocolCore {
             }
         }
         // quorum/deadline early exit: abandon the stragglers this round
+        // (censored samples use the same baseline as regular
+        // observations — excess behind the wave's first arrival — so
+        // the profile never mixes submit-relative and arrival-relative
+        // quantities)
+        let cutoff_excess_ns = self
+            .transport
+            .now_ns()
+            .saturating_sub(wave_first.unwrap_or(start_ns));
         for w in outstanding {
             if waiting[w] {
+                // the abandoned worker was at least as slow as the wave
+                // cutoff: charge its latency profile a censored sample
+                if profile_latency {
+                    self.policy.observe_abandoned(w, cutoff_excess_ns);
+                }
                 round.assignment.retire(w);
                 stragglers_now.push(w);
                 events.push(Event::StragglerAbandoned { iter: t, worker: w });
@@ -766,7 +822,15 @@ impl ProtocolCore {
                     "cannot reach {want} copies of chunk {c} at iteration {t}: \
                      only {candidates} candidate workers remain"
                 );
-                let added = round.assignment.extend(c, shortfall, &mut self.rng_assign);
+                // the latency-aware policy places audit replicas on the
+                // least-suspect candidates first (deterministic, no RNG
+                // draw); every other policy keeps the uniform shuffle —
+                // and its `rng_assign` stream — exactly as before
+                let added = if self.policy.rank_extensions() {
+                    round.assignment.extend_ranked(c, shortfall, self.policy.suspicion())
+                } else {
+                    round.assignment.extend(c, shortfall, &mut self.rng_assign)
+                };
                 if phase == Phase::Reactive {
                     events.push(Event::ReactiveRedundancy {
                         iter: t,
@@ -807,6 +871,7 @@ impl ProtocolCore {
                 0,
                 outstanding,
                 start_ns,
+                false,
                 round,
                 crashed_now,
                 &mut no_stragglers,
@@ -838,6 +903,7 @@ impl ProtocolCore {
             self.active.remove(pos);
         }
         round.assignment.retire(w);
+        self.policy.report_crashed(w);
         events.push(Event::WorkerCrashed { iter: t, worker: w });
     }
 

@@ -32,6 +32,10 @@ pub struct ShardRound {
     pub identified: Vec<WorkerId>,
     /// Workers that crash-stopped this round (global ids).
     pub crashed: Vec<WorkerId>,
+    /// Per-worker suspicion scores after this round (global ids,
+    /// nonzero only) — the shard's slice of the latency-aware roster
+    /// view (see `coordinator::latency`).
+    pub suspicion: Vec<(WorkerId, f64)>,
     /// Oracle: did a tampered copy end up as a chosen chunk value?
     pub oracle_faulty: bool,
 }
@@ -128,6 +132,9 @@ impl ShardCore {
             }
             Event::StragglerAbandoned { iter, worker } => {
                 Event::StragglerAbandoned { iter, worker: self.global(worker) }
+            }
+            Event::SuspicionUpdated { iter, worker, suspicion } => {
+                Event::SuspicionUpdated { iter, worker: self.global(worker), suspicion }
             }
             // the inner core never emits shard-level events
             other => other,
@@ -250,6 +257,13 @@ impl ShardCore {
             outcome.identified_now.iter().map(|&w| self.global(w)).collect();
         let crashed: Vec<WorkerId> =
             outcome.crashed_now.iter().map(|&w| self.global(w)).collect();
+        let suspicion: Vec<(WorkerId, f64)> = self
+            .core
+            .policy()
+            .suspicion_nonzero()
+            .into_iter()
+            .map(|(w, s)| (self.global(w), s))
+            .collect();
         Ok(ShardRound {
             partial,
             losses,
@@ -259,6 +273,7 @@ impl ShardCore {
                 gradients_used: outcome.gradients_used,
                 gradients_computed: computed_points,
                 audited: outcome.audited,
+                audited_chunks: outcome.audited_chunks,
                 faults_detected: outcome.faults_detected,
                 identified: identified.len(),
                 crashed: crashed.len(),
@@ -267,6 +282,7 @@ impl ShardCore {
             },
             identified,
             crashed,
+            suspicion,
             oracle_faulty,
         })
     }

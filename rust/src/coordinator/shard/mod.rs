@@ -23,6 +23,11 @@
 //!   with local worker ids `0..n_s`; runs one shard round over the
 //!   chunk slice the parameter server hands it, and returns the
 //!   shard's partial aggregate plus remapped (global-id) events.
+//!   Latency profiles ([`super::latency`]) live per shard core over
+//!   local ids; the suspicion scores and
+//!   [`super::events::Event::SuspicionUpdated`] events each shard
+//!   reports are remapped to global ids here, so the parameter
+//!   server's metrics see one global suspicion roster.
 //! * [`ShardedTransport`] — fans a round out to the per-shard inner
 //!   transports (threaded or sim, mixed allowed) and gathers the
 //!   partial aggregates; the fan-out is poll-interleaved (every

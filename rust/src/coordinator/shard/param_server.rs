@@ -146,6 +146,7 @@ impl ParameterServer {
         self.losses.clear();
         let mut shard_stats: Vec<ShardStat> = Vec::new();
         let mut orphans: Vec<Vec<usize>> = Vec::new();
+        let mut suspicion: Vec<(WorkerId, f64)> = Vec::new();
         let mut oracle_faulty = false;
         let mut audited = false;
         let mut q_sum = 0.0f64;
@@ -186,6 +187,7 @@ impl ParameterServer {
                     lambda_sum += self.transport.cores()[s].lambda();
                     q_n += 1;
                     partials[s] = round.partial.take();
+                    suspicion.append(&mut round.suspicion);
                     let stat = absorb(round, &mut self.losses, &mut self.roster, events);
                     shard_stats.push(stat);
                 }
@@ -249,6 +251,7 @@ impl ParameterServer {
                     if let Some(p) = round.partial.take() {
                         rescue_partials.push(p);
                     }
+                    suspicion.append(&mut round.suspicion);
                     let stat = absorb(round, &mut self.losses, &mut self.roster, events);
                     shard_stats.push(stat);
                 }
@@ -298,6 +301,18 @@ impl ParameterServer {
         let crashed: usize =
             shard_stats.iter().map(|s| s.crashed).sum::<usize>() + extra_crashed;
         let stragglers: usize = shard_stats.iter().map(|s| s.stragglers).sum();
+        let audited_chunks: usize = shard_stats.iter().map(|s| s.audited_chunks).sum();
+        // global-id suspicion column: a shard that also served a rescue
+        // round reports twice — keep the later (rescue-round) snapshot
+        suspicion.sort_by(|a, b| a.0.cmp(&b.0));
+        suspicion.dedup_by(|later, first| {
+            if later.0 == first.0 {
+                first.1 = later.1;
+                true
+            } else {
+                false
+            }
+        });
         Ok(IterationRecord {
             iter: t,
             gradients_used,
@@ -314,6 +329,8 @@ impl ParameterServer {
             wall_ns: t0.elapsed().as_nanos() as u64,
             round_ns: fan_round_ns + rescue_round_ns,
             stragglers,
+            audited_chunks,
+            suspicion,
             shard_stats,
         })
     }

@@ -18,6 +18,12 @@
 //! * [`Transport::now_ns`] exposes that clock, which is also how the
 //!   per-round `round_time` metric is measured.
 //!
+//! The per-delivery timestamps are consumed twice upstream: the
+//! gather decides when to stop waiting, and the protocol core feeds
+//! each fresh delivery's relative delay into the per-worker latency
+//! profiles of [`super::latency`] — timing doubles as a Byzantine
+//! signal for the `latency-selective` audit policy.
+//!
 //! The protocol core is responsible for matching deliveries to the
 //! wave it is waiting on: a delivery from an abandoned wave (a
 //! straggler the quorum stopped waiting for) is drained and discarded,
@@ -49,7 +55,7 @@ use super::WorkerId;
 use crate::data::Batch;
 use crate::Result;
 
-pub use sim::{LatencyModel, SimConfig, SimTransport};
+pub use sim::{LatencyModel, SimConfig, SimTransport, StragglerModel};
 pub use threaded::ThreadedTransport;
 
 use super::ChunkId;

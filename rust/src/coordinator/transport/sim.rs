@@ -6,7 +6,10 @@
 //! computes each targeted worker's symbols immediately and stamps the
 //! resulting [`Delivery`] with a completion time drawn from a
 //! configurable [`LatencyModel`], scaled by per-worker straggler
-//! multipliers. [`Transport::poll`] advances the clock to the earliest
+//! multipliers whose schedule a [`StragglerModel`] controls (always
+//! on, per-worker time-varying bursts, or correlated group bursts —
+//! the adversarial timing scenarios the latency-aware audit policy is
+//! measured against). [`Transport::poll`] advances the clock to the earliest
 //! pending completion and returns every delivery due at that instant —
 //! so a quorum gather stops the clock at the k-th arrival instead of
 //! the slowest worker, and an abandoned straggler's delivery stays
@@ -67,6 +70,44 @@ impl LatencyModel {
     }
 }
 
+/// When a configured straggler's latency multiplier applies —
+/// adversarial timing scenarios for the latency-aware audit policies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StragglerModel {
+    /// The multiplier applies in every iteration (the original static
+    /// straggler; the default).
+    #[default]
+    Fixed,
+    /// Time-varying stragglers: worker w is slow only during its own
+    /// bursts — iterations where `(iter + w) % period < duty`. Each
+    /// straggler's burst window is phase-shifted by its id, so the
+    /// bursts are *independent*: the adversarial case for an EWMA
+    /// profile, which must both catch the bursts and shed the
+    /// suspicion between them.
+    TimeVarying { period: u64, duty: u64 },
+    /// Correlated stragglers: every configured straggler is slow in
+    /// the same iterations — `iter % period < duty` — as when the
+    /// slow workers share a machine or network link. Stress-tests the
+    /// cluster-median anomaly baseline: a whole slow *group* shifts
+    /// per-round timing together without any single worker drifting
+    /// from the group.
+    Correlated { period: u64, duty: u64 },
+}
+
+impl StragglerModel {
+    /// Is `worker`'s multiplier in force at iteration `iter`?
+    /// A non-positive `period` never activates (duty 0 likewise).
+    pub fn active(self, worker: WorkerId, iter: u64) -> bool {
+        match self {
+            StragglerModel::Fixed => true,
+            StragglerModel::TimeVarying { period, duty } => {
+                period > 0 && (iter + worker as u64) % period < duty
+            }
+            StragglerModel::Correlated { period, duty } => period > 0 && iter % period < duty,
+        }
+    }
+}
+
 /// Scenario description for a simulated cluster.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -75,6 +116,9 @@ pub struct SimConfig {
     /// Per-worker latency multipliers (worker, factor): stragglers
     /// (factor > 1) or fast workers (factor < 1).
     pub stragglers: Vec<(WorkerId, f64)>,
+    /// When the straggler multipliers apply (always, in per-worker
+    /// bursts, or in correlated bursts).
+    pub straggler_model: StragglerModel,
     /// Crash-stop plan (worker, iteration): from that iteration on the
     /// worker never responds again.
     pub crash_at: Vec<(WorkerId, u64)>,
@@ -87,6 +131,7 @@ impl Default for SimConfig {
         SimConfig {
             latency: LatencyModel::Zero,
             stragglers: Vec::new(),
+            straggler_model: StragglerModel::Fixed,
             crash_at: Vec::new(),
             seed: 0x51a7,
         }
@@ -133,6 +178,7 @@ impl Ord for PendingEvent {
 pub struct SimTransport {
     workers: Vec<SimWorker>,
     latency: LatencyModel,
+    straggler_model: StragglerModel,
     rng: Pcg64,
     /// Virtual clock (ns since construction).
     now_ns: u64,
@@ -168,6 +214,7 @@ impl SimTransport {
         SimTransport {
             workers,
             latency: cfg.latency,
+            straggler_model: cfg.straggler_model,
             rng: Pcg64::new(cfg.seed, 0x51b_7a2),
             now_ns: 0,
             pending: BinaryHeap::new(),
@@ -211,8 +258,12 @@ impl Transport for SimTransport {
                 continue;
             }
             let symbols = w.state.handle(iter, theta, tasks)?;
-            let latency =
-                (self.latency.draw_ns(&mut self.rng) as f64 * w.latency_mult) as u64;
+            let mult = if self.straggler_model.active(worker, iter) {
+                w.latency_mult
+            } else {
+                1.0
+            };
+            let latency = (self.latency.draw_ns(&mut self.rng) as f64 * mult) as u64;
             let at_ns = self.now_ns + latency;
             self.pending.push(Reverse(PendingEvent {
                 at_ns,
@@ -308,6 +359,72 @@ mod tests {
         assert_eq!(ids, vec![0, 1, 2, 3]);
         assert_eq!(t.virtual_elapsed(), Duration::ZERO);
         assert!(t.poll(None).unwrap().is_empty(), "nothing left in flight");
+    }
+
+    #[test]
+    fn time_varying_straggler_is_slow_only_in_its_bursts() {
+        // worker 1 with a 50x multiplier under TimeVarying{period:4,
+        // duty:2}: slow when (iter + 1) % 4 < 2, i.e. iters 0, 3, 4,
+        // 7, ... — and at full speed in between
+        let cfg = SimConfig {
+            latency: LatencyModel::Fixed { us: 100 },
+            stragglers: vec![(1, 50.0)],
+            straggler_model: StragglerModel::TimeVarying { period: 4, duty: 2 },
+            ..Default::default()
+        };
+        let (mut t, ds) = cluster(2, cfg);
+        let theta = Arc::new(vec![0.1f32; 8]);
+        for iter in 0..8u64 {
+            let before = t.now_ns();
+            t.submit(iter, 0, &theta, bundles(&ds, &[0, 1])).unwrap();
+            let mut all = Vec::new();
+            drain(&mut t, &mut all);
+            assert_eq!(all.len(), 2);
+            let round_us = (t.now_ns() - before) / 1000;
+            let slow = (iter + 1) % 4 < 2;
+            assert_eq!(round_us, if slow { 5000 } else { 100 }, "iter {iter}");
+        }
+    }
+
+    #[test]
+    fn correlated_stragglers_burst_together() {
+        // both stragglers slow in the same iterations (iter % 2 == 0)
+        let cfg = SimConfig {
+            latency: LatencyModel::Fixed { us: 100 },
+            stragglers: vec![(0, 10.0), (2, 10.0)],
+            straggler_model: StragglerModel::Correlated { period: 2, duty: 1 },
+            ..Default::default()
+        };
+        let (mut t, ds) = cluster(3, cfg);
+        let theta = Arc::new(vec![0.1f32; 8]);
+        for iter in 0..4u64 {
+            let before = t.now_ns();
+            t.submit(iter, 0, &theta, bundles(&ds, &[0, 1, 2])).unwrap();
+            // first instant is always the healthy worker 1 at 100us
+            let first = t.poll(None).unwrap();
+            let mut all = first;
+            drain(&mut t, &mut all);
+            assert_eq!(all.len(), 3);
+            let round_us = (t.now_ns() - before) / 1000;
+            let slow = iter % 2 == 0;
+            assert_eq!(round_us, if slow { 1000 } else { 100 }, "iter {iter}");
+        }
+    }
+
+    #[test]
+    fn straggler_model_schedules() {
+        assert!(StragglerModel::Fixed.active(3, 17));
+        let tv = StragglerModel::TimeVarying { period: 4, duty: 1 };
+        // worker 0 slow at iters 0,4,8...; worker 2 at iters 2,6,10...
+        assert!(tv.active(0, 0) && tv.active(0, 4) && !tv.active(0, 1));
+        assert!(tv.active(2, 2) && !tv.active(2, 0));
+        let co = StragglerModel::Correlated { period: 4, duty: 1 };
+        for w in 0..8 {
+            assert!(co.active(w, 0) && co.active(w, 4) && !co.active(w, 1));
+        }
+        // degenerate periods never activate
+        assert!(!StragglerModel::TimeVarying { period: 0, duty: 0 }.active(0, 0));
+        assert!(!StragglerModel::Correlated { period: 4, duty: 0 }.active(0, 0));
     }
 
     #[test]

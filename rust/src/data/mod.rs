@@ -19,11 +19,11 @@ pub use linreg::LinRegDataset;
 /// leading `theta`).
 #[derive(Clone, Debug)]
 pub enum Batch {
-    /// x: [b, d] row-major, y: [b]
+    /// x: `[b, d]` row-major, y: `[b]`
     LinReg { x: Vec<f32>, y: Vec<f32>, b: usize, d: usize },
-    /// x: [b, d] row-major, labels: [b]
+    /// x: `[b, d]` row-major, labels: `[b]`
     Classif { x: Vec<f32>, labels: Vec<i32>, b: usize, d: usize },
-    /// tokens: [b, t] row-major
+    /// tokens: `[b, t]` row-major
     Tokens { tokens: Vec<i32>, b: usize, t: usize },
 }
 

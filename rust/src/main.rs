@@ -62,8 +62,12 @@ TRAIN OPTIONS (defaults in parens):
   --config FILE      TOML config (overridden by explicit flags below)
   --model M          linreg | mlp | transformer (linreg)
   --engine E         native | xla (native; transformer requires xla)
-  --policy P         none | deterministic | randomized | adaptive | selective (randomized)
-  --q Q              audit probability for randomized/selective (0.2)
+  --policy P         none | deterministic | randomized | adaptive | selective
+                     | latency-selective (randomized); latency-selective
+                     audits per worker from the fused suspicion score
+                     (delivery-latency anomaly + reliability history)
+  --q Q              audit probability for randomized/selective/
+                     latency-selective (0.2)
   --p-assumed P      assumed tamper prob for adaptive (0.5)
   --n N              workers (8)        --f F   Byzantine bound (2)
   --shards K         partition workers into K shards, each with its own
@@ -132,7 +136,7 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
         cfg.policy = PolicyKind::parse(
             kind,
             args.f64("q", 0.2),
-            args.f64("p-assumed", 0.5),
+            args.f64("p-assumed", r3bft::config::DEFAULT_P_ASSUMED),
         )?;
     }
     if let Some(kind) = args.get("attack") {
@@ -229,6 +233,9 @@ fn run_train(args: &Args) -> Result<()> {
     println!("faults detected      : {}", out.events.detections());
     println!("mean round time      : {:.1} us", out.metrics.mean_round_ns() / 1e3);
     println!("stragglers abandoned : {}", out.events.stragglers());
+    if let Some((w, s)) = out.metrics.top_suspect() {
+        println!("top suspicion        : worker {w} ({s:.3})");
+    }
     println!("eliminated workers   : {:?}", out.eliminated);
     if let Some(d) = out.metrics.iterations.last().and_then(|r| r.dist_to_opt) {
         println!("dist to optimum      : {d:.3e}");

@@ -60,7 +60,7 @@ impl Gen {
 pub type PropResult = Result<(), String>;
 
 /// Run `prop` for `cases` independent random cases. Panics (failing the
-/// enclosing #[test]) with the replay seed on the first failure.
+/// enclosing `#[test]`) with the replay seed on the first failure.
 pub fn forall<F: FnMut(&mut Gen) -> PropResult>(name: &str, cases: u64, mut prop: F) {
     // Honor an explicit replay request: R3BFT_PROP_SEED=name:seed
     let replay: Option<u64> = std::env::var("R3BFT_PROP_SEED")

@@ -1,0 +1,246 @@
+//! Latency-aware selective auditing: suspicion bit-identity across
+//! transports at zero latency, straggler profiling through the full
+//! training loop, suspicion decay under time-varying stragglers, the
+//! metrics surface (suspicion CSV column, top suspect), and the
+//! headline claim — `latency-selective` identifies a
+//! slow-and-Byzantine worker with strictly fewer full-audit rounds
+//! than `Bernoulli(q)` at equal q budget.
+
+use std::sync::Arc;
+
+use r3bft::config::{
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, GatherPolicy, PolicyKind,
+    TrainConfig,
+};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::coordinator::{LatencyModel, SimConfig, StragglerModel, TrainOutcome};
+use r3bft::data::LinRegDataset;
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    n: usize,
+    f: usize,
+    byz: Vec<usize>,
+    policy: PolicyKind,
+    attack: AttackConfig,
+    steps: usize,
+    seed: u64,
+    transport: &str,
+    sim: SimConfig,
+) -> TrainOutcome {
+    let mut cluster = ClusterConfig::new(n, f, seed);
+    cluster.byzantine_ids = byz;
+    cluster.transport = transport.into();
+    cluster.gather = GatherPolicy::All;
+    let cfg = ExperimentConfig {
+        name: "latency-test".into(),
+        cluster,
+        policy,
+        attack,
+        train: TrainConfig { steps, lr: 0.5, ..Default::default() },
+    };
+    let d = 8usize;
+    let chunk = 4usize;
+    let ds = Arc::new(LinRegDataset::generate(1024, d, 0.0, seed));
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(seed);
+    let opts = MasterOptions { sim, ..Default::default() };
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    master.run().expect("train")
+}
+
+/// The acceptance contract: at zero latency the per-worker suspicion
+/// updates are **bit-identical** across the threaded and simulated
+/// transports. The latency anomaly quantizes to exactly 0 on both
+/// (one shared arrival instant under sim; sub-millisecond scheduling
+/// jitter under threaded), so suspicion reduces to the reliability
+/// deficit, which evolves on the deterministic protocol RNG.
+#[test]
+fn suspicion_updates_bit_identical_across_transports_at_zero_latency() {
+    let byz = vec![1usize, 4];
+    let attack = AttackConfig { kind: AttackKind::SignFlip, p: 0.7, magnitude: 2.0 };
+    let policy = PolicyKind::LatencySelective { q_base: 0.4 };
+    let threaded = run(
+        8,
+        2,
+        byz.clone(),
+        policy.clone(),
+        attack.clone(),
+        60,
+        19,
+        "threaded",
+        SimConfig::default(),
+    );
+    let sim = run(8, 2, byz, policy, attack, 60, 19, "sim", SimConfig::default());
+    let a = threaded.events.suspicion_updates();
+    let b = sim.events.suspicion_updates();
+    assert!(!a.is_empty(), "no suspicion updates: nothing was compared");
+    assert_eq!(a, b, "suspicion updates diverged across transports");
+    assert_eq!(threaded.theta, sim.theta, "theta diverged");
+    assert_eq!(threaded.eliminated, sim.eliminated);
+    // the per-iteration suspicion column agrees too (bitwise)
+    for (ra, rb) in threaded
+        .metrics
+        .iterations
+        .iter()
+        .zip(sim.metrics.iterations.iter())
+    {
+        assert_eq!(ra.suspicion, rb.suspicion, "iter {}", ra.iter);
+        assert_eq!(ra.audited_chunks, rb.audited_chunks, "iter {}", ra.iter);
+    }
+}
+
+/// An honest-but-slow worker becomes the top suspect — audited more,
+/// but never eliminated (slow is not lying: its audits come back
+/// unanimous), and its chunks' audit replicas land on trusted workers.
+#[test]
+fn persistent_straggler_becomes_top_suspect_but_is_never_eliminated() {
+    let n = 8usize;
+    let straggler = n - 1;
+    let sim = SimConfig {
+        latency: LatencyModel::Fixed { us: 100 },
+        stragglers: vec![(straggler, 50.0)],
+        ..Default::default()
+    };
+    let out = run(
+        n,
+        1,
+        vec![],
+        PolicyKind::LatencySelective { q_base: 0.2 },
+        AttackConfig::default(),
+        60,
+        31,
+        "sim",
+        sim,
+    );
+    // the straggler's suspicion was reported and ends high
+    let last = out.events.last_suspicion(straggler).expect("no suspicion event");
+    assert!(last >= 0.4, "straggler suspicion {last}");
+    assert_eq!(out.metrics.top_suspect().map(|(w, _)| w), Some(straggler));
+    // every other worker stays clean
+    for w in 0..straggler {
+        assert_eq!(out.events.last_suspicion(w), None, "worker {w} flagged");
+    }
+    // suspicion lands in the CSV column
+    let csv = out.metrics.to_csv();
+    assert!(csv.lines().next().unwrap().ends_with("audited_chunks,suspicion"));
+    assert!(
+        csv.lines().last().unwrap().contains(&format!("{straggler}:")),
+        "suspicion column missing the straggler"
+    );
+    // slow != Byzantine: audited repeatedly, eliminated never
+    assert!(out.events.audits() > 0);
+    assert!(out.eliminated.is_empty());
+    assert!(out.crashed.is_empty());
+    assert_eq!(out.events.detections(), 0, "an honest straggler never trips detection");
+}
+
+/// Time-varying stragglers (the adversarial case for an EWMA): the
+/// suspicion must rise during a slow burst and decay back once the
+/// worker recovers — a burst is not a life sentence.
+#[test]
+fn time_varying_straggler_suspicion_decays_after_the_burst() {
+    let n = 8usize;
+    let w = n - 1; // bursts at iters where (iter + 7) % 40 < 10
+    let sim = SimConfig {
+        latency: LatencyModel::Fixed { us: 100 },
+        stragglers: vec![(w, 50.0)],
+        straggler_model: StragglerModel::TimeVarying { period: 40, duty: 10 },
+        ..Default::default()
+    };
+    // 72 steps: the mini-burst at iters 0..2 (sample-gated, no event),
+    // the main burst at 33..42, and its decay — ending before the next
+    // burst window opens at iter 73
+    let out = run(
+        n,
+        1,
+        vec![],
+        PolicyKind::LatencySelective { q_base: 0.2 },
+        AttackConfig::default(),
+        72,
+        37,
+        "sim",
+        sim,
+    );
+    let updates: Vec<(u64, f64)> = out
+        .events
+        .suspicion_updates()
+        .into_iter()
+        .filter(|&(_, worker, _)| worker == w)
+        .map(|(iter, _, s)| (iter, s))
+        .collect();
+    assert!(!updates.is_empty(), "burst never registered");
+    let peak = updates.iter().map(|&(_, s)| s).fold(0.0f64, f64::max);
+    assert!(peak >= 0.3, "burst peak suspicion {peak}");
+    let (last_iter, last) = *updates.last().unwrap();
+    assert!(last < 0.1, "suspicion failed to decay after the burst: {last}");
+    assert!(last_iter > 42, "decay must postdate the main burst (iters 33..42)");
+    assert!(out.eliminated.is_empty());
+}
+
+/// The headline claim, at test scale (the full sweep writes
+/// `BENCH_latency_audit.json` from `bench_transport`): one worker is
+/// both a 50x straggler and an intermittent sign-flipper. At equal q
+/// budget, `latency-selective` concentrates per-worker audits on the
+/// suspect and identifies it with strictly fewer *full-audit* rounds
+/// than `Bernoulli(q)` — which can only catch it by paying for a full
+/// n-chunk audit on a round where the worker happens to tamper.
+#[test]
+fn latency_selective_identifies_slow_byzantine_with_fewer_full_audits() {
+    let n = 64usize;
+    let villain = n - 1;
+    let steps = 400usize;
+    let q = 0.2f64;
+    let attack = AttackConfig { kind: AttackKind::SignFlip, p: 0.3, magnitude: 2.0 };
+    let sim = SimConfig {
+        latency: LatencyModel::Fixed { us: 100 },
+        stragglers: vec![(villain, 50.0)],
+        ..Default::default()
+    };
+    let count_full = |out: &TrainOutcome| {
+        let horizon = out
+            .events
+            .identification_time(villain)
+            .map(|t| t as usize + 1)
+            .unwrap_or(steps);
+        out.metrics.iterations[..horizon]
+            .iter()
+            .filter(|r| r.audited && r.audited_chunks >= n)
+            .count()
+    };
+    let bernoulli = run(
+        n,
+        1,
+        vec![villain],
+        PolicyKind::Bernoulli { q },
+        attack.clone(),
+        steps,
+        42,
+        "sim",
+        sim.clone(),
+    );
+    let latency = run(
+        n,
+        1,
+        vec![villain],
+        PolicyKind::LatencySelective { q_base: q },
+        attack,
+        steps,
+        42,
+        "sim",
+        sim,
+    );
+    assert_eq!(latency.eliminated, vec![villain], "latency-selective missed the liar");
+    let (full_b, full_l) = (count_full(&bernoulli), count_full(&latency));
+    assert!(
+        full_l < full_b,
+        "latency-selective used {full_l} full audits, bernoulli {full_b}"
+    );
+    // the targeted policy never needs a full audit at all: every audit
+    // it pays for is a per-worker subset
+    assert_eq!(full_l, 0);
+    // the timing/reliability signal surfaced along the way
+    assert!(!latency.events.suspicion_updates().is_empty(), "no suspicion was reported");
+}
