@@ -29,6 +29,7 @@ fn main() -> r3bft::Result<()> {
         cluster,
         policy: PolicyKind::Adaptive { p_assumed: 0.6 },
         attack: AttackConfig { kind: AttackKind::Noise, p: 0.6, magnitude: 2.0 },
+        adversary: None,
         train: TrainConfig { steps: 120, lr: 0.4, ..Default::default() },
     };
 

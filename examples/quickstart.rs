@@ -31,6 +31,7 @@ fn main() -> r3bft::Result<()> {
         policy: PolicyKind::Bernoulli { q: 0.3 },
         // attackers flip + scale their gradients in 70% of iterations
         attack: AttackConfig { kind: AttackKind::SignFlip, p: 0.7, magnitude: 2.0 },
+        adversary: None,
         train: TrainConfig { steps: 300, lr: 0.5, ..Default::default() },
     };
 

@@ -43,6 +43,7 @@ fn main() -> r3bft::Result<()> {
         cluster,
         policy: PolicyKind::Bernoulli { q: 0.25 },
         attack: AttackConfig { kind: AttackKind::SignFlip, p: 0.5, magnitude: 2.0 },
+        adversary: None,
         train: TrainConfig { steps, lr: 0.25, ..Default::default() },
     };
 

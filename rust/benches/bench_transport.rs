@@ -43,6 +43,7 @@ fn run_once(n: usize, shards: usize, transport: &str, steps: usize) -> f64 {
         cluster,
         policy: PolicyKind::None,
         attack: AttackConfig::default(),
+        adversary: None,
         train: TrainConfig { steps, lr: 0.1, ..Default::default() },
     };
     let ds = Arc::new(LinRegDataset::generate(4096, d, 0.0, 42));
@@ -76,6 +77,7 @@ fn run_straggler(n: usize, gather: GatherPolicy, steps: usize) -> f64 {
         cluster,
         policy: PolicyKind::None,
         attack: AttackConfig::default(),
+        adversary: None,
         train: TrainConfig { steps, lr: 0.1, ..Default::default() },
     };
     let opts = MasterOptions {
@@ -118,6 +120,7 @@ fn run_latency_audit(
         cluster,
         policy,
         attack: AttackConfig { kind: AttackKind::SignFlip, p: 0.3, magnitude: 2.0 },
+        adversary: None,
         train: TrainConfig { steps, lr: 0.1, ..Default::default() },
     };
     let opts = MasterOptions {

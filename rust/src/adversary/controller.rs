@@ -1,0 +1,458 @@
+//! The omniscient adversary controller: one brain for all Byzantine
+//! workers of a run.
+//!
+//! The controller sits between two read paths and one write path:
+//!
+//! * **tap (read)** — each protocol core gets a [`CoreTap`] installed
+//!   as its [`ProtocolTap`]; the tap remaps shard-local worker ids to
+//!   global ones and forwards round assignments and events into the
+//!   controller's [`AdversaryView`].
+//! * **plan (think)** — on every `on_round_start` the controller asks
+//!   its [`Strategy`] for the shard's [`RoundPlan`]. Planning happens
+//!   on the master thread *before* the wave is submitted, so by the
+//!   time any worker computes a symbol the plan is fixed — worker
+//!   threads only read it, which keeps threaded runs deterministic.
+//! * **corrupt (write)** — Byzantine workers call
+//!   [`AdversaryController::corrupt`] from inside symbol production;
+//!   planned (worker, chunk) pairs get the coordinated sign-flip lie,
+//!   everything else passes through honest. The simulated transport
+//!   additionally asks [`AdversaryController::response_delay_ns`] for
+//!   the strategy's faked per-worker stall (latency mimicry).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::strategies::{build_strategy, RoundPlan, Strategy};
+use crate::config::AdversaryKind;
+use crate::coordinator::events::Event;
+use crate::coordinator::protocol::ProtocolTap;
+use crate::coordinator::{ChunkId, WorkerId, MASTER_SENTINEL};
+
+/// One shard's static shape as the adversary sees it (global ids).
+#[derive(Clone, Debug)]
+pub struct ShardInfo {
+    pub shard: usize,
+    /// Global id of the shard's first worker.
+    pub lo: WorkerId,
+    /// Shard width n_s.
+    pub n: usize,
+    /// Shard Byzantine budget f_s (the 2f_s+1 floor the equivocator
+    /// probes).
+    pub f: usize,
+}
+
+/// The cluster's static shape: shard ranges and budgets. A
+/// single-master run is a one-shard topology.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub shards: Vec<ShardInfo>,
+    /// Total worker count.
+    pub n: usize,
+}
+
+impl Topology {
+    pub fn single(n: usize, f: usize) -> Topology {
+        Topology { shards: vec![ShardInfo { shard: 0, lo: 0, n, f }], n }
+    }
+
+    /// The shard owning a global worker id.
+    pub fn shard_of(&self, w: WorkerId) -> usize {
+        self.shards
+            .iter()
+            .position(|s| (s.lo..s.lo + s.n).contains(&w))
+            .expect("worker id outside the adversary topology")
+    }
+}
+
+/// The current round of one shard, as the tap reported it.
+#[derive(Clone, Debug)]
+pub struct ShardRoundView {
+    pub iter: u64,
+    pub f_t: usize,
+    /// `owners[c]` = chunk c's owners, **global** ids. Chunk ids are
+    /// shard-round-local — exactly the ids workers see in their task
+    /// bundles, so plans key on them directly.
+    pub owners: Vec<Vec<WorkerId>>,
+}
+
+/// Everything the protocol has made public, folded into one mutable
+/// view the strategies plan against. Strictly observational: built
+/// from assignments and events only, never from oracle data.
+#[derive(Clone, Debug)]
+pub struct AdversaryView {
+    pub topology: Topology,
+    /// The controller's workers (sorted global ids).
+    pub colluders: Vec<WorkerId>,
+    /// Per global worker: identified-and-eliminated by the master.
+    pub eliminated: Vec<bool>,
+    /// Per global worker: crash-stopped.
+    pub crashed: Vec<bool>,
+    /// Per global worker: last suspicion score the master surfaced
+    /// (`Event::SuspicionUpdated`); 0.0 until reported.
+    pub suspicion: Vec<f64>,
+    /// Latest iteration at which a detection named a colluder as a
+    /// possible owner of a faulty chunk (the audit-evader's dormancy
+    /// clock).
+    pub last_detection: Option<u64>,
+    /// Audited iterations observed so far (all shards).
+    pub audits_seen: usize,
+    /// Per shard: the current round, once the first one started.
+    pub rounds: Vec<Option<ShardRoundView>>,
+}
+
+impl AdversaryView {
+    pub fn is_colluder(&self, w: WorkerId) -> bool {
+        self.colluders.binary_search(&w).is_ok()
+    }
+
+    /// A colluder the master still trusts (not eliminated, not
+    /// crashed) — the only kind that can still do damage.
+    pub fn colluder_alive(&self, w: WorkerId) -> bool {
+        self.is_colluder(w) && !self.eliminated[w] && !self.crashed[w]
+    }
+
+    /// Alive colluders inside one shard.
+    pub fn alive_colluders_in(&self, shard: usize) -> usize {
+        let s = &self.topology.shards[shard];
+        (s.lo..s.lo + s.n).filter(|&w| self.colluder_alive(w)).count()
+    }
+}
+
+/// A fixed per-shard plan: what the colluders do this round.
+#[derive(Clone, Debug, Default)]
+struct PlannedRound {
+    iter: u64,
+    /// Tamper exactly these (global worker, local chunk) pairs.
+    tampers: Vec<(WorkerId, ChunkId)>,
+    /// Fake response stall per worker (sim transport only).
+    delays: Vec<(WorkerId, u64)>,
+}
+
+struct ControllerState {
+    strategy: Box<dyn Strategy>,
+    view: AdversaryView,
+    /// Current plan per shard (valid for `plans[s].iter` only).
+    plans: Vec<PlannedRound>,
+}
+
+/// The omniscient adversary: owns all Byzantine workers, watches the
+/// protocol's public state through [`CoreTap`]s, and coordinates the
+/// colluders' lies per the configured [`Strategy`].
+pub struct AdversaryController {
+    kind: AdversaryKind,
+    /// Sorted global ids of the owned workers (immutable, lock-free).
+    colluders: Vec<WorkerId>,
+    /// Lie magnitude (the coordinated sign-flip's scale, matching the
+    /// stateless `sign_flip` attack's knob).
+    magnitude: f32,
+    state: Mutex<ControllerState>,
+}
+
+impl AdversaryController {
+    pub fn new(
+        kind: AdversaryKind,
+        topology: Topology,
+        colluders: &[WorkerId],
+        magnitude: f32,
+    ) -> AdversaryController {
+        let n = topology.n;
+        let k = topology.shards.len();
+        let mut sorted: Vec<WorkerId> = colluders.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let view = AdversaryView {
+            topology,
+            colluders: sorted.clone(),
+            eliminated: vec![false; n],
+            crashed: vec![false; n],
+            suspicion: vec![0.0; n],
+            last_detection: None,
+            audits_seen: 0,
+            rounds: vec![None; k],
+        };
+        AdversaryController {
+            kind,
+            colluders: sorted,
+            magnitude,
+            state: Mutex::new(ControllerState {
+                strategy: build_strategy(kind),
+                view,
+                plans: vec![PlannedRound::default(); k],
+            }),
+        }
+    }
+
+    pub fn kind(&self) -> AdversaryKind {
+        self.kind
+    }
+
+    /// Is this (global) worker one of the adversary's puppets?
+    pub fn is_colluder(&self, w: WorkerId) -> bool {
+        self.colluders.binary_search(&w).is_ok()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, ControllerState> {
+        // a poisoned lock only means some worker thread panicked
+        // mid-read; the state itself is never left half-written
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Tap entry: a shard's round assignment is fixed. Re-plans the
+    /// shard (on the master thread, before the wave is submitted).
+    pub fn round_start(&self, shard: usize, iter: u64, f_t: usize, owners: Vec<Vec<WorkerId>>) {
+        let mut st = self.lock();
+        let ControllerState { strategy, view, plans } = &mut *st;
+        view.rounds[shard] = Some(ShardRoundView { iter, f_t, owners });
+        let RoundPlan { tampers, delays } = strategy.plan_round(shard, view);
+        plans[shard] = PlannedRound { iter, tampers, delays };
+    }
+
+    /// Tap entry: one protocol event (worker ids already global).
+    pub fn event(&self, _shard: usize, e: &Event) {
+        let mut st = self.lock();
+        let view = &mut st.view;
+        match e {
+            Event::AuditDecision { audited: true, .. } => view.audits_seen += 1,
+            Event::FaultDetected { iter, owners, .. } => {
+                if owners.iter().any(|&w| view.is_colluder(w)) {
+                    view.last_detection =
+                        Some(view.last_detection.map_or(*iter, |d| d.max(*iter)));
+                }
+            }
+            Event::Eliminated { worker, .. } => view.eliminated[*worker] = true,
+            Event::WorkerCrashed { worker, .. } => view.crashed[*worker] = true,
+            Event::SuspicionUpdated { worker, suspicion, .. } => {
+                view.suspicion[*worker] = *suspicion;
+            }
+            _ => {}
+        }
+    }
+
+    /// Worker entry: should `worker` (global id) tamper `chunk` at
+    /// `iter` — and if so, apply the coordinated lie in place. The lie
+    /// is a pure function of the true gradient (sign-flip scaled by
+    /// the configured magnitude), so colluders sharing a chunk push
+    /// bit-identical wrong symbols and repeated phases of one
+    /// iteration stay consistent. Returns whether the symbol was
+    /// corrupted.
+    pub fn corrupt(
+        &self,
+        worker: WorkerId,
+        iter: u64,
+        chunk: ChunkId,
+        grad: &mut [f32],
+        loss: &mut f32,
+    ) -> bool {
+        let planned = {
+            let st = self.lock();
+            let plan = &st.plans[st.view.topology.shard_of(worker)];
+            plan.iter == iter && plan.tampers.contains(&(worker, chunk))
+        };
+        if !planned {
+            return false;
+        }
+        let m = self.magnitude;
+        for v in grad.iter_mut() {
+            *v = -m * *v;
+        }
+        // lie about the loss too (it feeds the adaptive policy) — same
+        // shape as the stateless attacks
+        *loss *= 1.0 + 0.5 * m;
+        true
+    }
+
+    /// Sim-transport entry: extra response stall for `worker` at
+    /// `iter` (0 unless the strategy shapes timing).
+    pub fn response_delay_ns(&self, worker: WorkerId, iter: u64) -> u64 {
+        let st = self.lock();
+        let plan = &st.plans[st.view.topology.shard_of(worker)];
+        if plan.iter != iter {
+            return 0;
+        }
+        plan.delays
+            .iter()
+            .find(|(w, _)| *w == worker)
+            .map(|(_, d)| *d)
+            .unwrap_or(0)
+    }
+}
+
+/// The [`ProtocolTap`] adapter installed on one protocol core: remaps
+/// the core's local worker ids to global ones (shard cores run over
+/// local ids `0..n_s`) and forwards into the controller. Single-master
+/// runs use `shard = 0, lo = 0` (identity remap).
+pub struct CoreTap {
+    controller: Arc<AdversaryController>,
+    shard: usize,
+    lo: WorkerId,
+}
+
+impl CoreTap {
+    pub fn new(controller: Arc<AdversaryController>, shard: usize, lo: WorkerId) -> CoreTap {
+        CoreTap { controller, shard, lo }
+    }
+
+    fn global(&self, w: WorkerId) -> WorkerId {
+        if w == MASTER_SENTINEL {
+            w
+        } else {
+            w + self.lo
+        }
+    }
+
+    /// Clone of `e` with worker ids shifted to global (chunk ids stay
+    /// round-local; strategies key plans on owner sets, not chunks).
+    fn remap(&self, e: &Event) -> Event {
+        let g = |w: &WorkerId| self.global(*w);
+        match e {
+            Event::FaultDetected { iter, chunk, owners } => Event::FaultDetected {
+                iter: *iter,
+                chunk: *chunk,
+                owners: owners.iter().map(g).collect(),
+            },
+            Event::ReactiveRedundancy { iter, chunk, added } => Event::ReactiveRedundancy {
+                iter: *iter,
+                chunk: *chunk,
+                added: added.iter().map(g).collect(),
+            },
+            Event::Identified { iter, workers } => {
+                Event::Identified { iter: *iter, workers: workers.iter().map(g).collect() }
+            }
+            Event::Eliminated { iter, worker } => {
+                Event::Eliminated { iter: *iter, worker: self.global(*worker) }
+            }
+            Event::WorkerCrashed { iter, worker } => {
+                Event::WorkerCrashed { iter: *iter, worker: self.global(*worker) }
+            }
+            Event::StragglerAbandoned { iter, worker } => {
+                Event::StragglerAbandoned { iter: *iter, worker: self.global(*worker) }
+            }
+            Event::SuspicionUpdated { iter, worker, suspicion } => Event::SuspicionUpdated {
+                iter: *iter,
+                worker: self.global(*worker),
+                suspicion: *suspicion,
+            },
+            other => other.clone(),
+        }
+    }
+}
+
+impl ProtocolTap for CoreTap {
+    fn on_round_start(&self, iter: u64, f_t: usize, owners: &[Vec<WorkerId>]) {
+        let global: Vec<Vec<WorkerId>> = owners
+            .iter()
+            .map(|os| os.iter().map(|&w| self.global(w)).collect())
+            .collect();
+        self.controller.round_start(self.shard, iter, f_t, global);
+    }
+
+    fn on_event(&self, event: &Event) {
+        self.controller.event(self.shard, &self.remap(event));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller(kind: AdversaryKind) -> AdversaryController {
+        AdversaryController::new(kind, Topology::single(8, 2), &[6, 7], 1.0)
+    }
+
+    #[test]
+    fn topology_shard_lookup() {
+        let t = Topology {
+            shards: vec![
+                ShardInfo { shard: 0, lo: 0, n: 4, f: 1 },
+                ShardInfo { shard: 1, lo: 4, n: 4, f: 1 },
+            ],
+            n: 8,
+        };
+        assert_eq!(t.shard_of(0), 0);
+        assert_eq!(t.shard_of(3), 0);
+        assert_eq!(t.shard_of(4), 1);
+        assert_eq!(t.shard_of(7), 1);
+    }
+
+    #[test]
+    fn unplanned_pairs_pass_through_honest() {
+        let c = controller(AdversaryKind::AssignmentAware);
+        // no round started yet: nothing may be tampered
+        let mut g = vec![1.0f32, -2.0];
+        let mut loss = 1.0f32;
+        assert!(!c.corrupt(6, 0, 0, &mut g, &mut loss));
+        assert_eq!(g, vec![1.0, -2.0]);
+        assert_eq!(loss, 1.0);
+        assert_eq!(c.response_delay_ns(6, 0), 0);
+    }
+
+    #[test]
+    fn planned_lie_is_consistent_across_colluders_and_phases() {
+        let c = controller(AdversaryKind::AssignmentAware);
+        // chunks 6 and 7 are singly owned by the colluders (r = 1)
+        let owners: Vec<Vec<WorkerId>> = (0..8).map(|w| vec![w]).collect();
+        c.round_start(0, 3, 2, owners);
+        let (mut g1, mut g2) = (vec![0.5f32, -1.5], vec![0.5f32, -1.5]);
+        let (mut l1, mut l2) = (2.0f32, 2.0f32);
+        assert!(c.corrupt(6, 3, 6, &mut g1, &mut l1));
+        assert!(c.corrupt(6, 3, 6, &mut g2, &mut l2), "repeat call (later phase)");
+        assert_eq!(g1, g2, "the lie is a pure function of (iter, chunk, grad)");
+        assert_eq!(g1, vec![-0.5, 1.5]);
+        assert!(l1 > 2.0);
+        // an honest worker's chunk is never in the plan
+        let mut gh = vec![1.0f32];
+        let mut lh = 1.0f32;
+        assert!(!c.corrupt(0, 3, 0, &mut gh, &mut lh));
+        // a stale iteration misses the plan
+        let mut gs = vec![1.0f32];
+        let mut ls = 1.0f32;
+        assert!(!c.corrupt(6, 2, 6, &mut gs, &mut ls));
+    }
+
+    #[test]
+    fn events_update_the_view() {
+        let c = controller(AdversaryKind::AssignmentAware);
+        c.event(0, &Event::FaultDetected { iter: 5, chunk: 0, owners: vec![6] });
+        c.event(0, &Event::Eliminated { iter: 5, worker: 6 });
+        c.event(0, &Event::SuspicionUpdated { iter: 5, worker: 7, suspicion: 0.4 });
+        c.event(0, &Event::WorkerCrashed { iter: 6, worker: 2 });
+        let st = c.lock();
+        assert_eq!(st.view.last_detection, Some(5));
+        assert!(st.view.eliminated[6]);
+        assert!(st.view.crashed[2]);
+        assert_eq!(st.view.suspicion[7], 0.4);
+        assert!(!st.view.colluder_alive(6), "eliminated colluder is dead to the plan");
+        assert!(st.view.colluder_alive(7));
+    }
+
+    #[test]
+    fn detections_on_honest_owners_do_not_start_the_dormancy_clock() {
+        let c = controller(AdversaryKind::AuditEvader { cooldown: 4 });
+        c.event(0, &Event::FaultDetected { iter: 9, chunk: 1, owners: vec![0, 1] });
+        assert_eq!(c.lock().view.last_detection, None);
+    }
+
+    #[test]
+    fn core_tap_remaps_to_global_ids() {
+        let c = Arc::new(AdversaryController::new(
+            AdversaryKind::AssignmentAware,
+            Topology {
+                shards: vec![
+                    ShardInfo { shard: 0, lo: 0, n: 4, f: 1 },
+                    ShardInfo { shard: 1, lo: 4, n: 4, f: 1 },
+                ],
+                n: 8,
+            },
+            &[3, 7],
+            1.0,
+        ));
+        let tap = CoreTap::new(c.clone(), 1, 4);
+        // shard-local worker 3 is global worker 7 (a colluder)
+        tap.on_event(&Event::Eliminated { iter: 2, worker: 3 });
+        tap.on_round_start(4, 1, &[vec![0], vec![1], vec![2], vec![3]]);
+        let st = c.lock();
+        assert!(st.view.eliminated[7]);
+        let round = st.view.rounds[1].as_ref().unwrap();
+        assert_eq!(round.owners, vec![vec![4], vec![5], vec![6], vec![7]]);
+        assert!(st.view.rounds[0].is_none());
+    }
+}

@@ -1,0 +1,59 @@
+//! Coordinated, protocol-aware Byzantine adversaries: the red-team
+//! layer that fights back.
+//!
+//! Every attacker the coordinator faced before this subsystem was a
+//! stateless per-worker Bernoulli coin
+//! ([`crate::coordinator::byzantine::ByzantineBehavior`]): it never
+//! saw the assignment, the audit outcomes, or its own suspicion
+//! trajectory. The paper's exactness guarantee (2f < n ⇒ eventual
+//! identification and fault-free-identical updates) is claimed against
+//! a *worst-case* adversary, and the standard evaluation model for
+//! such defenses (Blanchard et al., 2017) is an **omniscient** one:
+//! all Byzantine workers are puppets of a single controller that
+//! observes everything the protocol makes public and coordinates the
+//! lies. Interactive/reactive schemes like this one are exactly where
+//! adaptive adversaries get interesting (Jain et al., 2024).
+//!
+//! ## Pieces
+//!
+//! * [`AdversaryController`] — owns every Byzantine worker of a run.
+//!   It watches the protocol through a read-only
+//!   [`crate::coordinator::protocol::ProtocolTap`] (round assignments
+//!   the moment they are fixed, plus the event stream: audit
+//!   decisions, detections, identifications, eliminations, suspicion
+//!   updates) and, at each round start, asks its [`Strategy`] for a
+//!   [`RoundPlan`]: which (worker, chunk) pairs to tamper and what
+//!   extra response delay each colluder should fake. Workers consult
+//!   the controller from inside symbol production
+//!   ([`crate::coordinator::worker::AdversaryHandle`]), on both the
+//!   threaded and the simulated transport.
+//! * [`Strategy`] — the pluggable brain; five ship with the crate
+//!   (see [`strategies`]): `assignment-aware`, `sleeper`,
+//!   `audit-evader`, `latency-mimic`, and `shard-equivocator`,
+//!   selected by `--adversary <strategy>` / `adversary.strategy`.
+//! * The **lie** every strategy tells is the coordinated sign-flip
+//!   `-m·g` of the true chunk gradient: a pure function of the chunk,
+//!   so colluders sharing a chunk push bit-identical wrong symbols
+//!   (the replica comparison sees unanimity) and the shape matches
+//!   the stateless `sign_flip` baseline for apples-to-apples
+//!   robustness numbers (`r3bft experiment e13`, `BENCH_adversary.json`).
+//!
+//! ## What the adversary can and cannot see
+//!
+//! The tap mirrors the master's *public* state only: assignments,
+//! events, suspicion scores. It never sees oracle data (the `tampered`
+//! flags), audit coins before they are spent, or honest workers'
+//! gradients — and it cannot mutate anything. The exactness property
+//! therefore stays exactly as the paper claims it: randomized audits
+//! are unpredictable even to an omniscient observer, so a persistently
+//! tampering colluder is identified almost surely, while a colluder
+//! that stops tampering to stay hidden stops doing damage (footnote 2
+//! of the paper). `tests/test_adversary.rs` asserts both halves for
+//! every shipped strategy, single-master and sharded, on both
+//! transports.
+
+pub mod controller;
+pub mod strategies;
+
+pub use controller::{AdversaryController, AdversaryView, CoreTap, ShardInfo, Topology};
+pub use strategies::{build_strategy, RoundPlan, Strategy};

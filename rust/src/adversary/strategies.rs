@@ -1,0 +1,380 @@
+//! The five shipped adversary strategies.
+//!
+//! Each strategy is a pure planner: given the read-only
+//! [`AdversaryView`] (assignment, suspicion trajectory, detection
+//! history, eliminations, topology) it returns the shard's
+//! [`RoundPlan`] — which (worker, chunk) pairs to tamper and which
+//! fake response stalls to apply. Planning runs once per shard round
+//! on the master thread; the plan is immutable while workers read it,
+//! so threaded runs stay deterministic.
+//!
+//! | strategy            | signal exploited                  | what catches it |
+//! |---------------------|-----------------------------------|-----------------|
+//! | `assignment-aware`  | chunk owner sets                  | randomized audits (it cannot predict the coin) |
+//! | `sleeper`           | trust/reliability warm-up         | audits keep firing after the strike begins |
+//! | `audit-evader`      | detection events + suspicion decay| dormancy is finite: resumed lies meet fresh audits |
+//! | `latency-mimic`     | EWMA anomaly gates                | reliability half of the fused suspicion |
+//! | `shard-equivocator` | per-shard 2f_s+1 budgets          | shard-local votes (budgets hold per shard) |
+
+use super::controller::AdversaryView;
+use crate::config::AdversaryKind;
+use crate::coordinator::latency::{MIN_EXCESS_QUANTA, QUANTUM_NS};
+use crate::coordinator::{ChunkId, WorkerId};
+
+/// What one shard's colluders do this round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundPlan {
+    /// Tamper exactly these (global worker, local chunk) pairs; pairs
+    /// not listed — including detection/reactive top-ups assigned
+    /// mid-round — are answered honestly.
+    pub tampers: Vec<(WorkerId, ChunkId)>,
+    /// Fake response stall per worker in ns (sim transport only).
+    pub delays: Vec<(WorkerId, u64)>,
+}
+
+/// A coordinated adversary strategy: plans each shard round from the
+/// protocol's public state.
+pub trait Strategy: Send {
+    fn name(&self) -> &'static str;
+    /// Plan `shard`'s round. `view.rounds[shard]` is the fresh
+    /// assignment; everything else is the accumulated public state.
+    fn plan_round(&mut self, shard: usize, view: &AdversaryView) -> RoundPlan;
+}
+
+/// Instantiate the strategy a config names.
+pub fn build_strategy(kind: AdversaryKind) -> Box<dyn Strategy> {
+    match kind {
+        AdversaryKind::AssignmentAware => Box::new(AssignmentAware),
+        AdversaryKind::Sleeper { warmup } => Box::new(Sleeper { warmup }),
+        AdversaryKind::AuditEvader { cooldown } => Box::new(AuditEvader { cooldown }),
+        AdversaryKind::LatencyMimic => Box::new(LatencyMimic),
+        AdversaryKind::ShardEquivocator => Box::new(ShardEquivocator),
+    }
+}
+
+/// Every (worker, chunk) pair where an alive colluder owns a chunk in
+/// this shard's round — the "all-in" plan most strategies start from.
+fn own_chunks(shard: usize, view: &AdversaryView) -> Vec<(WorkerId, ChunkId)> {
+    let Some(round) = view.rounds[shard].as_ref() else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for (c, owners) in round.owners.iter().enumerate() {
+        for &w in owners {
+            if view.colluder_alive(w) {
+                out.push((w, c));
+            }
+        }
+    }
+    out
+}
+
+/// Tamper a chunk only when the colluders own **every** copy of it,
+/// so the proactive replication comparison sees unanimous (wrong)
+/// agreement and cannot expose the lie. Under r = 1 policies every
+/// colluder-owned chunk qualifies; under the deterministic policy
+/// (r = f_t+1 > remaining colluders) no chunk ever does — the
+/// strategy goes silent rather than get caught, exactly the
+/// cross-check-dodging the paper's replication argument predicts.
+/// Randomized *audits* still catch it: the audit coin is spent after
+/// symbols are ingested, so even an omniscient planner cannot lie
+/// only on unaudited rounds.
+pub struct AssignmentAware;
+
+impl Strategy for AssignmentAware {
+    fn name(&self) -> &'static str {
+        "assignment-aware"
+    }
+
+    fn plan_round(&mut self, shard: usize, view: &AdversaryView) -> RoundPlan {
+        let Some(round) = view.rounds[shard].as_ref() else {
+            return RoundPlan::default();
+        };
+        let mut tampers = Vec::new();
+        for (c, owners) in round.owners.iter().enumerate() {
+            if !owners.is_empty() && owners.iter().all(|&w| view.colluder_alive(w)) {
+                for &w in owners {
+                    tampers.push((w, c));
+                }
+            }
+        }
+        RoundPlan { tampers, delays: Vec::new() }
+    }
+}
+
+/// Honest for `warmup` rounds to build trust — verified chunks push
+/// reliability (and the fused suspicion) toward "fully trusted" under
+/// `selective` / `latency-selective` — then strike persistently.
+/// Costlier to detect than a stateless attacker at equal q budget by
+/// construction: nothing can be identified before the strike begins.
+pub struct Sleeper {
+    pub warmup: u64,
+}
+
+impl Strategy for Sleeper {
+    fn name(&self) -> &'static str {
+        "sleeper"
+    }
+
+    fn plan_round(&mut self, shard: usize, view: &AdversaryView) -> RoundPlan {
+        match view.rounds[shard].as_ref() {
+            Some(round) if round.iter >= self.warmup => {
+                RoundPlan { tampers: own_chunks(shard, view), delays: Vec::new() }
+            }
+            _ => RoundPlan::default(),
+        }
+    }
+}
+
+/// Tamper persistently, but go dormant for `cooldown` rounds after
+/// any detection event that names a colluder — timed to ride out the
+/// hot phase of the reliability/suspicion response (each suspect's
+/// reliability is halved on detection and recovers by +0.1 per
+/// verified audit, so a short dormancy sheds the extra per-worker
+/// audit pressure before the next strike).
+pub struct AuditEvader {
+    pub cooldown: u64,
+}
+
+impl Strategy for AuditEvader {
+    fn name(&self) -> &'static str {
+        "audit-evader"
+    }
+
+    fn plan_round(&mut self, shard: usize, view: &AdversaryView) -> RoundPlan {
+        let Some(round) = view.rounds[shard].as_ref() else {
+            return RoundPlan::default();
+        };
+        if let Some(d) = view.last_detection {
+            if round.iter <= d + self.cooldown {
+                return RoundPlan::default(); // dormant
+            }
+        }
+        RoundPlan { tampers: own_chunks(shard, view), delays: Vec::new() }
+    }
+}
+
+/// The maximal response stall that stays under every EWMA anomaly
+/// gate of [`crate::coordinator::latency`]: quantized to
+/// `MIN_EXCESS_QUANTA` buckets of excess, which fails both the
+/// absolute-excess gate (excess < MIN_EXCESS_QUANTA) and the ratio
+/// gate (mean <= SLOW_RATIO x the >= 1-quantum median) — so the
+/// worker's latency anomaly is pinned to 0 while it steals almost
+/// 3 ms of straggling per round.
+pub const MIMIC_STALL_NS: u64 = (MIN_EXCESS_QUANTA as u64 + 1) * QUANTUM_NS - 100_000;
+
+/// Lie persistently while shaping response delays to stay invisible
+/// to the latency half of the fused suspicion: each colluder stalls
+/// [`MIMIC_STALL_NS`] per round (just under the anomaly gates) until
+/// the master surfaces *any* suspicion on it, then sheds all delay to
+/// look like a recovered straggler. Only the reliability half of the
+/// suspicion — fed by actual detections — can build the case.
+pub struct LatencyMimic;
+
+impl Strategy for LatencyMimic {
+    fn name(&self) -> &'static str {
+        "latency-mimic"
+    }
+
+    fn plan_round(&mut self, shard: usize, view: &AdversaryView) -> RoundPlan {
+        let tampers = own_chunks(shard, view);
+        let s = &view.topology.shards[shard];
+        let delays = (s.lo..s.lo + s.n)
+            .filter(|&w| view.colluder_alive(w) && view.suspicion[w] == 0.0)
+            .map(|w| (w, MIMIC_STALL_NS))
+            .collect();
+        RoundPlan { tampers, delays }
+    }
+}
+
+/// Concentrate all lying on the *weakest* shard — the one whose alive
+/// colluders sit closest to its 2f_s+1 identification floor — while
+/// colluders elsewhere stay honest and keep their trust. Once the
+/// target shard's colluders are eliminated the pressure moves to the
+/// next-weakest shard. With K = 1 this degrades to the all-in attack.
+pub struct ShardEquivocator;
+
+impl ShardEquivocator {
+    /// The shard to concentrate on: maximal alive-colluder pressure
+    /// against its own 2f_s+1 floor (ties to the lowest shard id);
+    /// `None` when no shard has an alive colluder left.
+    fn target(view: &AdversaryView) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for s in &view.topology.shards {
+            let alive = view.alive_colluders_in(s.shard);
+            if alive == 0 {
+                continue;
+            }
+            let pressure = alive as f64 / (2 * s.f + 1) as f64;
+            let better = match best {
+                None => true,
+                Some((bp, _)) => pressure > bp,
+            };
+            if better {
+                best = Some((pressure, s.shard));
+            }
+        }
+        best.map(|(_, s)| s)
+    }
+}
+
+impl Strategy for ShardEquivocator {
+    fn name(&self) -> &'static str {
+        "shard-equivocator"
+    }
+
+    fn plan_round(&mut self, shard: usize, view: &AdversaryView) -> RoundPlan {
+        if Self::target(view) == Some(shard) {
+            RoundPlan { tampers: own_chunks(shard, view), delays: Vec::new() }
+        } else {
+            RoundPlan::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adversary::controller::{ShardInfo, Topology};
+    use crate::coordinator::events::Event;
+    use crate::adversary::AdversaryController;
+
+    /// Drive a controller's public API to produce a view, then read
+    /// the plan back through `corrupt` probes.
+    fn planned(c: &AdversaryController, w: WorkerId, iter: u64, chunk: ChunkId) -> bool {
+        let mut g = vec![1.0f32, 2.0];
+        let mut l = 1.0f32;
+        c.corrupt(w, iter, chunk, &mut g, &mut l)
+    }
+
+    fn single(kind: AdversaryKind, colluders: &[WorkerId]) -> AdversaryController {
+        AdversaryController::new(kind, Topology::single(8, 2), colluders, 1.0)
+    }
+
+    fn r1_owners() -> Vec<Vec<WorkerId>> {
+        (0..8).map(|w| vec![w]).collect()
+    }
+
+    #[test]
+    fn assignment_aware_needs_full_ownership() {
+        let c = single(AdversaryKind::AssignmentAware, &[6, 7]);
+        // r = 2 cyclic: chunk c owned by (c, c+1)
+        let owners: Vec<Vec<WorkerId>> = (0..8).map(|c| vec![c, (c + 1) % 8]).collect();
+        c.round_start(0, 0, 2, owners);
+        // chunk 6 is owned by {6, 7} — all colluders: tamper
+        assert!(planned(&c, 6, 0, 6));
+        assert!(planned(&c, 7, 0, 6));
+        // chunk 5 is owned by {5, 6} — worker 5 is honest: stay silent
+        assert!(!planned(&c, 6, 0, 5));
+        // chunk 7 is owned by {7, 0} — worker 0 is honest: stay silent
+        assert!(!planned(&c, 7, 0, 7));
+    }
+
+    #[test]
+    fn assignment_aware_goes_silent_under_full_replication() {
+        let c = single(AdversaryKind::AssignmentAware, &[6, 7]);
+        // r = 3 = f_t+1 (deterministic policy): every chunk has an
+        // honest owner, so nothing is ever safe to tamper
+        let owners: Vec<Vec<WorkerId>> =
+            (0..8).map(|c| vec![c, (c + 1) % 8, (c + 2) % 8]).collect();
+        c.round_start(0, 0, 2, owners);
+        for chunk in 0..8 {
+            for &w in &[6usize, 7] {
+                assert!(!planned(&c, w, 0, chunk), "worker {w} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn sleeper_waits_out_the_warmup() {
+        let c = single(AdversaryKind::Sleeper { warmup: 5 }, &[7]);
+        for iter in 0..5u64 {
+            c.round_start(0, iter, 2, r1_owners());
+            assert!(!planned(&c, 7, iter, 7), "struck during warmup at {iter}");
+        }
+        c.round_start(0, 5, 2, r1_owners());
+        assert!(planned(&c, 7, 5, 7), "no strike after warmup");
+    }
+
+    #[test]
+    fn audit_evader_goes_dormant_after_a_detection() {
+        let c = single(AdversaryKind::AuditEvader { cooldown: 3 }, &[6, 7]);
+        c.round_start(0, 0, 2, r1_owners());
+        assert!(planned(&c, 7, 0, 7));
+        // a detection naming colluder 6 at iter 0 starts the clock
+        c.event(0, &Event::FaultDetected { iter: 0, chunk: 6, owners: vec![6] });
+        for iter in 1..=3u64 {
+            c.round_start(0, iter, 2, r1_owners());
+            assert!(!planned(&c, 7, iter, 7), "lied while dormant at {iter}");
+        }
+        c.round_start(0, 4, 2, r1_owners());
+        assert!(planned(&c, 7, 4, 7), "never resumed after cooldown");
+    }
+
+    #[test]
+    fn latency_mimic_stall_stays_under_the_gates() {
+        use crate::coordinator::latency::LatencyTracker;
+        // feed the mimic's exact stall into a real tracker next to an
+        // on-time cluster: the anomaly must stay pinned at 0
+        let mut t = LatencyTracker::new(4);
+        let active: Vec<WorkerId> = (0..4).collect();
+        for _ in 0..30 {
+            for w in 0..3 {
+                t.observe_ns(w, 0);
+            }
+            t.observe_ns(3, MIMIC_STALL_NS);
+            t.refresh(&active);
+        }
+        assert_eq!(t.anomaly(3), 0.0, "mimic stall tripped the anomaly gates");
+        // one more quantum would trip them
+        let mut t = LatencyTracker::new(4);
+        for _ in 0..30 {
+            for w in 0..3 {
+                t.observe_ns(w, 0);
+            }
+            t.observe_ns(3, MIMIC_STALL_NS + QUANTUM_NS);
+            t.refresh(&active);
+        }
+        assert!(t.anomaly(3) > 0.0, "one quantum more must be anomalous");
+    }
+
+    #[test]
+    fn latency_mimic_sheds_delay_once_suspected() {
+        let c = single(AdversaryKind::LatencyMimic, &[6, 7]);
+        c.round_start(0, 0, 2, r1_owners());
+        assert_eq!(c.response_delay_ns(6, 0), MIMIC_STALL_NS);
+        assert_eq!(c.response_delay_ns(7, 0), MIMIC_STALL_NS);
+        assert_eq!(c.response_delay_ns(0, 0), 0, "honest workers are not stalled");
+        assert!(planned(&c, 7, 0, 7), "the mimic still lies");
+        // the master surfaces suspicion on 7: it sheds the stall
+        c.event(0, &Event::SuspicionUpdated { iter: 0, worker: 7, suspicion: 0.3 });
+        c.round_start(0, 1, 2, r1_owners());
+        assert_eq!(c.response_delay_ns(7, 1), 0);
+        assert_eq!(c.response_delay_ns(6, 1), MIMIC_STALL_NS);
+    }
+
+    #[test]
+    fn equivocator_concentrates_on_the_weakest_shard() {
+        // shard 0: f_s = 2 (floor 5), one colluder -> pressure 1/5;
+        // shard 1: f_s = 1 (floor 3), one colluder -> pressure 1/3
+        let topo = Topology {
+            shards: vec![
+                ShardInfo { shard: 0, lo: 0, n: 8, f: 2 },
+                ShardInfo { shard: 1, lo: 8, n: 8, f: 1 },
+            ],
+            n: 16,
+        };
+        let c = AdversaryController::new(AdversaryKind::ShardEquivocator, topo, &[0, 8], 1.0);
+        let owners0: Vec<Vec<WorkerId>> = (0..8).map(|w| vec![w]).collect();
+        let owners1: Vec<Vec<WorkerId>> = (8..16).map(|w| vec![w]).collect();
+        c.round_start(0, 0, 2, owners0.clone());
+        c.round_start(1, 0, 1, owners1.clone());
+        assert!(!planned(&c, 0, 0, 0), "colluder outside the target shard must stay honest");
+        assert!(planned(&c, 8, 0, 0), "target shard's colluder must strike");
+        // the target's colluder is eliminated: pressure moves to shard 0
+        c.event(1, &Event::Eliminated { iter: 0, worker: 8 });
+        c.round_start(0, 1, 2, owners0);
+        c.round_start(1, 1, 1, owners1);
+        assert!(planned(&c, 0, 1, 0), "pressure must move to the next shard");
+    }
+}

@@ -103,6 +103,102 @@ impl AttackKind {
     }
 }
 
+/// Default warm-up rounds for the `sleeper` adversary strategy.
+pub const DEFAULT_SLEEPER_WARMUP: u64 = 10;
+
+/// Default dormancy rounds for the `audit-evader` adversary strategy.
+pub const DEFAULT_EVADER_COOLDOWN: u64 = 8;
+
+/// Coordinated adversary strategy (the `crate::adversary` red-team
+/// subsystem). When set, the run's Byzantine workers stop flipping
+/// stateless per-worker coins and become puppets of one omniscient
+/// `AdversaryController` that watches the protocol's public state;
+/// `--adversary <strategy>` / `adversary.strategy` select it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdversaryKind {
+    /// Tamper a chunk only when colluders own every copy of it, so
+    /// replication comparison cannot expose the lie.
+    AssignmentAware,
+    /// Honest for `warmup` rounds to build trust, then strike.
+    Sleeper { warmup: u64 },
+    /// Go dormant for `cooldown` rounds after any detection naming a
+    /// colluder, then resume.
+    AuditEvader { cooldown: u64 },
+    /// Lie while shaping response stalls to stay under the EWMA
+    /// latency anomaly gates (sim transport).
+    LatencyMimic,
+    /// Concentrate all lying on the shard whose colluders sit closest
+    /// to its 2f_s+1 floor; colluders elsewhere stay honest.
+    ShardEquivocator,
+}
+
+impl AdversaryKind {
+    /// Parse `"name"` or `"name:param"`: `assignment-aware`,
+    /// `sleeper[:WARMUP]`, `audit-evader[:COOLDOWN]`, `latency-mimic`,
+    /// `shard-equivocator` (underscores accepted).
+    pub fn parse(s: &str) -> Result<AdversaryKind> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (s, None),
+        };
+        let num = |default: u64| -> Result<u64> {
+            match param {
+                None => Ok(default),
+                Some(p) => p
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("bad adversary parameter '{p}' in '{s}'")),
+            }
+        };
+        let kind = match name {
+            "assignment-aware" | "assignment_aware" => AdversaryKind::AssignmentAware,
+            "sleeper" => AdversaryKind::Sleeper { warmup: num(DEFAULT_SLEEPER_WARMUP)? },
+            "audit-evader" | "audit_evader" => {
+                AdversaryKind::AuditEvader { cooldown: num(DEFAULT_EVADER_COOLDOWN)? }
+            }
+            "latency-mimic" | "latency_mimic" => AdversaryKind::LatencyMimic,
+            "shard-equivocator" | "shard_equivocator" => AdversaryKind::ShardEquivocator,
+            other => bail!(
+                "unknown adversary strategy '{other}' (expected assignment-aware | \
+                 sleeper[:W] | audit-evader[:C] | latency-mimic | shard-equivocator)"
+            ),
+        };
+        if param.is_some()
+            && !matches!(kind, AdversaryKind::Sleeper { .. } | AdversaryKind::AuditEvader { .. })
+        {
+            bail!("adversary strategy '{name}' takes no parameter (got '{s}')");
+        }
+        Ok(kind)
+    }
+
+    /// Every strategy with its default parameters (experiment sweeps).
+    pub const ALL: [AdversaryKind; 5] = [
+        AdversaryKind::AssignmentAware,
+        AdversaryKind::Sleeper { warmup: DEFAULT_SLEEPER_WARMUP },
+        AdversaryKind::AuditEvader { cooldown: DEFAULT_EVADER_COOLDOWN },
+        AdversaryKind::LatencyMimic,
+        AdversaryKind::ShardEquivocator,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdversaryKind::AssignmentAware => "assignment-aware",
+            AdversaryKind::Sleeper { .. } => "sleeper",
+            AdversaryKind::AuditEvader { .. } => "audit-evader",
+            AdversaryKind::LatencyMimic => "latency-mimic",
+            AdversaryKind::ShardEquivocator => "shard-equivocator",
+        }
+    }
+
+    /// Name with parameters, parseable by [`AdversaryKind::parse`].
+    pub fn describe(&self) -> String {
+        match self {
+            AdversaryKind::Sleeper { warmup } => format!("sleeper:{warmup}"),
+            AdversaryKind::AuditEvader { cooldown } => format!("audit-evader:{cooldown}"),
+            other => other.name().to_string(),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct AttackConfig {
     pub kind: AttackKind,
@@ -361,6 +457,12 @@ pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub policy: PolicyKind,
     pub attack: AttackConfig,
+    /// Coordinated adversary strategy for the Byzantine workers
+    /// (`adversary.strategy` / `--adversary`). `None` keeps the
+    /// stateless per-worker `attack` behaviour; when set, the
+    /// `attack.magnitude` knob still scales the coordinated lie and
+    /// `attack.kind`/`attack.p` are ignored.
+    pub adversary: Option<AdversaryKind>,
     pub train: TrainConfig,
 }
 
@@ -403,6 +505,38 @@ impl ExperimentConfig {
             magnitude: doc.f64_or("attack.magnitude", 1.0) as f32,
         };
 
+        // [adversary] strategy = "sleeper", warmup = 20 — the explicit
+        // warmup/cooldown keys override the name:param shorthand
+        let adversary = match doc.get("adversary.strategy") {
+            None => None,
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("adversary.strategy must be a string"))?;
+                let mut kind = AdversaryKind::parse(s)?;
+                if let AdversaryKind::Sleeper { warmup } = &mut kind {
+                    *warmup = doc.usize_or("adversary.warmup", *warmup as usize) as u64;
+                }
+                if let AdversaryKind::AuditEvader { cooldown } = &mut kind {
+                    *cooldown = doc.usize_or("adversary.cooldown", *cooldown as usize) as u64;
+                }
+                // a parameter key for a strategy that does not take it
+                // is a misconfigured experiment, not a knob to drop —
+                // mirror the CLI's name:param validation
+                if doc.get("adversary.warmup").is_some()
+                    && !matches!(kind, AdversaryKind::Sleeper { .. })
+                {
+                    bail!("adversary.warmup only applies to the sleeper strategy");
+                }
+                if doc.get("adversary.cooldown").is_some()
+                    && !matches!(kind, AdversaryKind::AuditEvader { .. })
+                {
+                    bail!("adversary.cooldown only applies to the audit-evader strategy");
+                }
+                Some(kind)
+            }
+        };
+
         let train = TrainConfig {
             model: doc.str_or("train.model", "linreg"),
             steps: doc.usize_or("train.steps", 200),
@@ -419,6 +553,7 @@ impl ExperimentConfig {
             cluster,
             policy,
             attack,
+            adversary,
             train,
         })
     }
@@ -530,6 +665,63 @@ mod tests {
             PolicyKind::LatencySelective { q_base: 0.25 }
         );
         assert!(PolicyKind::parse("bogus", 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn adversary_kind_parse() {
+        assert_eq!(
+            AdversaryKind::parse("assignment-aware").unwrap(),
+            AdversaryKind::AssignmentAware
+        );
+        assert_eq!(
+            AdversaryKind::parse("sleeper").unwrap(),
+            AdversaryKind::Sleeper { warmup: DEFAULT_SLEEPER_WARMUP }
+        );
+        assert_eq!(
+            AdversaryKind::parse("sleeper:25").unwrap(),
+            AdversaryKind::Sleeper { warmup: 25 }
+        );
+        assert_eq!(
+            AdversaryKind::parse("audit_evader:4").unwrap(),
+            AdversaryKind::AuditEvader { cooldown: 4 }
+        );
+        assert_eq!(AdversaryKind::parse("latency-mimic").unwrap(), AdversaryKind::LatencyMimic);
+        assert_eq!(
+            AdversaryKind::parse("shard-equivocator").unwrap(),
+            AdversaryKind::ShardEquivocator
+        );
+        assert!(AdversaryKind::parse("bogus").is_err());
+        assert!(AdversaryKind::parse("sleeper:x").is_err());
+        assert!(AdversaryKind::parse("latency-mimic:3").is_err(), "no parameter accepted");
+        // describe() round-trips through parse()
+        for kind in AdversaryKind::ALL {
+            assert_eq!(AdversaryKind::parse(&kind.describe()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn adversary_from_doc() {
+        let doc = TomlDoc::parse(
+            "[cluster]\nn = 8\nf = 2\n[adversary]\nstrategy = \"sleeper\"\nwarmup = 30\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.adversary, Some(AdversaryKind::Sleeper { warmup: 30 }));
+        // no [adversary] section: stateless attacks stay in charge
+        let doc = TomlDoc::parse("[cluster]\nn = 8\nf = 2\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).unwrap().adversary, None);
+        // a parameter key for a strategy that does not take it is an
+        // error, not a silently-dropped knob (mirrors the CLI)
+        let doc = TomlDoc::parse(
+            "[cluster]\nn = 8\nf = 2\n[adversary]\nstrategy = \"latency-mimic\"\nwarmup = 20\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        let doc = TomlDoc::parse(
+            "[cluster]\nn = 8\nf = 2\n[adversary]\nstrategy = \"sleeper\"\ncooldown = 4\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 
     #[test]

@@ -28,8 +28,11 @@ impl ByzantineBehavior {
         self.rng.bernoulli(self.cfg.p)
     }
 
-    /// Corrupt a gradient in place (and the reported loss).
-    pub fn corrupt(&mut self, grad: &mut [f32], loss: &mut f32) {
+    /// Corrupt a gradient in place (and the reported loss). `iter` keys
+    /// the colluding attack's shared pseudo-randomness, so colluders
+    /// push a *fresh* common direction every iteration while staying
+    /// mutually consistent within one.
+    pub fn corrupt(&mut self, iter: u64, grad: &mut [f32], loss: &mut f32) {
         let m = self.cfg.magnitude;
         match self.cfg.kind {
             AttackKind::SignFlip => {
@@ -63,10 +66,13 @@ impl ByzantineBehavior {
             }
             AttackKind::Collude => {
                 // colluding workers derive the same vector from shared
-                // pseudo-randomness (keyed only by iteration count via
-                // their common magnitude seed), pushing a consistent
-                // malicious direction
-                let mut colluder = Pcg64::new(0xc011ade0u64, 7);
+                // pseudo-randomness keyed by the iteration count: every
+                // colluder at the same iteration draws the identical
+                // malicious direction, and the direction moves from one
+                // iteration to the next (the pre-fix constant stream
+                // re-seeded `Pcg64::new(0xc011ade0, 7)` on every call,
+                // so colluders pushed the *same* vector forever)
+                let mut colluder = Pcg64::new(0xc011ade0u64, iter);
                 for v in grad.iter_mut() {
                     *v = m * colluder.gauss_f32();
                 }
@@ -80,6 +86,7 @@ impl ByzantineBehavior {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::codes::{check_copies, grad_key, CheckOutcome, SymbolCopy};
 
     fn mk(kind: AttackKind, p: f64) -> ByzantineBehavior {
         ByzantineBehavior::new(
@@ -90,25 +97,63 @@ mod tests {
     }
 
     #[test]
-    fn tamper_probability_respected() {
-        let mut b = mk(AttackKind::SignFlip, 0.3);
-        let hits = (0..20_000).filter(|_| b.tampers_this_iteration()).count();
-        assert!((hits as f64 / 20_000.0 - 0.3).abs() < 0.02);
-        let mut always = mk(AttackKind::SignFlip, 1.0);
-        assert!((0..100).all(|_| always.tampers_this_iteration()));
-        let mut never = mk(AttackKind::SignFlip, 0.0);
-        assert!(!(0..100).any(|_| never.tampers_this_iteration()));
+    fn tamper_probability_respected_for_every_kind() {
+        for kind in AttackKind::ALL {
+            let mut b = mk(kind, 0.3);
+            let hits = (0..20_000).filter(|_| b.tampers_this_iteration()).count();
+            assert!(
+                (hits as f64 / 20_000.0 - 0.3).abs() < 0.02,
+                "{kind:?}: {hits}/20000 tampers at p=0.3"
+            );
+            let mut always = mk(kind, 1.0);
+            assert!((0..100).all(|_| always.tampers_this_iteration()), "{kind:?} at p=1");
+            let mut never = mk(kind, 0.0);
+            assert!(!(0..100).any(|_| never.tampers_this_iteration()), "{kind:?} at p=0");
+        }
     }
 
     #[test]
-    fn every_attack_changes_the_gradient() {
+    fn every_attack_changes_the_gradient_and_its_key() {
         for kind in AttackKind::ALL {
             let mut b = mk(kind, 1.0);
             let orig = vec![0.5f32, -1.5, 2.0, 0.25];
             let mut g = orig.clone();
             let mut loss = 1.0f32;
-            b.corrupt(&mut g, &mut loss);
+            b.corrupt(0, &mut g, &mut loss);
             assert_ne!(g, orig, "attack {kind:?} left gradient unchanged");
+            // the voting key (the exact-comparison fingerprint) must
+            // move too — an attack invisible to grad_key would be
+            // invisible to majority voting
+            assert_ne!(
+                grad_key(&g, loss),
+                grad_key(&orig, 1.0),
+                "attack {kind:?} left the symbol key unchanged"
+            );
+        }
+    }
+
+    #[test]
+    fn every_attack_is_caught_by_replication_comparison() {
+        // r >= 2 honest copies of a chunk agree bit-exactly; any
+        // tampered copy among them must flip the check to FaultDetected
+        let honest = vec![0.5f32, -1.5, 2.0, 0.25];
+        for kind in AttackKind::ALL {
+            let mut b = mk(kind, 1.0);
+            let mut g = honest.clone();
+            let mut loss = 1.0f32;
+            b.corrupt(0, &mut g, &mut loss);
+            let copies = vec![
+                SymbolCopy { worker: 0, grad: honest.clone(), loss: 1.0 },
+                SymbolCopy { worker: 1, grad: honest.clone(), loss: 1.0 },
+                SymbolCopy { worker: 2, grad: g, loss },
+            ];
+            assert_eq!(
+                check_copies(&copies, 0.0),
+                CheckOutcome::FaultDetected,
+                "attack {kind:?} survived exact replication comparison"
+            );
+            // ... and the two honest copies alone are unanimous
+            assert_eq!(check_copies(&copies[..2], 0.0), CheckOutcome::Unanimous);
         }
     }
 
@@ -117,12 +162,12 @@ mod tests {
         let mut b = mk(AttackKind::SignFlip, 1.0);
         let mut g = vec![1.0f32, -2.0];
         let mut loss = 1.0;
-        b.corrupt(&mut g, &mut loss);
+        b.corrupt(0, &mut g, &mut loss);
         assert_eq!(g, vec![-1.0, 2.0]);
     }
 
     #[test]
-    fn colluders_agree() {
+    fn colluders_agree_within_an_iteration() {
         let mut b1 = ByzantineBehavior::new(
             AttackConfig { kind: AttackKind::Collude, p: 1.0, magnitude: 1.0 },
             1,
@@ -136,9 +181,30 @@ mod tests {
         let mut g1 = vec![1.0f32; 8];
         let mut g2 = vec![-3.0f32; 8];
         let (mut l1, mut l2) = (0.0f32, 0.0f32);
-        b1.corrupt(&mut g1, &mut l1);
-        b2.corrupt(&mut g2, &mut l2);
+        b1.corrupt(3, &mut g1, &mut l1);
+        b2.corrupt(3, &mut g2, &mut l2);
         assert_eq!(g1, g2, "colluding attack must be identical across workers");
+    }
+
+    #[test]
+    fn collude_direction_moves_across_iterations() {
+        // the pre-fix code re-seeded the shared RNG with constants on
+        // every call, so colluders pushed one frozen vector forever;
+        // keyed by iteration, consecutive iterations must differ while
+        // repeated calls at the same iteration stay identical
+        let mut b = mk(AttackKind::Collude, 1.0);
+        let base = vec![1.0f32; 8];
+        let mut at_iter = |iter: u64| {
+            let mut g = base.clone();
+            let mut loss = 1.0;
+            b.corrupt(iter, &mut g, &mut loss);
+            g
+        };
+        let g0 = at_iter(0);
+        let g1 = at_iter(1);
+        let g0_again = at_iter(0);
+        assert_ne!(g0, g1, "colluders must push a fresh direction each iteration");
+        assert_eq!(g0, g0_again, "the shared direction is a pure function of the iteration");
     }
 
     #[test]
@@ -147,7 +213,7 @@ mod tests {
         let orig = vec![1.0f32; 16];
         let mut g = orig.clone();
         let mut loss = 1.0;
-        b.corrupt(&mut g, &mut loss);
+        b.corrupt(0, &mut g, &mut loss);
         let max_shift = g
             .iter()
             .zip(orig.iter())

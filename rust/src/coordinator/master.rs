@@ -22,8 +22,11 @@ use super::metrics::{IterationRecord, TrainMetrics};
 use super::policy::FaultCheckPolicy;
 use super::protocol::{ProtocolConfig, ProtocolCore};
 use super::shard::{ParameterServer, ShardPlan, ShardedTransport};
-use super::transport::{LatencyModel, SimTransport, ThreadedTransport, Transport};
+use super::transport::{
+    AdversaryWiring, LatencyModel, SimTransport, ThreadedTransport, Transport,
+};
 use super::{WorkerId, MASTER_SENTINEL};
+use crate::adversary::{AdversaryController, CoreTap, ShardInfo, Topology};
 use crate::config::{ExperimentConfig, TransportKind};
 use crate::data::Dataset;
 use crate::grad::GradientComputer;
@@ -131,18 +134,34 @@ impl Master {
         let seed = cfg.cluster.seed;
         let attack = cfg.attack.clone();
         let byz_ids = cfg.cluster.byzantine_ids.clone();
+        // a coordinated adversary replaces the stateless per-worker
+        // behaviour path for the configured Byzantine ids (the legacy
+        // kinds keep their exact construction when no --adversary is
+        // set, preserving bit-identity)
+        let controller = cfg.adversary.map(|kind| {
+            Arc::new(AdversaryController::new(
+                kind,
+                Topology::single(n, cfg.cluster.f),
+                &cfg.cluster.byzantine_ids,
+                cfg.attack.magnitude,
+            ))
+        });
+        let coordinated = controller.is_some();
         let byzantine = |i: WorkerId| {
-            byz_ids
-                .contains(&i)
+            (!coordinated && byz_ids.contains(&i))
                 .then(|| ByzantineBehavior::new(attack.clone(), seed, i))
         };
+        let wiring = controller
+            .as_ref()
+            .map(|c| AdversaryWiring { controller: c.clone(), lo: 0 });
         let transport: Box<dyn Transport> = match cfg.cluster.transport {
-            TransportKind::Threaded => Box::new(ThreadedTransport::spawn_with_compressor(
+            TransportKind::Threaded => Box::new(ThreadedTransport::spawn_full(
                 n,
                 engine.clone(),
                 byzantine,
                 opts.compressor.clone(),
                 cfg.cluster.latency_us,
+                wiring,
             )),
             TransportKind::Sim => {
                 let mut sim_cfg = opts.sim.clone();
@@ -151,16 +170,25 @@ impl Master {
                 if matches!(sim_cfg.latency, LatencyModel::Zero) && cfg.cluster.latency_us > 0 {
                     sim_cfg.latency = LatencyModel::Fixed { us: cfg.cluster.latency_us };
                 }
-                Box::new(SimTransport::new(
+                Box::new(SimTransport::new_full(
                     n,
                     engine.clone(),
                     byzantine,
                     opts.compressor.clone(),
                     sim_cfg,
+                    wiring,
                 ))
             }
         };
-        Self::with_transport(cfg, opts, engine, dataset, init_theta, chunk_size, transport)
+        let mut master =
+            Self::with_transport(cfg, opts, engine, dataset, init_theta, chunk_size, transport)?;
+        if let Some(c) = controller {
+            match &mut master.backend {
+                Backend::Single(core) => core.set_tap(Arc::new(CoreTap::new(c, 0, 0))),
+                Backend::Sharded(_) => unreachable!("single-master path"),
+            }
+        }
+        Ok(master)
     }
 
     /// Build the sharded backend: a [`ShardPlan`] partitions the
@@ -185,6 +213,25 @@ impl Master {
             cfg.cluster.f,
             &cfg.cluster.byzantine_ids,
         )?;
+        // one omniscient controller spans every shard: its topology is
+        // the plan itself, so the shard-equivocator can read each
+        // shard's 2f_s+1 floor
+        let controller = cfg.adversary.map(|kind| {
+            let topology = Topology {
+                shards: plan
+                    .specs
+                    .iter()
+                    .map(|s| ShardInfo { shard: s.shard, lo: s.lo, n: s.width(), f: s.f_s })
+                    .collect(),
+                n: cfg.cluster.n,
+            };
+            Arc::new(AdversaryController::new(
+                kind,
+                topology,
+                &cfg.cluster.byzantine_ids,
+                cfg.attack.magnitude,
+            ))
+        });
         let build = super::shard::transport::ShardBuildConfig {
             transport: cfg.cluster.transport,
             gather: cfg.cluster.gather,
@@ -198,6 +245,7 @@ impl Master {
             no_eliminate: opts.no_eliminate,
             latency_us: cfg.cluster.latency_us,
             sim: opts.sim.clone(),
+            adversary: controller,
         };
         let transport = ShardedTransport::build(&plan, &build, &engine)?;
         let ps = ParameterServer::new(
@@ -225,7 +273,10 @@ impl Master {
     }
 
     /// Build a master over an explicit transport (tests and benches
-    /// inject custom scenarios here; single-core only).
+    /// inject custom scenarios here; single-core only). A coordinated
+    /// `cfg.adversary` is wired by [`Master::new`] — which builds the
+    /// transport, the controller, and the protocol tap together — not
+    /// here: an injected transport carries its own worker behaviours.
     pub fn with_transport(
         cfg: ExperimentConfig,
         opts: MasterOptions,

@@ -50,6 +50,16 @@
 //!    deterministic, so the transports are bit-identical for the same
 //!    seed at zero latency). Shards may mix transport kinds.
 //!
+//! Outside the trust boundary sits the **red team**
+//! ([`crate::adversary`]): when `--adversary <strategy>` is set, the
+//! run's Byzantine workers stop flipping stateless per-worker coins
+//! ([`byzantine`]) and become puppets of one omniscient controller
+//! that observes the protocol's public state through a read-only
+//! [`protocol::ProtocolTap`] (round assignments + the event stream)
+//! and coordinates every lie. The tap sees no oracle data and cannot
+//! mutate anything, so the exactness argument below is unchanged —
+//! and adversarially validated by `tests/test_adversary.rs`.
+//!
 //! ## Per-iteration protocol (unifying §4.1 and §4.2 of the paper)
 //!
 //! 1. [`assignment`] — the master samples m data points, splits them

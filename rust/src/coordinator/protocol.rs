@@ -98,6 +98,33 @@ use crate::Result;
 /// bit-identity contract silently breaks.
 pub const SAMPLE_STREAM: u64 = 0xaa57e2;
 
+/// Consecutive-abandonment streak after which a worker counts as a
+/// *chronic* straggler and the quorum gather stops budgeting a
+/// response slot for it ([`GatherPolicy::Quorum`] only): the effective
+/// quorum shrinks by the number of chronic workers in the wave, never
+/// below the 2f_t+1 identification floor. One fresh delivery resets
+/// the streak, so a recovered worker is waited for again.
+pub const ABANDON_STREAK: u32 = 3;
+
+/// Read-only tap on the protocol core's public state, mirroring what
+/// an observer at the master could see: each round's proactive
+/// assignment the moment it is fixed (before the wave is submitted)
+/// and every event as it is logged. The adversary subsystem
+/// ([`crate::adversary`]) uses this to drive coordinated,
+/// protocol-aware Byzantine strategies; the tap can neither mutate
+/// protocol state nor see oracle data (`tampered` flags never pass
+/// through events).
+///
+/// Shard cores install a remapping wrapper so tap consumers always see
+/// **global** worker ids; chunk ids stay round-local.
+pub trait ProtocolTap: Send + Sync {
+    /// A round's proactive assignment is fixed: `owners[c]` lists chunk
+    /// `c`'s owners. Called before the wave is submitted to workers.
+    fn on_round_start(&self, iter: u64, f_t: usize, owners: &[Vec<WorkerId>]);
+    /// Mirror of every [`Event`] pushed by the core, in push order.
+    fn on_event(&self, event: &Event);
+}
+
 /// The protocol's wire phases (the `phase` field of every request).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
@@ -280,6 +307,12 @@ pub struct ProtocolCore {
     round: RoundState,
     pending: Option<PendingRound>,
     loss_scratch: Vec<f64>,
+    /// Consecutive proactive-wave abandonments per worker (reset by any
+    /// fresh delivery); >= [`ABANDON_STREAK`] marks a chronic straggler
+    /// the quorum gather stops waiting for.
+    abandon_streak: Vec<u32>,
+    /// Read-only observer of assignments + events (None = silent).
+    tap: Option<Arc<dyn ProtocolTap>>,
 }
 
 impl ProtocolCore {
@@ -301,7 +334,24 @@ impl ProtocolCore {
             round: RoundState::default(),
             pending: None,
             loss_scratch: Vec::new(),
+            abandon_streak: vec![0; n],
+            tap: None,
         }
+    }
+
+    /// Install a read-only [`ProtocolTap`]. The tap sees each round's
+    /// assignment before the wave is submitted and every event as it
+    /// is logged; it cannot mutate protocol state.
+    pub fn set_tap(&mut self, tap: Arc<dyn ProtocolTap>) {
+        self.tap = Some(tap);
+    }
+
+    /// Mirror an event to the tap (if any), then log it.
+    fn emit(tap: &Option<Arc<dyn ProtocolTap>>, events: &mut EventLog, e: Event) {
+        if let Some(t) = tap {
+            t.on_event(&e);
+        }
+        events.push(e);
     }
 
     /// Current Byzantine budget f_t = f - κ_t.
@@ -407,6 +457,10 @@ impl ProtocolCore {
             })
             .collect();
         let outstanding: Vec<WorkerId> = bundles.iter().map(|b| b.worker).collect();
+        // the tap sees the fixed assignment before any worker does
+        if let Some(tap) = &self.tap {
+            tap.on_round_start(t, f_t, &round.assignment.owners);
+        }
         let start_ns = self.transport.now_ns();
         self.transport.submit(t, Phase::Proactive.wire(), theta, bundles)?;
         self.pending = Some(PendingRound { round, outstanding, start_ns, f_t, m });
@@ -478,14 +532,19 @@ impl ProtocolCore {
         // per-worker suspicion so this round's audit decision — and the
         // suspicion-ranked re-replication below — see current timing
         for (w, s) in self.policy.refresh_suspicion(&self.active) {
-            events.push(Event::SuspicionUpdated { iter: t, worker: w, suspicion: s });
+            let e = Event::SuspicionUpdated { iter: t, worker: w, suspicion: s };
+            Self::emit(&self.tap, events, e);
         }
 
         // ---- audit decision --------------------------------------------
         let observed_loss = round.observed_loss(&mut self.loss_scratch);
         let decision = self.policy.decide(t, observed_loss, f_t, &self.active);
         let audited = decision != AuditDecision::Skip;
-        events.push(Event::AuditDecision { iter: t, q: self.policy.last_q, audited });
+        Self::emit(
+            &self.tap,
+            events,
+            Event::AuditDecision { iter: t, q: self.policy.last_q, audited },
+        );
 
         let audit_chunks: Vec<ChunkId> = match &decision {
             AuditDecision::Skip => vec![],
@@ -556,11 +615,11 @@ impl ProtocolCore {
                             .map(|s| s.worker)
                             .filter(|&w| w != MASTER_SENTINEL)
                             .collect();
-                        events.push(Event::FaultDetected {
-                            iter: t,
-                            chunk: c,
-                            owners: owners.clone(),
-                        });
+                        Self::emit(
+                            &self.tap,
+                            events,
+                            Event::FaultDetected { iter: t, chunk: c, owners: owners.clone() },
+                        );
                         self.policy.report_suspects(&owners);
                         flagged.push(c);
                     }
@@ -690,7 +749,18 @@ impl ProtocolCore {
                 // unreachable (which would silently degrade to All and
                 // re-expose straggler gating)
                 let allowed_missing = self.transport.n().saturating_sub(k);
-                outstanding.len().saturating_sub(allowed_missing).max(floor)
+                let base = outstanding.len().saturating_sub(allowed_missing);
+                // chronic stragglers (>= ABANDON_STREAK consecutive
+                // abandonments) are not worth budgeting a response slot
+                // for: auto-shrink the effective quorum by their count.
+                // The 2f_t+1 floor below is untouched, so the reactive
+                // majority vote stays assemblable no matter how many
+                // workers turn chronic
+                let chronic = outstanding
+                    .iter()
+                    .filter(|&&w| self.abandon_streak[w] >= ABANDON_STREAK)
+                    .count();
+                base.saturating_sub(chronic).max(floor)
             }
             GatherPolicy::All | GatherPolicy::Deadline { .. } => usize::MAX,
         };
@@ -753,6 +823,9 @@ impl ProtocolCore {
                             self.policy
                                 .observe_latency(response.worker, at_ns.saturating_sub(first));
                         }
+                        // a delivered wave breaks the worker's
+                        // consecutive-abandonment streak
+                        self.abandon_streak[response.worker] = 0;
                         waiting[response.worker] = false;
                         remaining -= 1;
                         responses.push(response);
@@ -776,9 +849,10 @@ impl ProtocolCore {
                 if profile_latency {
                     self.policy.observe_abandoned(w, cutoff_excess_ns);
                 }
+                self.abandon_streak[w] = self.abandon_streak[w].saturating_add(1);
                 round.assignment.retire(w);
                 stragglers_now.push(w);
-                events.push(Event::StragglerAbandoned { iter: t, worker: w });
+                Self::emit(&self.tap, events, Event::StragglerAbandoned { iter: t, worker: w });
             }
         }
         responses.sort_by_key(|r| r.worker);
@@ -832,11 +906,11 @@ impl ProtocolCore {
                     round.assignment.extend(c, shortfall, &mut self.rng_assign)
                 };
                 if phase == Phase::Reactive {
-                    events.push(Event::ReactiveRedundancy {
-                        iter: t,
-                        chunk: c,
-                        added: added.clone(),
-                    });
+                    Self::emit(
+                        &self.tap,
+                        events,
+                        Event::ReactiveRedundancy { iter: t, chunk: c, added: added.clone() },
+                    );
                 }
                 for w in added {
                     match extra.iter_mut().find(|(ww, _)| *ww == w) {
@@ -904,7 +978,7 @@ impl ProtocolCore {
         }
         round.assignment.retire(w);
         self.policy.report_crashed(w);
-        events.push(Event::WorkerCrashed { iter: t, worker: w });
+        Self::emit(&self.tap, events, Event::WorkerCrashed { iter: t, worker: w });
     }
 
     /// Common tail of both identification paths: store the corrected
@@ -924,7 +998,7 @@ impl ProtocolCore {
         if liars.is_empty() {
             return;
         }
-        events.push(Event::Identified { iter: t, workers: liars.clone() });
+        Self::emit(&self.tap, events, Event::Identified { iter: t, workers: liars.clone() });
         if self.cfg.no_eliminate {
             return;
         }
@@ -933,7 +1007,7 @@ impl ProtocolCore {
                 self.active.remove(pos);
                 self.eliminated.push(w);
                 self.policy.report_identified(w);
-                events.push(Event::Eliminated { iter: t, worker: w });
+                Self::emit(&self.tap, events, Event::Eliminated { iter: t, worker: w });
                 identified_now.push(w);
             }
         }

@@ -26,9 +26,12 @@ use super::super::byzantine::ByzantineBehavior;
 use super::super::events::EventLog;
 use super::super::policy::FaultCheckPolicy;
 use super::super::protocol::{ProtocolConfig, ProtocolCore};
-use super::super::transport::{LatencyModel, SimConfig, SimTransport, ThreadedTransport, Transport};
+use super::super::transport::{
+    AdversaryWiring, LatencyModel, SimConfig, SimTransport, ThreadedTransport, Transport,
+};
 use super::super::{ChunkId, WorkerId};
 use super::{ShardCore, ShardPlan, ShardRound, ShardSpec};
+use crate::adversary::{AdversaryController, CoreTap};
 use crate::config::{AttackConfig, GatherPolicy, PolicyKind, TransportKind};
 use crate::data::Dataset;
 use crate::grad::GradientComputer;
@@ -55,6 +58,12 @@ pub struct ShardBuildConfig {
     /// Sim scenario knobs; straggler/crash worker ids are *global* and
     /// remapped into each shard here.
     pub sim: SimConfig,
+    /// Coordinated adversary spanning the whole fleet: each shard's
+    /// inner transport wires its colluders to this one controller, and
+    /// each shard core gets a [`CoreTap`] remapping its local ids to
+    /// global ones. Replaces the stateless `attack` path for the
+    /// configured Byzantine ids when set.
+    pub adversary: Option<Arc<AdversaryController>>,
 }
 
 /// Scale a cluster-level gather policy to one shard: `Quorum { k }`
@@ -88,20 +97,29 @@ fn build_inner(
     let byz = spec.byzantine.clone();
     let attack = cfg.attack.clone();
     let seed = cfg.seed;
+    let coordinated = cfg.adversary.is_some();
     // behaviour is seeded with the *global* id, so a liar's tamper
-    // stream is identical whichever shard layout contains it
+    // stream is identical whichever shard layout contains it (the
+    // coordinated adversary supersedes the stateless path entirely)
     let byzantine = move |local: WorkerId| {
         let global = lo + local;
-        byz.contains(&global)
+        (!coordinated && byz.contains(&global))
             .then(|| ByzantineBehavior::new(attack.clone(), seed, global))
     };
+    // the wiring carries the shard's global offset so colluders get
+    // handles keyed by their global ids
+    let wiring = cfg
+        .adversary
+        .as_ref()
+        .map(|c| AdversaryWiring { controller: c.clone(), lo });
     Ok(match cfg.transport {
-        TransportKind::Threaded => Box::new(ThreadedTransport::spawn_with_compressor(
+        TransportKind::Threaded => Box::new(ThreadedTransport::spawn_full(
             n_s,
             engine.clone(),
             byzantine,
             None,
             cfg.latency_us,
+            wiring,
         )),
         TransportKind::Sim => {
             let mut sim = cfg.sim.clone();
@@ -123,7 +141,7 @@ fn build_inner(
                 .map(|(w, t)| (spec.local(*w), *t))
                 .collect();
             sim.crash_at = crash_at;
-            Box::new(SimTransport::new(n_s, engine.clone(), byzantine, None, sim))
+            Box::new(SimTransport::new_full(n_s, engine.clone(), byzantine, None, sim, wiring))
         }
     })
 }
@@ -148,7 +166,7 @@ impl ShardedTransport {
                 spec.width(),
                 shard_seed(cfg.seed, spec.shard),
             );
-            let core = ProtocolCore::new(
+            let mut core = ProtocolCore::new(
                 inner,
                 policy,
                 ProtocolConfig {
@@ -162,6 +180,10 @@ impl ShardedTransport {
                     gather: shard_gather(cfg.gather, spec.width(), cfg.cluster_n),
                 },
             );
+            if let Some(c) = &cfg.adversary {
+                // the tap remaps this shard's local ids to global ones
+                core.set_tap(Arc::new(CoreTap::new(c.clone(), spec.shard, spec.lo)));
+            }
             cores.push(ShardCore::new(spec.clone(), core));
         }
         Ok(ShardedTransport { cores })

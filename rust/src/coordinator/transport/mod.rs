@@ -50,8 +50,9 @@ pub mod threaded;
 
 use std::sync::Arc;
 
-use super::worker::Response;
+use super::worker::{AdversaryHandle, Response};
 use super::WorkerId;
+use crate::adversary::AdversaryController;
 use crate::data::Batch;
 use crate::Result;
 
@@ -64,6 +65,28 @@ use super::ChunkId;
 pub struct TaskBundle {
     pub worker: WorkerId,
     pub tasks: Vec<(ChunkId, Batch)>,
+}
+
+/// How a transport plugs its workers into a coordinated
+/// [`AdversaryController`]: `lo` is the global id of local worker 0
+/// (shard inner transports pass their range offset; single-master runs
+/// pass 0). Construction hands each colluding worker an
+/// [`AdversaryHandle`] carrying its global id, and the simulator asks
+/// the controller for per-response fake stalls.
+#[derive(Clone)]
+pub struct AdversaryWiring {
+    pub controller: Arc<AdversaryController>,
+    pub lo: WorkerId,
+}
+
+impl AdversaryWiring {
+    /// The handle for local worker `id` (None for honest workers).
+    pub fn handle(&self, id: WorkerId) -> Option<AdversaryHandle> {
+        let global = self.lo + id;
+        self.controller
+            .is_colluder(global)
+            .then(|| AdversaryHandle { controller: self.controller.clone(), worker: global })
+    }
 }
 
 /// One completed exchange surfaced by [`Transport::poll`].

@@ -34,7 +34,7 @@ use super::super::byzantine::ByzantineBehavior;
 use super::super::compress::Compressor;
 use super::super::worker::{Response, WorkerState};
 use super::super::WorkerId;
-use super::{Delivery, TaskBundle, Transport};
+use super::{AdversaryWiring, Delivery, TaskBundle, Transport};
 use crate::grad::GradientComputer;
 use crate::util::rng::Pcg64;
 use crate::Result;
@@ -186,6 +186,10 @@ pub struct SimTransport {
     /// min-ordered by (arrival instant, worker id) so each `poll` is
     /// O(log n) per delivery instead of a linear scan.
     pending: BinaryHeap<Reverse<PendingEvent>>,
+    /// Coordinated-adversary wiring: colluders may fake extra
+    /// per-response stalls (latency mimicry) on top of the drawn
+    /// latency.
+    adversary: Option<AdversaryWiring>,
 }
 
 impl SimTransport {
@@ -198,17 +202,35 @@ impl SimTransport {
         compressor: Option<Arc<dyn Compressor>>,
         cfg: SimConfig,
     ) -> SimTransport {
+        Self::new_full(n, engine, &mut byzantine, compressor, cfg, None)
+    }
+
+    /// Build with every knob, including the coordinated-adversary
+    /// wiring (mirrors [`super::ThreadedTransport::spawn_full`]).
+    pub fn new_full(
+        n: usize,
+        engine: Arc<dyn GradientComputer>,
+        mut byzantine: impl FnMut(WorkerId) -> Option<ByzantineBehavior>,
+        compressor: Option<Arc<dyn Compressor>>,
+        cfg: SimConfig,
+        adversary: Option<AdversaryWiring>,
+    ) -> SimTransport {
         let workers = (0..n)
-            .map(|id| SimWorker {
-                state: WorkerState::new(id, engine.clone(), byzantine(id), compressor.clone()),
-                latency_mult: cfg
-                    .stragglers
-                    .iter()
-                    .find(|(w, _)| *w == id)
-                    .map(|(_, m)| *m)
-                    .unwrap_or(1.0),
-                crash_at: cfg.crash_at.iter().find(|(w, _)| *w == id).map(|(_, t)| *t),
-                crashed: false,
+            .map(|id| {
+                let state =
+                    WorkerState::new(id, engine.clone(), byzantine(id), compressor.clone())
+                        .with_adversary(adversary.as_ref().and_then(|aw| aw.handle(id)));
+                SimWorker {
+                    state,
+                    latency_mult: cfg
+                        .stragglers
+                        .iter()
+                        .find(|(w, _)| *w == id)
+                        .map(|(_, m)| *m)
+                        .unwrap_or(1.0),
+                    crash_at: cfg.crash_at.iter().find(|(w, _)| *w == id).map(|(_, t)| *t),
+                    crashed: false,
+                }
             })
             .collect();
         SimTransport {
@@ -218,6 +240,7 @@ impl SimTransport {
             rng: Pcg64::new(cfg.seed, 0x51b_7a2),
             now_ns: 0,
             pending: BinaryHeap::new(),
+            adversary,
         }
     }
 
@@ -264,7 +287,17 @@ impl Transport for SimTransport {
                 1.0
             };
             let latency = (self.latency.draw_ns(&mut self.rng) as f64 * mult) as u64;
-            let at_ns = self.now_ns + latency;
+            // coordinated adversaries may fake an extra stall on top of
+            // the drawn latency (latency mimicry — see crate::adversary);
+            // the lock-free colluder check keeps the honest-worker path
+            // off the controller mutex entirely
+            let stall = match &self.adversary {
+                Some(aw) if aw.controller.is_colluder(aw.lo + worker) => {
+                    aw.controller.response_delay_ns(aw.lo + worker, iter)
+                }
+                _ => 0,
+            };
+            let at_ns = self.now_ns + latency + stall;
             self.pending.push(Reverse(PendingEvent {
                 at_ns,
                 worker,

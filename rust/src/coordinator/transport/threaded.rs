@@ -25,7 +25,7 @@ use super::super::byzantine::ByzantineBehavior;
 use super::super::compress::Compressor;
 use super::super::worker::{Request, Response, WorkerState};
 use super::super::{ChunkId, WorkerId};
-use super::{Delivery, TaskBundle, Transport};
+use super::{AdversaryWiring, Delivery, TaskBundle, Transport};
 use crate::data::Batch;
 use crate::grad::GradientComputer;
 use crate::Result;
@@ -71,6 +71,22 @@ impl ThreadedTransport {
         compressor: Option<Arc<dyn Compressor>>,
         latency_us: u64,
     ) -> ThreadedTransport {
+        Self::spawn_full(n, engine, byzantine_fn(&mut byzantine), compressor, latency_us, None)
+    }
+
+    /// Spawn with every knob, including the coordinated-adversary
+    /// wiring (colluding workers get a line to the shared
+    /// [`crate::adversary::AdversaryController`]; the stateless
+    /// `byzantine` path and the coordinated path are mutually
+    /// exclusive per worker — the master passes one or the other).
+    pub fn spawn_full(
+        n: usize,
+        engine: Arc<dyn GradientComputer>,
+        mut byzantine: impl FnMut(WorkerId) -> Option<ByzantineBehavior>,
+        compressor: Option<Arc<dyn Compressor>>,
+        latency_us: u64,
+        adversary: Option<AdversaryWiring>,
+    ) -> ThreadedTransport {
         let (resp_tx, resp_rx) = channel::<Response>();
         let mut senders = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
@@ -78,7 +94,8 @@ impl ThreadedTransport {
             let (req_tx, req_rx) = channel::<Request>();
             senders.push(req_tx);
             let resp_tx = resp_tx.clone();
-            let mut state = WorkerState::new(id, engine.clone(), byzantine(id), compressor.clone());
+            let mut state = WorkerState::new(id, engine.clone(), byzantine(id), compressor.clone())
+                .with_adversary(adversary.as_ref().and_then(|aw| aw.handle(id)));
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("r3bft-worker-{id}"))

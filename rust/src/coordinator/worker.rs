@@ -20,6 +20,7 @@ use std::sync::Arc;
 use super::byzantine::ByzantineBehavior;
 use super::compress::Compressor;
 use super::{ChunkId, WorkerId};
+use crate::adversary::AdversaryController;
 use crate::data::Batch;
 use crate::grad::GradientComputer;
 use crate::Result;
@@ -56,11 +57,25 @@ pub struct Response {
     pub error: Option<String>,
 }
 
+/// A Byzantine worker's line to the coordinated
+/// [`AdversaryController`]: the controller decides — from the
+/// protocol's public state — whether this worker tampers a given
+/// chunk this iteration. `worker` is the *global* id (shard inner
+/// transports use local ids, so the handle carries the remap).
+#[derive(Clone)]
+pub struct AdversaryHandle {
+    pub controller: Arc<AdversaryController>,
+    pub worker: WorkerId,
+}
+
 /// Per-worker compute state, shared by every transport.
 pub struct WorkerState {
     pub(crate) id: WorkerId,
     pub(crate) engine: Arc<dyn GradientComputer>,
     pub(crate) byzantine: Option<ByzantineBehavior>,
+    /// Coordinated adversary line (replaces the stateless `byzantine`
+    /// path when an `--adversary` strategy is configured).
+    adversary: Option<AdversaryHandle>,
     /// §2.1/§5: symbols may be compressed gradients; honest compressors
     /// are deterministic so replica comparison still works bit-exactly.
     pub(crate) compressor: Option<Arc<dyn Compressor>>,
@@ -76,7 +91,14 @@ impl WorkerState {
         byzantine: Option<ByzantineBehavior>,
         compressor: Option<Arc<dyn Compressor>>,
     ) -> WorkerState {
-        WorkerState { id, engine, byzantine, compressor, tamper_iter: None }
+        WorkerState { id, engine, byzantine, adversary: None, compressor, tamper_iter: None }
+    }
+
+    /// Attach a coordinated-adversary line (builder-style; `None` is a
+    /// no-op so honest workers can share the construction path).
+    pub fn with_adversary(mut self, adversary: Option<AdversaryHandle>) -> WorkerState {
+        self.adversary = adversary;
+        self
     }
 
     fn tampering(&mut self, iter: u64) -> bool {
@@ -112,10 +134,19 @@ impl WorkerState {
             let mut grad = g.grad;
             let mut loss = g.loss;
             let mut tampered = false;
-            if tamper {
+            if let Some(h) = &self.adversary {
+                // coordinated path: the controller's round plan decides
+                // per (worker, chunk); the lie itself is a pure function
+                // of (iteration, chunk), so every colluder pushing this
+                // chunk pushes the identical wrong symbol
+                let (g0, l0) = (grad.clone(), loss);
+                if h.controller.corrupt(h.worker, iter, chunk, &mut grad, &mut loss) {
+                    tampered = grad != g0 || loss != l0;
+                }
+            } else if tamper {
                 if let Some(b) = self.byzantine.as_mut() {
                     let (g0, l0) = (grad.clone(), loss);
-                    b.corrupt(&mut grad, &mut loss);
+                    b.corrupt(iter, &mut grad, &mut loss);
                     // oracle flag = *effective* tampering: e.g. a
                     // sign-flip of a bit-zero gradient is still the
                     // zero gradient — numerically a no-op (paper

@@ -6,11 +6,12 @@ use std::sync::Arc;
 
 use crate::baselines::GradientFilter;
 use crate::config::{
-    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig,
+    AdversaryKind, AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, GatherPolicy,
+    PolicyKind, TrainConfig, TransportKind,
 };
 use crate::coordinator::compress::Compressor;
 use crate::coordinator::master::{Master, MasterOptions};
-use crate::coordinator::TrainOutcome;
+use crate::coordinator::{SimConfig, TrainOutcome};
 use crate::data::LinRegDataset;
 use crate::grad::{GradientComputer, ModelSpec, NativeEngine};
 use crate::Result;
@@ -40,6 +41,17 @@ pub struct RunSpec {
     pub compressor: Option<Arc<dyn Compressor>>,
     /// §5 hybrid: filter for unaudited aggregation.
     pub unaudited_filter: Option<Arc<dyn GradientFilter>>,
+    /// Execution model (threaded by default, matching the pre-transport
+    /// experiment harness).
+    pub transport: TransportKind,
+    /// Shard count K (1 = single master).
+    pub shards: usize,
+    /// Proactive gather policy.
+    pub gather: GatherPolicy,
+    /// Coordinated adversary strategy (None = the stateless `attack`).
+    pub adversary: Option<AdversaryKind>,
+    /// Sim scenario knobs (`transport = Sim` only).
+    pub sim: SimConfig,
 }
 
 impl RunSpec {
@@ -60,6 +72,11 @@ impl RunSpec {
             no_eliminate: false,
             compressor: None,
             unaudited_filter: None,
+            transport: TransportKind::Threaded,
+            shards: 1,
+            gather: GatherPolicy::All,
+            adversary: None,
+            sim: SimConfig::default(),
         }
     }
 
@@ -93,16 +110,45 @@ impl RunSpec {
         self
     }
 
+    pub fn transport(mut self, kind: TransportKind) -> Self {
+        self.transport = kind;
+        self
+    }
+
+    pub fn shards(mut self, k: usize) -> Self {
+        self.shards = k;
+        self
+    }
+
+    pub fn gather(mut self, gather: GatherPolicy) -> Self {
+        self.gather = gather;
+        self
+    }
+
+    pub fn adversary(mut self, kind: AdversaryKind) -> Self {
+        self.adversary = Some(kind);
+        self
+    }
+
+    pub fn sim(mut self, sim: SimConfig) -> Self {
+        self.sim = sim;
+        self
+    }
+
     /// Run on the native linreg workload; returns the outcome plus the
     /// planted optimum.
     pub fn run_linreg(&self) -> Result<(TrainOutcome, Vec<f32>)> {
         let mut cluster = ClusterConfig::new(self.n, self.f, self.seed);
         cluster.byzantine_ids = self.byzantine.clone();
+        cluster.transport = self.transport;
+        cluster.shards = self.shards;
+        cluster.gather = self.gather;
         let cfg = ExperimentConfig {
             name: "exp".into(),
             cluster,
             policy: self.policy.clone(),
             attack: self.attack.clone(),
+            adversary: self.adversary,
             train: TrainConfig { steps: self.steps, lr: self.lr, ..Default::default() },
         };
         let ds = Arc::new(LinRegDataset::generate(4096, self.d, self.noise_std, self.seed));
@@ -116,6 +162,7 @@ impl RunSpec {
             no_eliminate: self.no_eliminate,
             compressor: self.compressor.clone(),
             unaudited_filter: self.unaudited_filter.clone(),
+            sim: self.sim.clone(),
             ..Default::default()
         };
         let master = Master::new(cfg, opts, engine, ds, theta0, self.chunk)?;

@@ -1,0 +1,270 @@
+//! E13 — red-team robustness matrix: coordinated adversary strategies
+//! vs audit policies.
+//!
+//! Every attacker the paper's analysis was measured against so far was
+//! a stateless per-worker coin. This experiment sweeps the
+//! [`crate::adversary`] strategies (plus the stateless sign-flip
+//! baseline) against the audit policies (bernoulli / deterministic /
+//! selective / latency-selective), single-master and sharded, in
+//! deterministic virtual time, and reports per cell:
+//!
+//! * **rounds to identification** — the last colluder's
+//!   identification time (the paper's almost-sure-identification
+//!   claim, measured; "-" when nothing was ever identified, which for
+//!   a coordinated adversary can mean it never risked a tamper);
+//! * **audit cost** — audited rounds and total audited chunks at the
+//!   shared q budget;
+//! * **damage** — tampered updates that entered θ before elimination
+//!   (oracle count), and the final distance to the planted optimum
+//!   (post-elimination convergence).
+//!
+//! The sweep is written to `BENCH_adversary.json`. A second pass runs
+//! the sleeper-vs-stateless comparison over several seeds and checks
+//! the headline claim: **a warm-up adversary is strictly costlier to
+//! identify than a stateless one at equal q budget** (nothing can be
+//! identified before the strike begins), while the exactness property
+//! — zero honest eliminations, no tampered updates after the last
+//! elimination — holds in every cell (`tests/test_adversary.rs`
+//! asserts it per strategy; here it is re-checked across the matrix).
+
+use std::collections::BTreeMap;
+
+use crate::config::{AdversaryKind, AttackKind, GatherPolicy, PolicyKind, TransportKind};
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::common::RunSpec;
+
+/// One matrix cell's measurements.
+struct Cell {
+    attacker: String,
+    policy: String,
+    shards: usize,
+    /// Iteration of the *last* colluder identification (None when no
+    /// colluder was ever identified).
+    identified_at: Option<u64>,
+    audit_rounds: usize,
+    audited_chunks: usize,
+    faulty_updates: usize,
+    final_dist: f64,
+    honest_eliminated: usize,
+}
+
+const N: usize = 16;
+const F: usize = 2;
+/// Byzantine ids spread so a 4-shard plan keeps 2f_s < n_s per shard.
+const BYZ: [usize; 2] = [6, 14];
+
+fn run_cell(
+    attacker_name: &str,
+    adversary: Option<AdversaryKind>,
+    policy_name: &str,
+    policy: PolicyKind,
+    shards: usize,
+    steps: usize,
+) -> Result<Cell> {
+    let mut spec = RunSpec::new(N, F, policy)
+        .attack(AttackKind::SignFlip, 1.0, 2.0)
+        .steps(steps)
+        .noise(0.05) // keep gradients away from bit-zero (footnote 2)
+        .transport(TransportKind::Sim)
+        .shards(shards)
+        .gather(GatherPolicy::All);
+    spec.byzantine = BYZ.to_vec();
+    if let Some(kind) = adversary {
+        spec = spec.adversary(kind);
+    }
+    let (out, w_star) = spec.run_linreg()?;
+    let identified_at = BYZ
+        .iter()
+        .map(|&w| out.events.identification_time(w))
+        .collect::<Option<Vec<u64>>>()
+        .map(|ts| ts.into_iter().max().unwrap_or(0));
+    let audit_rounds = out.metrics.iterations.iter().filter(|r| r.audited).count();
+    let audited_chunks: usize = out.metrics.iterations.iter().map(|r| r.audited_chunks).sum();
+    let honest_eliminated =
+        out.eliminated.iter().filter(|w| !BYZ.contains(w)).count();
+    Ok(Cell {
+        attacker: attacker_name.to_string(),
+        policy: policy_name.to_string(),
+        shards,
+        identified_at,
+        audit_rounds,
+        audited_chunks,
+        faulty_updates: out.events.oracle_faulty_updates(),
+        final_dist: crate::linalg::dist2(&out.theta, &w_star) as f64,
+        honest_eliminated,
+    })
+}
+
+/// Mean identification time of the last colluder over several seeds
+/// (runs that never identify count as the full horizon — an
+/// underestimate that only strengthens a ">" comparison against it).
+fn mean_identification(
+    adversary: Option<AdversaryKind>,
+    q: f64,
+    steps: usize,
+    seeds: std::ops::Range<u64>,
+) -> Result<f64> {
+    let trials = (seeds.end - seeds.start).max(1) as f64;
+    let mut acc = 0.0;
+    for seed in seeds {
+        let mut spec = RunSpec::new(N, F, PolicyKind::Bernoulli { q })
+            .attack(AttackKind::SignFlip, 1.0, 2.0)
+            .steps(steps)
+            .seed(seed)
+            .noise(0.05)
+            .transport(TransportKind::Sim);
+        spec.byzantine = BYZ.to_vec();
+        if let Some(kind) = adversary {
+            spec = spec.adversary(kind);
+        }
+        let (out, _) = spec.run_linreg()?;
+        let last = BYZ
+            .iter()
+            .map(|&w| out.events.identification_time(w).unwrap_or(steps as u64))
+            .max()
+            .unwrap_or(0);
+        acc += last as f64;
+    }
+    Ok(acc / trials)
+}
+
+pub fn run_e13(fast: bool) -> Result<()> {
+    println!("\n#### E13: red-team matrix — coordinated adversaries vs audit policies");
+    let steps = if fast { 150 } else { 400 };
+    let q = 0.2;
+    let policies: Vec<(&str, PolicyKind)> = vec![
+        ("bernoulli", PolicyKind::Bernoulli { q }),
+        ("deterministic", PolicyKind::Deterministic),
+        ("selective", PolicyKind::Selective { q_base: q }),
+        ("latency-selective", PolicyKind::LatencySelective { q_base: q }),
+    ];
+    let attackers: Vec<(String, Option<AdversaryKind>)> =
+        std::iter::once(("sign_flip (stateless)".to_string(), None))
+            .chain(AdversaryKind::ALL.iter().map(|k| (k.describe(), Some(*k))))
+            .collect();
+
+    let mut table = Table::new(&[
+        "attacker",
+        "policy",
+        "K",
+        "identified at",
+        "audit rounds",
+        "audited chunks",
+        "faulty updates",
+        "final dist",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    for &shards in &[1usize, 4] {
+        for (attacker_name, adversary) in &attackers {
+            for (policy_name, policy) in &policies {
+                let cell = run_cell(
+                    attacker_name,
+                    *adversary,
+                    policy_name,
+                    policy.clone(),
+                    shards,
+                    steps,
+                )?;
+                anyhow::ensure!(
+                    cell.honest_eliminated == 0,
+                    "exactness violated: {} honest workers eliminated under {} x {}",
+                    cell.honest_eliminated,
+                    cell.attacker,
+                    cell.policy
+                );
+                table.row(&[
+                    cell.attacker.clone(),
+                    cell.policy.clone(),
+                    shards.to_string(),
+                    cell.identified_at
+                        .map(|t| t.to_string())
+                        .unwrap_or_else(|| "-".into()),
+                    cell.audit_rounds.to_string(),
+                    cell.audited_chunks.to_string(),
+                    cell.faulty_updates.to_string(),
+                    format!("{:.2e}", cell.final_dist),
+                ]);
+                let mut obj = BTreeMap::new();
+                obj.insert("attacker".to_string(), Json::Str(cell.attacker));
+                obj.insert("policy".to_string(), Json::Str(cell.policy));
+                obj.insert("shards".to_string(), Json::Num(cell.shards as f64));
+                obj.insert("q".to_string(), Json::Num(q));
+                obj.insert("steps".to_string(), Json::Num(steps as f64));
+                obj.insert(
+                    "identified_at".to_string(),
+                    cell.identified_at.map(|t| Json::Num(t as f64)).unwrap_or(Json::Null),
+                );
+                obj.insert("audit_rounds".to_string(), Json::Num(cell.audit_rounds as f64));
+                obj.insert(
+                    "audited_chunks".to_string(),
+                    Json::Num(cell.audited_chunks as f64),
+                );
+                obj.insert(
+                    "faulty_updates".to_string(),
+                    Json::Num(cell.faulty_updates as f64),
+                );
+                obj.insert("final_dist".to_string(), Json::Num(cell.final_dist));
+                rows.push(Json::Obj(obj));
+            }
+        }
+    }
+    table.print("E13 (robustness matrix, deterministic virtual time, seed 42)");
+    println!(
+        "\nreading the matrix: '-' under deterministic x assignment-aware is the \
+         adversary going *silent* — with r = f_t+1 every chunk keeps an honest \
+         copy, so no tamper is ever safe and no damage is done (0 faulty \
+         updates); everywhere an attacker keeps lying, the colluders are \
+         identified and the run converges (final dist ~ the fault-free run)."
+    );
+
+    // ---- headline claim: warm-up beats stateless at equal q budget ------
+    let trials = if fast { 3u64 } else { 10 };
+    let sleeper = AdversaryKind::Sleeper { warmup: 15 };
+    let q_cmp = 0.3;
+    let stateless_mean = mean_identification(None, q_cmp, steps, 1000..1000 + trials)?;
+    let sleeper_mean = mean_identification(Some(sleeper), q_cmp, steps, 1000..1000 + trials)?;
+    println!(
+        "\nrounds-to-identification at equal q = {q_cmp} budget over {trials} seeds: \
+         stateless sign-flip {stateless_mean:.1}, sleeper:15 {sleeper_mean:.1} \
+         (the sleeper cannot be identified before its strike at round 15)"
+    );
+    anyhow::ensure!(
+        sleeper_mean > stateless_mean,
+        "sleeper ({sleeper_mean:.1}) must be costlier to identify than stateless \
+         ({stateless_mean:.1}) at equal q budget"
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("adversary_redteam".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(format!(
+            "linreg d=16 chunk=8 noise=0.05 transport=sim n={N} f={F} byz={BYZ:?} \
+             gather=all steps={steps} q={q} magnitude=2.0 seed=42"
+        )),
+    );
+    doc.insert("results".to_string(), Json::Arr(rows));
+    let mut cmp = BTreeMap::new();
+    cmp.insert("q".to_string(), Json::Num(q_cmp));
+    cmp.insert("seeds".to_string(), Json::Num(trials as f64));
+    cmp.insert("stateless_mean_identification".to_string(), Json::Num(stateless_mean));
+    cmp.insert("sleeper15_mean_identification".to_string(), Json::Num(sleeper_mean));
+    doc.insert("sleeper_vs_stateless".to_string(), Json::Obj(cmp));
+    let json = Json::Obj(doc).to_string();
+    match std::fs::write("BENCH_adversary.json", &json) {
+        Ok(()) => println!("wrote BENCH_adversary.json"),
+        Err(e) => eprintln!("failed to write BENCH_adversary.json: {e}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn e13_fast() {
+        super::run_e13(true).unwrap();
+    }
+}

@@ -89,7 +89,7 @@ pub fn run_e10(fast: bool) -> Result<()> {
             for _ in 0..f_byz {
                 let mut g = truth.clone();
                 let mut loss = 1.0;
-                behavior.corrupt(&mut g, &mut loss);
+                behavior.corrupt(0, &mut g, &mut loss);
                 grads.push(g);
             }
             let agg = filt.aggregate(&grads, f_byz);
@@ -131,7 +131,7 @@ pub fn run_e10(fast: bool) -> Result<()> {
                 )
             })
             .collect();
-        for _ in 0..steps {
+        for step in 0..steps {
             // n workers each compute a gradient on their own batch
             let mut grads: Vec<Vec<f32>> = Vec::with_capacity(n_b);
             for w in 0..n_b {
@@ -140,7 +140,7 @@ pub fn run_e10(fast: bool) -> Result<()> {
                 let mut out = engine.grad(&theta, &batch)?;
                 if w < f_b {
                     let mut loss = out.loss;
-                    behavior[w].corrupt(&mut out.grad, &mut loss);
+                    behavior[w].corrupt(step as u64, &mut out.grad, &mut loss);
                 }
                 grads.push(out.grad);
             }

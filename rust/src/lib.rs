@@ -34,7 +34,10 @@
 //! * [`coordinator::analysis`] — the paper's closed forms (Eqs. 2–5).
 //! * [`grad::GradientComputer`] — pluggable gradient engines.
 //! * [`baselines`] — DRACO and gradient-filter comparators.
+//! * [`adversary`] — coordinated, protocol-aware Byzantine strategies
+//!   (the red-team layer; `--adversary <strategy>`).
 
+pub mod adversary;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

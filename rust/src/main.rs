@@ -5,8 +5,10 @@
 //!                   [--engine native|xla] [--policy ...] [--q 0.2] [--n 8]
 //!                   [--f 2] [--shards 1] [--transport threaded|sim]
 //!                   [--gather all|quorum:K|quorum:0.F|deadline:US] [--attack sign_flip]
+//!                   [--adversary assignment-aware|sleeper[:W]|audit-evader[:C]
+//!                   |latency-mimic|shard-equivocator]
 //!                   [--p 1.0] [--steps 200] [--seed 42] [--csv out.csv]
-//! r3bft experiment  <e1..e12|all> [--full]
+//! r3bft experiment  <e1..e13|all> [--full]
 //! r3bft inspect     [--artifacts artifacts]
 //! r3bft help
 //! ```
@@ -14,8 +16,8 @@
 use std::sync::Arc;
 
 use r3bft::config::{
-    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, GatherPolicy, PolicyKind,
-    TrainConfig, TransportKind,
+    AdversaryKind, AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, GatherPolicy,
+    PolicyKind, TrainConfig, TransportKind,
 };
 use r3bft::coordinator::master::{Master, MasterOptions};
 use r3bft::data::{BlobsDataset, Corpus, Dataset, LinRegDataset};
@@ -54,7 +56,7 @@ fn print_help() {
 
 USAGE:
   r3bft train [opts]          run a training experiment
-  r3bft experiment <id>       reproduce a paper experiment (e1..e12, all); --full for long runs
+  r3bft experiment <id>       reproduce a paper experiment (e1..e13, all); --full for long runs
   r3bft inspect               list + compile the AOT artifacts
   r3bft help
 
@@ -84,8 +86,14 @@ TRAIN OPTIONS (defaults in parens):
                      like crashed workers', detection/reactive phases
                      still wait for every requested copy
   --attack A         sign_flip|noise|constant|zero|small_bias|collude (sign_flip)
+  --adversary S      coordinated adversary strategy replacing the stateless
+                     attack for the Byzantine workers: assignment-aware |
+                     sleeper[:WARMUP] | audit-evader[:COOLDOWN] |
+                     latency-mimic | shard-equivocator (off); one omniscient
+                     controller watches the protocol's public state (see
+                     docs/ATTACKS.md and experiment e13)
   --p P              per-iteration tamper probability (1.0)
-  --magnitude M      attack magnitude (1.0)
+  --magnitude M      attack magnitude (1.0; also scales the coordinated lie)
   --steps S          iterations (200)   --lr LR step size (0.1)
   --seed S           RNG seed (42)      --self-check  master recomputes audits
   --artifacts DIR    artifacts dir for --engine xla (artifacts)
@@ -102,6 +110,7 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
             cluster: ClusterConfig::new(8, 2, 42),
             policy: PolicyKind::Bernoulli { q: 0.2 },
             attack: AttackConfig::default(),
+            adversary: None,
             train: TrainConfig::default(),
         }
     };
@@ -141,6 +150,9 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(kind) = args.get("attack") {
         cfg.attack.kind = AttackKind::parse(kind)?;
+    }
+    if let Some(s) = args.get("adversary") {
+        cfg.adversary = Some(AdversaryKind::parse(s)?);
     }
     cfg.attack.p = args.f64("p", cfg.attack.p);
     cfg.attack.magnitude = args.f64("magnitude", cfg.attack.magnitude as f64) as f32;
@@ -207,7 +219,7 @@ fn run_train(args: &Args) -> Result<()> {
     let opts = MasterOptions { self_check, w_star, ..Default::default() };
 
     log::info!(
-        "train: model={} engine={} n={} f={} shards={} transport={} gather={} policy={:?} attack={:?} steps={}",
+        "train: model={} engine={} n={} f={} shards={} transport={} gather={} policy={:?} attack={} steps={}",
         cfg.train.model,
         cfg.train.engine,
         cfg.cluster.n,
@@ -216,7 +228,10 @@ fn run_train(args: &Args) -> Result<()> {
         cfg.cluster.transport.name(),
         cfg.cluster.gather.describe(),
         cfg.policy,
-        cfg.attack.kind,
+        match cfg.adversary {
+            Some(kind) => format!("adversary:{}", kind.describe()),
+            None => format!("{:?}", cfg.attack.kind),
+        },
         cfg.train.steps
     );
     let csv_path = args.get("csv").map(String::from);

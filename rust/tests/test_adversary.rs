@@ -1,0 +1,236 @@
+//! Exactness under coordinated, protocol-aware adversaries: the
+//! paper's claim (2f < n => every persistently-tampering worker is
+//! eventually identified and eliminated, and no honest worker ever
+//! is) must survive every shipped strategy — single-master and
+//! sharded, threaded and simulated.
+//!
+//! The strategies are configured to *persist* (short warm-ups and
+//! dormancies), so each run must end in one of the paper's two
+//! terminal states: all colluders eliminated, or (for strategies that
+//! go fully silent) zero tampered updates. Either way the tail of the
+//! run is fault-free.
+
+use r3bft::config::{AdversaryKind, AttackKind, GatherPolicy, PolicyKind, TransportKind};
+use r3bft::coordinator::{Event, LatencyModel, SimConfig, TrainOutcome};
+use r3bft::experiments::common::RunSpec;
+
+/// Byzantine ids spread across shards so every K in {1, 4} keeps
+/// 2 f_s < n_s (n must be a multiple of 4).
+fn byz_ids(n: usize) -> Vec<usize> {
+    vec![n / 4 + 1, n / 2 + 3]
+}
+
+/// Strategy variants tuned to persist within a short test horizon.
+fn strategies() -> Vec<AdversaryKind> {
+    vec![
+        AdversaryKind::AssignmentAware,
+        AdversaryKind::Sleeper { warmup: 8 },
+        AdversaryKind::AuditEvader { cooldown: 4 },
+        AdversaryKind::LatencyMimic,
+        AdversaryKind::ShardEquivocator,
+    ]
+}
+
+fn run(kind: AdversaryKind, n: usize, transport: TransportKind, shards: usize) -> TrainOutcome {
+    let mut spec = RunSpec::new(n, 2, PolicyKind::Bernoulli { q: 0.4 })
+        .attack(AttackKind::SignFlip, 1.0, 2.0)
+        .steps(80)
+        .noise(0.05) // keep gradients off bit-zero (paper footnote 2)
+        .transport(transport)
+        .shards(shards)
+        .gather(GatherPolicy::All)
+        .adversary(kind);
+    spec.byzantine = byz_ids(n);
+    let (out, _) = spec.run_linreg().expect("adversarial run");
+    out
+}
+
+/// The exactness contract for one finished run.
+fn assert_exactness(kind: AdversaryKind, n: usize, out: &TrainOutcome) {
+    let byz = byz_ids(n);
+    // (1) no honest worker is ever eliminated
+    for w in &out.eliminated {
+        assert!(
+            byz.contains(w),
+            "{:?} n={n}: honest worker {w} eliminated ({:?})",
+            kind,
+            out.eliminated
+        );
+    }
+    // (2) every colluder is identified and eliminated: all shipped
+    // strategies keep tampering under r = 1 audits (warm-ups and
+    // dormancies are finite; the equivocator re-targets after each
+    // elimination), and with q = 0.4 over 80 rounds a persistent liar
+    // escaping identification has vanishing probability
+    let mut eliminated = out.eliminated.clone();
+    eliminated.sort_unstable();
+    assert_eq!(
+        eliminated, byz,
+        "{:?} n={n}: persistently-tampering colluders not all eliminated",
+        kind
+    );
+    // (3) the run is fault-free after the last elimination: no
+    // tampered chunk value enters theta once the liars are gone
+    let last_elim = out
+        .events
+        .flat()
+        .filter_map(|e| match e {
+            Event::Eliminated { iter, .. } => Some(*iter),
+            _ => None,
+        })
+        .max()
+        .expect("eliminations present");
+    let late_faulty = out
+        .events
+        .flat()
+        .filter(|e| matches!(e, Event::OracleFaultyUpdate { iter } if *iter > last_elim))
+        .count();
+    assert_eq!(
+        late_faulty, 0,
+        "{:?} n={n}: tampered updates after the last elimination",
+        kind
+    );
+}
+
+#[test]
+fn exactness_sim_n16_single_and_sharded() {
+    for kind in strategies() {
+        for shards in [1usize, 4] {
+            let out = run(kind, 16, TransportKind::Sim, shards);
+            assert_exactness(kind, 16, &out);
+        }
+    }
+}
+
+#[test]
+fn exactness_threaded_n16_single_and_sharded() {
+    for kind in strategies() {
+        for shards in [1usize, 4] {
+            let out = run(kind, 16, TransportKind::Threaded, shards);
+            assert_exactness(kind, 16, &out);
+        }
+    }
+}
+
+#[test]
+fn exactness_sim_n64_single_and_sharded() {
+    for kind in strategies() {
+        for shards in [1usize, 4] {
+            let out = run(kind, 64, TransportKind::Sim, shards);
+            assert_exactness(kind, 64, &out);
+        }
+    }
+}
+
+#[test]
+fn exactness_threaded_n64_single_and_sharded() {
+    for kind in strategies() {
+        for shards in [1usize, 4] {
+            let out = run(kind, 64, TransportKind::Threaded, shards);
+            assert_exactness(kind, 64, &out);
+        }
+    }
+}
+
+#[test]
+fn sleeper_is_costlier_to_identify_than_stateless_at_equal_q() {
+    // nothing can be identified before the sleeper's first tamper, so
+    // its identification time is >= warmup by construction; a stateless
+    // p = 1 liar under the same q = 0.5 budget falls at the first
+    // audited round (P(no audit in 20 rounds) = 0.5^20)
+    let n = 16;
+    let warmup = 20u64;
+    let mut sleeper = RunSpec::new(n, 2, PolicyKind::Bernoulli { q: 0.5 })
+        .attack(AttackKind::SignFlip, 1.0, 2.0)
+        .steps(120)
+        .noise(0.05)
+        .transport(TransportKind::Sim)
+        .adversary(AdversaryKind::Sleeper { warmup });
+    sleeper.byzantine = byz_ids(n);
+    let (out_sleeper, _) = sleeper.run_linreg().unwrap();
+
+    let mut stateless = RunSpec::new(n, 2, PolicyKind::Bernoulli { q: 0.5 })
+        .attack(AttackKind::SignFlip, 1.0, 2.0)
+        .steps(120)
+        .noise(0.05)
+        .transport(TransportKind::Sim);
+    stateless.byzantine = byz_ids(n);
+    let (out_stateless, _) = stateless.run_linreg().unwrap();
+
+    let last_id = |out: &TrainOutcome| {
+        byz_ids(n)
+            .iter()
+            .map(|&w| out.events.identification_time(w).expect("identified"))
+            .max()
+            .unwrap()
+    };
+    let t_sleeper = last_id(&out_sleeper);
+    let t_stateless = last_id(&out_stateless);
+    assert!(
+        t_sleeper >= warmup,
+        "sleeper identified at {t_sleeper}, before its strike at {warmup}"
+    );
+    assert!(
+        t_sleeper > t_stateless,
+        "sleeper ({t_sleeper}) must outlive the stateless liar ({t_stateless}) \
+         at equal q budget"
+    );
+}
+
+#[test]
+fn latency_mimic_stalls_rounds_but_stays_under_the_gates() {
+    // sim with a real base latency: the mimic fakes its sub-gate stall
+    // (~2.9 ms) on top of the 100 us wave, gating every pre-elimination
+    // round, and sheds it after elimination
+    let n = 16;
+    let mut spec = RunSpec::new(n, 2, PolicyKind::Bernoulli { q: 0.4 })
+        .attack(AttackKind::SignFlip, 1.0, 2.0)
+        .steps(60)
+        .noise(0.05)
+        .transport(TransportKind::Sim)
+        .adversary(AdversaryKind::LatencyMimic)
+        .sim(SimConfig { latency: LatencyModel::Fixed { us: 100 }, ..Default::default() });
+    spec.byzantine = byz_ids(n);
+    let (out, _) = spec.run_linreg().unwrap();
+    assert_exactness(AdversaryKind::LatencyMimic, n, &out);
+    // round 0: the mimic's stall dominates the All-gather round time
+    let first = &out.metrics.iterations[0];
+    assert!(
+        first.round_ns >= 2_900_000,
+        "mimic stall missing from round 0 ({} ns)",
+        first.round_ns
+    );
+    // after the last elimination the rounds run at base latency again
+    let last = out.metrics.iterations.last().unwrap();
+    assert!(
+        last.round_ns < 2_000_000,
+        "stall persisted after elimination ({} ns)",
+        last.round_ns
+    );
+}
+
+#[test]
+fn equivocator_strikes_one_shard_at_a_time() {
+    // K = 4, one colluder in shard 1 and one in shard 2: the
+    // equivocator's pressure metric targets the tied shards lowest-id
+    // first, so the shard-1 colluder must fall before the shard-2
+    // colluder ever tells a lie
+    let n = 16;
+    let byz = byz_ids(n); // [5, 11] -> shards 1 and 2 at K = 4
+    let mut spec = RunSpec::new(n, 2, PolicyKind::Bernoulli { q: 0.4 })
+        .attack(AttackKind::SignFlip, 1.0, 2.0)
+        .steps(80)
+        .noise(0.05)
+        .transport(TransportKind::Sim)
+        .shards(4)
+        .adversary(AdversaryKind::ShardEquivocator);
+    spec.byzantine = byz.clone();
+    let (out, _) = spec.run_linreg().unwrap();
+    assert_exactness(AdversaryKind::ShardEquivocator, n, &out);
+    let t_first = out.events.identification_time(byz[0]).unwrap();
+    let t_second = out.events.identification_time(byz[1]).unwrap();
+    assert!(
+        t_first < t_second,
+        "target shard's colluder ({t_first}) must fall before the next ({t_second})"
+    );
+}

@@ -28,6 +28,7 @@ fn experiment(
         cluster,
         policy,
         attack,
+        adversary: None,
         train: TrainConfig { steps, lr: 0.5, ..Default::default() },
     }
 }
@@ -344,6 +345,7 @@ fn mlp_under_attack_with_randomized_scheme() {
         cluster,
         policy: PolicyKind::Bernoulli { q: 0.4 },
         attack: AttackConfig { kind: AttackKind::Noise, p: 0.8, magnitude: 2.0 },
+        adversary: None,
         train: TrainConfig { steps: 250, lr: 0.3, ..Default::default() },
     };
     let ds = Arc::new(BlobsDataset::generate(2048, 8, 3, 4.0, 11));

@@ -44,6 +44,7 @@ fn run(
         cluster,
         policy,
         attack,
+        adversary: None,
         train: TrainConfig { steps, lr: 0.5, ..Default::default() },
     };
     let d = 16usize;
@@ -322,6 +323,107 @@ fn deadline_gather_proceeds_at_the_deadline() {
     );
     assert_eq!(out.events.stragglers(), steps);
     assert!(out.crashed.is_empty());
+}
+
+/// Abandonment-streak feedback (the PR-4 ROADMAP follow-up): a worker
+/// abandoned in ABANDON_STREAK consecutive rounds is chronic, and the
+/// quorum stops budgeting a response slot for it. With two stragglers
+/// and `allowed missing = 1`, the first rounds are gated by the
+/// *faster* straggler (the slot the slower one would have used); once
+/// the slower straggler turns chronic the effective quorum shrinks and
+/// the rounds drop to base latency.
+#[test]
+fn chronic_straggler_shrinks_the_effective_quorum() {
+    use r3bft::coordinator::protocol::ABANDON_STREAK;
+    let n = 8usize;
+    let steps = 8usize;
+    // worker 6: 30x (3000us), worker 7: 50x (5000us)
+    let sim = SimConfig {
+        latency: LatencyModel::Fixed { us: 100 },
+        stragglers: vec![(6, 30.0), (7, 50.0)],
+        ..Default::default()
+    };
+    let out = run(
+        n,
+        0,
+        vec![],
+        PolicyKind::None,
+        AttackConfig::default(),
+        steps,
+        31,
+        "sim",
+        1,
+        GatherPolicy::Quorum { k: n - 1 },
+        sim,
+    );
+    let streak = ABANDON_STREAK as usize;
+    for (i, rec) in out.metrics.iterations.iter().enumerate() {
+        let us = rec.round_ns as f64 / 1e3;
+        if i < streak {
+            // worker 7's slot is filled by worker 6's 3000us response
+            // (plus, at worst, a reassignment wave that lands on the
+            // 30x straggler again)
+            assert!(
+                us >= 3000.0,
+                "round {i} should be gated by the 30x straggler, got {us}us"
+            );
+            assert_eq!(rec.stragglers, 1, "round {i}: only worker 7 abandoned");
+        } else {
+            // worker 7 is chronic: the quorum shrinks, both stragglers
+            // are abandoned, and the round runs at base + reassignment
+            assert!(
+                us <= 500.0,
+                "round {i} should be quorum-dominated after the shrink, got {us}us"
+            );
+            assert_eq!(rec.stragglers, 2, "round {i}: both stragglers abandoned");
+        }
+    }
+    // a straggle is never a crash or an elimination
+    assert!(out.crashed.is_empty() && out.eliminated.is_empty());
+}
+
+/// The shrink never cuts below the 2f_t+1 identification floor: with
+/// f = 2 (floor 5) and three chronic stragglers on an n = 8 cluster,
+/// every wave keeps at least 5 responders no matter how many workers
+/// turn chronic.
+#[test]
+fn quorum_shrink_preserves_the_identification_floor() {
+    let n = 8usize;
+    let f = 2usize;
+    let steps = 12usize;
+    let sim = SimConfig {
+        latency: LatencyModel::Fixed { us: 100 },
+        stragglers: vec![(5, 30.0), (6, 40.0), (7, 50.0)],
+        ..Default::default()
+    };
+    let out = run(
+        n,
+        f,
+        vec![],
+        PolicyKind::None,
+        AttackConfig::default(),
+        steps,
+        37,
+        "sim",
+        1,
+        GatherPolicy::Quorum { k: 6 },
+        sim,
+    );
+    for (i, rec) in out.metrics.iterations.iter().enumerate() {
+        // responders = n - abandoned must never drop below 2f+1 = 5
+        assert!(
+            n - rec.stragglers >= 2 * f + 1,
+            "round {i} kept only {} responders (floor {})",
+            n - rec.stragglers,
+            2 * f + 1
+        );
+        assert_eq!(rec.gradients_used, (n * 8) as u64, "m must be unchanged");
+    }
+    // by the tail every straggler is chronic and the floor binds
+    let last = out.metrics.iterations.last().unwrap();
+    assert_eq!(last.stragglers, 3, "floor-bound wave abandons all three stragglers");
+    assert!(last.round_ns as f64 / 1e3 <= 500.0);
+    assert!(out.crashed.is_empty() && out.eliminated.is_empty());
 }
 
 /// Sharded runs scale the quorum to each shard's width: a straggler in

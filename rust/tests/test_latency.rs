@@ -38,6 +38,7 @@ fn run(
         cluster,
         policy,
         attack,
+        adversary: None,
         train: TrainConfig { steps, lr: 0.5, ..Default::default() },
     };
     let d = 8usize;

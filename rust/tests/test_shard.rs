@@ -38,6 +38,7 @@ fn run(
         cluster,
         policy,
         attack,
+        adversary: None,
         train: TrainConfig { steps, lr: 0.5, ..Default::default() },
     };
     let d = 16usize;
@@ -277,6 +278,7 @@ fn sharded_master_rejects_overloaded_plan() {
         cluster,
         policy: PolicyKind::Deterministic,
         attack: AttackConfig::default(),
+        adversary: None,
         train: TrainConfig { steps: 1, lr: 0.1, ..Default::default() },
     };
     let d = 8usize;

@@ -34,6 +34,7 @@ fn run(
         cluster,
         policy,
         attack,
+        adversary: None,
         train: TrainConfig { steps, lr: 0.5, ..Default::default() },
     };
     let d = 16usize;
@@ -105,6 +106,7 @@ fn sim_scales_to_1024_workers_without_os_threads() {
         cluster,
         policy: PolicyKind::Bernoulli { q: 0.5 },
         attack: AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 2.0 },
+        adversary: None,
         train: TrainConfig { steps: 3, lr: 0.1, ..Default::default() },
     };
     let d = 4usize;
