@@ -22,15 +22,15 @@ fn main() {
     });
 
     let copies: Vec<SymbolCopy> = (0..3)
-        .map(|w| SymbolCopy { worker: w, grad: grad.clone(), loss: 1.0 })
+        .map(|w| SymbolCopy { worker: w, grad: grad.clone(), loss: 1.0, wire: None })
         .collect();
     run("check_copies r=3 unanimous", opts, || {
         black_box(check_copies(black_box(&copies), 0.0));
     });
 
     let mut vote_copies = copies.clone();
-    vote_copies.push(SymbolCopy { worker: 3, grad: rng.gauss_vec(d), loss: 2.0 });
-    vote_copies.push(SymbolCopy { worker: 4, grad: grad.clone(), loss: 1.0 });
+    vote_copies.push(SymbolCopy { worker: 3, grad: rng.gauss_vec(d), loss: 2.0, wire: None });
+    vote_copies.push(SymbolCopy { worker: 4, grad: grad.clone(), loss: 1.0, wire: None });
     run("majority_vote 5 copies f=2", opts, || {
         black_box(majority_vote(black_box(&vote_copies), 2));
     });

@@ -1,0 +1,175 @@
+//! Round-throughput benchmark for the pipelined driver and the
+//! bit-packed wire formats, written to `BENCH_throughput.json`.
+//!
+//! Two sweeps, both in deterministic virtual time (SimTransport, fixed
+//! per-message latency), fault-free with an always-audit q = 1 budget
+//! so every round costs a proactive wave *plus* a detection wave:
+//!
+//! * **pipeline** — n ∈ {64, 256, 1024}, depth 1 vs 2. At depth 1 a
+//!   round serializes both waves (2 L of latency); at depth 2 the next
+//!   round's proactive wave overlaps the audit, so steady-state
+//!   exclusive round time drops to one wave (L) — a 2.0× round-time
+//!   speedup, exact in virtual time.
+//! * **packing** — dense vs signSGD vs top-k wire bytes per round at
+//!   d = 1024 (sign packs 1 bit/coordinate + a 4-byte scale: ≥ 16×
+//!   fewer bytes on the wire than 4-byte floats).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use r3bft::config::{
+    AttackConfig, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig,
+};
+use r3bft::coordinator::compress::{Compressor, SignSgd, TopK};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::coordinator::{LatencyModel, SimConfig, TrainOutcome};
+use r3bft::data::LinRegDataset;
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+use r3bft::util::bench::Table;
+use r3bft::util::json::Json;
+
+const LATENCY_US: u64 = 200;
+
+fn run_once(
+    n: usize,
+    d: usize,
+    chunk: usize,
+    pipeline: usize,
+    steps: usize,
+    compressor: Option<Arc<dyn Compressor>>,
+) -> TrainOutcome {
+    let mut cluster = ClusterConfig::new(n, 1, 42);
+    cluster.byzantine_ids = vec![];
+    cluster.transport = "sim".into();
+    cluster.pipeline = pipeline;
+    let cfg = ExperimentConfig {
+        name: format!("bench-throughput-{n}x{pipeline}"),
+        cluster,
+        policy: PolicyKind::Bernoulli { q: 1.0 },
+        attack: AttackConfig::default(),
+        adversary: None,
+        train: TrainConfig { steps, lr: 0.1, ..Default::default() },
+    };
+    let ds = Arc::new(LinRegDataset::generate(8192, d, 0.0, 42));
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(42);
+    let opts = MasterOptions {
+        compressor,
+        sim: SimConfig { latency: LatencyModel::Fixed { us: LATENCY_US }, ..Default::default() },
+        ..Default::default()
+    };
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    master.run().expect("train")
+}
+
+/// Steady-state mean over rounds ≥ 1 (round 0 fills the pipeline and
+/// always costs the full two waves at any depth).
+fn steady<F: Fn(&r3bft::coordinator::metrics::IterationRecord) -> f64>(
+    out: &TrainOutcome,
+    f: F,
+) -> f64 {
+    let rows = &out.metrics.iterations[1..];
+    rows.iter().map(f).sum::<f64>() / rows.len().max(1) as f64
+}
+
+fn main() {
+    let steps = 30usize;
+    let d_pipe = 16usize;
+    let chunk = 4usize;
+
+    println!("#### pipelined rounds: exclusive round time, depth 2 vs 1 (sim, q=1, L={LATENCY_US}us)");
+    let mut table = Table::new(&["n", "depth", "round us", "ns/element", "speedup"]);
+    let mut pipe_rows: Vec<Json> = Vec::new();
+    let mut speedup_1024 = 0.0f64;
+    for &n in &[64usize, 256, 1024] {
+        let base = run_once(n, d_pipe, chunk, 1, steps, None);
+        let piped = run_once(n, d_pipe, chunk, 2, steps, None);
+        // trajectories must agree bitwise before timings mean anything
+        assert_eq!(base.theta, piped.theta, "n={n}: pipelined trajectory diverged");
+        let elements = (n * d_pipe) as f64; // aggregated grad elements per round
+        for (depth, out) in [(1usize, &base), (2, &piped)] {
+            let round_ns = steady(out, |r| r.round_ns as f64);
+            let speedup = steady(&base, |r| r.round_ns as f64) / round_ns;
+            table.row(&[
+                n.to_string(),
+                depth.to_string(),
+                format!("{:.1}", round_ns / 1e3),
+                format!("{:.1}", round_ns / elements),
+                format!("{speedup:.2}x"),
+            ]);
+            let mut obj = BTreeMap::new();
+            obj.insert("n".to_string(), Json::Num(n as f64));
+            obj.insert("pipeline_depth".to_string(), Json::Num(depth as f64));
+            obj.insert("round_ns".to_string(), Json::Num(round_ns));
+            obj.insert("ns_per_element".to_string(), Json::Num(round_ns / elements));
+            obj.insert(
+                "bytes_round".to_string(),
+                Json::Num(steady(out, |r| r.bytes_round as f64)),
+            );
+            pipe_rows.push(Json::Obj(obj));
+            if n == 1024 && depth == 2 {
+                speedup_1024 = speedup;
+            }
+        }
+    }
+    table.print("pipeline sweep (steady-state mean, round 0 excluded)");
+    assert!(
+        speedup_1024 >= 1.99,
+        "depth-2 round-time speedup at n=1024 must be >= 2x, got {speedup_1024:.3}x"
+    );
+
+    println!("\n#### bit-packed wire symbols: bytes/round at d = 1024 (n = 64)");
+    let d_pack = 1024usize;
+    let n_pack = 64usize;
+    let packs: Vec<(&str, Option<Arc<dyn Compressor>>)> = vec![
+        ("dense (no wire)", None),
+        ("signSGD", Some(Arc::new(SignSgd))),
+        ("top-32", Some(Arc::new(TopK { k: 32 }))),
+    ];
+    let mut ptable = Table::new(&["wire", "bytes/round", "vs dense"]);
+    let mut pack_rows: Vec<Json> = Vec::new();
+    let mut dense_bytes = 0.0f64;
+    let mut sign_ratio = 0.0f64;
+    for (name, comp) in packs {
+        let out = run_once(n_pack, d_pack, chunk, 2, steps, comp);
+        let bytes = steady(&out, |r| r.bytes_round as f64);
+        if name.starts_with("dense") {
+            dense_bytes = bytes;
+        }
+        let ratio = if bytes > 0.0 { dense_bytes / bytes } else { 0.0 };
+        if name == "signSGD" {
+            sign_ratio = ratio;
+        }
+        ptable.row(&[name.into(), format!("{bytes:.0}"), format!("{ratio:.1}x")]);
+        let mut obj = BTreeMap::new();
+        obj.insert("wire".to_string(), Json::Str(name.to_string()));
+        obj.insert("bytes_round".to_string(), Json::Num(bytes));
+        obj.insert("ratio_vs_dense".to_string(), Json::Num(ratio));
+        pack_rows.push(Json::Obj(obj));
+    }
+    ptable.print("wire packing (pipelined depth 2, steady-state mean)");
+    assert!(
+        sign_ratio >= 16.0,
+        "signSGD must cut bytes/round by >= 16x at d=1024, got {sign_ratio:.1}x"
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("round_throughput".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(format!(
+            "linreg fault-free sim latency=fixed:{LATENCY_US}us q=1.0 f=1 steps={steps} \
+             chunk={chunk} pipeline d={d_pipe} / packing d={d_pack} n={n_pack} seed=42"
+        )),
+    );
+    doc.insert("pipeline".to_string(), Json::Arr(pipe_rows));
+    doc.insert("packing".to_string(), Json::Arr(pack_rows));
+    doc.insert("round_time_speedup_n1024_depth2".to_string(), Json::Num(speedup_1024));
+    doc.insert("signsgd_bytes_ratio_d1024".to_string(), Json::Num(sign_ratio));
+    let json = Json::Obj(doc).to_string();
+    match std::fs::write("BENCH_throughput.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_throughput.json"),
+        Err(e) => eprintln!("failed to write BENCH_throughput.json: {e}"),
+    }
+}

@@ -50,7 +50,7 @@ mod tests {
     use super::*;
 
     fn sym(w: WorkerId, g: Vec<f32>) -> SymbolCopy {
-        SymbolCopy { worker: w, grad: g, loss: 0.0 }
+        SymbolCopy { worker: w, grad: g, loss: 0.0, wire: None }
     }
 
     #[test]

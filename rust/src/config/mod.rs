@@ -347,6 +347,12 @@ pub struct ClusterConfig {
     /// into K contiguous shards, each with its own protocol core,
     /// behind one parameter server. See `coordinator::shard`.
     pub shards: usize,
+    /// Round pipeline depth (`cluster.pipeline` / `--pipeline`): 1 =
+    /// strictly sequential rounds (the paper's model); D ≥ 2 lets the
+    /// master launch iteration t+1's proactive wave on a provisional θ
+    /// while iteration t's audit is still in flight, reissuing the
+    /// wave only when the audit changed θ. See `coordinator::master`.
+    pub pipeline: usize,
     pub seed: u64,
 }
 
@@ -362,6 +368,7 @@ impl ClusterConfig {
             transport: TransportKind::Threaded,
             gather: GatherPolicy::All,
             shards: 1,
+            pipeline: 1,
             seed,
         }
     }
@@ -395,6 +402,9 @@ impl ClusterConfig {
         }
         if self.shards > self.n {
             bail!("cluster.shards = {} exceeds n = {}", self.shards, self.n);
+        }
+        if self.pipeline == 0 {
+            bail!("cluster.pipeline must be at least 1");
         }
         if 2 * self.f >= self.n {
             bail!(
@@ -484,6 +494,7 @@ impl ExperimentConfig {
         cluster.transport = TransportKind::parse(&doc.str_or("cluster.transport", "threaded"))?;
         cluster.gather = GatherPolicy::parse(&doc.str_or("cluster.gather", "all"), n)?;
         cluster.shards = doc.usize_or("cluster.shards", 1);
+        cluster.pipeline = doc.usize_or("cluster.pipeline", 1);
         if let Some(toml::TomlValue::Arr(ids)) = doc.get("cluster.byzantine_ids") {
             cluster.byzantine_ids = ids
                 .iter()
@@ -644,6 +655,24 @@ mod tests {
             TomlDoc::parse("[cluster]\nn = 16\nf = 2\ntransport = \"sim\"\nshards = 4\n").unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.cluster.shards, 4);
+    }
+
+    #[test]
+    fn pipeline_validated_and_parsed() {
+        let mut c = ClusterConfig::new(8, 2, 0);
+        assert_eq!(c.pipeline, 1);
+        c.pipeline = 3;
+        assert!(c.validate().is_ok());
+        c.pipeline = 0;
+        assert!(c.validate().is_err());
+
+        let doc =
+            TomlDoc::parse("[cluster]\nn = 8\nf = 1\ntransport = \"sim\"\npipeline = 2\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster.pipeline, 2);
+        // default is strictly sequential
+        let doc = TomlDoc::parse("[cluster]\nn = 8\nf = 1\n").unwrap();
+        assert_eq!(ExperimentConfig::from_doc(&doc).unwrap().cluster.pipeline, 1);
     }
 
     #[test]

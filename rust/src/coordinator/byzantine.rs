@@ -143,9 +143,9 @@ mod tests {
             let mut loss = 1.0f32;
             b.corrupt(0, &mut g, &mut loss);
             let copies = vec![
-                SymbolCopy { worker: 0, grad: honest.clone(), loss: 1.0 },
-                SymbolCopy { worker: 1, grad: honest.clone(), loss: 1.0 },
-                SymbolCopy { worker: 2, grad: g, loss },
+                SymbolCopy { worker: 0, grad: honest.clone(), loss: 1.0, wire: None },
+                SymbolCopy { worker: 1, grad: honest.clone(), loss: 1.0, wire: None },
+                SymbolCopy { worker: 2, grad: g, loss, wire: None },
             ];
             assert_eq!(
                 check_copies(&copies, 0.0),

@@ -17,8 +17,14 @@ use crate::coordinator::WorkerId;
 #[derive(Clone, Debug)]
 pub struct SymbolCopy {
     pub worker: WorkerId,
+    /// Dense gradient (exact decode of `wire` under a compressor).
     pub grad: Vec<f32>,
     pub loss: f32,
+    /// Packed wire bytes (`Some` iff a compressor is configured).
+    /// When present, hashing and exact comparison use these bytes —
+    /// replicas are checked on the representation that actually
+    /// travelled, bit-identically.
+    pub wire: Option<Vec<u8>>,
 }
 
 /// Result of comparing the copies of one chunk's symbol.
@@ -58,9 +64,55 @@ pub fn grad_key(grad: &[f32], loss: f32) -> u64 {
     h
 }
 
+/// 64-bit hash over packed wire bytes (same FxHash-style mixing as
+/// [`grad_key`], eight bytes per multiply) — the grouping key for
+/// majority voting over compressed symbols.
+pub fn wire_key(wire: &[u8], loss: f32) -> u64 {
+    const K: u64 = 0x517c_c1b7_2722_0a95;
+    #[inline(always)]
+    fn mix(h: u64, w: u64) -> u64 {
+        (h.rotate_left(5) ^ w).wrapping_mul(K)
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut chunks = wire.chunks_exact(8);
+    for block in &mut chunks {
+        let w = u64::from_le_bytes([
+            block[0], block[1], block[2], block[3], block[4], block[5], block[6], block[7],
+        ]);
+        h = mix(h, w);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut w = 0u64;
+        for (i, b) in rem.iter().enumerate() {
+            w |= (*b as u64) << (8 * i);
+        }
+        h = mix(h, w);
+    }
+    h = mix(h, loss.to_bits() as u64 ^ (wire.len() as u64) << 32);
+    h
+}
+
+/// Grouping key of one copy: the wire bytes when the symbol travelled
+/// packed, else the dense gradient bits.
+pub fn copy_key(c: &SymbolCopy) -> u64 {
+    match &c.wire {
+        Some(w) => wire_key(w, c.loss),
+        None => grad_key(&c.grad, c.loss),
+    }
+}
+
 /// Exact equality of two symbols (bitwise, modulo -0.0 == 0.0 via
 /// float comparison when `tol == 0.0`, or within `tol` otherwise).
+/// When both copies travelled packed and `tol == 0.0`, the comparison
+/// is over the wire bytes themselves — detection compares replicas on
+/// the packed representation.
 pub fn symbols_equal(a: &SymbolCopy, b: &SymbolCopy, tol: f32) -> bool {
+    if tol == 0.0 {
+        if let (Some(wa), Some(wb)) = (&a.wire, &b.wire) {
+            return wa == wb && a.loss == b.loss;
+        }
+    }
     if a.grad.len() != b.grad.len() {
         return false;
     }
@@ -191,7 +243,7 @@ mod tests {
     use super::*;
 
     fn sym(w: WorkerId, g: Vec<f32>) -> SymbolCopy {
-        SymbolCopy { worker: w, grad: g, loss: 0.5 }
+        SymbolCopy { worker: w, grad: g, loss: 0.5, wire: None }
     }
 
     #[test]
@@ -240,9 +292,9 @@ mod tests {
     #[test]
     fn tolerance_applies_to_loss_too() {
         let tol = 1e-3f32;
-        let a = SymbolCopy { worker: 0, grad: vec![1.0], loss: 1.0 };
-        let near = SymbolCopy { worker: 1, grad: vec![1.0], loss: 1.0 + 0.5 * tol };
-        let far = SymbolCopy { worker: 2, grad: vec![1.0], loss: 1.0 + 10.0 * tol };
+        let a = SymbolCopy { worker: 0, grad: vec![1.0], loss: 1.0, wire: None };
+        let near = SymbolCopy { worker: 1, grad: vec![1.0], loss: 1.0 + 0.5 * tol, wire: None };
+        let far = SymbolCopy { worker: 2, grad: vec![1.0], loss: 1.0 + 10.0 * tol, wire: None };
         assert!(symbols_equal(&a, &near, tol));
         assert!(!symbols_equal(&a, &far, tol));
         assert_eq!(check_copies(&[a.clone(), near], tol), CheckOutcome::Unanimous);
@@ -267,6 +319,33 @@ mod tests {
         assert_eq!(a, b);
         assert_ne!(a, c);
         assert_ne!(grad_key(&[0.0], 0.0), grad_key(&[-0.0], 0.0)); // bitwise
+    }
+
+    #[test]
+    fn wire_key_and_copy_key_group_on_packed_bytes() {
+        let w1 = vec![0u8, 1, 2, 3, 4, 5, 6, 7, 8]; // 9 bytes: exercises remainder
+        let mut w2 = w1.clone();
+        w2[8] ^= 0x40;
+        assert_eq!(wire_key(&w1, 0.5), wire_key(&w1, 0.5));
+        assert_ne!(wire_key(&w1, 0.5), wire_key(&w2, 0.5));
+        assert_ne!(wire_key(&w1, 0.5), wire_key(&w1, 0.75)); // loss is part of the key
+        // copy_key: wire bytes dominate the dense cache when present
+        let a = SymbolCopy { worker: 0, grad: vec![1.0], loss: 0.5, wire: Some(w1.clone()) };
+        let b = SymbolCopy { worker: 1, grad: vec![2.0], loss: 0.5, wire: Some(w1.clone()) };
+        assert_eq!(copy_key(&a), copy_key(&b));
+        let c = SymbolCopy { worker: 2, grad: vec![1.0], loss: 0.5, wire: Some(w2) };
+        assert_ne!(copy_key(&a), copy_key(&c));
+        let dense = SymbolCopy { worker: 3, grad: vec![1.0], loss: 0.5, wire: None };
+        assert_eq!(copy_key(&dense), grad_key(&[1.0], 0.5));
+    }
+
+    #[test]
+    fn symbols_equal_compares_wires_bitwise() {
+        let mk = |wire: Vec<u8>| SymbolCopy { worker: 0, grad: vec![1.0], loss: 0.5, wire: Some(wire) };
+        assert!(symbols_equal(&mk(vec![1, 2, 3]), &mk(vec![1, 2, 3]), 0.0));
+        assert!(!symbols_equal(&mk(vec![1, 2, 3]), &mk(vec![1, 2, 4]), 0.0));
+        // differing wire lengths are a fault regardless of the dense cache
+        assert!(!symbols_equal(&mk(vec![1, 2, 3]), &mk(vec![1, 2]), 0.0));
     }
 
     // ---------------- Fig. 2 (experiment E1 unit coverage) ----------------

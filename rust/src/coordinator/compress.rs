@@ -1,4 +1,5 @@
-//! Compressed-gradient symbols (§2.1 / §5 generalization).
+//! Compressed-gradient symbols (§2.1 / §5 generalization) with a real
+//! byte-packed wire format.
 //!
 //! The paper notes both schemes extend unchanged to workers that send
 //! *compressed* gradients [1, 2, 19, 20]: detection compares compressed
@@ -6,34 +7,81 @@
 //! bit-identical), and the master aggregates after decompression.
 //!
 //! Two classic compressors are provided:
-//! * [`TopK`] — magnitude top-k sparsification (Aji & Heafield, 2017);
+//! * [`TopK`] — magnitude top-k sparsification (Aji & Heafield, 2017),
+//!   packed as (u32 index, f32 value) little-endian pairs;
 //! * [`SignSgd`] — 1-bit sign compression with a per-symbol scale
-//!   (Bernstein et al., 2018).
+//!   (Bernstein et al., 2018), packed 32 signs per u32 word after a
+//!   4-byte scale.
 //!
-//! A compressed symbol is (indices?, values) packed into a flat f32
-//! vector so the whole symbol pipeline (hashing, comparison, majority
-//! vote) works on it unchanged.
+//! A symbol travels as `Vec<u8>` wire bytes. The *exact decode path*
+//! ([`Compressor::unpack`]) is deterministic, so every honest replica
+//! of a chunk produces bit-identical wire bytes and detection/voting
+//! compare the packed representation directly. The optional *election
+//! decode path* ([`Compressor::unpack_election`], cf. Election Coding,
+//! arXiv 1910.06093) instead combines all replica wires of a chunk by
+//! per-symbol majority — a statistical-robustness decode measured in
+//! E13; it is never used for fault detection.
 
-/// A gradient compressor: deterministic encode + linear-enough decode.
-pub trait Compressor: Send + Sync {
-    fn name(&self) -> &'static str;
+use std::sync::Arc;
 
-    /// Encode a dense gradient into the compressed wire form.
-    fn encode(&self, grad: &[f32]) -> Vec<f32>;
+use crate::Result;
 
-    /// Decode back to a dense gradient of dimension `d`.
-    fn decode(&self, wire: &[f32], d: usize) -> Vec<f32>;
-
-    /// Wire size in f32 words for a d-dimensional gradient.
-    fn wire_len(&self, d: usize) -> usize;
-
-    /// Compression ratio (dense words / wire words).
-    fn ratio(&self, d: usize) -> f64 {
-        d as f64 / self.wire_len(d) as f64
+/// Parse a `--compress` CLI spec: `dense`, `sign`, or `topk:K`.
+pub fn parse(spec: &str) -> Result<Arc<dyn Compressor>> {
+    match spec {
+        "dense" => Ok(Arc::new(Dense)),
+        "sign" | "signsgd" => Ok(Arc::new(SignSgd)),
+        _ => {
+            let k = spec
+                .strip_prefix("topk:")
+                .and_then(|k| k.parse::<usize>().ok())
+                .filter(|&k| k > 0)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("bad --compress '{spec}': expected dense | sign | topk:K")
+                })?;
+            Ok(Arc::new(TopK { k }))
+        }
     }
 }
 
-/// Identity compressor (the default dense protocol).
+/// A gradient compressor: deterministic byte packing + exact decode.
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Pack a dense gradient into wire bytes.
+    fn pack(&self, grad: &[f32]) -> Vec<u8>;
+
+    /// Exact deterministic decode back to a dense gradient of
+    /// dimension `d` (the representative the master aggregates with).
+    fn unpack(&self, wire: &[u8], d: usize) -> Vec<f32>;
+
+    /// Wire size in bytes for a d-dimensional gradient.
+    fn wire_bytes(&self, d: usize) -> usize;
+
+    /// Compression ratio: dense bytes (4 per f32) / packed wire bytes.
+    fn ratio(&self, d: usize) -> f64 {
+        (4 * d) as f64 / self.wire_bytes(d).max(1) as f64
+    }
+
+    /// Election decode over the replica wires of one chunk (majority
+    /// per symbol where the format supports it). The default is the
+    /// exact decode of the first replica, which every format supports.
+    fn unpack_election(&self, wires: &[&[u8]], d: usize) -> Vec<f32> {
+        self.unpack(wires[0], d)
+    }
+}
+
+fn read_f32_le(b: &[u8]) -> f32 {
+    f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn read_u32_le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+/// Identity compressor: 4·d little-endian bytes (useful for measuring
+/// the wire accounting itself; runs without any compressor skip the
+/// packing entirely).
 pub struct Dense;
 
 impl Compressor for Dense {
@@ -41,23 +89,27 @@ impl Compressor for Dense {
         "dense"
     }
 
-    fn encode(&self, grad: &[f32]) -> Vec<f32> {
-        grad.to_vec()
+    fn pack(&self, grad: &[f32]) -> Vec<u8> {
+        let mut wire = Vec::with_capacity(4 * grad.len());
+        for v in grad {
+            wire.extend_from_slice(&v.to_le_bytes());
+        }
+        wire
     }
 
-    fn decode(&self, wire: &[f32], d: usize) -> Vec<f32> {
-        debug_assert_eq!(wire.len(), d);
-        wire.to_vec()
+    fn unpack(&self, wire: &[u8], d: usize) -> Vec<f32> {
+        debug_assert_eq!(wire.len(), 4 * d);
+        wire.chunks_exact(4).map(read_f32_le).collect()
     }
 
-    fn wire_len(&self, d: usize) -> usize {
-        d
+    fn wire_bytes(&self, d: usize) -> usize {
+        4 * d
     }
 }
 
-/// Magnitude top-k: wire = [idx_0, val_0, ..., idx_{k-1}, val_{k-1}],
-/// indices stored as f32 (exact for d < 2^24). Deterministic
-/// tie-breaking by index so honest replicas agree bit-for-bit.
+/// Magnitude top-k: wire = k × (u32 index, f32 value) little-endian
+/// pairs in ascending index order. Deterministic tie-breaking by index
+/// so honest replicas agree bit-for-bit.
 pub struct TopK {
     pub k: usize,
 }
@@ -67,7 +119,7 @@ impl Compressor for TopK {
         "topk"
     }
 
-    fn encode(&self, grad: &[f32]) -> Vec<f32> {
+    fn pack(&self, grad: &[f32]) -> Vec<u8> {
         let k = self.k.min(grad.len());
         let mut idx: Vec<usize> = (0..grad.len()).collect();
         // sort by |value| desc, index asc for determinism
@@ -80,39 +132,44 @@ impl Compressor for TopK {
         });
         let mut chosen: Vec<usize> = idx[..k].to_vec();
         chosen.sort_unstable(); // canonical order
-        let mut wire = Vec::with_capacity(2 * k);
+        let mut wire = Vec::with_capacity(8 * k);
         for i in chosen {
-            wire.push(i as f32);
-            wire.push(grad[i]);
+            wire.extend_from_slice(&(i as u32).to_le_bytes());
+            wire.extend_from_slice(&grad[i].to_le_bytes());
         }
         wire
     }
 
-    fn decode(&self, wire: &[f32], d: usize) -> Vec<f32> {
+    fn unpack(&self, wire: &[u8], d: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; d];
-        for pair in wire.chunks_exact(2) {
-            let i = pair[0] as usize;
+        for pair in wire.chunks_exact(8) {
+            let i = read_u32_le(&pair[0..4]) as usize;
             if i < d {
-                out[i] = pair[1];
+                out[i] = read_f32_le(&pair[4..8]);
             }
         }
         out
     }
 
-    fn wire_len(&self, d: usize) -> usize {
-        2 * self.k.min(d)
+    fn wire_bytes(&self, d: usize) -> usize {
+        8 * self.k.min(d)
     }
 }
 
-/// signSGD with norm scale: wire = [scale, sign bits packed 1/f32].
-/// (Packing stays f32-per-sign for pipeline uniformity; the *counted*
-/// communication uses 1 bit/coord + 1 word, reported by `wire_bits`.)
+/// signSGD with norm scale: wire = 4-byte scale (mean |g|, little
+/// endian) followed by ceil(d/32) little-endian u32 words packing one
+/// sign bit per coordinate (bit set ⟺ value ≥ 0). 4 + 4·ceil(d/32)
+/// bytes against 4·d dense — ~31× at d = 1024.
 pub struct SignSgd;
 
 impl SignSgd {
-    /// True wire cost in bits (what E11 reports).
-    pub fn wire_bits(d: usize) -> usize {
-        32 + d
+    fn scale_of(grad: &[f32]) -> f32 {
+        grad.iter().map(|v| v.abs()).sum::<f32>() / grad.len().max(1) as f32
+    }
+
+    fn sign_bit(wire: &[u8], i: usize) -> bool {
+        let word = read_u32_le(&wire[4 + 4 * (i / 32)..8 + 4 * (i / 32)]);
+        word & (1 << (i % 32)) != 0
     }
 }
 
@@ -121,22 +178,54 @@ impl Compressor for SignSgd {
         "signsgd"
     }
 
-    fn encode(&self, grad: &[f32]) -> Vec<f32> {
-        let scale = grad.iter().map(|v| v.abs()).sum::<f32>() / grad.len().max(1) as f32;
-        let mut wire = Vec::with_capacity(grad.len() + 1);
-        wire.push(scale);
-        wire.extend(grad.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }));
+    fn pack(&self, grad: &[f32]) -> Vec<u8> {
+        let words = grad.len().div_ceil(32);
+        let mut wire = Vec::with_capacity(4 + 4 * words);
+        wire.extend_from_slice(&Self::scale_of(grad).to_le_bytes());
+        for block in grad.chunks(32) {
+            let mut w = 0u32;
+            for (b, v) in block.iter().enumerate() {
+                if *v >= 0.0 {
+                    w |= 1 << b;
+                }
+            }
+            wire.extend_from_slice(&w.to_le_bytes());
+        }
         wire
     }
 
-    fn decode(&self, wire: &[f32], d: usize) -> Vec<f32> {
-        debug_assert_eq!(wire.len(), d + 1);
-        let scale = wire[0];
-        wire[1..].iter().map(|&s| s * scale).collect()
+    fn unpack(&self, wire: &[u8], d: usize) -> Vec<f32> {
+        debug_assert_eq!(wire.len(), self.wire_bytes(d));
+        let scale = read_f32_le(&wire[0..4]);
+        (0..d)
+            .map(|i| if Self::sign_bit(wire, i) { scale } else { -scale })
+            .collect()
     }
 
-    fn wire_len(&self, d: usize) -> usize {
-        d + 1
+    fn wire_bytes(&self, d: usize) -> usize {
+        4 + 4 * d.div_ceil(32)
+    }
+
+    /// Election decode: per-coordinate majority over the replica sign
+    /// bits (ties, only possible with an even replica count, fall to
+    /// negative) scaled by the median replica scale. With an honest
+    /// majority of replicas this recovers the honest signs even when a
+    /// minority lies — without any exact comparison.
+    fn unpack_election(&self, wires: &[&[u8]], d: usize) -> Vec<f32> {
+        debug_assert!(!wires.is_empty());
+        let mut scales: Vec<f32> = wires.iter().map(|w| read_f32_le(&w[0..4])).collect();
+        scales.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let scale = scales[scales.len() / 2];
+        (0..d)
+            .map(|i| {
+                let pos = wires.iter().filter(|w| Self::sign_bit(w, i)).count();
+                if 2 * pos > wires.len() {
+                    scale
+                } else {
+                    -scale
+                }
+            })
+            .collect()
     }
 }
 
@@ -150,7 +239,8 @@ mod tests {
         let mut rng = Pcg64::seeded(1);
         let g = rng.gauss_vec(64);
         let c = Dense;
-        assert_eq!(c.decode(&c.encode(&g), 64), g);
+        assert_eq!(c.unpack(&c.pack(&g), 64), g);
+        assert_eq!(c.wire_bytes(64), 256);
         assert_eq!(c.ratio(64), 1.0);
     }
 
@@ -158,19 +248,19 @@ mod tests {
     fn topk_keeps_largest_coordinates() {
         let g = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
         let c = TopK { k: 3 };
-        let back = c.decode(&c.encode(&g), 6);
+        let back = c.unpack(&c.pack(&g), 6);
         assert_eq!(back, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
-        assert_eq!(c.wire_len(6), 6);
-        assert!((c.ratio(1000) - 1000.0 / 6.0).abs() < 1e-9);
+        assert_eq!(c.wire_bytes(6), 24);
+        assert!((c.ratio(1000) - 4000.0 / 24.0).abs() < 1e-9);
     }
 
     #[test]
     fn topk_is_deterministic_under_ties() {
         let g = vec![1.0f32, -1.0, 1.0, -1.0];
         let c = TopK { k: 2 };
-        assert_eq!(c.encode(&g), c.encode(&g));
+        assert_eq!(c.pack(&g), c.pack(&g));
         // ties broken by lowest index
-        let back = c.decode(&c.encode(&g), 4);
+        let back = c.unpack(&c.pack(&g), 4);
         assert_eq!(back, vec![1.0, -1.0, 0.0, 0.0]);
     }
 
@@ -178,9 +268,42 @@ mod tests {
     fn signsgd_preserves_signs_and_mean_magnitude() {
         let g = vec![2.0f32, -4.0, 6.0, -8.0];
         let c = SignSgd;
-        let back = c.decode(&c.encode(&g), 4);
-        assert_eq!(back, vec![5.0, -5.0, 5.0, -5.0]); // scale = mean |g| = 5
-        assert_eq!(SignSgd::wire_bits(1024), 32 + 1024);
+        let wire = c.pack(&g);
+        assert_eq!(wire.len(), 8); // scale word + one sign word
+        assert_eq!(c.unpack(&wire, 4), vec![5.0, -5.0, 5.0, -5.0]); // scale = mean |g| = 5
+        // honest accounting: 4 + 4*ceil(d/32) bytes, ~31x at d = 1024
+        assert_eq!(c.wire_bytes(1024), 4 + 128);
+        assert!(c.ratio(1024) > 16.0, "ratio {}", c.ratio(1024));
+    }
+
+    #[test]
+    fn signsgd_packs_across_word_boundaries() {
+        // d = 37 spans two sign words; every sign must survive
+        let mut rng = Pcg64::seeded(7);
+        let g = rng.gauss_vec(37);
+        let c = SignSgd;
+        assert_eq!(c.wire_bytes(37), 4 + 8);
+        let back = c.unpack(&c.pack(&g), 37);
+        for (v, b) in g.iter().zip(&back) {
+            assert_eq!(*v >= 0.0, *b >= 0.0, "sign lost at {v} -> {b}");
+        }
+    }
+
+    #[test]
+    fn signsgd_election_majority_overrides_minority_liar() {
+        let g = vec![2.0f32, -4.0, 6.0, -8.0];
+        let c = SignSgd;
+        let honest = c.pack(&g);
+        let mut flipped = g.clone();
+        for v in flipped.iter_mut() {
+            *v = -*v;
+        }
+        let lie = c.pack(&flipped);
+        let wires: Vec<&[u8]> = vec![&honest, &lie, &honest];
+        let elected = c.unpack_election(&wires, 4);
+        assert_eq!(elected, c.unpack(&honest, 4), "2-of-3 honest majority must win");
+        // single wire: election decode degenerates to the exact decode
+        assert_eq!(c.unpack_election(&[&honest], 4), c.unpack(&honest, 4));
     }
 
     #[test]
@@ -191,25 +314,34 @@ mod tests {
         let comps: Vec<Box<dyn Compressor>> =
             vec![Box::new(Dense), Box::new(TopK { k: 16 }), Box::new(SignSgd)];
         for c in comps {
-            assert_eq!(c.encode(&g), c.encode(&g), "{} nondeterministic", c.name());
+            assert_eq!(c.pack(&g), c.pack(&g), "{} nondeterministic", c.name());
         }
+    }
+
+    #[test]
+    fn parse_cli_specs() {
+        assert_eq!(parse("dense").unwrap().name(), "dense");
+        assert_eq!(parse("sign").unwrap().name(), "signsgd");
+        let c = parse("topk:16").unwrap();
+        assert_eq!(c.name(), "topk");
+        assert_eq!(c.wire_bytes(1024), 8 * 16);
+        assert!(parse("topk:0").is_err());
+        assert!(parse("gzip").is_err());
     }
 
     #[test]
     fn tampered_wire_differs() {
         let mut rng = Pcg64::seeded(3);
         let g = rng.gauss_vec(128);
-        let mut g2 = g.clone();
-        g2[7] += 0.5;
         for c in [&TopK { k: 16 } as &dyn Compressor, &SignSgd] {
             // not guaranteed for every perturbation (compression is lossy),
             // but a sign-visible, magnitude-visible change must show
-            let w1 = c.encode(&g);
+            let w1 = c.pack(&g);
             let mut g3 = g.clone();
             for v in g3.iter_mut() {
                 *v = -*v; // sign flip attack
             }
-            let w3 = c.encode(&g3);
+            let w3 = c.pack(&g3);
             assert_ne!(w1, w3, "{} hides a sign-flip", c.name());
         }
     }

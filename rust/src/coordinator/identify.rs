@@ -6,7 +6,7 @@
 
 use std::collections::HashMap;
 
-use super::codes::{grad_key, SymbolCopy};
+use super::codes::{copy_key, SymbolCopy};
 use super::{WorkerId, MASTER_SENTINEL};
 
 /// Outcome of a majority vote on one chunk.
@@ -15,6 +15,8 @@ pub struct VoteOutcome {
     /// The recovered true gradient and loss.
     pub grad: Vec<f32>,
     pub loss: f32,
+    /// Wire bytes of the recovered symbol (compressed runs only).
+    pub wire: Option<Vec<u8>>,
     /// Owners whose copy differed from the majority — identified
     /// Byzantine workers.
     pub liars: Vec<WorkerId>,
@@ -42,9 +44,11 @@ pub fn majority_vote(copies: &[SymbolCopy], f_t: usize) -> Option<VoteOutcome> {
         },
         "duplicate workers in vote"
     );
-    // group by exact gradient bits; hash each copy once (perf: the
-    // hash dominates at large d, see EXPERIMENTS.md §Perf)
-    let keys: Vec<u64> = copies.iter().map(|c| grad_key(&c.grad, c.loss)).collect();
+    // group by exact symbol bits — packed wire bytes when the symbol
+    // travelled compressed, dense gradient bits otherwise; hash each
+    // copy once (perf: the hash dominates at large d, see
+    // EXPERIMENTS.md §Perf)
+    let keys: Vec<u64> = copies.iter().map(copy_key).collect();
     let mut groups: HashMap<u64, Vec<usize>> = HashMap::with_capacity(copies.len());
     for (i, &k) in keys.iter().enumerate() {
         groups.entry(k).or_default().push(i);
@@ -59,6 +63,7 @@ pub fn majority_vote(copies: &[SymbolCopy], f_t: usize) -> Option<VoteOutcome> {
     Some(VoteOutcome {
         grad: copies[majority_idx].grad.clone(),
         loss: copies[majority_idx].loss,
+        wire: copies[majority_idx].wire.clone(),
         // the master's own copies (MASTER_SENTINEL) are trusted by
         // definition and can never be named liars — defensive: the
         // protocol should not mix sentinel copies into votes, but a
@@ -77,7 +82,7 @@ mod tests {
     use super::*;
 
     fn sym(w: WorkerId, g: Vec<f32>) -> SymbolCopy {
-        SymbolCopy { worker: w, grad: g, loss: 1.0 }
+        SymbolCopy { worker: w, grad: g, loss: 1.0, wire: None }
     }
 
     #[test]
@@ -180,12 +185,34 @@ mod tests {
         // same gradient but lying about the loss is still a lie
         let g = vec![1.0f32];
         let copies = vec![
-            SymbolCopy { worker: 0, grad: g.clone(), loss: 1.0 },
-            SymbolCopy { worker: 1, grad: g.clone(), loss: 99.0 },
-            SymbolCopy { worker: 2, grad: g.clone(), loss: 1.0 },
+            SymbolCopy { worker: 0, grad: g.clone(), loss: 1.0, wire: None },
+            SymbolCopy { worker: 1, grad: g.clone(), loss: 99.0, wire: None },
+            SymbolCopy { worker: 2, grad: g.clone(), loss: 1.0, wire: None },
         ];
         let out = majority_vote(&copies, 1).unwrap();
         assert_eq!(out.liars, vec![1]);
         assert_eq!(out.loss, 1.0);
+    }
+
+    #[test]
+    fn compressed_copies_vote_on_wire_bytes() {
+        // identical dense caches but a tampered wire: the vote must
+        // group on the packed representation and catch the liar
+        let g = vec![1.0f32, -1.0];
+        let wired = |w: WorkerId, wire: Vec<u8>| SymbolCopy {
+            worker: w,
+            grad: g.clone(),
+            loss: 1.0,
+            wire: Some(wire),
+        };
+        let honest = vec![0xAB, 0xCD];
+        let copies = vec![
+            wired(0, honest.clone()),
+            wired(1, vec![0xAB, 0xCE]), // liar: wire differs
+            wired(2, honest.clone()),
+        ];
+        let out = majority_vote(&copies, 1).unwrap();
+        assert_eq!(out.liars, vec![1]);
+        assert_eq!(out.wire.as_deref(), Some(&honest[..]));
     }
 }

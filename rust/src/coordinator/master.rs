@@ -2,11 +2,18 @@
 //!
 //! After the transport/protocol refactor this layer is small by
 //! design: it builds the cluster (choosing a [`Transport`] from the
-//! config), hands each iteration to
-//! [`super::protocol::ProtocolCore::run_round`] (which owns the
-//! proactive → detection → reactive phase machine), then aggregates
-//! the per-chunk gradients into a **reused** buffer, applies the SGD
-//! step through the gradient engine, and records metrics/events.
+//! config), drives each iteration through the protocol core's
+//! begin → collect → finish phases (which own the proactive →
+//! detection → reactive machine), then aggregates the per-chunk
+//! gradients into a **reused** buffer, applies the SGD step through
+//! the gradient engine, and records metrics/events.
+//!
+//! With `--pipeline DEPTH ≥ 2` the single-core driver software-
+//! pipelines rounds: iteration t+1's proactive wave is launched on a
+//! *provisional* θ computed from iteration t's pre-audit symbols, and
+//! is reissued on the exact θ only when round t's audit changed the
+//! update (caught a liar, or a filter/vote correction). θ application
+//! stays strictly ordered; fault-free rounds overlap fully.
 //!
 //! See [`super::protocol`] for the protocol semantics and the
 //! exactness argument, and [`super::transport`] for the execution
@@ -20,7 +27,7 @@ use super::compress::Compressor;
 use super::events::{Event, EventLog};
 use super::metrics::{IterationRecord, TrainMetrics};
 use super::policy::FaultCheckPolicy;
-use super::protocol::{ProtocolConfig, ProtocolCore};
+use super::protocol::{ProtocolConfig, ProtocolCore, RoundState};
 use super::shard::{ParameterServer, ShardPlan, ShardedTransport};
 use super::transport::{
     AdversaryWiring, LatencyModel, SimTransport, ThreadedTransport, Transport,
@@ -49,9 +56,14 @@ pub struct MasterOptions {
     /// assume. Never used in production runs.
     pub no_eliminate: bool,
     /// §2.1/§5: workers send compressed symbols; detection and voting
-    /// operate on the compressed wire form, the master decompresses for
-    /// aggregation. None = dense protocol.
+    /// operate on the packed wire bytes, the master aggregates the
+    /// exact decode. None = dense protocol.
     pub compressor: Option<Arc<dyn Compressor>>,
+    /// Election decode (cf. Election Coding): aggregate each chunk by
+    /// per-symbol majority over its replica wires instead of the exact
+    /// decode of the chosen copy. A statistical-robustness measurement
+    /// mode (E13) — detection/identification still run on exact wires.
+    pub election: bool,
     /// §5 hybrid generalization: in *unaudited* iterations aggregate the
     /// per-chunk gradients through a lightweight gradient filter instead
     /// of the plain mean, bounding the damage of un-audited tampering.
@@ -69,6 +81,7 @@ impl Default for MasterOptions {
             w_star: None,
             no_eliminate: false,
             compressor: None,
+            election: false,
             unaudited_filter: None,
             sim: super::transport::SimConfig::default(),
         }
@@ -203,8 +216,8 @@ impl Master {
         chunk_size: usize,
     ) -> Result<Master> {
         anyhow::ensure!(
-            opts.compressor.is_none() && opts.unaudited_filter.is_none(),
-            "sharded runs do not support compressed symbols or unaudited filters yet"
+            opts.unaudited_filter.is_none() && !opts.election,
+            "sharded runs do not support unaudited filters or election decode yet"
         );
         anyhow::ensure!(chunk_size > 0, "chunk_size must be positive");
         let plan = ShardPlan::build(
@@ -243,6 +256,8 @@ impl Master {
             self_check: opts.self_check,
             tol: opts.tol,
             no_eliminate: opts.no_eliminate,
+            compressor: opts.compressor.clone(),
+            pipeline: cfg.cluster.pipeline,
             latency_us: cfg.cluster.latency_us,
             sim: opts.sim.clone(),
             adversary: controller,
@@ -257,6 +272,8 @@ impl Master {
             cfg.train.lr,
             cfg.cluster.seed,
             opts.w_star.clone(),
+            cfg.train.steps as u64,
+            cfg.cluster.pipeline,
         )?;
         let d = engine.param_dim();
         Ok(Master {
@@ -317,6 +334,7 @@ impl Master {
                 no_eliminate: opts.no_eliminate,
                 compressor: opts.compressor.clone(),
                 gather: cfg.cluster.gather,
+                pipeline: cfg.cluster.pipeline,
             },
         );
         let d = engine.param_dim();
@@ -339,16 +357,20 @@ impl Master {
         let mut events = EventLog::default();
         let steps = self.cfg.train.steps;
         let sharded = matches!(self.backend, Backend::Sharded(_));
-        for t in 0..steps as u64 {
-            let rec = if sharded {
-                match &mut self.backend {
-                    Backend::Sharded(ps) => ps.run_round(t, &mut events)?,
-                    Backend::Single(_) => unreachable!(),
-                }
-            } else {
-                self.iteration(t, &mut events)?
-            };
-            metrics.push(rec);
+        if !sharded && self.cfg.cluster.pipeline.max(1) > 1 {
+            self.run_pipelined(steps as u64, &mut metrics, &mut events)?;
+        } else {
+            for t in 0..steps as u64 {
+                let rec = if sharded {
+                    match &mut self.backend {
+                        Backend::Sharded(ps) => ps.run_round(t, &mut events)?,
+                        Backend::Single(_) => unreachable!(),
+                    }
+                } else {
+                    self.iteration(t, &mut events)?
+                };
+                metrics.push(rec);
+            }
         }
         let (theta, eliminated, crashed) = match self.backend {
             Backend::Single(core) => {
@@ -360,28 +382,123 @@ impl Master {
         Ok(TrainOutcome { theta, metrics, events, eliminated, crashed })
     }
 
-    /// One full single-core protocol iteration: delegate the phases to
-    /// the core, then aggregate + update.
+    fn core_mut(&mut self) -> &mut ProtocolCore {
+        match &mut self.backend {
+            Backend::Single(core) => core,
+            Backend::Sharded(_) => unreachable!("sharded rounds go through the parameter server"),
+        }
+    }
+
+    /// One full single-core protocol iteration (unpipelined):
+    /// begin → collect → finish back-to-back, then aggregate + update.
     fn iteration(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
         let t0 = Instant::now();
+        let dataset = self.dataset.clone();
+        let theta = Arc::new(self.theta.clone());
+        self.core_mut().begin_round_sampled(t, &theta, dataset.as_ref())?;
+        self.core_mut().collect_proactive(t, &theta, dataset.as_ref(), events)?;
+        self.apply_finished_round(t, &theta, t0, events)
+    }
+
+    /// Software-pipelined single-core driver (`--pipeline DEPTH ≥ 2`).
+    ///
+    /// Per iteration t: collect t's proactive wave, compute a
+    /// *provisional* θ' from the pre-audit symbols and launch t+1's
+    /// wave on it, then finish t (detection/reactive audit) and apply
+    /// the exact update. If the audit changed anything — a liar was
+    /// identified, or the exact θ differs bit-wise from θ' — the
+    /// speculative wave is invalidated and reissued on the exact θ;
+    /// otherwise θ' *was* exact and the overlapped wave stands. θ thus
+    /// applies in strict iteration order at any depth.
+    fn run_pipelined(
+        &mut self,
+        steps: u64,
+        metrics: &mut TrainMetrics,
+        events: &mut EventLog,
+    ) -> Result<()> {
+        if steps == 0 {
+            return Ok(());
+        }
+        let dataset = self.dataset.clone();
+        let engine = self.engine.clone();
+        let d = engine.param_dim();
+        let n = self.cfg.cluster.n;
+        let lr = self.cfg.train.lr;
+        let mut agg_prov = vec![0.0f32; d];
+        // prime the pipeline: round 0 runs on the real θ
+        let mut theta_t = Arc::new(self.theta.clone());
+        self.core_mut().begin_round_sampled(0, &theta_t, dataset.as_ref())?;
+        for t in 0..steps {
+            let t0 = Instant::now();
+            self.core_mut().collect_proactive(t, &theta_t, dataset.as_ref(), events)?;
+
+            // speculate: provisional θ' from t's pre-audit symbols
+            // (never trusting an audit that has not happened — the
+            // provisional aggregate uses the unaudited ruleset)
+            let mut speculative = None;
+            if t + 1 < steps {
+                {
+                    let core = match &self.backend {
+                        Backend::Single(core) => core,
+                        Backend::Sharded(_) => unreachable!(),
+                    };
+                    let round = core.pending_round(t).expect("collected above");
+                    Self::aggregate_round(&mut agg_prov, round, false, core.f_t(), n, d, &self.opts);
+                }
+                let mut prov = self.theta.clone();
+                engine.sgd_step(&mut prov, &agg_prov, lr)?;
+                let prov = Arc::new(prov);
+                self.core_mut().begin_round_sampled(t + 1, &prov, dataset.as_ref())?;
+                speculative = Some(prov);
+            }
+
+            // retire round t: audit, vote, eliminate, exact update
+            let rec = self.apply_finished_round(t, &theta_t, t0, events)?;
+            let caught_liar = rec.identified > 0;
+            metrics.push(rec);
+
+            // ordered θ application: reissue t+1 on the exact θ iff
+            // the speculation was wrong (fault-free rounds keep their
+            // overlapped wave untouched)
+            if let Some(prov) = speculative {
+                if caught_liar || prov.as_slice() != self.theta.as_slice() {
+                    let exact = Arc::new(self.theta.clone());
+                    self.core_mut().reissue_round(t + 1, &exact, dataset.as_ref())?;
+                    theta_t = exact;
+                } else {
+                    theta_t = prov;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Finish iteration `t` in the core (detection/reactive audit),
+    /// aggregate the chosen symbols, apply the SGD step, and build the
+    /// metrics record. Shared by the sequential and pipelined drivers;
+    /// `theta` must be the θ the round's surviving proactive wave was
+    /// issued on, so audit recomputations compare like with like.
+    fn apply_finished_round(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        t0: Instant,
+        events: &mut EventLog,
+    ) -> Result<IterationRecord> {
+        let dataset = self.dataset.clone();
+        let engine = self.engine.clone();
+        let d = engine.param_dim();
+        let n = self.cfg.cluster.n;
         let core = match &mut self.backend {
             Backend::Single(core) => core,
             Backend::Sharded(_) => unreachable!("sharded rounds go through the parameter server"),
         };
         let f_t = core.f_t();
-        let theta = Arc::new(self.theta.clone());
-        let out = core.run_round(
-            t,
-            &theta,
-            self.dataset.as_ref(),
-            self.engine.as_ref(),
-            events,
-        )?;
+        let out = core.finish_round(t, theta, dataset.as_ref(), engine.as_ref(), events)?;
 
         // ---- aggregate + update ----------------------------------------
         let round = core.round();
         let nchunks = round.nchunks();
-        let d = self.engine.param_dim();
         let mut oracle_faulty = false;
         self.used_losses.clear();
         for c in 0..nchunks {
@@ -393,41 +510,11 @@ impl Master {
                 oracle_faulty = true;
             }
         }
-        let needs_dense_copies = self.opts.compressor.is_some()
-            || (self.opts.unaudited_filter.is_some() && !out.audited);
-        if needs_dense_copies {
-            let chunk_values: Vec<Vec<f32>> = (0..nchunks)
-                .map(|c| match &self.opts.compressor {
-                    Some(comp) => comp.decode(&round.chosen(c).grad, d),
-                    None => round.chosen(c).grad.clone(),
-                })
-                .collect();
-            match (&self.opts.unaudited_filter, out.audited) {
-                // hybrid mode (§5): filter the un-audited aggregation
-                (Some(filter), false) => self.agg = filter.aggregate(&chunk_values, f_t),
-                _ => {
-                    self.agg.fill(0.0);
-                    for v in &chunk_values {
-                        crate::linalg::axpy(1.0 / nchunks as f32, v, &mut self.agg);
-                    }
-                }
-            }
-        } else {
-            // dense path: the same fixed-shape worker-id-slotted tree
-            // sum the sharded parameter server uses, so a K = 1 run is
-            // bit-identical to a sharded one (see `coordinator::shard`)
-            let mut leaves: Vec<Option<&[f32]>> = vec![None; self.cfg.cluster.n];
-            for c in 0..nchunks {
-                leaves[round.assignment.owners[c][0]] = Some(&round.chosen(c).grad);
-            }
-            self.agg = crate::linalg::tree_sum(&leaves).expect("at least one chunk");
-            crate::linalg::scale(1.0 / nchunks as f32, &mut self.agg);
-        }
+        Self::aggregate_round(&mut self.agg, round, out.audited, f_t, n, d, &self.opts);
         if oracle_faulty {
             events.push(Event::OracleFaultyUpdate { iter: t });
         }
-        self.engine
-            .sgd_step(&mut self.theta, &self.agg, self.cfg.train.lr)?;
+        engine.sgd_step(&mut self.theta, &self.agg, self.cfg.train.lr)?;
 
         // ---- metrics -----------------------------------------------------
         let round = core.round();
@@ -457,10 +544,76 @@ impl Master {
                 .map(|w| crate::linalg::dist2(&self.theta, w)),
             wall_ns: t0.elapsed().as_nanos() as u64,
             round_ns: out.round_ns,
+            bytes_round: out.bytes_round,
+            pipeline_depth: self.cfg.cluster.pipeline.max(1),
             stragglers: out.stragglers_now.len(),
             audited_chunks: out.audited_chunks,
             suspicion: core.policy().suspicion_nonzero(),
             shard_stats: Vec::new(),
         })
+    }
+
+    /// Aggregate the round's chosen per-chunk gradients into `agg`
+    /// under the configured ruleset. `audited` gates the §5 hybrid
+    /// filter; the pipelined driver also calls this with
+    /// `audited = false` to form the provisional update that seeds the
+    /// next round's speculative wave.
+    fn aggregate_round(
+        agg: &mut Vec<f32>,
+        round: &RoundState,
+        audited: bool,
+        f_t: usize,
+        n: usize,
+        d: usize,
+        opts: &MasterOptions,
+    ) {
+        let nchunks = round.nchunks();
+        let needs_dense_copies =
+            opts.compressor.is_some() || (opts.unaudited_filter.is_some() && !audited);
+        if needs_dense_copies {
+            // per-chunk clone + axpy keeps the legacy summation order
+            // of the compressed path
+            let chunk_values: Vec<Vec<f32>> = (0..nchunks)
+                .map(|c| match &opts.compressor {
+                    // election decode (E13): per-symbol majority across
+                    // every replica wire of the chunk
+                    Some(comp) if opts.election => {
+                        let wires: Vec<&[u8]> = round.chunks[c]
+                            .copies
+                            .iter()
+                            .filter_map(|s| s.wire.as_deref())
+                            .collect();
+                        if wires.is_empty() {
+                            round.chosen(c).grad.clone()
+                        } else {
+                            comp.unpack_election(&wires, d)
+                        }
+                    }
+                    // exact decode: symbols already carry the dense
+                    // unpack of their wire bytes
+                    _ => round.chosen(c).grad.clone(),
+                })
+                .collect();
+            match (&opts.unaudited_filter, audited) {
+                // hybrid mode (§5): filter the un-audited aggregation
+                (Some(filter), false) => *agg = filter.aggregate(&chunk_values, f_t),
+                _ => {
+                    agg.fill(0.0);
+                    for v in &chunk_values {
+                        crate::linalg::axpy(1.0 / nchunks as f32, v, agg);
+                    }
+                }
+            }
+        } else {
+            // dense path: the same fixed-shape worker-id-slotted tree
+            // sum the sharded parameter server uses, so a K = 1 run is
+            // bit-identical to a sharded one (see `coordinator::shard`)
+            let mut leaves: Vec<Option<&[f32]>> = vec![None; n];
+            for c in 0..nchunks {
+                leaves[round.assignment.owners[c][0]] = Some(&round.chosen(c).grad);
+            }
+            *agg = crate::linalg::tree_sum(&leaves).expect("at least one chunk");
+            crate::linalg::scale(1.0 / nchunks as f32, agg);
+        }
     }
 }

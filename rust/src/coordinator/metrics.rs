@@ -32,6 +32,9 @@ pub struct ShardStat {
     /// Shard round duration on the shard transport's clock (virtual
     /// under sim, wall-clock under threaded).
     pub round_ns: u64,
+    /// Honest wire bytes the shard's round moved (see
+    /// `IterationRecord::bytes_round`).
+    pub bytes: u64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -66,6 +69,15 @@ pub struct IterationRecord {
     /// upper bound for threaded shards, whose wall-clocks also tick
     /// while earlier shards' completions run on the caller's thread.
     pub round_ns: u64,
+    /// Honest wire bytes moved this iteration: the sum over delivered
+    /// (untampered) symbol copies of their packed wire size — packed
+    /// bytes under `--compress sign|topk:K`, dense `4·d` otherwise.
+    /// Adversarial corruption does not change what honest workers
+    /// would send, so tampered copies count at the same size.
+    pub bytes_round: u64,
+    /// Round pipeline depth the run was configured with
+    /// (`cluster.pipeline`); 1 = strictly sequential rounds.
+    pub pipeline_depth: usize,
     /// Workers the proactive gather abandoned this iteration (they
     /// rejoin next round; see `Event::StragglerAbandoned`).
     pub stragglers: usize,
@@ -182,7 +194,7 @@ impl TrainMetrics {
     /// in `docs/METRICS.md`.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,stragglers,faulty_update,dist_to_opt,round_time,shards,audited_chunks,suspicion\n",
+            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,stragglers,faulty_update,dist_to_opt,round_time,shards,audited_chunks,suspicion,bytes_round,pipeline_depth\n",
         );
         for r in &self.iterations {
             let suspicion = r
@@ -192,7 +204,7 @@ impl TrainMetrics {
                 .collect::<Vec<_>>()
                 .join(";");
             s.push_str(&format!(
-                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.iter,
                 r.loss,
                 r.efficiency(),
@@ -211,6 +223,8 @@ impl TrainMetrics {
                 r.shard_stats.len(), // 0 = single-master run
                 r.audited_chunks,
                 suspicion,
+                r.bytes_round,
+                r.pipeline_depth,
             ));
         }
         s
@@ -257,7 +271,11 @@ mod tests {
         let csv = m.to_csv();
         assert!(csv.starts_with("iter,loss"));
         assert!(csv.lines().next().unwrap().contains("round_time"));
-        assert!(csv.lines().next().unwrap().ends_with("audited_chunks,suspicion"));
+        assert!(csv
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("audited_chunks,suspicion,bytes_round,pipeline_depth"));
         assert_eq!(csv.lines().count(), 2);
         // every row has as many cells as the header
         let cols = csv.lines().next().unwrap().split(',').count();
@@ -270,15 +288,17 @@ mod tests {
         let mut r = rec(1, 1, false);
         r.suspicion = vec![(3, 0.5), (7, 1.0)];
         r.audited_chunks = 2;
+        r.bytes_round = 512;
+        r.pipeline_depth = 2;
         m.push(r);
         let csv = m.to_csv();
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",2,3:0.500;7:1.000"), "row: {row}");
+        assert!(row.ends_with(",2,3:0.500;7:1.000,512,2"), "row: {row}");
         assert_eq!(m.top_suspect(), Some((7, 1.0)));
-        // empty suspicion: empty trailing cell, no phantom suspect
+        // empty suspicion: empty cell, no phantom suspect
         let mut m = TrainMetrics::default();
         m.push(rec(1, 1, false));
-        assert!(m.to_csv().lines().nth(1).unwrap().ends_with(",0,"));
+        assert!(m.to_csv().lines().nth(1).unwrap().ends_with(",0,,0,0"));
         assert_eq!(m.top_suspect(), None);
     }
 

@@ -34,9 +34,19 @@
 //!    liars. Delivery timestamps are folded into per-worker
 //!    [`latency`] profiles whose fused suspicion scores drive the
 //!    `latency-selective` audit policy and the suspicion-ranked audit
-//!    re-replication. `begin_round`/`complete_round` split the round
-//!    so the sharded layer can put every shard's wave in flight
-//!    before waiting on any.
+//!    re-replication. The round is split into
+//!    `begin_round` → `collect_proactive` → `finish_round` so the
+//!    sharded layer can put every shard's wave in flight before
+//!    waiting on any, and so a pipelined driver (`cluster.pipeline`
+//!    ≥ 2) can begin iteration t+1 on a **provisional θ** — the SGD
+//!    step off round t's pre-audit aggregate — while t's
+//!    detection/reactive waves are still in flight. θ is *applied* in
+//!    strict iteration order: if finishing round t catches a liar or
+//!    otherwise changes θ away from the speculation, t+1's wave is
+//!    retired by wave id (late deliveries are dropped, never
+//!    ingested) and reissued on the exact θ, so pipelining never
+//!    changes values — fault-free rounds overlap fully and a depth-D
+//!    run stays bit-identical to the sequential one.
 //! 4. **Transport** — [`transport::Transport`]: a completion-driven
 //!    submit/poll channel to the workers. `submit` queues a wave
 //!    without waiting; `poll` returns timestamped

@@ -42,11 +42,28 @@
 //! wait for every requested copy, and crash-stops arrive in-band as
 //! [`super::transport::Delivery::Failed`].
 //!
-//! A round can also be split across [`ProtocolCore::begin_round`] /
-//! [`ProtocolCore::complete_round`]: `begin_round` submits the
-//! proactive wave and returns immediately, so a caller driving many
-//! cores (the sharded parameter server) can put every shard's wave in
-//! flight before waiting on any of them.
+//! ## Pipelined rounds
+//!
+//! A round is split across [`ProtocolCore::begin_round`] /
+//! [`ProtocolCore::collect_proactive`] / [`ProtocolCore::finish_round`]
+//! (with [`ProtocolCore::complete_round`] = collect + finish), and the
+//! core holds a bounded ring of [`PendingRound`]s (capacity
+//! [`ProtocolConfig::pipeline`]): iteration t+1's proactive wave can be
+//! submitted — on a *provisional* θ — while iteration t's detection and
+//! reactive waves are still in flight. Every `Transport::submit` gets a
+//! fresh monotone *wave id*, echoed in each response, and `wait_wave`
+//! routes deliveries by it: deliveries of another still-live wave are
+//! buffered in a mailbox; deliveries of a dead wave (an abandoned
+//! straggler's, or a provisional wave invalidated by
+//! [`ProtocolCore::reissue_round`]) are dropped, never ingested. θ
+//! application stays strictly ordered: the driver finishes round t,
+//! and only if t changed θ (a liar was caught, or the audit corrected
+//! the provisional aggregate) re-issues round t+1's wave on the exact
+//! θ; fault-free rounds overlap fully. At `pipeline = 1` the ring
+//! holds one round and behaviour is bit-identical to the unpipelined
+//! core. A caller driving many cores (the sharded parameter server)
+//! uses the same split to put every shard's wave in flight before
+//! waiting on any of them.
 //!
 //! Every symbol, regardless of phase, enters the round through the
 //! single ingest path [`RoundState::ingest`] — the three copy-pasted
@@ -165,6 +182,10 @@ pub struct RoundState {
     /// Oracle bookkeeping (metrics only): which workers sent a
     /// tampered copy of each chunk.
     pub tampered_by_chunk: Vec<Vec<WorkerId>>,
+    /// Wire bytes ingested this round: packed bytes when symbols carry
+    /// a wire, 4 bytes per f32 for dense symbols. Master self-check
+    /// copies are local and not counted.
+    pub bytes: u64,
 }
 
 impl RoundState {
@@ -181,6 +202,7 @@ impl RoundState {
             v.clear();
         }
         self.tampered_by_chunk.resize_with(nchunks, Vec::new);
+        self.bytes = 0;
     }
 
     pub fn nchunks(&self) -> usize {
@@ -192,12 +214,16 @@ impl RoundState {
     pub fn ingest(&mut self, responses: Vec<Response>) {
         for resp in responses {
             let worker = resp.worker;
-            for Symbol { chunk, grad, loss, tampered } in resp.symbols {
+            for Symbol { chunk, grad, loss, tampered, wire } in resp.symbols {
                 if tampered {
                     self.tampered_by_chunk[chunk].push(worker);
                 }
+                self.bytes += wire
+                    .as_ref()
+                    .map(|w| w.len() as u64)
+                    .unwrap_or(4 * grad.len() as u64);
                 let state = &mut self.chunks[chunk];
-                state.copies.push(SymbolCopy { worker, grad, loss });
+                state.copies.push(SymbolCopy { worker, grad, loss, wire });
                 state.computed_copies += 1;
             }
         }
@@ -248,6 +274,9 @@ pub struct ProtocolConfig {
     /// When the initial proactive wave may stop waiting (detection and
     /// reactive waves always wait for every requested copy).
     pub gather: GatherPolicy,
+    /// Pipeline depth: how many rounds may be in flight at once (>= 1;
+    /// 1 = the classic one-round-at-a-time protocol).
+    pub pipeline: usize,
 }
 
 /// What one round did (the master turns this into an
@@ -268,13 +297,23 @@ pub struct RoundOutcome {
     /// (they rejoin next round; a straggle is not a crash).
     pub stragglers_now: Vec<WorkerId>,
     /// Duration of the round on the transport clock: virtual time
-    /// under sim, wall-clock under threaded.
+    /// under sim, wall-clock under threaded. Under pipelining this is
+    /// the round's *exclusive* span — measured from the later of its
+    /// own submit and the previous round's finish — so per-round times
+    /// still sum to the run's span instead of double-counting overlap.
     pub round_ns: u64,
+    /// Wire bytes moved worker → master this round (packed bytes under
+    /// a compressor, 4 per f32 dense).
+    pub bytes_round: u64,
 }
 
-/// A proactive wave in flight between [`ProtocolCore::begin_round`]
-/// and [`ProtocolCore::complete_round`].
+/// One slot of the pipeline ring: a round between
+/// [`ProtocolCore::begin_round`] and [`ProtocolCore::finish_round`].
 struct PendingRound {
+    iter: u64,
+    /// Wave id of the round's proactive submit (deliveries are routed
+    /// by it; a reissue retires the old wave and allocates a new one).
+    wave: u64,
     round: RoundState,
     /// Workers the wave submitted to and is still owed a delivery by.
     outstanding: Vec<WorkerId>,
@@ -284,6 +323,13 @@ struct PendingRound {
     f_t: usize,
     /// Data points sampled for the round (m).
     m: u64,
+    /// Has the proactive wave been gathered yet? A round may only be
+    /// reissued before, and finished after.
+    collected: bool,
+    /// Crashes and abandonments observed while gathering this round's
+    /// proactive wave (stashed between collect and finish).
+    crashed_now: Vec<WorkerId>,
+    stragglers_now: Vec<WorkerId>,
 }
 
 /// The phase-driven protocol state machine. Owns the transport, the
@@ -305,7 +351,21 @@ pub struct ProtocolCore {
     crashed: Vec<WorkerId>,
     cfg: ProtocolConfig,
     round: RoundState,
-    pending: Option<PendingRound>,
+    /// Pipeline ring of in-flight rounds, oldest first (capacity
+    /// `cfg.pipeline`).
+    pending: Vec<PendingRound>,
+    /// Next wave id (monotone; one per transport submit).
+    next_wave: u64,
+    /// Waves whose deliveries are still wanted: the uncollected
+    /// proactive waves of the ring plus the wave currently being
+    /// waited on. Anything else is dropped on arrival.
+    live_waves: Vec<u64>,
+    /// Deliveries of a live wave that arrived while a *different* wave
+    /// was being waited on, held until their wave is waited.
+    mailbox: Vec<(u64, Response)>,
+    /// Transport clock when the last round finished (exclusive
+    /// `round_ns` accounting under pipelining).
+    last_round_end_ns: u64,
     loss_scratch: Vec<f64>,
     /// Consecutive proactive-wave abandonments per worker (reset by any
     /// fresh delivery); >= [`ABANDON_STREAK`] marks a chronic straggler
@@ -332,7 +392,11 @@ impl ProtocolCore {
             crashed: Vec::new(),
             cfg,
             round: RoundState::default(),
-            pending: None,
+            pending: Vec::new(),
+            next_wave: 0,
+            live_waves: Vec::new(),
+            mailbox: Vec::new(),
+            last_round_end_ns: 0,
             loss_scratch: Vec::new(),
             abandon_streak: vec![0; n],
             tap: None,
@@ -396,12 +460,26 @@ impl ProtocolCore {
         engine: &dyn GradientComputer,
         events: &mut EventLog,
     ) -> Result<RoundOutcome> {
+        self.begin_round_sampled(t, theta, dataset)?;
+        self.complete_round(t, theta, dataset, engine, events)
+    }
+
+    /// Sample this round's m data points from the protocol's own
+    /// stream and submit the proactive wave without waiting. Sampling
+    /// happens at begin time, so the sample stream stays in iteration
+    /// order at any pipeline depth — a reissue reuses the same chunks.
+    pub fn begin_round_sampled(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+    ) -> Result<()> {
         anyhow::ensure!(!self.active.is_empty(), "no active workers left at iteration {t}");
         let cs = self.cfg.chunk_size;
         let m = self.active.len() * cs;
         let data_ids = sample_points(&mut self.rng_sample, dataset.len(), m);
         let chunks: Vec<Vec<usize>> = data_ids.chunks(cs).map(|s| s.to_vec()).collect();
-        self.run_round_with_chunks(t, theta, chunks, dataset, engine, events)
+        self.begin_round(t, theta, chunks, dataset)
     }
 
     /// Drive one full iteration over externally-sampled chunks (the
@@ -422,10 +500,13 @@ impl ProtocolCore {
         self.complete_round(t, theta, dataset, engine, events)
     }
 
-    /// Submit the round's proactive wave and return without waiting,
-    /// so a multi-core driver can put every core's wave in flight
-    /// before completing any of them. Must be paired with
-    /// [`ProtocolCore::complete_round`] for the same `t` and `theta`.
+    /// Submit iteration `t`'s proactive wave and return without
+    /// waiting. Up to [`ProtocolConfig::pipeline`] rounds may be in
+    /// flight at once: a pipelined driver begins t+1 on a provisional
+    /// θ while t's later phases run, a multi-core driver (the sharded
+    /// parameter server) puts every core's wave in flight before
+    /// waiting on any. Pair with [`ProtocolCore::complete_round`] (or
+    /// `collect_proactive` + `finish_round`) for the same `t`.
     pub fn begin_round(
         &mut self,
         t: u64,
@@ -433,7 +514,15 @@ impl ProtocolCore {
         chunks: Vec<Vec<usize>>,
         dataset: &dyn Dataset,
     ) -> Result<()> {
-        anyhow::ensure!(self.pending.is_none(), "begin_round with a round already in flight");
+        let depth = self.cfg.pipeline.max(1);
+        anyhow::ensure!(
+            self.pending.len() < depth,
+            "begin_round at iteration {t}: pipeline ring full (depth {depth})"
+        );
+        anyhow::ensure!(
+            self.pending.iter().all(|p| p.iter != t),
+            "begin_round twice for iteration {t}"
+        );
         anyhow::ensure!(!self.active.is_empty(), "no active workers left at iteration {t}");
         let f_t = self.f_t();
         let nact = self.active.len();
@@ -442,7 +531,33 @@ impl ProtocolCore {
         let m = (chunks.len() * self.cfg.chunk_size) as u64;
         let mut round = std::mem::take(&mut self.round);
         round.reset(Assignment::from_chunks(chunks, &self.active, r));
+        let (wave, outstanding, start_ns) = self.submit_proactive(t, f_t, theta, dataset, &round)?;
+        self.pending.push(PendingRound {
+            iter: t,
+            wave,
+            round,
+            outstanding,
+            start_ns,
+            f_t,
+            m,
+            collected: false,
+            crashed_now: Vec::new(),
+            stragglers_now: Vec::new(),
+        });
+        Ok(())
+    }
 
+    /// Build per-worker bundles for `round`'s assignment, show the tap
+    /// the fixed assignment, allocate a wave id, and submit. Shared by
+    /// `begin_round` and `reissue_round`.
+    fn submit_proactive(
+        &mut self,
+        t: u64,
+        f_t: usize,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+        round: &RoundState,
+    ) -> Result<(u64, Vec<WorkerId>, u64)> {
         let bundles: Vec<TaskBundle> = self
             .active
             .iter()
@@ -461,27 +576,80 @@ impl ProtocolCore {
         if let Some(tap) = &self.tap {
             tap.on_round_start(t, f_t, &round.assignment.owners);
         }
+        let wave = self.next_wave;
+        self.next_wave += 1;
         let start_ns = self.transport.now_ns();
-        self.transport.submit(t, Phase::Proactive.wire(), theta, bundles)?;
-        self.pending = Some(PendingRound { round, outstanding, start_ns, f_t, m });
-        Ok(())
+        self.transport.submit(t, Phase::Proactive.wire(), wave, theta, bundles)?;
+        self.live_waves.push(wave);
+        Ok((wave, outstanding, start_ns))
     }
 
-    /// Collect the proactive wave under the configured [`GatherPolicy`]
-    /// and drive the rest of the round (reassignment, detection,
-    /// reactive) to completion.
-    pub fn complete_round(
+    /// Invalidate iteration `t`'s still-uncollected proactive wave and
+    /// resubmit it on a new θ. The pipelined driver calls this when
+    /// finishing an earlier round changed θ after `t`'s wave had
+    /// already been submitted speculatively on a provisional value:
+    /// the old wave's id is retired, so anything it still delivers is
+    /// dropped, and the same sampled chunks are reassigned over the
+    /// *current* active set and Byzantine budget.
+    pub fn reissue_round(
         &mut self,
         t: u64,
         theta: &Arc<Vec<f32>>,
         dataset: &dyn Dataset,
-        engine: &dyn GradientComputer,
+    ) -> Result<()> {
+        let idx = self
+            .pending
+            .iter()
+            .position(|p| p.iter == t)
+            .ok_or_else(|| anyhow::anyhow!("reissue_round without begin_round at iteration {t}"))?;
+        anyhow::ensure!(
+            !self.pending[idx].collected,
+            "reissue_round after collect_proactive at iteration {t}"
+        );
+        anyhow::ensure!(!self.active.is_empty(), "no active workers left at iteration {t}");
+        let mut pr = self.pending.remove(idx);
+        // retire the provisional wave: late deliveries computed on the
+        // provisional θ must never reach the authoritative round
+        self.live_waves.retain(|&w| w != pr.wave);
+        self.mailbox.retain(|(_, r)| r.wave != pr.wave);
+        let f_t = self.f_t();
+        let r = self.policy.proactive_r(f_t).min(self.active.len());
+        let chunks = std::mem::take(&mut pr.round.assignment.chunks);
+        pr.round.reset(Assignment::from_chunks(chunks, &self.active, r));
+        let (wave, outstanding, start_ns) =
+            self.submit_proactive(t, f_t, theta, dataset, &pr.round)?;
+        pr.wave = wave;
+        pr.outstanding = outstanding;
+        pr.start_ns = start_ns;
+        pr.f_t = f_t;
+        self.pending.insert(idx, pr);
+        Ok(())
+    }
+
+    /// Gather iteration `t`'s proactive wave under the configured
+    /// [`GatherPolicy`] and reassign any orphaned chunks, leaving the
+    /// collected round in the ring. After this, the round's pre-audit
+    /// symbols are visible through [`ProtocolCore::pending_round`] (the
+    /// pipelined driver computes its provisional θ from them) and the
+    /// round is ready for [`ProtocolCore::finish_round`]. Idempotent:
+    /// collecting an already-collected round is a no-op.
+    pub fn collect_proactive(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
         events: &mut EventLog,
-    ) -> Result<RoundOutcome> {
-        let pending = self.pending.take();
-        let Some(PendingRound { mut round, outstanding, start_ns, f_t, m }) = pending else {
-            anyhow::bail!("complete_round without begin_round at iteration {t}");
-        };
+    ) -> Result<()> {
+        let idx = self.pending.iter().position(|p| p.iter == t).ok_or_else(|| {
+            anyhow::anyhow!("collect_proactive without begin_round at iteration {t}")
+        })?;
+        if self.pending[idx].collected {
+            return Ok(());
+        }
+        // take the round out of the ring so wait_wave can borrow core
+        // state (note_failure retires crashed workers from the *other*
+        // in-flight rounds through self.pending)
+        let mut pr = self.pending.remove(idx);
         let mut crashed_now: Vec<WorkerId> = Vec::new();
         let mut stragglers_now: Vec<WorkerId> = Vec::new();
 
@@ -491,40 +659,103 @@ impl ProtocolCore {
         // responders than that — the wave waits past its trigger until
         // the floor is met (validate() already rejects k < 2f+1, this
         // also covers deadline waves and per-shard scaled quorums)
-        let floor = (2 * f_t + 1).min(outstanding.len());
+        let floor = (2 * pr.f_t + 1).min(pr.outstanding.len());
         let gather = self.cfg.gather;
+        let outstanding = std::mem::take(&mut pr.outstanding);
         let responses = self.wait_wave(
             t,
-            Phase::Proactive,
+            pr.wave,
             gather,
             floor,
             outstanding,
-            start_ns,
+            pr.start_ns,
             true,
-            &mut round,
+            &mut pr.round,
             &mut crashed_now,
             &mut stragglers_now,
             events,
         )?;
-        round.ingest(responses);
+        pr.round.ingest(responses);
 
         // crash-drops and abandoned stragglers: reassign orphaned
         // chunks so every chunk has at least one copy before the
         // update (abandoned workers were retired from the round's
         // candidate pool by wait_wave, exactly like crashed ones)
-        if round.chunks.iter().any(|c| c.copies.is_empty()) {
-            let targets: Vec<(ChunkId, usize)> = (0..round.nchunks()).map(|c| (c, 1)).collect();
+        if pr.round.chunks.iter().any(|c| c.copies.is_empty()) {
+            let targets: Vec<(ChunkId, usize)> =
+                (0..pr.round.nchunks()).map(|c| (c, 1)).collect();
             self.ensure_copies(
                 t,
                 Phase::Proactive,
                 theta,
                 dataset,
-                &mut round,
+                &mut pr.round,
                 &mut crashed_now,
                 &targets,
                 events,
             )?;
         }
+        pr.collected = true;
+        pr.crashed_now = crashed_now;
+        pr.stragglers_now = stragglers_now;
+        self.pending.insert(idx, pr);
+        Ok(())
+    }
+
+    /// The collected-but-unfinished round for iteration `t`, if any:
+    /// its pre-audit symbols are what the pipelined driver aggregates
+    /// into the provisional θ.
+    pub fn pending_round(&self, t: u64) -> Option<&RoundState> {
+        self.pending
+            .iter()
+            .find(|p| p.iter == t && p.collected)
+            .map(|p| &p.round)
+    }
+
+    /// Collect iteration `t`'s proactive wave (if not already
+    /// collected) and drive the rest of the round to completion.
+    pub fn complete_round(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+        engine: &dyn GradientComputer,
+        events: &mut EventLog,
+    ) -> Result<RoundOutcome> {
+        self.collect_proactive(t, theta, dataset, events)?;
+        self.finish_round(t, theta, dataset, engine, events)
+    }
+
+    /// Drive a collected round through suspicion refresh, the audit
+    /// decision, detection, and reactive identification, and pop it
+    /// from the ring. θ application order is the caller's contract:
+    /// rounds must be finished in iteration order.
+    pub fn finish_round(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+        engine: &dyn GradientComputer,
+        events: &mut EventLog,
+    ) -> Result<RoundOutcome> {
+        let idx = self
+            .pending
+            .iter()
+            .position(|p| p.iter == t)
+            .ok_or_else(|| anyhow::anyhow!("finish_round without begin_round at iteration {t}"))?;
+        anyhow::ensure!(
+            self.pending[idx].collected,
+            "finish_round before collect_proactive at iteration {t}"
+        );
+        let PendingRound {
+            mut round,
+            start_ns,
+            f_t,
+            m,
+            mut crashed_now,
+            stragglers_now,
+            ..
+        } = self.pending.remove(idx);
 
         // ---- latency profiles → suspicion ------------------------------
         // the proactive wave's delivery timestamps (and any straggler
@@ -571,14 +802,19 @@ impl ProtocolCore {
                     let batch = dataset.batch(&round.assignment.chunks[c]);
                     let g = engine.grad(theta, &batch)?;
                     master_computed_points += self.cfg.chunk_size as u64;
-                    let grad = match &self.cfg.compressor {
-                        Some(comp) => comp.encode(&g.grad),
-                        None => g.grad,
+                    let (grad, wire) = match &self.cfg.compressor {
+                        Some(comp) => {
+                            let w = comp.pack(&g.grad);
+                            let dense = comp.unpack(&w, g.grad.len());
+                            (dense, Some(w))
+                        }
+                        None => (g.grad, None),
                     };
                     round.chunks[c].copies.push(SymbolCopy {
                         worker: MASTER_SENTINEL,
                         grad,
                         loss: g.loss,
+                        wire,
                     });
                 }
             } else {
@@ -640,14 +876,19 @@ impl ProtocolCore {
                             let batch = dataset.batch(&round.assignment.chunks[c]);
                             let g = engine.grad(theta, &batch)?;
                             master_computed_points += self.cfg.chunk_size as u64;
-                            let grad = match &self.cfg.compressor {
-                                Some(comp) => comp.encode(&g.grad),
-                                None => g.grad,
+                            let (grad, wire) = match &self.cfg.compressor {
+                                Some(comp) => {
+                                    let w = comp.pack(&g.grad);
+                                    let dense = comp.unpack(&w, g.grad.len());
+                                    (dense, Some(w))
+                                }
+                                None => (g.grad, None),
                             };
                             round.chunks[c].copies.push(SymbolCopy {
                                 worker: MASTER_SENTINEL,
                                 grad,
                                 loss: g.loss,
+                                wire,
                             });
                         }
                         let master_copy = round.chunks[c]
@@ -687,6 +928,7 @@ impl ProtocolCore {
                             worker: MASTER_SENTINEL,
                             grad: vote.grad,
                             loss: vote.loss,
+                            wire: vote.wire,
                         };
                         self.finish_vote(t, c, &mut round, winner, vote.liars, &mut identified_now, events);
                     }
@@ -695,6 +937,13 @@ impl ProtocolCore {
         }
 
         self.round = round;
+        // exclusive span: under pipelining this round's wave may have
+        // been submitted while the previous round was still finishing —
+        // measure from the later of its own submit and the previous
+        // round's end, so per-round times sum to the run's span
+        let now = self.transport.now_ns();
+        let round_ns = now.saturating_sub(start_ns.max(self.last_round_end_ns));
+        self.last_round_end_ns = now;
         Ok(RoundOutcome {
             gradients_used: m,
             audited,
@@ -704,31 +953,38 @@ impl ProtocolCore {
             master_computed_points,
             audited_chunks,
             stragglers_now,
-            round_ns: self.transport.now_ns().saturating_sub(start_ns),
+            round_ns,
+            bytes_round: self.round.bytes,
         })
     }
 
-    /// Collect one wave's deliveries under `policy`. Responses for the
-    /// wave are buffered and returned sorted by worker id; in-band
-    /// failures are recorded as crashes the moment they arrive; stale
-    /// deliveries (an earlier phase, an earlier iteration, or a worker
-    /// this wave is not waiting on) are drained and discarded. On a
-    /// quorum/deadline early exit the still-outstanding workers are
-    /// abandoned for the round: retired from the round's candidate
-    /// pool — their chunks get reassigned exactly like a crashed
-    /// worker's — but they stay active for future rounds.
-    /// `min_responses` is the floor no early exit may cut below (the
-    /// proactive wave passes 2f_t+1 so the reactive vote stays
-    /// assemblable; crash-stops can still shrink the wave, exactly as
-    /// they always could). `profile_latency` is set only for the
-    /// round's **initial proactive wave**: top-up waves are small and
-    /// often single-target, so their zero-excess observations would
-    /// dilute a straggler's profile with meaningless samples.
+    /// Collect one wave's deliveries under `policy`. Deliveries are
+    /// routed by wave id: responses for `wave` are buffered and
+    /// returned sorted by worker id (deliveries of this wave consumed
+    /// during an earlier wait are picked up from the mailbox first);
+    /// responses of a *different still-live* wave are mailboxed for
+    /// their own wait; responses of a dead wave (an abandoned
+    /// straggler's, a reissued provisional wave's) are dropped, never
+    /// ingested. In-band failures are recorded as crashes the moment
+    /// they arrive — during whichever wave's wait happens to be
+    /// running — and retire the worker from every in-flight round's
+    /// candidate pool. On a quorum/deadline early exit the
+    /// still-outstanding workers are abandoned for the round: retired
+    /// from the round's candidate pool — their chunks get reassigned
+    /// exactly like a crashed worker's — but they stay active for
+    /// future rounds. `min_responses` is the floor no early exit may
+    /// cut below (the proactive wave passes 2f_t+1 so the reactive
+    /// vote stays assemblable; crash-stops can still shrink the wave,
+    /// exactly as they always could). `profile_latency` is set only
+    /// for the round's **initial proactive wave**: top-up waves are
+    /// small and often single-target, so their zero-excess
+    /// observations would dilute a straggler's profile with
+    /// meaningless samples.
     #[allow(clippy::too_many_arguments)]
     fn wait_wave(
         &mut self,
         t: u64,
-        phase: Phase,
+        wave: u64,
         policy: GatherPolicy,
         min_responses: usize,
         outstanding: Vec<WorkerId>,
@@ -772,17 +1028,48 @@ impl ProtocolCore {
             }
             _ => None,
         };
-        // O(1) per-delivery membership: worker ids index the mask
+        // O(1) per-delivery membership: worker ids index the mask. A
+        // worker whose crash already surfaced (possibly during another
+        // wave's wait) will never answer this wave either — its slot is
+        // resolved up front so the wait cannot stall on it.
         let mut waiting = vec![false; self.transport.n()];
+        let mut remaining = 0usize;
         for &w in &outstanding {
-            waiting[w] = true;
+            if !waiting[w] && !self.crashed.contains(&w) {
+                waiting[w] = true;
+                remaining += 1;
+            }
         }
-        let mut remaining = outstanding.len();
         let mut responses: Vec<Response> = Vec::new();
         // first fresh arrival of this wave: the latency-profile origin
         // (per-worker observations are *relative* delays behind it, so
         // per-wave fixed costs cancel — see `super::latency`)
         let mut wave_first: Option<u64> = None;
+        // deliveries of this wave consumed while another wave was being
+        // waited on sit in the mailbox, in arrival order
+        let mut boxed: Vec<(u64, Response)> = Vec::new();
+        let mut i = 0;
+        while i < self.mailbox.len() {
+            if self.mailbox[i].1.wave == wave {
+                boxed.push(self.mailbox.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        for (at_ns, response) in boxed {
+            if !waiting[response.worker] {
+                continue;
+            }
+            if profile_latency {
+                let first = *wave_first.get_or_insert(at_ns);
+                self.policy
+                    .observe_latency(response.worker, at_ns.saturating_sub(first));
+            }
+            self.abandon_streak[response.worker] = 0;
+            waiting[response.worker] = false;
+            remaining -= 1;
+            responses.push(response);
+        }
         loop {
             if remaining == 0 || responses.len() >= quorum {
                 break;
@@ -810,29 +1097,36 @@ impl ProtocolCore {
                         }
                     }
                     Delivery::Response { at_ns, response } => {
-                        let fresh = response.iter == t
-                            && response.phase == phase.wire()
-                            && waiting[response.worker];
-                        if !fresh {
-                            // late delivery from an abandoned wave or a
-                            // previous phase: drained, never ingested
-                            continue;
+                        if response.wave == wave && waiting[response.worker] {
+                            if profile_latency {
+                                let first = *wave_first.get_or_insert(at_ns);
+                                self.policy.observe_latency(
+                                    response.worker,
+                                    at_ns.saturating_sub(first),
+                                );
+                            }
+                            // a delivered wave breaks the worker's
+                            // consecutive-abandonment streak
+                            self.abandon_streak[response.worker] = 0;
+                            waiting[response.worker] = false;
+                            remaining -= 1;
+                            responses.push(response);
+                        } else if response.wave != wave
+                            && self.live_waves.contains(&response.wave)
+                        {
+                            // another in-flight wave's delivery: hold it
+                            // for that wave's own wait
+                            self.mailbox.push((at_ns, response));
                         }
-                        if profile_latency {
-                            let first = *wave_first.get_or_insert(at_ns);
-                            self.policy
-                                .observe_latency(response.worker, at_ns.saturating_sub(first));
-                        }
-                        // a delivered wave breaks the worker's
-                        // consecutive-abandonment streak
-                        self.abandon_streak[response.worker] = 0;
-                        waiting[response.worker] = false;
-                        remaining -= 1;
-                        responses.push(response);
+                        // else: dead wave (abandoned straggler, or a
+                        // reissued provisional round) — dropped, never
+                        // ingested
                     }
                 }
             }
         }
+        // this wave is over: whatever it still delivers is dead
+        self.live_waves.retain(|&w| w != wave);
         // quorum/deadline early exit: abandon the stragglers this round
         // (censored samples use the same baseline as regular
         // observations — excess behind the wave's first arrival — so
@@ -933,14 +1227,17 @@ impl ProtocolCore {
                 })
                 .collect();
             let outstanding: Vec<WorkerId> = bundles.iter().map(|b| b.worker).collect();
+            let wave = self.next_wave;
+            self.next_wave += 1;
             let start_ns = self.transport.now_ns();
-            self.transport.submit(t, phase.wire(), theta, bundles)?;
+            self.transport.submit(t, phase.wire(), wave, theta, bundles)?;
+            self.live_waves.push(wave);
             // top-up waves always wait for every requested copy: only
             // the initial proactive wave is quorum-relaxed
             let mut no_stragglers = Vec::new();
             let responses = self.wait_wave(
                 t,
-                phase,
+                wave,
                 GatherPolicy::All,
                 0,
                 outstanding,
@@ -957,9 +1254,11 @@ impl ProtocolCore {
     }
 
     /// Record one in-band crash-stop: retire the worker from the
-    /// active set (it is *not* eliminated — crashing is not lying) and
-    /// from the current assignment's candidate pool. Idempotent: the
-    /// transport may report a crash once per submit.
+    /// active set (it is *not* eliminated — crashing is not lying),
+    /// from the current assignment's candidate pool, and from every
+    /// other in-flight round's pool (a crash is global, whichever
+    /// wave's wait happened to observe it). Idempotent: the transport
+    /// may report a crash once per submit.
     fn note_failure(
         &mut self,
         t: u64,
@@ -977,6 +1276,9 @@ impl ProtocolCore {
             self.active.remove(pos);
         }
         round.assignment.retire(w);
+        for pr in &mut self.pending {
+            pr.round.assignment.retire(w);
+        }
         self.policy.report_crashed(w);
         Self::emit(&self.tap, events, Event::WorkerCrashed { iter: t, worker: w });
     }
@@ -1038,7 +1340,8 @@ mod tests {
             worker,
             iter: 0,
             phase: 0,
-            symbols: vec![Symbol { chunk, grad: vec![1.0], loss, tampered: false }],
+            wave: 0,
+            symbols: vec![Symbol { chunk, grad: vec![1.0], loss, tampered: false, wire: None }],
             error: None,
         };
         round.ingest(vec![
@@ -1063,7 +1366,14 @@ mod tests {
             worker: 4,
             iter: 0,
             phase: 0,
-            symbols: vec![Symbol { chunk: 0, grad: vec![0.0], loss: 0.0, tampered: true }],
+            wave: 0,
+            symbols: vec![Symbol {
+                chunk: 0,
+                grad: vec![0.0],
+                loss: 0.0,
+                tampered: true,
+                wire: None,
+            }],
             error: None,
         }]);
         assert_eq!(round.tampered_by_chunk[0], vec![4]);

@@ -41,7 +41,8 @@ pub struct ShardRound {
 }
 
 /// Per-round bookkeeping between [`ShardCore::begin`] and
-/// [`ShardCore::complete`].
+/// [`ShardCore::finish`]. With pipelined rounds several iterations can
+/// be pending on one shard at once, keyed by iteration.
 struct ShardPending {
     chunk_offset: ChunkId,
     chunk_size: usize,
@@ -54,14 +55,14 @@ pub struct ShardCore {
     spec: ShardSpec,
     core: ProtocolCore,
     alive: bool,
-    pending: Option<ShardPending>,
+    pending: Vec<(u64, ShardPending)>,
 }
 
 impl ShardCore {
     /// Wrap a protocol core whose transport has `spec.width()` workers
     /// with local ids `0..n_s`.
     pub fn new(spec: ShardSpec, core: ProtocolCore) -> ShardCore {
-        ShardCore { spec, core, alive: true, pending: None }
+        ShardCore { spec, core, alive: true, pending: Vec::new() }
     }
 
     pub fn spec(&self) -> &ShardSpec {
@@ -183,14 +184,79 @@ impl ShardCore {
         dataset: &dyn Dataset,
     ) -> Result<()> {
         debug_assert!(self.alive, "round dispatched to a dead shard");
-        debug_assert!(self.pending.is_none(), "shard round already in flight");
+        debug_assert!(
+            !self.pending.iter().any(|(pt, _)| *pt == t),
+            "shard round {t} already in flight"
+        );
         let workers_active = self.core.active().len();
         if let Err(e) = self.core.begin_round(t, theta, chunks, dataset) {
             self.alive = false;
             return Err(e);
         }
-        self.pending =
-            Some(ShardPending { chunk_offset, chunk_size, slot_by_owner, workers_active });
+        self.pending
+            .push((t, ShardPending { chunk_offset, chunk_size, slot_by_owner, workers_active }));
+        Ok(())
+    }
+
+    /// Gather the proactive wave begun by [`ShardCore::begin`]
+    /// (idempotent). On error the shard is marked dead; the events it
+    /// emitted before failing are still surrendered.
+    pub fn collect(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+        events: &mut EventLog,
+    ) -> Result<()> {
+        let chunk_offset = self
+            .pending
+            .iter()
+            .find(|(pt, _)| *pt == t)
+            .expect("collect without begin")
+            .1
+            .chunk_offset;
+        let mut local_events = EventLog::default();
+        let res = self.core.collect_proactive(t, theta, dataset, &mut local_events);
+        for e in local_events.events {
+            let remapped = self.remap(e, chunk_offset);
+            events.push(Event::Shard { shard: self.spec.shard, inner: Box::new(remapped) });
+        }
+        if let Err(e) = res {
+            self.alive = false;
+            self.pending.retain(|(pt, _)| *pt != t);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Undivided pre-audit partial aggregate of a collected pending
+    /// round (owner-slotted tree sum, like [`ShardCore::finish`]'s
+    /// exact partial) and its chunk count — the parameter server's
+    /// input to the pipelined driver's provisional θ. `None` if the
+    /// shard is dead or the round is not collected.
+    pub fn provisional_partial(&self, t: u64) -> Option<(Option<Vec<f32>>, usize)> {
+        if !self.alive {
+            return None;
+        }
+        let round = self.core.pending_round(t)?;
+        let nchunks = round.nchunks();
+        let mut leaves: Vec<Option<&[f32]>> = vec![None; self.spec.width()];
+        for c in 0..nchunks {
+            leaves[round.assignment.owners[c][0]] = Some(&round.chosen(c).grad);
+        }
+        Some((linalg::tree_sum(&leaves), nchunks))
+    }
+
+    /// Retire a pending (uncollected) wave and resubmit it on a new θ
+    /// — the pipelined driver's ordered-apply correction. On error the
+    /// shard is marked dead.
+    pub fn reissue(&mut self, t: u64, theta: &Arc<Vec<f32>>, dataset: &dyn Dataset) -> Result<()> {
+        debug_assert!(self.alive, "reissue on a dead shard");
+        if let Err(e) = self.core.reissue_round(t, theta, dataset) {
+            self.alive = false;
+            self.pending.retain(|(pt, _)| *pt != t);
+            return Err(e);
+        }
         Ok(())
     }
 
@@ -205,10 +271,29 @@ impl ShardCore {
         engine: &dyn GradientComputer,
         events: &mut EventLog,
     ) -> Result<ShardRound> {
-        let ShardPending { chunk_offset, chunk_size, slot_by_owner, workers_active } =
-            self.pending.take().expect("complete without begin");
+        self.collect(t, theta, dataset, events)?;
+        self.finish(t, theta, dataset, engine, events)
+    }
+
+    /// Finish a collected shard round: detection/reactive phases,
+    /// partial aggregate, remapped events.
+    pub fn finish(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        dataset: &dyn Dataset,
+        engine: &dyn GradientComputer,
+        events: &mut EventLog,
+    ) -> Result<ShardRound> {
+        let pos = self
+            .pending
+            .iter()
+            .position(|(pt, _)| *pt == t)
+            .expect("finish without begin");
+        let (_, ShardPending { chunk_offset, chunk_size, slot_by_owner, workers_active }) =
+            self.pending.remove(pos);
         let mut local_events = EventLog::default();
-        let completed = self.core.complete_round(t, theta, dataset, engine, &mut local_events);
+        let completed = self.core.finish_round(t, theta, dataset, engine, &mut local_events);
         let outcome = match completed {
             Ok(out) => out,
             Err(e) => {
@@ -279,6 +364,7 @@ impl ShardCore {
                 crashed: crashed.len(),
                 stragglers: outcome.stragglers_now.len(),
                 round_ns: outcome.round_ns,
+                bytes: outcome.bytes_round,
             },
             identified,
             crashed,
@@ -294,7 +380,7 @@ impl ShardCore {
     /// here; the roster records each worker at most once).
     pub fn fail(&mut self) -> Vec<WorkerId> {
         self.alive = false;
-        self.pending = None;
+        self.pending.clear();
         let mut ws: Vec<WorkerId> =
             self.core.active().iter().map(|&w| self.global(w)).collect();
         ws.extend(self.core.crashed().iter().map(|&w| self.global(w)));

@@ -28,6 +28,99 @@ use crate::util::rng::Pcg64;
 use crate::util::stats;
 use crate::Result;
 
+/// Which state one shard's slice of a pipelined global round is in.
+enum SlotState {
+    /// No chunks dispatched to this shard this round.
+    Idle,
+    /// Proactive wave in flight.
+    InFlight,
+    /// Died this round before finishing — death bookkeeping owed.
+    Died(anyhow::Error),
+    /// Shard was already dead (bookkept in an earlier round); its
+    /// chunks just need rescuing.
+    Orphaned,
+}
+
+/// One pipelined global round between `begin_global` and
+/// `finish_global`.
+struct GlobalPending {
+    t: u64,
+    /// θ the surviving waves were issued on (updated by reissue).
+    theta: Arc<Vec<f32>>,
+    /// The round's global sample, kept so a dead shard's chunks can be
+    /// rebuilt for rescue.
+    data_ids: Vec<usize>,
+    /// Per-shard (start, len) windows into `data_ids`.
+    ranges: Vec<(usize, usize)>,
+    slots: Vec<SlotState>,
+    collected: bool,
+    /// A shard died during begin/collect: don't speculate the next
+    /// round from a partial picture (pipeline flush).
+    flushed: bool,
+    /// Global chunk count dispatched (rescue chunks index past it).
+    total: usize,
+}
+
+/// Per-round accumulation shared by the sequential and pipelined
+/// drivers between the shard-results stage and the fused update.
+struct RoundAccum {
+    partials: Vec<Option<Vec<f32>>>,
+    orphans: Vec<Vec<usize>>,
+    shard_stats: Vec<ShardStat>,
+    suspicion: Vec<(WorkerId, f64)>,
+    oracle_faulty: bool,
+    audited: bool,
+    q_sum: f64,
+    q_n: usize,
+    lambda_sum: f64,
+    extra_crashed: usize,
+    /// Shards run concurrently, so the fan-out costs the slowest
+    /// shard's round (max); rescue rounds happen after it, serially.
+    fan_round_ns: u64,
+}
+
+impl RoundAccum {
+    fn new(k: usize) -> RoundAccum {
+        let mut partials = Vec::with_capacity(k);
+        partials.resize_with(k, || None);
+        RoundAccum {
+            partials,
+            orphans: Vec::new(),
+            shard_stats: Vec::new(),
+            suspicion: Vec::new(),
+            oracle_faulty: false,
+            audited: false,
+            q_sum: 0.0,
+            q_n: 0,
+            lambda_sum: 0.0,
+            extra_crashed: 0,
+            fan_round_ns: 0,
+        }
+    }
+}
+
+/// Publish a completed shard round's eliminations/crashes to the
+/// roster and absorb its losses; returns the stat row.
+fn absorb(
+    round: ShardRound,
+    t: u64,
+    losses: &mut Vec<f64>,
+    roster: &mut Roster,
+    events: &mut EventLog,
+) -> ShardStat {
+    let shard = round.stat.shard;
+    for &w in &round.identified {
+        if roster.publish_elimination(w, shard, t) {
+            events.push(Event::RosterEliminated { iter: t, shard, worker: w });
+        }
+    }
+    for &w in &round.crashed {
+        roster.record_crash(w, t);
+    }
+    losses.extend_from_slice(&round.losses);
+    round.stat
+}
+
 pub struct ParameterServer {
     theta: Vec<f32>,
     engine: Arc<dyn GradientComputer>,
@@ -40,6 +133,12 @@ pub struct ParameterServer {
     chunk_size: usize,
     lr: f32,
     w_star: Option<Vec<f32>>,
+    /// Total iterations the run will ask for (bounds speculation).
+    steps: u64,
+    /// Round pipeline depth (1 = strictly sequential).
+    pipeline: usize,
+    /// Pipelined rounds in flight, oldest first.
+    pending: Vec<GlobalPending>,
     /// Reused per-chunk loss buffer.
     losses: Vec<f64>,
 }
@@ -55,6 +154,8 @@ impl ParameterServer {
         lr: f32,
         seed: u64,
         w_star: Option<Vec<f32>>,
+        steps: u64,
+        pipeline: usize,
     ) -> Result<ParameterServer> {
         anyhow::ensure!(chunk_size > 0, "chunk_size must be positive");
         anyhow::ensure!(
@@ -74,6 +175,9 @@ impl ParameterServer {
             chunk_size,
             lr,
             w_star,
+            steps,
+            pipeline,
+            pending: Vec::new(),
             losses: Vec::new(),
         })
     }
@@ -87,7 +191,18 @@ impl ParameterServer {
     }
 
     /// One global round: sample → fan out → (rescue) → fuse → step.
+    /// With `pipeline ≥ 2` the next round's proactive waves are
+    /// launched on a provisional θ while this round's audits are
+    /// still in flight (see `coordinator::master` module docs).
     pub fn run_round(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
+        if self.pipeline.max(1) > 1 {
+            self.run_round_pipelined(t, events)
+        } else {
+            self.run_round_sequential(t, events)
+        }
+    }
+
+    fn run_round_sequential(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
         let t0 = Instant::now();
         let cs = self.chunk_size;
         let k = self.transport.k();
@@ -140,82 +255,341 @@ impl ParameterServer {
             events,
         );
 
-        let mut partials: Vec<Option<Vec<f32>>> = Vec::with_capacity(k);
-        partials.resize_with(k, || None);
-        let mut rescue_partials: Vec<Vec<f32>> = Vec::new();
+        let mut acc = RoundAccum::new(k);
         self.losses.clear();
-        let mut shard_stats: Vec<ShardStat> = Vec::new();
-        let mut orphans: Vec<Vec<usize>> = Vec::new();
-        let mut suspicion: Vec<(WorkerId, f64)> = Vec::new();
-        let mut oracle_faulty = false;
-        let mut audited = false;
-        let mut q_sum = 0.0f64;
-        let mut q_n = 0usize;
-        let mut lambda_sum = 0.0f64;
-        let mut extra_crashed = 0usize;
-        // shards run concurrently, so the fan-out costs the slowest
-        // shard's round; rescue rounds happen after it, serially
-        let mut fan_round_ns = 0u64;
-        let mut rescue_round_ns = 0u64;
-
-        let absorb = |round: ShardRound,
-                      losses: &mut Vec<f64>,
-                      roster: &mut Roster,
-                      events: &mut EventLog|
-         -> ShardStat {
-            let shard = round.stat.shard;
-            for &w in &round.identified {
-                if roster.publish_elimination(w, shard, t) {
-                    events.push(Event::RosterEliminated { iter: t, shard, worker: w });
-                }
-            }
-            for &w in &round.crashed {
-                roster.record_crash(w, t);
-            }
-            losses.extend_from_slice(&round.losses);
-            round.stat
-        };
-
         for (s, res) in results.into_iter().enumerate() {
             match res {
                 None => {}
                 Some(Ok(mut round)) => {
-                    oracle_faulty |= round.oracle_faulty;
-                    audited |= round.stat.audited;
-                    fan_round_ns = fan_round_ns.max(round.stat.round_ns);
-                    q_sum += self.transport.cores()[s].last_q();
-                    lambda_sum += self.transport.cores()[s].lambda();
-                    q_n += 1;
-                    partials[s] = round.partial.take();
-                    suspicion.append(&mut round.suspicion);
-                    let stat = absorb(round, &mut self.losses, &mut self.roster, events);
-                    shard_stats.push(stat);
+                    acc.oracle_faulty |= round.oracle_faulty;
+                    acc.audited |= round.stat.audited;
+                    acc.fan_round_ns = acc.fan_round_ns.max(round.stat.round_ns);
+                    acc.q_sum += self.transport.cores()[s].last_q();
+                    acc.lambda_sum += self.transport.cores()[s].lambda();
+                    acc.q_n += 1;
+                    acc.partials[s] = round.partial.take();
+                    acc.suspicion.append(&mut round.suspicion);
+                    let stat = absorb(round, t, &mut self.losses, &mut self.roster, events);
+                    acc.shard_stats.push(stat);
                 }
                 Some(Err(e)) => {
-                    log::warn!("shard {s} died at iteration {t}: {e:#}");
-                    events.push(Event::ShardDead { iter: t, shard: s });
-                    // eliminations from the failed round would otherwise
-                    // be lost with the error — publish them first
-                    for w in self.transport.cores()[s].eliminated_globals() {
-                        if self.roster.publish_elimination(w, s, t) {
-                            events.push(Event::RosterEliminated { iter: t, shard: s, worker: w });
-                        }
-                    }
-                    let stranded = self.transport.fail_shard(s);
-                    for w in stranded {
-                        if self.roster.record_crash(w, t) {
-                            extra_crashed += 1;
-                        }
-                    }
+                    acc.extra_crashed += self.note_shard_death(s, t, &e, events);
                     let (start, len) = ranges[s];
-                    orphans.extend(data_ids[start..start + len].chunks(cs).map(|c| c.to_vec()));
+                    acc.orphans
+                        .extend(data_ids[start..start + len].chunks(cs).map(|c| c.to_vec()));
+                }
+            }
+        }
+        self.rescue_and_fuse(t, &theta, acc, total, t0, events)
+    }
+
+    /// Pipelined global round: (begin if not speculated earlier) →
+    /// collect every shard's proactive wave → launch t+1 on a
+    /// provisional θ → finish t exactly → reissue t+1 if the audit
+    /// changed θ. Per-shard pipelines are fused at this single ordered
+    /// apply point; a shard death during begin/collect flushes the
+    /// speculation for one round.
+    fn run_round_pipelined(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
+        let t0 = Instant::now();
+        if !self.pending.iter().any(|p| p.t == t) {
+            let theta = Arc::new(self.theta.clone());
+            self.begin_global(t, &theta)?;
+        }
+        self.collect_global(t, events)?;
+
+        // speculate: provisional θ' from t's pre-audit partials
+        let mut speculative = None;
+        if t + 1 < self.steps && !self.flushed(t) {
+            if let Some(agg) = self.provisional_aggregate(t) {
+                let mut prov = self.theta.clone();
+                self.engine.sgd_step(&mut prov, &agg, self.lr)?;
+                let prov = Arc::new(prov);
+                // a failed speculative begin is a flush, not a round
+                // failure — t+1 will begin sequentially and re-surface
+                // any real error
+                if self.begin_global(t + 1, &prov).is_ok() {
+                    speculative = Some(prov);
                 }
             }
         }
 
+        let rec = self.finish_global(t, t0, events)?;
+
+        // ordered θ application: reissue t+1 on the exact θ iff the
+        // speculation was wrong
+        if let Some(prov) = speculative {
+            if rec.identified > 0 || prov.as_slice() != self.theta.as_slice() {
+                let exact = Arc::new(self.theta.clone());
+                self.reissue_global(t + 1, &exact);
+            }
+        }
+        Ok(rec)
+    }
+
+    /// Sample a global round and submit every shard's proactive wave
+    /// without waiting. Begin failures are recorded as `Died` slots
+    /// and bookkept at finish, like a sequential fan-out failure.
+    fn begin_global(&mut self, t: u64, theta: &Arc<Vec<f32>>) -> Result<()> {
+        let cs = self.chunk_size;
+        // roster enforcement: a published liar can never rejoin
+        for core in self.transport.cores() {
+            for w in core.active_globals() {
+                anyhow::ensure!(
+                    !self.roster.is_eliminated(w),
+                    "eliminated worker {w} resurfaced in shard {} at iteration {t}",
+                    core.spec().shard
+                );
+            }
+        }
+        let counts = self.transport.active_counts();
+        let total: usize = counts.iter().sum();
+        anyhow::ensure!(total > 0, "no active workers left in any shard at iteration {t}");
+        let m = total * cs;
+        let data_ids = sample_points(&mut self.rng_sample, self.dataset.len(), m);
+        let k = counts.len();
+        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(k);
+        let mut slots: Vec<SlotState> = Vec::with_capacity(k);
+        let mut flushed = false;
+        let mut cursor = 0usize;
+        for (s, &c_s) in counts.iter().enumerate() {
+            let offset = cursor / cs;
+            let take = c_s * cs;
+            ranges.push((cursor, take));
+            let slice: Vec<Vec<usize>> = data_ids[cursor..cursor + take]
+                .chunks(cs)
+                .map(|x| x.to_vec())
+                .collect();
+            cursor += take;
+            if slice.is_empty() {
+                slots.push(SlotState::Idle);
+                continue;
+            }
+            let dataset = self.dataset.clone();
+            match self.transport.cores_mut()[s]
+                .begin(t, theta, slice, offset, cs, true, dataset.as_ref())
+            {
+                Ok(()) => slots.push(SlotState::InFlight),
+                Err(e) => {
+                    slots.push(SlotState::Died(e));
+                    flushed = true;
+                }
+            }
+        }
+        self.pending.push(GlobalPending {
+            t,
+            theta: theta.clone(),
+            data_ids,
+            ranges,
+            slots,
+            collected: false,
+            flushed,
+            total,
+        });
+        Ok(())
+    }
+
+    /// Gather every in-flight shard's proactive wave for iteration `t`
+    /// (idempotent). A shard failure here becomes a `Died` slot and a
+    /// pipeline flush.
+    fn collect_global(&mut self, t: u64, events: &mut EventLog) -> Result<()> {
+        let idx = self
+            .pending
+            .iter()
+            .position(|p| p.t == t)
+            .ok_or_else(|| anyhow::anyhow!("collect before begin at iteration {t}"))?;
+        if self.pending[idx].collected {
+            return Ok(());
+        }
+        let theta = self.pending[idx].theta.clone();
+        let k = self.transport.k();
+        for s in 0..k {
+            if !matches!(self.pending[idx].slots[s], SlotState::InFlight) {
+                continue;
+            }
+            if !self.transport.cores()[s].alive() {
+                // died finishing an earlier round; already bookkept
+                self.pending[idx].slots[s] = SlotState::Orphaned;
+                self.pending[idx].flushed = true;
+                continue;
+            }
+            let dataset = self.dataset.clone();
+            if let Err(e) =
+                self.transport.cores_mut()[s].collect(t, &theta, dataset.as_ref(), events)
+            {
+                self.pending[idx].slots[s] = SlotState::Died(e);
+                self.pending[idx].flushed = true;
+            }
+        }
+        self.pending[idx].collected = true;
+        Ok(())
+    }
+
+    fn flushed(&self, t: u64) -> bool {
+        self.pending.iter().find(|p| p.t == t).map(|p| p.flushed).unwrap_or(true)
+    }
+
+    /// Pre-audit global aggregate (mean over collected chunks) — the
+    /// input to the pipelined driver's provisional θ.
+    fn provisional_aggregate(&self, t: u64) -> Option<Vec<f32>> {
+        let pending = self.pending.iter().find(|p| p.t == t)?;
+        let k = self.transport.k();
+        let mut partials: Vec<Option<Vec<f32>>> = Vec::with_capacity(k);
+        partials.resize_with(k, || None);
+        let mut nchunks = 0usize;
+        for (s, core) in self.transport.cores().iter().enumerate() {
+            if !matches!(pending.slots[s], SlotState::InFlight) {
+                continue;
+            }
+            if let Some((partial, chunks)) = core.provisional_partial(t) {
+                nchunks += chunks;
+                partials[s] = partial;
+            }
+        }
+        if nchunks == 0 {
+            return None;
+        }
+        let slots: Vec<Option<&[f32]>> = partials.iter().map(|p| p.as_deref()).collect();
+        let mut agg = linalg::tree_sum(&slots)?;
+        linalg::scale(1.0 / nchunks as f32, &mut agg);
+        Some(agg)
+    }
+
+    /// Finish a collected global round: per-shard audits, death
+    /// bookkeeping, rescue, fused aggregate, SGD step, metrics.
+    fn finish_global(
+        &mut self,
+        t: u64,
+        t0: Instant,
+        events: &mut EventLog,
+    ) -> Result<IterationRecord> {
+        let idx = self
+            .pending
+            .iter()
+            .position(|p| p.t == t)
+            .ok_or_else(|| anyhow::anyhow!("finish before begin at iteration {t}"))?;
+        let pending = self.pending.remove(idx);
+        anyhow::ensure!(pending.collected, "finish before collect at iteration {t}");
+        let GlobalPending { theta, data_ids, ranges, slots, total, .. } = pending;
+        let cs = self.chunk_size;
+        let k = self.transport.k();
+        let mut acc = RoundAccum::new(k);
+        self.losses.clear();
+        for (s, slot) in slots.into_iter().enumerate() {
+            let orphan_range = |acc: &mut RoundAccum| {
+                let (start, len) = ranges[s];
+                acc.orphans.extend(data_ids[start..start + len].chunks(cs).map(|c| c.to_vec()));
+            };
+            match slot {
+                SlotState::Idle => {}
+                SlotState::InFlight => {
+                    let dataset = self.dataset.clone();
+                    let engine = self.engine.clone();
+                    match self.transport.cores_mut()[s].finish(
+                        t,
+                        &theta,
+                        dataset.as_ref(),
+                        engine.as_ref(),
+                        events,
+                    ) {
+                        Ok(mut round) => {
+                            acc.oracle_faulty |= round.oracle_faulty;
+                            acc.audited |= round.stat.audited;
+                            acc.fan_round_ns = acc.fan_round_ns.max(round.stat.round_ns);
+                            acc.q_sum += self.transport.cores()[s].last_q();
+                            acc.lambda_sum += self.transport.cores()[s].lambda();
+                            acc.q_n += 1;
+                            acc.partials[s] = round.partial.take();
+                            acc.suspicion.append(&mut round.suspicion);
+                            let stat = absorb(round, t, &mut self.losses, &mut self.roster, events);
+                            acc.shard_stats.push(stat);
+                        }
+                        Err(e) => {
+                            acc.extra_crashed += self.note_shard_death(s, t, &e, events);
+                            orphan_range(&mut acc);
+                        }
+                    }
+                }
+                SlotState::Died(e) => {
+                    acc.extra_crashed += self.note_shard_death(s, t, &e, events);
+                    orphan_range(&mut acc);
+                }
+                SlotState::Orphaned => orphan_range(&mut acc),
+            }
+        }
+        self.rescue_and_fuse(t, &theta, acc, total, t0, events)
+    }
+
+    /// Retire every in-flight speculative wave for iteration `t` and
+    /// resubmit it on the corrected θ.
+    fn reissue_global(&mut self, t: u64, theta: &Arc<Vec<f32>>) {
+        let Some(idx) = self.pending.iter().position(|p| p.t == t) else {
+            return;
+        };
+        let k = self.transport.k();
+        for s in 0..k {
+            if !matches!(self.pending[idx].slots[s], SlotState::InFlight) {
+                continue;
+            }
+            if !self.transport.cores()[s].alive() {
+                self.pending[idx].slots[s] = SlotState::Orphaned;
+                self.pending[idx].flushed = true;
+                continue;
+            }
+            let dataset = self.dataset.clone();
+            if let Err(e) = self.transport.cores_mut()[s].reissue(t, theta, dataset.as_ref()) {
+                self.pending[idx].slots[s] = SlotState::Died(e);
+                self.pending[idx].flushed = true;
+            }
+        }
+        self.pending[idx].theta = theta.clone();
+    }
+
+    /// Log a shard death, publish its surviving eliminations, retire
+    /// it, and record its stranded workers as crashed; returns how
+    /// many crashes were newly recorded.
+    fn note_shard_death(
+        &mut self,
+        s: usize,
+        t: u64,
+        e: &anyhow::Error,
+        events: &mut EventLog,
+    ) -> usize {
+        log::warn!("shard {s} died at iteration {t}: {e:#}");
+        events.push(Event::ShardDead { iter: t, shard: s });
+        // eliminations from the failed round would otherwise be lost
+        // with the error — publish them first
+        for w in self.transport.cores()[s].eliminated_globals() {
+            if self.roster.publish_elimination(w, s, t) {
+                events.push(Event::RosterEliminated { iter: t, shard: s, worker: w });
+            }
+        }
+        let stranded = self.transport.fail_shard(s);
+        let mut extra = 0usize;
+        for w in stranded {
+            if self.roster.record_crash(w, t) {
+                extra += 1;
+            }
+        }
+        extra
+    }
+
+    /// Rescue orphaned chunks through survivors, then fuse the partial
+    /// aggregates, apply the SGD step, and build the metrics record.
+    fn rescue_and_fuse(
+        &mut self,
+        t: u64,
+        theta: &Arc<Vec<f32>>,
+        mut acc: RoundAccum,
+        total: usize,
+        t0: Instant,
+        events: &mut EventLog,
+    ) -> Result<IterationRecord> {
+        let cs = self.chunk_size;
+        let mut rescue_partials: Vec<Vec<f32>> = Vec::new();
+        let mut rescue_round_ns = 0u64;
         // ---- rescue: reassign a dead shard's chunks to survivors -------
         let mut rescue_offset = total; // rescue chunks index past the main range
-        while !orphans.is_empty() {
+        while !acc.orphans.is_empty() {
             // deterministic choice: the alive shard with the most
             // active workers (lowest index wins ties)
             let target = self
@@ -227,15 +601,15 @@ impl ParameterServer {
                 .filter(|&(_, c)| c > 0)
                 .map(|(s, _)| s);
             let Some(target) = target else {
-                let n = orphans.len();
+                let n = acc.orphans.len();
                 anyhow::bail!("all shards dead at iteration {t}: {n} chunks stranded");
             };
-            let batch = std::mem::take(&mut orphans);
+            let batch = std::mem::take(&mut acc.orphans);
             let nbatch = batch.len();
             match self.transport.rescue(
                 target,
                 t,
-                &theta,
+                theta,
                 batch.clone(),
                 rescue_offset,
                 cs,
@@ -245,35 +619,19 @@ impl ParameterServer {
             ) {
                 Ok(mut round) => {
                     rescue_offset += nbatch;
-                    oracle_faulty |= round.oracle_faulty;
-                    audited |= round.stat.audited;
+                    acc.oracle_faulty |= round.oracle_faulty;
+                    acc.audited |= round.stat.audited;
                     rescue_round_ns += round.stat.round_ns;
                     if let Some(p) = round.partial.take() {
                         rescue_partials.push(p);
                     }
-                    suspicion.append(&mut round.suspicion);
-                    let stat = absorb(round, &mut self.losses, &mut self.roster, events);
-                    shard_stats.push(stat);
+                    acc.suspicion.append(&mut round.suspicion);
+                    let stat = absorb(round, t, &mut self.losses, &mut self.roster, events);
+                    acc.shard_stats.push(stat);
                 }
                 Err(e) => {
-                    log::warn!("rescue shard {target} died at iteration {t}: {e:#}");
-                    events.push(Event::ShardDead { iter: t, shard: target });
-                    for w in self.transport.cores()[target].eliminated_globals() {
-                        if self.roster.publish_elimination(w, target, t) {
-                            events.push(Event::RosterEliminated {
-                                iter: t,
-                                shard: target,
-                                worker: w,
-                            });
-                        }
-                    }
-                    let stranded = self.transport.fail_shard(target);
-                    for w in stranded {
-                        if self.roster.record_crash(w, t) {
-                            extra_crashed += 1;
-                        }
-                    }
-                    orphans = batch; // try the next survivor
+                    acc.extra_crashed += self.note_shard_death(target, t, &e, events);
+                    acc.orphans = batch; // try the next survivor
                 }
             }
         }
@@ -281,19 +639,31 @@ impl ParameterServer {
         // ---- fused aggregation + SGD step ------------------------------
         let nchunks = self.losses.len();
         anyhow::ensure!(nchunks > 0, "no chunk survived iteration {t}");
-        let slots: Vec<Option<&[f32]>> = partials.iter().map(|p| p.as_deref()).collect();
+        let slots: Vec<Option<&[f32]>> = acc.partials.iter().map(|p| p.as_deref()).collect();
         let mut agg = linalg::tree_sum(&slots);
         for p in &rescue_partials {
             linalg::tree_combine(&mut agg, p);
         }
         let mut agg = agg.expect("at least one partial aggregate");
         linalg::scale(1.0 / nchunks as f32, &mut agg);
-        if oracle_faulty {
+        if acc.oracle_faulty {
             events.push(Event::OracleFaultyUpdate { iter: t });
         }
         self.engine.sgd_step(&mut self.theta, &agg, self.lr)?;
 
         // ---- metrics ---------------------------------------------------
+        let RoundAccum {
+            shard_stats,
+            mut suspicion,
+            oracle_faulty,
+            audited,
+            q_sum,
+            q_n,
+            lambda_sum,
+            extra_crashed,
+            fan_round_ns,
+            ..
+        } = acc;
         let gradients_used: u64 = shard_stats.iter().map(|s| s.gradients_used).sum();
         let gradients_computed: u64 = shard_stats.iter().map(|s| s.gradients_computed).sum();
         let faults_detected: usize = shard_stats.iter().map(|s| s.faults_detected).sum();
@@ -302,6 +672,7 @@ impl ParameterServer {
             shard_stats.iter().map(|s| s.crashed).sum::<usize>() + extra_crashed;
         let stragglers: usize = shard_stats.iter().map(|s| s.stragglers).sum();
         let audited_chunks: usize = shard_stats.iter().map(|s| s.audited_chunks).sum();
+        let bytes_round: u64 = shard_stats.iter().map(|s| s.bytes).sum();
         // global-id suspicion column: a shard that also served a rescue
         // round reports twice — keep the later (rescue-round) snapshot
         suspicion.sort_by(|a, b| a.0.cmp(&b.0));
@@ -328,6 +699,8 @@ impl ParameterServer {
             dist_to_opt: self.w_star.as_ref().map(|w| linalg::dist2(&self.theta, w)),
             wall_ns: t0.elapsed().as_nanos() as u64,
             round_ns: fan_round_ns + rescue_round_ns,
+            bytes_round,
+            pipeline_depth: self.pipeline.max(1),
             stragglers,
             audited_chunks,
             suspicion,

@@ -54,6 +54,10 @@ pub struct ShardBuildConfig {
     pub self_check: bool,
     pub tol: f32,
     pub no_eliminate: bool,
+    /// Wire compressor shared by every shard's workers (None = dense).
+    pub compressor: Option<Arc<dyn crate::coordinator::compress::Compressor>>,
+    /// Round pipeline depth for each shard's protocol core ring.
+    pub pipeline: usize,
     pub latency_us: u64,
     /// Sim scenario knobs; straggler/crash worker ids are *global* and
     /// remapped into each shard here.
@@ -117,7 +121,7 @@ fn build_inner(
             n_s,
             engine.clone(),
             byzantine,
-            None,
+            cfg.compressor.clone(),
             cfg.latency_us,
             wiring,
         )),
@@ -141,7 +145,14 @@ fn build_inner(
                 .map(|(w, t)| (spec.local(*w), *t))
                 .collect();
             sim.crash_at = crash_at;
-            Box::new(SimTransport::new_full(n_s, engine.clone(), byzantine, None, sim, wiring))
+            Box::new(SimTransport::new_full(
+                n_s,
+                engine.clone(),
+                byzantine,
+                cfg.compressor.clone(),
+                sim,
+                wiring,
+            ))
         }
     })
 }
@@ -176,8 +187,9 @@ impl ShardedTransport {
                     self_check: cfg.self_check,
                     tol: cfg.tol,
                     no_eliminate: cfg.no_eliminate,
-                    compressor: None,
+                    compressor: cfg.compressor.clone(),
                     gather: shard_gather(cfg.gather, spec.width(), cfg.cluster_n),
+                    pipeline: cfg.pipeline,
                 },
             );
             if let Some(c) = &cfg.adversary {
@@ -206,6 +218,13 @@ impl ShardedTransport {
 
     pub fn cores(&self) -> &[ShardCore] {
         &self.cores
+    }
+
+    /// Mutable shard access for the parameter server's pipelined
+    /// driver, which begins/collects/finishes shard rounds itself
+    /// instead of going through [`ShardedTransport::fan_round`].
+    pub fn cores_mut(&mut self) -> &mut [ShardCore] {
+        &mut self.cores
     }
 
     /// Per-shard active worker counts (0 for dead shards) — the

@@ -25,9 +25,15 @@
 //! signal for the `latency-selective` audit policy.
 //!
 //! The protocol core is responsible for matching deliveries to the
-//! wave it is waiting on: a delivery from an abandoned wave (a
-//! straggler the quorum stopped waiting for) is drained and discarded,
-//! never ingested, so no symbol leaks across phases.
+//! wave it is waiting on. Every [`Transport::submit`] carries a
+//! caller-chosen *wave id*, echoed verbatim in each resulting
+//! [`super::worker::Response`]: with pipelined rounds several waves
+//! (even of different iterations) are in flight at once, and the core
+//! routes each delivery by wave id — buffering deliveries that belong
+//! to another still-live wave, and discarding deliveries from dead
+//! waves (a straggler the quorum stopped waiting for, or a provisional
+//! wave invalidated by a reissue), so no symbol leaks across phases or
+//! rounds.
 //!
 //! Two implementations:
 //!
@@ -125,8 +131,8 @@ impl Delivery {
 /// transport, advancing the virtual clock for the simulator — and
 /// returns all deliveries due at it, sorted by worker id. Deliveries
 /// are returned in global arrival order across waves: the caller
-/// filters by `(iter, phase)` and by the worker set it is actually
-/// waiting on, discarding stale deliveries from abandoned waves.
+/// routes by the echoed `wave` id and by the worker set it is actually
+/// waiting on, discarding stale deliveries from dead waves.
 pub trait Transport {
     /// Number of worker endpoints (fixed at construction).
     fn n(&self) -> usize;
@@ -135,11 +141,14 @@ pub trait Transport {
     /// the simulator, wall-clock for the threaded pool.
     fn now_ns(&self) -> u64;
 
-    /// Queue task bundles for `(iter, phase)` without waiting.
+    /// Queue task bundles for `(iter, phase)` without waiting. `wave`
+    /// is a caller-chosen id echoed in every resulting response —
+    /// unique per submit so pipelined rounds can route deliveries.
     fn submit(
         &mut self,
         iter: u64,
         phase: u32,
+        wave: u64,
         theta: &Arc<Vec<f32>>,
         bundles: Vec<TaskBundle>,
     ) -> Result<()>;

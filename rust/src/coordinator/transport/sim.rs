@@ -263,6 +263,7 @@ impl Transport for SimTransport {
         &mut self,
         iter: u64,
         phase: u32,
+        wave: u64,
         theta: &Arc<Vec<f32>>,
         bundles: Vec<TaskBundle>,
     ) -> Result<()> {
@@ -303,7 +304,7 @@ impl Transport for SimTransport {
                 worker,
                 delivery: Delivery::Response {
                     at_ns,
-                    response: Response { worker, iter, phase, symbols, error: None },
+                    response: Response { worker, iter, phase, wave, symbols, error: None },
                 },
             }));
         }
@@ -385,7 +386,7 @@ mod tests {
     fn zero_latency_wave_arrives_in_one_poll_sorted() {
         let (mut t, ds) = cluster(4, SimConfig::default());
         let theta = Arc::new(vec![0.1f32; 8]);
-        t.submit(0, 0, &theta, bundles(&ds, &[0, 1, 2, 3])).unwrap();
+        t.submit(0, 0, 0, &theta, bundles(&ds, &[0, 1, 2, 3])).unwrap();
         let batch = t.poll(None).unwrap();
         assert_eq!(batch.len(), 4, "zero latency: the whole wave shares one instant");
         let ids: Vec<WorkerId> = batch.iter().map(|d| d.worker()).collect();
@@ -409,7 +410,7 @@ mod tests {
         let theta = Arc::new(vec![0.1f32; 8]);
         for iter in 0..8u64 {
             let before = t.now_ns();
-            t.submit(iter, 0, &theta, bundles(&ds, &[0, 1])).unwrap();
+            t.submit(iter, 0, iter, &theta, bundles(&ds, &[0, 1])).unwrap();
             let mut all = Vec::new();
             drain(&mut t, &mut all);
             assert_eq!(all.len(), 2);
@@ -432,7 +433,7 @@ mod tests {
         let theta = Arc::new(vec![0.1f32; 8]);
         for iter in 0..4u64 {
             let before = t.now_ns();
-            t.submit(iter, 0, &theta, bundles(&ds, &[0, 1, 2])).unwrap();
+            t.submit(iter, 0, iter, &theta, bundles(&ds, &[0, 1, 2])).unwrap();
             // first instant is always the healthy worker 1 at 100us
             let first = t.poll(None).unwrap();
             let mut all = first;
@@ -469,7 +470,7 @@ mod tests {
         };
         let (mut t, ds) = cluster(4, cfg);
         let theta = Arc::new(vec![0.1f32; 8]);
-        t.submit(0, 0, &theta, bundles(&ds, &[0, 1, 2, 3])).unwrap();
+        t.submit(0, 0, 0, &theta, bundles(&ds, &[0, 1, 2, 3])).unwrap();
         // first instant: the three normal workers at 100us
         let first = t.poll(None).unwrap();
         assert_eq!(first.iter().map(|d| d.worker()).collect::<Vec<_>>(), vec![0, 1, 3]);
@@ -486,7 +487,7 @@ mod tests {
         let cfg = SimConfig { latency: LatencyModel::Fixed { us: 100 }, ..Default::default() };
         let (mut t, ds) = cluster(2, cfg);
         let theta = Arc::new(vec![0.1f32; 8]);
-        t.submit(0, 0, &theta, bundles(&ds, &[0, 1])).unwrap();
+        t.submit(0, 0, 0, &theta, bundles(&ds, &[0, 1])).unwrap();
         // deadline before the 100us completions: empty batch, clock at
         // the deadline, deliveries still pending
         let early = t.poll(Some(40_000)).unwrap();
@@ -503,7 +504,7 @@ mod tests {
         let (mut t, ds) = cluster(3, cfg);
         let theta = Arc::new(vec![0.1f32; 8]);
         for iter in 0..4u64 {
-            t.submit(iter, 0, &theta, bundles(&ds, &[0, 1, 2])).unwrap();
+            t.submit(iter, 0, iter, &theta, bundles(&ds, &[0, 1, 2])).unwrap();
             let mut all = Vec::new();
             drain(&mut t, &mut all);
             let failed: Vec<WorkerId> = all
@@ -531,7 +532,7 @@ mod tests {
             let cfg = SimConfig { latency, ..Default::default() };
             let (mut t, ds) = cluster(2, cfg);
             let theta = Arc::new(vec![0.1f32; 8]);
-            t.submit(0, 0, &theta, bundles(&ds, &[0, 1])).unwrap();
+            t.submit(0, 0, 0, &theta, bundles(&ds, &[0, 1])).unwrap();
             let mut all = Vec::new();
             drain(&mut t, &mut all);
             assert_eq!(all.len(), 2);
@@ -546,7 +547,7 @@ mod tests {
         let (mut t, ds) = cluster(2048, SimConfig::default());
         let theta = Arc::new(vec![0.1f32; 8]);
         let all: Vec<WorkerId> = (0..2048).collect();
-        t.submit(0, 0, &theta, bundles(&ds, &all)).unwrap();
+        t.submit(0, 0, 0, &theta, bundles(&ds, &all)).unwrap();
         let mut got = Vec::new();
         assert_eq!(drain(&mut t, &mut got), 2048);
     }

@@ -103,7 +103,7 @@ impl ThreadedTransport {
                         while let Ok(req) = req_rx.recv() {
                             match req {
                                 Request::Shutdown => break,
-                                Request::Compute { iter, phase, theta, tasks } => {
+                                Request::Compute { iter, phase, wave, theta, tasks } => {
                                     if latency_us > 0 {
                                         std::thread::sleep(std::time::Duration::from_micros(
                                             latency_us,
@@ -135,7 +135,8 @@ impl ThreadedTransport {
                                         Ok(Ok(symbols)) => symbols,
                                         _ => vec![],
                                     };
-                                    let resp = Response { worker: id, iter, phase, symbols, error };
+                                    let resp =
+                                        Response { worker: id, iter, phase, wave, symbols, error };
                                     if resp_tx.send(resp).is_err() {
                                         break; // master gone
                                     }
@@ -163,11 +164,12 @@ impl ThreadedTransport {
         w: WorkerId,
         iter: u64,
         phase: u32,
+        wave: u64,
         theta: &Arc<Vec<f32>>,
         tasks: Vec<(ChunkId, Batch)>,
     ) -> Result<()> {
         self.senders[w]
-            .send(Request::Compute { iter, phase, theta: theta.clone(), tasks })
+            .send(Request::Compute { iter, phase, wave, theta: theta.clone(), tasks })
             .map_err(|_| anyhow::anyhow!("worker {w} channel closed"))
     }
 
@@ -196,11 +198,12 @@ impl Transport for ThreadedTransport {
         &mut self,
         iter: u64,
         phase: u32,
+        wave: u64,
         theta: &Arc<Vec<f32>>,
         bundles: Vec<TaskBundle>,
     ) -> Result<()> {
         for TaskBundle { worker, tasks } in bundles {
-            self.send(worker, iter, phase, theta, tasks)?;
+            self.send(worker, iter, phase, wave, theta, tasks)?;
             self.in_flight += 1;
         }
         Ok(())
@@ -333,7 +336,7 @@ mod tests {
         let bundles = (0..3)
             .map(|w| TaskBundle { worker: w, tasks: vec![(5, batch.clone())] })
             .collect();
-        pool.submit(0, 0, &theta, bundles).unwrap();
+        pool.submit(0, 0, 0, &theta, bundles).unwrap();
         let resps = collect(&mut pool, 0, 0, 3);
         assert_eq!(resps.len(), 3);
         let g0 = &resps[0].symbols[0].grad;
@@ -353,7 +356,7 @@ mod tests {
         let bundles = (0..2)
             .map(|w| TaskBundle { worker: w, tasks: vec![(0, batch.clone())] })
             .collect();
-        pool.submit(0, 0, &theta, bundles).unwrap();
+        pool.submit(0, 0, 0, &theta, bundles).unwrap();
         let resps = collect(&mut pool, 0, 0, 2);
         let honest = resps.iter().find(|r| r.worker == 0).unwrap();
         let byz = resps.iter().find(|r| r.worker == 1).unwrap();
@@ -369,7 +372,7 @@ mod tests {
         let batch = ds.batch(&(0..16).collect::<Vec<_>>());
         for phase in 0..3u32 {
             let bundles = vec![TaskBundle { worker: 0, tasks: vec![(0, batch.clone())] }];
-            pool.submit(7, phase, &theta, bundles).unwrap();
+            pool.submit(7, phase, phase as u64, &theta, bundles).unwrap();
             let r = collect(&mut pool, 7, phase, 1);
             assert!(r[0].symbols[0].tampered, "phase {phase}");
         }
@@ -381,7 +384,7 @@ mod tests {
         let theta = Arc::new(vec![0.0f32; 8]);
         let b1 = ds.batch(&(0..8).collect::<Vec<_>>());
         let b2 = ds.batch(&(8..16).collect::<Vec<_>>());
-        pool.submit(0, 0, &theta, vec![TaskBundle { worker: 0, tasks: vec![(0, b1), (1, b2)] }])
+        pool.submit(0, 0, 0, &theta, vec![TaskBundle { worker: 0, tasks: vec![(0, b1), (1, b2)] }])
             .unwrap();
         let r = collect(&mut pool, 0, 0, 1);
         assert_eq!(r[0].symbols.len(), 2);
@@ -397,7 +400,7 @@ mod tests {
             .rev() // submit in reverse order on purpose
             .map(|w| TaskBundle { worker: w, tasks: vec![(w, batch.clone())] })
             .collect();
-        pool.submit(3, 0, &theta, bundles).unwrap();
+        pool.submit(3, 0, 0, &theta, bundles).unwrap();
         let mut got: Vec<(u64, WorkerId)> = Vec::new();
         while got.len() < 4 {
             let b = pool.poll(None).unwrap();
@@ -422,6 +425,7 @@ mod tests {
         let good = ds.batch(&(0..16).collect::<Vec<_>>());
         let bad = crate::data::Batch::LinReg { x: vec![0.0; 7], y: vec![0.0], b: 1, d: 7 };
         pool.submit(
+            0,
             0,
             0,
             &theta,

@@ -29,10 +29,17 @@ use crate::Result;
 #[derive(Clone, Debug)]
 pub struct Symbol {
     pub chunk: ChunkId,
+    /// Dense gradient. Under a compressor this is the *exact decode*
+    /// of `wire` — the value the master aggregates with; the wire
+    /// bytes are what detection compares and what the bytes-per-round
+    /// accounting counts.
     pub grad: Vec<f32>,
     pub loss: f32,
     /// Oracle flag: was this symbol tampered with? (metrics only)
     pub tampered: bool,
+    /// Packed wire bytes (`Some` iff a compressor is configured): the
+    /// authoritative transported representation of this symbol.
+    pub wire: Option<Vec<u8>>,
 }
 
 /// Master -> worker.
@@ -40,6 +47,9 @@ pub enum Request {
     Compute {
         iter: u64,
         phase: u32,
+        /// Wave id: one per `Transport::submit`, monotone per core.
+        /// Pipelined rounds route/drop deliveries by it.
+        wave: u64,
         theta: Arc<Vec<f32>>,
         tasks: Vec<(ChunkId, Batch)>,
     },
@@ -52,6 +62,8 @@ pub struct Response {
     pub worker: WorkerId,
     pub iter: u64,
     pub phase: u32,
+    /// Echo of the submitting wave id (delivery routing).
+    pub wave: u64,
     pub symbols: Vec<Symbol>,
     /// Engine error text, if any (treated as a crash — surfaced loudly).
     pub error: Option<String>,
@@ -154,10 +166,16 @@ impl WorkerState {
                     tampered = grad != g0 || loss != l0;
                 }
             }
+            let mut wire = None;
             if let Some(c) = &self.compressor {
-                grad = c.encode(&grad);
+                // pack, then replace the dense gradient with the exact
+                // decode of the wire — what the receiver would see
+                let d = grad.len();
+                let w = c.pack(&grad);
+                grad = c.unpack(&w, d);
+                wire = Some(w);
             }
-            out.push(Symbol { chunk, grad, loss, tampered });
+            out.push(Symbol { chunk, grad, loss, tampered, wire });
         }
         Ok(out)
     }

@@ -52,6 +52,10 @@ pub struct RunSpec {
     pub adversary: Option<AdversaryKind>,
     /// Sim scenario knobs (`transport = Sim` only).
     pub sim: SimConfig,
+    /// Round pipeline depth (1 = strictly sequential).
+    pub pipeline: usize,
+    /// Election decode measurement mode (E13).
+    pub election: bool,
 }
 
 impl RunSpec {
@@ -77,6 +81,8 @@ impl RunSpec {
             gather: GatherPolicy::All,
             adversary: None,
             sim: SimConfig::default(),
+            pipeline: 1,
+            election: false,
         }
     }
 
@@ -135,6 +141,21 @@ impl RunSpec {
         self
     }
 
+    pub fn pipeline(mut self, depth: usize) -> Self {
+        self.pipeline = depth;
+        self
+    }
+
+    pub fn compress(mut self, comp: Arc<dyn Compressor>) -> Self {
+        self.compressor = Some(comp);
+        self
+    }
+
+    pub fn election(mut self, yes: bool) -> Self {
+        self.election = yes;
+        self
+    }
+
     /// Run on the native linreg workload; returns the outcome plus the
     /// planted optimum.
     pub fn run_linreg(&self) -> Result<(TrainOutcome, Vec<f32>)> {
@@ -143,6 +164,7 @@ impl RunSpec {
         cluster.transport = self.transport;
         cluster.shards = self.shards;
         cluster.gather = self.gather;
+        cluster.pipeline = self.pipeline;
         let cfg = ExperimentConfig {
             name: "exp".into(),
             cluster,
@@ -162,6 +184,7 @@ impl RunSpec {
             no_eliminate: self.no_eliminate,
             compressor: self.compressor.clone(),
             unaudited_filter: self.unaudited_filter.clone(),
+            election: self.election,
             sim: self.sim.clone(),
             ..Default::default()
         };

@@ -28,7 +28,7 @@ pub fn run_e11(fast: bool) -> Result<()> {
     let d = 64usize;
     let mut table = Table::new(&[
         "compressor",
-        "wire words/symbol",
+        "wire bytes/symbol",
         "compression",
         "identified",
         "final dist to w*",
@@ -49,7 +49,7 @@ pub fn run_e11(fast: bool) -> Result<()> {
         let dist = linalg::dist2(&out.theta, &w_star) as f64;
         table.row(&[
             name.into(),
-            comp.wire_len(d).to_string(),
+            comp.wire_bytes(d).to_string(),
             format!("{:.1}x", comp.ratio(d)),
             format!("{:?}", out.eliminated),
             format!("{dist:.2e}"),

@@ -4,7 +4,9 @@
 //! r3bft train       [--config file.toml] [--model linreg|mlp|transformer]
 //!                   [--engine native|xla] [--policy ...] [--q 0.2] [--n 8]
 //!                   [--f 2] [--shards 1] [--transport threaded|sim]
-//!                   [--gather all|quorum:K|quorum:0.F|deadline:US] [--attack sign_flip]
+//!                   [--gather all|quorum:K|quorum:0.F|deadline:US]
+//!                   [--pipeline D] [--compress dense|sign|topk:K]
+//!                   [--attack sign_flip]
 //!                   [--adversary assignment-aware|sleeper[:W]|audit-evader[:C]
 //!                   |latency-mimic|shard-equivocator]
 //!                   [--p 1.0] [--steps 200] [--seed 42] [--csv out.csv]
@@ -85,6 +87,14 @@ TRAIN OPTIONS (defaults in parens):
                      microseconds; stragglers' chunks are reassigned
                      like crashed workers', detection/reactive phases
                      still wait for every requested copy
+  --pipeline D       round pipeline depth (1); with D >= 2 the next
+                     round's proactive wave is launched on a
+                     provisional θ while this round's audits are in
+                     flight, and reissued only when the audit changed θ
+  --compress C       dense | sign | topk:K (off): workers send
+                     byte-packed wire symbols — sign packs 1 bit/coord
+                     plus a 4-byte scale, topk:K packs K (index, value)
+                     pairs; detection compares the packed bytes
   --attack A         sign_flip|noise|constant|zero|small_bias|collude (sign_flip)
   --adversary S      coordinated adversary strategy replacing the stateless
                      attack for the Byzantine workers: assignment-aware |
@@ -141,6 +151,7 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
         }
     }
     cfg.cluster.shards = args.usize("shards", cfg.cluster.shards);
+    cfg.cluster.pipeline = args.usize("pipeline", cfg.cluster.pipeline);
     if let Some(kind) = args.get("policy") {
         cfg.policy = PolicyKind::parse(
             kind,
@@ -216,7 +227,11 @@ fn run_train(args: &Args) -> Result<()> {
         s => s.init_theta(seed),
     };
     let chunk = spec.batch();
-    let opts = MasterOptions { self_check, w_star, ..Default::default() };
+    let compressor = match args.get("compress") {
+        Some(spec) => Some(r3bft::coordinator::compress::parse(spec)?),
+        None => None,
+    };
+    let opts = MasterOptions { self_check, w_star, compressor, ..Default::default() };
 
     log::info!(
         "train: model={} engine={} n={} f={} shards={} transport={} gather={} policy={:?} attack={} steps={}",

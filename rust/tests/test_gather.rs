@@ -263,6 +263,7 @@ fn late_proactive_delivery_is_drained_not_ingested() {
             no_eliminate: false,
             compressor: None,
             gather: GatherPolicy::Quorum { k: 3 },
+            pipeline: 1,
         },
     );
     let theta = Arc::new(vec![0.1f32; d]);

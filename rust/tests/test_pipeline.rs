@@ -1,0 +1,263 @@
+//! Pipelined-round correctness: a depth-D run must apply θ updates in
+//! strict iteration order, so
+//!
+//! * depth 1 is the unpipelined protocol by construction, and a
+//!   fault-free depth-2 run (where every speculation is confirmed) is
+//!   bit-identical to it on both transports and any shard count;
+//! * with liars forcing a reissue every round (Deterministic policy,
+//!   no_eliminate holds the active set fixed), depths 1/2/3 are
+//!   bit-identical — the mid-pipeline catch retires the provisional
+//!   wave and resubmits on the exact θ;
+//! * at the `ProtocolCore` level, late deliveries of a reissued
+//!   (dead) wave are dropped by wave id, never ingested.
+
+use std::sync::Arc;
+
+use r3bft::config::{
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, GatherPolicy, PolicyKind,
+    TrainConfig,
+};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::coordinator::protocol::{ProtocolConfig, ProtocolCore};
+use r3bft::coordinator::{EventLog, FaultCheckPolicy, LatencyModel, SimConfig, SimTransport, TrainOutcome};
+use r3bft::data::{Dataset, LinRegDataset};
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    n: usize,
+    f: usize,
+    byz: Vec<usize>,
+    policy: PolicyKind,
+    attack: AttackConfig,
+    steps: usize,
+    seed: u64,
+    transport: &str,
+    shards: usize,
+    pipeline: usize,
+    no_eliminate: bool,
+    sim: SimConfig,
+) -> TrainOutcome {
+    let mut cluster = ClusterConfig::new(n, f, seed);
+    cluster.byzantine_ids = byz;
+    cluster.transport = transport.into();
+    cluster.shards = shards;
+    cluster.pipeline = pipeline;
+    let cfg = ExperimentConfig {
+        name: "pipeline-test".into(),
+        cluster,
+        policy,
+        attack,
+        adversary: None,
+        train: TrainConfig { steps, lr: 0.5, ..Default::default() },
+    };
+    let d = 16usize;
+    let chunk = 8usize;
+    let ds = Arc::new(LinRegDataset::generate(2048, d, 0.0, seed));
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(seed);
+    let opts = MasterOptions { no_eliminate, sim, ..Default::default() };
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    master.run().expect("train")
+}
+
+fn losses_bits(out: &TrainOutcome) -> Vec<u32> {
+    out.metrics.iterations.iter().map(|r| r.loss.to_bits()).collect()
+}
+
+/// Fault-free runs confirm every speculation, so the whole pipeline
+/// overlap is invisible in values: depth 2 must match depth 1
+/// bit-for-bit on both transports and for K ∈ {1, 4}.
+#[test]
+fn fault_free_depth2_is_bit_identical_to_depth1() {
+    for transport in ["threaded", "sim"] {
+        for shards in [1usize, 4] {
+            let base = run(
+                16,
+                2,
+                vec![],
+                PolicyKind::Bernoulli { q: 0.3 },
+                AttackConfig::default(),
+                60,
+                11,
+                transport,
+                shards,
+                1,
+                false,
+                SimConfig::default(),
+            );
+            let piped = run(
+                16,
+                2,
+                vec![],
+                PolicyKind::Bernoulli { q: 0.3 },
+                AttackConfig::default(),
+                60,
+                11,
+                transport,
+                shards,
+                2,
+                false,
+                SimConfig::default(),
+            );
+            let label = format!("{transport} K={shards}");
+            assert_eq!(base.theta, piped.theta, "{label}: theta diverged");
+            assert_eq!(losses_bits(&base), losses_bits(&piped), "{label}: losses diverged");
+            assert_eq!(base.eliminated, piped.eliminated, "{label}");
+            // every pipelined row reports its configured depth
+            assert!(piped.metrics.iterations.iter().all(|r| r.pipeline_depth == 2), "{label}");
+            assert!(base.metrics.iterations.iter().all(|r| r.pipeline_depth == 1), "{label}");
+        }
+    }
+}
+
+/// θ-application order == iteration order at any depth, including a
+/// liar caught mid-pipeline: under the always-audit policy every round
+/// corrects its tampering and forces a reissue of the speculative
+/// wave, and with `no_eliminate` the active set (hence the sample
+/// stream) never changes — so depths 1, 2, and 3 must be bit-identical
+/// despite a reissue in every single round.
+#[test]
+fn liar_catch_mid_pipeline_reissues_to_the_depth1_trajectory() {
+    let byz = vec![3usize, 7];
+    let attack = AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 3.0 };
+    let runs: Vec<TrainOutcome> = [1usize, 2, 3]
+        .iter()
+        .map(|&depth| {
+            run(
+                9,
+                2,
+                byz.clone(),
+                PolicyKind::Deterministic,
+                attack.clone(),
+                50,
+                13,
+                "sim",
+                1,
+                depth,
+                true,
+                SimConfig::default(),
+            )
+        })
+        .collect();
+    for (i, piped) in runs.iter().enumerate().skip(1) {
+        let depth = i + 1;
+        assert_eq!(runs[0].theta, piped.theta, "depth {depth}: theta diverged");
+        assert_eq!(
+            losses_bits(&runs[0]),
+            losses_bits(piped),
+            "depth {depth}: losses diverged"
+        );
+        // the liars kept lying (no_eliminate), so every audit caught
+        // tampering and corrected θ away from the speculation — the
+        // depth-1 trajectory survived a reissue under every round
+        assert!(
+            piped.metrics.iterations.iter().all(|r| r.faults_detected > 0),
+            "depth {depth}: scenario must catch tampering every round"
+        );
+    }
+}
+
+/// Depth-1 pipelined config routes through the classic sequential
+/// driver: identical to the default config byte-for-byte, with liars
+/// and eliminations.
+#[test]
+fn depth1_equals_default_with_eliminations() {
+    let byz = vec![2usize, 5];
+    let attack = AttackConfig { kind: AttackKind::SignFlip, p: 0.8, magnitude: 2.0 };
+    for transport in ["threaded", "sim"] {
+        let a = run(
+            9,
+            2,
+            byz.clone(),
+            PolicyKind::Bernoulli { q: 0.4 },
+            attack.clone(),
+            80,
+            17,
+            transport,
+            1,
+            1,
+            false,
+            SimConfig::default(),
+        );
+        let b = run(
+            9,
+            2,
+            byz.clone(),
+            PolicyKind::Bernoulli { q: 0.4 },
+            attack.clone(),
+            80,
+            17,
+            transport,
+            1,
+            1,
+            false,
+            SimConfig::default(),
+        );
+        assert_eq!(a.theta, b.theta, "{transport}");
+        assert_eq!(a.eliminated, b.eliminated, "{transport}");
+    }
+}
+
+/// ProtocolCore-level dead-wave drain: begin a round on a provisional
+/// θ_A, reissue it on θ_B before collecting, and drive it to
+/// completion under latency (so θ_A deliveries land *during* the
+/// θ_B wave's gather). Every chosen symbol must be the gradient at
+/// θ_B — the retired wave's deliveries are dropped by wave id, never
+/// ingested.
+#[test]
+fn reissued_wave_late_deliveries_are_dropped() {
+    let n = 6usize;
+    let d = 16usize;
+    let cs = 8usize;
+    let seed = 23u64;
+    let ds = LinRegDataset::generate(1024, d, 0.0, seed);
+    let spec = ModelSpec::LinReg { d, batch: cs };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec));
+    let sim = SimConfig { latency: LatencyModel::Fixed { us: 500 }, ..Default::default() };
+    let transport = SimTransport::new(n, engine.clone(), |_| None, None, sim);
+    let policy = FaultCheckPolicy::new(PolicyKind::Bernoulli { q: 0.0 }, n, seed);
+    let mut core = ProtocolCore::new(
+        Box::new(transport),
+        policy,
+        ProtocolConfig {
+            f: 1,
+            seed,
+            chunk_size: cs,
+            self_check: false,
+            tol: 0.0,
+            no_eliminate: false,
+            compressor: None,
+            gather: GatherPolicy::All,
+            pipeline: 2,
+        },
+    );
+    let theta_a = Arc::new(vec![0.25f32; d]);
+    let theta_b = Arc::new(vec![-1.5f32; d]);
+    let mut events = EventLog::default();
+
+    core.begin_round_sampled(0, &theta_a, &ds).expect("begin");
+    // the speculation was wrong: retire wave A, resubmit on θ_B
+    core.reissue_round(0, &theta_b, &ds).expect("reissue");
+    core.collect_proactive(0, &theta_b, &ds, &mut events).expect("collect");
+
+    let round = core.pending_round(0).expect("collected round");
+    assert!(round.nchunks() > 0);
+    for c in 0..round.nchunks() {
+        let sym = round.chosen(c);
+        let batch = ds.batch(&round.assignment.chunks[c]);
+        let want = engine.grad(&theta_b, &batch).expect("grad").grad;
+        assert_eq!(
+            sym.grad, want,
+            "chunk {c}: ingested a dead-wave (θ_A) symbol from worker {}",
+            sym.worker
+        );
+        let stale = engine.grad(&theta_a, &batch).expect("grad").grad;
+        assert_ne!(sym.grad, stale, "chunk {c}: θ_A and θ_B gradients must differ");
+    }
+    let out = core
+        .finish_round(0, &theta_b, &ds, engine.as_ref(), &mut events)
+        .expect("finish");
+    assert_eq!(out.faults_detected, 0, "dead-wave deliveries mistaken for faults");
+}

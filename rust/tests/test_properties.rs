@@ -117,7 +117,7 @@ fn prop_detection_iff_perturbed() {
         let r = g.usize_in(2, 6);
         let grad = g.vec_f32(d);
         let mut copies: Vec<SymbolCopy> = (0..r)
-            .map(|w| SymbolCopy { worker: w, grad: grad.clone(), loss: 0.5 })
+            .map(|w| SymbolCopy { worker: w, grad: grad.clone(), loss: 0.5, wire: None })
             .collect();
         prop_assert!(
             check_copies(&copies, 0.0) == CheckOutcome::Unanimous,
@@ -156,7 +156,7 @@ fn prop_majority_vote_soundness() {
                         *v = if colluding { 9.0 + i as f32 } else { -3.0 * (*v) + 1.0 };
                     }
                 }
-                SymbolCopy { worker: w, grad, loss: 1.0 }
+                SymbolCopy { worker: w, grad, loss: 1.0, wire: None }
             })
             .collect();
         let vote = majority_vote(&copies, f_t).ok_or("no quorum")?;
