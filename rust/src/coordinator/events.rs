@@ -3,6 +3,7 @@
 //! of scraping log lines.
 
 use super::{ChunkId, WorkerId};
+use crate::util::json::{Json, JsonError};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Event {
@@ -44,6 +45,202 @@ pub enum Event {
     /// A shard-local elimination was published to the parameter
     /// server's global roster (the liar can never rejoin anywhere).
     RosterEliminated { iter: u64, shard: usize, worker: WorkerId },
+}
+
+fn ev_obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn ev_num(j: &Json, key: &str) -> Result<f64, JsonError> {
+    j.req(key)?
+        .as_f64()
+        .ok_or_else(|| JsonError(format!("field '{key}' is not a number")))
+}
+
+fn ev_workers(j: &Json, key: &str) -> Result<Vec<WorkerId>, JsonError> {
+    j.req_arr(key)?
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| JsonError(format!("'{key}' element is not a worker id")))
+        })
+        .collect()
+}
+
+fn workers_json(ws: &[WorkerId]) -> Json {
+    Json::Arr(ws.iter().map(|&w| Json::Num(w as f64)).collect())
+}
+
+impl Event {
+    /// Copy of the event with every worker id passed through `f`
+    /// (chunk ids untouched). The shard layer and the trace recorder
+    /// use this to remap core-local ids onto the global roster;
+    /// [`Event::Shard`] recurses.
+    pub fn map_workers(&self, f: &mut dyn FnMut(WorkerId) -> WorkerId) -> Event {
+        let map = |ws: &[WorkerId], f: &mut dyn FnMut(WorkerId) -> WorkerId| {
+            ws.iter().map(|&w| f(w)).collect::<Vec<_>>()
+        };
+        match self {
+            Event::AuditDecision { .. } | Event::OracleFaultyUpdate { .. } => self.clone(),
+            Event::FaultDetected { iter, chunk, owners } => {
+                Event::FaultDetected { iter: *iter, chunk: *chunk, owners: map(owners, f) }
+            }
+            Event::ReactiveRedundancy { iter, chunk, added } => {
+                Event::ReactiveRedundancy { iter: *iter, chunk: *chunk, added: map(added, f) }
+            }
+            Event::Identified { iter, workers } => {
+                Event::Identified { iter: *iter, workers: map(workers, f) }
+            }
+            Event::Eliminated { iter, worker } => {
+                Event::Eliminated { iter: *iter, worker: f(*worker) }
+            }
+            Event::WorkerCrashed { iter, worker } => {
+                Event::WorkerCrashed { iter: *iter, worker: f(*worker) }
+            }
+            Event::StragglerAbandoned { iter, worker } => {
+                Event::StragglerAbandoned { iter: *iter, worker: f(*worker) }
+            }
+            Event::SuspicionUpdated { iter, worker, suspicion } => Event::SuspicionUpdated {
+                iter: *iter,
+                worker: f(*worker),
+                suspicion: *suspicion,
+            },
+            Event::Shard { shard, inner } => {
+                Event::Shard { shard: *shard, inner: Box::new(inner.map_workers(f)) }
+            }
+            Event::ShardDead { .. } => self.clone(),
+            Event::RosterEliminated { iter, shard, worker } => {
+                Event::RosterEliminated { iter: *iter, shard: *shard, worker: f(*worker) }
+            }
+        }
+    }
+
+    /// JSON representation with a `"type"` discriminant — the JSONL
+    /// export schema (`--events`; documented in `docs/TRACING.md`).
+    /// Inverse of [`Event::from_json`].
+    pub fn to_json(&self) -> Json {
+        let n = |v: u64| Json::Num(v as f64);
+        let nu = |v: usize| Json::Num(v as f64);
+        match self {
+            Event::AuditDecision { iter, q, audited } => ev_obj(vec![
+                ("type", Json::Str("audit_decision".into())),
+                ("iter", n(*iter)),
+                ("q", Json::Num(*q)),
+                ("audited", Json::Bool(*audited)),
+            ]),
+            Event::FaultDetected { iter, chunk, owners } => ev_obj(vec![
+                ("type", Json::Str("fault_detected".into())),
+                ("iter", n(*iter)),
+                ("chunk", nu(*chunk)),
+                ("owners", workers_json(owners)),
+            ]),
+            Event::ReactiveRedundancy { iter, chunk, added } => ev_obj(vec![
+                ("type", Json::Str("reactive_redundancy".into())),
+                ("iter", n(*iter)),
+                ("chunk", nu(*chunk)),
+                ("added", workers_json(added)),
+            ]),
+            Event::Identified { iter, workers } => ev_obj(vec![
+                ("type", Json::Str("identified".into())),
+                ("iter", n(*iter)),
+                ("workers", workers_json(workers)),
+            ]),
+            Event::Eliminated { iter, worker } => ev_obj(vec![
+                ("type", Json::Str("eliminated".into())),
+                ("iter", n(*iter)),
+                ("worker", nu(*worker)),
+            ]),
+            Event::WorkerCrashed { iter, worker } => ev_obj(vec![
+                ("type", Json::Str("worker_crashed".into())),
+                ("iter", n(*iter)),
+                ("worker", nu(*worker)),
+            ]),
+            Event::StragglerAbandoned { iter, worker } => ev_obj(vec![
+                ("type", Json::Str("straggler_abandoned".into())),
+                ("iter", n(*iter)),
+                ("worker", nu(*worker)),
+            ]),
+            Event::SuspicionUpdated { iter, worker, suspicion } => ev_obj(vec![
+                ("type", Json::Str("suspicion_updated".into())),
+                ("iter", n(*iter)),
+                ("worker", nu(*worker)),
+                ("suspicion", Json::Num(*suspicion)),
+            ]),
+            Event::OracleFaultyUpdate { iter } => ev_obj(vec![
+                ("type", Json::Str("oracle_faulty_update".into())),
+                ("iter", n(*iter)),
+            ]),
+            Event::Shard { shard, inner } => ev_obj(vec![
+                ("type", Json::Str("shard".into())),
+                ("shard", nu(*shard)),
+                ("inner", inner.to_json()),
+            ]),
+            Event::ShardDead { iter, shard } => ev_obj(vec![
+                ("type", Json::Str("shard_dead".into())),
+                ("iter", n(*iter)),
+                ("shard", nu(*shard)),
+            ]),
+            Event::RosterEliminated { iter, shard, worker } => ev_obj(vec![
+                ("type", Json::Str("roster_eliminated".into())),
+                ("iter", n(*iter)),
+                ("shard", nu(*shard)),
+                ("worker", nu(*worker)),
+            ]),
+        }
+    }
+
+    /// Parse an event from its [`Event::to_json`] representation.
+    pub fn from_json(j: &Json) -> Result<Event, JsonError> {
+        let iter = |j: &Json| ev_num(j, "iter").map(|v| v as u64);
+        let worker = |j: &Json| ev_num(j, "worker").map(|v| v as WorkerId);
+        let chunk = |j: &Json| ev_num(j, "chunk").map(|v| v as ChunkId);
+        let shard = |j: &Json| ev_num(j, "shard").map(|v| v as usize);
+        match j.req_str("type")? {
+            "audit_decision" => Ok(Event::AuditDecision {
+                iter: iter(j)?,
+                q: ev_num(j, "q")?,
+                audited: j
+                    .req("audited")?
+                    .as_bool()
+                    .ok_or_else(|| JsonError("field 'audited' is not a bool".into()))?,
+            }),
+            "fault_detected" => Ok(Event::FaultDetected {
+                iter: iter(j)?,
+                chunk: chunk(j)?,
+                owners: ev_workers(j, "owners")?,
+            }),
+            "reactive_redundancy" => Ok(Event::ReactiveRedundancy {
+                iter: iter(j)?,
+                chunk: chunk(j)?,
+                added: ev_workers(j, "added")?,
+            }),
+            "identified" => {
+                Ok(Event::Identified { iter: iter(j)?, workers: ev_workers(j, "workers")? })
+            }
+            "eliminated" => Ok(Event::Eliminated { iter: iter(j)?, worker: worker(j)? }),
+            "worker_crashed" => Ok(Event::WorkerCrashed { iter: iter(j)?, worker: worker(j)? }),
+            "straggler_abandoned" => {
+                Ok(Event::StragglerAbandoned { iter: iter(j)?, worker: worker(j)? })
+            }
+            "suspicion_updated" => Ok(Event::SuspicionUpdated {
+                iter: iter(j)?,
+                worker: worker(j)?,
+                suspicion: ev_num(j, "suspicion")?,
+            }),
+            "oracle_faulty_update" => Ok(Event::OracleFaultyUpdate { iter: iter(j)? }),
+            "shard" => Ok(Event::Shard {
+                shard: shard(j)?,
+                inner: Box::new(Event::from_json(j.req("inner")?)?),
+            }),
+            "shard_dead" => Ok(Event::ShardDead { iter: iter(j)?, shard: shard(j)? }),
+            "roster_eliminated" => Ok(Event::RosterEliminated {
+                iter: iter(j)?,
+                shard: shard(j)?,
+                worker: worker(j)?,
+            }),
+            other => Err(JsonError(format!("unknown event type '{other}'"))),
+        }
+    }
 }
 
 /// Append-only event log.
@@ -227,5 +424,101 @@ mod tests {
         assert_eq!(log.dead_shards(), vec![2]);
         assert_eq!(log.shard_events(1).len(), 1);
         assert!(log.shard_events(3).is_empty());
+    }
+
+    #[test]
+    fn flat_peels_exactly_one_shard_level() {
+        // Nothing in the protocol produces nested Shard wrapping, but
+        // flat()'s contract is "peel one level" — pin that down.
+        let nested = Event::Shard {
+            shard: 0,
+            inner: Box::new(Event::Shard {
+                shard: 1,
+                inner: Box::new(Event::Eliminated { iter: 2, worker: 7 }),
+            }),
+        };
+        let mut log = EventLog::default();
+        log.push(nested);
+        let flattened: Vec<&Event> = log.flat().collect();
+        assert_eq!(flattened.len(), 1);
+        // One peel leaves the inner Shard wrapper intact...
+        assert!(matches!(flattened[0], Event::Shard { shard: 1, .. }));
+        // ...so queries that match on leaf variants do NOT see through
+        // a double wrap:
+        assert_eq!(log.count(|e| matches!(e, Event::Eliminated { .. })), 0);
+        // shard_events unwraps the outer level only, and keys on the
+        // outer shard id.
+        assert_eq!(log.shard_events(0).len(), 1);
+        assert!(log.shard_events(1).is_empty());
+    }
+
+    #[test]
+    fn last_suspicion_is_emission_order_not_iter_order() {
+        let mut log = EventLog::default();
+        // Sharded pipelined runs can emit a later-iter score before an
+        // earlier-iter one; last_suspicion is documented as "most
+        // recently reported", i.e. log order.
+        log.push(Event::SuspicionUpdated { iter: 9, worker: 3, suspicion: 0.9 });
+        log.push(Event::SuspicionUpdated { iter: 4, worker: 3, suspicion: 0.1 });
+        assert_eq!(log.last_suspicion(3), Some(0.1));
+    }
+
+    #[test]
+    fn events_round_trip_through_json() {
+        use crate::util::json::Json;
+        let all = vec![
+            Event::AuditDecision { iter: 0, q: 0.337, audited: true },
+            Event::FaultDetected { iter: 1, chunk: 3, owners: vec![1, 2] },
+            Event::ReactiveRedundancy { iter: 1, chunk: 3, added: vec![0, 4, 5] },
+            Event::Identified { iter: 1, workers: vec![2] },
+            Event::Eliminated { iter: 1, worker: 2 },
+            Event::WorkerCrashed { iter: 2, worker: 4 },
+            Event::StragglerAbandoned { iter: 3, worker: 5 },
+            Event::SuspicionUpdated { iter: 4, worker: 5, suspicion: 0.625 },
+            Event::OracleFaultyUpdate { iter: 5 },
+            Event::Shard {
+                shard: 1,
+                inner: Box::new(Event::Eliminated { iter: 6, worker: 9 }),
+            },
+            Event::ShardDead { iter: 7, shard: 2 },
+            Event::RosterEliminated { iter: 7, shard: 2, worker: 11 },
+        ];
+        for e in &all {
+            // Through the value representation...
+            assert_eq!(&Event::from_json(&e.to_json()).unwrap(), e);
+            // ...and through the serialized text (the JSONL line body).
+            let text = e.to_json().to_string();
+            let parsed = Json::parse(&text).unwrap();
+            assert_eq!(&Event::from_json(&parsed).unwrap(), e, "round-trip of {text}");
+        }
+        assert!(Event::from_json(&Json::parse("{\"type\":\"nope\"}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn map_workers_remaps_every_worker_field() {
+        let mut bump = |w: WorkerId| w + 100;
+        let e = Event::Shard {
+            shard: 1,
+            inner: Box::new(Event::FaultDetected { iter: 0, chunk: 2, owners: vec![0, 3] }),
+        };
+        assert_eq!(
+            e.map_workers(&mut bump),
+            Event::Shard {
+                shard: 1,
+                inner: Box::new(Event::FaultDetected {
+                    iter: 0,
+                    chunk: 2,
+                    owners: vec![100, 103]
+                }),
+            }
+        );
+        let e = Event::SuspicionUpdated { iter: 1, worker: 7, suspicion: 0.5 };
+        assert_eq!(
+            e.map_workers(&mut bump),
+            Event::SuspicionUpdated { iter: 1, worker: 107, suspicion: 0.5 }
+        );
+        // Events with no worker dimension pass through unchanged.
+        let e = Event::AuditDecision { iter: 2, q: 0.1, audited: false };
+        assert_eq!(e.map_workers(&mut bump), e);
     }
 }

@@ -71,6 +71,12 @@ pub struct MasterOptions {
     /// Scenario knobs for `--transport sim` (latency distribution,
     /// stragglers, crash plan). Ignored by the threaded transport.
     pub sim: super::transport::SimConfig,
+    /// Flight-recorder tracing (`--trace` / `--events` /
+    /// `--metrics-out` / `--flight`): when set, every protocol core
+    /// gets a [`crate::trace::TraceHandle`] and the master reports its
+    /// own events through [`crate::trace::Recorder::on_master_event`].
+    /// `None` (the default) costs nothing on the hot path.
+    pub recorder: Option<Arc<crate::trace::Recorder>>,
 }
 
 impl Default for MasterOptions {
@@ -84,6 +90,7 @@ impl Default for MasterOptions {
             election: false,
             unaudited_filter: None,
             sim: super::transport::SimConfig::default(),
+            recorder: None,
         }
     }
 }
@@ -120,6 +127,12 @@ pub struct Master {
     agg: Vec<f32>,
     /// Reused per-chunk loss buffer.
     used_losses: Vec<f64>,
+    /// Wall-clock origin for the exclusive `wall_ns` accounting.
+    wall_origin: Instant,
+    /// End of the previous round's wall period (ns since
+    /// `wall_origin`): round t's `wall_ns` starts where round t-1's
+    /// ended, so pipelined rounds never double-count overlapped work.
+    last_wall_end_ns: u64,
 }
 
 impl Master {
@@ -261,6 +274,7 @@ impl Master {
             latency_us: cfg.cluster.latency_us,
             sim: opts.sim.clone(),
             adversary: controller,
+            recorder: opts.recorder.clone(),
         };
         let transport = ShardedTransport::build(&plan, &build, &engine)?;
         let ps = ParameterServer::new(
@@ -274,6 +288,7 @@ impl Master {
             opts.w_star.clone(),
             cfg.train.steps as u64,
             cfg.cluster.pipeline,
+            opts.recorder.clone(),
         )?;
         let d = engine.param_dim();
         Ok(Master {
@@ -286,6 +301,8 @@ impl Master {
             chunk_size,
             agg: vec![0.0f32; d],
             used_losses: Vec::new(),
+            wall_origin: Instant::now(),
+            last_wall_end_ns: 0,
         })
     }
 
@@ -322,7 +339,7 @@ impl Master {
             cfg.cluster.n
         );
         let policy = FaultCheckPolicy::new(cfg.policy.clone(), cfg.cluster.n, cfg.cluster.seed);
-        let core = ProtocolCore::new(
+        let mut core = ProtocolCore::new(
             transport,
             policy,
             ProtocolConfig {
@@ -337,6 +354,9 @@ impl Master {
                 pipeline: cfg.cluster.pipeline,
             },
         );
+        if let Some(rec) = &opts.recorder {
+            core.set_recorder(rec.clone().handle());
+        }
         let d = engine.param_dim();
         Ok(Master {
             cfg,
@@ -348,6 +368,8 @@ impl Master {
             chunk_size,
             agg: vec![0.0f32; d],
             used_losses: Vec::new(),
+            wall_origin: Instant::now(),
+            last_wall_end_ns: 0,
         })
     }
 
@@ -392,12 +414,12 @@ impl Master {
     /// One full single-core protocol iteration (unpipelined):
     /// begin → collect → finish back-to-back, then aggregate + update.
     fn iteration(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
-        let t0 = Instant::now();
+        let start_wall_ns = self.wall_origin.elapsed().as_nanos() as u64;
         let dataset = self.dataset.clone();
         let theta = Arc::new(self.theta.clone());
         self.core_mut().begin_round_sampled(t, &theta, dataset.as_ref())?;
         self.core_mut().collect_proactive(t, &theta, dataset.as_ref(), events)?;
-        self.apply_finished_round(t, &theta, t0, events)
+        self.apply_finished_round(t, &theta, start_wall_ns, events)
     }
 
     /// Software-pipelined single-core driver (`--pipeline DEPTH ≥ 2`).
@@ -429,7 +451,7 @@ impl Master {
         let mut theta_t = Arc::new(self.theta.clone());
         self.core_mut().begin_round_sampled(0, &theta_t, dataset.as_ref())?;
         for t in 0..steps {
-            let t0 = Instant::now();
+            let start_wall_ns = self.wall_origin.elapsed().as_nanos() as u64;
             self.core_mut().collect_proactive(t, &theta_t, dataset.as_ref(), events)?;
 
             // speculate: provisional θ' from t's pre-audit symbols
@@ -453,7 +475,7 @@ impl Master {
             }
 
             // retire round t: audit, vote, eliminate, exact update
-            let rec = self.apply_finished_round(t, &theta_t, t0, events)?;
+            let rec = self.apply_finished_round(t, &theta_t, start_wall_ns, events)?;
             let caught_liar = rec.identified > 0;
             metrics.push(rec);
 
@@ -478,11 +500,17 @@ impl Master {
     /// metrics record. Shared by the sequential and pipelined drivers;
     /// `theta` must be the θ the round's surviving proactive wave was
     /// issued on, so audit recomputations compare like with like.
+    /// `start_wall_ns` is the round's wall start (ns since
+    /// `wall_origin`); the reported `wall_ns` is **exclusive** — it
+    /// runs from `max(start, previous round's end)`, so the per-round
+    /// wall periods tile the run without double-counting the overlap a
+    /// pipelined driver creates (mirrors `round_ns` on the transport
+    /// clock).
     fn apply_finished_round(
         &mut self,
         t: u64,
         theta: &Arc<Vec<f32>>,
-        t0: Instant,
+        start_wall_ns: u64,
         events: &mut EventLog,
     ) -> Result<IterationRecord> {
         let dataset = self.dataset.clone();
@@ -512,7 +540,11 @@ impl Master {
         }
         Self::aggregate_round(&mut self.agg, round, out.audited, f_t, n, d, &self.opts);
         if oracle_faulty {
-            events.push(Event::OracleFaultyUpdate { iter: t });
+            let e = Event::OracleFaultyUpdate { iter: t };
+            if let Some(rec) = &self.opts.recorder {
+                rec.on_master_event(None, &e);
+            }
+            events.push(e);
         }
         engine.sgd_step(&mut self.theta, &self.agg, self.cfg.train.lr)?;
 
@@ -525,6 +557,12 @@ impl Master {
             .sum::<u64>()
             + out.master_computed_points;
         let (lambda, _) = core.policy().adaptive_state();
+        // exclusive wall period: from wherever the previous round's
+        // wall period ended (or this round's start, whichever is
+        // later) to now — pipelined overlap is counted exactly once
+        let now_wall_ns = self.wall_origin.elapsed().as_nanos() as u64;
+        let wall_ns = now_wall_ns.saturating_sub(start_wall_ns.max(self.last_wall_end_ns));
+        self.last_wall_end_ns = now_wall_ns;
         Ok(IterationRecord {
             iter: t,
             gradients_used: out.gradients_used,
@@ -542,7 +580,7 @@ impl Master {
                 .w_star
                 .as_ref()
                 .map(|w| crate::linalg::dist2(&self.theta, w)),
-            wall_ns: t0.elapsed().as_nanos() as u64,
+            wall_ns,
             round_ns: out.round_ns,
             bytes_round: out.bytes_round,
             pipeline_depth: self.cfg.cluster.pipeline.max(1),

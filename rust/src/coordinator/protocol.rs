@@ -104,6 +104,7 @@ use super::{ChunkId, WorkerId, MASTER_SENTINEL};
 use crate::config::GatherPolicy;
 use crate::data::Dataset;
 use crate::grad::GradientComputer;
+use crate::trace::TraceHandle;
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 use crate::Result;
@@ -373,6 +374,10 @@ pub struct ProtocolCore {
     abandon_streak: Vec<u32>,
     /// Read-only observer of assignments + events (None = silent).
     tap: Option<Arc<dyn ProtocolTap>>,
+    /// Flight-recorder handle ([`crate::trace::Recorder`]); None =
+    /// tracing off. Checked once per event / wave / round — never in
+    /// the per-symbol hot loop.
+    recorder: Option<TraceHandle>,
 }
 
 impl ProtocolCore {
@@ -400,6 +405,7 @@ impl ProtocolCore {
             loss_scratch: Vec::new(),
             abandon_streak: vec![0; n],
             tap: None,
+            recorder: None,
         }
     }
 
@@ -410,8 +416,26 @@ impl ProtocolCore {
         self.tap = Some(tap);
     }
 
-    /// Mirror an event to the tap (if any), then log it.
-    fn emit(tap: &Option<Arc<dyn ProtocolTap>>, events: &mut EventLog, e: Event) {
+    /// Install a flight-recorder handle ([`crate::trace::Recorder`]).
+    /// Like the tap, the recorder is read-only; unlike the tap it also
+    /// timestamps everything it sees on the transport clock.
+    pub fn set_recorder(&mut self, recorder: TraceHandle) {
+        self.recorder = Some(recorder);
+    }
+
+    /// Mirror an event to the tap and the recorder (if any), then log
+    /// it. The recorder stamp is the transport clock at emit time,
+    /// computed only when a recorder is installed.
+    fn emit(
+        tap: &Option<Arc<dyn ProtocolTap>>,
+        recorder: &Option<TraceHandle>,
+        transport: &dyn Transport,
+        events: &mut EventLog,
+        e: Event,
+    ) {
+        if let Some(r) = recorder {
+            r.on_event(transport.now_ns(), &e);
+        }
         if let Some(t) = tap {
             t.on_event(&e);
         }
@@ -581,6 +605,9 @@ impl ProtocolCore {
         let start_ns = self.transport.now_ns();
         self.transport.submit(t, Phase::Proactive.wire(), wave, theta, bundles)?;
         self.live_waves.push(wave);
+        if let Some(rec) = &self.recorder {
+            rec.wave_begin(t, wave, Phase::Proactive.wire() as u8, start_ns, outstanding.len());
+        }
         Ok((wave, outstanding, start_ns))
     }
 
@@ -612,6 +639,9 @@ impl ProtocolCore {
         // provisional θ must never reach the authoritative round
         self.live_waves.retain(|&w| w != pr.wave);
         self.mailbox.retain(|(_, r)| r.wave != pr.wave);
+        if let Some(rec) = &self.recorder {
+            rec.wave_reissued(t, pr.wave, self.transport.now_ns());
+        }
         let f_t = self.f_t();
         let r = self.policy.proactive_r(f_t).min(self.active.len());
         let chunks = std::mem::take(&mut pr.round.assignment.chunks);
@@ -764,7 +794,7 @@ impl ProtocolCore {
         // suspicion-ranked re-replication below — see current timing
         for (w, s) in self.policy.refresh_suspicion(&self.active) {
             let e = Event::SuspicionUpdated { iter: t, worker: w, suspicion: s };
-            Self::emit(&self.tap, events, e);
+            Self::emit(&self.tap, &self.recorder, &*self.transport, events, e);
         }
 
         // ---- audit decision --------------------------------------------
@@ -773,6 +803,8 @@ impl ProtocolCore {
         let audited = decision != AuditDecision::Skip;
         Self::emit(
             &self.tap,
+            &self.recorder,
+            &*self.transport,
             events,
             Event::AuditDecision { iter: t, q: self.policy.last_q, audited },
         );
@@ -853,9 +885,21 @@ impl ProtocolCore {
                             .collect();
                         Self::emit(
                             &self.tap,
+                            &self.recorder,
+                            &*self.transport,
                             events,
                             Event::FaultDetected { iter: t, chunk: c, owners: owners.clone() },
                         );
+                        // the ledger keeps each disagreeing copy's
+                        // packed-symbol hash as detection evidence
+                        if let Some(rec) = &self.recorder {
+                            rec.detection_evidence(
+                                self.transport.now_ns(),
+                                t,
+                                c,
+                                &round.chunks[c].copies,
+                            );
+                        }
                         self.policy.report_suspects(&owners);
                         flagged.push(c);
                     }
@@ -906,6 +950,16 @@ impl ProtocolCore {
                             })
                             .map(|s| s.worker)
                             .collect();
+                        if let Some(rec) = &self.recorder {
+                            rec.vote_evidence(
+                                self.transport.now_ns(),
+                                t,
+                                c,
+                                &round.chunks[c].copies,
+                                &master_copy,
+                                &liars,
+                            );
+                        }
                         self.finish_vote(t, c, &mut round, master_copy, liars, &mut identified_now, events);
                     }
                 } else {
@@ -930,6 +984,16 @@ impl ProtocolCore {
                             loss: vote.loss,
                             wire: vote.wire,
                         };
+                        if let Some(rec) = &self.recorder {
+                            rec.vote_evidence(
+                                self.transport.now_ns(),
+                                t,
+                                c,
+                                &round.chunks[c].copies,
+                                &winner,
+                                &vote.liars,
+                            );
+                        }
                         self.finish_vote(t, c, &mut round, winner, vote.liars, &mut identified_now, events);
                     }
                 }
@@ -944,6 +1008,9 @@ impl ProtocolCore {
         let now = self.transport.now_ns();
         let round_ns = now.saturating_sub(start_ns.max(self.last_round_end_ns));
         self.last_round_end_ns = now;
+        if let Some(rec) = &self.recorder {
+            rec.round_finished(t, start_ns, now, round_ns, self.round.bytes);
+        }
         Ok(RoundOutcome {
             gradients_used: m,
             audited,
@@ -1065,6 +1132,9 @@ impl ProtocolCore {
                 self.policy
                     .observe_latency(response.worker, at_ns.saturating_sub(first));
             }
+            if let Some(rec) = &self.recorder {
+                rec.delivery(t, wave, response.worker, start_ns, at_ns);
+            }
             self.abandon_streak[response.worker] = 0;
             waiting[response.worker] = false;
             remaining -= 1;
@@ -1105,6 +1175,9 @@ impl ProtocolCore {
                                     at_ns.saturating_sub(first),
                                 );
                             }
+                            if let Some(rec) = &self.recorder {
+                                rec.delivery(t, wave, response.worker, start_ns, at_ns);
+                            }
                             // a delivered wave breaks the worker's
                             // consecutive-abandonment streak
                             self.abandon_streak[response.worker] = 0;
@@ -1127,6 +1200,9 @@ impl ProtocolCore {
         }
         // this wave is over: whatever it still delivers is dead
         self.live_waves.retain(|&w| w != wave);
+        if let Some(rec) = &self.recorder {
+            rec.wave_end(wave, self.transport.now_ns(), responses.len());
+        }
         // quorum/deadline early exit: abandon the stragglers this round
         // (censored samples use the same baseline as regular
         // observations — excess behind the wave's first arrival — so
@@ -1146,7 +1222,13 @@ impl ProtocolCore {
                 self.abandon_streak[w] = self.abandon_streak[w].saturating_add(1);
                 round.assignment.retire(w);
                 stragglers_now.push(w);
-                Self::emit(&self.tap, events, Event::StragglerAbandoned { iter: t, worker: w });
+                Self::emit(
+                    &self.tap,
+                    &self.recorder,
+                    &*self.transport,
+                    events,
+                    Event::StragglerAbandoned { iter: t, worker: w },
+                );
             }
         }
         responses.sort_by_key(|r| r.worker);
@@ -1202,6 +1284,8 @@ impl ProtocolCore {
                 if phase == Phase::Reactive {
                     Self::emit(
                         &self.tap,
+                        &self.recorder,
+                        &*self.transport,
                         events,
                         Event::ReactiveRedundancy { iter: t, chunk: c, added: added.clone() },
                     );
@@ -1232,6 +1316,9 @@ impl ProtocolCore {
             let start_ns = self.transport.now_ns();
             self.transport.submit(t, phase.wire(), wave, theta, bundles)?;
             self.live_waves.push(wave);
+            if let Some(rec) = &self.recorder {
+                rec.wave_begin(t, wave, phase.wire() as u8, start_ns, outstanding.len());
+            }
             // top-up waves always wait for every requested copy: only
             // the initial proactive wave is quorum-relaxed
             let mut no_stragglers = Vec::new();
@@ -1280,7 +1367,13 @@ impl ProtocolCore {
             pr.round.assignment.retire(w);
         }
         self.policy.report_crashed(w);
-        Self::emit(&self.tap, events, Event::WorkerCrashed { iter: t, worker: w });
+        Self::emit(
+            &self.tap,
+            &self.recorder,
+            &*self.transport,
+            events,
+            Event::WorkerCrashed { iter: t, worker: w },
+        );
     }
 
     /// Common tail of both identification paths: store the corrected
@@ -1300,7 +1393,13 @@ impl ProtocolCore {
         if liars.is_empty() {
             return;
         }
-        Self::emit(&self.tap, events, Event::Identified { iter: t, workers: liars.clone() });
+        Self::emit(
+            &self.tap,
+            &self.recorder,
+            &*self.transport,
+            events,
+            Event::Identified { iter: t, workers: liars.clone() },
+        );
         if self.cfg.no_eliminate {
             return;
         }
@@ -1309,7 +1408,13 @@ impl ProtocolCore {
                 self.active.remove(pos);
                 self.eliminated.push(w);
                 self.policy.report_identified(w);
-                Self::emit(&self.tap, events, Event::Eliminated { iter: t, worker: w });
+                Self::emit(
+                    &self.tap,
+                    &self.recorder,
+                    &*self.transport,
+                    events,
+                    Event::Eliminated { iter: t, worker: w },
+                );
                 identified_now.push(w);
             }
         }

@@ -24,6 +24,7 @@ use super::{Roster, ShardRound, ShardedTransport};
 use crate::data::Dataset;
 use crate::grad::GradientComputer;
 use crate::linalg;
+use crate::trace::Recorder;
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 use crate::Result;
@@ -106,12 +107,17 @@ fn absorb(
     t: u64,
     losses: &mut Vec<f64>,
     roster: &mut Roster,
+    recorder: &Option<Arc<Recorder>>,
     events: &mut EventLog,
 ) -> ShardStat {
     let shard = round.stat.shard;
     for &w in &round.identified {
         if roster.publish_elimination(w, shard, t) {
-            events.push(Event::RosterEliminated { iter: t, shard, worker: w });
+            let ev = Event::RosterEliminated { iter: t, shard, worker: w };
+            if let Some(rec) = recorder {
+                rec.on_master_event(Some(shard), &ev);
+            }
+            events.push(ev);
         }
     }
     for &w in &round.crashed {
@@ -141,6 +147,15 @@ pub struct ParameterServer {
     pending: Vec<GlobalPending>,
     /// Reused per-chunk loss buffer.
     losses: Vec<f64>,
+    /// Flight recorder for master-level events (shard deaths, roster
+    /// eliminations, oracle faulty updates). `None` costs nothing.
+    recorder: Option<Arc<Recorder>>,
+    /// Wall-clock origin for the exclusive `wall_ns` accounting.
+    wall_origin: Instant,
+    /// End of the previous round's wall period (ns since
+    /// `wall_origin`) — see `coordinator::master::apply_finished_round`
+    /// for the exclusive-tiling contract.
+    last_wall_end_ns: u64,
 }
 
 impl ParameterServer {
@@ -156,6 +171,7 @@ impl ParameterServer {
         w_star: Option<Vec<f32>>,
         steps: u64,
         pipeline: usize,
+        recorder: Option<Arc<Recorder>>,
     ) -> Result<ParameterServer> {
         anyhow::ensure!(chunk_size > 0, "chunk_size must be positive");
         anyhow::ensure!(
@@ -179,6 +195,9 @@ impl ParameterServer {
             pipeline,
             pending: Vec::new(),
             losses: Vec::new(),
+            recorder,
+            wall_origin: Instant::now(),
+            last_wall_end_ns: 0,
         })
     }
 
@@ -203,7 +222,7 @@ impl ParameterServer {
     }
 
     fn run_round_sequential(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
-        let t0 = Instant::now();
+        let start_wall_ns = self.wall_origin.elapsed().as_nanos() as u64;
         let cs = self.chunk_size;
         let k = self.transport.k();
 
@@ -269,7 +288,14 @@ impl ParameterServer {
                     acc.q_n += 1;
                     acc.partials[s] = round.partial.take();
                     acc.suspicion.append(&mut round.suspicion);
-                    let stat = absorb(round, t, &mut self.losses, &mut self.roster, events);
+                    let stat = absorb(
+                        round,
+                        t,
+                        &mut self.losses,
+                        &mut self.roster,
+                        &self.recorder,
+                        events,
+                    );
                     acc.shard_stats.push(stat);
                 }
                 Some(Err(e)) => {
@@ -280,7 +306,7 @@ impl ParameterServer {
                 }
             }
         }
-        self.rescue_and_fuse(t, &theta, acc, total, t0, events)
+        self.rescue_and_fuse(t, &theta, acc, total, start_wall_ns, events)
     }
 
     /// Pipelined global round: (begin if not speculated earlier) →
@@ -290,7 +316,7 @@ impl ParameterServer {
     /// apply point; a shard death during begin/collect flushes the
     /// speculation for one round.
     fn run_round_pipelined(&mut self, t: u64, events: &mut EventLog) -> Result<IterationRecord> {
-        let t0 = Instant::now();
+        let start_wall_ns = self.wall_origin.elapsed().as_nanos() as u64;
         if !self.pending.iter().any(|p| p.t == t) {
             let theta = Arc::new(self.theta.clone());
             self.begin_global(t, &theta)?;
@@ -313,7 +339,7 @@ impl ParameterServer {
             }
         }
 
-        let rec = self.finish_global(t, t0, events)?;
+        let rec = self.finish_global(t, start_wall_ns, events)?;
 
         // ordered θ application: reissue t+1 on the exact θ iff the
         // speculation was wrong
@@ -459,7 +485,7 @@ impl ParameterServer {
     fn finish_global(
         &mut self,
         t: u64,
-        t0: Instant,
+        start_wall_ns: u64,
         events: &mut EventLog,
     ) -> Result<IterationRecord> {
         let idx = self
@@ -500,7 +526,14 @@ impl ParameterServer {
                             acc.q_n += 1;
                             acc.partials[s] = round.partial.take();
                             acc.suspicion.append(&mut round.suspicion);
-                            let stat = absorb(round, t, &mut self.losses, &mut self.roster, events);
+                            let stat = absorb(
+                                round,
+                                t,
+                                &mut self.losses,
+                                &mut self.roster,
+                                &self.recorder,
+                                events,
+                            );
                             acc.shard_stats.push(stat);
                         }
                         Err(e) => {
@@ -516,7 +549,7 @@ impl ParameterServer {
                 SlotState::Orphaned => orphan_range(&mut acc),
             }
         }
-        self.rescue_and_fuse(t, &theta, acc, total, t0, events)
+        self.rescue_and_fuse(t, &theta, acc, total, start_wall_ns, events)
     }
 
     /// Retire every in-flight speculative wave for iteration `t` and
@@ -555,12 +588,20 @@ impl ParameterServer {
         events: &mut EventLog,
     ) -> usize {
         log::warn!("shard {s} died at iteration {t}: {e:#}");
-        events.push(Event::ShardDead { iter: t, shard: s });
+        let dead = Event::ShardDead { iter: t, shard: s };
+        if let Some(rec) = &self.recorder {
+            rec.on_master_event(Some(s), &dead);
+        }
+        events.push(dead);
         // eliminations from the failed round would otherwise be lost
         // with the error — publish them first
         for w in self.transport.cores()[s].eliminated_globals() {
             if self.roster.publish_elimination(w, s, t) {
-                events.push(Event::RosterEliminated { iter: t, shard: s, worker: w });
+                let ev = Event::RosterEliminated { iter: t, shard: s, worker: w };
+                if let Some(rec) = &self.recorder {
+                    rec.on_master_event(Some(s), &ev);
+                }
+                events.push(ev);
             }
         }
         let stranded = self.transport.fail_shard(s);
@@ -575,13 +616,16 @@ impl ParameterServer {
 
     /// Rescue orphaned chunks through survivors, then fuse the partial
     /// aggregates, apply the SGD step, and build the metrics record.
+    /// The reported `wall_ns` is **exclusive**: it runs from
+    /// `max(start_wall_ns, previous round's wall end)`, so pipelined
+    /// rounds tile the run's wall time without double-counting overlap.
     fn rescue_and_fuse(
         &mut self,
         t: u64,
         theta: &Arc<Vec<f32>>,
         mut acc: RoundAccum,
         total: usize,
-        t0: Instant,
+        start_wall_ns: u64,
         events: &mut EventLog,
     ) -> Result<IterationRecord> {
         let cs = self.chunk_size;
@@ -626,7 +670,14 @@ impl ParameterServer {
                         rescue_partials.push(p);
                     }
                     acc.suspicion.append(&mut round.suspicion);
-                    let stat = absorb(round, t, &mut self.losses, &mut self.roster, events);
+                    let stat = absorb(
+                        round,
+                        t,
+                        &mut self.losses,
+                        &mut self.roster,
+                        &self.recorder,
+                        events,
+                    );
                     acc.shard_stats.push(stat);
                 }
                 Err(e) => {
@@ -647,7 +698,11 @@ impl ParameterServer {
         let mut agg = agg.expect("at least one partial aggregate");
         linalg::scale(1.0 / nchunks as f32, &mut agg);
         if acc.oracle_faulty {
-            events.push(Event::OracleFaultyUpdate { iter: t });
+            let ev = Event::OracleFaultyUpdate { iter: t };
+            if let Some(rec) = &self.recorder {
+                rec.on_master_event(None, &ev);
+            }
+            events.push(ev);
         }
         self.engine.sgd_step(&mut self.theta, &agg, self.lr)?;
 
@@ -697,7 +752,13 @@ impl ParameterServer {
             lambda: if q_n > 0 { lambda_sum / q_n as f64 } else { 0.0 },
             oracle_faulty_update: oracle_faulty,
             dist_to_opt: self.w_star.as_ref().map(|w| linalg::dist2(&self.theta, w)),
-            wall_ns: t0.elapsed().as_nanos() as u64,
+            wall_ns: {
+                let now_wall_ns = self.wall_origin.elapsed().as_nanos() as u64;
+                let wall_ns =
+                    now_wall_ns.saturating_sub(start_wall_ns.max(self.last_wall_end_ns));
+                self.last_wall_end_ns = now_wall_ns;
+                wall_ns
+            },
             round_ns: fan_round_ns + rescue_round_ns,
             bytes_round,
             pipeline_depth: self.pipeline.max(1),

@@ -68,6 +68,11 @@ pub struct ShardBuildConfig {
     /// global ones. Replaces the stateless `attack` path for the
     /// configured Byzantine ids when set.
     pub adversary: Option<Arc<AdversaryController>>,
+    /// Flight recorder: each shard core gets a
+    /// [`crate::trace::TraceHandle`] that shard-wraps its events and
+    /// remaps local worker ids to global ones, exactly like the
+    /// `EventLog` the parameter server keeps.
+    pub recorder: Option<Arc<crate::trace::Recorder>>,
 }
 
 /// Scale a cluster-level gather policy to one shard: `Quorum { k }`
@@ -195,6 +200,9 @@ impl ShardedTransport {
             if let Some(c) = &cfg.adversary {
                 // the tap remaps this shard's local ids to global ones
                 core.set_tap(Arc::new(CoreTap::new(c.clone(), spec.shard, spec.lo)));
+            }
+            if let Some(rec) = &cfg.recorder {
+                core.set_recorder(rec.clone().shard_handle(spec.shard, spec.lo));
             }
             cores.push(ShardCore::new(spec.clone(), core));
         }

@@ -56,6 +56,9 @@ pub struct RunSpec {
     pub pipeline: usize,
     /// Election decode measurement mode (E13).
     pub election: bool,
+    /// Flight recorder (tracing + evidence ledger + metrics); `None`
+    /// costs nothing.
+    pub recorder: Option<Arc<crate::trace::Recorder>>,
 }
 
 impl RunSpec {
@@ -83,6 +86,7 @@ impl RunSpec {
             sim: SimConfig::default(),
             pipeline: 1,
             election: false,
+            recorder: None,
         }
     }
 
@@ -156,6 +160,11 @@ impl RunSpec {
         self
     }
 
+    pub fn recorder(mut self, rec: Arc<crate::trace::Recorder>) -> Self {
+        self.recorder = Some(rec);
+        self
+    }
+
     /// Run on the native linreg workload; returns the outcome plus the
     /// planted optimum.
     pub fn run_linreg(&self) -> Result<(TrainOutcome, Vec<f32>)> {
@@ -186,6 +195,7 @@ impl RunSpec {
             unaudited_filter: self.unaudited_filter.clone(),
             election: self.election,
             sim: self.sim.clone(),
+            recorder: self.recorder.clone(),
             ..Default::default()
         };
         let master = Master::new(cfg, opts, engine, ds, theta0, self.chunk)?;

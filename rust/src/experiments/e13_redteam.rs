@@ -51,6 +51,10 @@ struct Cell {
     faulty_updates: usize,
     final_dist: f64,
     honest_eliminated: usize,
+    /// Every elimination carried a complete evidence chain (detection
+    /// hashes → reactive top-up → 2f_t+1 vote) in the flight
+    /// recorder's ledger. Vacuously true when nothing was eliminated.
+    evidence_complete: bool,
 }
 
 const N: usize = 16;
@@ -77,7 +81,19 @@ fn run_cell(
     if let Some(kind) = adversary {
         spec = spec.adversary(kind);
     }
+    // flight recorder attached per cell: the evidence ledger must
+    // justify every elimination the matrix reports
+    let recorder = crate::trace::Recorder::new();
+    spec = spec.recorder(recorder.clone());
     let (out, w_star) = spec.run_linreg()?;
+    for &w in &out.eliminated {
+        let chains = recorder.evidence_for(w);
+        anyhow::ensure!(
+            chains.iter().any(|c| c.complete()),
+            "worker {w} eliminated without a complete evidence chain \
+             (detection → reactive top-up → vote) under {attacker_name} x {policy_name}"
+        );
+    }
     let identified_at = BYZ
         .iter()
         .map(|&w| out.events.identification_time(w))
@@ -97,6 +113,7 @@ fn run_cell(
         faulty_updates: out.events.oracle_faulty_updates(),
         final_dist: crate::linalg::dist2(&out.theta, &w_star) as f64,
         honest_eliminated,
+        evidence_complete: true, // ensured above, per elimination
     })
 }
 
@@ -209,6 +226,10 @@ pub fn run_e13(fast: bool) -> Result<()> {
                     Json::Num(cell.faulty_updates as f64),
                 );
                 obj.insert("final_dist".to_string(), Json::Num(cell.final_dist));
+                obj.insert(
+                    "evidence_complete".to_string(),
+                    Json::Bool(cell.evidence_complete),
+                );
                 rows.push(Json::Obj(obj));
             }
         }
@@ -273,6 +294,10 @@ pub fn run_e13(fast: bool) -> Result<()> {
             spec = spec.adversary(*kind);
         }
         let election_spec = spec.clone().election(true);
+        // the ledger must justify eliminations on packed wires too:
+        // the chain hashes are over the wire bytes detection compared
+        let recorder = crate::trace::Recorder::new();
+        spec = spec.recorder(recorder.clone());
         let (out, w_star) = spec.run_linreg()?;
         let honest_eliminated = out.eliminated.iter().filter(|w| !BYZ.contains(w)).count();
         anyhow::ensure!(
@@ -280,6 +305,13 @@ pub fn run_e13(fast: bool) -> Result<()> {
             "exactness violated under compressed symbols: {honest_eliminated} honest \
              workers eliminated under {attacker_name}"
         );
+        for &w in &out.eliminated {
+            anyhow::ensure!(
+                recorder.evidence_for(w).iter().any(|c| c.complete()),
+                "worker {w} eliminated without a complete evidence chain under \
+                 compressed symbols x {attacker_name}"
+            );
+        }
         let identified_at = BYZ
             .iter()
             .map(|&w| out.events.identification_time(w))

@@ -36,6 +36,9 @@
 //! * [`baselines`] — DRACO and gradient-filter comparators.
 //! * [`adversary`] — coordinated, protocol-aware Byzantine strategies
 //!   (the red-team layer; `--adversary <strategy>`).
+//! * [`trace`] — flight-recorder tracing, the forensic evidence
+//!   ledger, and the Prometheus metrics surface (`--trace`,
+//!   `--events`, `--metrics-out`, `--flight`).
 
 pub mod adversary;
 pub mod baselines;
@@ -46,6 +49,7 @@ pub mod experiments;
 pub mod grad;
 pub mod linalg;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 
 pub type Result<T> = anyhow::Result<T>;

@@ -10,6 +10,8 @@
 //!                   [--adversary assignment-aware|sleeper[:W]|audit-evader[:C]
 //!                   |latency-mimic|shard-equivocator]
 //!                   [--p 1.0] [--steps 200] [--seed 42] [--csv out.csv]
+//!                   [--trace out.json] [--events out.jsonl]
+//!                   [--metrics-out metrics.prom] [--flight flight.json]
 //! r3bft experiment  <e1..e13|all> [--full]
 //! r3bft inspect     [--artifacts artifacts]
 //! r3bft help
@@ -107,7 +109,18 @@ TRAIN OPTIONS (defaults in parens):
   --steps S          iterations (200)   --lr LR step size (0.1)
   --seed S           RNG seed (42)      --self-check  master recomputes audits
   --artifacts DIR    artifacts dir for --engine xla (artifacts)
-  --csv FILE         write per-iteration metrics CSV"
+  --csv FILE         write per-iteration metrics CSV
+
+OBSERVABILITY (see docs/TRACING.md; any flag enables the recorder):
+  --trace FILE       write a Chrome trace-event JSON timeline (open in
+                     Perfetto / chrome://tracing): waves, rounds,
+                     per-worker deliveries, anomaly instants
+  --events FILE      stream the timestamped event log as JSON Lines
+                     during the run
+  --metrics-out FILE write a Prometheus text-format metrics snapshot
+                     (counters + round-time histogram) after the run
+  --flight FILE      write the flight-recorder forensic bundles and the
+                     full evidence ledger as JSON after the run"
     );
 }
 
@@ -231,7 +244,27 @@ fn run_train(args: &Args) -> Result<()> {
         Some(spec) => Some(r3bft::coordinator::compress::parse(spec)?),
         None => None,
     };
-    let opts = MasterOptions { self_check, w_star, compressor, ..Default::default() };
+    // any observability flag builds a recorder; none costs nothing
+    let trace_path = args.get("trace").map(String::from);
+    let events_path = args.get("events").map(String::from);
+    let metrics_path = args.get("metrics-out").map(String::from);
+    let flight_path = args.get("flight").map(String::from);
+    let recorder = (trace_path.is_some()
+        || events_path.is_some()
+        || metrics_path.is_some()
+        || flight_path.is_some())
+    .then(r3bft::trace::Recorder::new);
+    if let (Some(rec), Some(path)) = (&recorder, &events_path) {
+        let file = std::fs::File::create(path)?;
+        rec.set_events_sink(Box::new(std::io::BufWriter::new(file)));
+    }
+    let opts = MasterOptions {
+        self_check,
+        w_star,
+        compressor,
+        recorder: recorder.clone(),
+        ..Default::default()
+    };
 
     log::info!(
         "train: model={} engine={} n={} f={} shards={} transport={} gather={} policy={:?} attack={} steps={}",
@@ -273,6 +306,24 @@ fn run_train(args: &Args) -> Result<()> {
     if let Some(path) = csv_path {
         std::fs::write(&path, out.metrics.to_csv())?;
         println!("metrics csv          : {path}");
+    }
+    if let Some(rec) = &recorder {
+        rec.close_events_sink();
+        if let Some(path) = &events_path {
+            println!("events jsonl         : {path}");
+        }
+        if let Some(path) = &trace_path {
+            std::fs::write(path, rec.chrome_trace())?;
+            println!("chrome trace         : {path}");
+        }
+        if let Some(path) = &metrics_path {
+            std::fs::write(path, rec.prometheus())?;
+            println!("prometheus metrics   : {path}");
+        }
+        if let Some(path) = &flight_path {
+            std::fs::write(path, rec.flight_json())?;
+            println!("flight recorder      : {path}");
+        }
     }
     Ok(())
 }

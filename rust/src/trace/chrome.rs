@@ -1,0 +1,203 @@
+//! Chrome trace-event JSON exporter (`--trace out.json`).
+//!
+//! The layout maps protocol structure onto the trace viewer's
+//! process/thread grid: one **process (pid) per shard** (pid 0 for a
+//! single-master run), thread 0 is the protocol lane (async wave and
+//! round spans, anomaly instants), and **one thread per worker**
+//! (tid = global worker id + 1) carrying that worker's delivery spans.
+//! Open the file in [Perfetto](https://ui.perfetto.dev) or
+//! chrome://tracing; overlapping pipelined waves and reissue storms
+//! show up as overlapping async spans on the protocol lane.
+//!
+//! Timestamps are transport-clock ns divided by 1000 (the trace-event
+//! `ts` unit is µs). Built on [`crate::util::json::Json`] — object
+//! keys are sorted and floats print shortest-round-trip, so the same
+//! sim seed renders to byte-identical output.
+
+use crate::coordinator::Event;
+use crate::util::json::Json;
+
+use super::{obj, DeliverySpan, RoundSpan, StampedEvent, WaveSpan};
+
+fn us(ns: u64) -> Json {
+    Json::Num(ns as f64 / 1000.0)
+}
+
+fn phase_name(phase: u8) -> &'static str {
+    match phase {
+        0 => "proactive",
+        1 => "detection",
+        _ => "reactive",
+    }
+}
+
+/// Instant-worthy event kinds (detections, identifications, crashes,
+/// abandonments — not the per-round audit chatter).
+fn instant_name(e: &Event) -> Option<&'static str> {
+    match e {
+        Event::FaultDetected { .. } => Some("fault_detected"),
+        Event::ReactiveRedundancy { .. } => Some("reactive_redundancy"),
+        Event::Identified { .. } => Some("identified"),
+        Event::Eliminated { .. } => Some("eliminated"),
+        Event::WorkerCrashed { .. } => Some("worker_crashed"),
+        Event::StragglerAbandoned { .. } => Some("straggler_abandoned"),
+        Event::OracleFaultyUpdate { .. } => Some("oracle_faulty_update"),
+        Event::ShardDead { .. } => Some("shard_dead"),
+        Event::RosterEliminated { .. } => Some("roster_eliminated"),
+        _ => None,
+    }
+}
+
+fn async_pair(
+    name: String,
+    cat: &str,
+    id: String,
+    pid: usize,
+    begin_ns: u64,
+    end_ns: u64,
+    args: Json,
+) -> [Json; 2] {
+    let base = |ph: &str, ts: u64, args: Json| {
+        obj(vec![
+            ("name", Json::Str(name.clone())),
+            ("cat", Json::Str(cat.to_string())),
+            ("ph", Json::Str(ph.to_string())),
+            ("id", Json::Str(id.clone())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(0.0)),
+            ("ts", us(ts)),
+            ("args", args),
+        ])
+    };
+    [base("b", begin_ns, args), base("e", end_ns, Json::Null)]
+}
+
+/// Render all recorded spans and events as one Chrome trace document.
+pub(crate) fn render(
+    waves: &[WaveSpan],
+    deliveries: &[DeliverySpan],
+    rounds: &[RoundSpan],
+    events: &[StampedEvent],
+) -> String {
+    let mut te: Vec<Json> = Vec::new();
+
+    // Metadata: name every shard process and worker thread that
+    // appears anywhere in the data, in sorted order.
+    let mut shards: Vec<usize> = waves
+        .iter()
+        .map(|w| w.shard)
+        .chain(rounds.iter().map(|r| r.shard))
+        .chain(deliveries.iter().map(|d| d.shard))
+        .collect();
+    shards.sort_unstable();
+    shards.dedup();
+    let mut worker_threads: Vec<(usize, usize)> =
+        deliveries.iter().map(|d| (d.shard, d.worker)).collect();
+    worker_threads.sort_unstable();
+    worker_threads.dedup();
+    for &s in &shards {
+        te.push(obj(vec![
+            ("name", Json::Str("process_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(s as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", obj(vec![("name", Json::Str(format!("shard {s}")))])),
+        ]));
+        te.push(obj(vec![
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(s as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", obj(vec![("name", Json::Str("protocol".to_string()))])),
+        ]));
+    }
+    for &(s, w) in &worker_threads {
+        te.push(obj(vec![
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(s as f64)),
+            ("tid", Json::Num((w + 1) as f64)),
+            ("args", obj(vec![("name", Json::Str(format!("worker {w}")))])),
+        ]));
+    }
+
+    for r in rounds {
+        te.extend(async_pair(
+            format!("round {}", r.iter),
+            "round",
+            format!("r{}.{}", r.shard, r.iter),
+            r.shard,
+            r.start_ns,
+            r.end_ns,
+            obj(vec![
+                ("iter", Json::Num(r.iter as f64)),
+                ("round_ns", Json::Num(r.round_ns as f64)),
+                ("bytes", Json::Num(r.bytes as f64)),
+            ]),
+        ));
+    }
+
+    for w in waves {
+        te.extend(async_pair(
+            format!("{} wave i{}", phase_name(w.phase), w.iter),
+            "wave",
+            format!("w{}.{}", w.shard, w.wave),
+            w.shard,
+            w.start_ns,
+            w.end_ns.max(w.start_ns),
+            obj(vec![
+                ("iter", Json::Num(w.iter as f64)),
+                ("wave", Json::Num(w.wave as f64)),
+                ("phase", Json::Str(phase_name(w.phase).to_string())),
+                ("workers", Json::Num(w.workers as f64)),
+                ("responses", Json::Num(w.responses as f64)),
+                ("reissued", Json::Bool(w.reissued)),
+            ]),
+        ));
+    }
+
+    for d in deliveries {
+        te.push(obj(vec![
+            ("name", Json::Str(format!("delivery w{}", d.wave))),
+            ("cat", Json::Str("delivery".to_string())),
+            ("ph", Json::Str("X".to_string())),
+            ("pid", Json::Num(d.shard as f64)),
+            ("tid", Json::Num((d.worker + 1) as f64)),
+            ("ts", us(d.submit_ns)),
+            ("dur", us(d.at_ns.saturating_sub(d.submit_ns))),
+            (
+                "args",
+                obj(vec![
+                    ("iter", Json::Num(d.iter as f64)),
+                    ("wave", Json::Num(d.wave as f64)),
+                    ("worker", Json::Num(d.worker as f64)),
+                ]),
+            ),
+        ]));
+    }
+
+    for s in events {
+        let (pid, inner) = match &s.event {
+            Event::Shard { shard, inner } => (*shard, inner.as_ref()),
+            e => (0, e),
+        };
+        if let Some(name) = instant_name(inner) {
+            te.push(obj(vec![
+                ("name", Json::Str(name.to_string())),
+                ("cat", Json::Str("event".to_string())),
+                ("ph", Json::Str("i".to_string())),
+                ("s", Json::Str("p".to_string())),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(0.0)),
+                ("ts", us(s.at_ns)),
+                ("args", inner.to_json()),
+            ]));
+        }
+    }
+
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("traceEvents", Json::Arr(te)),
+    ])
+    .to_string()
+}

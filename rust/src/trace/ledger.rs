@@ -1,0 +1,270 @@
+//! Forensic evidence ledger: one chain per detected fault, from the
+//! policy coin that triggered the audit to the eliminations the vote
+//! produced.
+//!
+//! The paper's exactness claim (Definition 1) is only as good as the
+//! audit trail: a worker is eliminated iff a 2f_t+1 majority vote over
+//! bit-exact symbol copies named it a liar. The ledger materializes
+//! that trail as data — the audited chunk, the disagreeing
+//! packed-symbol hashes ([`crate::coordinator::codes::copy_key`]),
+//! the reactive top-up, the vote tally — so a red-team harness or an
+//! operator can check it per elimination instead of trusting the
+//! counter.
+//!
+//! Chains are keyed by `(shard, iter, chunk)` with shard-local chunk
+//! indexes (the parameter server's global chunk remap happens above
+//! the core that owns the evidence).
+
+use crate::coordinator::{ChunkId, Event, WorkerId, MASTER_SENTINEL};
+use crate::util::json::Json;
+
+use super::obj;
+
+/// The disagreeing copies behind a detection: each owner's
+/// packed-symbol hash (wire bytes when the symbol travelled packed,
+/// dense f32 bits otherwise). The master's self-check copy appears as
+/// [`MASTER_SENTINEL`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct DetectionEvidence {
+    pub hashes: Vec<(WorkerId, u64)>,
+}
+
+/// The resolved vote: tally of copies per distinct hash, the winning
+/// hash, and the workers whose copies disagreed with it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VoteEvidence {
+    /// `(hash, copies)` sorted by hash.
+    pub tally: Vec<(u64, usize)>,
+    pub winner: u64,
+    pub liars: Vec<WorkerId>,
+}
+
+/// One fault's full evidence chain: audit coin → detection → reactive
+/// top-up → vote → eliminations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvidenceChain {
+    pub shard: usize,
+    pub iter: u64,
+    /// Shard-local chunk index.
+    pub chunk: ChunkId,
+    /// The policy coin of the audit decision that exposed the fault.
+    pub q: f64,
+    pub audited: bool,
+    pub detection: Option<DetectionEvidence>,
+    /// Workers the reactive phase added to reach 2f_t+1 copies (empty
+    /// under `--self-check`, where the master recomputes instead).
+    pub topup: Vec<WorkerId>,
+    pub vote: Option<VoteEvidence>,
+    /// Workers eliminated on this chain's vote.
+    pub eliminated: Vec<WorkerId>,
+}
+
+impl EvidenceChain {
+    /// A chain is complete when all three replication-path stages are
+    /// present: detection hashes, a reactive top-up, and a vote. (The
+    /// self-check path legitimately has no top-up; callers asserting
+    /// completeness should know which path the run used.)
+    pub fn complete(&self) -> bool {
+        self.detection.is_some() && !self.topup.is_empty() && self.vote.is_some()
+    }
+
+    pub fn to_json(&self) -> Json {
+        fn worker_json(w: WorkerId) -> Json {
+            if w == MASTER_SENTINEL {
+                Json::Str("master".to_string())
+            } else {
+                Json::Num(w as f64)
+            }
+        }
+        fn workers_json(ws: &[WorkerId]) -> Json {
+            Json::Arr(ws.iter().map(|&w| worker_json(w)).collect())
+        }
+        let detection = match &self.detection {
+            Some(d) => Json::Arr(
+                d.hashes
+                    .iter()
+                    .map(|(w, h)| {
+                        obj(vec![
+                            ("worker", worker_json(*w)),
+                            ("hash", Json::Str(format!("{h:016x}"))),
+                        ])
+                    })
+                    .collect(),
+            ),
+            None => Json::Null,
+        };
+        let vote = match &self.vote {
+            Some(v) => obj(vec![
+                (
+                    "tally",
+                    Json::Arr(
+                        v.tally
+                            .iter()
+                            .map(|(h, n)| {
+                                obj(vec![
+                                    ("hash", Json::Str(format!("{h:016x}"))),
+                                    ("copies", Json::Num(*n as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("winner", Json::Str(format!("{:016x}", v.winner))),
+                ("liars", workers_json(&v.liars)),
+            ]),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("shard", Json::Num(self.shard as f64)),
+            ("iter", Json::Num(self.iter as f64)),
+            ("chunk", Json::Num(self.chunk as f64)),
+            ("q", Json::Num(self.q)),
+            ("audited", Json::Bool(self.audited)),
+            ("detection", detection),
+            ("topup", workers_json(&self.topup)),
+            ("vote", vote),
+            ("eliminated", workers_json(&self.eliminated)),
+            ("complete", Json::Bool(self.complete())),
+        ])
+    }
+}
+
+/// Assembles chains from the interleaved event/evidence stream. All
+/// worker ids arriving here are already global.
+#[derive(Default)]
+pub struct Ledger {
+    /// Last audit decision seen per shard: `(shard, iter, q, audited)`.
+    last_audit: Vec<(usize, u64, f64, bool)>,
+    pub chains: Vec<EvidenceChain>,
+}
+
+impl Ledger {
+    fn chain_mut(&mut self, shard: usize, iter: u64, chunk: ChunkId) -> &mut EvidenceChain {
+        if let Some(i) = self
+            .chains
+            .iter()
+            .rposition(|c| c.shard == shard && c.iter == iter && c.chunk == chunk)
+        {
+            return &mut self.chains[i];
+        }
+        let (q, audited) = self
+            .last_audit
+            .iter()
+            .find(|(s, i, _, _)| *s == shard && *i == iter)
+            .map(|(_, _, q, a)| (*q, *a))
+            .unwrap_or((0.0, false));
+        self.chains.push(EvidenceChain {
+            shard,
+            iter,
+            chunk,
+            q,
+            audited,
+            detection: None,
+            topup: Vec::new(),
+            vote: None,
+            eliminated: Vec::new(),
+        });
+        self.chains.last_mut().expect("just pushed")
+    }
+
+    /// Feed a protocol event (already unwrapped and id-remapped).
+    pub fn observe(&mut self, shard: usize, e: &Event) {
+        match e {
+            Event::AuditDecision { iter, q, audited } => {
+                match self.last_audit.iter_mut().find(|(s, _, _, _)| *s == shard) {
+                    Some(slot) => *slot = (shard, *iter, *q, *audited),
+                    None => self.last_audit.push((shard, *iter, *q, *audited)),
+                }
+            }
+            Event::ReactiveRedundancy { iter, chunk, added } => {
+                let chain = self.chain_mut(shard, *iter, *chunk);
+                chain.topup.extend_from_slice(added);
+            }
+            Event::Eliminated { iter, worker } => {
+                // Attach to the chain whose vote named this worker.
+                if let Some(c) = self.chains.iter_mut().rev().find(|c| {
+                    c.shard == shard
+                        && c.iter == *iter
+                        && c.vote.as_ref().is_some_and(|v| v.liars.contains(worker))
+                }) {
+                    c.eliminated.push(*worker);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    pub fn on_detection(
+        &mut self,
+        shard: usize,
+        iter: u64,
+        chunk: ChunkId,
+        hashes: Vec<(WorkerId, u64)>,
+    ) {
+        self.chain_mut(shard, iter, chunk).detection = Some(DetectionEvidence { hashes });
+    }
+
+    pub fn on_vote(
+        &mut self,
+        shard: usize,
+        iter: u64,
+        chunk: ChunkId,
+        tally: Vec<(u64, usize)>,
+        winner: u64,
+        liars: Vec<WorkerId>,
+    ) {
+        self.chain_mut(shard, iter, chunk).vote = Some(VoteEvidence { tally, winner, liars });
+    }
+
+    /// Chains whose vote named `worker` (global id) a liar.
+    pub fn evidence_for(&self, worker: WorkerId) -> Vec<EvidenceChain> {
+        self.chains
+            .iter()
+            .filter(|c| c.vote.as_ref().is_some_and(|v| v.liars.contains(&worker)))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_assembles_in_protocol_order() {
+        let mut l = Ledger::default();
+        l.observe(0, &Event::AuditDecision { iter: 3, q: 0.4, audited: true });
+        l.on_detection(0, 3, 2, vec![(1, 0xaa), (5, 0xbb)]);
+        l.observe(0, &Event::ReactiveRedundancy { iter: 3, chunk: 2, added: vec![0, 4, 6] });
+        l.on_vote(0, 3, 2, vec![(0xaa, 4), (0xbb, 1)], 0xaa, vec![5]);
+        l.observe(0, &Event::Eliminated { iter: 3, worker: 5 });
+
+        assert_eq!(l.chains.len(), 1);
+        let c = &l.chains[0];
+        assert!(c.complete());
+        assert_eq!(c.q, 0.4);
+        assert!(c.audited);
+        assert_eq!(c.eliminated, vec![5]);
+        assert_eq!(l.evidence_for(5).len(), 1);
+        assert!(l.evidence_for(1).is_empty());
+    }
+
+    #[test]
+    fn chains_are_keyed_per_shard_and_chunk() {
+        let mut l = Ledger::default();
+        l.on_detection(0, 1, 0, vec![(0, 1), (1, 2)]);
+        l.on_detection(1, 1, 0, vec![(8, 3), (9, 4)]);
+        assert_eq!(l.chains.len(), 2);
+        assert!(!l.chains[0].complete());
+    }
+
+    #[test]
+    fn incomplete_without_topup() {
+        let mut l = Ledger::default();
+        l.on_detection(0, 0, 1, vec![(2, 7), (3, 8)]);
+        l.on_vote(0, 0, 1, vec![(7, 3), (8, 1)], 7, vec![3]);
+        assert!(!l.chains[0].complete());
+        let j = l.chains[0].to_json().to_string();
+        assert!(j.contains("\"complete\":false"));
+    }
+}

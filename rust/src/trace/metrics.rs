@@ -1,0 +1,181 @@
+//! Counters + round-time histogram, rendered as Prometheus text
+//! exposition format (`--metrics-out`).
+//!
+//! The registry is deliberately static: a fixed counter list and fixed
+//! histogram buckets, so the snapshot is byte-deterministic and every
+//! counter is present (at zero) even in a quiet run — scrape configs
+//! and dashboards can rely on the full set existing.
+
+use crate::coordinator::Event;
+
+/// Every counter, in exposition order: `(name, help)`.
+pub const COUNTERS: [(&str, &str); 13] = [
+    ("r3bft_rounds_total", "Protocol rounds finished (per shard core)"),
+    ("r3bft_waves_total", "Transport waves submitted (proactive, detection, reactive)"),
+    ("r3bft_reissues_total", "Pipelined speculative waves retired and reissued"),
+    ("r3bft_deliveries_total", "Worker responses accepted by a gather"),
+    ("r3bft_bytes_total", "Honest wire bytes moved"),
+    ("r3bft_audits_total", "Audit decisions that fired"),
+    ("r3bft_detections_total", "Chunks whose replicated copies disagreed"),
+    ("r3bft_reactive_topups_total", "Chunks extended to 2f_t+1 copies by the reactive phase"),
+    ("r3bft_eliminated_total", "Workers identified as Byzantine and eliminated"),
+    ("r3bft_crashes_total", "Workers that crash-stopped"),
+    ("r3bft_stragglers_total", "Workers abandoned by a quorum/deadline gather"),
+    ("r3bft_oracle_faulty_updates_total", "Tampered gradients that entered an update (sim oracle)"),
+    ("r3bft_shard_deaths_total", "Shards that lost their last worker"),
+];
+
+const ROUNDS: usize = 0;
+const WAVES: usize = 1;
+const REISSUES: usize = 2;
+const DELIVERIES: usize = 3;
+const BYTES: usize = 4;
+const AUDITS: usize = 5;
+const DETECTIONS: usize = 6;
+const TOPUPS: usize = 7;
+const ELIMINATED: usize = 8;
+const CRASHES: usize = 9;
+const STRAGGLERS: usize = 10;
+const ORACLE_FAULTY: usize = 11;
+const SHARD_DEATHS: usize = 12;
+
+/// Round-time histogram bucket bounds, ns (`+Inf` is implicit).
+pub const ROUND_NS_BUCKETS: [u64; 8] = [
+    1_000,
+    10_000,
+    100_000,
+    1_000_000,
+    10_000_000,
+    100_000_000,
+    1_000_000_000,
+    10_000_000_000,
+];
+
+pub struct Registry {
+    counts: [u64; COUNTERS.len()],
+    /// Per-bucket counts; the last slot is `+Inf`.
+    round_ns_buckets: [u64; ROUND_NS_BUCKETS.len() + 1],
+    round_ns_sum: u64,
+    round_ns_count: u64,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry {
+            counts: [0; COUNTERS.len()],
+            round_ns_buckets: [0; ROUND_NS_BUCKETS.len() + 1],
+            round_ns_sum: 0,
+            round_ns_count: 0,
+        }
+    }
+}
+
+impl Registry {
+    pub fn count_event(&mut self, e: &Event) {
+        match e {
+            Event::AuditDecision { audited: true, .. } => self.counts[AUDITS] += 1,
+            Event::FaultDetected { .. } => self.counts[DETECTIONS] += 1,
+            Event::ReactiveRedundancy { .. } => self.counts[TOPUPS] += 1,
+            Event::Eliminated { .. } => self.counts[ELIMINATED] += 1,
+            Event::WorkerCrashed { .. } => self.counts[CRASHES] += 1,
+            Event::StragglerAbandoned { .. } => self.counts[STRAGGLERS] += 1,
+            Event::OracleFaultyUpdate { .. } => self.counts[ORACLE_FAULTY] += 1,
+            Event::ShardDead { .. } => self.counts[SHARD_DEATHS] += 1,
+            _ => {}
+        }
+    }
+
+    pub fn inc_wave(&mut self) {
+        self.counts[WAVES] += 1;
+    }
+
+    pub fn inc_reissue(&mut self) {
+        self.counts[REISSUES] += 1;
+    }
+
+    pub fn inc_delivery(&mut self) {
+        self.counts[DELIVERIES] += 1;
+    }
+
+    pub fn round_finished(&mut self, round_ns: u64, bytes: u64) {
+        self.counts[ROUNDS] += 1;
+        self.counts[BYTES] += bytes;
+        let i = ROUND_NS_BUCKETS
+            .iter()
+            .position(|&b| round_ns <= b)
+            .unwrap_or(ROUND_NS_BUCKETS.len());
+        self.round_ns_buckets[i] += 1;
+        self.round_ns_sum = self.round_ns_sum.saturating_add(round_ns);
+        self.round_ns_count += 1;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        COUNTERS
+            .iter()
+            .position(|(n, _)| *n == name)
+            .map(|i| self.counts[i])
+            .unwrap_or(0)
+    }
+
+    /// Prometheus text exposition format.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (i, (name, help)) in COUNTERS.iter().enumerate() {
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {}\n", self.counts[i]));
+        }
+        let name = "r3bft_round_time_ns";
+        out.push_str(&format!(
+            "# HELP {name} Exclusive round duration on the transport clock\n"
+        ));
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let mut cumulative = 0u64;
+        for (i, bound) in ROUND_NS_BUCKETS.iter().enumerate() {
+            cumulative += self.round_ns_buckets[i];
+            out.push_str(&format!("{name}_bucket{{le=\"{bound}\"}} {cumulative}\n"));
+        }
+        out.push_str(&format!(
+            "{name}_bucket{{le=\"+Inf\"}} {}\n",
+            self.round_ns_count
+        ));
+        out.push_str(&format!("{name}_sum {}\n", self.round_ns_sum));
+        out.push_str(&format!("{name}_count {}\n", self.round_ns_count));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_every_counter_even_at_zero() {
+        let r = Registry::default();
+        let text = r.render();
+        for (name, _) in COUNTERS {
+            assert!(
+                text.contains(&format!("\n{name} 0\n"))
+                    || text.starts_with(&format!("{name} 0")),
+                "missing counter {name}"
+            );
+            assert!(text.contains(&format!("# TYPE {name} counter")));
+        }
+        assert!(text.contains("r3bft_round_time_ns_bucket{le=\"+Inf\"} 0"));
+    }
+
+    #[test]
+    fn histogram_is_cumulative() {
+        let mut r = Registry::default();
+        r.round_finished(500, 10); // le=1000
+        r.round_finished(5_000, 10); // le=10000
+        r.round_finished(u64::MAX, 0); // +Inf
+        let text = r.render();
+        assert!(text.contains("r3bft_round_time_ns_bucket{le=\"1000\"} 1"));
+        assert!(text.contains("r3bft_round_time_ns_bucket{le=\"10000\"} 2"));
+        assert!(text.contains("r3bft_round_time_ns_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("r3bft_round_time_ns_count 3"));
+        assert_eq!(r.get("r3bft_rounds_total"), 3);
+        assert_eq!(r.get("r3bft_bytes_total"), 20);
+    }
+}

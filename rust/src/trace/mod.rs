@@ -1,0 +1,587 @@
+//! Structured tracing, flight recorder, and metrics exposition.
+//!
+//! Everything the protocol does is observable from three choke points:
+//! the single [`Event`] emit path in `ProtocolCore`, the wave
+//! submit/collect boundaries around the transport, and the round
+//! finish. A [`Recorder`] taps all three through per-core
+//! [`TraceHandle`]s and turns the stream into four artifacts:
+//!
+//! - **Spans** on the transport clock (virtual ns under `--transport
+//!   sim`, wall-clock under `threaded`): one [`RoundSpan`] per
+//!   protocol round, one [`WaveSpan`] per submitted wave (proactive,
+//!   detection, reactive — including reissued pipelined waves), one
+//!   [`DeliverySpan`] per accepted worker response. Exported as Chrome
+//!   trace-event JSON by [`Recorder::chrome_trace`] (see
+//!   [`chrome`]).
+//! - **Stamped events**: every [`Event`] with a transport-clock
+//!   timestamp and a global sequence number, exported as JSONL by
+//!   [`Recorder::events_jsonl`] or streamed live through
+//!   [`Recorder::set_events_sink`].
+//! - **Evidence ledger** ([`ledger`]): per identification, the full
+//!   chain the paper's exactness argument rests on — the audited
+//!   chunk, the disagreeing packed-symbol hashes, the reactive top-up,
+//!   and the 2f_t+1 vote tally, keyed back to the policy coin that
+//!   triggered the audit.
+//! - **Metrics registry** ([`metrics`]): counters and a round-time
+//!   histogram, snapshotted as Prometheus text format by
+//!   [`Recorder::prometheus`].
+//!
+//! A bounded ring of recent activity backs the **flight recorder**: on
+//! an anomaly (elimination, shard death, oracle faulty update,
+//! dead-wave reissue) the ring and the relevant evidence chains are
+//! frozen into a [`ForensicBundle`].
+//!
+//! Zero-cost when disabled: each core holds an `Option<TraceHandle>`
+//! checked once per event/wave/round — never in the per-symbol hot
+//! loop — and no `Recorder` is ever constructed unless an export flag
+//! asked for one. Under the sim transport the entire output is a pure
+//! function of the seed: same seed ⇒ byte-identical trace, JSONL, and
+//! metrics files.
+
+pub mod chrome;
+pub mod ledger;
+pub mod metrics;
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::codes::{copy_key, SymbolCopy};
+use crate::coordinator::{ChunkId, Event, WorkerId, MASTER_SENTINEL};
+use crate::util::json::Json;
+
+use ledger::{EvidenceChain, Ledger};
+use metrics::Registry;
+
+/// Flight-recorder ring capacity (recent spans/events kept for dumps).
+pub const RING_CAP: usize = 256;
+/// Hard cap on retained forensic bundles (an elimination storm must
+/// not grow memory without bound; the first `MAX_BUNDLES` anomalies
+/// are the interesting ones anyway).
+pub const MAX_BUNDLES: usize = 64;
+
+/// An [`Event`] with its transport-clock timestamp and a global
+/// sequence number (the JSONL line order).
+#[derive(Clone, Debug)]
+pub struct StampedEvent {
+    pub seq: u64,
+    /// Transport-clock ns of the shard that emitted the event (for
+    /// master-level events: the emitting shard's watermark).
+    pub at_ns: u64,
+    /// Shard-wrapped for sharded cores, exactly like the `EventLog`.
+    pub event: Event,
+}
+
+/// One transport wave: submit → gather, on the transport clock.
+#[derive(Clone, Debug)]
+pub struct WaveSpan {
+    pub shard: usize,
+    pub iter: u64,
+    pub wave: u64,
+    /// Phase wire code: 0 proactive, 1 detection, 2 reactive.
+    pub phase: u8,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// Workers the wave was submitted to.
+    pub workers: usize,
+    /// Responses accepted by the gather.
+    pub responses: usize,
+    /// True when the wave was retired unconsumed by a pipelined
+    /// reissue (speculation on a provisional θ that missed).
+    pub reissued: bool,
+    /// False while the wave is still in flight.
+    pub closed: bool,
+}
+
+/// One accepted worker response within a wave.
+#[derive(Clone, Debug)]
+pub struct DeliverySpan {
+    pub shard: usize,
+    pub iter: u64,
+    pub wave: u64,
+    /// Global worker id.
+    pub worker: WorkerId,
+    pub submit_ns: u64,
+    pub at_ns: u64,
+}
+
+/// One finished protocol round (per shard core).
+#[derive(Clone, Debug)]
+pub struct RoundSpan {
+    pub shard: usize,
+    pub iter: u64,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// Exclusive duration as reported in metrics (`round_time`).
+    pub round_ns: u64,
+    /// Honest wire bytes moved this round.
+    pub bytes: u64,
+}
+
+/// One line of the flight-recorder ring: a terse, human-readable
+/// record of recent activity.
+#[derive(Clone, Debug)]
+pub struct RingEntry {
+    pub at_ns: u64,
+    pub shard: usize,
+    pub what: String,
+}
+
+/// Everything frozen when an anomaly fired: the reason, the recent
+/// ring, and the evidence chains relevant to the anomaly.
+#[derive(Clone, Debug)]
+pub struct ForensicBundle {
+    pub reason: String,
+    pub shard: usize,
+    pub iter: u64,
+    pub at_ns: u64,
+    pub ring: Vec<RingEntry>,
+    pub evidence: Vec<EvidenceChain>,
+}
+
+impl ForensicBundle {
+    pub fn to_json(&self) -> Json {
+        let ring = self
+            .ring
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("at_ns", Json::Num(r.at_ns as f64)),
+                    ("shard", Json::Num(r.shard as f64)),
+                    ("what", Json::Str(r.what.clone())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("reason", Json::Str(self.reason.clone())),
+            ("shard", Json::Num(self.shard as f64)),
+            ("iter", Json::Num(self.iter as f64)),
+            ("at_ns", Json::Num(self.at_ns as f64)),
+            ("ring", Json::Arr(ring)),
+            (
+                "evidence",
+                Json::Arr(self.evidence.iter().map(|c| c.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+pub(crate) fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+#[derive(Default)]
+struct Inner {
+    seq: u64,
+    events: Vec<StampedEvent>,
+    waves: Vec<WaveSpan>,
+    deliveries: Vec<DeliverySpan>,
+    rounds: Vec<RoundSpan>,
+    ring: VecDeque<RingEntry>,
+    bundles: Vec<ForensicBundle>,
+    ledger: Ledger,
+    registry: Registry,
+    /// Per-shard high-water mark of observed transport-clock ns, used
+    /// to stamp master-level events that carry no clock of their own.
+    watermark: Vec<(usize, u64)>,
+    sink: Option<Box<dyn Write + Send>>,
+}
+
+impl Inner {
+    fn note_ns(&mut self, shard: usize, at_ns: u64) {
+        match self.watermark.iter_mut().find(|(s, _)| *s == shard) {
+            Some((_, w)) => *w = (*w).max(at_ns),
+            None => self.watermark.push((shard, at_ns)),
+        }
+    }
+
+    fn watermark(&self, shard: Option<usize>) -> u64 {
+        match shard {
+            Some(s) => self
+                .watermark
+                .iter()
+                .find(|(w, _)| *w == s)
+                .map(|(_, ns)| *ns)
+                .unwrap_or(0),
+            None => self.watermark.iter().map(|(_, ns)| *ns).max().unwrap_or(0),
+        }
+    }
+
+    fn ring_push(&mut self, at_ns: u64, shard: usize, what: String) {
+        if self.ring.len() == RING_CAP {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(RingEntry { at_ns, shard, what });
+    }
+
+    /// Record one (already id-remapped, optionally shard-wrapped)
+    /// event: stamp, stream, feed the ledger and counters, and dump a
+    /// forensic bundle when the event is an anomaly.
+    fn record_event(&mut self, shard: usize, wrapped: Event, at_ns: u64) {
+        self.note_ns(shard, at_ns);
+        let inner: &Event = match &wrapped {
+            Event::Shard { inner, .. } => inner,
+            e => e,
+        };
+        self.registry.count_event(inner);
+        self.ledger.observe(shard, inner);
+        self.ring_push(at_ns, shard, format!("{inner:?}"));
+
+        let anomaly = match inner {
+            Event::Eliminated { iter, worker } => Some((
+                *iter,
+                format!("worker {worker} eliminated"),
+                self.ledger.evidence_for(*worker),
+            )),
+            Event::ShardDead { iter, shard } => {
+                Some((*iter, format!("shard {shard} dead"), Vec::new()))
+            }
+            Event::OracleFaultyUpdate { iter } => {
+                Some((*iter, "oracle faulty update".to_string(), Vec::new()))
+            }
+            _ => None,
+        };
+        if let Some((iter, reason, evidence)) = anomaly {
+            self.dump_bundle(reason, shard, iter, at_ns, evidence);
+        }
+
+        let seq = self.seq;
+        self.seq += 1;
+        let stamped = StampedEvent { seq, at_ns, event: wrapped };
+        if let Some(sink) = &mut self.sink {
+            let _ = writeln!(sink, "{}", jsonl_line(&stamped));
+        }
+        self.events.push(stamped);
+    }
+
+    fn dump_bundle(
+        &mut self,
+        reason: String,
+        shard: usize,
+        iter: u64,
+        at_ns: u64,
+        evidence: Vec<EvidenceChain>,
+    ) {
+        if self.bundles.len() >= MAX_BUNDLES {
+            return;
+        }
+        self.bundles.push(ForensicBundle {
+            reason,
+            shard,
+            iter,
+            at_ns,
+            ring: self.ring.iter().cloned().collect(),
+            evidence,
+        });
+    }
+}
+
+fn jsonl_line(s: &StampedEvent) -> String {
+    obj(vec![
+        ("seq", Json::Num(s.seq as f64)),
+        ("at_ns", Json::Num(s.at_ns as f64)),
+        ("event", s.event.to_json()),
+    ])
+    .to_string()
+}
+
+/// The recorder: one per run, shared by every core through cheap
+/// [`TraceHandle`]s. All state sits behind one mutex — contention is
+/// bounded by event rate (per wave / per round, never per symbol).
+pub struct Recorder {
+    inner: Mutex<Inner>,
+}
+
+impl Recorder {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<Recorder> {
+        Arc::new(Recorder { inner: Mutex::new(Inner::default()) })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Handle for a single-master core (no shard wrapping, global ids
+    /// already).
+    pub fn handle(self: Arc<Self>) -> TraceHandle {
+        TraceHandle { rec: self, shard: None, lo: 0 }
+    }
+
+    /// Handle for shard `shard` whose local worker 0 is global `lo`:
+    /// the handle remaps ids and shard-wraps events exactly like the
+    /// `EventLog` the master keeps.
+    pub fn shard_handle(self: Arc<Self>, shard: usize, lo: WorkerId) -> TraceHandle {
+        TraceHandle { rec: self, shard: Some(shard), lo }
+    }
+
+    /// Stream every subsequent event as one JSONL line to `sink`
+    /// (events are always buffered in memory as well).
+    pub fn set_events_sink(&self, sink: Box<dyn Write + Send>) {
+        self.lock().sink = Some(sink);
+    }
+
+    /// Flush and drop the streaming sink (call after the run).
+    pub fn close_events_sink(&self) {
+        let mut inner = self.lock();
+        if let Some(mut sink) = inner.sink.take() {
+            let _ = sink.flush();
+        }
+    }
+
+    /// Record a master-level event (already global ids, not
+    /// shard-wrapped): `ShardDead`, `RosterEliminated`,
+    /// `OracleFaultyUpdate`. Stamped with the named shard's clock
+    /// watermark (or the global maximum when `shard` is `None`) —
+    /// there is no cross-shard clock, so the watermark is the latest
+    /// instant the recorder can causally order the event after.
+    pub fn on_master_event(&self, shard: Option<usize>, e: &Event) {
+        let mut inner = self.lock();
+        let at_ns = inner.watermark(shard);
+        inner.record_event(shard.unwrap_or(0), e.clone(), at_ns);
+    }
+
+    // -- exporters ---------------------------------------------------------
+
+    /// Chrome trace-event JSON (open in Perfetto or chrome://tracing).
+    pub fn chrome_trace(&self) -> String {
+        let inner = self.lock();
+        chrome::render(&inner.waves, &inner.deliveries, &inner.rounds, &inner.events)
+    }
+
+    /// The stamped event stream as JSON Lines.
+    pub fn events_jsonl(&self) -> String {
+        let inner = self.lock();
+        let mut out = String::new();
+        for s in &inner.events {
+            out.push_str(&jsonl_line(s));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Prometheus text-format snapshot of the metrics registry.
+    pub fn prometheus(&self) -> String {
+        self.lock().registry.render()
+    }
+
+    /// All forensic bundles as one JSON document.
+    pub fn flight_json(&self) -> String {
+        let inner = self.lock();
+        obj(vec![
+            ("bundles", Json::Arr(inner.bundles.iter().map(|b| b.to_json()).collect())),
+            (
+                "evidence",
+                Json::Arr(inner.ledger.chains.iter().map(|c| c.to_json()).collect()),
+            ),
+        ])
+        .to_string()
+    }
+
+    // -- queries (tests, red-team harness) ---------------------------------
+
+    pub fn bundles(&self) -> Vec<ForensicBundle> {
+        self.lock().bundles.clone()
+    }
+
+    /// Evidence chains whose vote named `worker` (global id) a liar.
+    pub fn evidence_for(&self, worker: WorkerId) -> Vec<EvidenceChain> {
+        self.lock().ledger.evidence_for(worker)
+    }
+
+    pub fn evidence_chains(&self) -> Vec<EvidenceChain> {
+        self.lock().ledger.chains.clone()
+    }
+
+    pub fn wave_spans(&self) -> Vec<WaveSpan> {
+        self.lock().waves.clone()
+    }
+
+    pub fn round_spans(&self) -> Vec<RoundSpan> {
+        self.lock().rounds.clone()
+    }
+
+    pub fn stamped_events(&self) -> Vec<StampedEvent> {
+        self.lock().events.clone()
+    }
+
+    /// Current value of a registry counter (see [`metrics::COUNTERS`]).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.lock().registry.get(name)
+    }
+}
+
+/// Per-core handle: carries the shard identity and the local→global
+/// worker-id offset so the core can report local ids and the recorder
+/// stores global ones. Cloneable and cheap; every method takes `&self`
+/// and locks the recorder once.
+#[derive(Clone)]
+pub struct TraceHandle {
+    rec: Arc<Recorder>,
+    /// `None` for the single-master core (ids already global, events
+    /// stored unwrapped).
+    shard: Option<usize>,
+    lo: WorkerId,
+}
+
+impl TraceHandle {
+    fn global(&self, w: WorkerId) -> WorkerId {
+        if w == MASTER_SENTINEL {
+            w
+        } else {
+            w + self.lo
+        }
+    }
+
+    fn shard_idx(&self) -> usize {
+        self.shard.unwrap_or(0)
+    }
+
+    /// An [`Event`] passed through the core's emit path, stamped with
+    /// the core's transport clock.
+    pub fn on_event(&self, at_ns: u64, e: &Event) {
+        let remapped = e.map_workers(&mut |w| self.global(w));
+        let wrapped = match self.shard {
+            Some(shard) => Event::Shard { shard, inner: Box::new(remapped) },
+            None => remapped,
+        };
+        self.rec.lock().record_event(self.shard_idx(), wrapped, at_ns);
+    }
+
+    /// A wave was submitted to `workers` workers.
+    pub fn wave_begin(&self, iter: u64, wave: u64, phase: u8, start_ns: u64, workers: usize) {
+        let shard = self.shard_idx();
+        let mut inner = self.rec.lock();
+        inner.note_ns(shard, start_ns);
+        inner.registry.inc_wave();
+        inner.ring_push(
+            start_ns,
+            shard,
+            format!("wave {wave} begin (iter {iter}, phase {phase}, {workers} workers)"),
+        );
+        inner.waves.push(WaveSpan {
+            shard,
+            iter,
+            wave,
+            phase,
+            start_ns,
+            end_ns: start_ns,
+            workers,
+            responses: 0,
+            reissued: false,
+            closed: false,
+        });
+    }
+
+    /// The gather for `wave` stopped waiting with `responses` accepted.
+    pub fn wave_end(&self, wave: u64, end_ns: u64, responses: usize) {
+        let shard = self.shard_idx();
+        let mut inner = self.rec.lock();
+        inner.note_ns(shard, end_ns);
+        if let Some(w) = inner
+            .waves
+            .iter_mut()
+            .rev()
+            .find(|w| w.shard == shard && w.wave == wave && !w.closed)
+        {
+            w.end_ns = end_ns;
+            w.responses = responses;
+            w.closed = true;
+        }
+        inner.ring_push(end_ns, shard, format!("wave {wave} end ({responses} responses)"));
+    }
+
+    /// A pipelined speculative wave was retired unconsumed (the audit
+    /// changed θ) — an anomaly worth a forensic bundle: reissue storms
+    /// are how mispredicted speculation shows up.
+    pub fn wave_reissued(&self, iter: u64, wave: u64, at_ns: u64) {
+        let shard = self.shard_idx();
+        let mut inner = self.rec.lock();
+        inner.note_ns(shard, at_ns);
+        inner.registry.inc_reissue();
+        if let Some(w) = inner
+            .waves
+            .iter_mut()
+            .rev()
+            .find(|w| w.shard == shard && w.wave == wave && !w.closed)
+        {
+            w.end_ns = at_ns;
+            w.reissued = true;
+            w.closed = true;
+        }
+        inner.ring_push(at_ns, shard, format!("wave {wave} reissued (iter {iter})"));
+        inner.dump_bundle(
+            format!("dead-wave reissue (wave {wave})"),
+            shard,
+            iter,
+            at_ns,
+            Vec::new(),
+        );
+    }
+
+    /// One response accepted by the gather (`worker` is core-local).
+    pub fn delivery(&self, iter: u64, wave: u64, worker: WorkerId, submit_ns: u64, at_ns: u64) {
+        let shard = self.shard_idx();
+        let worker = self.global(worker);
+        let mut inner = self.rec.lock();
+        inner.note_ns(shard, at_ns);
+        inner.registry.inc_delivery();
+        inner.deliveries.push(DeliverySpan { shard, iter, wave, worker, submit_ns, at_ns });
+    }
+
+    /// Detection found disagreeing copies on `chunk`: record each
+    /// copy's packed-symbol hash against its (global) owner.
+    pub fn detection_evidence(&self, at_ns: u64, iter: u64, chunk: ChunkId, copies: &[SymbolCopy]) {
+        let shard = self.shard_idx();
+        let hashes: Vec<(WorkerId, u64)> =
+            copies.iter().map(|c| (self.global(c.worker), copy_key(c))).collect();
+        let mut inner = self.rec.lock();
+        inner.note_ns(shard, at_ns);
+        inner.ring_push(at_ns, shard, format!("detection evidence chunk {chunk} (iter {iter})"));
+        inner.ledger.on_detection(shard, iter, chunk, hashes);
+    }
+
+    /// The vote on `chunk` resolved: record the tally over
+    /// packed-symbol hashes, the winning hash, and the liars.
+    pub fn vote_evidence(
+        &self,
+        at_ns: u64,
+        iter: u64,
+        chunk: ChunkId,
+        copies: &[SymbolCopy],
+        winner: &SymbolCopy,
+        liars: &[WorkerId],
+    ) {
+        let shard = self.shard_idx();
+        let mut tally: Vec<(u64, usize)> = Vec::new();
+        for c in copies {
+            let k = copy_key(c);
+            match tally.iter_mut().find(|(h, _)| *h == k) {
+                Some((_, n)) => *n += 1,
+                None => tally.push((k, 1)),
+            }
+        }
+        tally.sort_unstable();
+        let winner_key = copy_key(winner);
+        let liars: Vec<WorkerId> = liars.iter().map(|&w| self.global(w)).collect();
+        let mut inner = self.rec.lock();
+        inner.note_ns(shard, at_ns);
+        inner.ring_push(
+            at_ns,
+            shard,
+            format!("vote chunk {chunk} (iter {iter}, {} liars)", liars.len()),
+        );
+        inner.ledger.on_vote(shard, iter, chunk, tally, winner_key, liars);
+    }
+
+    /// The round finished; `round_ns` and `bytes` as reported to the
+    /// metrics row.
+    pub fn round_finished(&self, iter: u64, start_ns: u64, end_ns: u64, round_ns: u64, bytes: u64) {
+        let shard = self.shard_idx();
+        let mut inner = self.rec.lock();
+        inner.note_ns(shard, end_ns);
+        inner.registry.round_finished(round_ns, bytes);
+        inner.ring_push(end_ns, shard, format!("round {iter} finished ({round_ns} ns)"));
+        inner.rounds.push(RoundSpan { shard, iter, start_ns, end_ns, round_ns, bytes });
+    }
+}

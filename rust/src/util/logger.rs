@@ -1,5 +1,15 @@
-//! Tiny `log`-facade backend with env-style level filtering
-//! (`R3BFT_LOG=debug`). Initialized once by the CLI and examples.
+//! Tiny `log`-facade backend with env-style per-target filtering.
+//!
+//! `R3BFT_LOG` takes a comma-separated directive list, `env_logger`
+//! style: a bare level sets the default, and `target=level` overrides
+//! it for every module whose `::`-separated path contains (or starts
+//! with) `target` — e.g. `R3BFT_LOG=protocol=debug,transport=warn`
+//! turns protocol internals up and transport chatter down while the
+//! rest of the crate stays at the default `info`. The most specific
+//! matching directive wins: the one whose match sits deepest in the
+//! module path (so `protocol=trace` beats `coordinator=warn` for
+//! `r3bft::coordinator::protocol`). Initialized once by the CLI and
+//! examples.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
@@ -9,11 +19,90 @@ use once_cell::sync::Lazy;
 static START: Lazy<Instant> = Lazy::new(Instant::now);
 static INSTALLED: AtomicBool = AtomicBool::new(false);
 
-struct StderrLogger;
+/// One parsed `target=level` override.
+struct Directive {
+    target: String,
+    level: log::LevelFilter,
+}
+
+fn parse_level(s: &str) -> Option<log::LevelFilter> {
+    match s.trim() {
+        "off" => Some(log::LevelFilter::Off),
+        "error" => Some(log::LevelFilter::Error),
+        "warn" => Some(log::LevelFilter::Warn),
+        "info" => Some(log::LevelFilter::Info),
+        "debug" => Some(log::LevelFilter::Debug),
+        "trace" => Some(log::LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Parse a spec like `protocol=debug,transport=warn,info` into the
+/// default level and the per-target directives. Unparseable pieces are
+/// ignored (a logger must never fail the process).
+fn parse_spec(spec: &str) -> (log::LevelFilter, Vec<Directive>) {
+    let mut default = log::LevelFilter::Info;
+    let mut directives = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('=') {
+            None => {
+                if let Some(level) = parse_level(part) {
+                    default = level;
+                }
+            }
+            Some((target, level)) => {
+                if let Some(level) = parse_level(level) {
+                    directives
+                        .push(Directive { target: target.trim().to_string(), level });
+                }
+            }
+        }
+    }
+    (default, directives)
+}
+
+/// A directive matches a record target (a module path like
+/// `r3bft::coordinator::protocol`) when the target starts with it or
+/// any `::` component equals it; the returned depth is the index of
+/// the deepest target component the directive reaches (`None` = no
+/// match). Deeper matches are more specific.
+fn match_depth(directive: &str, target: &str) -> Option<usize> {
+    if target == directive
+        || (target.starts_with(directive) && target[directive.len()..].starts_with("::"))
+    {
+        return Some(directive.split("::").count() - 1);
+    }
+    target
+        .split("::")
+        .enumerate()
+        .filter(|(_, c)| *c == directive)
+        .map(|(i, _)| i)
+        .last()
+}
+
+/// Effective level for `target`: the deepest-matching directive (ties
+/// go to the longer directive name), or the default.
+fn level_for(default: log::LevelFilter, directives: &[Directive], target: &str) -> log::LevelFilter {
+    directives
+        .iter()
+        .filter_map(|d| match_depth(&d.target, target).map(|depth| (depth, d)))
+        .max_by_key(|(depth, d)| (*depth, d.target.len()))
+        .map(|(_, d)| d.level)
+        .unwrap_or(default)
+}
+
+struct StderrLogger {
+    default: log::LevelFilter,
+    directives: Vec<Directive>,
+}
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= log::max_level()
+        metadata.level() <= level_for(self.default, &self.directives, metadata.target())
     }
 
     fn log(&self, record: &log::Record) {
@@ -32,32 +121,79 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+static LOGGER: Lazy<StderrLogger> = Lazy::new(|| {
+    let spec = std::env::var("R3BFT_LOG").unwrap_or_default();
+    let (default, directives) = parse_spec(&spec);
+    StderrLogger { default, directives }
+});
 
-/// Install the logger (idempotent). Level comes from `R3BFT_LOG`
-/// (error|warn|info|debug|trace), default `info`.
+/// Install the logger (idempotent). Filtering comes from `R3BFT_LOG`
+/// (default `info`) — see the module docs for the directive syntax.
 pub fn init() {
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }
-    let level = match std::env::var("R3BFT_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        Ok("off") => log::LevelFilter::Off,
-        _ => log::LevelFilter::Info,
-    };
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    let logger: &'static StderrLogger = &LOGGER;
+    // the facade's fast path gates on the max over every directive, so
+    // an upgraded target actually gets through to per-target filtering
+    let max = logger
+        .directives
+        .iter()
+        .map(|d| d.level)
+        .fold(logger.default, log::LevelFilter::max);
+    let _ = log::set_logger(logger);
+    log::set_max_level(max);
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logger test line");
+    }
+
+    #[test]
+    fn spec_parses_default_and_directives() {
+        let (default, dirs) = parse_spec("protocol=debug, transport=warn ,warn");
+        assert_eq!(default, log::LevelFilter::Warn);
+        assert_eq!(dirs.len(), 2);
+        assert_eq!(dirs[0].target, "protocol");
+        assert_eq!(dirs[0].level, log::LevelFilter::Debug);
+        assert_eq!(dirs[1].target, "transport");
+        assert_eq!(dirs[1].level, log::LevelFilter::Warn);
+    }
+
+    #[test]
+    fn garbage_is_ignored() {
+        let (default, dirs) = parse_spec("nonsense=verybad,,=,");
+        assert_eq!(default, log::LevelFilter::Info);
+        assert!(dirs.is_empty());
+    }
+
+    #[test]
+    fn target_matching_is_per_component_and_prefix() {
+        let t = "r3bft::coordinator::protocol";
+        assert_eq!(match_depth("protocol", t), Some(2));
+        assert_eq!(match_depth("coordinator", t), Some(1));
+        assert_eq!(match_depth("r3bft::coordinator", t), Some(1));
+        assert_eq!(match_depth("r3bft::coordinator::protocol", t), Some(2));
+        assert_eq!(match_depth("proto", t), None);
+        assert_eq!(match_depth("transport", t), None);
+    }
+
+    #[test]
+    fn deepest_match_wins() {
+        let (default, dirs) = parse_spec("coordinator=warn,protocol=trace");
+        let target = "r3bft::coordinator::protocol";
+        assert_eq!(level_for(default, &dirs, target), log::LevelFilter::Trace);
+        assert_eq!(
+            level_for(default, &dirs, "r3bft::coordinator::master"),
+            log::LevelFilter::Warn
+        );
+        assert_eq!(level_for(default, &dirs, "r3bft::runtime"), log::LevelFilter::Info);
     }
 }

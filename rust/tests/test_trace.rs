@@ -1,0 +1,203 @@
+//! Flight-recorder integration tests: determinism of every export,
+//! pipelined wave overlap + dead-wave reissue visibility, forensic
+//! bundles with complete evidence chains on elimination, and the
+//! JSONL event stream's round-trip fidelity.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use r3bft::config::{AttackKind, PolicyKind, TransportKind};
+use r3bft::coordinator::{Event, LatencyModel, SimConfig, TrainOutcome};
+use r3bft::experiments::common::RunSpec;
+use r3bft::trace::{Recorder, WaveSpan};
+use r3bft::util::json::Json;
+
+/// A sign-flipping pair of Byzantine workers under the deterministic
+/// audit scheme, on the sim transport (virtual clock ⇒ byte-stable
+/// trace timestamps), with a recorder attached.
+fn traced(
+    shards: usize,
+    pipeline: usize,
+    steps: usize,
+    seed: u64,
+) -> (TrainOutcome, Arc<Recorder>) {
+    let rec = Recorder::new();
+    let mut spec = RunSpec::new(8, 2, PolicyKind::Deterministic)
+        .attack(AttackKind::SignFlip, 1.0, 2.0)
+        .steps(steps)
+        .seed(seed)
+        .noise(0.05)
+        .transport(TransportKind::Sim)
+        .shards(shards)
+        .pipeline(pipeline)
+        .sim(SimConfig { latency: LatencyModel::Fixed { us: 100 }, ..Default::default() })
+        .recorder(rec.clone());
+    spec.byzantine = vec![3, 7];
+    let (out, _) = spec.run_linreg().expect("traced run");
+    (out, rec)
+}
+
+/// Same seed ⇒ byte-identical exporters, single-core edition.
+#[test]
+fn same_seed_exports_are_byte_identical() {
+    let (_, a) = traced(1, 1, 30, 42);
+    let (_, b) = traced(1, 1, 30, 42);
+    let trace = a.chrome_trace();
+    assert!(trace.contains("\"traceEvents\""), "chrome trace shape");
+    assert_eq!(trace, b.chrome_trace(), "chrome trace must be deterministic");
+    let jsonl = a.events_jsonl();
+    assert!(!jsonl.is_empty(), "events stream must be non-empty");
+    assert_eq!(jsonl, b.events_jsonl(), "events stream must be deterministic");
+    assert_eq!(a.prometheus(), b.prometheus(), "metrics must be deterministic");
+    assert_eq!(a.flight_json(), b.flight_json(), "bundles must be deterministic");
+}
+
+/// Same seed ⇒ byte-identical exporters under sharding *and*
+/// pipelining (the hardest interleaving the runtime offers).
+#[test]
+fn sharded_pipelined_exports_are_byte_identical() {
+    let (_, a) = traced(2, 2, 25, 7);
+    let (_, b) = traced(2, 2, 25, 7);
+    assert_eq!(a.chrome_trace(), b.chrome_trace());
+    assert_eq!(a.events_jsonl(), b.events_jsonl());
+    assert_eq!(a.prometheus(), b.prometheus());
+    assert_eq!(a.flight_json(), b.flight_json());
+    // both shards must show up in the span stream
+    let shards: BTreeSet<usize> = a.wave_spans().iter().map(|w| w.shard).collect();
+    assert_eq!(shards, BTreeSet::from([0, 1]));
+}
+
+fn overlaps(a: &WaveSpan, b: &WaveSpan) -> bool {
+    a.start_ns < b.end_ns && b.start_ns < a.end_ns
+}
+
+/// Depth-2 pipelining on the transport clock: round t+1's speculative
+/// proactive wave must visibly overlap round t's audit waves, and the
+/// sign-flip liars force speculation misses whose dead waves show up
+/// as `reissued` spans (plus a reissue counter and forensic bundle).
+#[test]
+fn pipelined_trace_shows_overlapping_waves_and_reissues() {
+    let steps = 20;
+    let (_, rec) = traced(1, 2, steps, 42);
+    let waves = rec.wave_spans();
+    assert!(!waves.is_empty());
+    assert!(waves.iter().all(|w| w.closed), "no wave may be left open at run end");
+    assert!(
+        waves.iter().any(|w| w.reissued),
+        "a caught liar must retire the speculative wave as reissued"
+    );
+    assert!(rec.counter("r3bft_reissues_total") > 0);
+    let cross_iter_overlap = waves.iter().enumerate().any(|(i, a)| {
+        waves[i + 1..].iter().any(|b| a.iter != b.iter && overlaps(a, b))
+    });
+    assert!(
+        cross_iter_overlap,
+        "depth-2 pipelining must produce overlapping wave spans of different iterations"
+    );
+    assert_eq!(rec.round_spans().len(), steps, "one round span per iteration");
+    assert!(rec.counter("r3bft_deliveries_total") > 0);
+    assert!(
+        rec.bundles().iter().any(|b| b.reason.contains("reissue")),
+        "dead-wave reissue must dump a forensic bundle"
+    );
+}
+
+/// Every elimination must leave a forensic bundle whose evidence chain
+/// carries the audited chunk, the disagreeing packed-symbol hashes,
+/// the reactive top-up, and the vote tally naming the liar.
+#[test]
+fn elimination_dumps_bundle_with_complete_evidence_chain() {
+    let steps = 40;
+    let (out, rec) = traced(1, 1, steps, 42);
+    assert!(!out.eliminated.is_empty(), "sign-flip liars must be eliminated");
+
+    for &w in &out.eliminated {
+        let chains = rec.evidence_for(w);
+        let chain = chains
+            .iter()
+            .find(|c| c.complete())
+            .unwrap_or_else(|| panic!("worker {w} eliminated without a complete chain"));
+        assert!(chain.audited, "the exposing audit decision must be recorded");
+        let det = chain.detection.as_ref().expect("detection evidence");
+        assert!(det.hashes.len() >= 2, "detection needs at least two copies to disagree");
+        let distinct: BTreeSet<u64> = det.hashes.iter().map(|(_, h)| *h).collect();
+        assert!(distinct.len() >= 2, "disagreeing copies must hash differently");
+        assert!(!chain.topup.is_empty(), "reactive top-up workers must be recorded");
+        let vote = chain.vote.as_ref().expect("vote evidence");
+        let copies: usize = vote.tally.iter().map(|(_, n)| *n).sum();
+        assert!(copies >= 3, "the vote must span 2f_t+1 copies");
+        assert!(vote.liars.contains(&w), "the vote must name the eliminated worker");
+        assert!(chain.eliminated.contains(&w));
+    }
+
+    let bundle = rec
+        .bundles()
+        .into_iter()
+        .find(|b| b.reason.contains("eliminated"))
+        .expect("an elimination must dump a forensic bundle");
+    assert!(!bundle.ring.is_empty(), "the bundle must carry the flight-recorder ring");
+    assert!(bundle.evidence.iter().any(|c| c.complete()));
+
+    assert_eq!(rec.counter("r3bft_rounds_total"), steps as u64);
+    assert_eq!(rec.counter("r3bft_eliminated_total"), out.eliminated.len() as u64);
+    assert!(rec.counter("r3bft_detections_total") >= 1);
+    let prom = rec.prometheus();
+    assert!(prom.contains("# TYPE r3bft_rounds_total counter"));
+    assert!(prom.contains(&format!("r3bft_eliminated_total {}", out.eliminated.len())));
+    assert!(prom.contains("r3bft_round_time_ns_bucket{le=\"+Inf\"}"));
+}
+
+/// Every JSONL line must parse, round-trip through `Event::from_json`,
+/// and carry a strictly increasing `seq` starting at zero.
+#[test]
+fn events_jsonl_round_trips_with_ordered_seqs() {
+    let (_, rec) = traced(1, 1, 20, 42);
+    let jsonl = rec.events_jsonl();
+    let mut n = 0u64;
+    for (i, line) in jsonl.lines().enumerate() {
+        let parsed = Json::parse(line).expect("every line is one JSON object");
+        let seq = parsed.req("seq").unwrap().as_f64().unwrap() as u64;
+        assert_eq!(seq, i as u64, "seq must be dense and strictly increasing");
+        assert!(parsed.req("at_ns").unwrap().as_f64().is_some());
+        Event::from_json(parsed.req("event").unwrap())
+            .unwrap_or_else(|e| panic!("line {i} does not round-trip: {e:?}"));
+        n += 1;
+    }
+    assert!(n > 0);
+    assert_eq!(n, rec.stamped_events().len() as u64);
+}
+
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The streaming sink (`--events`) must see exactly the lines the
+/// in-memory exporter reports, as they happen.
+#[test]
+fn events_sink_streams_the_same_lines() {
+    let buf = SharedBuf::default();
+    let rec = Recorder::new();
+    rec.set_events_sink(Box::new(buf.clone()));
+    let mut spec = RunSpec::new(8, 2, PolicyKind::Deterministic)
+        .attack(AttackKind::SignFlip, 1.0, 2.0)
+        .steps(15)
+        .noise(0.05)
+        .transport(TransportKind::Sim)
+        .recorder(rec.clone());
+    spec.byzantine = vec![3, 7];
+    spec.run_linreg().expect("traced run");
+    rec.close_events_sink();
+    let streamed = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+    assert_eq!(streamed, rec.events_jsonl());
+}
