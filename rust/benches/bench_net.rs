@@ -1,0 +1,130 @@
+//! Net-vs-threaded wall-clock sweep, written to `BENCH_net.json`: the
+//! same fault-free linreg workload over (a) loopback TCP worker
+//! threads hosting the standalone worker core and (b) the in-process
+//! threaded pool, at n ∈ {8, 32}. Reported per n: mean wall round
+//! time for each transport, the net/threaded ratio (the price of
+//! frames + sockets at loopback), and the honest wire bytes per round
+//! the net transport measures (frame overhead and theta broadcast
+//! included) next to the payload-only figure the threaded transport
+//! estimates.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use r3bft::config::{AttackConfig, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::coordinator::transport::net::server;
+use r3bft::data::LinRegDataset;
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+use r3bft::util::bench::{black_box, Table};
+use r3bft::util::json::Json;
+
+fn spawn_worker_threads(n: usize) -> (Vec<String>, Vec<JoinHandle<()>>) {
+    let mut peers = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        peers.push(listener.local_addr().expect("local addr").to_string());
+        handles.push(std::thread::spawn(move || {
+            server::serve(listener).expect("worker serve");
+        }));
+    }
+    (peers, handles)
+}
+
+/// One fault-free run; returns (mean wall round seconds, mean
+/// bytes_round).
+fn run_once(n: usize, transport: &str, peers: Vec<String>, steps: usize) -> (f64, f64) {
+    let d = 16usize;
+    let chunk = 8usize;
+    let mut cluster = ClusterConfig::new(n, 1, 42);
+    cluster.byzantine_ids = vec![];
+    cluster.f = 0;
+    cluster.transport = transport.into();
+    cluster.peers = peers;
+    let cfg = ExperimentConfig {
+        name: format!("bench-net-{transport}-{n}"),
+        cluster,
+        policy: PolicyKind::None,
+        attack: AttackConfig::default(),
+        adversary: None,
+        train: TrainConfig { steps, lr: 0.1, ..Default::default() },
+    };
+    let ds = Arc::new(LinRegDataset::generate(4096, d, 0.0, 42));
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(42);
+    let opts = MasterOptions { net_model: Some(spec.clone()), ..Default::default() };
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    let t0 = std::time::Instant::now();
+    let out = master.run().expect("run");
+    let dt = t0.elapsed().as_secs_f64();
+    let bytes: u64 = out.metrics.iterations.iter().map(|r| r.bytes_round).sum();
+    let mean_bytes = bytes as f64 / steps as f64;
+    black_box(out);
+    (dt / steps as f64, mean_bytes)
+}
+
+fn main() {
+    println!("#### net (loopback TCP) vs threaded, wall round time (linreg d=16, chunk=8)");
+    let steps = 40usize;
+    let mut table = Table::new(&[
+        "n",
+        "threaded us/round",
+        "net us/round",
+        "net/threaded",
+        "threaded B/round",
+        "net B/round",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in &[8usize, 32] {
+        let (thr_s, thr_bytes) = run_once(n, "threaded", vec![], steps);
+        let (peers, workers) = spawn_worker_threads(n);
+        let (net_s, net_bytes) = run_once(n, "net", peers, steps);
+        for h in workers {
+            h.join().expect("worker thread");
+        }
+        let ratio = net_s / thr_s.max(1e-12);
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", thr_s * 1e6),
+            format!("{:.1}", net_s * 1e6),
+            format!("{ratio:.2}x"),
+            format!("{thr_bytes:.0}"),
+            format!("{net_bytes:.0}"),
+        ]);
+        let mut obj = BTreeMap::new();
+        obj.insert("n".to_string(), Json::Num(n as f64));
+        obj.insert("threaded_us_per_round".to_string(), Json::Num(thr_s * 1e6));
+        obj.insert("net_us_per_round".to_string(), Json::Num(net_s * 1e6));
+        obj.insert("net_over_threaded".to_string(), Json::Num(ratio));
+        obj.insert("threaded_bytes_per_round".to_string(), Json::Num(thr_bytes));
+        obj.insert("net_bytes_per_round".to_string(), Json::Num(net_bytes));
+        rows.push(Json::Obj(obj));
+    }
+    table.print("net sweep (wall time per round; bytes are the honest wire figure for net)");
+    println!(
+        "\nnote: the net byte column includes frame headers and the per-request \
+         theta broadcast — overhead the in-process transports never pay or \
+         measure — so it dominates the threaded payload-only estimate."
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("net_transport".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(
+            "linreg d=16 chunk=8 policy=none fault-free steps=40 \
+             net=loopback-tcp-worker-threads vs threaded"
+                .to_string(),
+        ),
+    );
+    doc.insert("results".to_string(), Json::Arr(rows));
+    let json = Json::Obj(doc).to_string();
+    match std::fs::write("BENCH_net.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_net.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_net.json: {e}"),
+    }
+}

@@ -199,7 +199,7 @@ impl AdversaryKind {
     }
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AttackConfig {
     pub kind: AttackKind,
     /// Per-iteration tamper probability p (paper §4.2 analysis).
@@ -228,6 +228,9 @@ pub enum TransportKind {
     /// Deterministic virtual-time discrete-event simulation (no OS
     /// threads; scales to thousands of workers).
     Sim,
+    /// TCP to standalone worker processes (`r3bft worker --listen`),
+    /// one `host:port` peer per worker in `cluster.peers`/`--peers`.
+    Net,
 }
 
 impl TransportKind {
@@ -235,7 +238,8 @@ impl TransportKind {
         Ok(match s {
             "threaded" => TransportKind::Threaded,
             "sim" => TransportKind::Sim,
-            other => bail!("unknown transport '{other}' (expected threaded|sim)"),
+            "net" | "tcp" => TransportKind::Net,
+            other => bail!("unknown transport '{other}' (expected threaded|sim|net)"),
         })
     }
 
@@ -243,6 +247,7 @@ impl TransportKind {
         match self {
             TransportKind::Threaded => "threaded",
             TransportKind::Sim => "sim",
+            TransportKind::Net => "net",
         }
     }
 }
@@ -353,6 +358,10 @@ pub struct ClusterConfig {
     /// while iteration t's audit is still in flight, reissuing the
     /// wave only when the audit changed θ. See `coordinator::master`.
     pub pipeline: usize,
+    /// Worker addresses (`host:port`) for [`TransportKind::Net`], one
+    /// per worker in id order (`cluster.peers` / `--peers a:p,b:p`).
+    /// Empty for in-process transports.
+    pub peers: Vec<String>,
     pub seed: u64,
 }
 
@@ -369,6 +378,7 @@ impl ClusterConfig {
             gather: GatherPolicy::All,
             shards: 1,
             pipeline: 1,
+            peers: Vec::new(),
             seed,
         }
     }
@@ -422,6 +432,26 @@ impl ClusterConfig {
         }
         if self.byzantine_ids.iter().any(|&b| b >= self.n) {
             bail!("byzantine id out of range");
+        }
+        match self.transport {
+            TransportKind::Net => {
+                if self.peers.len() != self.n {
+                    bail!(
+                        "net transport needs one peer address per worker: \
+                         {} peers configured, n = {}",
+                        self.peers.len(),
+                        self.n
+                    );
+                }
+                if self.peers.iter().any(|p| p.trim().is_empty()) {
+                    bail!("empty peer address in cluster.peers");
+                }
+            }
+            _ => {
+                if !self.peers.is_empty() {
+                    bail!("cluster.peers only applies to the net transport");
+                }
+            }
         }
         Ok(())
     }
@@ -501,6 +531,16 @@ impl ExperimentConfig {
                 .filter_map(|v| v.as_i64())
                 .map(|i| i as usize)
                 .collect();
+        }
+        if let Some(toml::TomlValue::Arr(peers)) = doc.get("cluster.peers") {
+            cluster.peers = peers
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(|s| s.to_string())
+                        .ok_or_else(|| anyhow::anyhow!("cluster.peers entries must be strings"))
+                })
+                .collect::<Result<Vec<String>>>()?;
         }
         cluster.validate()?;
 
@@ -594,6 +634,38 @@ mod tests {
         assert!(TransportKind::parse("carrier-pigeon").is_err());
         assert_eq!(TransportKind::Sim.name(), "sim");
         assert_eq!(TransportKind::Threaded.name(), "threaded");
+        assert_eq!(TransportKind::parse("net").unwrap(), TransportKind::Net);
+        assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Net);
+        assert_eq!(TransportKind::Net.name(), "net");
+    }
+
+    #[test]
+    fn net_transport_requires_matching_peers() {
+        let mut c = ClusterConfig::new(3, 1, 0);
+        c.transport = TransportKind::Net;
+        assert!(c.validate().is_err(), "no peers configured");
+        c.peers = vec!["127.0.0.1:9001".into(), "127.0.0.1:9002".into()];
+        assert!(c.validate().is_err(), "2 peers for n = 3");
+        c.peers.push("127.0.0.1:9003".into());
+        assert!(c.validate().is_ok());
+        c.peers[1] = "  ".into();
+        assert!(c.validate().is_err(), "blank peer address");
+        // peers without the net transport is a misconfiguration
+        let mut c = ClusterConfig::new(3, 1, 0);
+        c.peers = vec!["a:1".into(), "b:2".into(), "c:3".into()];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn net_peers_from_doc() {
+        let doc = TomlDoc::parse(
+            "[cluster]\nn = 2\nf = 0\ntransport = \"net\"\n\
+             peers = [\"127.0.0.1:9001\", \"127.0.0.1:9002\"]\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster.transport, TransportKind::Net);
+        assert_eq!(cfg.cluster.peers, vec!["127.0.0.1:9001", "127.0.0.1:9002"]);
     }
 
     #[test]

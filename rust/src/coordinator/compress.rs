@@ -45,15 +45,38 @@ pub fn parse(spec: &str) -> Result<Arc<dyn Compressor>> {
 }
 
 /// A gradient compressor: deterministic byte packing + exact decode.
+///
+/// Decoding is split into two surfaces. [`Compressor::try_unpack`] is
+/// the **validating** path: wire bytes that arrive from a socket are
+/// attacker-controlled, so every format checks length, index, and
+/// value invariants and returns a decode error instead of panicking.
+/// [`Compressor::unpack`] is the trusted in-process shorthand (the
+/// bytes were packed moments ago by the same binary) and simply
+/// unwraps the validating decode.
 pub trait Compressor: Send + Sync {
     fn name(&self) -> &'static str;
+
+    /// Parseable spec string (`compress::parse(spec)` reconstructs an
+    /// equivalent compressor — how the net transport tells a remote
+    /// worker which compressor to build).
+    fn spec(&self) -> String;
 
     /// Pack a dense gradient into wire bytes.
     fn pack(&self, grad: &[f32]) -> Vec<u8>;
 
+    /// Validating decode of possibly-malformed wire bytes into a dense
+    /// gradient of dimension `d`. Truncated, oversized, or
+    /// garbage-valued buffers yield `Err`, never a panic.
+    fn try_unpack(&self, wire: &[u8], d: usize) -> Result<Vec<f32>>;
+
     /// Exact deterministic decode back to a dense gradient of
     /// dimension `d` (the representative the master aggregates with).
-    fn unpack(&self, wire: &[u8], d: usize) -> Vec<f32>;
+    /// Trusted-path shorthand: panics on malformed bytes — socket
+    /// receivers must use [`Compressor::try_unpack`].
+    fn unpack(&self, wire: &[u8], d: usize) -> Vec<f32> {
+        self.try_unpack(wire, d)
+            .unwrap_or_else(|e| panic!("{} decode failed on trusted wire: {e:#}", self.name()))
+    }
 
     /// Wire size in bytes for a d-dimensional gradient.
     fn wire_bytes(&self, d: usize) -> usize;
@@ -63,11 +86,22 @@ pub trait Compressor: Send + Sync {
         (4 * d) as f64 / self.wire_bytes(d).max(1) as f64
     }
 
-    /// Election decode over the replica wires of one chunk (majority
-    /// per symbol where the format supports it). The default is the
-    /// exact decode of the first replica, which every format supports.
+    /// Validating election decode over the replica wires of one chunk
+    /// (majority per symbol where the format supports it). The default
+    /// is the exact decode of the first replica, which every format
+    /// supports; an empty replica set is an error.
+    fn try_unpack_election(&self, wires: &[&[u8]], d: usize) -> Result<Vec<f32>> {
+        let first = wires
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("election decode over zero replica wires"))?;
+        self.try_unpack(first, d)
+    }
+
+    /// Election decode (trusted-path shorthand of
+    /// [`Compressor::try_unpack_election`]).
     fn unpack_election(&self, wires: &[&[u8]], d: usize) -> Vec<f32> {
-        self.unpack(wires[0], d)
+        self.try_unpack_election(wires, d)
+            .unwrap_or_else(|e| panic!("{} election decode failed: {e:#}", self.name()))
     }
 }
 
@@ -89,6 +123,10 @@ impl Compressor for Dense {
         "dense"
     }
 
+    fn spec(&self) -> String {
+        "dense".into()
+    }
+
     fn pack(&self, grad: &[f32]) -> Vec<u8> {
         let mut wire = Vec::with_capacity(4 * grad.len());
         for v in grad {
@@ -97,9 +135,11 @@ impl Compressor for Dense {
         wire
     }
 
-    fn unpack(&self, wire: &[u8], d: usize) -> Vec<f32> {
-        debug_assert_eq!(wire.len(), 4 * d);
-        wire.chunks_exact(4).map(read_f32_le).collect()
+    fn try_unpack(&self, wire: &[u8], d: usize) -> Result<Vec<f32>> {
+        if wire.len() != 4 * d {
+            anyhow::bail!("dense wire: got {} bytes, expected {}", wire.len(), 4 * d);
+        }
+        Ok(wire.chunks_exact(4).map(read_f32_le).collect())
     }
 
     fn wire_bytes(&self, d: usize) -> usize {
@@ -117,6 +157,10 @@ pub struct TopK {
 impl Compressor for TopK {
     fn name(&self) -> &'static str {
         "topk"
+    }
+
+    fn spec(&self) -> String {
+        format!("topk:{}", self.k)
     }
 
     fn pack(&self, grad: &[f32]) -> Vec<u8> {
@@ -140,15 +184,32 @@ impl Compressor for TopK {
         wire
     }
 
-    fn unpack(&self, wire: &[u8], d: usize) -> Vec<f32> {
+    fn try_unpack(&self, wire: &[u8], d: usize) -> Result<Vec<f32>> {
+        // pack() always emits exactly k.min(d) pairs, so any other
+        // length (including a truncation at a pair boundary) is forged
+        if wire.len() != self.wire_bytes(d) {
+            anyhow::bail!(
+                "topk wire: got {} bytes, expected {} (k={}, d={d})",
+                wire.len(),
+                self.wire_bytes(d),
+                self.k
+            );
+        }
         let mut out = vec![0.0f32; d];
+        let mut prev: Option<usize> = None;
         for pair in wire.chunks_exact(8) {
             let i = read_u32_le(&pair[0..4]) as usize;
-            if i < d {
-                out[i] = read_f32_le(&pair[4..8]);
+            if i >= d {
+                anyhow::bail!("topk wire: index {i} out of range for d={d}");
             }
+            // pack() emits canonical ascending order; anything else is forged
+            if prev.is_some_and(|p| p >= i) {
+                anyhow::bail!("topk wire: indices not strictly ascending at {i}");
+            }
+            prev = Some(i);
+            out[i] = read_f32_le(&pair[4..8]);
         }
-        out
+        Ok(out)
     }
 
     fn wire_bytes(&self, d: usize) -> usize {
@@ -178,6 +239,10 @@ impl Compressor for SignSgd {
         "signsgd"
     }
 
+    fn spec(&self) -> String {
+        "sign".into()
+    }
+
     fn pack(&self, grad: &[f32]) -> Vec<u8> {
         let words = grad.len().div_ceil(32);
         let mut wire = Vec::with_capacity(4 + 4 * words);
@@ -194,12 +259,21 @@ impl Compressor for SignSgd {
         wire
     }
 
-    fn unpack(&self, wire: &[u8], d: usize) -> Vec<f32> {
-        debug_assert_eq!(wire.len(), self.wire_bytes(d));
+    fn try_unpack(&self, wire: &[u8], d: usize) -> Result<Vec<f32>> {
+        if wire.len() != self.wire_bytes(d) {
+            anyhow::bail!(
+                "signsgd wire: got {} bytes, expected {}",
+                wire.len(),
+                self.wire_bytes(d)
+            );
+        }
         let scale = read_f32_le(&wire[0..4]);
-        (0..d)
+        if !scale.is_finite() {
+            anyhow::bail!("signsgd wire: non-finite scale {scale}");
+        }
+        Ok((0..d)
             .map(|i| if Self::sign_bit(wire, i) { scale } else { -scale })
-            .collect()
+            .collect())
     }
 
     fn wire_bytes(&self, d: usize) -> usize {
@@ -211,12 +285,23 @@ impl Compressor for SignSgd {
     /// negative) scaled by the median replica scale. With an honest
     /// majority of replicas this recovers the honest signs even when a
     /// minority lies — without any exact comparison.
-    fn unpack_election(&self, wires: &[&[u8]], d: usize) -> Vec<f32> {
-        debug_assert!(!wires.is_empty());
+    fn try_unpack_election(&self, wires: &[&[u8]], d: usize) -> Result<Vec<f32>> {
+        if wires.is_empty() {
+            anyhow::bail!("election decode over zero replica wires");
+        }
+        let expect = self.wire_bytes(d);
+        for w in wires {
+            if w.len() != expect {
+                anyhow::bail!("signsgd election wire: got {} bytes, expected {expect}", w.len());
+            }
+        }
         let mut scales: Vec<f32> = wires.iter().map(|w| read_f32_le(&w[0..4])).collect();
         scales.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
         let scale = scales[scales.len() / 2];
-        (0..d)
+        if !scale.is_finite() {
+            anyhow::bail!("signsgd election wire: non-finite median scale {scale}");
+        }
+        Ok((0..d)
             .map(|i| {
                 let pos = wires.iter().filter(|w| Self::sign_bit(w, i)).count();
                 if 2 * pos > wires.len() {
@@ -225,7 +310,7 @@ impl Compressor for SignSgd {
                     -scale
                 }
             })
-            .collect()
+            .collect())
     }
 }
 
@@ -327,6 +412,98 @@ mod tests {
         assert_eq!(c.wire_bytes(1024), 8 * 16);
         assert!(parse("topk:0").is_err());
         assert!(parse("gzip").is_err());
+    }
+
+    #[test]
+    fn spec_roundtrips_through_parse() {
+        for c in [&Dense as &dyn Compressor, &TopK { k: 16 }, &SignSgd] {
+            let back = parse(&c.spec()).unwrap();
+            assert_eq!(back.name(), c.name());
+            assert_eq!(back.wire_bytes(1024), c.wire_bytes(1024));
+        }
+    }
+
+    #[test]
+    fn truncated_wires_error_instead_of_panicking() {
+        let mut rng = Pcg64::seeded(11);
+        let g = rng.gauss_vec(64);
+        for c in [&Dense as &dyn Compressor, &TopK { k: 8 }, &SignSgd] {
+            let wire = c.pack(&g);
+            for cut in [0, 1, wire.len() / 2, wire.len() - 1] {
+                assert!(
+                    c.try_unpack(&wire[..cut], 64).is_err(),
+                    "{} accepted a {cut}-byte truncation of {} bytes",
+                    c.name(),
+                    wire.len()
+                );
+            }
+            assert_eq!(c.try_unpack(&wire, 64).unwrap(), c.unpack(&wire, 64));
+        }
+    }
+
+    #[test]
+    fn oversized_wires_are_rejected() {
+        let mut rng = Pcg64::seeded(12);
+        let g = rng.gauss_vec(64);
+        for c in [&Dense as &dyn Compressor, &TopK { k: 8 }, &SignSgd] {
+            let mut wire = c.pack(&g);
+            wire.extend_from_slice(&[0u8; 8]);
+            assert!(c.try_unpack(&wire, 64).is_err(), "{} accepted padding", c.name());
+        }
+    }
+
+    #[test]
+    fn topk_rejects_forged_indices() {
+        fn pairs(ps: &[(u32, f32)]) -> Vec<u8> {
+            let mut wire = Vec::new();
+            for (i, v) in ps {
+                wire.extend_from_slice(&i.to_le_bytes());
+                wire.extend_from_slice(&v.to_le_bytes());
+            }
+            wire
+        }
+        // out-of-range index (correct length for k=1, d=8)
+        assert!(TopK { k: 1 }.try_unpack(&pairs(&[(99, 1.0)]), 8).is_err());
+        // duplicate index (not strictly ascending)
+        let c = TopK { k: 2 };
+        assert!(c.try_unpack(&pairs(&[(3, 1.0), (3, 1.0)]), 8).is_err());
+        // descending order
+        assert!(c.try_unpack(&pairs(&[(5, 1.0), (2, 1.0)]), 8).is_err());
+        // canonical ascending pairs of the exact length decode fine
+        assert_eq!(
+            c.try_unpack(&pairs(&[(2, 1.0), (5, -1.0)]), 8).unwrap(),
+            vec![0.0, 0.0, 1.0, 0.0, 0.0, -1.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn signsgd_rejects_garbage_scale() {
+        let c = SignSgd;
+        let g = vec![1.0f32; 40];
+        let mut wire = c.pack(&g);
+        wire[0..4].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(c.try_unpack(&wire, 40).is_err(), "NaN scale accepted");
+        wire[0..4].copy_from_slice(&f32::INFINITY.to_le_bytes());
+        assert!(c.try_unpack(&wire, 40).is_err(), "inf scale accepted");
+        // bit-garbage in the sign words decodes (any bit pattern is a
+        // legal sign vector) — the point is it must not panic
+        let mut garbage = c.pack(&g);
+        for b in garbage[4..].iter_mut() {
+            *b = 0xA5;
+        }
+        assert_eq!(c.try_unpack(&garbage, 40).unwrap().len(), 40);
+    }
+
+    #[test]
+    fn election_decode_rejects_malformed_replica_sets() {
+        let c = SignSgd;
+        let g = vec![1.0f32, -2.0, 3.0];
+        let ok = c.pack(&g);
+        let short = &ok[..ok.len() - 1];
+        assert!(c.try_unpack_election(&[], 3).is_err(), "empty replica set accepted");
+        assert!(c.try_unpack_election(&[&ok, short], 3).is_err(), "short replica accepted");
+        let d = Dense;
+        assert!(d.try_unpack_election(&[], 3).is_err());
     }
 
     #[test]

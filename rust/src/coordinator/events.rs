@@ -45,6 +45,10 @@ pub enum Event {
     /// A shard-local elimination was published to the parameter
     /// server's global roster (the liar can never rejoin anywhere).
     RosterEliminated { iter: u64, shard: usize, worker: WorkerId },
+    /// A worker's TCP connection dropped and was re-established (net
+    /// transport only; a reconnect that *fails* its retry budget
+    /// surfaces as [`Event::WorkerCrashed`] instead).
+    NetReconnect { iter: u64, worker: WorkerId },
 }
 
 fn ev_obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -111,6 +115,9 @@ impl Event {
             Event::ShardDead { .. } => self.clone(),
             Event::RosterEliminated { iter, shard, worker } => {
                 Event::RosterEliminated { iter: *iter, shard: *shard, worker: f(*worker) }
+            }
+            Event::NetReconnect { iter, worker } => {
+                Event::NetReconnect { iter: *iter, worker: f(*worker) }
             }
         }
     }
@@ -186,6 +193,11 @@ impl Event {
                 ("shard", nu(*shard)),
                 ("worker", nu(*worker)),
             ]),
+            Event::NetReconnect { iter, worker } => ev_obj(vec![
+                ("type", Json::Str("net_reconnect".into())),
+                ("iter", n(*iter)),
+                ("worker", nu(*worker)),
+            ]),
         }
     }
 
@@ -238,6 +250,7 @@ impl Event {
                 shard: shard(j)?,
                 worker: worker(j)?,
             }),
+            "net_reconnect" => Ok(Event::NetReconnect { iter: iter(j)?, worker: worker(j)? }),
             other => Err(JsonError(format!("unknown event type '{other}'"))),
         }
     }
@@ -482,6 +495,7 @@ mod tests {
             },
             Event::ShardDead { iter: 7, shard: 2 },
             Event::RosterEliminated { iter: 7, shard: 2, worker: 11 },
+            Event::NetReconnect { iter: 8, worker: 6 },
         ];
         for e in &all {
             // Through the value representation...
@@ -517,6 +531,8 @@ mod tests {
             e.map_workers(&mut bump),
             Event::SuspicionUpdated { iter: 1, worker: 107, suspicion: 0.5 }
         );
+        let e = Event::NetReconnect { iter: 3, worker: 2 };
+        assert_eq!(e.map_workers(&mut bump), Event::NetReconnect { iter: 3, worker: 102 });
         // Events with no worker dimension pass through unchanged.
         let e = Event::AuditDecision { iter: 2, q: 0.1, audited: false };
         assert_eq!(e.map_workers(&mut bump), e);

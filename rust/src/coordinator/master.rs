@@ -30,7 +30,8 @@ use super::policy::FaultCheckPolicy;
 use super::protocol::{ProtocolConfig, ProtocolCore, RoundState};
 use super::shard::{ParameterServer, ShardPlan, ShardedTransport};
 use super::transport::{
-    AdversaryWiring, LatencyModel, SimTransport, ThreadedTransport, Transport,
+    AdversaryWiring, LatencyModel, NetConfig, NetTransport, SimTransport, ThreadedTransport,
+    Transport,
 };
 use super::{WorkerId, MASTER_SENTINEL};
 use crate::adversary::{AdversaryController, CoreTap, ShardInfo, Topology};
@@ -77,6 +78,10 @@ pub struct MasterOptions {
     /// own events through [`crate::trace::Recorder::on_master_event`].
     /// `None` (the default) costs nothing on the hot path.
     pub recorder: Option<Arc<crate::trace::Recorder>>,
+    /// Model spec forwarded to remote workers by the net transport
+    /// (their hello carries it so they build identical engines).
+    /// Required when `cfg.cluster.transport` is net; ignored otherwise.
+    pub net_model: Option<crate::grad::ModelSpec>,
 }
 
 impl Default for MasterOptions {
@@ -91,6 +96,7 @@ impl Default for MasterOptions {
             unaudited_filter: None,
             sim: super::transport::SimConfig::default(),
             recorder: None,
+            net_model: None,
         }
     }
 }
@@ -205,6 +211,24 @@ impl Master {
                     wiring,
                 ))
             }
+            TransportKind::Net => {
+                // the coordinated adversary is wired through in-process
+                // Arcs — it cannot reach across a process boundary
+                anyhow::ensure!(
+                    cfg.adversary.is_none(),
+                    "--adversary strategies are in-process only (use --transport threaded|sim)"
+                );
+                let model = opts.net_model.clone().ok_or_else(|| {
+                    anyhow::anyhow!("net transport needs the model spec (MasterOptions.net_model)")
+                })?;
+                let mut net_cfg = NetConfig::new(cfg.cluster.peers.clone(), model);
+                net_cfg.seed = seed;
+                net_cfg.latency_us = cfg.cluster.latency_us;
+                net_cfg.attack = Some(attack.clone());
+                net_cfg.byzantine_ids = byz_ids.clone();
+                net_cfg.compressor = opts.compressor.clone();
+                Box::new(NetTransport::connect(net_cfg)?)
+            }
         };
         let mut master =
             Self::with_transport(cfg, opts, engine, dataset, init_theta, chunk_size, transport)?;
@@ -275,6 +299,8 @@ impl Master {
             sim: opts.sim.clone(),
             adversary: controller,
             recorder: opts.recorder.clone(),
+            peers: cfg.cluster.peers.clone(),
+            net_model: opts.net_model.clone(),
         };
         let transport = ShardedTransport::build(&plan, &build, &engine)?;
         let ps = ParameterServer::new(
@@ -584,6 +610,7 @@ impl Master {
             round_ns: out.round_ns,
             bytes_round: out.bytes_round,
             pipeline_depth: self.cfg.cluster.pipeline.max(1),
+            net_reconnects: out.net_reconnects,
             stragglers: out.stragglers_now.len(),
             audited_chunks: out.audited_chunks,
             suspicion: core.policy().suspicion_nonzero(),

@@ -35,6 +35,9 @@ pub struct ShardStat {
     /// Honest wire bytes the shard's round moved (see
     /// `IterationRecord::bytes_round`).
     pub bytes: u64,
+    /// TCP reconnects the shard's net transport rode out this round
+    /// (0 on in-process transports).
+    pub net_reconnects: u64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -73,11 +76,17 @@ pub struct IterationRecord {
     /// (untampered) symbol copies of their packed wire size — packed
     /// bytes under `--compress sign|topk:K`, dense `4·d` otherwise.
     /// Adversarial corruption does not change what honest workers
-    /// would send, so tampered copies count at the same size.
+    /// would send, so tampered copies count at the same size. Under
+    /// the net transport this is the honest TCP figure instead: every
+    /// byte moved in either direction, frame/header overhead and the
+    /// theta broadcast included.
     pub bytes_round: u64,
     /// Round pipeline depth the run was configured with
     /// (`cluster.pipeline`); 1 = strictly sequential rounds.
     pub pipeline_depth: usize,
+    /// TCP reconnects ridden out this iteration (net transport only;
+    /// always 0 in-process). Sharded runs sum over shards.
+    pub net_reconnects: u64,
     /// Workers the proactive gather abandoned this iteration (they
     /// rejoin next round; see `Event::StragglerAbandoned`).
     pub stragglers: usize,
@@ -194,7 +203,7 @@ impl TrainMetrics {
     /// in `docs/METRICS.md`.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,stragglers,faulty_update,dist_to_opt,round_time,shards,audited_chunks,suspicion,bytes_round,pipeline_depth\n",
+            "iter,loss,efficiency,used,computed,audited,q,lambda,faults,identified,crashed,stragglers,faulty_update,dist_to_opt,round_time,shards,audited_chunks,suspicion,bytes_round,pipeline_depth,net_reconnects\n",
         );
         for r in &self.iterations {
             let suspicion = r
@@ -204,7 +213,7 @@ impl TrainMetrics {
                 .collect::<Vec<_>>()
                 .join(";");
             s.push_str(&format!(
-                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{:.6},{},{},{},{:.4},{:.4},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.iter,
                 r.loss,
                 r.efficiency(),
@@ -225,6 +234,7 @@ impl TrainMetrics {
                 suspicion,
                 r.bytes_round,
                 r.pipeline_depth,
+                r.net_reconnects,
             ));
         }
         s
@@ -275,7 +285,7 @@ mod tests {
             .lines()
             .next()
             .unwrap()
-            .ends_with("audited_chunks,suspicion,bytes_round,pipeline_depth"));
+            .ends_with("audited_chunks,suspicion,bytes_round,pipeline_depth,net_reconnects"));
         assert_eq!(csv.lines().count(), 2);
         // every row has as many cells as the header
         let cols = csv.lines().next().unwrap().split(',').count();
@@ -290,15 +300,16 @@ mod tests {
         r.audited_chunks = 2;
         r.bytes_round = 512;
         r.pipeline_depth = 2;
+        r.net_reconnects = 1;
         m.push(r);
         let csv = m.to_csv();
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",2,3:0.500;7:1.000,512,2"), "row: {row}");
+        assert!(row.ends_with(",2,3:0.500;7:1.000,512,2,1"), "row: {row}");
         assert_eq!(m.top_suspect(), Some((7, 1.0)));
         // empty suspicion: empty cell, no phantom suspect
         let mut m = TrainMetrics::default();
         m.push(rec(1, 1, false));
-        assert!(m.to_csv().lines().nth(1).unwrap().ends_with(",0,,0,0"));
+        assert!(m.to_csv().lines().nth(1).unwrap().ends_with(",0,,0,0,0"));
         assert_eq!(m.top_suspect(), None);
     }
 

@@ -304,8 +304,14 @@ pub struct RoundOutcome {
     /// still sum to the run's span instead of double-counting overlap.
     pub round_ns: u64,
     /// Wire bytes moved worker → master this round (packed bytes under
-    /// a compressor, 4 per f32 dense).
+    /// a compressor, 4 per f32 dense). Under the net transport this is
+    /// the honest on-the-wire figure instead: every TCP byte moved in
+    /// either direction during the round, frame and header overhead
+    /// included.
     pub bytes_round: u64,
+    /// TCP reconnects ridden out this round (0 on in-process
+    /// transports).
+    pub net_reconnects: u64,
 }
 
 /// One slot of the pipeline ring: a round between
@@ -367,6 +373,10 @@ pub struct ProtocolCore {
     /// Transport clock when the last round finished (exclusive
     /// `round_ns` accounting under pipelining).
     last_round_end_ns: u64,
+    /// Net-transport byte total ([`Transport::net_stats`] tx + rx) at
+    /// the end of the previous round; each round's honest wire figure
+    /// is the delta from here. Unused on in-process transports.
+    net_bytes_baseline: u64,
     loss_scratch: Vec<f64>,
     /// Consecutive proactive-wave abandonments per worker (reset by any
     /// fresh delivery); >= [`ABANDON_STREAK`] marks a chronic straggler
@@ -402,6 +412,7 @@ impl ProtocolCore {
             live_waves: Vec::new(),
             mailbox: Vec::new(),
             last_round_end_ns: 0,
+            net_bytes_baseline: 0,
             loss_scratch: Vec::new(),
             abandon_streak: vec![0; n],
             tap: None,
@@ -1008,8 +1019,34 @@ impl ProtocolCore {
         let now = self.transport.now_ns();
         let round_ns = now.saturating_sub(start_ns.max(self.last_round_end_ns));
         self.last_round_end_ns = now;
+
+        // ---- net transport accounting ----------------------------------
+        // reconnects ridden out since the last finish surface here as
+        // events; the wire figure becomes the honest TCP byte delta
+        // (frames, headers, theta broadcast — both directions) instead
+        // of the payload-only estimate in-process transports report
+        let reconnects = self.transport.drain_reconnects();
+        let net_reconnects = reconnects.len() as u64;
+        for (_ns, w) in reconnects {
+            Self::emit(
+                &self.tap,
+                &self.recorder,
+                &*self.transport,
+                events,
+                Event::NetReconnect { iter: t, worker: w },
+            );
+        }
+        let bytes_round = match self.transport.net_stats() {
+            Some(s) => {
+                let total = s.bytes_tx + s.bytes_rx;
+                let delta = total.saturating_sub(self.net_bytes_baseline);
+                self.net_bytes_baseline = total;
+                delta
+            }
+            None => self.round.bytes,
+        };
         if let Some(rec) = &self.recorder {
-            rec.round_finished(t, start_ns, now, round_ns, self.round.bytes);
+            rec.round_finished(t, start_ns, now, round_ns, bytes_round);
         }
         Ok(RoundOutcome {
             gradients_used: m,
@@ -1021,7 +1058,8 @@ impl ProtocolCore {
             audited_chunks,
             stragglers_now,
             round_ns,
-            bytes_round: self.round.bytes,
+            bytes_round,
+            net_reconnects,
         })
     }
 

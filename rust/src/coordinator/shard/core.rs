@@ -365,6 +365,7 @@ impl ShardCore {
                 stragglers: outcome.stragglers_now.len(),
                 round_ns: outcome.round_ns,
                 bytes: outcome.bytes_round,
+                net_reconnects: outcome.net_reconnects,
             },
             identified,
             crashed,

@@ -728,6 +728,7 @@ impl ParameterServer {
         let stragglers: usize = shard_stats.iter().map(|s| s.stragglers).sum();
         let audited_chunks: usize = shard_stats.iter().map(|s| s.audited_chunks).sum();
         let bytes_round: u64 = shard_stats.iter().map(|s| s.bytes).sum();
+        let net_reconnects: u64 = shard_stats.iter().map(|s| s.net_reconnects).sum();
         // global-id suspicion column: a shard that also served a rescue
         // round reports twice — keep the later (rescue-round) snapshot
         suspicion.sort_by(|a, b| a.0.cmp(&b.0));
@@ -762,6 +763,7 @@ impl ParameterServer {
             round_ns: fan_round_ns + rescue_round_ns,
             bytes_round,
             pipeline_depth: self.pipeline.max(1),
+            net_reconnects,
             stragglers,
             audited_chunks,
             suspicion,

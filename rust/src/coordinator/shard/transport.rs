@@ -27,7 +27,8 @@ use super::super::events::EventLog;
 use super::super::policy::FaultCheckPolicy;
 use super::super::protocol::{ProtocolConfig, ProtocolCore};
 use super::super::transport::{
-    AdversaryWiring, LatencyModel, SimConfig, SimTransport, ThreadedTransport, Transport,
+    AdversaryWiring, LatencyModel, NetConfig, NetTransport, SimConfig, SimTransport,
+    ThreadedTransport, Transport,
 };
 use super::super::{ChunkId, WorkerId};
 use super::{ShardCore, ShardPlan, ShardRound, ShardSpec};
@@ -73,6 +74,12 @@ pub struct ShardBuildConfig {
     /// remaps local worker ids to global ones, exactly like the
     /// `EventLog` the parameter server keeps.
     pub recorder: Option<Arc<crate::trace::Recorder>>,
+    /// Worker addresses in global id order (net transport only; each
+    /// shard takes the `lo..lo+width` slice). Empty otherwise.
+    pub peers: Vec<String>,
+    /// Model spec forwarded to remote workers in the net hello
+    /// (required when `transport` is [`TransportKind::Net`]).
+    pub net_model: Option<crate::grad::ModelSpec>,
 }
 
 /// Scale a cluster-level gather policy to one shard: `Quorum { k }`
@@ -158,6 +165,32 @@ fn build_inner(
                 sim,
                 wiring,
             ))
+        }
+        TransportKind::Net => {
+            let _ = byzantine; // remote workers rebuild it from the hello
+            anyhow::ensure!(
+                wiring.is_none(),
+                "coordinated adversaries are in-process only (use --transport threaded|sim)"
+            );
+            anyhow::ensure!(
+                cfg.peers.len() >= lo + n_s,
+                "net transport needs {} peer addresses, got {}",
+                lo + n_s,
+                cfg.peers.len()
+            );
+            let model = cfg.net_model.clone().ok_or_else(|| {
+                anyhow::anyhow!("net transport needs the model spec (ShardBuildConfig.net_model)")
+            })?;
+            let mut net_cfg = NetConfig::new(cfg.peers[lo..lo + n_s].to_vec(), model);
+            net_cfg.lo = lo;
+            // the global seed, not shard_seed: remote Byzantine RNGs key
+            // on (seed, global id), matching the in-process closure above
+            net_cfg.seed = seed;
+            net_cfg.latency_us = cfg.latency_us;
+            net_cfg.attack = Some(cfg.attack.clone());
+            net_cfg.byzantine_ids = spec.byzantine.clone();
+            net_cfg.compressor = cfg.compressor.clone();
+            Box::new(NetTransport::connect(net_cfg)?)
         }
     })
 }

@@ -51,6 +51,7 @@
 //!   returns the full wave sorted by worker id — exactly the old
 //!   blocking gather.
 
+pub mod net;
 pub mod sim;
 pub mod threaded;
 
@@ -62,6 +63,7 @@ use crate::adversary::AdversaryController;
 use crate::data::Batch;
 use crate::Result;
 
+pub use net::{NetConfig, NetTransport};
 pub use sim::{LatencyModel, SimConfig, SimTransport, StragglerModel};
 pub use threaded::ThreadedTransport;
 
@@ -162,4 +164,35 @@ pub trait Transport {
 
     /// Tear down (idempotent). Undelivered responses are discarded.
     fn shutdown(&mut self) {}
+
+    /// Socket-level byte/reconnect counters, if this transport moves
+    /// real bytes. `None` (the default) means the caller should keep
+    /// its own payload-based `bytes_round` estimate; `Some` means the
+    /// counters are authoritative — they include frame and header
+    /// overhead, which the in-process estimate cannot see.
+    fn net_stats(&self) -> Option<NetStats> {
+        None
+    }
+
+    /// Drain reconnect notices accumulated since the last drain:
+    /// `(at_ns on the transport clock, worker)` per re-established
+    /// session. Non-network transports never reconnect.
+    fn drain_reconnects(&mut self) -> Vec<(u64, WorkerId)> {
+        Vec::new()
+    }
+}
+
+/// Cumulative socket counters for a byte-moving transport (see
+/// [`Transport::net_stats`]). All values are totals since construction;
+/// callers diff against their own baseline for per-round figures.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Bytes written to sockets, including frame length prefixes and
+    /// headers.
+    pub bytes_tx: u64,
+    /// Bytes read from sockets, same accounting.
+    pub bytes_rx: u64,
+    /// Sessions re-established after a drop (a worker that exhausts
+    /// its reconnect budget becomes a crash-stop instead).
+    pub reconnects: u64,
 }

@@ -1,0 +1,816 @@
+//! Length-prefixed binary frame codec for the TCP transport.
+//!
+//! Wire layout of one frame:
+//!
+//! ```text
+//! +----------------+---------+------------------+
+//! | u32 LE length  | u8 tag  | payload bytes    |
+//! +----------------+---------+------------------+
+//! ```
+//!
+//! `length` counts the tag byte plus the payload (so a frame occupies
+//! `4 + length` bytes on the wire); `length == 0` and
+//! `length > MAX_FRAME` are rejected before any allocation. All
+//! integers are little-endian; `f32`/`f64` travel as their LE byte
+//! representation, so dense gradients and θ round-trip bit-exactly —
+//! the property the cross-transport bit-identity suite rests on.
+//!
+//! Every decode path is fallible: truncated payloads, corrupt length
+//! prefixes, unknown tags, trailing garbage, and mid-frame EOF all
+//! surface as errors, never panics — these bytes arrive from a socket.
+//! Compressed symbol payloads are *not* decoded here; the receiver
+//! validates them with [`Compressor::try_unpack`]
+//! (`crate::coordinator::compress`).
+
+use std::io::{Read, Write};
+
+use crate::config::{AttackConfig, AttackKind};
+use crate::data::Batch;
+use crate::grad::ModelSpec;
+use crate::Result;
+
+/// Hard ceiling on a frame body (tag + payload): 256 MiB. Large enough
+/// for any θ broadcast we ship, small enough that a corrupt length
+/// prefix cannot trigger a multi-GiB allocation.
+pub const MAX_FRAME: u32 = 1 << 28;
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_REQUEST: u8 = 3;
+const TAG_RESPONSE: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+
+/// Master → worker session preamble: everything the worker process
+/// needs to build the exact [`WorkerState`](crate::coordinator::worker::WorkerState)
+/// an in-process transport would have built, so net runs stay
+/// bit-identical to threaded/sim runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hello {
+    /// Transport-local worker id (echoed in every response).
+    pub local_id: u64,
+    /// Global id (shard offset + local): seeds the Byzantine RNG.
+    pub global_id: u64,
+    /// Run seed (Byzantine RNG input).
+    pub seed: u64,
+    /// Artificial per-request compute delay (µs), as `--latency` does
+    /// for the threaded pool.
+    pub latency_us: u64,
+    /// `Some` iff this worker is scripted Byzantine.
+    pub byzantine: Option<AttackConfig>,
+    /// Compressor spec (`Compressor::spec`), if the run compresses.
+    pub compressor: Option<String>,
+    /// Model the worker instantiates its gradient engine from.
+    pub model: ModelSpec,
+}
+
+/// One wave's work for one worker (master → worker).
+#[derive(Clone, Debug)]
+pub struct NetRequest {
+    /// Per-connection sequence number: the ack that lets the master
+    /// resend exactly the unacknowledged requests after a reconnect.
+    pub seq: u64,
+    pub iter: u64,
+    pub phase: u32,
+    pub wave: u64,
+    pub theta: Vec<f32>,
+    pub tasks: Vec<(u64, Batch)>,
+}
+
+/// A symbol's gradient payload: packed wire bytes when the run
+/// compresses (the receiver decodes with `try_unpack`), dense f32s
+/// otherwise.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetGrad {
+    Dense(Vec<f32>),
+    Wire(Vec<u8>),
+}
+
+/// One computed symbol on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetSymbol {
+    pub chunk: u64,
+    pub loss: f32,
+    pub tampered: bool,
+    pub grad: NetGrad,
+}
+
+/// One wave's results from one worker (worker → master).
+#[derive(Clone, Debug)]
+pub struct NetResponse {
+    /// Echo of the request's sequence number (resend bookkeeping).
+    pub seq: u64,
+    pub worker: u64,
+    pub iter: u64,
+    pub phase: u32,
+    pub wave: u64,
+    pub error: Option<String>,
+    pub symbols: Vec<NetSymbol>,
+}
+
+/// Every frame the protocol exchanges.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    Hello(Hello),
+    HelloAck { global_id: u64 },
+    Request(NetRequest),
+    Response(NetResponse),
+    Shutdown,
+}
+
+// ---------------------------------------------------------------- enc
+
+/// Append-only little-endian encoder.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Enc {
+        Enc { buf: vec![tag] }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.f32(*x);
+        }
+    }
+
+    fn i32s(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+// ---------------------------------------------------------------- dec
+
+/// Fallible little-endian cursor: every take checks the remaining
+/// length, and length-prefixed vectors are bounds-checked against the
+/// frame body *before* allocation.
+struct Dec<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() < n {
+            anyhow::bail!("frame truncated: need {n} bytes, have {}", self.b.len());
+        }
+        let (head, rest) = self.b.split_at(n);
+        self.b = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// Element count for `width`-byte elements, rejected before any
+    /// allocation if the remaining body cannot hold it.
+    fn count(&mut self, width: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        match n.checked_mul(width) {
+            Some(total) if total <= self.b.len() => Ok(n),
+            _ => anyhow::bail!("frame vector length {n} exceeds remaining {} bytes", self.b.len()),
+        }
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).map_err(|e| anyhow::anyhow!("frame string not utf-8: {e}"))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.count(4)?;
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    fn finish(&self) -> Result<()> {
+        if !self.b.is_empty() {
+            anyhow::bail!("frame has {} trailing bytes", self.b.len());
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------- field codecs
+
+fn enc_attack(e: &mut Enc, a: &AttackConfig) {
+    let kind = match a.kind {
+        AttackKind::SignFlip => 0u8,
+        AttackKind::Noise => 1,
+        AttackKind::Constant => 2,
+        AttackKind::Zero => 3,
+        AttackKind::SmallBias => 4,
+        AttackKind::Collude => 5,
+    };
+    e.u8(kind);
+    e.f64(a.p);
+    e.f32(a.magnitude);
+}
+
+fn dec_attack(d: &mut Dec) -> Result<AttackConfig> {
+    let kind = match d.u8()? {
+        0 => AttackKind::SignFlip,
+        1 => AttackKind::Noise,
+        2 => AttackKind::Constant,
+        3 => AttackKind::Zero,
+        4 => AttackKind::SmallBias,
+        5 => AttackKind::Collude,
+        other => anyhow::bail!("unknown attack kind tag {other}"),
+    };
+    Ok(AttackConfig { kind, p: d.f64()?, magnitude: d.f32()? })
+}
+
+fn enc_model(e: &mut Enc, m: &ModelSpec) {
+    match m {
+        ModelSpec::LinReg { d, batch } => {
+            e.u8(0);
+            e.u64(*d as u64);
+            e.u64(*batch as u64);
+        }
+        ModelSpec::Mlp { in_dim, hidden, classes, batch } => {
+            e.u8(1);
+            e.u64(*in_dim as u64);
+            e.u64(*hidden as u64);
+            e.u64(*classes as u64);
+            e.u64(*batch as u64);
+        }
+        ModelSpec::Transformer { param_dim, batch, seq_len } => {
+            e.u8(2);
+            e.u64(*param_dim as u64);
+            e.u64(*batch as u64);
+            e.u64(*seq_len as u64);
+        }
+    }
+}
+
+fn dec_model(d: &mut Dec) -> Result<ModelSpec> {
+    Ok(match d.u8()? {
+        0 => ModelSpec::LinReg { d: d.u64()? as usize, batch: d.u64()? as usize },
+        1 => ModelSpec::Mlp {
+            in_dim: d.u64()? as usize,
+            hidden: d.u64()? as usize,
+            classes: d.u64()? as usize,
+            batch: d.u64()? as usize,
+        },
+        2 => ModelSpec::Transformer {
+            param_dim: d.u64()? as usize,
+            batch: d.u64()? as usize,
+            seq_len: d.u64()? as usize,
+        },
+        other => anyhow::bail!("unknown model tag {other}"),
+    })
+}
+
+fn enc_batch(e: &mut Enc, b: &Batch) {
+    match b {
+        Batch::LinReg { x, y, b, d } => {
+            e.u8(0);
+            e.u64(*b as u64);
+            e.u64(*d as u64);
+            e.f32s(x);
+            e.f32s(y);
+        }
+        Batch::Classif { x, labels, b, d } => {
+            e.u8(1);
+            e.u64(*b as u64);
+            e.u64(*d as u64);
+            e.f32s(x);
+            e.i32s(labels);
+        }
+        Batch::Tokens { tokens, b, t } => {
+            e.u8(2);
+            e.u64(*b as u64);
+            e.u64(*t as u64);
+            e.i32s(tokens);
+        }
+    }
+}
+
+fn dec_batch(dec: &mut Dec) -> Result<Batch> {
+    Ok(match dec.u8()? {
+        0 => {
+            let (b, d) = (dec.u64()? as usize, dec.u64()? as usize);
+            let x = dec.f32s()?;
+            let y = dec.f32s()?;
+            if x.len() != b * d || y.len() != b {
+                anyhow::bail!("linreg batch shape mismatch: b={b} d={d} |x|={} |y|={}", x.len(), y.len());
+            }
+            Batch::LinReg { x, y, b, d }
+        }
+        1 => {
+            let (b, d) = (dec.u64()? as usize, dec.u64()? as usize);
+            let x = dec.f32s()?;
+            let labels = dec.i32s()?;
+            if x.len() != b * d || labels.len() != b {
+                anyhow::bail!(
+                    "classif batch shape mismatch: b={b} d={d} |x|={} |labels|={}",
+                    x.len(),
+                    labels.len()
+                );
+            }
+            Batch::Classif { x, labels, b, d }
+        }
+        2 => {
+            let (b, t) = (dec.u64()? as usize, dec.u64()? as usize);
+            let tokens = dec.i32s()?;
+            if tokens.len() != b * t {
+                anyhow::bail!("tokens batch shape mismatch: b={b} t={t} |tokens|={}", tokens.len());
+            }
+            Batch::Tokens { tokens, b, t }
+        }
+        other => anyhow::bail!("unknown batch tag {other}"),
+    })
+}
+
+fn enc_opt<T>(e: &mut Enc, v: &Option<T>, f: impl FnOnce(&mut Enc, &T)) {
+    match v {
+        None => e.u8(0),
+        Some(x) => {
+            e.u8(1);
+            f(e, x);
+        }
+    }
+}
+
+fn dec_opt<T>(d: &mut Dec, f: impl FnOnce(&mut Dec) -> Result<T>) -> Result<Option<T>> {
+    match d.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(f(d)?)),
+        other => anyhow::bail!("bad option tag {other}"),
+    }
+}
+
+// ------------------------------------------------------- frame codec
+
+impl Frame {
+    /// Encode as `tag + payload` (the body behind the length prefix).
+    fn encode_body(&self) -> Vec<u8> {
+        match self {
+            Frame::Hello(h) => {
+                let mut e = Enc::new(TAG_HELLO);
+                e.u64(h.local_id);
+                e.u64(h.global_id);
+                e.u64(h.seed);
+                e.u64(h.latency_us);
+                enc_opt(&mut e, &h.byzantine, enc_attack);
+                enc_opt(&mut e, &h.compressor, |e, s| e.str(s));
+                enc_model(&mut e, &h.model);
+                e.buf
+            }
+            Frame::HelloAck { global_id } => {
+                let mut e = Enc::new(TAG_HELLO_ACK);
+                e.u64(*global_id);
+                e.buf
+            }
+            Frame::Request(r) => {
+                let mut e = Enc::new(TAG_REQUEST);
+                e.u64(r.seq);
+                e.u64(r.iter);
+                e.u32(r.phase);
+                e.u64(r.wave);
+                e.f32s(&r.theta);
+                e.u32(r.tasks.len() as u32);
+                for (chunk, batch) in &r.tasks {
+                    e.u64(*chunk);
+                    enc_batch(&mut e, batch);
+                }
+                e.buf
+            }
+            Frame::Response(r) => {
+                let mut e = Enc::new(TAG_RESPONSE);
+                e.u64(r.seq);
+                e.u64(r.worker);
+                e.u64(r.iter);
+                e.u32(r.phase);
+                e.u64(r.wave);
+                enc_opt(&mut e, &r.error, |e, s| e.str(s));
+                e.u32(r.symbols.len() as u32);
+                for s in &r.symbols {
+                    e.u64(s.chunk);
+                    e.f32(s.loss);
+                    e.u8(s.tampered as u8);
+                    match &s.grad {
+                        NetGrad::Dense(g) => {
+                            e.u8(0);
+                            e.f32s(g);
+                        }
+                        NetGrad::Wire(w) => {
+                            e.u8(1);
+                            e.bytes(w);
+                        }
+                    }
+                }
+                e.buf
+            }
+            Frame::Shutdown => Enc::new(TAG_SHUTDOWN).buf,
+        }
+    }
+
+    /// Decode a full `tag + payload` body (trailing bytes rejected).
+    fn decode_body(body: &[u8]) -> Result<Frame> {
+        let mut d = Dec::new(body);
+        let frame = match d.u8()? {
+            TAG_HELLO => Frame::Hello(Hello {
+                local_id: d.u64()?,
+                global_id: d.u64()?,
+                seed: d.u64()?,
+                latency_us: d.u64()?,
+                byzantine: dec_opt(&mut d, dec_attack)?,
+                compressor: dec_opt(&mut d, |d| d.string())?,
+                model: dec_model(&mut d)?,
+            }),
+            TAG_HELLO_ACK => Frame::HelloAck { global_id: d.u64()? },
+            TAG_REQUEST => {
+                let seq = d.u64()?;
+                let iter = d.u64()?;
+                let phase = d.u32()?;
+                let wave = d.u64()?;
+                let theta = d.f32s()?;
+                let ntasks = d.count(9)?; // each task: u64 chunk + >= 1 byte batch
+                let mut tasks = Vec::with_capacity(ntasks);
+                for _ in 0..ntasks {
+                    let chunk = d.u64()?;
+                    tasks.push((chunk, dec_batch(&mut d)?));
+                }
+                Frame::Request(NetRequest { seq, iter, phase, wave, theta, tasks })
+            }
+            TAG_RESPONSE => {
+                let seq = d.u64()?;
+                let worker = d.u64()?;
+                let iter = d.u64()?;
+                let phase = d.u32()?;
+                let wave = d.u64()?;
+                let error = dec_opt(&mut d, |d| d.string())?;
+                let nsym = d.count(14)?; // chunk + loss + flag + grad tag
+                let mut symbols = Vec::with_capacity(nsym);
+                for _ in 0..nsym {
+                    let chunk = d.u64()?;
+                    let loss = d.f32()?;
+                    let tampered = match d.u8()? {
+                        0 => false,
+                        1 => true,
+                        other => anyhow::bail!("bad tampered flag {other}"),
+                    };
+                    let grad = match d.u8()? {
+                        0 => NetGrad::Dense(d.f32s()?),
+                        1 => NetGrad::Wire(d.bytes()?),
+                        other => anyhow::bail!("unknown grad tag {other}"),
+                    };
+                    symbols.push(NetSymbol { chunk, loss, tampered, grad });
+                }
+                Frame::Response(NetResponse { seq, worker, iter, phase, wave, error, symbols })
+            }
+            TAG_SHUTDOWN => Frame::Shutdown,
+            other => anyhow::bail!("unknown frame tag {other}"),
+        };
+        d.finish()?;
+        Ok(frame)
+    }
+}
+
+/// Write one frame; returns the total bytes put on the wire (length
+/// prefix included) for the honest `bytes_round` accounting.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
+    let body = frame.encode_body();
+    if body.len() as u64 > MAX_FRAME as u64 {
+        anyhow::bail!("frame body {} bytes exceeds MAX_FRAME {MAX_FRAME}", body.len());
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(4 + body.len() as u64)
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the stream cleanly
+/// *at a frame boundary*; EOF inside a length prefix or body is an
+/// error (a torn frame). Returns the frame plus its wire size.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(Frame, u64)>> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut prefix[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => anyhow::bail!("EOF inside frame length prefix ({got}/4 bytes)"),
+            n => got += n,
+        }
+    }
+    let len = u32::from_le_bytes(prefix);
+    if len == 0 || len > MAX_FRAME {
+        anyhow::bail!("corrupt frame length {len} (max {MAX_FRAME})");
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)
+        .map_err(|e| anyhow::anyhow!("EOF inside {len}-byte frame body: {e}"))?;
+    Ok(Some((Frame::decode_body(&body)?, 4 + len as u64)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use std::io::Cursor;
+
+    /// A `Read` that hands out at most `k` bytes per call — the
+    /// split-read simulation: every frame crosses several short reads,
+    /// as TCP segments do.
+    struct Chunker<'a> {
+        data: &'a [u8],
+        pos: usize,
+        k: usize,
+    }
+
+    impl Read for Chunker<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = self.k.min(buf.len()).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn sample_frames() -> Vec<Frame> {
+        let mut rng = Pcg64::seeded(42);
+        vec![
+            Frame::Hello(Hello {
+                local_id: 3,
+                global_id: 11,
+                seed: 7,
+                latency_us: 250,
+                byzantine: Some(AttackConfig {
+                    kind: AttackKind::Noise,
+                    p: 0.25,
+                    magnitude: 2.5,
+                }),
+                compressor: Some("topk:16".into()),
+                model: ModelSpec::Mlp { in_dim: 16, hidden: 8, classes: 4, batch: 32 },
+            }),
+            Frame::Hello(Hello {
+                local_id: 0,
+                global_id: 0,
+                seed: 1,
+                latency_us: 0,
+                byzantine: None,
+                compressor: None,
+                model: ModelSpec::LinReg { d: 8, batch: 64 },
+            }),
+            Frame::HelloAck { global_id: 11 },
+            Frame::Request(NetRequest {
+                seq: 9,
+                iter: 4,
+                phase: 1,
+                wave: 77,
+                theta: rng.gauss_vec(33),
+                tasks: vec![
+                    (2, Batch::LinReg { x: rng.gauss_vec(12), y: rng.gauss_vec(3), b: 3, d: 4 }),
+                    (
+                        5,
+                        Batch::Classif {
+                            x: rng.gauss_vec(8),
+                            labels: vec![0, 3],
+                            b: 2,
+                            d: 4,
+                        },
+                    ),
+                    (7, Batch::Tokens { tokens: vec![1, 2, 3, 4, 5, 6], b: 2, t: 3 }),
+                ],
+            }),
+            Frame::Response(NetResponse {
+                seq: 9,
+                worker: 3,
+                iter: 4,
+                phase: 1,
+                wave: 77,
+                error: None,
+                symbols: vec![
+                    NetSymbol {
+                        chunk: 2,
+                        loss: 0.5,
+                        tampered: false,
+                        grad: NetGrad::Dense(rng.gauss_vec(16)),
+                    },
+                    NetSymbol {
+                        chunk: 5,
+                        loss: -1.5,
+                        tampered: true,
+                        grad: NetGrad::Wire(vec![1, 2, 3, 255, 0, 128]),
+                    },
+                ],
+            }),
+            Frame::Response(NetResponse {
+                seq: 10,
+                worker: 0,
+                iter: 5,
+                phase: 0,
+                wave: 78,
+                error: Some("engine error: NaN loss".into()),
+                symbols: vec![],
+            }),
+            Frame::Shutdown,
+        ]
+    }
+
+    fn assert_frames_eq(a: &Frame, b: &Frame) {
+        // Frame has no PartialEq (Batch holds floats); byte equality of
+        // the canonical encoding is the identity we actually need
+        assert_eq!(a.encode_body(), b.encode_body());
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        for f in sample_frames() {
+            let mut buf = Vec::new();
+            let wrote = write_frame(&mut buf, &f).unwrap();
+            assert_eq!(wrote, buf.len() as u64, "write_frame must report true wire bytes");
+            let (back, read) = read_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+            assert_eq!(read, wrote);
+            assert_frames_eq(&f, &back);
+        }
+    }
+
+    #[test]
+    fn frames_round_trip_across_split_reads() {
+        // all frames back-to-back in one stream, delivered in 1-, 3-,
+        // and 7-byte slivers
+        let frames = sample_frames();
+        let mut stream = Vec::new();
+        for f in &frames {
+            write_frame(&mut stream, f).unwrap();
+        }
+        for k in [1usize, 3, 7] {
+            let mut r = Chunker { data: &stream, pos: 0, k };
+            let mut back = Vec::new();
+            while let Some((f, _)) = read_frame(&mut r).unwrap() {
+                back.push(f);
+            }
+            assert_eq!(back.len(), frames.len(), "k={k}");
+            for (a, b) in frames.iter().zip(&back) {
+                assert_frames_eq(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn clean_eof_at_frame_boundary_is_none() {
+        let mut empty = Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn mid_frame_eof_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::HelloAck { global_id: 5 }).unwrap();
+        // every strict prefix (incl. a torn length prefix) must error
+        for cut in 1..buf.len() {
+            let r = read_frame(&mut Cursor::new(&buf[..cut]));
+            assert!(r.is_err(), "prefix of {cut}/{} bytes accepted", buf.len());
+        }
+    }
+
+    #[test]
+    fn corrupt_length_prefixes_are_rejected() {
+        // zero length
+        let z = 0u32.to_le_bytes();
+        assert!(read_frame(&mut Cursor::new(&z[..])).is_err());
+        // oversized length — must reject BEFORE trying to allocate/read
+        let huge = (MAX_FRAME + 1).to_le_bytes();
+        assert!(read_frame(&mut Cursor::new(&huge[..])).is_err());
+        // plausible length, but the body lies about its vector sizes:
+        // a Request claiming u32::MAX thetas inside a tiny body
+        let mut body = vec![TAG_REQUEST];
+        body.extend_from_slice(&9u64.to_le_bytes()); // seq
+        body.extend_from_slice(&0u64.to_le_bytes()); // iter
+        body.extend_from_slice(&0u32.to_le_bytes()); // phase
+        body.extend_from_slice(&1u64.to_le_bytes()); // wave
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // |theta| lie
+        let mut buf = (body.len() as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(&body);
+        assert!(read_frame(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn unknown_tags_and_trailing_garbage_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        // unknown tag
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(read_frame(&mut Cursor::new(&bad)).is_err());
+        // trailing garbage inside the declared body
+        let mut padded = Vec::new();
+        padded.extend_from_slice(&3u32.to_le_bytes());
+        padded.push(TAG_SHUTDOWN);
+        padded.extend_from_slice(&[0xde, 0xad]);
+        assert!(read_frame(&mut Cursor::new(&padded)).is_err());
+    }
+
+    #[test]
+    fn theta_round_trips_bit_exactly() {
+        // the bit-identity suite depends on f32 LE round-tripping
+        let theta: Vec<f32> = vec![0.1, -0.0, f32::MIN_POSITIVE, 3.5e37, -1.0e-37];
+        let f = Frame::Request(NetRequest {
+            seq: 0,
+            iter: 0,
+            phase: 0,
+            wave: 0,
+            theta: theta.clone(),
+            tasks: vec![],
+        });
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let (back, _) = read_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+        match back {
+            Frame::Request(r) => {
+                assert_eq!(r.theta.len(), theta.len());
+                for (a, b) in theta.iter().zip(&r.theta) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            _ => panic!("wrong frame"),
+        }
+    }
+
+    #[test]
+    fn random_byte_garbage_never_panics() {
+        let mut rng = Pcg64::seeded(1234);
+        for _ in 0..500 {
+            let len = (rng.next_u64() % 64) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+            // any outcome but a panic is acceptable
+            let _ = read_frame(&mut Cursor::new(&bytes));
+        }
+    }
+}

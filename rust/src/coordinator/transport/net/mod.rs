@@ -1,0 +1,671 @@
+//! TCP transport: master and workers as separate processes.
+//!
+//! This is the first transport where the protocol meets the OS. The
+//! master side ([`NetTransport`]) implements the completion-driven
+//! [`Transport`] contract over one TCP connection per worker; the
+//! worker side ([`server::serve`]) is a standalone process (`r3bft
+//! worker --listen ADDR`) hosting the exact same
+//! [`WorkerState`](crate::coordinator::worker::WorkerState) compute
+//! core the in-process transports drive — which is why a loopback net
+//! run is bit-identical to a threaded or sim run for the same seed.
+//!
+//! Architecture, per worker:
+//!
+//! * a **supervisor thread** owns the connection lifecycle: connect →
+//!   [`frame::Hello`] handshake → resend unacknowledged requests →
+//!   write loop. Outbound requests arrive over a *bounded* channel
+//!   ([`NetConfig::outbound_depth`]), so a stalled connection
+//!   backpressures `submit` instead of buffering unboundedly;
+//! * a **reader thread** per live session turns incoming
+//!   [`frame::NetResponse`] frames into events for `poll`, acking the
+//!   per-connection sequence number that reconnect resends key on;
+//! * when the session drops, the supervisor reconnects with capped
+//!   exponential backoff. Each re-established session is surfaced as a
+//!   reconnect notice ([`Transport::drain_reconnects`] → the
+//!   `net_reconnects` metric and a trace event). A worker that
+//!   exhausts [`NetConfig::max_attempts`] becomes a **crash-stop**:
+//!   every owed delivery comes back as [`Delivery::Failed`] in-band —
+//!   never a hang — and later submits to it fail immediately.
+//!
+//! Deadline-based gathers run on the wall clock ([`Transport::poll`]
+//! mirrors [`super::ThreadedTransport`]'s blocking recv/timeout shape
+//! exactly), and the socket byte counters ([`Transport::net_stats`])
+//! include frame and header overhead — the honest `bytes_round`
+//! figure an in-process transport cannot measure.
+//!
+//! Incoming bytes are untrusted: frames decode fallibly
+//! ([`frame::read_frame`]) and compressed symbol payloads pass
+//! through [`Compressor::try_unpack`]; a malformed response is logged
+//! and surfaced as that worker's crash-stop, not a master panic.
+
+pub mod frame;
+pub mod server;
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::super::compress::Compressor;
+use super::super::worker::{Response, Symbol};
+use super::super::WorkerId;
+use super::{Delivery, NetStats, TaskBundle, Transport};
+use crate::config::AttackConfig;
+use crate::grad::ModelSpec;
+use crate::Result;
+
+use frame::{read_frame, write_frame, Frame, Hello, NetGrad, NetRequest, NetResponse};
+
+/// Master-side configuration for one [`NetTransport`].
+pub struct NetConfig {
+    /// One `host:port` per worker; local id = index, global id =
+    /// `lo + index`.
+    pub peers: Vec<String>,
+    /// Global id of local worker 0 (shard inner transports pass their
+    /// range offset; flat runs pass 0).
+    pub lo: WorkerId,
+    /// Run seed, forwarded so remote Byzantine RNGs match in-process
+    /// ones.
+    pub seed: u64,
+    /// Artificial per-request compute delay (µs) applied worker-side.
+    pub latency_us: u64,
+    /// Scripted attack given to the workers in `byzantine_ids`.
+    pub attack: Option<AttackConfig>,
+    /// *Global* ids of scripted-Byzantine workers.
+    pub byzantine_ids: Vec<WorkerId>,
+    /// Gradient compressor; its [`Compressor::spec`] is forwarded in
+    /// the hello so the worker builds an identical one.
+    pub compressor: Option<Arc<dyn Compressor>>,
+    /// Model the workers instantiate their engines from.
+    pub model: ModelSpec,
+    /// Connection attempts per outage before the worker is declared
+    /// crash-stopped.
+    pub max_attempts: u32,
+    /// Base reconnect backoff (doubles per attempt, capped at 16×).
+    pub backoff_ms: u64,
+    /// Outbound queue depth per worker (bounded backpressure).
+    pub outbound_depth: usize,
+}
+
+impl NetConfig {
+    pub fn new(peers: Vec<String>, model: ModelSpec) -> NetConfig {
+        NetConfig {
+            peers,
+            lo: 0,
+            seed: 0,
+            latency_us: 0,
+            attack: None,
+            byzantine_ids: Vec::new(),
+            compressor: None,
+            model,
+            max_attempts: 5,
+            backoff_ms: 25,
+            outbound_depth: 4,
+        }
+    }
+}
+
+/// Cumulative socket counters shared by every supervisor/reader.
+#[derive(Default)]
+struct Counters {
+    bytes_tx: AtomicU64,
+    bytes_rx: AtomicU64,
+    reconnects: AtomicU64,
+}
+
+/// Supervisor/reader → master events.
+enum NetEvent {
+    Resp(NetResponse),
+    /// `count` owed deliveries will never arrive: the worker is
+    /// crash-stopped (reconnect budget exhausted).
+    Failed { worker: WorkerId, count: usize },
+    /// A session was re-established (metrics/trace only).
+    Reconnect { worker: WorkerId },
+}
+
+struct SupervisorCtx {
+    worker: WorkerId,
+    addr: String,
+    hello: Hello,
+    cmd_rx: Receiver<NetRequest>,
+    events: Sender<NetEvent>,
+    counters: Arc<Counters>,
+    /// Requests written but not yet answered, by sequence number —
+    /// exactly what a fresh session must resend.
+    unacked: Arc<Mutex<BTreeMap<u64, NetRequest>>>,
+    max_attempts: u32,
+    backoff_ms: u64,
+}
+
+/// TCP-backed [`Transport`]: one connection actor per worker.
+pub struct NetTransport {
+    n: usize,
+    /// Dense gradient dimension (`model.param_dim()`): what compressed
+    /// symbol payloads must decode to.
+    d: usize,
+    compressor: Option<Arc<dyn Compressor>>,
+    cmd_txs: Vec<Option<SyncSender<NetRequest>>>,
+    events_rx: Receiver<NetEvent>,
+    handles: Vec<JoinHandle<()>>,
+    /// Deliveries owed via the events channel.
+    in_flight: usize,
+    /// Deliveries already due (submits to known-dead workers).
+    pending: Vec<Delivery>,
+    dead: Vec<bool>,
+    next_seq: u64,
+    reconnect_log: Vec<(u64, WorkerId)>,
+    counters: Arc<Counters>,
+    origin: Instant,
+}
+
+impl NetTransport {
+    /// Spawn one supervisor per peer. Returns immediately: connections
+    /// are established concurrently by the supervisors, and a peer
+    /// that never comes up surfaces as an in-band crash-stop once its
+    /// reconnect budget runs out.
+    pub fn connect(cfg: NetConfig) -> Result<NetTransport> {
+        let n = cfg.peers.len();
+        if n == 0 {
+            anyhow::bail!("net transport needs at least one peer");
+        }
+        let d = cfg.model.param_dim();
+        let (events_tx, events_rx) = channel::<NetEvent>();
+        let counters = Arc::new(Counters::default());
+        let mut cmd_txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (i, addr) in cfg.peers.iter().enumerate() {
+            let global = cfg.lo + i;
+            let byzantine = if cfg.byzantine_ids.contains(&global) {
+                cfg.attack.clone()
+            } else {
+                None
+            };
+            let hello = Hello {
+                local_id: i as u64,
+                global_id: global as u64,
+                seed: cfg.seed,
+                latency_us: cfg.latency_us,
+                byzantine,
+                compressor: cfg.compressor.as_ref().map(|c| c.spec()),
+                model: cfg.model.clone(),
+            };
+            let (cmd_tx, cmd_rx) = sync_channel::<NetRequest>(cfg.outbound_depth.max(1));
+            cmd_txs.push(Some(cmd_tx));
+            let ctx = SupervisorCtx {
+                worker: i,
+                addr: addr.clone(),
+                hello,
+                cmd_rx,
+                events: events_tx.clone(),
+                counters: counters.clone(),
+                unacked: Arc::new(Mutex::new(BTreeMap::new())),
+                max_attempts: cfg.max_attempts.max(1),
+                backoff_ms: cfg.backoff_ms.max(1),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("r3bft-net-{i}"))
+                    .spawn(move || run_supervisor(ctx))
+                    .expect("spawn net supervisor"),
+            );
+        }
+        Ok(NetTransport {
+            n,
+            d,
+            compressor: cfg.compressor,
+            cmd_txs,
+            events_rx,
+            handles,
+            in_flight: 0,
+            pending: Vec::new(),
+            dead: vec![false; n],
+            next_seq: 0,
+            reconnect_log: Vec::new(),
+            counters,
+            origin: Instant::now(),
+        })
+    }
+
+    fn note_reconnect(&mut self, worker: WorkerId) {
+        let at = self.now_ns();
+        log::info!("worker {worker}: session re-established");
+        self.reconnect_log.push((at, worker));
+    }
+
+    /// Decode one response into a delivery. A worker-reported engine
+    /// error or a malformed symbol payload is that worker's
+    /// crash-stop, mirroring [`super::ThreadedTransport`].
+    fn to_delivery(&self, r: NetResponse, at_ns: u64) -> Delivery {
+        let worker = r.worker as WorkerId;
+        if let Some(err) = &r.error {
+            log::warn!("worker {worker} failed: {err}");
+            return Delivery::Failed { at_ns, worker };
+        }
+        let mut symbols = Vec::with_capacity(r.symbols.len());
+        for s in r.symbols {
+            let (grad, wire) = match (s.grad, &self.compressor) {
+                (NetGrad::Wire(w), Some(c)) => match c.try_unpack(&w, self.d) {
+                    Ok(g) => (g, Some(w)),
+                    Err(e) => {
+                        log::warn!("worker {worker}: undecodable symbol wire: {e:#}");
+                        return Delivery::Failed { at_ns, worker };
+                    }
+                },
+                (NetGrad::Dense(g), None) => {
+                    if g.len() != self.d {
+                        log::warn!("worker {worker}: symbol dim {} != {}", g.len(), self.d);
+                        return Delivery::Failed { at_ns, worker };
+                    }
+                    (g, None)
+                }
+                (_, _) => {
+                    log::warn!("worker {worker}: symbol encoding disagrees with compressor config");
+                    return Delivery::Failed { at_ns, worker };
+                }
+            };
+            symbols.push(Symbol {
+                chunk: s.chunk as usize,
+                grad,
+                loss: s.loss,
+                tampered: s.tampered,
+                wire,
+            });
+        }
+        Delivery::Response {
+            at_ns,
+            response: Response {
+                worker,
+                iter: r.iter,
+                phase: r.phase,
+                wave: r.wave,
+                symbols,
+                error: None,
+            },
+        }
+    }
+
+    /// Fold one delivery-producing event into `out`. Returns how many
+    /// deliveries it yielded (a budget-exhausted notice for a worker
+    /// with nothing owed yields zero).
+    fn ingest(&mut self, ev: NetEvent, out: &mut Vec<Delivery>) -> usize {
+        match ev {
+            NetEvent::Reconnect { worker } => {
+                self.note_reconnect(worker);
+                0
+            }
+            NetEvent::Resp(r) => {
+                self.in_flight = self.in_flight.saturating_sub(1);
+                let at = self.now_ns();
+                out.push(self.to_delivery(r, at));
+                1
+            }
+            NetEvent::Failed { worker, count } => {
+                if !self.dead[worker] {
+                    log::warn!("worker {worker}: connection lost for good (crash-stop)");
+                }
+                self.dead[worker] = true;
+                let count = count.min(self.in_flight);
+                self.in_flight -= count;
+                let at = self.now_ns();
+                for _ in 0..count {
+                    out.push(Delivery::Failed { at_ns: at, worker });
+                }
+                count
+            }
+        }
+    }
+}
+
+impl Transport for NetTransport {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    fn submit(
+        &mut self,
+        iter: u64,
+        phase: u32,
+        wave: u64,
+        theta: &Arc<Vec<f32>>,
+        bundles: Vec<TaskBundle>,
+    ) -> Result<()> {
+        for TaskBundle { worker, tasks } in bundles {
+            if worker >= self.n {
+                anyhow::bail!("submit to unknown worker {worker} (n = {})", self.n);
+            }
+            if self.dead[worker] {
+                // crash-stopped: owe the failure directly, nothing to send
+                let at = self.now_ns();
+                self.pending.push(Delivery::Failed { at_ns: at, worker });
+                continue;
+            }
+            let req = NetRequest {
+                seq: self.next_seq,
+                iter,
+                phase,
+                wave,
+                theta: theta.as_ref().clone(),
+                tasks: tasks.into_iter().map(|(c, b)| (c as u64, b)).collect(),
+            };
+            self.next_seq += 1;
+            // bounded channel: blocks when the worker's outbound queue
+            // is full (backpressure), errs only if the supervisor died
+            let sent = match &self.cmd_txs[worker] {
+                Some(tx) => tx.send(req).is_ok(),
+                None => false,
+            };
+            if sent {
+                self.in_flight += 1;
+            } else {
+                self.dead[worker] = true;
+                let at = self.now_ns();
+                self.pending.push(Delivery::Failed { at_ns: at, worker });
+            }
+        }
+        Ok(())
+    }
+
+    fn poll(&mut self, deadline_ns: Option<u64>) -> Result<Vec<Delivery>> {
+        let mut out: Vec<Delivery> = Vec::new();
+        // failures recorded at submit time are already due
+        if !self.pending.is_empty() {
+            out.append(&mut self.pending);
+            out.sort_by_key(|d| d.worker());
+            return Ok(out);
+        }
+        if self.in_flight == 0 {
+            return Ok(out);
+        }
+        // block for the first delivery-producing event, bounded by the
+        // deadline; reconnect notices and zero-yield failure notices
+        // are folded in without ending the wait
+        loop {
+            let ev = match deadline_ns {
+                None => match self.events_rx.recv() {
+                    Ok(ev) => Some(ev),
+                    Err(_) => anyhow::bail!("all worker connections gone"),
+                },
+                Some(d) => {
+                    let now = self.now_ns();
+                    if d <= now {
+                        // past the deadline: hand over whatever already
+                        // arrived, never block
+                        self.events_rx.try_recv().ok()
+                    } else {
+                        match self.events_rx.recv_timeout(Duration::from_nanos(d - now)) {
+                            Ok(ev) => Some(ev),
+                            Err(RecvTimeoutError::Timeout) => None,
+                            Err(RecvTimeoutError::Disconnected) => {
+                                anyhow::bail!("all worker connections gone")
+                            }
+                        }
+                    }
+                }
+            };
+            match ev {
+                None => return Ok(out), // deadline passed
+                Some(ev) => {
+                    if self.ingest(ev, &mut out) > 0 {
+                        break;
+                    }
+                    // zero-yield event: keep waiting (deadline re-checked)
+                }
+            }
+        }
+        // drain whatever else is already ready, without blocking
+        while self.in_flight > 0 {
+            match self.events_rx.try_recv() {
+                Ok(ev) => {
+                    self.ingest(ev, &mut out);
+                }
+                Err(_) => break,
+            }
+        }
+        out.sort_by_key(|d| d.worker());
+        Ok(out)
+    }
+
+    fn shutdown(&mut self) {
+        // dropping the senders makes each supervisor send a Shutdown
+        // frame to its worker and exit
+        for tx in self.cmd_txs.iter_mut() {
+            *tx = None;
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.in_flight = 0;
+        self.pending.clear();
+    }
+
+    fn net_stats(&self) -> Option<NetStats> {
+        Some(NetStats {
+            bytes_tx: self.counters.bytes_tx.load(Ordering::Relaxed),
+            bytes_rx: self.counters.bytes_rx.load(Ordering::Relaxed),
+            reconnects: self.counters.reconnects.load(Ordering::Relaxed),
+        })
+    }
+
+    fn drain_reconnects(&mut self) -> Vec<(u64, WorkerId)> {
+        std::mem::take(&mut self.reconnect_log)
+    }
+}
+
+impl Drop for NetTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ------------------------------------------------------- supervisor
+
+/// One session attempt: connect, handshake, spawn the reader, resend
+/// unacked requests, then serve the write loop until the session or
+/// the master goes away.
+enum SessionEnd {
+    /// Connection broke — reconnect (resending unacked).
+    Broken,
+    /// Master dropped the command channel — send Shutdown and exit.
+    MasterGone,
+}
+
+fn run_supervisor(ctx: SupervisorCtx) {
+    let mut attempts_left = ctx.max_attempts;
+    let mut first_session = true;
+    loop {
+        // connect with capped exponential backoff
+        let stream = loop {
+            match TcpStream::connect(&ctx.addr) {
+                Ok(s) => break Some(s),
+                Err(e) => {
+                    attempts_left = attempts_left.saturating_sub(1);
+                    if attempts_left == 0 {
+                        log::warn!("worker {} @ {}: connect failed: {e}", ctx.worker, ctx.addr);
+                        break None;
+                    }
+                    let exp = (ctx.max_attempts - attempts_left).min(4);
+                    std::thread::sleep(Duration::from_millis(ctx.backoff_ms << exp));
+                }
+            }
+        };
+        let stream = match stream {
+            Some(s) => s,
+            None => return fail_forever(&ctx),
+        };
+        match run_session(&ctx, stream, first_session, &mut attempts_left) {
+            SessionEnd::MasterGone => return,
+            SessionEnd::Broken => {
+                attempts_left = attempts_left.saturating_sub(1);
+                if attempts_left == 0 {
+                    return fail_forever(&ctx);
+                }
+                first_session = false;
+                let exp = (ctx.max_attempts - attempts_left).min(4);
+                std::thread::sleep(Duration::from_millis(ctx.backoff_ms << exp));
+            }
+        }
+    }
+}
+
+fn run_session(
+    ctx: &SupervisorCtx,
+    mut stream: TcpStream,
+    first: bool,
+    attempts_left: &mut u32,
+) -> SessionEnd {
+    let _ = stream.set_nodelay(true);
+    // handshake: Hello out, HelloAck back (reads are unbuffered here;
+    // the worker sends nothing after the ack until we send requests)
+    match write_frame(&mut stream, &Frame::Hello(ctx.hello.clone())) {
+        Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
+        Err(e) => {
+            log::warn!("worker {}: hello write failed: {e:#}", ctx.worker);
+            return SessionEnd::Broken;
+        }
+    };
+    match read_frame(&mut stream) {
+        Ok(Some((Frame::HelloAck { global_id }, nb)))
+            if global_id == ctx.hello.global_id =>
+        {
+            ctx.counters.bytes_rx.fetch_add(nb, Ordering::Relaxed);
+        }
+        Ok(_) | Err(_) => {
+            log::warn!("worker {}: bad hello ack", ctx.worker);
+            return SessionEnd::Broken;
+        }
+    }
+    // handshake done: the outage (if any) is over, refill the budget
+    *attempts_left = ctx.max_attempts;
+    if !first {
+        ctx.counters.reconnects.fetch_add(1, Ordering::Relaxed);
+        let _ = ctx.events.send(NetEvent::Reconnect { worker: ctx.worker });
+    }
+    // reader for this session (clears `alive` when the session dies)
+    let alive = Arc::new(AtomicBool::new(true));
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            log::warn!("worker {}: stream clone failed: {e}", ctx.worker);
+            return SessionEnd::Broken;
+        }
+    };
+    {
+        let alive = alive.clone();
+        let events = ctx.events.clone();
+        let unacked = ctx.unacked.clone();
+        let counters = ctx.counters.clone();
+        let worker = ctx.worker;
+        std::thread::Builder::new()
+            .name(format!("r3bft-net-read-{worker}"))
+            .spawn(move || run_reader(reader_stream, alive, events, unacked, counters))
+            .expect("spawn net reader");
+    }
+    // a fresh session starts by resending everything unanswered, in
+    // sequence order (the worker recomputes deterministically)
+    let resend: Vec<NetRequest> = {
+        let m = ctx.unacked.lock().expect("unacked lock");
+        m.values().cloned().collect()
+    };
+    for req in resend {
+        match write_frame(&mut stream, &Frame::Request(req)) {
+            Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
+            Err(_) => return SessionEnd::Broken,
+        }
+    }
+    // write loop; the timeout tick is only how fast we notice a dead
+    // reader while idle — requests themselves are written immediately
+    loop {
+        if !alive.load(Ordering::Acquire) {
+            return SessionEnd::Broken;
+        }
+        match ctx.cmd_rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(req) => {
+                ctx.unacked.lock().expect("unacked lock").insert(req.seq, req.clone());
+                match write_frame(&mut stream, &Frame::Request(req)) {
+                    Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
+                    Err(_) => return SessionEnd::Broken,
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => {
+                if let Ok(nb) = write_frame(&mut stream, &Frame::Shutdown) {
+                    ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed);
+                }
+                return SessionEnd::MasterGone;
+            }
+        }
+    }
+}
+
+fn run_reader(
+    stream: TcpStream,
+    alive: Arc<AtomicBool>,
+    events: Sender<NetEvent>,
+    unacked: Arc<Mutex<BTreeMap<u64, NetRequest>>>,
+    counters: Arc<Counters>,
+) {
+    let mut r = BufReader::new(stream);
+    loop {
+        match read_frame(&mut r) {
+            Ok(Some((Frame::Response(resp), nb))) => {
+                counters.bytes_rx.fetch_add(nb, Ordering::Relaxed);
+                // ack: the seq is no longer owed by future sessions.
+                // An unknown seq is a stale duplicate (already answered
+                // on an earlier session) — dropped, so every request
+                // yields exactly one event.
+                let known =
+                    unacked.lock().expect("unacked lock").remove(&resp.seq).is_some();
+                if known && events.send(NetEvent::Resp(resp)).is_err() {
+                    break; // master gone
+                }
+            }
+            Ok(Some((_, _))) => {
+                log::warn!("net reader: protocol violation (unexpected frame)");
+                break;
+            }
+            Ok(None) | Err(_) => break, // EOF or torn frame: session over
+        }
+    }
+    alive.store(false, Ordering::Release);
+}
+
+/// The worker is crash-stopped: report every owed delivery as failed,
+/// then keep converting any further submits (raced in before the
+/// master marked it dead) into single failures until the master drops
+/// the channel.
+fn fail_forever(ctx: &SupervisorCtx) {
+    let lost = {
+        let mut m = ctx.unacked.lock().expect("unacked lock");
+        let k = m.len();
+        m.clear();
+        k
+    };
+    // count requests already queued but never written, too
+    let mut lost = lost;
+    while let Ok(_req) = ctx.cmd_rx.try_recv() {
+        lost += 1;
+    }
+    let _ = ctx.events.send(NetEvent::Failed { worker: ctx.worker, count: lost });
+    loop {
+        match ctx.cmd_rx.recv() {
+            Ok(_req) => {
+                if ctx
+                    .events
+                    .send(NetEvent::Failed { worker: ctx.worker, count: 1 })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}

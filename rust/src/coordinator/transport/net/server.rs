@@ -1,0 +1,157 @@
+//! Worker-side TCP server: a standalone process hosting the same
+//! [`WorkerState`] compute core the in-process transports drive.
+//!
+//! `r3bft worker --listen ADDR` binds a listener and calls
+//! [`serve`]. One master session is served at a time: the master's
+//! [`Hello`](super::frame::Hello) carries everything needed to build
+//! the worker bit-identically to its in-process twin — ids, seed,
+//! scripted attack, compressor spec, model — so a loopback net run
+//! reproduces a threaded/sim run exactly.
+//!
+//! Reconnect semantics: a dropped connection sends [`serve`] back to
+//! `accept`. If the next session's hello matches the previous one,
+//! the existing [`WorkerState`] is **reused**, preserving the
+//! Byzantine RNG stream and the per-iteration tamper cache across
+//! the reconnect (the master resends unanswered requests; honest
+//! recomputation is deterministic). A hello for a different
+//! configuration rebuilds the state from scratch. A
+//! [`Frame::Shutdown`] ends the process's serve loop.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use super::super::super::byzantine::ByzantineBehavior;
+use super::super::super::compress;
+use super::super::super::worker::WorkerState;
+use super::frame::{read_frame, write_frame, Frame, Hello, NetGrad, NetResponse, NetSymbol};
+use crate::grad::{GradientComputer, NativeEngine};
+use crate::Result;
+
+enum SessionEnd {
+    /// Master went away (EOF or torn frame): await a reconnect.
+    Eof,
+    /// Master said shutdown: stop serving.
+    Shutdown,
+}
+
+/// Worker state kept across master reconnects, keyed by the hello
+/// that built it.
+struct Persistent {
+    hello: Hello,
+    state: WorkerState,
+}
+
+/// Accept loop: serve master sessions until a shutdown frame arrives.
+/// Blocks the calling thread; run-from-test harnesses call this on a
+/// listener bound to `127.0.0.1:0` in a spawned thread.
+pub fn serve(listener: TcpListener) -> Result<()> {
+    let mut persistent: Option<Persistent> = None;
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                log::warn!("worker accept failed: {e}");
+                continue;
+            }
+        };
+        match serve_session(stream, &mut persistent) {
+            Ok(SessionEnd::Shutdown) => return Ok(()),
+            Ok(SessionEnd::Eof) => continue, // master may reconnect
+            Err(e) => {
+                log::warn!("worker session error: {e:#}");
+                continue;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Build the compute state a hello describes — the exact construction
+/// path `ThreadedTransport::spawn_full` uses in-process.
+fn build_state(hello: &Hello) -> Result<WorkerState> {
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(hello.model.clone()));
+    let byzantine = hello
+        .byzantine
+        .as_ref()
+        .map(|a| ByzantineBehavior::new(a.clone(), hello.seed, hello.global_id as usize));
+    let compressor = match &hello.compressor {
+        Some(spec) => Some(compress::parse(spec)?),
+        None => None,
+    };
+    Ok(WorkerState::new(hello.local_id as usize, engine, byzantine, compressor))
+}
+
+fn serve_session(stream: TcpStream, persistent: &mut Option<Persistent>) -> Result<SessionEnd> {
+    let _ = stream.set_nodelay(true);
+    let mut w = stream.try_clone()?;
+    let mut r = BufReader::new(stream);
+    // session preamble: Hello (or an immediate Shutdown)
+    let hello = match read_frame(&mut r)? {
+        None => return Ok(SessionEnd::Eof),
+        Some((Frame::Hello(h), _)) => h,
+        Some((Frame::Shutdown, _)) => return Ok(SessionEnd::Shutdown),
+        Some(_) => anyhow::bail!("session did not start with a hello"),
+    };
+    let same = persistent.as_ref().map(|p| p.hello == hello).unwrap_or(false);
+    if !same {
+        *persistent = Some(Persistent { state: build_state(&hello)?, hello: hello.clone() });
+    }
+    write_frame(&mut w, &Frame::HelloAck { global_id: hello.global_id })?;
+    let p = persistent.as_mut().expect("state built above");
+    loop {
+        match read_frame(&mut r)? {
+            None => return Ok(SessionEnd::Eof),
+            Some((Frame::Shutdown, _)) => return Ok(SessionEnd::Shutdown),
+            Some((Frame::Request(req), _)) => {
+                if hello.latency_us > 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(hello.latency_us));
+                }
+                let tasks: Vec<(usize, crate::data::Batch)> =
+                    req.tasks.into_iter().map(|(c, b)| (c as usize, b)).collect();
+                // a panic must become an error response, not a dead
+                // process: the master counts one delivery per request
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    p.state.handle(req.iter, &req.theta, tasks)
+                }));
+                let error = match &result {
+                    Ok(Ok(_)) => None,
+                    Ok(Err(e)) => Some(format!("{e:#}")),
+                    Err(panic) => Some(
+                        panic
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "worker panicked".into()),
+                    ),
+                };
+                let symbols = match result {
+                    Ok(Ok(symbols)) => symbols
+                        .into_iter()
+                        .map(|s| NetSymbol {
+                            chunk: s.chunk as u64,
+                            loss: s.loss,
+                            tampered: s.tampered,
+                            grad: match s.wire {
+                                Some(wire) => NetGrad::Wire(wire),
+                                None => NetGrad::Dense(s.grad),
+                            },
+                        })
+                        .collect(),
+                    _ => vec![],
+                };
+                let resp = NetResponse {
+                    seq: req.seq,
+                    worker: hello.local_id,
+                    iter: req.iter,
+                    phase: req.phase,
+                    wave: req.wave,
+                    error,
+                    symbols,
+                };
+                write_frame(&mut w, &Frame::Response(resp))?;
+            }
+            Some(_) => anyhow::bail!("unexpected frame mid-session"),
+        }
+    }
+}

@@ -12,6 +12,7 @@
 //!                   [--p 1.0] [--steps 200] [--seed 42] [--csv out.csv]
 //!                   [--trace out.json] [--events out.jsonl]
 //!                   [--metrics-out metrics.prom] [--flight flight.json]
+//! r3bft worker      --listen HOST:PORT
 //! r3bft experiment  <e1..e13|all> [--full]
 //! r3bft inspect     [--artifacts artifacts]
 //! r3bft help
@@ -36,6 +37,7 @@ fn main() {
     let args = Args::from_env();
     let code = match args.subcommand.as_deref() {
         Some("train") => run_train(&args),
+        Some("worker") => run_worker(&args),
         Some("experiment") => run_experiment(&args),
         Some("inspect") => run_inspect(&args),
         Some("help") | None => {
@@ -60,6 +62,10 @@ fn print_help() {
 
 USAGE:
   r3bft train [opts]          run a training experiment
+  r3bft worker --listen ADDR  host one worker over TCP (the master connects
+                              with --transport net --peers ...; ADDR is
+                              HOST:PORT, port 0 picks a free one — the bound
+                              address is printed as 'listening on HOST:PORT')
   r3bft experiment <id>       reproduce a paper experiment (e1..e13, all); --full for long runs
   r3bft inspect               list + compile the AOT artifacts
   r3bft help
@@ -79,9 +85,12 @@ TRAIN OPTIONS (defaults in parens):
   --shards K         partition workers into K shards, each with its own
                      protocol core behind one parameter server (1);
                      per-shard budgets must satisfy 2*f_s < n_s
-  --transport T      threaded | sim (threaded); sim runs workers in
+  --transport T      threaded | sim | net (threaded); sim runs workers in
                      deterministic virtual time (no OS threads, n can
-                     be in the thousands)
+                     be in the thousands); net connects to `r3bft worker`
+                     processes over TCP (see docs/NETWORK.md)
+  --peers LIST       net transport only: comma-separated worker addresses
+                     in worker-id order (host:port, one per worker)
   --gather G         all | quorum:K | quorum:0.F | deadline:US (all);
                      when the proactive gather may stop waiting —
                      quorum:K proceeds after K responses (quorum:0.8 =
@@ -162,6 +171,13 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
             cfg.cluster.gather =
                 GatherPolicy::parse(&doc.str_or("cluster.gather", "all"), cfg.cluster.n)?;
         }
+    }
+    if let Some(peers) = args.get("peers") {
+        cfg.cluster.peers = peers
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
     }
     cfg.cluster.shards = args.usize("shards", cfg.cluster.shards);
     cfg.cluster.pipeline = args.usize("pipeline", cfg.cluster.pipeline);
@@ -263,6 +279,7 @@ fn run_train(args: &Args) -> Result<()> {
         w_star,
         compressor,
         recorder: recorder.clone(),
+        net_model: Some(spec.clone()),
         ..Default::default()
     };
 
@@ -326,6 +343,20 @@ fn run_train(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// `r3bft worker --listen ADDR`: bind, announce the bound address on
+/// stdout (port 0 picks a free port — harnesses parse this line), and
+/// serve master sessions until a shutdown frame arrives.
+fn run_worker(args: &Args) -> Result<()> {
+    let addr = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("worker needs --listen HOST:PORT"))?;
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    let bound = listener.local_addr()?;
+    println!("listening on {bound}");
+    r3bft::coordinator::transport::net::server::serve(listener)
 }
 
 fn run_experiment(args: &Args) -> Result<()> {

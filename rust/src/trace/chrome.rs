@@ -44,6 +44,7 @@ fn instant_name(e: &Event) -> Option<&'static str> {
         Event::OracleFaultyUpdate { .. } => Some("oracle_faulty_update"),
         Event::ShardDead { .. } => Some("shard_dead"),
         Event::RosterEliminated { .. } => Some("roster_eliminated"),
+        Event::NetReconnect { .. } => Some("net_reconnect"),
         _ => None,
     }
 }

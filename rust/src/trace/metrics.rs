@@ -9,7 +9,7 @@
 use crate::coordinator::Event;
 
 /// Every counter, in exposition order: `(name, help)`.
-pub const COUNTERS: [(&str, &str); 13] = [
+pub const COUNTERS: [(&str, &str); 14] = [
     ("r3bft_rounds_total", "Protocol rounds finished (per shard core)"),
     ("r3bft_waves_total", "Transport waves submitted (proactive, detection, reactive)"),
     ("r3bft_reissues_total", "Pipelined speculative waves retired and reissued"),
@@ -23,6 +23,7 @@ pub const COUNTERS: [(&str, &str); 13] = [
     ("r3bft_stragglers_total", "Workers abandoned by a quorum/deadline gather"),
     ("r3bft_oracle_faulty_updates_total", "Tampered gradients that entered an update (sim oracle)"),
     ("r3bft_shard_deaths_total", "Shards that lost their last worker"),
+    ("r3bft_net_reconnects_total", "Worker TCP connections re-established (net transport)"),
 ];
 
 const ROUNDS: usize = 0;
@@ -38,6 +39,7 @@ const CRASHES: usize = 9;
 const STRAGGLERS: usize = 10;
 const ORACLE_FAULTY: usize = 11;
 const SHARD_DEATHS: usize = 12;
+const NET_RECONNECTS: usize = 13;
 
 /// Round-time histogram bucket bounds, ns (`+Inf` is implicit).
 pub const ROUND_NS_BUCKETS: [u64; 8] = [
@@ -81,6 +83,7 @@ impl Registry {
             Event::StragglerAbandoned { .. } => self.counts[STRAGGLERS] += 1,
             Event::OracleFaultyUpdate { .. } => self.counts[ORACLE_FAULTY] += 1,
             Event::ShardDead { .. } => self.counts[SHARD_DEATHS] += 1,
+            Event::NetReconnect { .. } => self.counts[NET_RECONNECTS] += 1,
             _ => {}
         }
     }

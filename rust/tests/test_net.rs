@@ -1,0 +1,303 @@
+//! Net transport integration tests: a loopback TCP run must be
+//! *bit-identical* to the threaded and sim runs for the same seed and
+//! config (flat and sharded), and a SIGKILLed worker process must
+//! surface as an in-band crash-stop — chunks reassigned, no faulty
+//! update, never a hang.
+
+use std::io::BufRead;
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use r3bft::config::{
+    AttackConfig, AttackKind, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig,
+};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::coordinator::transport::net::server;
+use r3bft::coordinator::TrainOutcome;
+use r3bft::data::LinRegDataset;
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+use r3bft::linalg;
+
+/// Host `n` workers on in-process threads (the compute core is
+/// identical to the standalone `r3bft worker` binary's); returns their
+/// addresses in worker-id order.
+fn spawn_worker_threads(n: usize) -> (Vec<String>, Vec<JoinHandle<()>>) {
+    let mut peers = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        peers.push(listener.local_addr().expect("local addr").to_string());
+        handles.push(std::thread::spawn(move || {
+            server::serve(listener).expect("worker serve");
+        }));
+    }
+    (peers, handles)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    n: usize,
+    f: usize,
+    shards: usize,
+    byz: Vec<usize>,
+    policy: PolicyKind,
+    attack: AttackConfig,
+    steps: usize,
+    seed: u64,
+    transport: &str,
+    compress: Option<&str>,
+    peers: Vec<String>,
+) -> (TrainOutcome, Vec<f32>) {
+    let mut cluster = ClusterConfig::new(n, f, seed);
+    cluster.byzantine_ids = byz;
+    cluster.transport = transport.into();
+    cluster.shards = shards;
+    cluster.peers = peers;
+    let cfg = ExperimentConfig {
+        name: format!("net-test-{transport}-{shards}"),
+        cluster,
+        policy,
+        attack,
+        adversary: None,
+        train: TrainConfig { steps, lr: 0.5, ..Default::default() },
+    };
+    let d = 16usize;
+    let chunk = 8usize;
+    let ds = Arc::new(LinRegDataset::generate(2048, d, 0.0, seed));
+    let w_star = ds.w_star.clone();
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(seed);
+    let compressor = compress.map(|s| r3bft::coordinator::compress::parse(s).expect("compressor"));
+    let opts = MasterOptions {
+        w_star: Some(w_star.clone()),
+        compressor,
+        net_model: Some(spec.clone()),
+        ..Default::default()
+    };
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    (master.run().expect("train"), w_star)
+}
+
+/// Acceptance: net-at-loopback ≡ threaded ≡ sim under
+/// `GatherPolicy::All`, fixed seed — identical eliminations, bitwise
+/// identical theta, identical efficiency accounting. Dense and
+/// sign-compressed wires.
+#[test]
+fn net_threaded_and_sim_are_bit_identical_flat() {
+    let scenarios: Vec<(PolicyKind, AttackConfig, Vec<usize>, Option<&str>)> = vec![
+        (
+            PolicyKind::Bernoulli { q: 0.3 },
+            AttackConfig { kind: AttackKind::SignFlip, p: 0.6, magnitude: 2.0 },
+            vec![2, 5],
+            None,
+        ),
+        (
+            PolicyKind::Deterministic,
+            AttackConfig { kind: AttackKind::Noise, p: 1.0, magnitude: 3.0 },
+            vec![1, 4],
+            Some("sign"),
+        ),
+    ];
+    for (policy, attack, byz, compress) in scenarios {
+        let label = format!("{policy:?}/{:?}/{compress:?}", attack.kind);
+        let n = 9;
+        let (peers, workers) = spawn_worker_threads(n);
+        let (net, _) = run(
+            n,
+            2,
+            1,
+            byz.clone(),
+            policy.clone(),
+            attack.clone(),
+            80,
+            7,
+            "net",
+            compress,
+            peers,
+        );
+        let (threaded, _) = run(
+            n,
+            2,
+            1,
+            byz.clone(),
+            policy.clone(),
+            attack.clone(),
+            80,
+            7,
+            "threaded",
+            compress,
+            vec![],
+        );
+        let (sim, _) =
+            run(n, 2, 1, byz, policy, attack, 80, 7, "sim", compress, vec![]);
+        assert_eq!(net.eliminated, threaded.eliminated, "{label}: eliminated diverged");
+        assert_eq!(net.theta, threaded.theta, "{label}: theta diverged (not bit-identical)");
+        assert_eq!(net.theta, sim.theta, "{label}: net vs sim theta diverged");
+        assert_eq!(
+            net.metrics.average_efficiency(),
+            threaded.metrics.average_efficiency(),
+            "{label}: efficiency accounting diverged"
+        );
+        assert_eq!(net.events.detections(), threaded.events.detections(), "{label}");
+        // the master said Shutdown on drop; every worker thread exits
+        for h in workers {
+            h.join().expect("worker thread");
+        }
+        // honest wire accounting: the TCP figure includes the theta
+        // broadcast and frame headers, so it strictly dominates the
+        // payload-only figure the in-process transports report
+        let net_bytes: u64 = net.metrics.iterations.iter().map(|r| r.bytes_round).sum();
+        let thr_bytes: u64 = threaded.metrics.iterations.iter().map(|r| r.bytes_round).sum();
+        assert!(net_bytes > thr_bytes, "{label}: net bytes {net_bytes} <= payload {thr_bytes}");
+        // loopback sessions never drop
+        assert!(net.metrics.iterations.iter().all(|r| r.net_reconnects == 0), "{label}");
+    }
+}
+
+/// Acceptance: the sharded net fleet (each shard's inner transport a
+/// slice of the peer list) matches sharded threaded bitwise.
+#[test]
+fn net_matches_threaded_bitwise_sharded() {
+    let n = 12;
+    let byz = vec![1usize, 4, 7, 10]; // one liar per shard
+    let attack = AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 3.0 };
+    let (peers, workers) = spawn_worker_threads(n);
+    let (net, w_star) = run(
+        n,
+        4,
+        4,
+        byz.clone(),
+        PolicyKind::Deterministic,
+        attack.clone(),
+        60,
+        11,
+        "net",
+        None,
+        peers,
+    );
+    let (threaded, _) = run(
+        n,
+        4,
+        4,
+        byz.clone(),
+        PolicyKind::Deterministic,
+        attack,
+        60,
+        11,
+        "threaded",
+        None,
+        vec![],
+    );
+    assert_eq!(net.eliminated, threaded.eliminated, "sharded eliminated diverged");
+    assert_eq!(net.theta, threaded.theta, "sharded theta diverged (not bit-identical)");
+    let mut elim = net.eliminated.clone();
+    elim.sort_unstable();
+    assert_eq!(elim, byz, "every liar identified");
+    let dist = linalg::dist2(&net.theta, &w_star);
+    assert!(dist < 1e-2, "sharded net run failed to converge: dist={dist}");
+    for h in workers {
+        h.join().expect("worker thread");
+    }
+}
+
+/// Launch one real `r3bft worker` process and parse the bound address
+/// it announces.
+fn spawn_worker_process() -> (String, Child) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_r3bft"))
+        .args(["worker", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn r3bft worker");
+    let stdout = child.stdout.take().expect("worker stdout");
+    let mut line = String::new();
+    std::io::BufReader::new(stdout).read_line(&mut line).expect("read listen line");
+    let addr = line
+        .trim()
+        .strip_prefix("listening on ")
+        .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+        .to_string();
+    (addr, child)
+}
+
+/// Acceptance: SIGKILLing a worker *process* mid-run surfaces as an
+/// in-band crash-stop — the master reassigns its chunks and finishes
+/// every iteration; the kill is never an identification and never a
+/// faulty update.
+#[test]
+fn killed_worker_process_becomes_in_band_crash_stop() {
+    let n = 5;
+    let victim = 3usize;
+    let mut peers = Vec::with_capacity(n);
+    let mut children = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (addr, child) = spawn_worker_process();
+        peers.push(addr);
+        children.push(child);
+    }
+    // hard-kill the victim once the run is warmed up; worker-side
+    // latency keeps the run long enough that the kill lands mid-run
+    let killer = {
+        let mut victim_child = children.remove(victim);
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(250));
+            let _ = victim_child.kill();
+            let _ = victim_child.wait();
+        })
+    };
+    let mut cluster = ClusterConfig::new(n, 1, 13);
+    cluster.transport = "net".into();
+    cluster.peers = peers;
+    cluster.latency_us = 1500;
+    let steps = 300usize;
+    let cfg = ExperimentConfig {
+        name: "net-kill".into(),
+        cluster,
+        policy: PolicyKind::None,
+        attack: AttackConfig::default(),
+        adversary: None,
+        train: TrainConfig { steps, lr: 0.5, ..Default::default() },
+    };
+    let d = 16usize;
+    let chunk = 8usize;
+    let ds = Arc::new(LinRegDataset::generate(2048, d, 0.0, 13));
+    let w_star = ds.w_star.clone();
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(13);
+    let opts = MasterOptions {
+        w_star: Some(w_star.clone()),
+        net_model: Some(spec.clone()),
+        ..Default::default()
+    };
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    let out = master.run().expect("train must survive the kill");
+    killer.join().expect("killer thread");
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+
+    // the kill is a crash-stop, not an identification or a hang
+    assert_eq!(out.crashed, vec![victim], "victim must crash-stop in-band");
+    assert!(out.eliminated.is_empty(), "a kill is not an identification");
+    assert_eq!(out.events.crashes(), 1);
+    assert_eq!(out.metrics.iterations.len(), steps, "run must finish every iteration");
+    // orphaned chunks were reassigned: the crash round and every later
+    // round still used one gradient per chunk, and the run converged
+    assert!(out.theta.iter().all(|v| v.is_finite()));
+    assert_eq!(out.metrics.faulty_update_rate(), 0.0, "no faulty update from a crash");
+    let crash_iter = out
+        .metrics
+        .iterations
+        .iter()
+        .position(|r| r.crashed > 0)
+        .expect("some iteration records the crash");
+    let rec = &out.metrics.iterations[crash_iter];
+    assert_eq!(rec.gradients_used, rec.gradients_computed, "accounting stays exact");
+    let dist = linalg::dist2(&out.theta, &w_star);
+    assert!(dist < 1e-2, "crash scenario failed to converge: dist={dist}");
+}
