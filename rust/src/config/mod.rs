@@ -362,6 +362,16 @@ pub struct ClusterConfig {
     /// per worker in id order (`cluster.peers` / `--peers a:p,b:p`).
     /// Empty for in-process transports.
     pub peers: Vec<String>,
+    /// Net-transport fault-injection spec (`cluster.chaos` /
+    /// `--chaos`), in the `coordinator::transport::ChaosSpec` grammar
+    /// — e.g. `drop:0.05,delay:20ms,partition:200ms@2s`. `None` (or
+    /// `off`) = clean wire. Validation parses the grammar early so a
+    /// typo dies at config load, not mid-run.
+    pub chaos: Option<String>,
+    /// Shared frame-authentication passphrase (`cluster.auth_key` /
+    /// `--auth-key`). Both the master and every `r3bft worker` must be
+    /// given the same value; `None` = legacy unauthenticated frames.
+    pub auth_key: Option<String>,
     pub seed: u64,
 }
 
@@ -379,6 +389,8 @@ impl ClusterConfig {
             shards: 1,
             pipeline: 1,
             peers: Vec::new(),
+            chaos: None,
+            auth_key: None,
             seed,
         }
     }
@@ -451,6 +463,22 @@ impl ClusterConfig {
                 if !self.peers.is_empty() {
                     bail!("cluster.peers only applies to the net transport");
                 }
+                if self.chaos.is_some() {
+                    bail!("cluster.chaos only applies to the net transport");
+                }
+                if self.auth_key.is_some() {
+                    bail!("cluster.auth_key only applies to the net transport");
+                }
+            }
+        }
+        if let Some(spec) = &self.chaos {
+            // fail a bad grammar at config load, not mid-run
+            crate::coordinator::transport::ChaosSpec::parse(spec)
+                .with_context(|| format!("cluster.chaos '{spec}'"))?;
+        }
+        if let Some(key) = &self.auth_key {
+            if key.trim().is_empty() {
+                bail!("cluster.auth_key must not be blank");
             }
         }
         Ok(())
@@ -541,6 +569,14 @@ impl ExperimentConfig {
                         .ok_or_else(|| anyhow::anyhow!("cluster.peers entries must be strings"))
                 })
                 .collect::<Result<Vec<String>>>()?;
+        }
+        let chaos = doc.str_or("cluster.chaos", "");
+        if !chaos.trim().is_empty() {
+            cluster.chaos = Some(chaos);
+        }
+        let auth_key = doc.str_or("cluster.auth_key", "");
+        if !auth_key.is_empty() {
+            cluster.auth_key = Some(auth_key);
         }
         cluster.validate()?;
 
@@ -654,6 +690,42 @@ mod tests {
         let mut c = ClusterConfig::new(3, 1, 0);
         c.peers = vec!["a:1".into(), "b:2".into(), "c:3".into()];
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn chaos_and_auth_are_net_only_and_grammar_checked() {
+        let mut c = ClusterConfig::new(3, 1, 0);
+        c.transport = TransportKind::Net;
+        c.peers = vec!["a:1".into(), "b:2".into(), "c:3".into()];
+        c.chaos = Some("drop:0.05,delay:20ms".into());
+        c.auth_key = Some("correct horse battery staple".into());
+        assert!(c.validate().is_ok());
+        c.chaos = Some("warp:0.5".into());
+        assert!(c.validate().is_err(), "bad chaos grammar must die at config load");
+        c.chaos = Some("off".into());
+        assert!(c.validate().is_ok(), "'off' is the documented no-op spec");
+        c.auth_key = Some("  ".into());
+        assert!(c.validate().is_err(), "blank auth key");
+        // either knob without the net transport is a misconfiguration
+        let mut c = ClusterConfig::new(3, 1, 0);
+        c.chaos = Some("drop:0.1".into());
+        assert!(c.validate().is_err());
+        let mut c = ClusterConfig::new(3, 1, 0);
+        c.auth_key = Some("k".into());
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn chaos_and_auth_from_doc() {
+        let doc = TomlDoc::parse(
+            "[cluster]\nn = 2\nf = 0\ntransport = \"net\"\n\
+             peers = [\"127.0.0.1:9001\", \"127.0.0.1:9002\"]\n\
+             chaos = \"drop:0.05,delay:20ms\"\nauth_key = \"swordfish\"\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster.chaos.as_deref(), Some("drop:0.05,delay:20ms"));
+        assert_eq!(cfg.cluster.auth_key.as_deref(), Some("swordfish"));
     }
 
     #[test]

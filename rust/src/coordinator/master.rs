@@ -30,8 +30,8 @@ use super::policy::FaultCheckPolicy;
 use super::protocol::{ProtocolConfig, ProtocolCore, RoundState};
 use super::shard::{ParameterServer, ShardPlan, ShardedTransport};
 use super::transport::{
-    AdversaryWiring, LatencyModel, NetConfig, NetTransport, SimTransport, ThreadedTransport,
-    Transport,
+    AdversaryWiring, AuthKey, ChaosSpec, LatencyModel, NetConfig, NetTransport, SimTransport,
+    ThreadedTransport, Transport,
 };
 use super::{WorkerId, MASTER_SENTINEL};
 use crate::adversary::{AdversaryController, CoreTap, ShardInfo, Topology};
@@ -227,6 +227,11 @@ impl Master {
                 net_cfg.attack = Some(attack.clone());
                 net_cfg.byzantine_ids = byz_ids.clone();
                 net_cfg.compressor = opts.compressor.clone();
+                net_cfg.chaos = match &cfg.cluster.chaos {
+                    Some(s) => Some(ChaosSpec::parse(s)?),
+                    None => None,
+                };
+                net_cfg.auth = cfg.cluster.auth_key.as_deref().map(AuthKey::from_passphrase);
                 Box::new(NetTransport::connect(net_cfg)?)
             }
         };
@@ -301,6 +306,11 @@ impl Master {
             recorder: opts.recorder.clone(),
             peers: cfg.cluster.peers.clone(),
             net_model: opts.net_model.clone(),
+            chaos: match &cfg.cluster.chaos {
+                Some(s) => Some(ChaosSpec::parse(s)?),
+                None => None,
+            },
+            auth: cfg.cluster.auth_key.as_deref().map(AuthKey::from_passphrase),
         };
         let transport = ShardedTransport::build(&plan, &build, &engine)?;
         let ps = ParameterServer::new(

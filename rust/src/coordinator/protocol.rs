@@ -98,7 +98,7 @@ use super::compress::Compressor;
 use super::events::{Event, EventLog};
 use super::identify::majority_vote;
 use super::policy::{AuditDecision, FaultCheckPolicy};
-use super::transport::{Delivery, TaskBundle, Transport};
+use super::transport::{Delivery, NetStats, TaskBundle, Transport};
 use super::worker::{Response, Symbol};
 use super::{ChunkId, WorkerId, MASTER_SENTINEL};
 use crate::config::GatherPolicy;
@@ -1036,15 +1036,11 @@ impl ProtocolCore {
                 Event::NetReconnect { iter: t, worker: w },
             );
         }
-        let bytes_round = match self.transport.net_stats() {
-            Some(s) => {
-                let total = s.bytes_tx + s.bytes_rx;
-                let delta = total.saturating_sub(self.net_bytes_baseline);
-                self.net_bytes_baseline = total;
-                delta
-            }
-            None => self.round.bytes,
-        };
+        let bytes_round = net_bytes_round(
+            self.transport.net_stats(),
+            &mut self.net_bytes_baseline,
+            self.round.bytes,
+        );
         if let Some(rec) = &self.recorder {
             rec.round_finished(t, start_ns, now, round_ns, bytes_round);
         }
@@ -1459,9 +1455,30 @@ impl ProtocolCore {
     }
 }
 
+/// One round's honest wire figure: the socket-counter delta since the
+/// previous round's baseline (which then advances to the new total),
+/// or the in-process payload estimate when the transport moves no real
+/// bytes. Retransmitted frames and reconnect handshakes *are* counted
+/// — they hit the wire — while the saturating delta guarantees a
+/// reconnect storm (or any counter hiccup) can never underflow into a
+/// wrapped, absurd `bytes_round`.
+fn net_bytes_round(stats: Option<NetStats>, baseline: &mut u64, payload_estimate: u64) -> u64 {
+    match stats {
+        Some(s) => {
+            let total = s.bytes_tx.saturating_add(s.bytes_rx);
+            let delta = total.saturating_sub(*baseline);
+            *baseline = total;
+            delta
+        }
+        None => payload_estimate,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::PolicyKind;
+    use std::collections::VecDeque;
 
     #[test]
     fn phase_wire_numbers_are_stable() {
@@ -1521,5 +1538,183 @@ mod tests {
         }]);
         assert_eq!(round.tampered_by_chunk[0], vec![4]);
         assert_eq!(round.chosen(0).worker, 4);
+    }
+
+    // ------------------------- duplicated deliveries at wait_wave level
+
+    /// Transport whose polls return a pre-scripted delivery sequence —
+    /// exactly what a chaos-duplicated wire hands the protocol core.
+    struct ScriptedTransport {
+        n: usize,
+        now: u64,
+        script: VecDeque<Vec<Delivery>>,
+    }
+
+    impl Transport for ScriptedTransport {
+        fn n(&self) -> usize {
+            self.n
+        }
+        fn now_ns(&self) -> u64 {
+            self.now
+        }
+        fn submit(
+            &mut self,
+            _iter: u64,
+            _phase: u32,
+            _wave: u64,
+            _theta: &Arc<Vec<f32>>,
+            _bundles: Vec<TaskBundle>,
+        ) -> Result<()> {
+            Ok(())
+        }
+        fn poll(&mut self, _deadline_ns: Option<u64>) -> Result<Vec<Delivery>> {
+            self.now += 1_000_000;
+            Ok(self.script.pop_front().unwrap_or_default())
+        }
+    }
+
+    fn scripted_core(script: Vec<Vec<Delivery>>, gather: GatherPolicy) -> ProtocolCore {
+        let transport = ScriptedTransport { n: 3, now: 0, script: script.into() };
+        let policy = FaultCheckPolicy::new(PolicyKind::None, 3, 1);
+        ProtocolCore::new(
+            Box::new(transport),
+            policy,
+            ProtocolConfig {
+                f: 1,
+                seed: 1,
+                chunk_size: 1,
+                self_check: false,
+                tol: 0.0,
+                no_eliminate: false,
+                compressor: None,
+                gather,
+                pipeline: 1,
+            },
+        )
+    }
+
+    fn resp(worker: WorkerId, wave: u64) -> Response {
+        Response { worker, iter: 0, phase: 0, wave, symbols: Vec::new(), error: None }
+    }
+
+    fn delivered(at_ns: u64, worker: WorkerId, wave: u64) -> Delivery {
+        Delivery::Response { at_ns, response: resp(worker, wave) }
+    }
+
+    /// A duplicated `Response` (chaos `dup`, or a resend answered
+    /// twice) arriving after first-response-wins must not double-feed
+    /// the latency EWMA: exactly one sample per worker per wave.
+    #[test]
+    fn duplicated_response_is_never_ingested_twice() {
+        let wave = 7;
+        let script = vec![
+            vec![delivered(1_000, 0, wave), delivered(2_000, 1, wave)],
+            // worker 1's response delivered again, then worker 2
+            vec![delivered(3_000, 1, wave), delivered(4_000, 2, wave)],
+        ];
+        let mut core = scripted_core(script, GatherPolicy::All);
+        let mut round = RoundState::default();
+        let (mut crashed, mut stragglers) = (Vec::new(), Vec::new());
+        let mut events = EventLog::default();
+        let out = core
+            .wait_wave(
+                0,
+                wave,
+                GatherPolicy::All,
+                1,
+                vec![0, 1, 2],
+                0,
+                true,
+                &mut round,
+                &mut crashed,
+                &mut stragglers,
+                &mut events,
+            )
+            .unwrap();
+        let workers: Vec<WorkerId> = out.iter().map(|r| r.worker).collect();
+        assert_eq!(workers, vec![0, 1, 2], "one response per worker, duplicate discarded");
+        for w in 0..3 {
+            assert_eq!(
+                core.policy.latency.profile(w).samples,
+                1,
+                "worker {w}: the duplicate must not double-feed the EWMA"
+            );
+        }
+    }
+
+    /// A duplicate must not count toward a quorum either: two copies of
+    /// one worker's response are one responder, so the wave keeps
+    /// waiting for a second distinct worker.
+    #[test]
+    fn duplicated_response_does_not_count_toward_the_quorum() {
+        let wave = 9;
+        let gather = GatherPolicy::Quorum { k: 2 };
+        let script = vec![
+            vec![delivered(1_000, 0, wave), delivered(1_500, 0, wave)],
+            vec![delivered(2_000, 1, wave)],
+        ];
+        let mut core = scripted_core(script, gather);
+        let mut round = RoundState::default();
+        let (mut crashed, mut stragglers) = (Vec::new(), Vec::new());
+        let mut events = EventLog::default();
+        let out = core
+            .wait_wave(
+                0,
+                wave,
+                gather,
+                1,
+                vec![0, 1, 2],
+                0,
+                false,
+                &mut round,
+                &mut crashed,
+                &mut stragglers,
+                &mut events,
+            )
+            .unwrap();
+        // had the duplicate counted, the wave would have closed after
+        // the first poll with worker 0's response alone
+        let workers: Vec<WorkerId> = out.iter().map(|r| r.worker).collect();
+        assert_eq!(workers, vec![0, 1], "quorum of 2 means 2 distinct responders");
+        assert_eq!(stragglers, vec![2], "the quorum exit abandons only the true laggard");
+    }
+
+    // --------------------------------- net byte accounting per round
+
+    #[test]
+    fn net_bytes_round_counts_retransmitted_bytes() {
+        let mut baseline = 0u64;
+        let r1 = net_bytes_round(
+            Some(NetStats { bytes_tx: 100, bytes_rx: 50, reconnects: 0 }),
+            &mut baseline,
+            7,
+        );
+        assert_eq!(r1, 150);
+        // a reconnect round: handshakes + resent frames inflate the
+        // socket counters, and every one of those bytes is honest
+        let r2 = net_bytes_round(
+            Some(NetStats { bytes_tx: 300, bytes_rx: 80, reconnects: 1 }),
+            &mut baseline,
+            7,
+        );
+        assert_eq!(r2, 230, "retransmissions are honest wire bytes");
+        assert_eq!(r1 + r2, 380, "per-round deltas sum to the counter total");
+    }
+
+    #[test]
+    fn net_bytes_round_never_underflows_the_baseline() {
+        // a baseline ahead of the counters (reconnect storm racing the
+        // round boundary) must clamp to 0, not wrap to ~u64::MAX
+        let mut baseline = 10_000u64;
+        let r = net_bytes_round(
+            Some(NetStats { bytes_tx: 100, bytes_rx: 0, reconnects: 3 }),
+            &mut baseline,
+            7,
+        );
+        assert_eq!(r, 0, "a counter behind the baseline yields 0, never a wrap");
+        assert_eq!(baseline, 100, "the baseline resynchronizes to the counter");
+        // in-process transports keep the payload-based estimate
+        assert_eq!(net_bytes_round(None, &mut baseline, 7), 7);
+        assert_eq!(baseline, 100, "the estimate path leaves the baseline alone");
     }
 }

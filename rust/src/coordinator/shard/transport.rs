@@ -27,8 +27,8 @@ use super::super::events::EventLog;
 use super::super::policy::FaultCheckPolicy;
 use super::super::protocol::{ProtocolConfig, ProtocolCore};
 use super::super::transport::{
-    AdversaryWiring, LatencyModel, NetConfig, NetTransport, SimConfig, SimTransport,
-    ThreadedTransport, Transport,
+    AdversaryWiring, AuthKey, ChaosSpec, LatencyModel, NetConfig, NetTransport, SimConfig,
+    SimTransport, ThreadedTransport, Transport,
 };
 use super::super::{ChunkId, WorkerId};
 use super::{ShardCore, ShardPlan, ShardRound, ShardSpec};
@@ -80,6 +80,12 @@ pub struct ShardBuildConfig {
     /// Model spec forwarded to remote workers in the net hello
     /// (required when `transport` is [`TransportKind::Net`]).
     pub net_model: Option<crate::grad::ModelSpec>,
+    /// Net-transport fault injection, shared by every shard's links
+    /// (chaos streams key on global worker ids, so the storm is
+    /// identical whichever shard layout contains a link).
+    pub chaos: Option<ChaosSpec>,
+    /// Net-transport frame authentication key (None = legacy wire).
+    pub auth: Option<AuthKey>,
 }
 
 /// Scale a cluster-level gather policy to one shard: `Quorum { k }`
@@ -190,6 +196,8 @@ fn build_inner(
             net_cfg.attack = Some(cfg.attack.clone());
             net_cfg.byzantine_ids = spec.byzantine.clone();
             net_cfg.compressor = cfg.compressor.clone();
+            net_cfg.chaos = cfg.chaos;
+            net_cfg.auth = cfg.auth;
             Box::new(NetTransport::connect(net_cfg)?)
         }
     })

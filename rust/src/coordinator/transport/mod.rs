@@ -63,7 +63,9 @@ use crate::adversary::AdversaryController;
 use crate::data::Batch;
 use crate::Result;
 
-pub use net::{NetConfig, NetTransport};
+pub use net::chaos::ChaosSpec;
+pub use net::frame::AuthKey;
+pub use net::{NetConfig, NetTransport, ReconnectBudget, SleepFn};
 pub use sim::{LatencyModel, SimConfig, SimTransport, StragglerModel};
 pub use threaded::ThreadedTransport;
 

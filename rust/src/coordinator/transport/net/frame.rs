@@ -21,6 +21,14 @@
 //! Compressed symbol payloads are *not* decoded here; the receiver
 //! validates them with [`Compressor::try_unpack`]
 //! (`crate::coordinator::compress`).
+//!
+//! With a shared [`AuthKey`] in force (`--auth-key` on both sides)
+//! every frame additionally carries a [`MAC_LEN`]-byte SipHash-2-4
+//! tag at the end of the length-counted region, verified *before* any
+//! body field is decoded: a tampered, truncated, or forged frame is an
+//! in-band authentication error, never silently ingested protocol
+//! state. Without a key the wire format is bit-for-bit the legacy
+//! (PR 8) layout. See docs/NETWORK.md for the threat model.
 
 use std::io::{Read, Write};
 
@@ -39,6 +47,93 @@ const TAG_HELLO_ACK: u8 = 2;
 const TAG_REQUEST: u8 = 3;
 const TAG_RESPONSE: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+
+// ------------------------------------------------------------- auth
+
+/// Bytes appended to an authenticated frame body: the SipHash-2-4 tag
+/// over `tag + payload` under the shared session key. Inside the
+/// length-counted region, so framing is identical either way.
+pub const MAC_LEN: usize = 8;
+
+/// Shared-secret frame-authentication key.
+///
+/// Both sides derive the same key from the `--auth-key` /
+/// `R3BFT_AUTH_KEY` passphrase; the worker then refuses any session
+/// whose Hello does not carry a valid tag (today any peer that says
+/// Hello would be trusted as the master), and both directions reject
+/// tampered frames before decoding a single field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AuthKey {
+    k0: u64,
+    k1: u64,
+}
+
+impl AuthKey {
+    /// Derive a key from a shared passphrase. The two halves come from
+    /// SipHash-2-4 of the passphrase under distinct fixed
+    /// domain-separation keys, so `k0` and `k1` are independent even
+    /// for short passphrases.
+    pub fn from_passphrase(pass: &str) -> AuthKey {
+        let b = pass.as_bytes();
+        AuthKey {
+            k0: siphash24(0x7233_6266_745f_6b64_u64, 0x6672_616d_655f_6b30_u64, b),
+            k1: siphash24(0x7233_6266_745f_6b64_u64, 0x6672_616d_655f_6b31_u64, b),
+        }
+    }
+
+    /// The authentication tag for one frame body (`tag + payload`).
+    pub fn mac(&self, body: &[u8]) -> [u8; MAC_LEN] {
+        siphash24(self.k0, self.k1, body).to_le_bytes()
+    }
+}
+
+/// SipHash-2-4 (Aumasson–Bernstein), the keyed PRF behind
+/// [`AuthKey::mac`]. Hand-rolled: the vendored dependency set carries
+/// no crypto crate, and an 8-byte PRF tag is exactly what frame
+/// authentication against accidental/chaos corruption and
+/// unauthenticated peers needs (threat model in docs/NETWORK.md).
+fn siphash24(k0: u64, k1: u64, data: &[u8]) -> u64 {
+    #[inline]
+    fn round(v: &mut [u64; 4]) {
+        v[0] = v[0].wrapping_add(v[1]);
+        v[1] = v[1].rotate_left(13) ^ v[0];
+        v[0] = v[0].rotate_left(32);
+        v[2] = v[2].wrapping_add(v[3]);
+        v[3] = v[3].rotate_left(16) ^ v[2];
+        v[0] = v[0].wrapping_add(v[3]);
+        v[3] = v[3].rotate_left(21) ^ v[0];
+        v[2] = v[2].wrapping_add(v[1]);
+        v[1] = v[1].rotate_left(17) ^ v[2];
+        v[2] = v[2].rotate_left(32);
+    }
+    let mut v = [
+        k0 ^ 0x736f_6d65_7073_6575,
+        k1 ^ 0x646f_7261_6e64_6f6d,
+        k0 ^ 0x6c79_6765_6e65_7261,
+        k1 ^ 0x7465_6462_7974_6573,
+    ];
+    let mut words = data.chunks_exact(8);
+    for w in &mut words {
+        let m = u64::from_le_bytes(w.try_into().unwrap());
+        v[3] ^= m;
+        round(&mut v);
+        round(&mut v);
+        v[0] ^= m;
+    }
+    let mut last = (data.len() as u64 & 0xff) << 56;
+    for (i, &b) in words.remainder().iter().enumerate() {
+        last |= (b as u64) << (8 * i);
+    }
+    v[3] ^= last;
+    round(&mut v);
+    round(&mut v);
+    v[0] ^= last;
+    v[2] ^= 0xff;
+    for _ in 0..4 {
+        round(&mut v);
+    }
+    v[0] ^ v[1] ^ v[2] ^ v[3]
+}
 
 /// Master → worker session preamble: everything the worker process
 /// needs to build the exact [`WorkerState`](crate::coordinator::worker::WorkerState)
@@ -542,23 +637,47 @@ impl Frame {
     }
 }
 
-/// Write one frame; returns the total bytes put on the wire (length
-/// prefix included) for the honest `bytes_round` accounting.
-pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
-    let body = frame.encode_body();
+/// Encode one frame to its full wire bytes: length prefix + body, plus
+/// the MAC tag when a key is in force (the prefix counts tag byte,
+/// payload, and MAC). The chaos layer plans its injections over these
+/// bytes, so a "corrupted frame" in a test is exactly a corrupted wire.
+pub fn encode_frame(frame: &Frame, auth: Option<&AuthKey>) -> Result<Vec<u8>> {
+    let mut body = frame.encode_body();
+    if let Some(key) = auth {
+        let tag = key.mac(&body);
+        body.extend_from_slice(&tag);
+    }
     if body.len() as u64 > MAX_FRAME as u64 {
         anyhow::bail!("frame body {} bytes exceeds MAX_FRAME {MAX_FRAME}", body.len());
     }
-    w.write_all(&(body.len() as u32).to_le_bytes())?;
-    w.write_all(&body)?;
-    w.flush()?;
-    Ok(4 + body.len() as u64)
+    let mut wire = Vec::with_capacity(4 + body.len());
+    wire.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    wire.extend_from_slice(&body);
+    Ok(wire)
 }
 
-/// Read one frame. `Ok(None)` means the peer closed the stream cleanly
-/// *at a frame boundary*; EOF inside a length prefix or body is an
-/// error (a torn frame). Returns the frame plus its wire size.
-pub fn read_frame(r: &mut impl Read) -> Result<Option<(Frame, u64)>> {
+/// Write one frame under an optional auth key; returns the total bytes
+/// put on the wire (length prefix included) for the honest
+/// `bytes_round` accounting.
+pub fn write_frame_auth(w: &mut impl Write, frame: &Frame, auth: Option<&AuthKey>) -> Result<u64> {
+    let wire = encode_frame(frame, auth)?;
+    w.write_all(&wire)?;
+    w.flush()?;
+    Ok(wire.len() as u64)
+}
+
+/// Write one unauthenticated frame (the legacy PR 8 wire, bit-for-bit).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
+    write_frame_auth(w, frame, None)
+}
+
+/// Read one frame's raw body (tag + payload [+ MAC]). `Ok(None)` means
+/// the peer closed the stream cleanly *at a frame boundary*; EOF
+/// inside a length prefix or body is an error (a torn frame). Returns
+/// the body plus its wire size. Split out from [`read_frame_auth`] so
+/// the supervisor's reader can run inbound chaos over the raw bytes
+/// before verification/decode — exactly where a hostile network sits.
+pub fn read_raw_body(r: &mut impl Read) -> Result<Option<(Vec<u8>, u64)>> {
     let mut prefix = [0u8; 4];
     let mut got = 0;
     while got < 4 {
@@ -575,7 +694,44 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<(Frame, u64)>> {
     let mut body = vec![0u8; len as usize];
     r.read_exact(&mut body)
         .map_err(|e| anyhow::anyhow!("EOF inside {len}-byte frame body: {e}"))?;
-    Ok(Some((Frame::decode_body(&body)?, 4 + len as u64)))
+    Ok(Some((body, 4 + len as u64)))
+}
+
+/// Verify (when a key is in force) and decode one frame body. The MAC
+/// check runs before any field decode, so a forged or bit-flipped
+/// frame never reaches protocol state.
+pub fn decode_body_auth(body: &[u8], auth: Option<&AuthKey>) -> Result<Frame> {
+    match auth {
+        None => Frame::decode_body(body),
+        Some(key) => {
+            if body.len() < 1 + MAC_LEN {
+                anyhow::bail!("authenticated frame too short ({} bytes)", body.len());
+            }
+            let (head, tag) = body.split_at(body.len() - MAC_LEN);
+            let want = key.mac(head);
+            // fold the whole difference instead of short-circuiting on
+            // the first mismatched byte
+            let diff = tag.iter().zip(want.iter()).fold(0u8, |acc, (a, b)| acc | (a ^ b));
+            if diff != 0 {
+                anyhow::bail!("frame authentication failed (bad MAC)");
+            }
+            Frame::decode_body(head)
+        }
+    }
+}
+
+/// Read one frame under an optional auth key (see [`read_raw_body`]
+/// for the EOF contract). Returns the frame plus its wire size.
+pub fn read_frame_auth(r: &mut impl Read, auth: Option<&AuthKey>) -> Result<Option<(Frame, u64)>> {
+    match read_raw_body(r)? {
+        None => Ok(None),
+        Some((body, nb)) => Ok(Some((decode_body_auth(&body, auth)?, nb))),
+    }
+}
+
+/// Read one unauthenticated frame (the legacy PR 8 wire, bit-for-bit).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(Frame, u64)>> {
+    read_frame_auth(r, None)
 }
 
 #[cfg(test)]
@@ -812,5 +968,92 @@ mod tests {
             // any outcome but a panic is acceptable
             let _ = read_frame(&mut Cursor::new(&bytes));
         }
+    }
+
+    // ------------------------------------------------------- auth
+
+    fn key() -> AuthKey {
+        AuthKey::from_passphrase("correct horse battery staple")
+    }
+
+    #[test]
+    fn authed_frames_round_trip() {
+        for f in sample_frames() {
+            let wire = encode_frame(&f, Some(&key())).unwrap();
+            let plain = encode_frame(&f, None).unwrap();
+            assert_eq!(wire.len(), plain.len() + MAC_LEN, "MAC adds exactly MAC_LEN bytes");
+            let (back, nb) = read_frame_auth(&mut Cursor::new(&wire), Some(&key()))
+                .unwrap()
+                .unwrap();
+            assert_eq!(nb, wire.len() as u64);
+            assert_frames_eq(&f, &back);
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_in_a_maced_frame_is_rejected() {
+        // the tentpole's corruption contract: chaos-injected bit flips
+        // must surface as in-band authentication failures, never as
+        // silently ingested wrong protocol state — for EVERY bit of
+        // the length-counted region (tag + payload + MAC)
+        let k = key();
+        for f in sample_frames() {
+            let wire = encode_frame(&f, Some(&k)).unwrap();
+            for byte in 4..wire.len() {
+                for bit in 0..8 {
+                    let mut bad = wire.clone();
+                    bad[byte] ^= 1 << bit;
+                    assert!(
+                        read_frame_auth(&mut Cursor::new(&bad), Some(&k)).is_err(),
+                        "bit {bit} of byte {byte} flipped undetected"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_key_hello_is_refused_before_decode() {
+        let hello = sample_frames().remove(0);
+        let right = AuthKey::from_passphrase("fleet secret");
+        let wrong = AuthKey::from_passphrase("fleet secret?");
+        let wire = encode_frame(&hello, Some(&right)).unwrap();
+        let err = read_frame_auth(&mut Cursor::new(&wire), Some(&wrong)).unwrap_err();
+        assert!(err.to_string().contains("authentication"), "{err}");
+        // an authenticated receiver also refuses unauthenticated peers
+        let plain = encode_frame(&hello, None).unwrap();
+        assert!(read_frame_auth(&mut Cursor::new(&plain), Some(&right)).is_err());
+        // and a legacy receiver rejects an authed frame (trailing MAC
+        // reads as garbage) instead of half-parsing it
+        assert!(read_frame(&mut Cursor::new(&wire)).is_err());
+    }
+
+    #[test]
+    fn no_auth_wire_stays_byte_identical_to_legacy() {
+        // chaos off + auth off must stay bit-identical to the PR 8
+        // wire: write_frame, write_frame_auth(None), and the length
+        // prefix + encode_body concatenation all agree
+        for f in sample_frames() {
+            let mut legacy = Vec::new();
+            write_frame(&mut legacy, &f).unwrap();
+            let mut via_auth = Vec::new();
+            write_frame_auth(&mut via_auth, &f, None).unwrap();
+            assert_eq!(legacy, via_auth);
+            assert_eq!(encode_frame(&f, None).unwrap(), legacy);
+            let body = f.encode_body();
+            assert_eq!(legacy[..4], (body.len() as u32).to_le_bytes()[..]);
+            assert_eq!(legacy[4..], body[..]);
+        }
+    }
+
+    #[test]
+    fn passphrase_derivation_is_deterministic_and_separating() {
+        let a = AuthKey::from_passphrase("alpha");
+        assert_eq!(a, AuthKey::from_passphrase("alpha"));
+        assert_ne!(a, AuthKey::from_passphrase("alphb"));
+        assert_ne!(AuthKey::from_passphrase(""), AuthKey::from_passphrase(" "));
+        assert_ne!(a.mac(b"body"), AuthKey::from_passphrase("beta").mac(b"body"));
+        assert_ne!(a.mac(&[1, 2, 3]), a.mac(&[1, 2, 4]));
+        assert_ne!(a.mac(&[]), a.mac(&[0]), "length is part of the MAC input");
     }
 }

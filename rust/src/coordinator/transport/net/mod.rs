@@ -36,14 +36,29 @@
 //! Incoming bytes are untrusted: frames decode fallibly
 //! ([`frame::read_frame`]) and compressed symbol payloads pass
 //! through [`Compressor::try_unpack`]; a malformed response is logged
-//! and surfaced as that worker's crash-stop, not a master panic.
+//! and surfaced as that worker's crash-stop, not a master panic. With
+//! a shared [`frame::AuthKey`] (`--auth-key`) every frame additionally
+//! carries a MAC verified before decode, and the worker refuses
+//! sessions from unauthenticated masters.
+//!
+//! The whole lifecycle can be run under seeded fault injection
+//! ([`chaos`]): the supervisor's writes, the reader's receives, and
+//! the worker's response writes each pass through a [`chaos::ChaosLink`]
+//! when `--chaos` is set, and the timed partition schedule gates the
+//! connect loop. Silent drops are recovered by resend-on-timeout
+//! ([`NetConfig::resend_ms`], armed only under chaos so clean runs
+//! stay bit-identical); a request resent more than
+//! [`NetConfig::max_resends`] times breaks the session and burns
+//! reconnect budget, so a black-holed link still ends as an in-band
+//! crash-stop — never a hang.
 
+pub mod chaos;
 pub mod frame;
 pub mod server;
 
 use std::collections::BTreeMap;
-use std::io::BufReader;
-use std::net::TcpStream;
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -58,7 +73,15 @@ use crate::config::AttackConfig;
 use crate::grad::ModelSpec;
 use crate::Result;
 
-use frame::{read_frame, write_frame, Frame, Hello, NetGrad, NetRequest, NetResponse};
+use chaos::{ChaosLink, ChaosSpec, SendOp, CHANNEL_MASTER_RECV, CHANNEL_MASTER_SEND};
+use frame::{
+    decode_body_auth, encode_frame, read_frame_auth, read_raw_body, write_frame_auth, AuthKey,
+    Frame, Hello, NetGrad, NetRequest, NetResponse,
+};
+
+/// Injectable sleep, so backoff/chaos timing is observable in tests
+/// (record the durations) instead of slept through for real.
+pub type SleepFn = Arc<dyn Fn(Duration) + Send + Sync>;
 
 /// Master-side configuration for one [`NetTransport`].
 pub struct NetConfig {
@@ -83,12 +106,29 @@ pub struct NetConfig {
     /// Model the workers instantiate their engines from.
     pub model: ModelSpec,
     /// Connection attempts per outage before the worker is declared
-    /// crash-stopped.
+    /// crash-stopped (the budget tolerates exactly this many
+    /// consecutive failures; see [`ReconnectBudget`]).
     pub max_attempts: u32,
     /// Base reconnect backoff (doubles per attempt, capped at 16×).
     pub backoff_ms: u64,
     /// Outbound queue depth per worker (bounded backpressure).
     pub outbound_depth: usize,
+    /// Master-side fault injection (None = clean wire). Seeded from
+    /// [`NetConfig::seed`], per-link streams — replayable storms.
+    pub chaos: Option<ChaosSpec>,
+    /// Shared frame-authentication key (None = legacy unauthenticated
+    /// wire, bit-identical to PR 8).
+    pub auth: Option<AuthKey>,
+    /// With chaos active: resend an unacknowledged request after this
+    /// many ms on a live session (silent-drop recovery). Ignored on a
+    /// clean wire, where TCP itself guarantees delivery or breakage.
+    pub resend_ms: u64,
+    /// With chaos active: a request resent this many times without an
+    /// ack breaks the session (burning reconnect budget), so a
+    /// black-holed link becomes a crash-stop instead of a hang.
+    pub max_resends: u32,
+    /// Injectable sleep for backoff/chaos delays (None = real sleep).
+    pub sleep: Option<SleepFn>,
 }
 
 impl NetConfig {
@@ -105,7 +145,56 @@ impl NetConfig {
             max_attempts: 5,
             backoff_ms: 25,
             outbound_depth: 4,
+            chaos: None,
+            auth: None,
+            resend_ms: 400,
+            max_resends: 10,
+            sleep: None,
         }
+    }
+}
+
+/// Per-outage reconnect budget with capped exponential backoff,
+/// extracted so the edge semantics are unit-testable without sockets
+/// or sleeps: the budget tolerates exactly `max_attempts` consecutive
+/// failures (each returning the backoff to wait), the
+/// `max_attempts + 1`-th failure is terminal (`None` — the caller
+/// crash-stops the worker), and any completed handshake refills it.
+pub struct ReconnectBudget {
+    max_attempts: u32,
+    backoff_ms: u64,
+    failures: u32,
+}
+
+impl ReconnectBudget {
+    pub fn new(max_attempts: u32, backoff_ms: u64) -> ReconnectBudget {
+        ReconnectBudget {
+            max_attempts: max_attempts.max(1),
+            backoff_ms: backoff_ms.max(1),
+            failures: 0,
+        }
+    }
+
+    /// Record one failed attempt. `Some(ms)` = sleep that long and try
+    /// again; `None` = budget exhausted. Backoff doubles per
+    /// consecutive failure, capped at 16× the base.
+    pub fn on_failure(&mut self) -> Option<u64> {
+        self.failures += 1;
+        if self.failures > self.max_attempts {
+            return None;
+        }
+        let exp = (self.failures - 1).min(4);
+        Some(self.backoff_ms << exp)
+    }
+
+    /// The outage is over (handshake completed): refill the budget.
+    pub fn on_success(&mut self) {
+        self.failures = 0;
+    }
+
+    /// True once [`ReconnectBudget::on_failure`] has returned `None`.
+    pub fn exhausted(&self) -> bool {
+        self.failures > self.max_attempts
     }
 }
 
@@ -139,6 +228,18 @@ struct SupervisorCtx {
     unacked: Arc<Mutex<BTreeMap<u64, NetRequest>>>,
     max_attempts: u32,
     backoff_ms: u64,
+    /// Fault injection for this link (None = clean wire).
+    chaos: Option<ChaosSpec>,
+    /// Frame authentication key (None = legacy wire).
+    auth: Option<AuthKey>,
+    /// Run seed: chaos streams key on (seed, global id, channel).
+    seed: u64,
+    /// Transport birth instant — the partition schedule's clock zero,
+    /// shared by every link so partitions are fleet-synchronized.
+    origin: Instant,
+    resend_ms: u64,
+    max_resends: u32,
+    sleep: SleepFn,
 }
 
 /// TCP-backed [`Transport`]: one connection actor per worker.
@@ -175,6 +276,9 @@ impl NetTransport {
         let d = cfg.model.param_dim();
         let (events_tx, events_rx) = channel::<NetEvent>();
         let counters = Arc::new(Counters::default());
+        let origin = Instant::now();
+        let chaos = cfg.chaos.filter(|s| !s.is_noop());
+        let sleep: SleepFn = cfg.sleep.clone().unwrap_or_else(|| Arc::new(std::thread::sleep));
         let mut cmd_txs = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for (i, addr) in cfg.peers.iter().enumerate() {
@@ -205,6 +309,13 @@ impl NetTransport {
                 unacked: Arc::new(Mutex::new(BTreeMap::new())),
                 max_attempts: cfg.max_attempts.max(1),
                 backoff_ms: cfg.backoff_ms.max(1),
+                chaos,
+                auth: cfg.auth,
+                seed: cfg.seed,
+                origin,
+                resend_ms: cfg.resend_ms.max(1),
+                max_resends: cfg.max_resends.max(1),
+                sleep: sleep.clone(),
             };
             handles.push(
                 std::thread::Builder::new()
@@ -226,7 +337,7 @@ impl NetTransport {
             next_seq: 0,
             reconnect_log: Vec::new(),
             counters,
-            origin: Instant::now(),
+            origin,
         })
     }
 
@@ -477,61 +588,146 @@ enum SessionEnd {
     MasterGone,
 }
 
+/// Put one pre-encoded frame on the wire, through the link's chaos
+/// plan when one is active. Returns the bytes actually written
+/// (duplicates and torn prefixes included — they hit the wire, so the
+/// honest accounting counts them); `Err` means the session is over
+/// (write failure or a chaos kill).
+fn send_wire(
+    stream: &mut TcpStream,
+    link: Option<&mut ChaosLink>,
+    sleep: &SleepFn,
+    wire: &[u8],
+) -> Result<u64> {
+    let Some(link) = link else {
+        stream.write_all(wire)?;
+        stream.flush()?;
+        return Ok(wire.len() as u64);
+    };
+    let mut nb = 0u64;
+    for op in link.plan_send(wire) {
+        match op {
+            SendOp::Sleep(d) => sleep(d),
+            SendOp::Write(b) => {
+                stream.write_all(&b)?;
+                nb += b.len() as u64;
+            }
+            SendOp::WritePrefix(b, cut) => {
+                let _ = stream.write_all(&b[..cut]);
+                nb += cut as u64;
+            }
+            SendOp::Kill => {
+                let _ = stream.flush();
+                let _ = stream.shutdown(Shutdown::Both);
+                anyhow::bail!("chaos killed the connection");
+            }
+        }
+    }
+    stream.flush()?;
+    Ok(nb)
+}
+
 fn run_supervisor(ctx: SupervisorCtx) {
-    let mut attempts_left = ctx.max_attempts;
+    let mut budget = ReconnectBudget::new(ctx.max_attempts, ctx.backoff_ms);
     let mut first_session = true;
+    // chaos links persist across sessions so a storm doesn't restart
+    // from its first coin at every reconnect
+    let global = ctx.hello.global_id;
+    let mut send_link = ctx
+        .chaos
+        .map(|s| ChaosLink::new(s, ctx.seed, global, CHANNEL_MASTER_SEND));
+    let recv_link = ctx
+        .chaos
+        .map(|s| Arc::new(Mutex::new(ChaosLink::new(s, ctx.seed, global, CHANNEL_MASTER_RECV))));
+    // per-seq live-session resend bookkeeping (chaos only)
+    let mut sent_at: BTreeMap<u64, Instant> = BTreeMap::new();
+    let mut resend_counts: BTreeMap<u64, u32> = BTreeMap::new();
     loop {
-        // connect with capped exponential backoff
+        // connect, gated by the partition schedule, with capped
+        // exponential backoff; each failed attempt (or partitioned
+        // tick) burns budget, so an outage longer than the budget's
+        // total wait becomes a crash-stop
         let stream = loop {
-            match TcpStream::connect(&ctx.addr) {
+            let partitioned = ctx
+                .chaos
+                .map(|s| s.partitioned(ctx.origin.elapsed()))
+                .unwrap_or(false);
+            let attempt = if partitioned {
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::NotConnected,
+                    "link partitioned",
+                ))
+            } else {
+                TcpStream::connect(&ctx.addr)
+            };
+            match attempt {
                 Ok(s) => break Some(s),
-                Err(e) => {
-                    attempts_left = attempts_left.saturating_sub(1);
-                    if attempts_left == 0 {
+                Err(e) => match budget.on_failure() {
+                    Some(backoff_ms) => (ctx.sleep)(Duration::from_millis(backoff_ms)),
+                    None => {
                         log::warn!("worker {} @ {}: connect failed: {e}", ctx.worker, ctx.addr);
                         break None;
                     }
-                    let exp = (ctx.max_attempts - attempts_left).min(4);
-                    std::thread::sleep(Duration::from_millis(ctx.backoff_ms << exp));
-                }
+                },
             }
         };
         let stream = match stream {
             Some(s) => s,
             None => return fail_forever(&ctx),
         };
-        match run_session(&ctx, stream, first_session, &mut attempts_left) {
+        let end = run_session(
+            &ctx,
+            stream,
+            first_session,
+            &mut budget,
+            send_link.as_mut(),
+            recv_link.clone(),
+            &mut sent_at,
+            &mut resend_counts,
+        );
+        match end {
             SessionEnd::MasterGone => return,
-            SessionEnd::Broken => {
-                attempts_left = attempts_left.saturating_sub(1);
-                if attempts_left == 0 {
-                    return fail_forever(&ctx);
+            SessionEnd::Broken => match budget.on_failure() {
+                Some(backoff_ms) => {
+                    first_session = false;
+                    (ctx.sleep)(Duration::from_millis(backoff_ms));
                 }
-                first_session = false;
-                let exp = (ctx.max_attempts - attempts_left).min(4);
-                std::thread::sleep(Duration::from_millis(ctx.backoff_ms << exp));
-            }
+                None => return fail_forever(&ctx),
+            },
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_session(
     ctx: &SupervisorCtx,
     mut stream: TcpStream,
     first: bool,
-    attempts_left: &mut u32,
+    budget: &mut ReconnectBudget,
+    mut send_link: Option<&mut ChaosLink>,
+    recv_link: Option<Arc<Mutex<ChaosLink>>>,
+    sent_at: &mut BTreeMap<u64, Instant>,
+    resend_counts: &mut BTreeMap<u64, u32>,
 ) -> SessionEnd {
     let _ = stream.set_nodelay(true);
-    // handshake: Hello out, HelloAck back (reads are unbuffered here;
-    // the worker sends nothing after the ack until we send requests)
-    match write_frame(&mut stream, &Frame::Hello(ctx.hello.clone())) {
+    // a session that dies mid-write must also unblock its reader
+    // thread, which may be parked in a blocking read on the same socket
+    let broken = |stream: &TcpStream| {
+        let _ = stream.shutdown(Shutdown::Both);
+        SessionEnd::Broken
+    };
+    // handshake: Hello out, HelloAck back. Exempt from per-frame chaos
+    // (the partition schedule already gates connects), so a chaotic
+    // run exercises the steady state instead of never booting; the
+    // MAC is still on — an unauthenticated worker refuses us here.
+    match write_frame_auth(&mut stream, &Frame::Hello(ctx.hello.clone()), ctx.auth.as_ref()) {
         Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
         Err(e) => {
             log::warn!("worker {}: hello write failed: {e:#}", ctx.worker);
-            return SessionEnd::Broken;
+            return broken(&stream);
         }
     };
-    match read_frame(&mut stream) {
+    match read_frame_auth(&mut stream, ctx.auth.as_ref()) {
         Ok(Some((Frame::HelloAck { global_id }, nb)))
             if global_id == ctx.hello.global_id =>
         {
@@ -539,11 +735,11 @@ fn run_session(
         }
         Ok(_) | Err(_) => {
             log::warn!("worker {}: bad hello ack", ctx.worker);
-            return SessionEnd::Broken;
+            return broken(&stream);
         }
     }
     // handshake done: the outage (if any) is over, refill the budget
-    *attempts_left = ctx.max_attempts;
+    budget.on_success();
     if !first {
         ctx.counters.reconnects.fetch_add(1, Ordering::Relaxed);
         let _ = ctx.events.send(NetEvent::Reconnect { worker: ctx.worker });
@@ -554,7 +750,7 @@ fn run_session(
         Ok(s) => s,
         Err(e) => {
             log::warn!("worker {}: stream clone failed: {e}", ctx.worker);
-            return SessionEnd::Broken;
+            return broken(&stream);
         }
     };
     {
@@ -562,42 +758,118 @@ fn run_session(
         let events = ctx.events.clone();
         let unacked = ctx.unacked.clone();
         let counters = ctx.counters.clone();
+        let auth = ctx.auth;
+        let recv_link = recv_link.clone();
         let worker = ctx.worker;
         std::thread::Builder::new()
             .name(format!("r3bft-net-read-{worker}"))
-            .spawn(move || run_reader(reader_stream, alive, events, unacked, counters))
+            .spawn(move || {
+                run_reader(reader_stream, alive, events, unacked, counters, auth, recv_link)
+            })
             .expect("spawn net reader");
     }
     // a fresh session starts by resending everything unanswered, in
-    // sequence order (the worker recomputes deterministically)
+    // sequence order (the worker recomputes deterministically, and the
+    // reader's seq dedup keeps every request to exactly one delivery)
     let resend: Vec<NetRequest> = {
         let m = ctx.unacked.lock().expect("unacked lock");
         m.values().cloned().collect()
     };
     for req in resend {
-        match write_frame(&mut stream, &Frame::Request(req)) {
+        let seq = req.seq;
+        let wire = match encode_frame(&Frame::Request(req), ctx.auth.as_ref()) {
+            Ok(w) => w,
+            Err(_) => return broken(&stream),
+        };
+        sent_at.insert(seq, Instant::now());
+        match send_wire(&mut stream, send_link.as_deref_mut(), &ctx.sleep, &wire) {
             Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
-            Err(_) => return SessionEnd::Broken,
+            Err(_) => return broken(&stream),
         }
     }
-    // write loop; the timeout tick is only how fast we notice a dead
-    // reader while idle — requests themselves are written immediately
+    // write loop; the timeout tick doubles as the resend-on-timeout
+    // and partition watchdog under chaos — requests themselves are
+    // written immediately
     loop {
         if !alive.load(Ordering::Acquire) {
-            return SessionEnd::Broken;
+            return broken(&stream);
+        }
+        if let Some(spec) = &ctx.chaos {
+            if spec.partitioned(ctx.origin.elapsed()) {
+                log::info!("worker {}: chaos partition opened, dropping session", ctx.worker);
+                return broken(&stream);
+            }
         }
         match ctx.cmd_rx.recv_timeout(Duration::from_millis(20)) {
             Ok(req) => {
-                ctx.unacked.lock().expect("unacked lock").insert(req.seq, req.clone());
-                match write_frame(&mut stream, &Frame::Request(req)) {
+                let seq = req.seq;
+                ctx.unacked.lock().expect("unacked lock").insert(seq, req.clone());
+                let wire = match encode_frame(&Frame::Request(req), ctx.auth.as_ref()) {
+                    Ok(w) => w,
+                    Err(_) => return broken(&stream),
+                };
+                sent_at.insert(seq, Instant::now());
+                match send_wire(&mut stream, send_link.as_deref_mut(), &ctx.sleep, &wire) {
                     Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
-                    Err(_) => return SessionEnd::Broken,
+                    Err(_) => return broken(&stream),
                 }
             }
-            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Timeout) => {
+                // silent-drop recovery, chaos only: resend anything
+                // unacknowledged for longer than resend_ms; a request
+                // that keeps vanishing breaks the session (and with
+                // it, eventually, the reconnect budget) — black holes
+                // become crash-stops, never hangs
+                if ctx.chaos.is_some() {
+                    let now = Instant::now();
+                    let due: Vec<NetRequest> = {
+                        let m = ctx.unacked.lock().expect("unacked lock");
+                        sent_at.retain(|seq, _| m.contains_key(seq));
+                        resend_counts.retain(|seq, _| m.contains_key(seq));
+                        m.values()
+                            .filter(|r| match sent_at.get(&r.seq) {
+                                Some(t) => {
+                                    let waited = now.duration_since(*t).as_millis() as u64;
+                                    waited >= ctx.resend_ms
+                                }
+                                None => true,
+                            })
+                            .cloned()
+                            .collect()
+                    };
+                    for req in due {
+                        let seq = req.seq;
+                        let count = resend_counts.entry(seq).or_insert(0);
+                        *count += 1;
+                        if *count > ctx.max_resends {
+                            log::warn!(
+                                "worker {}: request seq {seq} resent {} times without an ack",
+                                ctx.worker,
+                                ctx.max_resends
+                            );
+                            return broken(&stream);
+                        }
+                        let wire = match encode_frame(&Frame::Request(req), ctx.auth.as_ref()) {
+                            Ok(w) => w,
+                            Err(_) => return broken(&stream),
+                        };
+                        sent_at.insert(seq, now);
+                        match send_wire(&mut stream, send_link.as_deref_mut(), &ctx.sleep, &wire) {
+                            Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
+                            Err(_) => return broken(&stream),
+                        }
+                    }
+                }
+                continue;
+            }
             Err(RecvTimeoutError::Disconnected) => {
-                if let Ok(nb) = write_frame(&mut stream, &Frame::Shutdown) {
-                    ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed);
+                // Teardown is harness traffic, chaos-exempt like the
+                // handshake: a dropped Shutdown would strand the worker
+                // process in its accept loop forever.
+                if let Ok(wire) = encode_frame(&Frame::Shutdown, ctx.auth.as_ref()) {
+                    if let Ok(nb) = send_wire(&mut stream, None, &ctx.sleep, &wire) {
+                        ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed);
+                    }
                 }
                 return SessionEnd::MasterGone;
             }
@@ -611,27 +883,49 @@ fn run_reader(
     events: Sender<NetEvent>,
     unacked: Arc<Mutex<BTreeMap<u64, NetRequest>>>,
     counters: Arc<Counters>,
+    auth: Option<AuthKey>,
+    recv_link: Option<Arc<Mutex<ChaosLink>>>,
 ) {
     let mut r = BufReader::new(stream);
-    loop {
-        match read_frame(&mut r) {
-            Ok(Some((Frame::Response(resp), nb))) => {
-                counters.bytes_rx.fetch_add(nb, Ordering::Relaxed);
-                // ack: the seq is no longer owed by future sessions.
-                // An unknown seq is a stale duplicate (already answered
-                // on an earlier session) — dropped, so every request
-                // yields exactly one event.
-                let known =
-                    unacked.lock().expect("unacked lock").remove(&resp.seq).is_some();
-                if known && events.send(NetEvent::Resp(resp)).is_err() {
-                    break; // master gone
+    'session: loop {
+        // raw body first: inbound chaos operates on the received bytes
+        // before MAC verification/decode, exactly where a hostile
+        // network sits
+        let (raw, nb) = match read_raw_body(&mut r) {
+            Ok(Some(x)) => x,
+            Ok(None) | Err(_) => break, // EOF or torn frame: session over
+        };
+        counters.bytes_rx.fetch_add(nb, Ordering::Relaxed);
+        let bodies = match &recv_link {
+            Some(link) => link.lock().expect("chaos link lock").plan_recv(&raw),
+            None => vec![raw],
+        };
+        for body in bodies {
+            match decode_body_auth(&body, auth.as_ref()) {
+                Ok(Frame::Response(resp)) => {
+                    // ack: the seq is no longer owed by future sessions.
+                    // An unknown seq is a stale duplicate (already
+                    // answered, possibly a chaos dup) — dropped, so
+                    // every request yields exactly one event.
+                    let known =
+                        unacked.lock().expect("unacked lock").remove(&resp.seq).is_some();
+                    if known && events.send(NetEvent::Resp(resp)).is_err() {
+                        break 'session; // master gone
+                    }
+                }
+                Ok(_) => {
+                    log::warn!("net reader: protocol violation (unexpected frame)");
+                    break 'session;
+                }
+                Err(e) => {
+                    // a corrupted (or forged) frame: with auth on this
+                    // is a MAC failure; either way the session is torn
+                    // down and reconnect/resend takes over — the bytes
+                    // never reach protocol state
+                    log::warn!("net reader: undecodable frame: {e:#}");
+                    break 'session;
                 }
             }
-            Ok(Some((_, _))) => {
-                log::warn!("net reader: protocol violation (unexpected frame)");
-                break;
-            }
-            Ok(None) | Err(_) => break, // EOF or torn frame: session over
         }
     }
     alive.store(false, Ordering::Release);
@@ -667,5 +961,105 @@ fn fail_forever(ctx: &SupervisorCtx) {
             }
             Err(_) => return,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Batch;
+
+    // ----------------------------------- reconnect budget edge table
+
+    #[test]
+    fn budget_tolerates_exactly_max_attempts_then_exhausts() {
+        // (max_attempts, base backoff, expected backoff sequence)
+        let table: &[(u32, u64, &[u64])] = &[
+            (1, 25, &[25]),
+            (3, 5, &[5, 10, 20]),
+            (5, 25, &[25, 50, 100, 200, 400]),
+            // doubling caps at 16x the base
+            (8, 1, &[1, 2, 4, 8, 16, 16, 16, 16]),
+        ];
+        for &(max, base, expect) in table {
+            let mut b = ReconnectBudget::new(max, base);
+            assert!(!b.exhausted());
+            for (i, &ms) in expect.iter().enumerate() {
+                assert_eq!(b.on_failure(), Some(ms), "max={max} failure #{}", i + 1);
+                assert!(!b.exhausted());
+            }
+            // the (max_attempts + 1)-th consecutive failure is terminal
+            assert_eq!(b.on_failure(), None, "max={max} must exhaust");
+            assert!(b.exhausted());
+        }
+    }
+
+    #[test]
+    fn budget_refills_on_success() {
+        let mut b = ReconnectBudget::new(2, 10);
+        assert_eq!(b.on_failure(), Some(10));
+        assert_eq!(b.on_failure(), Some(20));
+        // outage ends one failure short of exhaustion: full refill
+        b.on_success();
+        assert_eq!(b.on_failure(), Some(10), "backoff restarts at base");
+        assert_eq!(b.on_failure(), Some(20));
+        assert_eq!(b.on_failure(), None);
+    }
+
+    #[test]
+    fn budget_clamps_degenerate_configs() {
+        // zero attempts/backoff would mean instant permanent death and
+        // hot-spin reconnects; both clamp to 1
+        let mut b = ReconnectBudget::new(0, 0);
+        assert_eq!(b.on_failure(), Some(1));
+        assert_eq!(b.on_failure(), None);
+    }
+
+    // ------------------------------- crash-stop via exhausted budget
+
+    /// A peer that never accepts: the supervisor must burn exactly
+    /// `max_attempts` backoffs (observed through the injected sleep —
+    /// no real ones), then surface the pending submit as an in-band
+    /// `Delivery::Failed`, and keep failing later submits immediately.
+    #[test]
+    fn unreachable_peer_crash_stops_and_drains_submits() {
+        let model = ModelSpec::LinReg { d: 4, batch: 2 };
+        // port 1 is reserved: connects are refused, never accepted
+        let mut cfg = NetConfig::new(vec!["127.0.0.1:1".into()], model);
+        cfg.max_attempts = 3;
+        cfg.backoff_ms = 1;
+        let slept: Arc<Mutex<Vec<Duration>>> = Arc::new(Mutex::new(Vec::new()));
+        let rec = slept.clone();
+        cfg.sleep = Some(Arc::new(move |d| rec.lock().unwrap().push(d)));
+        let mut t = NetTransport::connect(cfg).unwrap();
+
+        let theta = Arc::new(vec![0.0f32; 4]);
+        let batch = Batch::LinReg { x: vec![0.0; 4], y: vec![0.0], b: 1, d: 4 };
+        let bundle = TaskBundle { worker: 0, tasks: vec![(0, batch.clone())] };
+        t.submit(0, 0, 0, &theta, vec![bundle]).unwrap();
+        let out = t.poll(None).unwrap();
+        assert_eq!(out.len(), 1, "the owed delivery must come back");
+        assert!(
+            matches!(out[0], Delivery::Failed { worker: 0, .. }),
+            "an unreachable peer is a crash-stop, got {:?}",
+            out[0].worker()
+        );
+        assert_eq!(
+            *slept.lock().unwrap(),
+            vec![
+                Duration::from_millis(1),
+                Duration::from_millis(2),
+                Duration::from_millis(4)
+            ],
+            "exactly max_attempts capped-exponential backoffs, via the mock clock"
+        );
+
+        // the worker is now known-dead: submits fail without blocking
+        let bundle = TaskBundle { worker: 0, tasks: vec![(0, batch)] };
+        t.submit(1, 0, 0, &theta, vec![bundle]).unwrap();
+        let out = t.poll(None).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(matches!(out[0], Delivery::Failed { worker: 0, .. }));
+        t.shutdown();
     }
 }

@@ -16,6 +16,16 @@
 //! recomputation is deterministic). A hello for a different
 //! configuration rebuilds the state from scratch. A
 //! [`Frame::Shutdown`] ends the process's serve loop.
+//!
+//! With [`ServeOptions::auth`] set (`--auth-key`), every frame must
+//! carry a valid MAC: a hello from a master that does not share the
+//! key fails verification **before** any worker state is built, and
+//! the session is refused. With [`ServeOptions::chaos`] set the
+//! worker's response writes pass through a seeded
+//! [`ChaosLink`](super::chaos::ChaosLink) (stream keyed by the
+//! hello's run seed + global id, [`CHANNEL_WORKER_SEND`]), so both
+//! directions of a link can be made hostile. The handshake ack is
+//! exempt, mirroring the master side.
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -24,9 +34,25 @@ use std::sync::Arc;
 use super::super::super::byzantine::ByzantineBehavior;
 use super::super::super::compress;
 use super::super::super::worker::WorkerState;
-use super::frame::{read_frame, write_frame, Frame, Hello, NetGrad, NetResponse, NetSymbol};
+use super::chaos::{ChaosLink, ChaosSpec, CHANNEL_WORKER_SEND};
+use super::frame::{
+    encode_frame, read_frame_auth, write_frame_auth, AuthKey, Frame, Hello, NetGrad, NetResponse,
+    NetSymbol,
+};
+use super::{send_wire, SleepFn};
 use crate::grad::{GradientComputer, NativeEngine};
 use crate::Result;
+
+/// Worker-side hardening knobs, from `r3bft worker` flags.
+#[derive(Default)]
+pub struct ServeOptions {
+    /// Shared frame-authentication key (None = legacy wire).
+    pub auth: Option<AuthKey>,
+    /// Fault injection on this worker's response writes (None =
+    /// clean wire). Seeded from the master's hello, so the storm is
+    /// replayable from the run seed like every other link.
+    pub chaos: Option<ChaosSpec>,
+}
 
 enum SessionEnd {
     /// Master went away (EOF or torn frame): await a reconnect.
@@ -40,12 +66,21 @@ enum SessionEnd {
 struct Persistent {
     hello: Hello,
     state: WorkerState,
+    /// Response-write fault injector; persists across reconnects so
+    /// the storm doesn't restart with every session.
+    chaos: Option<ChaosLink>,
+}
+
+/// Accept loop with a clean wire and no authentication — what
+/// `r3bft worker` without flags runs, byte-identical to PR 8.
+pub fn serve(listener: TcpListener) -> Result<()> {
+    serve_with(listener, ServeOptions::default())
 }
 
 /// Accept loop: serve master sessions until a shutdown frame arrives.
 /// Blocks the calling thread; run-from-test harnesses call this on a
 /// listener bound to `127.0.0.1:0` in a spawned thread.
-pub fn serve(listener: TcpListener) -> Result<()> {
+pub fn serve_with(listener: TcpListener, opts: ServeOptions) -> Result<()> {
     let mut persistent: Option<Persistent> = None;
     for stream in listener.incoming() {
         let stream = match stream {
@@ -55,7 +90,7 @@ pub fn serve(listener: TcpListener) -> Result<()> {
                 continue;
             }
         };
-        match serve_session(stream, &mut persistent) {
+        match serve_session(stream, &mut persistent, &opts) {
             Ok(SessionEnd::Shutdown) => return Ok(()),
             Ok(SessionEnd::Eof) => continue, // master may reconnect
             Err(e) => {
@@ -82,12 +117,18 @@ fn build_state(hello: &Hello) -> Result<WorkerState> {
     Ok(WorkerState::new(hello.local_id as usize, engine, byzantine, compressor))
 }
 
-fn serve_session(stream: TcpStream, persistent: &mut Option<Persistent>) -> Result<SessionEnd> {
+fn serve_session(
+    stream: TcpStream,
+    persistent: &mut Option<Persistent>,
+    opts: &ServeOptions,
+) -> Result<SessionEnd> {
     let _ = stream.set_nodelay(true);
     let mut w = stream.try_clone()?;
     let mut r = BufReader::new(stream);
-    // session preamble: Hello (or an immediate Shutdown)
-    let hello = match read_frame(&mut r)? {
+    // session preamble: Hello (or an immediate Shutdown). With auth
+    // on, a forged or unauthenticated hello dies right here — no
+    // worker state is built for a master that doesn't share the key.
+    let hello = match read_frame_auth(&mut r, opts.auth.as_ref())? {
         None => return Ok(SessionEnd::Eof),
         Some((Frame::Hello(h), _)) => h,
         Some((Frame::Shutdown, _)) => return Ok(SessionEnd::Shutdown),
@@ -95,12 +136,20 @@ fn serve_session(stream: TcpStream, persistent: &mut Option<Persistent>) -> Resu
     };
     let same = persistent.as_ref().map(|p| p.hello == hello).unwrap_or(false);
     if !same {
-        *persistent = Some(Persistent { state: build_state(&hello)?, hello: hello.clone() });
+        let chaos = opts
+            .chaos
+            .filter(|s| !s.is_noop())
+            .map(|s| ChaosLink::new(s, hello.seed, hello.global_id, CHANNEL_WORKER_SEND));
+        *persistent =
+            Some(Persistent { state: build_state(&hello)?, hello: hello.clone(), chaos });
     }
-    write_frame(&mut w, &Frame::HelloAck { global_id: hello.global_id })?;
+    // the ack is exempt from chaos (handshakes must succeed for the
+    // steady state to be exercised at all), but carries a MAC
+    write_frame_auth(&mut w, &Frame::HelloAck { global_id: hello.global_id }, opts.auth.as_ref())?;
     let p = persistent.as_mut().expect("state built above");
+    let sleep: SleepFn = Arc::new(std::thread::sleep);
     loop {
-        match read_frame(&mut r)? {
+        match read_frame_auth(&mut r, opts.auth.as_ref())? {
             None => return Ok(SessionEnd::Eof),
             Some((Frame::Shutdown, _)) => return Ok(SessionEnd::Shutdown),
             Some((Frame::Request(req), _)) => {
@@ -149,7 +198,8 @@ fn serve_session(stream: TcpStream, persistent: &mut Option<Persistent>) -> Resu
                     error,
                     symbols,
                 };
-                write_frame(&mut w, &Frame::Response(resp))?;
+                let wire = encode_frame(&Frame::Response(resp), opts.auth.as_ref())?;
+                send_wire(&mut w, p.chaos.as_mut(), &sleep, &wire)?;
             }
             Some(_) => anyhow::bail!("unexpected frame mid-session"),
         }

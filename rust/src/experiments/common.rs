@@ -54,6 +54,17 @@ pub struct RunSpec {
     pub sim: SimConfig,
     /// Round pipeline depth (1 = strictly sequential).
     pub pipeline: usize,
+    /// Net transport only: worker addresses in worker-id order.
+    pub peers: Vec<String>,
+    /// Net transport only: chaos fault-injection spec for the master's
+    /// links (see `docs/NETWORK.md`; workers get theirs at spawn).
+    pub chaos: Option<String>,
+    /// Net transport only: shared frame-authentication passphrase.
+    pub auth_key: Option<String>,
+    /// Simulated per-response worker compute latency in microseconds
+    /// (threaded + net transports; keeps wall-clock runs long enough
+    /// for timed fault schedules to land mid-run).
+    pub latency_us: u64,
     /// Election decode measurement mode (E13).
     pub election: bool,
     /// Flight recorder (tracing + evidence ledger + metrics); `None`
@@ -85,6 +96,10 @@ impl RunSpec {
             adversary: None,
             sim: SimConfig::default(),
             pipeline: 1,
+            peers: Vec::new(),
+            chaos: None,
+            auth_key: None,
+            latency_us: 0,
             election: false,
             recorder: None,
         }
@@ -150,6 +165,26 @@ impl RunSpec {
         self
     }
 
+    pub fn peers(mut self, peers: Vec<String>) -> Self {
+        self.peers = peers;
+        self
+    }
+
+    pub fn chaos(mut self, spec: &str) -> Self {
+        self.chaos = Some(spec.to_string());
+        self
+    }
+
+    pub fn auth_key(mut self, key: &str) -> Self {
+        self.auth_key = Some(key.to_string());
+        self
+    }
+
+    pub fn latency_us(mut self, us: u64) -> Self {
+        self.latency_us = us;
+        self
+    }
+
     pub fn compress(mut self, comp: Arc<dyn Compressor>) -> Self {
         self.compressor = Some(comp);
         self
@@ -174,6 +209,10 @@ impl RunSpec {
         cluster.shards = self.shards;
         cluster.gather = self.gather;
         cluster.pipeline = self.pipeline;
+        cluster.peers = self.peers.clone();
+        cluster.chaos = self.chaos.clone();
+        cluster.auth_key = self.auth_key.clone();
+        cluster.latency_us = self.latency_us;
         let cfg = ExperimentConfig {
             name: "exp".into(),
             cluster,
@@ -196,6 +235,7 @@ impl RunSpec {
             election: self.election,
             sim: self.sim.clone(),
             recorder: self.recorder.clone(),
+            net_model: Some(spec.clone()),
             ..Default::default()
         };
         let master = Master::new(cfg, opts, engine, ds, theta0, self.chunk)?;

@@ -12,10 +12,11 @@ pub mod e5_adaptive;
 pub mod e7_convergence;
 pub mod e11_generalizations;
 pub mod e13_redteam;
+pub mod e14_chaos;
 
 use crate::Result;
 
-/// Run one experiment by id ("e1".."e13"; some ids share a module).
+/// Run one experiment by id ("e1".."e14"; some ids share a module).
 /// `fast` shrinks iteration counts for smoke runs.
 pub fn run(id: &str, fast: bool) -> Result<()> {
     match id {
@@ -32,14 +33,16 @@ pub fn run(id: &str, fast: bool) -> Result<()> {
         "e11" => e11_generalizations::run_e11(fast),
         "e12" => e11_generalizations::run_e12(fast),
         "e13" => e13_redteam::run_e13(fast),
+        "e14" => e14_chaos::run_e14(fast),
         "all" => {
-            for id in
-                ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13"]
-            {
+            for id in [
+                "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12", "e13",
+                "e14",
+            ] {
                 run(id, fast)?;
             }
             Ok(())
         }
-        other => anyhow::bail!("unknown experiment '{other}' (e1..e13 or all)"),
+        other => anyhow::bail!("unknown experiment '{other}' (e1..e14 or all)"),
     }
 }

@@ -12,8 +12,9 @@
 //!                   [--p 1.0] [--steps 200] [--seed 42] [--csv out.csv]
 //!                   [--trace out.json] [--events out.jsonl]
 //!                   [--metrics-out metrics.prom] [--flight flight.json]
-//! r3bft worker      --listen HOST:PORT
-//! r3bft experiment  <e1..e13|all> [--full]
+//!                   [--chaos SPEC] [--auth-key KEY]
+//! r3bft worker      --listen HOST:PORT [--chaos SPEC] [--auth-key KEY]
+//! r3bft experiment  <e1..e14|all> [--full]
 //! r3bft inspect     [--artifacts artifacts]
 //! r3bft help
 //! ```
@@ -65,8 +66,9 @@ USAGE:
   r3bft worker --listen ADDR  host one worker over TCP (the master connects
                               with --transport net --peers ...; ADDR is
                               HOST:PORT, port 0 picks a free one — the bound
-                              address is printed as 'listening on HOST:PORT')
-  r3bft experiment <id>       reproduce a paper experiment (e1..e13, all); --full for long runs
+                              address is printed as 'listening on HOST:PORT');
+                              accepts --chaos and --auth-key like train
+  r3bft experiment <id>       reproduce a paper experiment (e1..e14, all); --full for long runs
   r3bft inspect               list + compile the AOT artifacts
   r3bft help
 
@@ -91,6 +93,18 @@ TRAIN OPTIONS (defaults in parens):
                      processes over TCP (see docs/NETWORK.md)
   --peers LIST       net transport only: comma-separated worker addresses
                      in worker-id order (host:port, one per worker)
+  --chaos SPEC       net transport only: deterministic fault injection on
+                     every TCP link — comma-separated fields from
+                     drop:P, delay:DUR, dup:P, reorder:P, corrupt:P,
+                     kill:P, partition:FOR@EVERY (durations take us/ms/s
+                     suffixes; 'off' disables). Seeded from --seed: same
+                     seed, same storm. Pass the same spec to each
+                     `r3bft worker` to also perturb the response path
+  --auth-key KEY     net transport only: shared passphrase; every frame
+                     (both directions) carries a keyed MAC and unauthentic
+                     peers are refused at the handshake. Workers must be
+                     started with the same key. Falls back to the
+                     R3BFT_AUTH_KEY environment variable
   --gather G         all | quorum:K | quorum:0.F | deadline:US (all);
                      when the proactive gather may stop waiting —
                      quorum:K proceeds after K responses (quorum:0.8 =
@@ -178,6 +192,12 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
             .map(|s| s.trim().to_string())
             .filter(|s| !s.is_empty())
             .collect();
+    }
+    if let Some(spec) = args.get("chaos") {
+        cfg.cluster.chaos = Some(spec.to_string());
+    }
+    if let Some(key) = args.get("auth-key").map(String::from).or_else(auth_key_from_env) {
+        cfg.cluster.auth_key = Some(key);
     }
     cfg.cluster.shards = args.usize("shards", cfg.cluster.shards);
     cfg.cluster.pipeline = args.usize("pipeline", cfg.cluster.pipeline);
@@ -345,18 +365,37 @@ fn run_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `--auth-key` fallback: both `train` and `worker` read
+/// `R3BFT_AUTH_KEY` when the flag is absent, so harnesses can arm
+/// authentication fleet-wide without editing every command line.
+fn auth_key_from_env() -> Option<String> {
+    std::env::var("R3BFT_AUTH_KEY").ok().filter(|k| !k.is_empty())
+}
+
 /// `r3bft worker --listen ADDR`: bind, announce the bound address on
 /// stdout (port 0 picks a free port — harnesses parse this line), and
-/// serve master sessions until a shutdown frame arrives.
+/// serve master sessions until a shutdown frame arrives. `--chaos`
+/// perturbs the response path; `--auth-key` (or `R3BFT_AUTH_KEY`)
+/// refuses unauthenticated masters.
 fn run_worker(args: &Args) -> Result<()> {
     let addr = args
         .get("listen")
         .ok_or_else(|| anyhow::anyhow!("worker needs --listen HOST:PORT"))?;
+    let chaos = match args.get("chaos") {
+        Some(spec) => Some(r3bft::coordinator::transport::ChaosSpec::parse(spec)?),
+        None => None,
+    };
+    let auth = args
+        .get("auth-key")
+        .map(String::from)
+        .or_else(auth_key_from_env)
+        .map(|k| r3bft::coordinator::transport::AuthKey::from_passphrase(&k));
     let listener = std::net::TcpListener::bind(addr)
         .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
     let bound = listener.local_addr()?;
     println!("listening on {bound}");
-    r3bft::coordinator::transport::net::server::serve(listener)
+    let opts = r3bft::coordinator::transport::net::server::ServeOptions { auth, chaos };
+    r3bft::coordinator::transport::net::server::serve_with(listener, opts)
 }
 
 fn run_experiment(args: &Args) -> Result<()> {

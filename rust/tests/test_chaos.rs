@@ -1,0 +1,309 @@
+//! Chaos-net soak: the exactness contract must survive a hostile
+//! network. A seeded fault layer perturbs every TCP link (drops,
+//! delays, duplicates, reorders, corruption, timed partitions) while
+//! every frame carries a keyed MAC — and the *decisions* of the
+//! protocol (eliminations, θ trajectory, evidence) must be bitwise
+//! those of a calm run: chaos may cost time and bytes, never truth.
+//!
+//! The per-fault matrix (each fault kind × dense/sign wires × flat/
+//! sharded) lives in experiment e14 (`e14_fast` runs in tier-1); this
+//! file soaks the *combined* storm and the adversarial edges: wrong
+//! keys, dead peers, and the chaos-off/auth-off identity with the
+//! plain net transport.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use r3bft::config::{AttackKind, GatherPolicy, PolicyKind, TransportKind};
+use r3bft::coordinator::compress::SignSgd;
+use r3bft::coordinator::transport::net::server::{self, ServeOptions};
+use r3bft::coordinator::transport::{AuthKey, ChaosSpec};
+use r3bft::coordinator::TrainOutcome;
+use r3bft::experiments::common::RunSpec;
+
+const AUTH: &str = "test-chaos-secret";
+
+/// Everything at once, at rates the reconnect budget and resend timer
+/// always recover from.
+const STORM: &str = "drop:0.015,delay:1ms,dup:0.1,reorder:0.2,corrupt:0.015";
+
+/// Host one worker thread; `key`/`chaos` arm its auth and response-path
+/// fault injection.
+fn spawn_worker(key: Option<&str>, chaos: Option<&str>) -> (String, JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let opts = ServeOptions {
+        auth: key.map(AuthKey::from_passphrase),
+        chaos: chaos.map(|s| ChaosSpec::parse(s).expect("chaos spec")),
+    };
+    let handle = std::thread::spawn(move || {
+        server::serve_with(listener, opts).expect("worker serve");
+    });
+    (addr, handle)
+}
+
+fn spawn_workers(
+    n: usize,
+    key: Option<&str>,
+    chaos: Option<&str>,
+) -> (Vec<String>, Vec<JoinHandle<()>>) {
+    let mut peers = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (addr, h) = spawn_worker(key, chaos);
+        peers.push(addr);
+        handles.push(h);
+    }
+    (peers, handles)
+}
+
+/// A deterministic-audit sign-flip run: under `GatherPolicy::All` its
+/// decisions depend only on gradient *contents*, so any transport that
+/// delivers exact contents must reproduce it bitwise.
+fn base_spec(n: usize, f: usize, byz: Vec<usize>, steps: usize) -> RunSpec {
+    let mut spec = RunSpec::new(n, f, PolicyKind::Deterministic)
+        .attack(AttackKind::SignFlip, 1.0, 2.0)
+        .steps(steps)
+        .noise(0.05)
+        .gather(GatherPolicy::All);
+    spec.byzantine = byz;
+    spec
+}
+
+/// The exactness contract, asserted on one outcome.
+fn assert_exact(label: &str, out: &TrainOutcome, byz: &[usize], steps: usize) {
+    assert_eq!(
+        out.metrics.iterations.len(),
+        steps,
+        "{label}: run stopped early (hang or abort)"
+    );
+    assert!(out.crashed.is_empty(), "{label}: chaos escalated to a crash: {:?}", out.crashed);
+    let honest: Vec<usize> =
+        out.eliminated.iter().copied().filter(|w| !byz.contains(w)).collect();
+    assert!(honest.is_empty(), "{label}: honest workers eliminated: {honest:?}");
+    let mut elim = out.eliminated.clone();
+    elim.sort_unstable();
+    assert_eq!(elim, byz, "{label}: liars not all identified");
+    assert_eq!(
+        out.events.oracle_faulty_updates(),
+        0,
+        "{label}: tampered updates entered theta"
+    );
+}
+
+/// Headline: the combined storm (drops + delays + dups + reorders +
+/// corruption, auth on every frame) against a live Byzantine worker
+/// changes *nothing* the protocol decides — eliminations, evidence,
+/// and θ are bitwise identical to the calm threaded run, while the
+/// byte/reconnect accounting shows the storm actually happened.
+#[test]
+fn combined_storm_is_bit_identical_to_a_calm_run_flat() {
+    let (n, f, byz, steps) = (8, 2, vec![2usize, 5], 30);
+    let (peers, workers) = spawn_workers(n, Some(AUTH), Some(STORM));
+    let recorder = r3bft::trace::Recorder::new();
+    let spec = base_spec(n, f, byz.clone(), steps)
+        .transport(TransportKind::Net)
+        .peers(peers)
+        .chaos(STORM)
+        .auth_key(AUTH)
+        .recorder(recorder.clone());
+    let (net, w_star) = spec.run_linreg().expect("chaos net run");
+    for h in workers {
+        h.join().expect("worker thread");
+    }
+    assert_exact("storm/flat", &net, &byz, steps);
+    for &w in &net.eliminated {
+        assert!(
+            recorder.evidence_for(w).iter().any(|c| c.complete()),
+            "storm/flat: worker {w} eliminated without a complete evidence chain"
+        );
+    }
+
+    let (calm, _) = base_spec(n, f, byz.clone(), steps)
+        .transport(TransportKind::Threaded)
+        .run_linreg()
+        .expect("threaded run");
+    assert_eq!(net.eliminated, calm.eliminated, "storm changed the eliminations");
+    assert_eq!(net.theta, calm.theta, "storm changed theta (not bit-identical)");
+    assert_eq!(net.events.detections(), calm.events.detections(), "storm changed detections");
+    let dist = r3bft::linalg::dist2(&net.theta, &w_star);
+    assert!(dist < 1e-2, "storm run failed to converge: dist={dist}");
+
+    // the storm was real: every resent frame is counted, so the wire
+    // figure strictly dominates the calm payload estimate; corrupted
+    // frames forced at least one session re-establishment
+    let net_bytes: u64 = net.metrics.iterations.iter().map(|r| r.bytes_round).sum();
+    let calm_bytes: u64 = calm.metrics.iterations.iter().map(|r| r.bytes_round).sum();
+    assert!(net_bytes > calm_bytes, "retransmitted bytes uncounted: {net_bytes} <= {calm_bytes}");
+    let reconnects: u64 = net.metrics.iterations.iter().map(|r| r.net_reconnects).sum();
+    assert!(reconnects > 0, "corruption at 1.5% of ~1k frames must break a session");
+}
+
+/// The same storm over sign-compressed wires and a 4-shard fleet: the
+/// per-shard protocol cores see exact packed bytes and match the calm
+/// sharded run bitwise.
+#[test]
+fn combined_storm_is_bit_identical_sharded_sign_wires() {
+    let (n, f, byz, steps) = (12, 4, vec![1usize, 4, 7, 10], 25);
+    let (peers, workers) = spawn_workers(n, Some(AUTH), Some(STORM));
+    let spec = base_spec(n, f, byz.clone(), steps)
+        .shards(4)
+        .compress(Arc::new(SignSgd))
+        .transport(TransportKind::Net)
+        .peers(peers)
+        .chaos(STORM)
+        .auth_key(AUTH);
+    let (net, _) = spec.run_linreg().expect("chaos sharded run");
+    for h in workers {
+        h.join().expect("worker thread");
+    }
+    assert_exact("storm/sharded", &net, &byz, steps);
+
+    let (calm, _) = base_spec(n, f, byz.clone(), steps)
+        .shards(4)
+        .compress(Arc::new(SignSgd))
+        .transport(TransportKind::Threaded)
+        .run_linreg()
+        .expect("threaded sharded run");
+    assert_eq!(net.eliminated, calm.eliminated, "sharded storm changed the eliminations");
+    assert_eq!(net.theta, calm.theta, "sharded storm changed theta (not bit-identical)");
+}
+
+/// Timed partitions repeatedly knock every link down mid-run; the
+/// reconnect budget rides them out (backoff spans the window), the
+/// resend timer replays what the outage swallowed, and the outcome is
+/// still bitwise calm.
+#[test]
+fn partition_storms_recover_within_the_reconnect_budget() {
+    let (n, f, byz, steps) = (8, 2, vec![2usize, 5], 50);
+    let chaos = "partition:40ms@150ms";
+    let (peers, workers) = spawn_workers(n, Some(AUTH), Some(chaos));
+    let spec = base_spec(n, f, byz.clone(), steps)
+        .latency_us(2_000) // keep the run long enough for several windows
+        .transport(TransportKind::Net)
+        .peers(peers)
+        .chaos(chaos)
+        .auth_key(AUTH);
+    let (net, _) = spec.run_linreg().expect("partition run");
+    for h in workers {
+        h.join().expect("worker thread");
+    }
+    assert_exact("partition", &net, &byz, steps);
+    let reconnects: u64 = net.metrics.iterations.iter().map(|r| r.net_reconnects).sum();
+    assert!(reconnects > 0, "a 40ms outage every 150ms must break at least one session");
+
+    let (calm, _) = base_spec(n, f, byz, steps)
+        .latency_us(2_000)
+        .transport(TransportKind::Threaded)
+        .run_linreg()
+        .expect("threaded run");
+    assert_eq!(net.theta, calm.theta, "partitions changed theta (not bit-identical)");
+}
+
+/// A peer with the wrong key is refused at the handshake — before any
+/// per-session state is built — and the master's reconnect budget
+/// turns it into an in-band crash-stop, never a hang and never an
+/// identification.
+#[test]
+fn wrong_key_peer_is_refused_and_crash_stops() {
+    let (n, f, byz, steps) = (6, 1, vec![2usize], 20);
+    let victim = 4usize; // honest, but keyed wrong
+    let (mut peers, workers) = spawn_workers(n - 1, Some(AUTH), None);
+    let (bad_addr, _detached) = spawn_worker(Some("not-the-fleet-key"), None);
+    peers.insert(victim, bad_addr);
+    let spec = base_spec(n, f, byz.clone(), steps)
+        .transport(TransportKind::Net)
+        .peers(peers)
+        .auth_key(AUTH);
+    let (out, _) = spec.run_linreg().expect("run with one mis-keyed peer");
+    // the mis-keyed worker never saw an authentic Shutdown, so its
+    // thread is left detached; the correctly-keyed fleet joins clean
+    for h in workers {
+        h.join().expect("worker thread");
+    }
+    assert_eq!(out.crashed, vec![victim], "mis-keyed peer must crash-stop in-band");
+    assert!(!out.eliminated.contains(&victim), "an auth refusal is not an identification");
+    let mut elim = out.eliminated.clone();
+    elim.sort_unstable();
+    assert_eq!(elim, byz, "the real liar is still identified");
+    assert_eq!(out.metrics.iterations.len(), steps, "run must finish every iteration");
+    assert_eq!(out.events.oracle_faulty_updates(), 0);
+}
+
+/// A link that never comes up exhausts its reconnect budget (exactly
+/// max_attempts capped-exponential backoffs) and surfaces as an
+/// in-band crash-stop with its chunks reassigned.
+#[test]
+fn dead_peer_exhausts_the_budget_and_crash_stops() {
+    let (n, f, byz, steps) = (6, 1, vec![2usize], 20);
+    let victim = 4usize;
+    let (mut peers, workers) = spawn_workers(n - 1, Some(AUTH), None);
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+        l.local_addr().expect("local addr").to_string()
+        // listener dropped: every connect is refused
+    };
+    peers.insert(victim, dead);
+    let spec = base_spec(n, f, byz.clone(), steps)
+        .transport(TransportKind::Net)
+        .peers(peers)
+        .auth_key(AUTH);
+    let (out, _) = spec.run_linreg().expect("run with one dead peer");
+    for h in workers {
+        h.join().expect("worker thread");
+    }
+    assert_eq!(out.crashed, vec![victim], "dead peer must crash-stop in-band");
+    assert!(!out.eliminated.contains(&victim), "a dead link is not an identification");
+    let mut elim = out.eliminated.clone();
+    elim.sort_unstable();
+    assert_eq!(elim, byz, "the liar is still identified around the crash");
+    assert_eq!(out.metrics.iterations.len(), steps, "run must finish every iteration");
+    assert_eq!(out.events.oracle_faulty_updates(), 0, "no faulty update from a crash");
+}
+
+/// Regression guard: with chaos and auth both off, the new plumbing is
+/// inert — the net run is bitwise the plain loopback run (which
+/// `tests/test_net.rs` pins to threaded/sim), and turning *only* auth
+/// on changes bytes on the wire but not one bit of the outcome.
+#[test]
+fn chaos_off_auth_off_is_the_plain_net_transport() {
+    let (n, f, byz, steps) = (8, 2, vec![2usize, 5], 40);
+    let (peers_a, workers_a) = spawn_workers(n, None, None);
+    let (plain, _) = base_spec(n, f, byz.clone(), steps)
+        .transport(TransportKind::Net)
+        .peers(peers_a)
+        .run_linreg()
+        .expect("plain net run");
+    for h in workers_a {
+        h.join().expect("worker thread");
+    }
+
+    let (peers_b, workers_b) = spawn_workers(n, Some(AUTH), None);
+    let (authed, _) = base_spec(n, f, byz.clone(), steps)
+        .transport(TransportKind::Net)
+        .peers(peers_b)
+        .auth_key(AUTH)
+        .run_linreg()
+        .expect("authenticated net run");
+    for h in workers_b {
+        h.join().expect("worker thread");
+    }
+
+    let (calm, _) = base_spec(n, f, byz, steps)
+        .transport(TransportKind::Threaded)
+        .run_linreg()
+        .expect("threaded run");
+
+    assert_eq!(plain.theta, calm.theta, "chaos-off net diverged from threaded");
+    assert_eq!(plain.eliminated, calm.eliminated);
+    assert_eq!(authed.theta, calm.theta, "auth changed the outcome");
+    assert_eq!(authed.eliminated, calm.eliminated);
+    // MACs cost 8 bytes per frame and nothing else: no reconnects, and
+    // strictly more wire bytes than the unauthenticated run
+    assert!(plain.metrics.iterations.iter().all(|r| r.net_reconnects == 0));
+    assert!(authed.metrics.iterations.iter().all(|r| r.net_reconnects == 0));
+    let plain_bytes: u64 = plain.metrics.iterations.iter().map(|r| r.bytes_round).sum();
+    let auth_bytes: u64 = authed.metrics.iterations.iter().map(|r| r.bytes_round).sum();
+    assert!(auth_bytes > plain_bytes, "per-frame MACs must show up in the byte accounting");
+}
