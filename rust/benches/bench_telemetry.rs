@@ -1,0 +1,146 @@
+//! Telemetry overhead bench, written to `BENCH_telemetry.json`: the
+//! same fault-free loopback-TCP linreg workload with worker telemetry
+//! off (no recorder: the PR 8/9 wire) and on (recorder attached:
+//! worker spans, clock sync, Telemetry frames). Reported per n: mean
+//! wall round time for each mode and the on/off ratio. The acceptance
+//! gate asserts the overhead at n=32 stays under 5% of the round time
+//! — telemetry is control plane and must never become a tax on the
+//! protocol. Each mode takes the best of `TRIALS` runs so scheduler
+//! noise can only inflate the ratio, not hide a real regression.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use r3bft::config::{AttackConfig, ClusterConfig, ExperimentConfig, PolicyKind, TrainConfig};
+use r3bft::coordinator::master::{Master, MasterOptions};
+use r3bft::coordinator::transport::net::server;
+use r3bft::data::LinRegDataset;
+use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
+use r3bft::trace::Recorder;
+use r3bft::util::bench::{black_box, Table};
+use r3bft::util::json::Json;
+
+/// Best-of trials per (n, mode): loopback TCP timing is at the mercy
+/// of the scheduler; the minimum is the honest cost floor.
+const TRIALS: usize = 3;
+
+fn spawn_worker_threads(n: usize) -> (Vec<String>, Vec<JoinHandle<()>>) {
+    let mut peers = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        peers.push(listener.local_addr().expect("local addr").to_string());
+        handles.push(std::thread::spawn(move || {
+            server::serve(listener).expect("worker serve");
+        }));
+    }
+    (peers, handles)
+}
+
+/// One fault-free loopback net run; returns mean wall seconds per
+/// round. `telemetry` attaches a recorder, which switches the worker
+/// spans + clock sync + Telemetry frames on end to end.
+fn run_once(n: usize, steps: usize, telemetry: bool) -> f64 {
+    let d = 16usize;
+    let chunk = 8usize;
+    let mut cluster = ClusterConfig::new(n, 1, 42);
+    cluster.byzantine_ids = vec![];
+    cluster.f = 0;
+    cluster.transport = "net".into();
+    let (peers, workers) = spawn_worker_threads(n);
+    cluster.peers = peers;
+    let cfg = ExperimentConfig {
+        name: format!("bench-telemetry-{n}-{telemetry}"),
+        cluster,
+        policy: PolicyKind::None,
+        attack: AttackConfig::default(),
+        adversary: None,
+        train: TrainConfig { steps, lr: 0.1, ..Default::default() },
+    };
+    let ds = Arc::new(LinRegDataset::generate(4096, d, 0.0, 42));
+    let spec = ModelSpec::LinReg { d, batch: chunk };
+    let engine: Arc<dyn GradientComputer> = Arc::new(NativeEngine::new(spec.clone()));
+    let theta0 = spec.init_theta(42);
+    let opts = MasterOptions {
+        net_model: Some(spec.clone()),
+        recorder: telemetry.then(Recorder::new),
+        ..Default::default()
+    };
+    let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
+    let t0 = std::time::Instant::now();
+    let out = master.run().expect("run");
+    let dt = t0.elapsed().as_secs_f64();
+    black_box(out);
+    for h in workers {
+        h.join().expect("worker thread");
+    }
+    dt / steps as f64
+}
+
+fn best_of(n: usize, steps: usize, telemetry: bool) -> f64 {
+    (0..TRIALS)
+        .map(|_| run_once(n, steps, telemetry))
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn main() {
+    println!("#### worker telemetry overhead on the loopback net transport (linreg d=16, chunk=8)");
+    let steps = 40usize;
+    let mut table = Table::new(&["n", "off us/round", "on us/round", "on/off", "overhead %"]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut gate_overhead = None;
+    for &n in &[8usize, 32] {
+        let off_s = best_of(n, steps, false);
+        let on_s = best_of(n, steps, true);
+        let ratio = on_s / off_s.max(1e-12);
+        let overhead_pct = (ratio - 1.0) * 100.0;
+        if n == 32 {
+            gate_overhead = Some(overhead_pct);
+        }
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", off_s * 1e6),
+            format!("{:.1}", on_s * 1e6),
+            format!("{ratio:.3}x"),
+            format!("{overhead_pct:.2}"),
+        ]);
+        let mut obj = BTreeMap::new();
+        obj.insert("n".to_string(), Json::Num(n as f64));
+        obj.insert("off_us_per_round".to_string(), Json::Num(off_s * 1e6));
+        obj.insert("on_us_per_round".to_string(), Json::Num(on_s * 1e6));
+        obj.insert("on_over_off".to_string(), Json::Num(ratio));
+        obj.insert("overhead_pct".to_string(), Json::Num(overhead_pct));
+        rows.push(Json::Obj(obj));
+    }
+    table.print("telemetry sweep (wall time per round, best of 3 runs per mode)");
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("net_telemetry_overhead".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(
+            "linreg d=16 chunk=8 policy=none fault-free steps=40 \
+             net=loopback-tcp-worker-threads, telemetry off (no recorder) vs on \
+             (recorder attached), best of 3"
+                .to_string(),
+        ),
+    );
+    doc.insert("gate".to_string(), Json::Str("overhead_pct < 5 at n=32".to_string()));
+    doc.insert("results".to_string(), Json::Arr(rows));
+    let json = Json::Obj(doc).to_string();
+    match std::fs::write("BENCH_telemetry.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_telemetry.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_telemetry.json: {e}"),
+    }
+
+    // acceptance gate: the control plane must stay under 5% of the
+    // round time at the big end of the sweep
+    let overhead = gate_overhead.expect("n=32 row");
+    assert!(
+        overhead < 5.0,
+        "telemetry overhead {overhead:.2}% at n=32 breaches the 5% budget"
+    );
+    println!("telemetry overhead gate passed: {overhead:.2}% < 5% at n=32");
+}

@@ -82,6 +82,9 @@ pub struct MasterOptions {
     /// (their hello carries it so they build identical engines).
     /// Required when `cfg.cluster.transport` is net; ignored otherwise.
     pub net_model: Option<crate::grad::ModelSpec>,
+    /// Live `/status` scoreboard (`--metrics-listen`): the master
+    /// posts one update per finished round. `None` costs nothing.
+    pub status: Option<Arc<crate::trace::http::StatusBoard>>,
 }
 
 impl Default for MasterOptions {
@@ -97,6 +100,7 @@ impl Default for MasterOptions {
             sim: super::transport::SimConfig::default(),
             recorder: None,
             net_model: None,
+            status: None,
         }
     }
 }
@@ -232,6 +236,9 @@ impl Master {
                     None => None,
                 };
                 net_cfg.auth = cfg.cluster.auth_key.as_deref().map(AuthKey::from_passphrase);
+                // worker-side spans + clock sync only pay for themselves
+                // when a recorder will consume them
+                net_cfg.telemetry = opts.recorder.is_some();
                 Box::new(NetTransport::connect(net_cfg)?)
             }
         };
@@ -427,6 +434,9 @@ impl Master {
                 } else {
                     self.iteration(t, &mut events)?
                 };
+                if let Some(board) = &self.opts.status {
+                    board.on_round(&rec, &events);
+                }
                 metrics.push(rec);
             }
         }
@@ -513,6 +523,9 @@ impl Master {
             // retire round t: audit, vote, eliminate, exact update
             let rec = self.apply_finished_round(t, &theta_t, start_wall_ns, events)?;
             let caught_liar = rec.identified > 0;
+            if let Some(board) = &self.opts.status {
+                board.on_round(&rec, events);
+            }
             metrics.push(rec);
 
             // ordered θ application: reissue t+1 on the exact θ iff

@@ -1042,6 +1042,18 @@ impl ProtocolCore {
             self.round.bytes,
         );
         if let Some(rec) = &self.recorder {
+            // worker-side telemetry (telemetry-enabled net transport
+            // only): clock-remapped remote spans become worker-process
+            // rows in the trace, and the per-link health snapshot
+            // refreshes the worker-labeled metric families
+            let spans = self.transport.drain_remote_spans();
+            if !spans.is_empty() {
+                rec.remote_spans(spans);
+            }
+            let links = self.transport.link_stats();
+            if !links.is_empty() {
+                rec.link_stats(links);
+            }
             rec.round_finished(t, start_ns, now, round_ns, bytes_round);
         }
         Ok(RoundOutcome {

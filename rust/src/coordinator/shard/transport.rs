@@ -198,6 +198,7 @@ fn build_inner(
             net_cfg.compressor = cfg.compressor.clone();
             net_cfg.chaos = cfg.chaos;
             net_cfg.auth = cfg.auth;
+            net_cfg.telemetry = cfg.recorder.is_some();
             Box::new(NetTransport::connect(net_cfg)?)
         }
     })

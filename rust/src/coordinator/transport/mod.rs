@@ -182,6 +182,72 @@ pub trait Transport {
     fn drain_reconnects(&mut self) -> Vec<(u64, WorkerId)> {
         Vec::new()
     }
+
+    /// Drain worker-side telemetry spans accumulated since the last
+    /// drain, already remapped onto *this transport's* clock via the
+    /// per-link offset estimate. Worker ids are **local**; the caller
+    /// applies its global offset. Only a telemetry-enabled net
+    /// transport ever yields any.
+    fn drain_remote_spans(&mut self) -> Vec<RemoteSpan> {
+        Vec::new()
+    }
+
+    /// Per-link health snapshot (RTT/offset estimates, reconnect and
+    /// resend counters, worker-reported conduct counters). Worker ids
+    /// are local. Empty for in-process transports.
+    fn link_stats(&self) -> Vec<LinkStats> {
+        Vec::new()
+    }
+}
+
+/// One worker-side span shipped over a telemetry-enabled net link (see
+/// [`Transport::drain_remote_spans`]), with `start_ns`/`end_ns`
+/// already remapped onto the master transport clock. `kind` is one of
+/// the `net::frame::SPAN_*` constants (compute / decode / encode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RemoteSpan {
+    /// Local worker id (caller remaps to global).
+    pub worker: WorkerId,
+    /// `net::frame::SPAN_COMPUTE` / `SPAN_DECODE` / `SPAN_ENCODE`.
+    pub kind: u8,
+    pub iter: u64,
+    pub wave: u64,
+    pub chunk: u64,
+    /// Master-transport-clock ns (clock-offset remapped).
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// One link's live health snapshot (see [`Transport::link_stats`]).
+/// Counter fields are cumulative since transport construction;
+/// `rtt_ns`/`offset_ns` are the current EWMA estimates (0 until the
+/// first handshake sample).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    /// Local worker id (caller remaps to global).
+    pub worker: WorkerId,
+    /// EWMA link round-trip estimate, ns.
+    pub rtt_ns: u64,
+    /// Estimated worker-clock minus master-clock, ns (NTP midpoint,
+    /// EWMA-refined on every telemetry batch).
+    pub offset_ns: i64,
+    /// Sessions re-established on this link.
+    pub reconnects: u64,
+    /// Master-side request resends (reconnect replays + chaos
+    /// resend-on-timeout).
+    pub resends: u64,
+    /// Worker-reported: frames refused for a bad MAC.
+    pub auth_rejects: u64,
+    /// Worker-reported: requests handled (process lifetime).
+    pub requests: u64,
+    /// Worker-reported: duplicate requests observed (master resends).
+    pub dup_requests: u64,
+    /// Worker-reported: undecodable frames (chaos corruption).
+    pub chaos_hits: u64,
+    /// Worker-reported: span-queue high-water mark in the last batch.
+    pub queue_depth: u64,
+    /// Spans dropped to keep buffers bounded (worker + master side).
+    pub dropped_spans: u64,
 }
 
 /// Cumulative socket counters for a byte-moving transport (see

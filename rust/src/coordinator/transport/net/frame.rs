@@ -47,6 +47,7 @@ const TAG_HELLO_ACK: u8 = 2;
 const TAG_REQUEST: u8 = 3;
 const TAG_RESPONSE: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+const TAG_TELEMETRY: u8 = 6;
 
 // ------------------------------------------------------------- auth
 
@@ -156,6 +157,68 @@ pub struct Hello {
     pub compressor: Option<String>,
     /// Model the worker instantiates its gradient engine from.
     pub model: ModelSpec,
+    /// Master asks the worker to run its local recorder and ship
+    /// [`TelemetryBatch`] frames. Encoded as a trailing byte only when
+    /// set, so a telemetry-off Hello is bit-identical to the PR 8/9
+    /// wire and a PR 10 worker still accepts an old master's Hello.
+    pub telemetry: bool,
+}
+
+/// One timed interval on the *worker's* monotonic clock, shipped in a
+/// [`TelemetryBatch`]. `kind` selects the taxonomy row (see
+/// docs/TRACING.md): 0 = per-chunk gradient compute, 1 = request frame
+/// decode, 2 = response frame encode.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetrySpan {
+    pub kind: u8,
+    /// Request sequence number the span belongs to.
+    pub seq: u64,
+    pub iter: u64,
+    pub wave: u64,
+    /// Chunk id for compute spans (0 for decode/encode spans).
+    pub chunk: u64,
+    /// Span bounds in ns on the worker's session clock.
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// Span kind tags for [`TelemetrySpan::kind`].
+pub const SPAN_COMPUTE: u8 = 0;
+pub const SPAN_DECODE: u8 = 1;
+pub const SPAN_ENCODE: u8 = 2;
+
+/// Worker → master telemetry (one bounded batch per handled request,
+/// only when the session's [`Hello`] asked for it). Everything is on
+/// the worker's clock; the master's supervisor remaps spans onto its
+/// own transport clock with the per-link offset estimate.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetryBatch {
+    /// Transport-local worker id (same namespace as `NetResponse`).
+    pub worker: u64,
+    /// `(seq, recv_ns, send_ns)` per request covered by this batch:
+    /// when the request frame finished arriving and when its response
+    /// was handed to the socket — the NTP t1/t2 pair the master's
+    /// offset EWMA feeds on.
+    pub req_clock: Vec<(u64, u64, u64)>,
+    /// Timed intervals (bounded; see `dropped_spans`).
+    pub spans: Vec<TelemetrySpan>,
+    /// Requests handled, cumulative over the worker *process* (the
+    /// count rides across reconnects — exactly what makes a flapping
+    /// link's history legible to the master).
+    pub requests: u64,
+    /// Cumulative duplicate requests observed (a seq already handled —
+    /// the receive side of the master's resend-after-reconnect path).
+    pub dup_requests: u64,
+    /// Cumulative frames refused by the MAC check (pre-handshake
+    /// forgeries included).
+    pub auth_rejects: u64,
+    /// Cumulative undecodable/torn frames survived (chaos hits that
+    /// were not clean MAC rejects).
+    pub chaos_hits: u64,
+    /// Telemetry span-buffer high-water mark since the last batch.
+    pub queue_depth: u64,
+    /// Spans dropped because the per-batch bound was hit.
+    pub dropped_spans: u64,
 }
 
 /// One wave's work for one worker (master → worker).
@@ -206,10 +269,17 @@ pub struct NetResponse {
 #[derive(Clone, Debug)]
 pub enum Frame {
     Hello(Hello),
-    HelloAck { global_id: u64 },
+    /// Worker's session accept. `clock_ns` is the worker's telemetry
+    /// clock at ack time — present only when the Hello asked for
+    /// telemetry (trailing field, so the legacy ack is byte-identical)
+    /// — and seeds the master's per-link clock-offset estimate.
+    HelloAck { global_id: u64, clock_ns: Option<u64> },
     Request(NetRequest),
     Response(NetResponse),
     Shutdown,
+    /// Worker-side observability batch (never sent unless the session
+    /// Hello opted in, so a telemetry-off wire carries tags 1–5 only).
+    Telemetry(TelemetryBatch),
 }
 
 // ---------------------------------------------------------------- enc
@@ -524,11 +594,20 @@ impl Frame {
                 enc_opt(&mut e, &h.byzantine, enc_attack);
                 enc_opt(&mut e, &h.compressor, |e, s| e.str(s));
                 enc_model(&mut e, &h.model);
+                // trailing extension byte: absent = telemetry off, so
+                // the telemetry-off Hello stays bit-identical to PR 8/9
+                if h.telemetry {
+                    e.u8(1);
+                }
                 e.buf
             }
-            Frame::HelloAck { global_id } => {
+            Frame::HelloAck { global_id, clock_ns } => {
                 let mut e = Enc::new(TAG_HELLO_ACK);
                 e.u64(*global_id);
+                // trailing extension, mirror of Hello::telemetry
+                if let Some(ns) = clock_ns {
+                    e.u64(*ns);
+                }
                 e.buf
             }
             Frame::Request(r) => {
@@ -572,6 +651,33 @@ impl Frame {
                 e.buf
             }
             Frame::Shutdown => Enc::new(TAG_SHUTDOWN).buf,
+            Frame::Telemetry(t) => {
+                let mut e = Enc::new(TAG_TELEMETRY);
+                e.u64(t.worker);
+                e.u64(t.requests);
+                e.u64(t.dup_requests);
+                e.u64(t.auth_rejects);
+                e.u64(t.chaos_hits);
+                e.u64(t.queue_depth);
+                e.u64(t.dropped_spans);
+                e.u32(t.req_clock.len() as u32);
+                for (seq, recv_ns, send_ns) in &t.req_clock {
+                    e.u64(*seq);
+                    e.u64(*recv_ns);
+                    e.u64(*send_ns);
+                }
+                e.u32(t.spans.len() as u32);
+                for s in &t.spans {
+                    e.u8(s.kind);
+                    e.u64(s.seq);
+                    e.u64(s.iter);
+                    e.u64(s.wave);
+                    e.u64(s.chunk);
+                    e.u64(s.start_ns);
+                    e.u64(s.end_ns);
+                }
+                e.buf
+            }
         }
     }
 
@@ -587,8 +693,12 @@ impl Frame {
                 byzantine: dec_opt(&mut d, dec_attack)?,
                 compressor: dec_opt(&mut d, |d| d.string())?,
                 model: dec_model(&mut d)?,
+                telemetry: if d.b.is_empty() { false } else { d.u8()? != 0 },
             }),
-            TAG_HELLO_ACK => Frame::HelloAck { global_id: d.u64()? },
+            TAG_HELLO_ACK => Frame::HelloAck {
+                global_id: d.u64()?,
+                clock_ns: if d.b.is_empty() { None } else { Some(d.u64()?) },
+            },
             TAG_REQUEST => {
                 let seq = d.u64()?;
                 let iter = d.u64()?;
@@ -630,6 +740,44 @@ impl Frame {
                 Frame::Response(NetResponse { seq, worker, iter, phase, wave, error, symbols })
             }
             TAG_SHUTDOWN => Frame::Shutdown,
+            TAG_TELEMETRY => {
+                let worker = d.u64()?;
+                let requests = d.u64()?;
+                let dup_requests = d.u64()?;
+                let auth_rejects = d.u64()?;
+                let chaos_hits = d.u64()?;
+                let queue_depth = d.u64()?;
+                let dropped_spans = d.u64()?;
+                let nclk = d.count(24)?; // seq + recv_ns + send_ns
+                let mut req_clock = Vec::with_capacity(nclk);
+                for _ in 0..nclk {
+                    req_clock.push((d.u64()?, d.u64()?, d.u64()?));
+                }
+                let nsp = d.count(49)?; // kind + 6 × u64
+                let mut spans = Vec::with_capacity(nsp);
+                for _ in 0..nsp {
+                    spans.push(TelemetrySpan {
+                        kind: d.u8()?,
+                        seq: d.u64()?,
+                        iter: d.u64()?,
+                        wave: d.u64()?,
+                        chunk: d.u64()?,
+                        start_ns: d.u64()?,
+                        end_ns: d.u64()?,
+                    });
+                }
+                Frame::Telemetry(TelemetryBatch {
+                    worker,
+                    req_clock,
+                    spans,
+                    requests,
+                    dup_requests,
+                    auth_rejects,
+                    chaos_hits,
+                    queue_depth,
+                    dropped_spans,
+                })
+            }
             other => anyhow::bail!("unknown frame tag {other}"),
         };
         d.finish()?;
@@ -720,6 +868,16 @@ pub fn decode_body_auth(body: &[u8], auth: Option<&AuthKey>) -> Result<Frame> {
     }
 }
 
+/// True iff a raw (possibly MAC-trailed) body is a telemetry frame.
+/// The tag is always the body's first byte (the MAC is a trailer), so
+/// this needs no decode; the net reader uses it to route telemetry —
+/// control plane, like the handshake — around inbound chaos so an
+/// opted-in run draws exactly the chaos coins a telemetry-off run
+/// draws.
+pub fn body_is_telemetry(body: &[u8]) -> bool {
+    body.first() == Some(&TAG_TELEMETRY)
+}
+
 /// Read one frame under an optional auth key (see [`read_raw_body`]
 /// for the EOF contract). Returns the frame plus its wire size.
 pub fn read_frame_auth(r: &mut impl Read, auth: Option<&AuthKey>) -> Result<Option<(Frame, u64)>> {
@@ -773,6 +931,7 @@ mod tests {
                 }),
                 compressor: Some("topk:16".into()),
                 model: ModelSpec::Mlp { in_dim: 16, hidden: 8, classes: 4, batch: 32 },
+                telemetry: false,
             }),
             Frame::Hello(Hello {
                 local_id: 0,
@@ -782,8 +941,50 @@ mod tests {
                 byzantine: None,
                 compressor: None,
                 model: ModelSpec::LinReg { d: 8, batch: 64 },
+                telemetry: true,
             }),
-            Frame::HelloAck { global_id: 11 },
+            Frame::HelloAck { global_id: 11, clock_ns: None },
+            Frame::HelloAck { global_id: 11, clock_ns: Some(123_456_789) },
+            Frame::Telemetry(TelemetryBatch {
+                worker: 3,
+                req_clock: vec![(9, 1_000, 5_000), (10, 9_000, 12_345)],
+                spans: vec![
+                    TelemetrySpan {
+                        kind: SPAN_DECODE,
+                        seq: 9,
+                        iter: 4,
+                        wave: 77,
+                        chunk: 0,
+                        start_ns: 1_000,
+                        end_ns: 1_200,
+                    },
+                    TelemetrySpan {
+                        kind: SPAN_COMPUTE,
+                        seq: 9,
+                        iter: 4,
+                        wave: 77,
+                        chunk: 2,
+                        start_ns: 1_300,
+                        end_ns: 4_000,
+                    },
+                    TelemetrySpan {
+                        kind: SPAN_ENCODE,
+                        seq: 9,
+                        iter: 4,
+                        wave: 77,
+                        chunk: 0,
+                        start_ns: 4_100,
+                        end_ns: 4_900,
+                    },
+                ],
+                requests: 12,
+                dup_requests: 1,
+                auth_rejects: 2,
+                chaos_hits: 3,
+                queue_depth: 4,
+                dropped_spans: 0,
+            }),
+            Frame::Telemetry(TelemetryBatch { worker: 0, ..Default::default() }),
             Frame::Request(NetRequest {
                 seq: 9,
                 iter: 4,
@@ -888,7 +1089,7 @@ mod tests {
     #[test]
     fn mid_frame_eof_is_an_error() {
         let mut buf = Vec::new();
-        write_frame(&mut buf, &Frame::HelloAck { global_id: 5 }).unwrap();
+        write_frame(&mut buf, &Frame::HelloAck { global_id: 5, clock_ns: None }).unwrap();
         // every strict prefix (incl. a torn length prefix) must error
         for cut in 1..buf.len() {
             let r = read_frame(&mut Cursor::new(&buf[..cut]));
@@ -1044,6 +1245,41 @@ mod tests {
             assert_eq!(legacy[..4], (body.len() as u32).to_le_bytes()[..]);
             assert_eq!(legacy[4..], body[..]);
         }
+    }
+
+    #[test]
+    fn telemetry_extensions_are_trailing_and_legacy_compatible() {
+        // telemetry-off Hello/HelloAck must be byte-identical to the
+        // PR 8/9 encoding: the extension is exactly one trailing field
+        let mut on = Hello {
+            local_id: 3,
+            global_id: 11,
+            seed: 7,
+            latency_us: 250,
+            byzantine: None,
+            compressor: None,
+            model: ModelSpec::LinReg { d: 8, batch: 64 },
+            telemetry: true,
+        };
+        let on_bytes = Frame::Hello(on.clone()).encode_body();
+        on.telemetry = false;
+        let off_bytes = Frame::Hello(on.clone()).encode_body();
+        assert_eq!(on_bytes[..on_bytes.len() - 1], off_bytes[..]);
+        assert_eq!(on_bytes.len(), off_bytes.len() + 1);
+        // a legacy (extension-less) Hello body decodes as telemetry off
+        match Frame::decode_body(&off_bytes).unwrap() {
+            Frame::Hello(h) => assert!(!h.telemetry),
+            other => panic!("wrong frame {other:?}"),
+        }
+        let acked = Frame::HelloAck { global_id: 4, clock_ns: Some(99) }.encode_body();
+        let legacy = Frame::HelloAck { global_id: 4, clock_ns: None }.encode_body();
+        assert_eq!(acked[..legacy.len()], legacy[..]);
+        match Frame::decode_body(&legacy).unwrap() {
+            Frame::HelloAck { global_id: 4, clock_ns: None } => {}
+            other => panic!("wrong frame {other:?}"),
+        }
+        // partial trailing fields are torn frames, not silently padded
+        assert!(Frame::decode_body(&acked[..acked.len() - 3]).is_err());
     }
 
     #[test]

@@ -59,7 +59,7 @@ pub mod server;
 use std::collections::BTreeMap;
 use std::io::{BufReader, Write};
 use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -68,15 +68,15 @@ use std::time::{Duration, Instant};
 use super::super::compress::Compressor;
 use super::super::worker::{Response, Symbol};
 use super::super::WorkerId;
-use super::{Delivery, NetStats, TaskBundle, Transport};
+use super::{Delivery, LinkStats, NetStats, RemoteSpan, TaskBundle, Transport};
 use crate::config::AttackConfig;
 use crate::grad::ModelSpec;
 use crate::Result;
 
 use chaos::{ChaosLink, ChaosSpec, SendOp, CHANNEL_MASTER_RECV, CHANNEL_MASTER_SEND};
 use frame::{
-    decode_body_auth, encode_frame, read_frame_auth, read_raw_body, write_frame_auth, AuthKey,
-    Frame, Hello, NetGrad, NetRequest, NetResponse,
+    body_is_telemetry, decode_body_auth, encode_frame, read_frame_auth, read_raw_body,
+    write_frame_auth, AuthKey, Frame, Hello, NetGrad, NetRequest, NetResponse, TelemetryBatch,
 };
 
 /// Injectable sleep, so backoff/chaos timing is observable in tests
@@ -129,6 +129,10 @@ pub struct NetConfig {
     pub max_resends: u32,
     /// Injectable sleep for backoff/chaos delays (None = real sleep).
     pub sleep: Option<SleepFn>,
+    /// Ask workers for telemetry (worker-side spans + clock samples,
+    /// shipped back in `Telemetry` frames). Off = the PR 8/9 wire,
+    /// byte-identical.
+    pub telemetry: bool,
 }
 
 impl NetConfig {
@@ -150,6 +154,7 @@ impl NetConfig {
             resend_ms: 400,
             max_resends: 10,
             sleep: None,
+            telemetry: false,
         }
     }
 }
@@ -206,6 +211,177 @@ struct Counters {
     reconnects: AtomicU64,
 }
 
+/// Remote spans buffered per link between `drain_remote_spans` calls
+/// are bounded; excess is dropped and counted, never accumulated.
+const MAX_LINK_SPANS: usize = 4096;
+
+/// NTP-style send-stamp map entries are pruned beyond this many
+/// outstanding seqs (a leak is only possible via chaos drops).
+const MAX_CLOCK_STAMPS: usize = 8192;
+
+/// Per-link telemetry state shared between the supervisor (send
+/// stamps, resend counts), the session reader (batch ingestion, clock
+/// refinement) and the transport (drain/snapshot). All master-side.
+///
+/// Clock model: the worker runs its own monotonic clock; `offset_ns`
+/// estimates `worker_clock - master_clock`. The handshake seeds it at
+/// the RTT midpoint (the ack's clock sample against the master's
+/// hello-send/ack-recv stamps), and every telemetry batch refines it
+/// with a classic two-sample NTP step over the request's
+/// `(t0 = master send, t1 = worker recv, t2 = worker send,
+/// t3 = master recv)` quadruple, EWMA-smoothed (α = 1/8). Worker span
+/// stamps are remapped as `master_ns = worker_ns - offset` at
+/// ingestion time.
+struct LinkShared {
+    /// Sessions re-established on this link.
+    reconnects: AtomicU64,
+    /// Master-side request resends (reconnect replays + chaos
+    /// resend-on-timeout).
+    resends: AtomicU64,
+    /// True once any clock sample exists (offset/rtt are meaningful).
+    have_clock: AtomicBool,
+    /// EWMA of `worker_clock - master_clock`, ns.
+    offset_ns: AtomicI64,
+    /// EWMA link round-trip, ns.
+    rtt_ns: AtomicU64,
+    // worker-reported cumulative counters (latest batch wins: the
+    // worker ships totals, not deltas)
+    w_requests: AtomicU64,
+    w_dup_requests: AtomicU64,
+    w_auth_rejects: AtomicU64,
+    w_chaos_hits: AtomicU64,
+    w_queue_depth: AtomicU64,
+    w_dropped_spans: AtomicU64,
+    /// Spans dropped master-side to keep the buffer bounded.
+    m_dropped_spans: AtomicU64,
+    /// Master-clock send stamp per outstanding seq (NTP t0).
+    send_ns: Mutex<BTreeMap<u64, u64>>,
+    /// Clock-remapped worker spans awaiting a drain.
+    spans: Mutex<Vec<RemoteSpan>>,
+}
+
+impl LinkShared {
+    fn new() -> LinkShared {
+        LinkShared {
+            reconnects: AtomicU64::new(0),
+            resends: AtomicU64::new(0),
+            have_clock: AtomicBool::new(false),
+            offset_ns: AtomicI64::new(0),
+            rtt_ns: AtomicU64::new(0),
+            w_requests: AtomicU64::new(0),
+            w_dup_requests: AtomicU64::new(0),
+            w_auth_rejects: AtomicU64::new(0),
+            w_chaos_hits: AtomicU64::new(0),
+            w_queue_depth: AtomicU64::new(0),
+            w_dropped_spans: AtomicU64::new(0),
+            m_dropped_spans: AtomicU64::new(0),
+            send_ns: Mutex::new(BTreeMap::new()),
+            spans: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Record a request's master-clock send stamp (overwritten on
+    /// resend: the latest transmit is the one the response answers).
+    fn note_send(&self, seq: u64, master_ns: u64) {
+        let mut m = self.send_ns.lock().expect("send_ns lock");
+        m.insert(seq, master_ns);
+        if m.len() > MAX_CLOCK_STAMPS {
+            if let Some(&cut) = m.keys().nth(MAX_CLOCK_STAMPS / 2) {
+                *m = m.split_off(&cut);
+            }
+        }
+    }
+
+    /// Seed the clock estimate from the handshake: the worker stamped
+    /// its ack at `worker_clock`, between the master's hello-send `t0`
+    /// and ack-recv `t3` — assume the RTT midpoint.
+    fn init_clock(&self, worker_clock: u64, t0: u64, t3: u64) {
+        let mid = (t0 / 2) + (t3 / 2);
+        self.offset_ns
+            .store((worker_clock as i128 - mid as i128) as i64, Ordering::Relaxed);
+        self.rtt_ns.store(t3.saturating_sub(t0), Ordering::Relaxed);
+        self.have_clock.store(true, Ordering::Release);
+    }
+
+    /// One NTP refinement step from a request's clock quadruple.
+    fn refine_clock(&self, t0: u64, t1_w: u64, t2_w: u64, t3: u64) {
+        let off = ((t1_w as i128 - t0 as i128) + (t2_w as i128 - t3 as i128)) / 2;
+        let rtt = t3.saturating_sub(t0).saturating_sub(t2_w.saturating_sub(t1_w));
+        if !self.have_clock.load(Ordering::Acquire) {
+            self.offset_ns.store(off as i64, Ordering::Relaxed);
+            self.rtt_ns.store(rtt, Ordering::Relaxed);
+            self.have_clock.store(true, Ordering::Release);
+            return;
+        }
+        let old = self.offset_ns.load(Ordering::Relaxed) as i128;
+        self.offset_ns.store((old + (off - old) / 8) as i64, Ordering::Relaxed);
+        let old_rtt = self.rtt_ns.load(Ordering::Relaxed) as i128;
+        self.rtt_ns
+            .store((old_rtt + (rtt as i128 - old_rtt) / 8) as u64, Ordering::Relaxed);
+    }
+
+    /// Worker-clock ns → master-clock ns via the current offset
+    /// estimate (clamped at the transport's birth).
+    fn to_master_ns(&self, worker_ns: u64) -> u64 {
+        let off = self.offset_ns.load(Ordering::Relaxed) as i128;
+        (worker_ns as i128 - off).max(0) as u64
+    }
+
+    /// Fold one telemetry batch in: refine the clock from its request
+    /// stamps (against our recorded sends and its arrival time), store
+    /// the worker's cumulative counters, and buffer its spans remapped
+    /// onto the master clock.
+    fn ingest_batch(&self, batch: TelemetryBatch, local: WorkerId, arrival_ns: u64) {
+        {
+            let mut m = self.send_ns.lock().expect("send_ns lock");
+            for (seq, t1_w, t2_w) in &batch.req_clock {
+                if let Some(t0) = m.remove(seq) {
+                    self.refine_clock(t0, *t1_w, *t2_w, arrival_ns);
+                }
+            }
+        }
+        self.w_requests.store(batch.requests, Ordering::Relaxed);
+        self.w_dup_requests.store(batch.dup_requests, Ordering::Relaxed);
+        self.w_auth_rejects.store(batch.auth_rejects, Ordering::Relaxed);
+        self.w_chaos_hits.store(batch.chaos_hits, Ordering::Relaxed);
+        self.w_queue_depth.store(batch.queue_depth, Ordering::Relaxed);
+        self.w_dropped_spans.store(batch.dropped_spans, Ordering::Relaxed);
+        let mut buf = self.spans.lock().expect("spans lock");
+        for s in batch.spans {
+            if buf.len() >= MAX_LINK_SPANS {
+                self.m_dropped_spans.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            buf.push(RemoteSpan {
+                worker: local,
+                kind: s.kind,
+                iter: s.iter,
+                wave: s.wave,
+                chunk: s.chunk,
+                start_ns: self.to_master_ns(s.start_ns),
+                end_ns: self.to_master_ns(s.end_ns),
+            });
+        }
+    }
+
+    fn snapshot(&self, local: WorkerId) -> LinkStats {
+        LinkStats {
+            worker: local,
+            rtt_ns: self.rtt_ns.load(Ordering::Relaxed),
+            offset_ns: self.offset_ns.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            resends: self.resends.load(Ordering::Relaxed),
+            auth_rejects: self.w_auth_rejects.load(Ordering::Relaxed),
+            requests: self.w_requests.load(Ordering::Relaxed),
+            dup_requests: self.w_dup_requests.load(Ordering::Relaxed),
+            chaos_hits: self.w_chaos_hits.load(Ordering::Relaxed),
+            queue_depth: self.w_queue_depth.load(Ordering::Relaxed),
+            dropped_spans: self.w_dropped_spans.load(Ordering::Relaxed)
+                + self.m_dropped_spans.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Supervisor/reader → master events.
 enum NetEvent {
     Resp(NetResponse),
@@ -240,6 +416,8 @@ struct SupervisorCtx {
     resend_ms: u64,
     max_resends: u32,
     sleep: SleepFn,
+    /// This link's telemetry/clock state (shared with the transport).
+    shared: Arc<LinkShared>,
 }
 
 /// TCP-backed [`Transport`]: one connection actor per worker.
@@ -260,6 +438,8 @@ pub struct NetTransport {
     next_seq: u64,
     reconnect_log: Vec<(u64, WorkerId)>,
     counters: Arc<Counters>,
+    /// Per-link telemetry/clock state, indexed by local worker id.
+    links: Vec<Arc<LinkShared>>,
     origin: Instant,
 }
 
@@ -281,6 +461,7 @@ impl NetTransport {
         let sleep: SleepFn = cfg.sleep.clone().unwrap_or_else(|| Arc::new(std::thread::sleep));
         let mut cmd_txs = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
+        let links: Vec<Arc<LinkShared>> = (0..n).map(|_| Arc::new(LinkShared::new())).collect();
         for (i, addr) in cfg.peers.iter().enumerate() {
             let global = cfg.lo + i;
             let byzantine = if cfg.byzantine_ids.contains(&global) {
@@ -296,6 +477,7 @@ impl NetTransport {
                 byzantine,
                 compressor: cfg.compressor.as_ref().map(|c| c.spec()),
                 model: cfg.model.clone(),
+                telemetry: cfg.telemetry,
             };
             let (cmd_tx, cmd_rx) = sync_channel::<NetRequest>(cfg.outbound_depth.max(1));
             cmd_txs.push(Some(cmd_tx));
@@ -316,6 +498,7 @@ impl NetTransport {
                 resend_ms: cfg.resend_ms.max(1),
                 max_resends: cfg.max_resends.max(1),
                 sleep: sleep.clone(),
+                shared: links[i].clone(),
             };
             handles.push(
                 std::thread::Builder::new()
@@ -337,6 +520,7 @@ impl NetTransport {
             next_seq: 0,
             reconnect_log: Vec::new(),
             counters,
+            links,
             origin,
         })
     }
@@ -568,6 +752,18 @@ impl Transport for NetTransport {
     fn drain_reconnects(&mut self) -> Vec<(u64, WorkerId)> {
         std::mem::take(&mut self.reconnect_log)
     }
+
+    fn drain_remote_spans(&mut self) -> Vec<RemoteSpan> {
+        let mut out = Vec::new();
+        for link in &self.links {
+            out.append(&mut link.spans.lock().expect("spans lock"));
+        }
+        out
+    }
+
+    fn link_stats(&self) -> Vec<LinkStats> {
+        self.links.iter().enumerate().map(|(i, l)| l.snapshot(i)).collect()
+    }
 }
 
 impl Drop for NetTransport {
@@ -720,6 +916,10 @@ fn run_session(
     // (the partition schedule already gates connects), so a chaotic
     // run exercises the steady state instead of never booting; the
     // MAC is still on — an unauthenticated worker refuses us here.
+    // With telemetry on, the hello-send/ack-recv stamps bracket the
+    // worker's ack clock sample: the seed of this link's offset
+    // estimate (NTP midpoint assumption).
+    let t0 = ctx.origin.elapsed().as_nanos() as u64;
     match write_frame_auth(&mut stream, &Frame::Hello(ctx.hello.clone()), ctx.auth.as_ref()) {
         Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
         Err(e) => {
@@ -728,10 +928,14 @@ fn run_session(
         }
     };
     match read_frame_auth(&mut stream, ctx.auth.as_ref()) {
-        Ok(Some((Frame::HelloAck { global_id }, nb)))
+        Ok(Some((Frame::HelloAck { global_id, clock_ns }, nb)))
             if global_id == ctx.hello.global_id =>
         {
             ctx.counters.bytes_rx.fetch_add(nb, Ordering::Relaxed);
+            if let Some(worker_clock) = clock_ns {
+                let t3 = ctx.origin.elapsed().as_nanos() as u64;
+                ctx.shared.init_clock(worker_clock, t0, t3);
+            }
         }
         Ok(_) | Err(_) => {
             log::warn!("worker {}: bad hello ack", ctx.worker);
@@ -742,6 +946,7 @@ fn run_session(
     budget.on_success();
     if !first {
         ctx.counters.reconnects.fetch_add(1, Ordering::Relaxed);
+        ctx.shared.reconnects.fetch_add(1, Ordering::Relaxed);
         let _ = ctx.events.send(NetEvent::Reconnect { worker: ctx.worker });
     }
     // reader for this session (clears `alive` when the session dies)
@@ -761,10 +966,25 @@ fn run_session(
         let auth = ctx.auth;
         let recv_link = recv_link.clone();
         let worker = ctx.worker;
+        let shared = ctx.shared.clone();
+        let origin = ctx.origin;
+        let telemetry = ctx.hello.telemetry;
         std::thread::Builder::new()
             .name(format!("r3bft-net-read-{worker}"))
             .spawn(move || {
-                run_reader(reader_stream, alive, events, unacked, counters, auth, recv_link)
+                run_reader(ReaderCtx {
+                    stream: reader_stream,
+                    alive,
+                    events,
+                    unacked,
+                    counters,
+                    auth,
+                    recv_link,
+                    shared,
+                    worker,
+                    origin,
+                    telemetry,
+                })
             })
             .expect("spawn net reader");
     }
@@ -782,6 +1002,10 @@ fn run_session(
             Err(_) => return broken(&stream),
         };
         sent_at.insert(seq, Instant::now());
+        ctx.shared.resends.fetch_add(1, Ordering::Relaxed);
+        if ctx.hello.telemetry {
+            ctx.shared.note_send(seq, ctx.origin.elapsed().as_nanos() as u64);
+        }
         match send_wire(&mut stream, send_link.as_deref_mut(), &ctx.sleep, &wire) {
             Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
             Err(_) => return broken(&stream),
@@ -809,6 +1033,9 @@ fn run_session(
                     Err(_) => return broken(&stream),
                 };
                 sent_at.insert(seq, Instant::now());
+                if ctx.hello.telemetry {
+                    ctx.shared.note_send(seq, ctx.origin.elapsed().as_nanos() as u64);
+                }
                 match send_wire(&mut stream, send_link.as_deref_mut(), &ctx.sleep, &wire) {
                     Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
                     Err(_) => return broken(&stream),
@@ -854,6 +1081,10 @@ fn run_session(
                             Err(_) => return broken(&stream),
                         };
                         sent_at.insert(seq, now);
+                        ctx.shared.resends.fetch_add(1, Ordering::Relaxed);
+                        if ctx.hello.telemetry {
+                            ctx.shared.note_send(seq, ctx.origin.elapsed().as_nanos() as u64);
+                        }
                         match send_wire(&mut stream, send_link.as_deref_mut(), &ctx.sleep, &wire) {
                             Ok(nb) => ctx.counters.bytes_tx.fetch_add(nb, Ordering::Relaxed),
                             Err(_) => return broken(&stream),
@@ -877,7 +1108,9 @@ fn run_session(
     }
 }
 
-fn run_reader(
+/// Everything one session reader needs (bundled: the list outgrew a
+/// readable argument spread).
+struct ReaderCtx {
     stream: TcpStream,
     alive: Arc<AtomicBool>,
     events: Sender<NetEvent>,
@@ -885,7 +1118,27 @@ fn run_reader(
     counters: Arc<Counters>,
     auth: Option<AuthKey>,
     recv_link: Option<Arc<Mutex<ChaosLink>>>,
-) {
+    shared: Arc<LinkShared>,
+    worker: WorkerId,
+    /// Transport birth instant (batch arrival stamps — the NTP t3).
+    origin: Instant,
+    telemetry: bool,
+}
+
+fn run_reader(ctx: ReaderCtx) {
+    let ReaderCtx {
+        stream,
+        alive,
+        events,
+        unacked,
+        counters,
+        auth,
+        recv_link,
+        shared,
+        worker,
+        origin,
+        telemetry,
+    } = ctx;
     let mut r = BufReader::new(stream);
     'session: loop {
         // raw body first: inbound chaos operates on the received bytes
@@ -896,7 +1149,13 @@ fn run_reader(
             Ok(None) | Err(_) => break, // EOF or torn frame: session over
         };
         counters.bytes_rx.fetch_add(nb, Ordering::Relaxed);
+        // telemetry frames are control plane, chaos-exempt like the
+        // handshake: routing them around the chaos link keeps the
+        // chaos coin stream identical to a telemetry-off run (a
+        // telemetry-off run never carries the tag, so its stream is
+        // untouched by this branch existing)
         let bodies = match &recv_link {
+            Some(_) if telemetry && body_is_telemetry(&raw) => vec![raw],
             Some(link) => link.lock().expect("chaos link lock").plan_recv(&raw),
             None => vec![raw],
         };
@@ -912,6 +1171,13 @@ fn run_reader(
                     if known && events.send(NetEvent::Resp(resp)).is_err() {
                         break 'session; // master gone
                     }
+                }
+                Ok(Frame::Telemetry(batch)) => {
+                    // folded straight into the link's shared state: no
+                    // event, nothing protocol-visible — telemetry must
+                    // never perturb delivery order
+                    let arrival = origin.elapsed().as_nanos() as u64;
+                    shared.ingest_batch(batch, worker, arrival);
                 }
                 Ok(_) => {
                     log::warn!("net reader: protocol violation (unexpected frame)");

@@ -26,18 +26,37 @@
 //! hello's run seed + global id, [`CHANNEL_WORKER_SEND`]), so both
 //! directions of a link can be made hostile. The handshake ack is
 //! exempt, mirroring the master side.
+//!
+//! ## Worker-side telemetry
+//!
+//! When the hello carries `telemetry = true` the process runs its own
+//! lightweight recorder ([`WorkerTelemetry`]): per-chunk gradient
+//! compute spans, frame decode/encode time, duplicate-request (chaos
+//! resend) observations, MAC-reject and undecodable-frame counts, and
+//! a span-queue high-water mark, all on a monotonic per-process clock.
+//! After every response it ships one bounded
+//! [`TelemetryBatch`](super::frame::TelemetryBatch) frame carrying the
+//! request's `(recv, send)` clock pair — the NTP t1/t2 sample the
+//! master's per-link offset EWMA feeds on. Telemetry frames bypass the
+//! chaos link (control plane, like the handshake) so an opted-in run
+//! draws exactly the chaos coins a telemetry-off run draws — the
+//! bit-identity contract is untouched. With telemetry off the request
+//! path is byte-for-byte the PR 8/9 one.
 
-use std::io::BufReader;
+use std::collections::BTreeSet;
+use std::io::{BufReader, Read};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::super::super::byzantine::ByzantineBehavior;
 use super::super::super::compress;
 use super::super::super::worker::WorkerState;
 use super::chaos::{ChaosLink, ChaosSpec, CHANNEL_WORKER_SEND};
 use super::frame::{
-    encode_frame, read_frame_auth, write_frame_auth, AuthKey, Frame, Hello, NetGrad, NetResponse,
-    NetSymbol,
+    decode_body_auth, encode_frame, read_raw_body, write_frame_auth, AuthKey, Frame, Hello,
+    NetGrad, NetResponse, NetSymbol, TelemetryBatch, TelemetrySpan, SPAN_COMPUTE, SPAN_DECODE,
+    SPAN_ENCODE,
 };
 use super::{send_wire, SleepFn};
 use crate::grad::{GradientComputer, NativeEngine};
@@ -52,6 +71,134 @@ pub struct ServeOptions {
     /// clean wire). Seeded from the master's hello, so the storm is
     /// replayable from the run seed like every other link.
     pub chaos: Option<ChaosSpec>,
+}
+
+/// Spans per [`TelemetryBatch`] are bounded: a request that somehow
+/// accumulates more drops the excess and counts it in `dropped_spans`
+/// instead of growing the frame without limit.
+const MAX_BATCH_SPANS: usize = 128;
+
+/// Handled-seq window for duplicate detection (resends only reach a
+/// bounded distance back; the set is pruned so a long run stays flat).
+const SEEN_SEQ_WINDOW: usize = 8192;
+
+/// The worker process's own recorder: one monotonic clock plus the
+/// counters and span buffer the [`TelemetryBatch`] frames ship.
+/// Counters are process-lifetime cumulative — they survive master
+/// reconnects and are maintained even while no session has asked for
+/// telemetry, so the first opted-in session reports full history.
+struct WorkerTelemetry {
+    /// Clock origin; every span/stamp is ns since this instant.
+    origin: Instant,
+    requests: u64,
+    dup_requests: u64,
+    auth_rejects: u64,
+    chaos_hits: u64,
+    dropped_spans: u64,
+    /// Span-buffer high-water mark since the last flush.
+    queue_high: u64,
+    spans: Vec<TelemetrySpan>,
+    req_clock: Vec<(u64, u64, u64)>,
+    seen: BTreeSet<u64>,
+}
+
+impl WorkerTelemetry {
+    fn new() -> WorkerTelemetry {
+        WorkerTelemetry {
+            origin: Instant::now(),
+            requests: 0,
+            dup_requests: 0,
+            auth_rejects: 0,
+            chaos_hits: 0,
+            dropped_spans: 0,
+            queue_high: 0,
+            spans: Vec::new(),
+            req_clock: Vec::new(),
+            seen: BTreeSet::new(),
+        }
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    fn push_span(&mut self, s: TelemetrySpan) {
+        if self.spans.len() >= MAX_BATCH_SPANS {
+            self.dropped_spans += 1;
+        } else {
+            self.spans.push(s);
+        }
+        self.queue_high = self.queue_high.max(self.spans.len() as u64);
+    }
+
+    /// Count one request; true iff its seq was already handled (a
+    /// master resend — the worker still recomputes and responds, the
+    /// master dedups by seq; this only observes it).
+    fn note_request(&mut self, seq: u64) -> bool {
+        self.requests += 1;
+        let dup = !self.seen.insert(seq);
+        if dup {
+            self.dup_requests += 1;
+        }
+        if self.seen.len() > SEEN_SEQ_WINDOW {
+            if let Some(&cut) = self.seen.iter().nth(SEEN_SEQ_WINDOW / 2) {
+                self.seen = self.seen.split_off(&cut);
+            }
+        }
+        dup
+    }
+
+    /// Classify and count a failed frame decode: a MAC refusal vs any
+    /// other corruption (the chaos layer's bit flips, torn bodies).
+    fn note_decode_error(&mut self, e: &anyhow::Error) {
+        if format!("{e:#}").contains("authentication") {
+            self.auth_rejects += 1;
+            log::warn!("worker: rejected frame with bad MAC (auth_rejects={})", self.auth_rejects);
+        } else {
+            self.chaos_hits += 1;
+            log::warn!("worker: undecodable frame (chaos_hits={}): {e:#}", self.chaos_hits);
+        }
+    }
+
+    /// Drain the pending spans/stamps into one bounded batch.
+    fn flush(&mut self, worker: u64) -> TelemetryBatch {
+        let batch = TelemetryBatch {
+            worker,
+            req_clock: std::mem::take(&mut self.req_clock),
+            spans: std::mem::take(&mut self.spans),
+            requests: self.requests,
+            dup_requests: self.dup_requests,
+            auth_rejects: self.auth_rejects,
+            chaos_hits: self.chaos_hits,
+            queue_depth: self.queue_high,
+            dropped_spans: self.dropped_spans,
+        };
+        self.queue_high = 0;
+        batch
+    }
+}
+
+/// Read one frame, timing the decode separately from the socket wait:
+/// returns `(frame, recv_ns, decoded_ns)` where `recv_ns` stamps the
+/// moment the raw body finished arriving (the NTP t1). Decode failures
+/// are classified into the telemetry counters before propagating.
+fn read_frame_timed(
+    r: &mut impl Read,
+    auth: Option<&AuthKey>,
+    tel: &mut WorkerTelemetry,
+) -> Result<Option<(Frame, u64, u64)>> {
+    let body = match read_raw_body(r)? {
+        None => return Ok(None),
+        Some((body, _)) => body,
+    };
+    let recv_ns = tel.now_ns();
+    match decode_body_auth(&body, auth) {
+        Ok(frame) => Ok(Some((frame, recv_ns, tel.now_ns()))),
+        Err(e) => {
+            tel.note_decode_error(&e);
+            Err(e)
+        }
+    }
 }
 
 enum SessionEnd {
@@ -82,6 +229,7 @@ pub fn serve(listener: TcpListener) -> Result<()> {
 /// listener bound to `127.0.0.1:0` in a spawned thread.
 pub fn serve_with(listener: TcpListener, opts: ServeOptions) -> Result<()> {
     let mut persistent: Option<Persistent> = None;
+    let mut tel = WorkerTelemetry::new();
     for stream in listener.incoming() {
         let stream = match stream {
             Ok(s) => s,
@@ -90,7 +238,7 @@ pub fn serve_with(listener: TcpListener, opts: ServeOptions) -> Result<()> {
                 continue;
             }
         };
-        match serve_session(stream, &mut persistent, &opts) {
+        match serve_session(stream, &mut persistent, &opts, &mut tel) {
             Ok(SessionEnd::Shutdown) => return Ok(()),
             Ok(SessionEnd::Eof) => continue, // master may reconnect
             Err(e) => {
@@ -121,20 +269,29 @@ fn serve_session(
     stream: TcpStream,
     persistent: &mut Option<Persistent>,
     opts: &ServeOptions,
+    tel: &mut WorkerTelemetry,
 ) -> Result<SessionEnd> {
     let _ = stream.set_nodelay(true);
     let mut w = stream.try_clone()?;
     let mut r = BufReader::new(stream);
+    let auth = opts.auth.as_ref();
     // session preamble: Hello (or an immediate Shutdown). With auth
     // on, a forged or unauthenticated hello dies right here — no
     // worker state is built for a master that doesn't share the key.
-    let hello = match read_frame_auth(&mut r, opts.auth.as_ref())? {
+    let hello = match read_frame_timed(&mut r, auth, tel)? {
         None => return Ok(SessionEnd::Eof),
-        Some((Frame::Hello(h), _)) => h,
-        Some((Frame::Shutdown, _)) => return Ok(SessionEnd::Shutdown),
+        Some((Frame::Hello(h), _, _)) => h,
+        Some((Frame::Shutdown, _, _)) => return Ok(SessionEnd::Shutdown),
         Some(_) => anyhow::bail!("session did not start with a hello"),
     };
     let same = persistent.as_ref().map(|p| p.hello == hello).unwrap_or(false);
+    if persistent.is_some() {
+        log::info!(
+            "worker {}: master reconnected ({})",
+            hello.global_id,
+            if same { "state reused" } else { "state rebuilt" }
+        );
+    }
     if !same {
         let chaos = opts
             .chaos
@@ -144,15 +301,41 @@ fn serve_session(
             Some(Persistent { state: build_state(&hello)?, hello: hello.clone(), chaos });
     }
     // the ack is exempt from chaos (handshakes must succeed for the
-    // steady state to be exercised at all), but carries a MAC
-    write_frame_auth(&mut w, &Frame::HelloAck { global_id: hello.global_id }, opts.auth.as_ref())?;
+    // steady state to be exercised at all), but carries a MAC; with
+    // telemetry on it also samples the worker clock, seeding the
+    // master's per-link offset estimate at the handshake RTT midpoint
+    let ack = Frame::HelloAck {
+        global_id: hello.global_id,
+        clock_ns: hello.telemetry.then(|| tel.now_ns()),
+    };
+    write_frame_auth(&mut w, &ack, auth)?;
     let p = persistent.as_mut().expect("state built above");
     let sleep: SleepFn = Arc::new(std::thread::sleep);
+    let emit = hello.telemetry;
     loop {
-        match read_frame_auth(&mut r, opts.auth.as_ref())? {
+        match read_frame_timed(&mut r, auth, tel)? {
             None => return Ok(SessionEnd::Eof),
-            Some((Frame::Shutdown, _)) => return Ok(SessionEnd::Shutdown),
-            Some((Frame::Request(req), _)) => {
+            Some((Frame::Shutdown, _, _)) => return Ok(SessionEnd::Shutdown),
+            Some((Frame::Request(req), recv_ns, decoded_ns)) => {
+                if tel.note_request(req.seq) {
+                    log::info!(
+                        "worker {}: duplicate request seq={} iter={} (master resend)",
+                        hello.global_id,
+                        req.seq,
+                        req.iter
+                    );
+                }
+                if emit {
+                    tel.push_span(TelemetrySpan {
+                        kind: SPAN_DECODE,
+                        seq: req.seq,
+                        iter: req.iter,
+                        wave: req.wave,
+                        chunk: 0,
+                        start_ns: recv_ns,
+                        end_ns: decoded_ns,
+                    });
+                }
                 if hello.latency_us > 0 {
                     std::thread::sleep(std::time::Duration::from_micros(hello.latency_us));
                 }
@@ -160,12 +343,26 @@ fn serve_session(
                     req.tasks.into_iter().map(|(c, b)| (c as usize, b)).collect();
                 // a panic must become an error response, not a dead
                 // process: the master counts one delivery per request
+                let origin = tel.origin;
+                let now = move || origin.elapsed().as_nanos() as u64;
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    p.state.handle(req.iter, &req.theta, tasks)
+                    let mut chunk_spans: Vec<(usize, u64, u64)> = Vec::new();
+                    let symbols = if emit {
+                        p.state.handle_observed(
+                            req.iter,
+                            &req.theta,
+                            tasks,
+                            &now,
+                            &mut |chunk, start, end| chunk_spans.push((chunk, start, end)),
+                        )
+                    } else {
+                        p.state.handle(req.iter, &req.theta, tasks)
+                    };
+                    (symbols, chunk_spans)
                 }));
                 let error = match &result {
-                    Ok(Ok(_)) => None,
-                    Ok(Err(e)) => Some(format!("{e:#}")),
+                    Ok((Ok(_), _)) => None,
+                    Ok((Err(e), _)) => Some(format!("{e:#}")),
                     Err(panic) => Some(
                         panic
                             .downcast_ref::<String>()
@@ -174,21 +371,37 @@ fn serve_session(
                             .unwrap_or_else(|| "worker panicked".into()),
                     ),
                 };
-                let symbols = match result {
-                    Ok(Ok(symbols)) => symbols
-                        .into_iter()
-                        .map(|s| NetSymbol {
-                            chunk: s.chunk as u64,
-                            loss: s.loss,
-                            tampered: s.tampered,
-                            grad: match s.wire {
-                                Some(wire) => NetGrad::Wire(wire),
-                                None => NetGrad::Dense(s.grad),
-                            },
-                        })
-                        .collect(),
-                    _ => vec![],
+                let (symbols, chunk_spans) = match result {
+                    Ok((Ok(symbols), spans)) => (
+                        symbols
+                            .into_iter()
+                            .map(|s| NetSymbol {
+                                chunk: s.chunk as u64,
+                                loss: s.loss,
+                                tampered: s.tampered,
+                                grad: match s.wire {
+                                    Some(wire) => NetGrad::Wire(wire),
+                                    None => NetGrad::Dense(s.grad),
+                                },
+                            })
+                            .collect(),
+                        spans,
+                    ),
+                    _ => (vec![], vec![]),
                 };
+                if emit {
+                    for (chunk, start_ns, end_ns) in chunk_spans {
+                        tel.push_span(TelemetrySpan {
+                            kind: SPAN_COMPUTE,
+                            seq: req.seq,
+                            iter: req.iter,
+                            wave: req.wave,
+                            chunk: chunk as u64,
+                            start_ns,
+                            end_ns,
+                        });
+                    }
+                }
                 let resp = NetResponse {
                     seq: req.seq,
                     worker: hello.local_id,
@@ -198,8 +411,30 @@ fn serve_session(
                     error,
                     symbols,
                 };
-                let wire = encode_frame(&Frame::Response(resp), opts.auth.as_ref())?;
+                let enc_start = tel.now_ns();
+                let wire = encode_frame(&Frame::Response(resp), auth)?;
+                if emit {
+                    tel.push_span(TelemetrySpan {
+                        kind: SPAN_ENCODE,
+                        seq: req.seq,
+                        iter: req.iter,
+                        wave: req.wave,
+                        chunk: 0,
+                        start_ns: enc_start,
+                        end_ns: tel.now_ns(),
+                    });
+                }
                 send_wire(&mut w, p.chaos.as_mut(), &sleep, &wire)?;
+                if emit {
+                    // the response-handed-to-socket stamp is the NTP t2
+                    let send_ns = tel.now_ns();
+                    tel.req_clock.push((req.seq, recv_ns, send_ns));
+                    let batch = tel.flush(hello.local_id);
+                    // telemetry is control plane: MAC'd, chaos-exempt —
+                    // an opted-in run draws the same chaos coins as a
+                    // telemetry-off one
+                    write_frame_auth(&mut w, &Frame::Telemetry(batch), auth)?;
+                }
             }
             Some(_) => anyhow::bail!("unexpected frame mid-session"),
         }

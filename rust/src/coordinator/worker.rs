@@ -136,9 +136,27 @@ impl WorkerState {
         theta: &[f32],
         tasks: Vec<(ChunkId, Batch)>,
     ) -> Result<Vec<Symbol>> {
+        self.handle_observed(iter, theta, tasks, &|| 0, &mut |_, _, _| {})
+    }
+
+    /// [`WorkerState::handle`] with per-chunk compute observation: each
+    /// chunk's full loop body (gradient, tamper, compression) is
+    /// bracketed by `now_ns` reads and reported through `span` as
+    /// `(chunk, start_ns, end_ns)`. The compute path and every RNG
+    /// draw are literally the ones `handle` makes — the net worker's
+    /// telemetry uses this, and telemetry must never perturb θ.
+    pub fn handle_observed(
+        &mut self,
+        iter: u64,
+        theta: &[f32],
+        tasks: Vec<(ChunkId, Batch)>,
+        now_ns: &dyn Fn() -> u64,
+        span: &mut dyn FnMut(ChunkId, u64, u64),
+    ) -> Result<Vec<Symbol>> {
         let tamper = self.tampering(iter);
         let mut out = Vec::with_capacity(tasks.len());
         for (chunk, batch) in tasks {
+            let t0 = now_ns();
             let g = self
                 .engine
                 .grad(theta, &batch)
@@ -175,6 +193,7 @@ impl WorkerState {
                 grad = c.unpack(&w, d);
                 wire = Some(w);
             }
+            span(chunk, t0, now_ns());
             out.push(Symbol { chunk, grad, loss, tampered, wire });
         }
         Ok(out)

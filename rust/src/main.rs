@@ -12,7 +12,8 @@
 //!                   [--p 1.0] [--steps 200] [--seed 42] [--csv out.csv]
 //!                   [--trace out.json] [--events out.jsonl]
 //!                   [--metrics-out metrics.prom] [--flight flight.json]
-//!                   [--chaos SPEC] [--auth-key KEY]
+//!                   [--metrics-listen HOST:PORT]
+//!                   [--chaos SPEC] [--auth-key KEY] [--latency-us US]
 //! r3bft worker      --listen HOST:PORT [--chaos SPEC] [--auth-key KEY]
 //! r3bft experiment  <e1..e14|all> [--full]
 //! r3bft inspect     [--artifacts artifacts]
@@ -93,6 +94,10 @@ TRAIN OPTIONS (defaults in parens):
                      processes over TCP (see docs/NETWORK.md)
   --peers LIST       net transport only: comma-separated worker addresses
                      in worker-id order (host:port, one per worker)
+  --latency-us US    artificial per-request compute delay applied
+                     worker-side (0); paces a loopback net run so
+                     mid-run scrapes and straggler policies have
+                     something to observe
   --chaos SPEC       net transport only: deterministic fault injection on
                      every TCP link — comma-separated fields from
                      drop:P, delay:DUR, dup:P, reorder:P, corrupt:P,
@@ -143,7 +148,15 @@ OBSERVABILITY (see docs/TRACING.md; any flag enables the recorder):
   --metrics-out FILE write a Prometheus text-format metrics snapshot
                      (counters + round-time histogram) after the run
   --flight FILE      write the flight-recorder forensic bundles and the
-                     full evidence ledger as JSON after the run"
+                     full evidence ledger as JSON after the run
+  --metrics-listen A serve live observability over HTTP at A (HOST:PORT;
+                     port 0 picks a free one — the bound address is
+                     printed as 'metrics listening on ADDR'): /metrics
+                     (Prometheus text, per-worker-labeled link families
+                     under --transport net), /healthz, /readyz (503
+                     until the first round finishes), /status (JSON
+                     round/roster/suspicion/shard snapshot). Scrapeable
+                     mid-run; --metrics-out is unaffected"
     );
 }
 
@@ -196,6 +209,7 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(spec) = args.get("chaos") {
         cfg.cluster.chaos = Some(spec.to_string());
     }
+    cfg.cluster.latency_us = args.u64("latency-us", cfg.cluster.latency_us);
     if let Some(key) = args.get("auth-key").map(String::from).or_else(auth_key_from_env) {
         cfg.cluster.auth_key = Some(key);
     }
@@ -285,21 +299,36 @@ fn run_train(args: &Args) -> Result<()> {
     let events_path = args.get("events").map(String::from);
     let metrics_path = args.get("metrics-out").map(String::from);
     let flight_path = args.get("flight").map(String::from);
+    let metrics_listen = args.get("metrics-listen").map(String::from);
     let recorder = (trace_path.is_some()
         || events_path.is_some()
         || metrics_path.is_some()
-        || flight_path.is_some())
+        || flight_path.is_some()
+        || metrics_listen.is_some())
     .then(r3bft::trace::Recorder::new);
     if let (Some(rec), Some(path)) = (&recorder, &events_path) {
         let file = std::fs::File::create(path)?;
         rec.set_events_sink(Box::new(std::io::BufWriter::new(file)));
     }
+    // live scrape endpoint: bind before the run starts so harnesses
+    // can poll /healthz while workers connect
+    let status = match (&recorder, &metrics_listen) {
+        (Some(rec), Some(addr)) => {
+            let board =
+                r3bft::trace::http::StatusBoard::new(cfg.cluster.n, cfg.train.steps as u64);
+            let bound = r3bft::trace::http::spawn(addr, rec.clone(), board.clone())?;
+            println!("metrics listening on {bound}");
+            Some(board)
+        }
+        _ => None,
+    };
     let opts = MasterOptions {
         self_check,
         w_star,
         compressor,
         recorder: recorder.clone(),
         net_model: Some(spec.clone()),
+        status: status.clone(),
         ..Default::default()
     };
 
@@ -323,6 +352,9 @@ fn run_train(args: &Args) -> Result<()> {
     let steps = cfg.train.steps;
     let master = Master::new(cfg, opts, engine, dataset, theta0, chunk)?;
     let out = master.run()?;
+    if let Some(board) = &status {
+        board.mark_done();
+    }
 
     println!("== run summary ==");
     println!("iterations           : {steps}");

@@ -17,7 +17,11 @@
 use crate::coordinator::Event;
 use crate::util::json::Json;
 
-use super::{obj, DeliverySpan, RoundSpan, StampedEvent, WaveSpan};
+use super::{obj, DeliverySpan, RoundSpan, StampedEvent, WaveSpan, WorkerSpan};
+
+/// Worker-*process* rows (remote telemetry spans) get pids far above
+/// any shard pid: pid = `WORKER_PID_BASE` + global worker id.
+pub const WORKER_PID_BASE: usize = 1000;
 
 fn us(ns: u64) -> Json {
     Json::Num(ns as f64 / 1000.0)
@@ -28,6 +32,16 @@ fn phase_name(phase: u8) -> &'static str {
         0 => "proactive",
         1 => "detection",
         _ => "reactive",
+    }
+}
+
+/// Lane name for a remote span kind (`SPAN_COMPUTE`/`DECODE`/`ENCODE`
+/// wire codes; the tid doubles as the code).
+fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        0 => "compute",
+        1 => "decode",
+        _ => "encode",
     }
 }
 
@@ -74,11 +88,14 @@ fn async_pair(
 }
 
 /// Render all recorded spans and events as one Chrome trace document.
+/// `worker_spans` is empty for in-process transports, so their output
+/// is byte-identical to the pre-telemetry export.
 pub(crate) fn render(
     waves: &[WaveSpan],
     deliveries: &[DeliverySpan],
     rounds: &[RoundSpan],
     events: &[StampedEvent],
+    worker_spans: &[WorkerSpan],
 ) -> String {
     let mut te: Vec<Json> = Vec::new();
 
@@ -119,6 +136,33 @@ pub(crate) fn render(
             ("pid", Json::Num(s as f64)),
             ("tid", Json::Num((w + 1) as f64)),
             ("args", obj(vec![("name", Json::Str(format!("worker {w}")))])),
+        ]));
+    }
+    // Worker-process rows (remote telemetry): one process per remote
+    // worker, one lane per span kind that actually occurred.
+    let mut remote_workers: Vec<usize> = worker_spans.iter().map(|s| s.worker).collect();
+    remote_workers.sort_unstable();
+    remote_workers.dedup();
+    let mut remote_lanes: Vec<(usize, u8)> =
+        worker_spans.iter().map(|s| (s.worker, s.kind)).collect();
+    remote_lanes.sort_unstable();
+    remote_lanes.dedup();
+    for &w in &remote_workers {
+        te.push(obj(vec![
+            ("name", Json::Str("process_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num((WORKER_PID_BASE + w) as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", obj(vec![("name", Json::Str(format!("worker {w} (remote)")))])),
+        ]));
+    }
+    for &(w, k) in &remote_lanes {
+        te.push(obj(vec![
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num((WORKER_PID_BASE + w) as f64)),
+            ("tid", Json::Num(k as f64)),
+            ("args", obj(vec![("name", Json::Str(kind_name(k).to_string()))])),
         ]));
     }
 
@@ -175,6 +219,44 @@ pub(crate) fn render(
                 ]),
             ),
         ]));
+    }
+
+    // Remote worker spans, twice each where it helps: every span on
+    // its worker-process row, and compute spans additionally as
+    // clock-aligned nested slices on the master-side delivery lane —
+    // the delivery X slice covers submit→arrival, and the remapped
+    // compute slice sits inside it, splitting the delivery into
+    // worker-compute vs. network time.
+    for ws in worker_spans {
+        let dur = ws.end_ns.saturating_sub(ws.start_ns);
+        let args = obj(vec![
+            ("chunk", Json::Num(ws.chunk as f64)),
+            ("iter", Json::Num(ws.iter as f64)),
+            ("wave", Json::Num(ws.wave as f64)),
+            ("worker", Json::Num(ws.worker as f64)),
+        ]);
+        te.push(obj(vec![
+            ("name", Json::Str(format!("{} i{}", kind_name(ws.kind), ws.iter))),
+            ("cat", Json::Str("worker".to_string())),
+            ("ph", Json::Str("X".to_string())),
+            ("pid", Json::Num((WORKER_PID_BASE + ws.worker) as f64)),
+            ("tid", Json::Num(ws.kind as f64)),
+            ("ts", us(ws.start_ns)),
+            ("dur", us(dur)),
+            ("args", args.clone()),
+        ]));
+        if ws.kind == 0 {
+            te.push(obj(vec![
+                ("name", Json::Str(format!("compute w{}", ws.wave))),
+                ("cat", Json::Str("worker_compute".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("pid", Json::Num(ws.shard as f64)),
+                ("tid", Json::Num((ws.worker + 1) as f64)),
+                ("ts", us(ws.start_ns)),
+                ("dur", us(dur)),
+                ("args", args),
+            ]));
+        }
     }
 
     for s in events {

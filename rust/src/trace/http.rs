@@ -1,0 +1,374 @@
+//! Live scrape endpoint (`--metrics-listen HOST:PORT`).
+//!
+//! A hand-rolled HTTP/1.1 server over `std::net::TcpListener` — no
+//! framework, no dependency — serving four routes while a run is in
+//! flight:
+//!
+//! - `/metrics`  — Prometheus text exposition: the deterministic
+//!   fixed-family registry plus the worker-labeled per-link families
+//!   ([`Recorder::prometheus_live`]). The `--metrics-out` file
+//!   snapshot is unaffected (it stays a pure function of the seed).
+//! - `/healthz`  — liveness: `200 ok` as soon as the socket is bound.
+//! - `/readyz`   — readiness: `503` until the first protocol round
+//!   finishes, `200 ready` after.
+//! - `/status`   — a JSON snapshot of the protocol state: round
+//!   progress, roster counts, eliminated/crashed workers, per-worker
+//!   suspicion scores, and per-shard health. Schema in
+//!   `docs/TRACING.md`.
+//!
+//! The server thread is a daemon: it holds only `Arc`s and dies with
+//! the process. Each connection is answered on its own short-lived
+//! thread with `Connection: close`, a `Content-Length`, and a read
+//! timeout, so a stalled scraper can never wedge the accept loop or
+//! the training run (the run never waits on this module — scrapes
+//! read the same mutexes the recorder's event path already uses).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::events::{Event, EventLog};
+use crate::coordinator::metrics::IterationRecord;
+use crate::coordinator::WorkerId;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::{obj, Recorder};
+
+/// Per-shard health row of the `/status` snapshot.
+#[derive(Clone, Debug)]
+pub struct ShardHealth {
+    pub shard: usize,
+    /// Active workers when the shard's latest round started.
+    pub workers_active: usize,
+    /// Latest round duration on the shard transport's clock.
+    pub round_ns: u64,
+    pub net_reconnects: u64,
+    pub dead: bool,
+}
+
+/// Everything `/status` reports, refreshed once per finished round.
+#[derive(Clone, Debug, Default)]
+pub struct Status {
+    /// Total workers the run started with.
+    pub n: usize,
+    /// Configured iteration count.
+    pub steps: u64,
+    /// Latest finished iteration (meaningful once `ready`).
+    pub round: u64,
+    pub rounds_finished: u64,
+    /// True once the first round finished (`/readyz` gate).
+    pub ready: bool,
+    /// True once the run returned (the snapshot is final).
+    pub done: bool,
+    pub eliminated: Vec<WorkerId>,
+    pub crashed: Vec<WorkerId>,
+    /// Per-worker suspicion scores above zero, ascending by id (the
+    /// snapshot the latest round's audit decision used).
+    pub suspicion: Vec<(WorkerId, f64)>,
+    /// Per-shard breakdown (empty for single-master runs).
+    pub shards: Vec<ShardHealth>,
+}
+
+impl Status {
+    fn to_json(&self) -> Json {
+        let ids = |ws: &[WorkerId]| Json::Arr(ws.iter().map(|&w| Json::Num(w as f64)).collect());
+        let suspicion = self
+            .suspicion
+            .iter()
+            .map(|&(w, s)| {
+                obj(vec![("worker", Json::Num(w as f64)), ("score", Json::Num(s))])
+            })
+            .collect();
+        let shards = self
+            .shards
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("shard", Json::Num(s.shard as f64)),
+                    ("workers_active", Json::Num(s.workers_active as f64)),
+                    ("round_ns", Json::Num(s.round_ns as f64)),
+                    ("net_reconnects", Json::Num(s.net_reconnects as f64)),
+                    ("dead", Json::Bool(s.dead)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("round", Json::Num(self.round as f64)),
+            ("rounds_finished", Json::Num(self.rounds_finished as f64)),
+            ("ready", Json::Bool(self.ready)),
+            ("done", Json::Bool(self.done)),
+            ("active_workers", Json::Num(self.active() as f64)),
+            ("eliminated", ids(&self.eliminated)),
+            ("crashed", ids(&self.crashed)),
+            ("suspicion", Json::Arr(suspicion)),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+
+    fn active(&self) -> usize {
+        self.n
+            .saturating_sub(self.eliminated.len())
+            .saturating_sub(self.crashed.len())
+    }
+}
+
+/// Shared scoreboard behind `/status` and `/readyz`: the master posts
+/// one update per finished round ([`StatusBoard::on_round`]), the
+/// server threads read snapshots. One mutex, touched once per round
+/// and once per scrape — never on the protocol hot path.
+pub struct StatusBoard {
+    inner: Mutex<Status>,
+}
+
+impl StatusBoard {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new(n: usize, steps: u64) -> Arc<StatusBoard> {
+        Arc::new(StatusBoard {
+            inner: Mutex::new(Status { n, steps, ..Status::default() }),
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Status> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Post one finished round: progress/suspicion/shard health from
+    /// the metrics record, roster changes rescanned from the event log
+    /// (global ids; Eliminated/RosterEliminated/WorkerCrashed).
+    pub fn on_round(&self, rec: &IterationRecord, events: &EventLog) {
+        let mut eliminated: Vec<WorkerId> = Vec::new();
+        let mut crashed: Vec<WorkerId> = Vec::new();
+        for e in events.flat() {
+            match e {
+                Event::Eliminated { worker, .. } => eliminated.push(*worker),
+                Event::WorkerCrashed { worker, .. } => crashed.push(*worker),
+                _ => {}
+            }
+        }
+        eliminated.sort_unstable();
+        eliminated.dedup();
+        crashed.sort_unstable();
+        crashed.dedup();
+        let dead = events.dead_shards();
+        let mut s = self.lock();
+        s.round = rec.iter;
+        s.rounds_finished += 1;
+        s.ready = true;
+        s.eliminated = eliminated;
+        s.crashed = crashed;
+        s.suspicion = rec.suspicion.clone();
+        s.shards = rec
+            .shard_stats
+            .iter()
+            .map(|st| ShardHealth {
+                shard: st.shard,
+                workers_active: st.workers_active,
+                round_ns: st.round_ns,
+                net_reconnects: st.net_reconnects,
+                dead: dead.contains(&st.shard),
+            })
+            .collect();
+    }
+
+    /// The run returned; the snapshot is final.
+    pub fn mark_done(&self) {
+        let mut s = self.lock();
+        s.done = true;
+        s.ready = true;
+    }
+
+    pub fn snapshot(&self) -> Status {
+        self.lock().clone()
+    }
+}
+
+/// Bind `addr` and serve scrapes on a daemon thread; returns the bound
+/// address (port 0 picks a free one, as `--listen` does for workers).
+pub fn spawn(addr: &str, rec: Arc<Recorder>, board: Arc<StatusBoard>) -> Result<SocketAddr> {
+    let listener =
+        TcpListener::bind(addr).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    let bound = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("r3bft-metrics-http".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                let rec = rec.clone();
+                let board = board.clone();
+                // one short-lived thread per connection: a stalled
+                // scraper blocks its own thread, never the accept loop
+                let _ = std::thread::Builder::new()
+                    .name("r3bft-metrics-conn".into())
+                    .spawn(move || handle(stream, &rec, &board));
+            }
+        })?;
+    Ok(bound)
+}
+
+/// Max bytes of request head we will buffer before answering.
+const MAX_REQUEST: usize = 8 * 1024;
+
+fn handle(mut stream: TcpStream, rec: &Recorder, board: &StatusBoard) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let Some((method, path)) = read_request_line(&mut stream) else {
+        return;
+    };
+    if method != "GET" {
+        respond(&mut stream, "405 Method Not Allowed", "text/plain", "GET only\n");
+        return;
+    }
+    // strip any query string; scrapers sometimes append cache-busters
+    let path = path.split('?').next().unwrap_or("");
+    match path {
+        "/metrics" => respond(
+            &mut stream,
+            "200 OK",
+            "text/plain; version=0.0.4",
+            &rec.prometheus_live(),
+        ),
+        "/healthz" => respond(&mut stream, "200 OK", "text/plain", "ok\n"),
+        "/readyz" => {
+            if board.lock().ready {
+                respond(&mut stream, "200 OK", "text/plain", "ready\n");
+            } else {
+                respond(
+                    &mut stream,
+                    "503 Service Unavailable",
+                    "text/plain",
+                    "no round finished yet\n",
+                );
+            }
+        }
+        "/status" => {
+            let body = board.lock().to_json().to_string();
+            respond(&mut stream, "200 OK", "application/json", &body);
+        }
+        _ => respond(
+            &mut stream,
+            "404 Not Found",
+            "text/plain",
+            "routes: /metrics /healthz /readyz /status\n",
+        ),
+    }
+}
+
+/// Read up to the end of the request head and parse the request line
+/// into (method, path). Anything malformed or oversized yields `None`
+/// (the connection is just dropped).
+fn read_request_line(stream: &mut TcpStream) -> Option<(String, String)> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() >= MAX_REQUEST {
+                    break;
+                }
+            }
+            Err(_) => return None,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let line = head.lines().next()?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?.to_string();
+    let path = parts.next()?.to_string();
+    Some((method, path))
+}
+
+fn respond(stream: &mut TcpStream, status: &str, ctype: &str, body: &str) {
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn endpoint_serves_all_routes() {
+        let rec = Recorder::new();
+        let board = StatusBoard::new(8, 50);
+        let addr = spawn("127.0.0.1:0", rec.clone(), board.clone()).unwrap();
+
+        let (head, body) = get(addr, "/healthz");
+        assert!(head.starts_with("HTTP/1.1 200"), "healthz: {head}");
+        assert_eq!(body, "ok\n");
+        assert!(head.contains("Content-Length: 3"));
+        assert!(head.contains("Connection: close"));
+
+        // not ready until a round finishes
+        let (head, _) = get(addr, "/readyz");
+        assert!(head.starts_with("HTTP/1.1 503"), "readyz before a round: {head}");
+
+        // /metrics serves the full deterministic family set mid-run
+        let (head, body) = get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert!(head.contains("text/plain; version=0.0.4"));
+        assert!(body.contains("r3bft_rounds_total 0"));
+        assert!(body.contains("# TYPE r3bft_round_time_ns histogram"));
+
+        // a finished round flips readiness and fills /status
+        let mut events = EventLog::default();
+        events.push(Event::Eliminated { iter: 3, worker: 2 });
+        let rec_row = IterationRecord {
+            iter: 3,
+            suspicion: vec![(2, 0.75)],
+            ..IterationRecord::default()
+        };
+        board.on_round(&rec_row, &events);
+        let (head, _) = get(addr, "/readyz");
+        assert!(head.starts_with("HTTP/1.1 200"), "readyz after a round: {head}");
+        let (head, body) = get(addr, "/status");
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert!(head.contains("application/json"));
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.req("round").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.req("n").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.req("ready").unwrap().as_bool(), Some(true));
+        assert_eq!(j.req("done").unwrap().as_bool(), Some(false));
+        assert_eq!(j.req("active_workers").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.req_arr("eliminated").unwrap().len(), 1);
+        assert_eq!(j.req_arr("suspicion").unwrap().len(), 1);
+
+        board.mark_done();
+        let (_, body) = get(addr, "/status");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.req("done").unwrap().as_bool(), Some(true));
+
+        let (head, _) = get(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"));
+    }
+
+    #[test]
+    fn non_get_methods_are_refused() {
+        let rec = Recorder::new();
+        let board = StatusBoard::new(1, 1);
+        let addr = spawn("127.0.0.1:0", rec, board).unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 405"), "{text}");
+    }
+}

@@ -6,7 +6,10 @@
 //! counter is present (at zero) even in a quiet run — scrape configs
 //! and dashboards can rely on the full set existing.
 
-use crate::coordinator::Event;
+use std::collections::BTreeMap;
+
+use crate::coordinator::transport::LinkStats;
+use crate::coordinator::{Event, WorkerId};
 
 /// Every counter, in exposition order: `(name, help)`.
 pub const COUNTERS: [(&str, &str); 14] = [
@@ -148,9 +151,129 @@ impl Registry {
     }
 }
 
+/// The worker-labeled per-link families of the live scrape
+/// (`/metrics` on `--metrics-listen`), one series per link keyed by
+/// global worker id. Appended after [`Registry::render`] by
+/// `Recorder::prometheus_live`; the deterministic `--metrics-out`
+/// snapshot never includes these (their values are wall-clock
+/// estimates, not pure functions of the seed). The labeled
+/// `r3bft_net_reconnects_total` series reuse the family
+/// [`Registry::render`] already declared, so a flapping single link is
+/// distinguishable from fleet-wide churn; the remaining families are
+/// declared here. Empty input renders to the empty string.
+pub fn render_labeled(links: &BTreeMap<WorkerId, LinkStats>) -> String {
+    if links.is_empty() {
+        return String::new();
+    }
+    let mut out = String::new();
+    // labeled continuation of the aggregate family declared above
+    for (w, l) in links {
+        out.push_str(&format!("r3bft_net_reconnects_total{{worker=\"{w}\"}} {}\n", l.reconnects));
+    }
+    // (name, help, type, value extractor) per new per-link family
+    type Get = fn(&LinkStats) -> i128;
+    let families: [(&str, &str, &str, Get); 8] = [
+        (
+            "r3bft_net_resends_total",
+            "Master-side request resends per link (reconnect replays + chaos resend-on-timeout)",
+            "counter",
+            |l| l.resends as i128,
+        ),
+        (
+            "r3bft_auth_rejects_total",
+            "Frames the worker refused for a bad MAC",
+            "counter",
+            |l| l.auth_rejects as i128,
+        ),
+        (
+            "r3bft_net_dup_requests_total",
+            "Duplicate requests observed worker-side (master resends)",
+            "counter",
+            |l| l.dup_requests as i128,
+        ),
+        (
+            "r3bft_net_chaos_hits_total",
+            "Undecodable frames observed worker-side (chaos corruption)",
+            "counter",
+            |l| l.chaos_hits as i128,
+        ),
+        (
+            "r3bft_worker_dropped_spans_total",
+            "Telemetry spans dropped to keep buffers bounded",
+            "counter",
+            |l| l.dropped_spans as i128,
+        ),
+        (
+            "r3bft_net_link_rtt_ns",
+            "EWMA link round-trip estimate on the master transport clock",
+            "gauge",
+            |l| l.rtt_ns as i128,
+        ),
+        (
+            "r3bft_net_link_clock_offset_ns",
+            "Estimated worker-clock minus master-clock (NTP midpoint, EWMA-refined)",
+            "gauge",
+            |l| l.offset_ns as i128,
+        ),
+        (
+            "r3bft_worker_span_queue_depth",
+            "Worker span-queue high-water mark in the last telemetry batch",
+            "gauge",
+            |l| l.queue_depth as i128,
+        ),
+    ];
+    for (name, help, kind, get) in families {
+        out.push_str(&format!("# HELP {name} {help}\n"));
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        for (w, l) in links {
+            out.push_str(&format!("{name}{{worker=\"{w}\"}} {}\n", get(l)));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn labeled_families_render_one_series_per_link() {
+        let mut links: BTreeMap<WorkerId, LinkStats> = BTreeMap::new();
+        assert_eq!(render_labeled(&links), "", "no links, no labeled block");
+        links.insert(
+            2,
+            LinkStats {
+                worker: 2,
+                rtt_ns: 1500,
+                offset_ns: -40,
+                reconnects: 3,
+                resends: 7,
+                auth_rejects: 1,
+                requests: 90,
+                dup_requests: 5,
+                chaos_hits: 2,
+                queue_depth: 4,
+                dropped_spans: 0,
+            },
+        );
+        links.insert(0, LinkStats { worker: 0, ..Default::default() });
+        let text = render_labeled(&links);
+        assert!(text.contains("r3bft_net_reconnects_total{worker=\"2\"} 3"));
+        assert!(text.contains("r3bft_net_reconnects_total{worker=\"0\"} 0"));
+        assert!(text.contains("r3bft_net_resends_total{worker=\"2\"} 7"));
+        assert!(text.contains("r3bft_auth_rejects_total{worker=\"2\"} 1"));
+        assert!(text.contains("r3bft_net_link_rtt_ns{worker=\"2\"} 1500"));
+        assert!(
+            text.contains("r3bft_net_link_clock_offset_ns{worker=\"2\"} -40"),
+            "gauges carry signed offsets"
+        );
+        assert!(text.contains("# TYPE r3bft_net_link_rtt_ns gauge"));
+        assert!(text.contains("# TYPE r3bft_net_resends_total counter"));
+        // worker ids render in sorted order (BTreeMap iteration)
+        let w0 = text.find("r3bft_net_resends_total{worker=\"0\"}").unwrap();
+        let w2 = text.find("r3bft_net_resends_total{worker=\"2\"}").unwrap();
+        assert!(w0 < w2);
+    }
 
     #[test]
     fn renders_every_counter_even_at_zero() {

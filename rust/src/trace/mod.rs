@@ -39,14 +39,16 @@
 //! metrics files.
 
 pub mod chrome;
+pub mod http;
 pub mod ledger;
 pub mod metrics;
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::Write;
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::codes::{copy_key, SymbolCopy};
+use crate::coordinator::transport::{LinkStats, RemoteSpan};
 use crate::coordinator::{ChunkId, Event, WorkerId, MASTER_SENTINEL};
 use crate::util::json::Json;
 
@@ -103,6 +105,27 @@ pub struct DeliverySpan {
     pub worker: WorkerId,
     pub submit_ns: u64,
     pub at_ns: u64,
+}
+
+/// One worker-*process* span shipped over a telemetry-enabled net
+/// link: a remote compute/decode/encode interval, already remapped
+/// onto the master transport clock by the link's offset estimate and
+/// onto global worker ids by the handle. Rendered as dedicated
+/// worker-process rows in the Chrome export (see [`chrome`]).
+#[derive(Clone, Debug)]
+pub struct WorkerSpan {
+    pub shard: usize,
+    /// Global worker id.
+    pub worker: WorkerId,
+    /// `SPAN_COMPUTE` / `SPAN_DECODE` / `SPAN_ENCODE` (see
+    /// `coordinator::transport::net::frame`).
+    pub kind: u8,
+    pub iter: u64,
+    pub wave: u64,
+    pub chunk: u64,
+    /// Master-transport-clock ns.
+    pub start_ns: u64,
+    pub end_ns: u64,
 }
 
 /// One finished protocol round (per shard core).
@@ -177,6 +200,11 @@ struct Inner {
     waves: Vec<WaveSpan>,
     deliveries: Vec<DeliverySpan>,
     rounds: Vec<RoundSpan>,
+    /// Remote worker-process spans (net telemetry; empty otherwise).
+    worker_spans: Vec<WorkerSpan>,
+    /// Latest per-link health snapshot, by global worker id — the
+    /// worker-labeled families of the live scrape.
+    links: BTreeMap<WorkerId, LinkStats>,
     ring: VecDeque<RingEntry>,
     bundles: Vec<ForensicBundle>,
     ledger: Ledger,
@@ -239,6 +267,14 @@ impl Inner {
             Event::OracleFaultyUpdate { iter } => {
                 Some((*iter, "oracle faulty update".to_string(), Vec::new()))
             }
+            // a net session-break is forensic material too: what was
+            // in flight when the link flapped is exactly what a
+            // post-mortem of a suspected-Byzantine link needs
+            Event::NetReconnect { iter, worker } => Some((
+                *iter,
+                format!("net session-break (worker {worker} reconnected)"),
+                Vec::new(),
+            )),
             _ => None,
         };
         if let Some((iter, reason, evidence)) = anomaly {
@@ -346,7 +382,13 @@ impl Recorder {
     /// Chrome trace-event JSON (open in Perfetto or chrome://tracing).
     pub fn chrome_trace(&self) -> String {
         let inner = self.lock();
-        chrome::render(&inner.waves, &inner.deliveries, &inner.rounds, &inner.events)
+        chrome::render(
+            &inner.waves,
+            &inner.deliveries,
+            &inner.rounds,
+            &inner.events,
+            &inner.worker_spans,
+        )
     }
 
     /// The stamped event stream as JSON Lines.
@@ -360,9 +402,22 @@ impl Recorder {
         out
     }
 
-    /// Prometheus text-format snapshot of the metrics registry.
+    /// Prometheus text-format snapshot of the metrics registry — the
+    /// deterministic fixed-family set `--metrics-out` writes.
     pub fn prometheus(&self) -> String {
         self.lock().registry.render()
+    }
+
+    /// The live-scrape variant (`/metrics` on `--metrics-listen`): the
+    /// deterministic fixed-family set of [`Recorder::prometheus`] plus
+    /// the worker-labeled per-link families (RTT/offset gauges,
+    /// resend/reconnect/auth-reject/dup/chaos counters) — present only
+    /// once a telemetry-enabled net transport has reported links.
+    pub fn prometheus_live(&self) -> String {
+        let inner = self.lock();
+        let mut out = inner.registry.render();
+        out.push_str(&metrics::render_labeled(&inner.links));
+        out
     }
 
     /// All forensic bundles as one JSON document.
@@ -403,6 +458,15 @@ impl Recorder {
 
     pub fn stamped_events(&self) -> Vec<StampedEvent> {
         self.lock().events.clone()
+    }
+
+    pub fn worker_spans(&self) -> Vec<WorkerSpan> {
+        self.lock().worker_spans.clone()
+    }
+
+    /// Latest per-link health snapshots, keyed by global worker id.
+    pub fn links(&self) -> BTreeMap<WorkerId, LinkStats> {
+        self.lock().links.clone()
     }
 
     /// Current value of a registry counter (see [`metrics::COUNTERS`]).
@@ -572,6 +636,36 @@ impl TraceHandle {
             format!("vote chunk {chunk} (iter {iter}, {} liars)", liars.len()),
         );
         inner.ledger.on_vote(shard, iter, chunk, tally, winner_key, liars);
+    }
+
+    /// Worker-side telemetry spans drained from a net transport,
+    /// already on the master transport clock; ids are core-local and
+    /// remapped to global here.
+    pub fn remote_spans(&self, spans: Vec<RemoteSpan>) {
+        let shard = self.shard_idx();
+        let mut inner = self.rec.lock();
+        for s in spans {
+            inner.worker_spans.push(WorkerSpan {
+                shard,
+                worker: self.global(s.worker),
+                kind: s.kind,
+                iter: s.iter,
+                wave: s.wave,
+                chunk: s.chunk,
+                start_ns: s.start_ns,
+                end_ns: s.end_ns,
+            });
+        }
+    }
+
+    /// Per-link health snapshot from a net transport (ids core-local;
+    /// latest snapshot wins — the counters are cumulative).
+    pub fn link_stats(&self, stats: Vec<LinkStats>) {
+        let mut inner = self.rec.lock();
+        for s in stats {
+            let worker = self.global(s.worker);
+            inner.links.insert(worker, s);
+        }
     }
 
     /// The round finished; `round_ns` and `bytes` as reported to the

@@ -19,6 +19,7 @@ use r3bft::coordinator::TrainOutcome;
 use r3bft::data::LinRegDataset;
 use r3bft::grad::{GradientComputer, ModelSpec, NativeEngine};
 use r3bft::linalg;
+use r3bft::trace::Recorder;
 
 /// Host `n` workers on in-process threads (the compute core is
 /// identical to the standalone `r3bft worker` binary's); returns their
@@ -49,6 +50,7 @@ fn run(
     transport: &str,
     compress: Option<&str>,
     peers: Vec<String>,
+    recorder: Option<Arc<Recorder>>,
 ) -> (TrainOutcome, Vec<f32>) {
     let mut cluster = ClusterConfig::new(n, f, seed);
     cluster.byzantine_ids = byz;
@@ -75,6 +77,7 @@ fn run(
         w_star: Some(w_star.clone()),
         compressor,
         net_model: Some(spec.clone()),
+        recorder,
         ..Default::default()
     };
     let master = Master::new(cfg, opts, engine, ds, theta0, chunk).expect("master");
@@ -117,6 +120,7 @@ fn net_threaded_and_sim_are_bit_identical_flat() {
             "net",
             compress,
             peers,
+            None,
         );
         let (threaded, _) = run(
             n,
@@ -130,9 +134,10 @@ fn net_threaded_and_sim_are_bit_identical_flat() {
             "threaded",
             compress,
             vec![],
+            None,
         );
         let (sim, _) =
-            run(n, 2, 1, byz, policy, attack, 80, 7, "sim", compress, vec![]);
+            run(n, 2, 1, byz, policy, attack, 80, 7, "sim", compress, vec![], None);
         assert_eq!(net.eliminated, threaded.eliminated, "{label}: eliminated diverged");
         assert_eq!(net.theta, threaded.theta, "{label}: theta diverged (not bit-identical)");
         assert_eq!(net.theta, sim.theta, "{label}: net vs sim theta diverged");
@@ -177,6 +182,7 @@ fn net_matches_threaded_bitwise_sharded() {
         "net",
         None,
         peers,
+        None,
     );
     let (threaded, _) = run(
         n,
@@ -190,6 +196,7 @@ fn net_matches_threaded_bitwise_sharded() {
         "threaded",
         None,
         vec![],
+        None,
     );
     assert_eq!(net.eliminated, threaded.eliminated, "sharded eliminated diverged");
     assert_eq!(net.theta, threaded.theta, "sharded theta diverged (not bit-identical)");
@@ -300,4 +307,123 @@ fn killed_worker_process_becomes_in_band_crash_stop() {
     assert_eq!(rec.gradients_used, rec.gradients_computed, "accounting stays exact");
     let dist = linalg::dist2(&out.theta, &w_star);
     assert!(dist < 1e-2, "crash scenario failed to converge: dist={dist}");
+}
+
+/// Tentpole acceptance: attaching a recorder to a net run switches the
+/// worker-side telemetry on (spans, clock sync, Telemetry frames) — and
+/// the protocol must not notice. θ, the elimination set, and the
+/// detection count stay bit-identical to the telemetry-off run, while
+/// the recorder fills with clock-aligned worker spans, per-link health
+/// snapshots, worker-labeled metric families, and worker-process rows
+/// in the Chrome export.
+#[test]
+fn net_telemetry_is_protocol_neutral_and_observable() {
+    let n = 6;
+    let byz = vec![1usize, 4];
+    let attack = AttackConfig { kind: AttackKind::SignFlip, p: 1.0, magnitude: 2.0 };
+    let steps = 60;
+    let seed = 5;
+
+    // telemetry off: the baseline wire (no recorder ⇒ hello asks for
+    // nothing, the worker ships nothing)
+    let (peers, workers) = spawn_worker_threads(n);
+    let (off, _) = run(
+        n,
+        1,
+        1,
+        byz.clone(),
+        PolicyKind::Deterministic,
+        attack.clone(),
+        steps,
+        seed,
+        "net",
+        None,
+        peers,
+        None,
+    );
+    for h in workers {
+        h.join().expect("worker thread");
+    }
+
+    // telemetry on: same seed, recorder attached
+    let rec = Recorder::new();
+    let (peers, workers) = spawn_worker_threads(n);
+    let (on, _) = run(
+        n,
+        1,
+        1,
+        byz.clone(),
+        PolicyKind::Deterministic,
+        attack,
+        steps,
+        seed,
+        "net",
+        None,
+        peers,
+        Some(rec.clone()),
+    );
+    for h in workers {
+        h.join().expect("worker thread");
+    }
+
+    // protocol neutrality: bit-identical outcome
+    assert_eq!(on.theta, off.theta, "telemetry must not perturb theta (bit-identical)");
+    assert_eq!(on.eliminated, off.eliminated, "telemetry must not perturb eliminations");
+    assert_eq!(
+        on.events.detections(),
+        off.events.detections(),
+        "telemetry must not perturb detections"
+    );
+
+    // ...and the telemetry actually arrived: worker spans on the master
+    // clock, every kind represented, sane intervals
+    let spans = rec.worker_spans();
+    assert!(!spans.is_empty(), "a telemetry-enabled run must ship worker spans");
+    for kind in [0u8, 1, 2] {
+        assert!(
+            spans.iter().any(|s| s.kind == kind),
+            "span kind {kind} (compute/decode/encode) missing"
+        );
+    }
+    assert!(spans.iter().all(|s| s.start_ns <= s.end_ns), "spans must be well-formed");
+    assert!(spans.iter().all(|s| s.worker < n), "span worker ids must be in roster");
+
+    // per-link health snapshots for every worker, with real traffic
+    let links = rec.links();
+    assert_eq!(links.len(), n, "every link must report a health snapshot");
+    assert!(
+        links.values().all(|l| l.requests > 0),
+        "every worker served requests over the run"
+    );
+    assert!(
+        links.values().all(|l| l.auth_rejects == 0 && l.reconnects == 0),
+        "clean loopback run: no rejects, no reconnects"
+    );
+
+    // the live scrape carries the worker-labeled families
+    let prom = rec.prometheus_live();
+    for family in [
+        "r3bft_net_resends_total",
+        "r3bft_auth_rejects_total",
+        "r3bft_net_dup_requests_total",
+        "r3bft_net_chaos_hits_total",
+        "r3bft_net_link_rtt_ns",
+        "r3bft_net_link_clock_offset_ns",
+        "r3bft_worker_span_queue_depth",
+        "r3bft_worker_dropped_spans_total",
+    ] {
+        assert!(prom.contains(family), "live scrape missing family {family}");
+    }
+    assert!(
+        prom.contains("r3bft_net_link_rtt_ns{worker=\"0\"}"),
+        "labeled series must carry worker labels"
+    );
+    // the deterministic snapshot stays label-free (unchanged by the run)
+    assert!(!rec.prometheus().contains("worker=\""), "--metrics-out snapshot must stay fixed");
+
+    // the Chrome export grows dedicated worker-process rows whose
+    // compute spans also nest into the master's delivery lanes
+    let trace = rec.chrome_trace();
+    assert!(trace.contains("worker 0 (remote)"), "worker-process row metadata missing");
+    assert!(trace.contains("\"worker_compute\""), "nested compute slices missing");
 }

@@ -182,6 +182,24 @@ impl Write for SharedBuf {
     }
 }
 
+/// In-process transports ship no worker-side telemetry: the sim run's
+/// Chrome export must carry zero worker-process rows, so the export
+/// stays byte-identical to its pre-telemetry shape (the worker rows
+/// are purely additive, net-transport-only).
+#[test]
+fn sim_trace_has_no_worker_process_rows() {
+    let (_, rec) = traced(1, 1, 20, 42);
+    assert!(rec.worker_spans().is_empty(), "sim transport must not synthesize worker spans");
+    assert!(rec.links().is_empty(), "sim transport must not report link stats");
+    let trace = rec.chrome_trace();
+    assert!(!trace.contains("(remote)"), "no worker-process metadata rows");
+    assert!(!trace.contains("worker_compute"), "no nested remote compute slices");
+    assert!(
+        !rec.prometheus_live().contains("worker=\""),
+        "live scrape degrades to the fixed families without net links"
+    );
+}
+
 /// The streaming sink (`--events`) must see exactly the lines the
 /// in-memory exporter reports, as they happen.
 #[test]
